@@ -1,0 +1,50 @@
+//! Shared bench harness (the offline vendor set has no criterion):
+//! wall-clock timing with warmup + repeated measurement, median/min/max
+//! reporting, and `--quick` support via the MLDSE_BENCH_QUICK env var.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// True when quick mode is requested (CI / smoke runs).
+pub fn quick() -> bool {
+    std::env::var("MLDSE_BENCH_QUICK").is_ok()
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// Time `f` `iters` times (after one warmup) and print a summary line.
+/// Returns the median seconds.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    println!(
+        "[bench] {name}: median {:.3}s  min {:.3}s  max {:.3}s  ({} iters)",
+        median,
+        times[0],
+        times[times.len() - 1],
+        times.len()
+    );
+    median
+}
+
+/// Run an experiment once, timing it, printing every table.
+pub fn run_experiment(name: &str) {
+    let coord = mldse::coordinator::Coordinator::standard();
+    let q = quick();
+    let t0 = Instant::now();
+    let tables = coord
+        .run_experiment(name, q)
+        .unwrap_or_else(|e| panic!("experiment {name}: {e:#}"));
+    let secs = t0.elapsed().as_secs_f64();
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    println!("[bench] experiment {name}{}: {secs:.2}s", if q { " (quick)" } else { "" });
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper artifact via the `fig9-cross` experiment
+//! (see DESIGN.md §3 for the experiment index). Run with
+//! `cargo bench --bench fig9_cross_arch` (add MLDSE_BENCH_QUICK=1 for small sizes).
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    common::run_experiment("fig9-cross");
+}

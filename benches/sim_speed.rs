@@ -1,0 +1,45 @@
+//! Bench E13 (§7.2 speed claim): simulate 240 hardware configurations of
+//! the DMC template on the GPT3-6.7B prefill layer and report wall time
+//! (paper: 240 configurations in 76 s). Also reports raw simulator event
+//! throughput on a single large workload.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use mldse::dse::experiments::{sim_speed, Ctx};
+use mldse::eval::Registry;
+use mldse::sim::{simulate, SimConfig};
+use mldse::workloads::{dmc_prefill, LlmConfig};
+
+fn main() {
+    let ctx = if common::quick() { Ctx::quick() } else { Ctx::standard() };
+
+    // --- headline: 240 configurations ---
+    let (table, secs) = sim_speed(&ctx);
+    println!("{}", table.render());
+    println!(
+        "[bench] sim_speed: 240 configs in {secs:.2}s ({:.1} configs/s; paper: 240 in 76s)",
+        240.0 / secs
+    );
+
+    // --- raw engine throughput on one workload ---
+    let cfg = if common::quick() {
+        LlmConfig { hidden: 512, heads: 8, ffn: 2048, layers: 8, elem_bytes: 2 }
+    } else {
+        LlmConfig::gpt3_6_7b()
+    };
+    let seq = if common::quick() { 256 } else { 2048 };
+    let params = mldse::arch::DmcParams::table2(2);
+    let w = dmc_prefill(&cfg, seq, &params);
+    let evals = Registry::standard();
+    let mut completed = 0u64;
+    let median = common::bench("single prefill simulation", 5, || {
+        let r = simulate(&w.hw, &w.graph, &w.mapping, &evals, &SimConfig::default()).unwrap();
+        completed = r.completed;
+    });
+    println!(
+        "[bench] engine throughput: {:.0} task-events/s ({} tasks per sim)",
+        completed as f64 / median,
+        completed
+    );
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate the paper artifact via the `table2` experiment
+//! (see DESIGN.md §3 for the experiment index). Run with
+//! `cargo bench --bench table2_configs` (add MLDSE_BENCH_QUICK=1 for small sizes).
+
+#[path = "common/mod.rs"]
+mod common;
+
+fn main() {
+    common::run_experiment("table2");
+}

@@ -1,0 +1,122 @@
+//! Quickstart: model a two-level hardware with the hardware IR, build a
+//! small task graph, map it with the Table-1 primitives (including a
+//! cross-level `map_edge`), and simulate.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mldse::eval::Registry;
+use mldse::hwir::{
+    mlc, CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    Topology,
+};
+use mldse::mapping::MappingState;
+use mldse::sim::{simulate, SimConfig};
+use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // 1. Model hardware: board -> { chip (2x2 cores, mesh NoC), DRAM }
+    //    (recursive SpaceMatrix / SpacePoint construction, paper §4)
+    // ------------------------------------------------------------------
+    let mut chip = SpaceMatrix::new("chip", vec![2, 2]);
+    for r in 0..2 {
+        for c in 0..2 {
+            chip.set(
+                Coord::new(vec![r, c]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((32, 32), 128)
+                        .with_lmem(MemoryAttrs::new(2 << 20, 128.0, 2)),
+                )),
+            );
+        }
+    }
+    chip.add_comm(SpacePoint::comm(
+        "noc",
+        CommAttrs::new(Topology::Mesh, 32.0, 1),
+    ));
+
+    let mut board = SpaceMatrix::new("board", vec![2]);
+    board.set(Coord::new(vec![0]), Element::Matrix(chip));
+    board.set(
+        Coord::new(vec![1]),
+        Element::Point(SpacePoint::dram(
+            "dram",
+            MemoryAttrs::new(8 << 30, 512.0, 100),
+        )),
+    );
+    board.add_comm(SpacePoint::comm(
+        "phy",
+        CommAttrs::new(Topology::Bus, 256.0, 4),
+    ));
+
+    let hw = Hardware::build(board);
+    println!(
+        "hardware: {} points, {} levels deep",
+        hw.num_points(),
+        hw.root.depth()
+    );
+
+    // ------------------------------------------------------------------
+    // 2. Build a task graph: load weights from DRAM, two matmul tiles,
+    //    a reduction on a third core.
+    // ------------------------------------------------------------------
+    let mut g = TaskGraph::new();
+    let weights = g.add("weights", TaskKind::Storage { bytes: 4 << 20 });
+    let mut mm = ComputeCost::zero(OpClass::MatMul);
+    mm.dims = [256, 256, 256];
+    mm.mac_flops = 2.0 * 256.0f64.powi(3);
+    mm.in_bytes = 2 * 2 * 256 * 256;
+    mm.out_bytes = 2 * 256 * 256;
+    let t0 = g.add("mm0", TaskKind::Compute(mm));
+    let t1 = g.add("mm1", TaskKind::Compute(mm));
+    let xfer = g.add("gather", TaskKind::Comm { bytes: 128 << 10, hops: 0, route: None });
+    let mut red = ComputeCost::zero(OpClass::Elementwise);
+    red.vec_flops = 65536.0;
+    let t2 = g.add("reduce", TaskKind::Compute(red));
+    g.connect(weights, t0);
+    g.connect(weights, t1);
+    g.connect(t0, xfer);
+    g.connect(t1, xfer);
+    g.connect(xfer, t2);
+
+    // ------------------------------------------------------------------
+    // 3. Map with the Table-1 primitives.
+    // ------------------------------------------------------------------
+    let mut st = MappingState::new(g);
+    let dram = hw.cell(&mlc(&[&[1]])).unwrap();
+    st.map_node(weights, dram)?;
+    st.map_node(t0, hw.cell(&mlc(&[&[0], &[0, 0]])).unwrap())?;
+    st.map_node(t1, hw.cell(&mlc(&[&[0], &[0, 1]])).unwrap())?;
+    st.map_node(t2, hw.cell(&mlc(&[&[0], &[1, 1]])).unwrap())?;
+
+    // cross-level communication mapping (map_edge over the computed route)
+    let route = hw.route(&mlc(&[&[0], &[0, 0]]), &mlc(&[&[0], &[1, 1]]));
+    println!("gather route: {} within-level segment(s)", route.len());
+    let subs = st.map_edge(xfer, &route)?;
+    println!("  decomposed into {} sub-task(s)", subs.len());
+
+    // ------------------------------------------------------------------
+    // 4. Simulate.
+    // ------------------------------------------------------------------
+    let result = simulate(
+        &hw,
+        &st.graph,
+        &st.mapping,
+        &Registry::standard(),
+        &SimConfig::default(),
+    )?;
+    println!("makespan: {:.1} cycles", result.makespan);
+    println!("tasks completed: {}", result.completed);
+    for (p, peak) in &result.peak_memory {
+        println!("peak memory on {}: {} bytes", hw.entry(*p).addr, peak);
+    }
+
+    // undo/redo state control works too:
+    assert!(st.undo());
+    assert!(st.redo());
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+"""AOT compile path: lower the Layer-2 evaluator to HLO text artifacts.
+
+Run once by `make artifacts`; the Rust runtime loads the text with
+`HloModuleProto::from_text_file`. HLO *text* (never `.serialize()`) is the
+interchange format — jax >= 0.5 emits protos with 64-bit instruction ids
+that xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH = 128  # must match rust/src/eval/pjrt.rs::BATCH
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_evaluator(batch: int) -> str:
+    desc = jax.ShapeDtypeStruct((batch, 8), jax.numpy.float32)
+    hw = jax.ShapeDtypeStruct((7,), jax.numpy.float32)
+    lowered = jax.jit(model.evaluate_batch).lower(desc, hw)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    path = os.path.join(args.out_dir, f"evaluator_b{args.batch}.hlo.txt")
+    text = lower_evaluator(args.batch)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

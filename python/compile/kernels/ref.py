@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the batched roofline evaluator (Layer-1 correctness
+reference).
+
+This mirrors, bit-for-bit in semantics, the Rust default evaluator
+(`rust/src/eval/roofline.rs`) and is the ground truth the Pallas kernel
+(`roofline.py`) is checked against by pytest + hypothesis.
+
+Descriptor layout (one row per task, must match `rust/src/eval/pjrt.rs`):
+
+    0: op code          4: out_bytes
+    1: mac_flops        5: m
+    2: vec_flops        6: n
+    3: in_bytes         7: k
+
+Hardware-parameter vector:
+
+    0: systolic rows R      4: lmem latency
+    1: systolic cols C      5: pipeline fill factor
+    2: vector lanes         6: vector efficiency
+    3: lmem bandwidth
+"""
+
+import jax.numpy as jnp
+
+# Op codes (must match rust `OpClass::code`).
+OP_MATMUL = 0
+OP_MVM = 1
+OP_SOFTMAX = 2
+OP_LAYERNORM = 3
+OP_ELEMENTWISE = 4
+OP_ATTENTION = 5
+OP_ROPE = 6
+OP_CUSTOM = 7
+
+DESC_FIELDS = 8
+HW_FIELDS = 7
+
+_INF = jnp.float32(jnp.inf)
+
+
+def matrix_cycles(mac_flops, m, n, k, rows, cols, fill):
+    """Tile-quantized systolic-array cycles (see RooflineEvaluator)."""
+    area = 2.0 * rows * cols
+    # fallback when dims are unknown: ideal throughput
+    ideal = mac_flops / jnp.maximum(area, 1.0)
+    waves = jnp.ceil(m / jnp.maximum(rows, 1.0)) * jnp.ceil(n / jnp.maximum(cols, 1.0))
+    quant = waves * (k + fill * (rows + cols))
+    cyc = jnp.where(m * n * k == 0.0, ideal, quant)
+    cyc = jnp.where(rows * cols == 0.0, _INF, cyc)  # matrix work, no array
+    return jnp.where(mac_flops <= 0.0, 0.0, cyc)
+
+
+def vector_cycles(vec_flops, op, lanes, veff):
+    eff = jnp.where((op == OP_SOFTMAX) | (op == OP_LAYERNORM), veff, 1.0)
+    denom = 2.0 * lanes * eff
+    cyc = jnp.where(denom > 0.0, vec_flops / jnp.maximum(denom, 1e-30), _INF)
+    return jnp.where(vec_flops <= 0.0, 0.0, cyc)
+
+
+def evaluate_ref(desc, hw):
+    """Reference batched evaluation.
+
+    Args:
+      desc: f32[B, 8] task descriptors.
+      hw:   f32[7] hardware parameters.
+
+    Returns:
+      f32[B] latency in cycles.
+    """
+    desc = jnp.asarray(desc, jnp.float32)
+    hw = jnp.asarray(hw, jnp.float32)
+    op = desc[:, 0]
+    mac_flops = desc[:, 1]
+    vec_flops = desc[:, 2]
+    in_bytes = desc[:, 3]
+    out_bytes = desc[:, 4]
+    m, n, k = desc[:, 5], desc[:, 6], desc[:, 7]
+    rows, cols, lanes, bw, lat, fill, veff = (hw[i] for i in range(HW_FIELDS))
+
+    mat = matrix_cycles(mac_flops, m, n, k, rows, cols, fill)
+    vec = vector_cycles(vec_flops, op, lanes, veff)
+    mem = jnp.where(jnp.isinf(bw), 0.0, (in_bytes + out_bytes) / jnp.maximum(bw, 1e-30))
+    return lat + jnp.maximum(mat + vec, mem)

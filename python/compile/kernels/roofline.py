@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: batched roofline task evaluation.
+
+The DSE hot-spot is evaluating E_p(v) for large batches of task descriptors
+(every unique tile of every candidate mapping, for every design point). This
+kernel computes the tile-quantized roofline model for a block of descriptors
+held in VMEM.
+
+TPU-minded structure (see DESIGN.md §Hardware-Adaptation):
+  * the descriptor batch is tiled `(BLOCK, 8)` so each block fits VMEM
+    comfortably (a (128, 8) f32 block is 4 KiB);
+  * all math is element-wise over the batch — pure VPU work, no gathers;
+  * the MXU-utilization term is the same `ceil(m/R)·ceil(n/C)` wave
+    quantization a real systolic array imposes.
+
+`interpret=True` keeps the lowering to plain HLO so the artifact runs on the
+CPU PJRT plugin (real-TPU lowering would emit a Mosaic custom-call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK = 32  # descriptor rows per grid step
+
+
+def _kernel(hw_ref, desc_ref, out_ref):
+    """One block of the batched roofline evaluation (all VPU math)."""
+    desc = desc_ref[...]  # (BLOCK, 8) in VMEM
+    hw = hw_ref[...]  # (7,) broadcast to every block
+
+    op = desc[:, 0]
+    mac_flops = desc[:, 1]
+    vec_flops = desc[:, 2]
+    in_bytes = desc[:, 3]
+    out_bytes = desc[:, 4]
+    m, n, k = desc[:, 5], desc[:, 6], desc[:, 7]
+    rows, cols, lanes, bw, lat, fill, veff = (hw[i] for i in range(ref.HW_FIELDS))
+
+    inf = jnp.float32(jnp.inf)
+
+    # -- systolic array: wave quantization -------------------------------
+    area = 2.0 * rows * cols
+    ideal = mac_flops / jnp.maximum(area, 1.0)
+    waves = jnp.ceil(m / jnp.maximum(rows, 1.0)) * jnp.ceil(n / jnp.maximum(cols, 1.0))
+    quant = waves * (k + fill * (rows + cols))
+    mat = jnp.where(m * n * k == 0.0, ideal, quant)
+    mat = jnp.where(rows * cols == 0.0, inf, mat)
+    mat = jnp.where(mac_flops <= 0.0, 0.0, mat)
+
+    # -- vector unit ------------------------------------------------------
+    eff = jnp.where((op == ref.OP_SOFTMAX) | (op == ref.OP_LAYERNORM), veff, 1.0)
+    denom = 2.0 * lanes * eff
+    vec = jnp.where(denom > 0.0, vec_flops / jnp.maximum(denom, 1e-30), inf)
+    vec = jnp.where(vec_flops <= 0.0, 0.0, vec)
+
+    # -- local-memory stream, overlapped with compute ---------------------
+    mem = jnp.where(jnp.isinf(bw), 0.0, (in_bytes + out_bytes) / jnp.maximum(bw, 1e-30))
+
+    out_ref[...] = lat + jnp.maximum(mat + vec, mem)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def evaluate(desc, hw, *, interpret=True):
+    """Batched roofline evaluation via the Pallas kernel.
+
+    Args:
+      desc: f32[B, 8] task descriptors; B must be a multiple of BLOCK.
+      hw:   f32[7] hardware parameters.
+
+    Returns:
+      f32[B] latency in cycles.
+    """
+    b = desc.shape[0]
+    assert b % BLOCK == 0, f"batch {b} not a multiple of {BLOCK}"
+    grid = (b // BLOCK,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ref.HW_FIELDS,), lambda i: (0,)),  # hw: replicated
+            pl.BlockSpec((BLOCK, ref.DESC_FIELDS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(hw, desc)

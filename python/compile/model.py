@@ -1,0 +1,45 @@
+"""Layer-2 JAX model: the per-SpacePoint evaluator graph.
+
+Composes the Layer-1 Pallas roofline kernel into the batched evaluator the
+Rust coordinator AOT-loads: latency plus a simple energy estimate per task.
+This is the computation `python/compile/aot.py` lowers to HLO text; it is
+never imported at run time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref, roofline
+
+# Energy coefficients (pJ): per MAC, per vector FLOP, per local byte.
+# Ballpark 7nm numbers; only relative magnitudes matter for DSE ranking.
+E_MAC = 0.8
+E_VEC = 0.4
+E_BYTE = 1.1
+
+
+def energy(desc):
+    """Per-task energy estimate in pJ (element-wise over the batch)."""
+    mac_flops = desc[:, 1]
+    vec_flops = desc[:, 2]
+    local_bytes = desc[:, 3] + desc[:, 4]
+    return E_MAC * mac_flops / 2.0 + E_VEC * vec_flops / 2.0 + E_BYTE * local_bytes
+
+
+def evaluate_batch(desc, hw):
+    """The full evaluator: (latency[B], energy[B]).
+
+    `desc` is f32[B, 8] (see kernels.ref for the layout), `hw` is f32[7].
+    The latency path runs through the Pallas kernel; energy is plain jnp —
+    XLA fuses both into one executable.
+    """
+    desc = jnp.asarray(desc, jnp.float32)
+    hw = jnp.asarray(hw, jnp.float32)
+    lat = roofline.evaluate(desc, hw)
+    return lat, energy(desc)
+
+
+def evaluate_batch_ref(desc, hw):
+    """Oracle composition used by the pytest suite."""
+    desc = jnp.asarray(desc, jnp.float32)
+    hw = jnp.asarray(hw, jnp.float32)
+    return ref.evaluate_ref(desc, hw), energy(desc)

@@ -1,0 +1,154 @@
+"""Layer-1 correctness: Pallas roofline kernel vs the pure-jnp oracle.
+
+The hypothesis sweeps exercise descriptor values across the full operating
+range (tiny ops through GPT-3-scale matmuls) and hardware parameters across
+the Table-2 configuration space.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, roofline
+from compile import model
+
+
+def mk_desc(rows):
+    """rows: list of 8-tuples."""
+    d = np.zeros((len(rows), 8), np.float32)
+    for i, r in enumerate(rows):
+        d[i, : len(r)] = r
+    return jnp.asarray(d)
+
+
+def matmul_row(m, n, k):
+    return (
+        ref.OP_MATMUL,
+        2.0 * m * n * k,
+        0.0,
+        2.0 * (m * k + k * n),
+        2.0 * m * n,
+        m,
+        n,
+        k,
+    )
+
+
+HW_IPU_LIKE = jnp.asarray([32, 32, 128, 512.0, 2.0, 1.0, 0.75], jnp.float32)
+
+
+def pad_block(rows):
+    """Pad descriptor rows to a BLOCK multiple."""
+    pad = (-len(rows)) % roofline.BLOCK
+    return rows + [(0.0,) * 8] * pad
+
+
+class TestKernelVsRef:
+    def test_single_matmul(self):
+        desc = mk_desc(pad_block([matmul_row(128, 128, 128)]))
+        got = roofline.evaluate(desc, HW_IPU_LIKE)
+        want = ref.evaluate_ref(desc, HW_IPU_LIKE)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_quantization_jump(self):
+        desc = mk_desc(pad_block([matmul_row(32, 32, 64), matmul_row(33, 32, 64)]))
+        out = np.asarray(roofline.evaluate(desc, HW_IPU_LIKE))
+        assert out[1] > 1.8 * out[0], "MXU wave quantization missing"
+
+    def test_zero_task_is_latency_only(self):
+        desc = mk_desc(pad_block([(0.0,) * 8]))
+        out = np.asarray(roofline.evaluate(desc, HW_IPU_LIKE))
+        np.testing.assert_allclose(out[0], HW_IPU_LIKE[4])  # lmem latency
+
+    def test_softmax_slower_than_elementwise(self):
+        sm = (ref.OP_SOFTMAX, 0.0, 1e6, 0.0, 0.0, 0, 0, 0)
+        ew = (ref.OP_ELEMENTWISE, 0.0, 1e6, 0.0, 0.0, 0, 0, 0)
+        out = np.asarray(roofline.evaluate(mk_desc(pad_block([sm, ew])), HW_IPU_LIKE))
+        assert out[0] > out[1]
+
+    def test_vector_only_unit_inf_for_matmul(self):
+        hw = jnp.asarray([0, 0, 128, 64.0, 0.0, 1.0, 0.75], jnp.float32)
+        desc = mk_desc(pad_block([matmul_row(64, 64, 64)]))
+        out = np.asarray(roofline.evaluate(desc, hw))
+        assert np.isinf(out[0])
+
+    def test_infinite_bandwidth_means_compute_bound(self):
+        hw = jnp.asarray([32, 32, 128, np.inf, 0.0, 1.0, 0.75], jnp.float32)
+        desc = mk_desc(pad_block([matmul_row(64, 64, 64)]))
+        got = np.asarray(roofline.evaluate(desc, hw))
+        want = np.asarray(ref.evaluate_ref(desc, hw))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert np.isfinite(got[0])
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        op=st.integers(0, 7),
+        mac=st.floats(0, 1e13),
+        vec=st.floats(0, 1e10),
+        in_b=st.floats(0, 1e9),
+        out_b=st.floats(0, 1e9),
+        m=st.integers(0, 8192),
+        n=st.integers(0, 8192),
+        k=st.integers(0, 8192),
+    )
+    def test_hypothesis_descriptors(self, op, mac, vec, in_b, out_b, m, n, k):
+        desc = mk_desc(pad_block([(op, mac, vec, in_b, out_b, m, n, k)]))
+        got = roofline.evaluate(desc, HW_IPU_LIKE)
+        want = ref.evaluate_ref(desc, HW_IPU_LIKE)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        rows=st.sampled_from([0, 16, 32, 64, 128]),
+        cols=st.sampled_from([0, 16, 32, 64, 128]),
+        lanes=st.sampled_from([0, 128, 256, 512]),
+        bw=st.floats(1.0, 4096.0),
+        lat=st.floats(0.0, 100.0),
+    )
+    def test_hypothesis_hw_params(self, rows, cols, lanes, bw, lat):
+        hw = jnp.asarray([rows, cols, lanes, bw, lat, 1.0, 0.75], jnp.float32)
+        rows_d = [
+            matmul_row(128, 128, 512),
+            (ref.OP_SOFTMAX, 0.0, 4e6, 3e4, 3e4, 0, 0, 0),
+            (ref.OP_MVM, 2e6, 0.0, 2e6, 2e3, 1, 4096, 4096),
+        ]
+        desc = mk_desc(pad_block(rows_d))
+        got = roofline.evaluate(desc, hw)
+        want = ref.evaluate_ref(desc, hw)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(nblocks=st.integers(1, 8))
+    def test_hypothesis_batch_sizes(self, nblocks):
+        rng = np.random.default_rng(nblocks)
+        b = nblocks * roofline.BLOCK
+        desc = jnp.asarray(
+            np.abs(rng.normal(size=(b, 8)) * 1000).astype(np.float32)
+        )
+        got = roofline.evaluate(desc, HW_IPU_LIKE)
+        want = ref.evaluate_ref(desc, HW_IPU_LIKE)
+        assert got.shape == (b,)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_batch_must_be_block_multiple(self):
+        desc = jnp.zeros((roofline.BLOCK + 1, 8), jnp.float32)
+        with pytest.raises(AssertionError):
+            roofline.evaluate(desc, HW_IPU_LIKE)
+
+
+class TestModel:
+    def test_evaluate_batch_matches_ref_composition(self):
+        desc = mk_desc(pad_block([matmul_row(256, 256, 256)] * 3))
+        lat, en = model.evaluate_batch(desc, HW_IPU_LIKE)
+        lat_r, en_r = model.evaluate_batch_ref(desc, HW_IPU_LIKE)
+        np.testing.assert_allclose(lat, lat_r, rtol=1e-6)
+        np.testing.assert_allclose(en, en_r, rtol=1e-6)
+
+    def test_energy_monotone_in_work(self):
+        small = mk_desc(pad_block([matmul_row(64, 64, 64)]))
+        big = mk_desc(pad_block([matmul_row(512, 512, 512)]))
+        _, e_small = model.evaluate_batch(small, HW_IPU_LIKE)
+        _, e_big = model.evaluate_batch(big, HW_IPU_LIKE)
+        assert float(e_big[0]) > float(e_small[0])

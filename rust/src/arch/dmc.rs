@@ -1,0 +1,223 @@
+//! Distributed many-core (DMC) architecture template (paper Fig. 9(b)).
+//!
+//! A chip of `grid` cores — each a compute `SpacePoint` with systolic array,
+//! vector unit and private local memory — connected by a 2D-mesh NoC, with
+//! an off-chip DRAM channel at board level. Parameters follow the paper's
+//! IPU-like instantiation (footnote 2: "parameters resembling a Graphcore
+//! IPU, without directly modeling it"; 128 tiles at 152 B/cycle local
+//! bandwidth, footnote 3).
+
+use crate::cost::AreaModel;
+use crate::hwir::{
+    CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    Topology,
+};
+
+/// DMC design parameters (bandwidths in bytes/cycle, capacities in bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmcParams {
+    /// Core grid (rows, cols).
+    pub grid: (usize, usize),
+    pub systolic: (u32, u32),
+    pub vector_lanes: u32,
+    pub lmem_capacity: u64,
+    pub lmem_bandwidth: f64,
+    pub lmem_latency: u64,
+    pub noc_bandwidth: f64,
+    pub noc_latency: u64,
+    pub dram_capacity: u64,
+    pub dram_bandwidth: f64,
+    pub dram_latency: u64,
+    /// Attach an off-chip DRAM channel (disable for chiplet use inside
+    /// MPMC packages where memory is fully on-chip).
+    pub with_dram: bool,
+}
+
+impl Default for DmcParams {
+    fn default() -> Self {
+        DmcParams {
+            grid: (16, 8), // 128 cores
+            systolic: (64, 64),
+            vector_lanes: 512,
+            lmem_capacity: 2 << 20,
+            lmem_bandwidth: 152.0,
+            lmem_latency: 2,
+            noc_bandwidth: 32.0,
+            noc_latency: 1,
+            dram_capacity: 16 << 30,
+            dram_bandwidth: 2048.0, // HBM2e-class at 1 GHz
+            dram_latency: 100,
+            with_dram: true,
+        }
+    }
+}
+
+impl DmcParams {
+    /// Number of cores.
+    pub fn cores(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    /// Total on-chip memory.
+    pub fn total_lmem(&self) -> u64 {
+        self.cores() as u64 * self.lmem_capacity
+    }
+
+    /// The four Table-2 compute-memory configurations (1-indexed).
+    pub fn table2(config: usize) -> DmcParams {
+        let base = DmcParams::default();
+        match config {
+            1 => DmcParams {
+                lmem_capacity: 1 << 20,
+                systolic: (128, 128),
+                vector_lanes: 512,
+                ..base
+            },
+            2 => DmcParams {
+                lmem_capacity: 2 << 20,
+                systolic: (64, 64),
+                vector_lanes: 512,
+                ..base
+            },
+            3 => DmcParams {
+                lmem_capacity: 5 << 19, // 2.5 MB
+                systolic: (32, 32),
+                vector_lanes: 128,
+                ..base
+            },
+            4 => DmcParams {
+                lmem_capacity: 3 << 20,
+                systolic: (16, 16),
+                vector_lanes: 128,
+                ..base
+            },
+            other => panic!("table2 config {other} out of range 1..=4"),
+        }
+    }
+
+    /// The core-array `SpaceMatrix` (chip without board/DRAM wrapper).
+    pub fn chip_matrix(&self, name: &str) -> SpaceMatrix {
+        let mut chip = SpaceMatrix::new(name, vec![self.grid.0, self.grid.1]);
+        let core = SpacePoint::compute(
+            "core",
+            ComputeAttrs::new(self.systolic, self.vector_lanes).with_lmem(MemoryAttrs::new(
+                self.lmem_capacity,
+                self.lmem_bandwidth,
+                self.lmem_latency,
+            )),
+        );
+        for r in 0..self.grid.0 {
+            for c in 0..self.grid.1 {
+                chip.set(
+                    Coord::new(vec![r as u32, c as u32]),
+                    Element::Point(core.clone()),
+                );
+            }
+        }
+        chip.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, self.noc_bandwidth, self.noc_latency),
+        ));
+        chip
+    }
+
+    /// Build the operable hardware: `board -> { chip, dram? }`.
+    pub fn build(&self) -> Hardware {
+        let chip = self.chip_matrix("chip");
+        let cells = if self.with_dram { 2 } else { 1 };
+        let mut board = SpaceMatrix::new("board", vec![cells]);
+        board.set(Coord::new(vec![0]), Element::Matrix(chip));
+        if self.with_dram {
+            board.set(
+                Coord::new(vec![1]),
+                Element::Point(SpacePoint::dram(
+                    "dram",
+                    MemoryAttrs::new(self.dram_capacity, self.dram_bandwidth, self.dram_latency),
+                )),
+            );
+        }
+        // chip<->DRAM PHY; generous so the DRAM channel itself dominates
+        board.add_comm(SpacePoint::comm(
+            "phy",
+            CommAttrs::new(Topology::Bus, 4096.0, 1),
+        ));
+        Hardware::build(board)
+    }
+
+    /// Chip area breakdown: (cores, control, interconnect, total) in mm².
+    pub fn area(&self, model: &AreaModel) -> (f64, f64, f64, f64) {
+        let cores = self.cores() as f64
+            * model.dmc_core(
+                self.lmem_capacity,
+                self.lmem_bandwidth,
+                self.systolic,
+                self.vector_lanes,
+            );
+        let (ctrl, ic, total) = model.chip_total(cores);
+        (cores, ctrl, ic, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::mlc;
+
+    #[test]
+    fn default_build_shape() {
+        let hw = DmcParams::default().build();
+        assert_eq!(hw.points_of_kind("compute").len(), 128);
+        assert_eq!(hw.points_of_kind("dram").len(), 1);
+        assert_eq!(hw.points_of_kind("comm").len(), 2); // noc + phy
+        // core addressable at board(0) -> (r, c)
+        assert!(hw.cell(&mlc(&[&[0], &[15, 7]])).is_some());
+        assert!(hw.cell(&mlc(&[&[0], &[16, 0]])).is_none());
+    }
+
+    #[test]
+    fn without_dram() {
+        let p = DmcParams {
+            with_dram: false,
+            ..Default::default()
+        };
+        let hw = p.build();
+        assert!(hw.points_of_kind("dram").is_empty());
+    }
+
+    #[test]
+    fn table2_configs_distinct_and_total_memory() {
+        let c2 = DmcParams::table2(2);
+        assert_eq!(c2.total_lmem(), 256 << 20); // 2MB * 128 = 256MB
+        let c3 = DmcParams::table2(3);
+        assert_eq!(c3.total_lmem(), 320 << 20); // 2.5MB * 128 = 320MB (IPU-like)
+        for i in 1..=4 {
+            for j in i + 1..=4 {
+                assert_ne!(DmcParams::table2(i), DmcParams::table2(j));
+            }
+        }
+    }
+
+    #[test]
+    fn dram_route_crosses_levels() {
+        let hw = DmcParams::default().build();
+        let segs = hw.route(&mlc(&[&[0], &[3, 4]]), &mlc(&[&[1]]));
+        assert_eq!(segs.len(), 2); // noc then phy
+        assert_eq!(hw.point(segs[0].comm).name, "noc");
+        assert_eq!(hw.point(segs[1].comm).name, "phy");
+        assert_eq!(segs[0].hops, 7); // (3,4) -> (0,0) port
+    }
+
+    #[test]
+    fn area_monotone_in_systolic() {
+        let m = AreaModel::default();
+        let small = DmcParams::table2(4).area(&m).3;
+        let big = DmcParams::table2(1).area(&m).3;
+        assert!(big > small);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn table2_bad_index() {
+        DmcParams::table2(0);
+    }
+}

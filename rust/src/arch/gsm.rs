@@ -1,0 +1,193 @@
+//! GPU-like shared-memory (GSM) architecture template (paper Fig. 9(a)).
+//!
+//! SMs (compute points whose "local memory" aggregates L1 + register file)
+//! access a *shared memory* — the paper's term for the GPU L2 / TPU global
+//! buffer — over a crossbar, with DRAM behind it. Shared-memory bandwidth
+//! is the contended resource that dominates GSM performance (§7.3.3):
+//! SM↔L2 transfers are comm tasks mapped onto the L2 memory point, whose
+//! bandwidth all SMs share.
+
+use crate::cost::AreaModel;
+use crate::hwir::{
+    CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    Topology,
+};
+
+/// GSM design parameters (bandwidths in bytes/cycle, capacities in bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GsmParams {
+    /// Number of streaming multiprocessors.
+    pub sms: usize,
+    pub systolic: (u32, u32),
+    pub vector_lanes: u32,
+    /// Per-SM L1 (cache + scratchpad).
+    pub l1_capacity: u64,
+    pub l1_bandwidth: f64,
+    pub l1_latency: u64,
+    /// Per-SM register file.
+    pub regfile_capacity: u64,
+    /// Shared memory (GPU L2 / global buffer).
+    pub l2_capacity: u64,
+    pub l2_bandwidth: f64,
+    pub l2_latency: u64,
+    pub dram_capacity: u64,
+    pub dram_bandwidth: f64,
+    pub dram_latency: u64,
+}
+
+impl Default for GsmParams {
+    fn default() -> Self {
+        GsmParams {
+            sms: 128,
+            systolic: (32, 32),
+            vector_lanes: 512,
+            l1_capacity: 256 << 10,
+            l1_bandwidth: 64.0, // A100-like local (paper §7.3.3)
+            l1_latency: 4,
+            regfile_capacity: 64 << 10,
+            l2_capacity: 192 << 20,
+            l2_bandwidth: 5120.0, // A100-like shared (paper §7.3.3)
+            l2_latency: 40,
+            dram_capacity: 40 << 30,
+            dram_bandwidth: 1555.0, // A100-class HBM at 1 GHz
+            dram_latency: 120,
+        }
+    }
+}
+
+impl GsmParams {
+    /// The four Table-2 compute-memory configurations (1-indexed).
+    pub fn table2(config: usize) -> GsmParams {
+        let base = GsmParams::default();
+        match config {
+            1 => GsmParams {
+                l2_capacity: 256 << 20,
+                l1_capacity: 128 << 10,
+                systolic: (16, 16),
+                vector_lanes: 128,
+                ..base
+            },
+            2 => GsmParams {
+                l2_capacity: 192 << 20,
+                l1_capacity: 256 << 10,
+                systolic: (32, 32),
+                vector_lanes: 512,
+                ..base
+            },
+            3 => GsmParams {
+                l2_capacity: 128 << 20,
+                l1_capacity: 512 << 10,
+                systolic: (64, 64),
+                vector_lanes: 256,
+                ..base
+            },
+            4 => GsmParams {
+                l2_capacity: 32 << 20,
+                l1_capacity: 128 << 10,
+                systolic: (128, 128),
+                vector_lanes: 128,
+                ..base
+            },
+            other => panic!("table2 config {other} out of range 1..=4"),
+        }
+    }
+
+    /// Build `board -> { SM array, L2, DRAM }`.
+    pub fn build(&self) -> Hardware {
+        let mut sm_array = SpaceMatrix::new("sm-array", vec![self.sms]);
+        // L1 + register file aggregate as the SM-local memory
+        let sm = SpacePoint::compute(
+            "sm",
+            ComputeAttrs::new(self.systolic, self.vector_lanes).with_lmem(MemoryAttrs::new(
+                self.l1_capacity + self.regfile_capacity,
+                self.l1_bandwidth,
+                self.l1_latency,
+            )),
+        );
+        for i in 0..self.sms {
+            sm_array.set(Coord::new(vec![i as u32]), Element::Point(sm.clone()));
+        }
+        sm_array.add_comm(SpacePoint::comm(
+            "xbar",
+            CommAttrs::new(Topology::FullyConnected, self.l2_bandwidth, 2),
+        ));
+
+        let mut board = SpaceMatrix::new("board", vec![3]);
+        board.set(Coord::new(vec![0]), Element::Matrix(sm_array));
+        board.set(
+            Coord::new(vec![1]),
+            Element::Point(SpacePoint::memory(
+                "l2",
+                MemoryAttrs::new(self.l2_capacity, self.l2_bandwidth, self.l2_latency),
+            )),
+        );
+        board.set(
+            Coord::new(vec![2]),
+            Element::Point(SpacePoint::dram(
+                "dram",
+                MemoryAttrs::new(self.dram_capacity, self.dram_bandwidth, self.dram_latency),
+            )),
+        );
+        board.add_comm(SpacePoint::comm(
+            "fabric",
+            CommAttrs::new(Topology::Bus, 8192.0, 1),
+        ));
+        Hardware::build(board)
+    }
+
+    /// Chip area breakdown: (sms+l2, control, interconnect, total) in mm².
+    pub fn area(&self, model: &AreaModel) -> (f64, f64, f64, f64) {
+        let sm_area = self.sms as f64
+            * model.gsm_sm(
+                self.l1_capacity,
+                self.l1_bandwidth,
+                self.regfile_capacity,
+                self.systolic,
+                self.vector_lanes,
+            );
+        let l2_area = model.sram(self.l2_capacity, self.l2_bandwidth / 16.0); // banked slices
+        let base = sm_area + l2_area;
+        let (ctrl, ic, total) = model.chip_total(base);
+        (base, ctrl, ic, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::mlc;
+
+    #[test]
+    fn build_shape() {
+        let hw = GsmParams::default().build();
+        assert_eq!(hw.points_of_kind("compute").len(), 128);
+        assert_eq!(hw.points_of_kind("memory").len(), 1); // l2
+        assert_eq!(hw.points_of_kind("dram").len(), 1);
+        assert!(hw.cell(&mlc(&[&[1]])).is_some()); // l2 at board level
+    }
+
+    #[test]
+    fn table2_l2_sizes() {
+        assert_eq!(GsmParams::table2(1).l2_capacity, 256 << 20);
+        assert_eq!(GsmParams::table2(4).l2_capacity, 32 << 20);
+    }
+
+    #[test]
+    fn gsm_has_less_onchip_memory_than_dmc_at_same_budget() {
+        // paper §7.3.3 insight (1): register files burn area, so GSM's
+        // total on-chip memory is smaller at a comparable chip area.
+        use crate::arch::dmc::DmcParams;
+        let gsm = GsmParams::table2(2);
+        let dmc = DmcParams::table2(2);
+        let gsm_mem = gsm.l2_capacity + gsm.sms as u64 * (gsm.l1_capacity + gsm.regfile_capacity);
+        assert!(gsm_mem < dmc.total_lmem());
+    }
+
+    #[test]
+    fn area_dominated_by_l2_for_big_configs() {
+        let m = AreaModel::default();
+        let a1 = GsmParams::table2(1).area(&m).3; // 256MB L2
+        let a4 = GsmParams::table2(4).area(&m).3; // 32MB L2, big arrays
+        assert!(a1 > 0.0 && a4 > 0.0);
+    }
+}

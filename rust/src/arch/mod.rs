@@ -1,0 +1,14 @@
+//! Architecture templates — MLDSE instantiated for the paper's three
+//! evaluation architectures (§7): GPU-like shared memory ([`gsm`]),
+//! distributed many-core ([`dmc`]), and multi-package multi-chiplet DMC
+//! ([`mpmc`]). Each is a parameterized generator producing an operable
+//! [`crate::hwir::Hardware`], its area breakdown, and (for MPMC) its
+//! manufacturing cost.
+
+pub mod dmc;
+pub mod gsm;
+pub mod mpmc;
+
+pub use dmc::DmcParams;
+pub use gsm::GsmParams;
+pub use mpmc::MpmcParams;

@@ -1,0 +1,198 @@
+//! Multi-package multi-chiplet DMC (MPMC-DMC) architecture (paper §7.4,
+//! Fig. 10(a)).
+//!
+//! Spatial hierarchy: board → package → chiplet → core. A fixed pool of
+//! DMC chiplets (24 in the paper, 128 cores / 128 MB each) is distributed
+//! over packages; raising `chiplets_per_package` replaces slow board-level
+//! links with fast in-package NoP links (MCM or 2.5D) at higher packaging
+//! cost — the Fig. 10(c,d) trade-off. This template is the paper's
+//! demonstration that MLDSE can *add a spatial level* without a new tool.
+
+use crate::cost::{AreaModel, CostModel, Packaging};
+use crate::hwir::{CommAttrs, Coord, Element, Hardware, SpaceMatrix, SpacePoint, Topology};
+
+use super::dmc::DmcParams;
+
+/// MPMC-DMC design parameters.
+#[derive(Debug, Clone)]
+pub struct MpmcParams {
+    /// Total chiplet pool (must divide by `chiplets_per_package`).
+    pub total_chiplets: usize,
+    pub chiplets_per_package: usize,
+    /// Per-chiplet DMC design (DRAM disabled; spatial computing keeps
+    /// weights and KV on-chip, §7.4).
+    pub chiplet: DmcParams,
+    pub packaging: Packaging,
+    /// In-package network-on-package.
+    pub nop_bandwidth: f64,
+    pub nop_latency: u64,
+    /// Board-level network between packages.
+    pub board_bandwidth: f64,
+    pub board_latency: u64,
+}
+
+impl MpmcParams {
+    /// The paper's §7.4 instance: 24 chiplets of 128 cores / 1 MB-per-core
+    /// (128 MB on-chip each).
+    pub fn paper(chiplets_per_package: usize, packaging: Packaging) -> MpmcParams {
+        let chiplet = DmcParams {
+            grid: (16, 8),
+            lmem_capacity: 1 << 20, // 128 MB per chiplet
+            with_dram: false,
+            ..DmcParams::default()
+        };
+        let (nop_bw, nop_lat) = match packaging {
+            Packaging::Mcm => (64.0, 8),
+            Packaging::Interposer2_5D => (256.0, 3),
+        };
+        MpmcParams {
+            total_chiplets: 24,
+            chiplets_per_package,
+            chiplet,
+            packaging,
+            nop_bandwidth: nop_bw,
+            nop_latency: nop_lat,
+            board_bandwidth: 4.0,
+            board_latency: 2500, // PCB SerDes + protocol + switch stack
+
+        }
+    }
+
+    pub fn packages(&self) -> usize {
+        assert!(
+            self.total_chiplets % self.chiplets_per_package == 0,
+            "{} chiplets not divisible into packages of {}",
+            self.total_chiplets,
+            self.chiplets_per_package
+        );
+        self.total_chiplets / self.chiplets_per_package
+    }
+
+    /// Build `board -> package -> chiplet -> core`.
+    pub fn build(&self) -> Hardware {
+        let chip = self.chiplet.chip_matrix("chiplet");
+        let mut package = SpaceMatrix::new("package", vec![self.chiplets_per_package]);
+        for i in 0..self.chiplets_per_package {
+            package.set(Coord::new(vec![i as u32]), Element::Matrix(chip.clone()));
+        }
+        package.add_comm(SpacePoint::comm(
+            "nop",
+            CommAttrs::new(
+                match self.packaging {
+                    Packaging::Mcm => Topology::Bus,
+                    Packaging::Interposer2_5D => Topology::FullyConnected,
+                },
+                self.nop_bandwidth,
+                self.nop_latency,
+            ),
+        ));
+
+        let npkg = self.packages();
+        let mut board = SpaceMatrix::new("board", vec![npkg]);
+        for i in 0..npkg {
+            board.set(Coord::new(vec![i as u32]), Element::Matrix(package.clone()));
+        }
+        board.add_comm(SpacePoint::comm(
+            "board-net",
+            CommAttrs::new(Topology::Ring, self.board_bandwidth, self.board_latency),
+        ));
+        Hardware::build(board)
+    }
+
+    /// Manufacturing cost of the whole system.
+    pub fn system_cost(&self, area_model: &AreaModel, cost_model: &CostModel) -> f64 {
+        let chiplet_area = self.chiplet.area(area_model).3;
+        cost_model.system_cost(
+            self.total_chiplets,
+            self.chiplets_per_package,
+            chiplet_area,
+            self.packaging,
+        )
+    }
+
+    /// Flat list of chiplet coordinates (board, package) in order — the
+    /// unit the layer-pipeline mapper distributes transformer stages over.
+    pub fn chiplet_coords(&self) -> Vec<crate::hwir::MlCoord> {
+        let mut out = Vec::new();
+        for p in 0..self.packages() {
+            for c in 0..self.chiplets_per_package {
+                out.push(crate::hwir::MlCoord::new(vec![
+                    Coord::new(vec![p as u32]),
+                    Coord::new(vec![c as u32]),
+                ]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::mlc;
+
+    #[test]
+    fn four_level_hierarchy() {
+        let p = MpmcParams::paper(2, Packaging::Mcm);
+        let hw = p.build();
+        assert_eq!(p.packages(), 12);
+        // 24 chiplets * 128 cores
+        assert_eq!(hw.points_of_kind("compute").len(), 24 * 128);
+        // core at board(3) -> package(1) -> core(15,7)
+        assert!(hw.cell(&mlc(&[&[3], &[1], &[15, 7]])).is_some());
+        // comm points: 1 board-net + 12 nop + 24 noc
+        assert_eq!(hw.points_of_kind("comm").len(), 1 + 12 + 24);
+    }
+
+    #[test]
+    fn cross_package_route_uses_board_net() {
+        let p = MpmcParams::paper(2, Packaging::Mcm);
+        let hw = p.build();
+        let segs = hw.route(
+            &mlc(&[&[0], &[0], &[0, 0]]),
+            &mlc(&[&[5], &[1], &[2, 3]]),
+        );
+        let names: Vec<&str> = segs.iter().map(|s| hw.point(s.comm).name.as_str()).collect();
+        assert_eq!(names, ["noc", "nop", "board-net", "nop", "noc"]);
+    }
+
+    #[test]
+    fn within_package_route_skips_board() {
+        let p = MpmcParams::paper(4, Packaging::Interposer2_5D);
+        let hw = p.build();
+        let segs = hw.route(
+            &mlc(&[&[0], &[0], &[0, 0]]),
+            &mlc(&[&[0], &[3], &[0, 0]]),
+        );
+        let names: Vec<&str> = segs.iter().map(|s| hw.point(s.comm).name.as_str()).collect();
+        assert_eq!(names, ["noc", "nop", "noc"]);
+    }
+
+    #[test]
+    fn more_chiplets_per_package_costs_more() {
+        let am = AreaModel::default();
+        let cm = CostModel::default();
+        let c1 = MpmcParams::paper(1, Packaging::Mcm).system_cost(&am, &cm);
+        let c6 = MpmcParams::paper(6, Packaging::Mcm).system_cost(&am, &cm);
+        assert!(c6 > c1);
+        // 2.5D costs more than MCM at the same configuration
+        let mcm = MpmcParams::paper(2, Packaging::Mcm).system_cost(&am, &cm);
+        let d25 = MpmcParams::paper(2, Packaging::Interposer2_5D).system_cost(&am, &cm);
+        assert!(d25 > mcm);
+    }
+
+    #[test]
+    fn chiplet_coords_enumeration() {
+        let p = MpmcParams::paper(3, Packaging::Mcm);
+        let coords = p.chiplet_coords();
+        assert_eq!(coords.len(), 24);
+        assert_eq!(coords[0], mlc(&[&[0], &[0]]));
+        assert_eq!(coords[23], mlc(&[&[7], &[2]]));
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn invalid_chiplet_split_panics() {
+        MpmcParams::paper(5, Packaging::Mcm).packages();
+    }
+}

@@ -1,0 +1,195 @@
+//! L3 coordinator: owns the evaluator registry (including the PJRT-backed
+//! evaluator loaded from the AOT artifacts), the worker pool, and the
+//! experiment entry points shared by the CLI and the examples.
+//!
+//! Python never runs here — `make artifacts` produced the HLO text once;
+//! the coordinator loads and executes it through [`crate::runtime`].
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dse::experiments::{self, Ctx};
+use crate::dse::report::Table;
+use crate::eval::pjrt::PjrtEvaluator;
+use crate::eval::{Demand, Evaluator, Registry};
+use crate::hwir::PointEntry;
+use crate::runtime::Runtime;
+use crate::sim::{simulate, SimConfig, SimResult};
+use crate::taskgraph::Task;
+use crate::workloads::Workload;
+
+/// Forwarding evaluator so the shared PJRT evaluator can live in the
+/// registry *and* be pre-warmed directly.
+struct SharedEval(Arc<PjrtEvaluator>);
+
+impl Evaluator for SharedEval {
+    fn demand(&self, task: &Task, point: &PointEntry) -> Demand {
+        self.0.demand(task, point)
+    }
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    evals: Registry,
+    pjrt: Option<Arc<PjrtEvaluator>>,
+    /// Keep the PJRT client alive as long as the evaluator.
+    _runtime: Option<Runtime>,
+    pub workers: usize,
+}
+
+impl Coordinator {
+    /// Analytic (pure-Rust) evaluators only.
+    pub fn standard() -> Coordinator {
+        Coordinator {
+            evals: Registry::standard(),
+            pjrt: None,
+            _runtime: None,
+            workers: crate::dse::parallel::default_workers(),
+        }
+    }
+
+    /// Load the AOT evaluator artifact and register it under the "pjrt"
+    /// binding key (points with `evaluator = "pjrt"` use it).
+    pub fn with_pjrt() -> Result<Coordinator> {
+        let rt = Runtime::cpu()?;
+        let ev = Arc::new(PjrtEvaluator::load(&rt)?);
+        let mut evals = Registry::standard();
+        evals.register("pjrt", Box::new(SharedEval(ev.clone())));
+        Ok(Coordinator {
+            evals,
+            pjrt: Some(ev),
+            _runtime: Some(rt),
+            workers: crate::dse::parallel::default_workers(),
+        })
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.evals
+    }
+
+    /// Simulate a workload with the analytic registry.
+    pub fn simulate(&self, w: &Workload, cfg: &SimConfig) -> Result<SimResult> {
+        Ok(simulate(&w.hw, &w.graph, &w.mapping, &self.evals, cfg)?)
+    }
+
+    /// Simulate a workload with the PJRT evaluator as the *default* for all
+    /// points (cache pre-warmed in one batched pass so the event loop never
+    /// blocks on XLA). Errors if PJRT is unavailable.
+    pub fn simulate_pjrt(&self, w: &Workload, cfg: &SimConfig) -> Result<SimResult> {
+        let Some(ev) = &self.pjrt else {
+            anyhow::bail!("PJRT evaluator not loaded (run `make artifacts`)");
+        };
+        let n = ev.prewarm(&w.graph, &w.mapping, &w.hw)?;
+        crate::log_debug!("pjrt prewarm: {n} unique descriptors");
+        let mut reg = Registry::new(Box::new(SharedEval(ev.clone())));
+        reg.register("pjrt", Box::new(SharedEval(ev.clone())));
+        Ok(simulate(&w.hw, &w.graph, &w.mapping, &reg, cfg)?)
+    }
+
+    /// PJRT evaluator cache statistics (hits, misses).
+    pub fn pjrt_stats(&self) -> Option<(u64, u64)> {
+        self.pjrt.as_ref().map(|e| e.cache_stats())
+    }
+
+    /// Run a named experiment; `quick` shrinks problem sizes.
+    pub fn run_experiment(&self, name: &str, quick: bool) -> Result<Vec<Table>> {
+        let ctx = if quick { Ctx::quick() } else { Ctx::standard() };
+        let tables = match name {
+            "table2" => experiments::table2(&ctx),
+            "fig8-kernel" => experiments::fig8_kernel(&ctx),
+            "fig8-llm" => experiments::fig8_llm(&ctx),
+            "fig9-gsm" => experiments::fig9_gsm(&ctx),
+            "fig9-dmc" => experiments::fig9_dmc(&ctx),
+            "fig9-cross" => experiments::fig9_cross(&ctx),
+            "fig10" => experiments::fig10(&ctx),
+            "sim-speed" => vec![experiments::sim_speed(&ctx).0],
+            other => anyhow::bail!(
+                "unknown experiment '{other}' (try table2, fig8-kernel, fig8-llm, \
+                 fig9-gsm, fig9-dmc, fig9-cross, fig10, sim-speed)"
+            ),
+        };
+        Ok(tables)
+    }
+}
+
+/// All experiment names, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table2",
+    "fig8-kernel",
+    "fig8-llm",
+    "fig9-gsm",
+    "fig9-dmc",
+    "fig9-cross",
+    "fig10",
+    "sim-speed",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::DmcParams;
+    use crate::workloads::{dmc_prefill, LlmConfig};
+
+    fn tiny_workload() -> Workload {
+        let cfg = LlmConfig {
+            hidden: 256,
+            heads: 4,
+            ffn: 1024,
+            layers: 1,
+            elem_bytes: 2,
+        };
+        let params = DmcParams {
+            grid: (2, 2),
+            ..DmcParams::default()
+        };
+        dmc_prefill(&cfg, 64, &params)
+    }
+
+    #[test]
+    fn standard_coordinator_simulates() {
+        let c = Coordinator::standard();
+        let w = tiny_workload();
+        let r = c.simulate(&w, &SimConfig::default()).unwrap();
+        assert!(r.makespan > 0.0);
+        assert!(!c.has_pjrt());
+        assert!(c.simulate_pjrt(&w, &SimConfig::default()).is_err());
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let c = Coordinator::standard();
+        assert!(c.run_experiment("nope", true).is_err());
+    }
+
+    /// Full L3->PJRT round trip (skips when artifacts are absent): the
+    /// PJRT-backed simulation must agree with the analytic one.
+    #[test]
+    fn pjrt_simulation_matches_analytic() {
+        let art = crate::runtime::artifacts_dir().join("evaluator_b128.hlo.txt");
+        if !art.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let c = Coordinator::with_pjrt().unwrap();
+        let w = tiny_workload();
+        let analytic = c.simulate(&w, &SimConfig::default()).unwrap();
+        let pjrt = c.simulate_pjrt(&w, &SimConfig::default()).unwrap();
+        let rel = (analytic.makespan - pjrt.makespan).abs() / analytic.makespan;
+        assert!(
+            rel < 1e-3,
+            "pjrt {} vs analytic {}",
+            pjrt.makespan,
+            analytic.makespan
+        );
+        let (hits, misses) = c.pjrt_stats().unwrap();
+        assert!(hits > 0, "prewarm should make the sim cache-hit ({hits}/{misses})");
+    }
+}

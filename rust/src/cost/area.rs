@@ -1,0 +1,185 @@
+//! Area model (CACTI/LLMCompass-flavoured analytic fits; paper Table 2).
+//!
+//! Only *relative* area trade-offs drive the paper's conclusions — in
+//! particular that, under a fixed total-area budget, more local-memory
+//! capacity or bandwidth shrinks the systolic array (§7.3.2: "increased
+//! memory bandwidth increases memory area, resulting a reduction of
+//! available systolic array area"). Coefficients are fitted to land the
+//! Table-2 configurations in the paper's ~800–930 mm² band at 7nm-class
+//! density; see EXPERIMENTS.md E1 for model-vs-paper numbers.
+
+/// Area coefficients (mm²-denominated).
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    /// SRAM base area per MiB.
+    pub sram_mm2_per_mib: f64,
+    /// Extra SRAM area per MiB per byte/cycle of bandwidth (banking).
+    pub sram_bw_mm2_per_mib_bpc: f64,
+    /// Register-file area per MiB (denser ports => much worse than SRAM).
+    pub regfile_mm2_per_mib: f64,
+    /// Area per bf16 MAC of the systolic array.
+    pub mac_mm2: f64,
+    /// Area per vector lane.
+    pub lane_mm2: f64,
+    /// Fixed per-core overhead (sequencer, LSU).
+    pub core_fixed_mm2: f64,
+    /// Control-logic overhead as a fraction of compute+memory area.
+    pub control_frac: f64,
+    /// On-chip interconnect overhead fraction.
+    pub interconnect_frac: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            sram_mm2_per_mib: 0.35,
+            sram_bw_mm2_per_mib_bpc: 0.0013,
+            regfile_mm2_per_mib: 6.0,
+            mac_mm2: 3.0e-4,
+            lane_mm2: 2.5e-3,
+            core_fixed_mm2: 0.05,
+            control_frac: 0.01,
+            interconnect_frac: 0.05,
+        }
+    }
+}
+
+impl AreaModel {
+    /// SRAM macro area for `bytes` capacity at `bw` bytes/cycle.
+    pub fn sram(&self, bytes: u64, bw: f64) -> f64 {
+        let mib = bytes as f64 / (1 << 20) as f64;
+        mib * (self.sram_mm2_per_mib + self.sram_bw_mm2_per_mib_bpc * bw)
+    }
+
+    /// Register-file area for `bytes`.
+    pub fn regfile(&self, bytes: u64) -> f64 {
+        bytes as f64 / (1 << 20) as f64 * self.regfile_mm2_per_mib
+    }
+
+    /// Systolic array area for an `r × c` array.
+    pub fn systolic(&self, r: u32, c: u32) -> f64 {
+        r as f64 * c as f64 * self.mac_mm2
+    }
+
+    /// Vector unit area.
+    pub fn vector(&self, lanes: u32) -> f64 {
+        lanes as f64 * self.lane_mm2
+    }
+
+    /// One DMC core: local SRAM + systolic + vector + fixed.
+    pub fn dmc_core(&self, lmem_bytes: u64, lmem_bw: f64, systolic: (u32, u32), lanes: u32) -> f64 {
+        self.sram(lmem_bytes, lmem_bw)
+            + self.systolic(systolic.0, systolic.1)
+            + self.vector(lanes)
+            + self.core_fixed_mm2
+    }
+
+    /// One GSM SM: L1 SRAM + register file + systolic + vector + fixed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gsm_sm(
+        &self,
+        l1_bytes: u64,
+        l1_bw: f64,
+        regfile_bytes: u64,
+        systolic: (u32, u32),
+        lanes: u32,
+    ) -> f64 {
+        self.sram(l1_bytes, l1_bw)
+            + self.regfile(regfile_bytes)
+            + self.systolic(systolic.0, systolic.1)
+            + self.vector(lanes)
+            + self.core_fixed_mm2
+    }
+
+    /// Chip total from summed core/memory area: adds control logic and
+    /// interconnect overheads. Returns (control, interconnect, total).
+    pub fn chip_total(&self, base: f64) -> (f64, f64, f64) {
+        let control = base * self.control_frac;
+        let interconnect = base * self.interconnect_frac;
+        (control, interconnect, base + control + interconnect)
+    }
+
+    /// Largest square systolic array (in power-of-two steps ≥ 8) that fits
+    /// a per-core area budget next to the given local memory — the §7.3.2
+    /// area trade-off used by the bandwidth sweeps.
+    pub fn max_systolic_under(
+        &self,
+        per_core_budget: f64,
+        lmem_bytes: u64,
+        lmem_bw: f64,
+        lanes: u32,
+    ) -> u32 {
+        let fixed = self.sram(lmem_bytes, lmem_bw) + self.vector(lanes) + self.core_fixed_mm2;
+        // relative epsilon so a baseline configuration always fits its own
+        // recomputed budget (float-associativity guard)
+        let budget = per_core_budget * (1.0 + 1e-9);
+        let mut best = 0u32;
+        let mut n = 8u32;
+        while n <= 512 {
+            if fixed + self.systolic(n, n) <= budget {
+                best = n;
+            }
+            n *= 2;
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_increases_memory_area() {
+        let m = AreaModel::default();
+        let low = m.sram(2 << 20, 64.0);
+        let high = m.sram(2 << 20, 512.0);
+        assert!(high > low * 1.5, "banking cost missing: {low} vs {high}");
+    }
+
+    #[test]
+    fn regfile_less_area_efficient_than_sram() {
+        let m = AreaModel::default();
+        assert!(m.regfile(1 << 20) > 3.0 * m.sram(1 << 20, 64.0));
+    }
+
+    #[test]
+    fn table2_band_dmc() {
+        // The four Table-2 DMC configs must land in the paper's band
+        // (~800-930 mm² chip totals for 128 cores).
+        let m = AreaModel::default();
+        let configs: [(u64, f64, (u32, u32), u32); 4] = [
+            (1 << 20, 256.0, (128, 128), 512),
+            (2 << 20, 152.0, (64, 64), 512),
+            (2 << 20, 152.0, (32, 32), 128), // cfg3: 2.5MB in paper
+            (3 << 20, 128.0, (16, 16), 128),
+        ];
+        for (cap, bw, sys, lanes) in configs {
+            let base = 128.0 * m.dmc_core(cap, bw, sys, lanes);
+            let (_, _, total) = m.chip_total(base);
+            assert!(
+                (200.0..1400.0).contains(&total),
+                "config ({cap},{bw},{sys:?},{lanes}) total {total} out of band"
+            );
+        }
+    }
+
+    #[test]
+    fn max_systolic_shrinks_with_bandwidth() {
+        let m = AreaModel::default();
+        let budget = 6.7; // mm² per core
+        let lo_bw = m.max_systolic_under(budget, 2 << 20, 64.0, 512);
+        let hi_bw = m.max_systolic_under(budget, 2 << 20, 2048.0, 512);
+        assert!(lo_bw >= hi_bw);
+        assert!(lo_bw >= 64);
+    }
+
+    #[test]
+    fn chip_total_overheads() {
+        let m = AreaModel::default();
+        let (ctrl, ic, total) = m.chip_total(800.0);
+        assert!((ctrl - 8.0).abs() < 1e-9);
+        assert!((ic - 40.0).abs() < 1e-9);
+        assert!((total - 848.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,192 @@
+//! Chiplet cost model (after Chiplet Actuary [Feng & Ma, DAC'22]; paper
+//! Fig. 10(c,d)).
+//!
+//! Die cost uses the negative-binomial yield model; packaging cost covers
+//! organic-substrate MCM and silicon-interposer 2.5D integration. The model
+//! reproduces the qualitative Fig.-10 trade-off: more chiplets per package
+//! replace slow board links with fast NoP links but raise packaging cost —
+//! with an optimum at a small chiplet count.
+
+/// Packaging technology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Packaging {
+    /// Multi-chip module on an organic substrate.
+    Mcm,
+    /// 2.5D silicon interposer (higher cost, better links).
+    Interposer2_5D,
+}
+
+impl Packaging {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Packaging::Mcm => "MCM",
+            Packaging::Interposer2_5D => "2.5D",
+        }
+    }
+}
+
+/// Cost-model parameters (USD; 7nm-class logic wafers).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Wafer cost for the compute die node.
+    pub wafer_cost: f64,
+    /// Wafer diameter in mm.
+    pub wafer_diameter: f64,
+    /// Defect density per mm².
+    pub defect_density: f64,
+    /// Negative-binomial clustering parameter.
+    pub alpha: f64,
+    /// Organic substrate cost coefficient (applied to area^exponent).
+    pub substrate_cost_per_mm2: f64,
+    /// Silicon interposer cost coefficient (coarse node wafer).
+    pub interposer_cost_per_mm2: f64,
+    /// Superlinear exponent on carrier (substrate/interposer) area —
+    /// large carriers yield worse and route harder (Chiplet Actuary).
+    pub carrier_exponent: f64,
+    /// Per-chiplet bonding cost, MCM.
+    pub bond_cost_mcm: f64,
+    /// Per-chiplet bonding cost, 2.5D (micro-bumps).
+    pub bond_cost_2_5d: f64,
+    /// Bonding yield per chiplet placement.
+    pub bond_yield: f64,
+    /// Package area overhead factor over summed die area.
+    pub package_area_factor: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            wafer_cost: 9350.0,
+            wafer_diameter: 300.0,
+            defect_density: 0.0025, // per mm²
+            alpha: 4.0,
+            substrate_cost_per_mm2: 0.03,
+            interposer_cost_per_mm2: 0.09,
+            carrier_exponent: 1.3,
+            bond_cost_mcm: 2.0,
+            bond_cost_2_5d: 6.0,
+            bond_yield: 0.99,
+            package_area_factor: 1.8,
+        }
+    }
+}
+
+impl CostModel {
+    /// Dies per wafer (Seeds' formula).
+    pub fn dies_per_wafer(&self, die_area: f64) -> f64 {
+        let d = self.wafer_diameter;
+        let r = d / 2.0;
+        (std::f64::consts::PI * r * r / die_area)
+            - (std::f64::consts::PI * d / (2.0 * die_area.sqrt()))
+    }
+
+    /// Negative-binomial die yield.
+    pub fn die_yield(&self, die_area: f64) -> f64 {
+        (1.0 + self.defect_density * die_area / self.alpha).powf(-self.alpha)
+    }
+
+    /// Cost of one *good* die of `die_area` mm².
+    pub fn die_cost(&self, die_area: f64) -> f64 {
+        self.wafer_cost / self.dies_per_wafer(die_area) / self.die_yield(die_area)
+    }
+
+    /// Cost of one package holding `n` chiplets of `chiplet_area` each.
+    pub fn package_cost(&self, n: usize, chiplet_area: f64, pkg: Packaging) -> f64 {
+        assert!(n >= 1);
+        let dies = n as f64 * self.die_cost(chiplet_area);
+        let pkg_area = n as f64 * chiplet_area * self.package_area_factor;
+        let carrier_area = pkg_area.powf(self.carrier_exponent);
+        let (carrier, bond) = match pkg {
+            Packaging::Mcm => (
+                carrier_area * self.substrate_cost_per_mm2,
+                n as f64 * self.bond_cost_mcm,
+            ),
+            Packaging::Interposer2_5D => (
+                carrier_area * self.interposer_cost_per_mm2,
+                n as f64 * self.bond_cost_2_5d,
+            ),
+        };
+        // assembly yield: every placement must succeed
+        let assembly_yield = self.bond_yield.powi(n as i32);
+        (dies + carrier + bond) / assembly_yield
+    }
+
+    /// Cost of a system of `total_chiplets` spread over packages of
+    /// `chiplets_per_package` (plus one board cost per package).
+    pub fn system_cost(
+        &self,
+        total_chiplets: usize,
+        chiplets_per_package: usize,
+        chiplet_area: f64,
+        pkg: Packaging,
+    ) -> f64 {
+        assert!(total_chiplets % chiplets_per_package == 0);
+        let packages = total_chiplets / chiplets_per_package;
+        let board_cost_per_pkg = 12.0; // socket + routing share
+        packages as f64 * (self.package_cost(chiplets_per_package, chiplet_area, pkg)
+            + board_cost_per_pkg)
+    }
+
+    /// Monolithic-die cost for the same total area (the classic chiplet
+    /// motivation: one big die yields terribly).
+    pub fn monolithic_cost(&self, total_area: f64) -> f64 {
+        self.die_cost(total_area) + 20.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yield_decreases_with_area() {
+        let m = CostModel::default();
+        assert!(m.die_yield(100.0) > m.die_yield(800.0));
+        assert!(m.die_yield(100.0) <= 1.0);
+    }
+
+    #[test]
+    fn die_cost_superlinear_in_area() {
+        let m = CostModel::default();
+        // doubling area more than doubles cost (fewer dies + worse yield)
+        assert!(m.die_cost(800.0) > 2.0 * m.die_cost(400.0));
+    }
+
+    #[test]
+    fn chiplets_cheaper_than_monolithic_at_scale() {
+        let m = CostModel::default();
+        // 4 x 200mm² chiplets vs one 800mm² die
+        let chiplet = m.package_cost(4, 200.0, Packaging::Mcm);
+        let mono = m.monolithic_cost(800.0);
+        assert!(chiplet < mono, "chiplet {chiplet} vs mono {mono}");
+    }
+
+    #[test]
+    fn interposer_costs_more_than_mcm() {
+        let m = CostModel::default();
+        assert!(
+            m.package_cost(4, 200.0, Packaging::Interposer2_5D)
+                > m.package_cost(4, 200.0, Packaging::Mcm)
+        );
+    }
+
+    #[test]
+    fn system_cost_grows_with_chiplets_per_package() {
+        // For a fixed 24-chiplet system, packaging more chiplets together
+        // raises total cost (bigger carriers, worse assembly yield) --
+        // the cost half of the Fig. 10(d) trade-off.
+        let m = CostModel::default();
+        let c1 = m.system_cost(24, 1, 150.0, Packaging::Mcm);
+        let c2 = m.system_cost(24, 2, 150.0, Packaging::Mcm);
+        let c6 = m.system_cost(24, 6, 150.0, Packaging::Mcm);
+        assert!(c2 > c1 * 0.8, "sanity");
+        assert!(c6 > c2, "more chiplets per package must cost more: {c2} vs {c6}");
+    }
+
+    #[test]
+    fn dies_per_wafer_sane() {
+        let m = CostModel::default();
+        let n = m.dies_per_wafer(100.0);
+        assert!((500.0..700.0).contains(&n), "dies/wafer {n}");
+    }
+}

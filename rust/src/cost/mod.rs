@@ -1,0 +1,9 @@
+//! Cost models: silicon area ([`area`], CACTI/LLMCompass-flavoured) and
+//! chiplet manufacturing cost ([`chiplet`], after Chiplet Actuary). Used by
+//! the Table-2 configuration space and the Fig.-10 performance/cost DSE.
+
+pub mod area;
+pub mod chiplet;
+
+pub use area::AreaModel;
+pub use chiplet::{CostModel, Packaging};

@@ -1,0 +1,903 @@
+//! The paper's evaluation experiments (§7), shared by the benches and the
+//! CLI. Every table/figure of the paper maps to one function here; benches
+//! add timing and print the rendered tables (see DESIGN.md §3 for the
+//! experiment index E1–E16).
+
+use crate::arch::{DmcParams, GsmParams, MpmcParams};
+use crate::cost::{AreaModel, CostModel, Packaging};
+use crate::eval::comm::{all_reduce as ar_closed_form, LinkModel};
+use crate::eval::roofline::RooflineEvaluator;
+use crate::eval::{Evaluator, Registry};
+use crate::hwir::{
+    CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, MlCoord, SpaceMatrix,
+    SpacePoint, Topology,
+};
+use crate::mapping::Mapping;
+use crate::sim::{simulate, SimConfig};
+use crate::taskgraph::{ComputeCost, TaskGraph, TaskKind};
+use crate::workloads::transformer::{prefill_layer, total_flops};
+use crate::workloads::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig};
+
+use super::parallel::run_parallel;
+use super::report::{fmt, Table};
+
+/// Experiment context: evaluator registry + sizing knobs.
+pub struct Ctx {
+    pub evals: Registry,
+    pub workers: usize,
+    /// Reduced problem sizes for CI-speed runs.
+    pub quick: bool,
+}
+
+impl Ctx {
+    pub fn standard() -> Ctx {
+        Ctx {
+            evals: Registry::standard(),
+            workers: super::parallel::default_workers(),
+            quick: false,
+        }
+    }
+
+    pub fn quick() -> Ctx {
+        Ctx {
+            quick: true,
+            ..Ctx::standard()
+        }
+    }
+
+    fn seq(&self) -> u32 {
+        if self.quick {
+            256
+        } else {
+            2048
+        }
+    }
+
+    fn cfg(&self) -> LlmConfig {
+        if self.quick {
+            LlmConfig {
+                hidden: 512,
+                heads: 8,
+                ffn: 2048,
+                layers: 8,
+                elem_bytes: 2,
+            }
+        } else {
+            LlmConfig::gpt3_6_7b()
+        }
+    }
+
+    fn dmc_grid(&self) -> (usize, usize) {
+        if self.quick {
+            (4, 4)
+        } else {
+            (16, 8)
+        }
+    }
+
+    fn sms(&self) -> usize {
+        if self.quick {
+            16
+        } else {
+            128
+        }
+    }
+}
+
+/// Simulate a prefill workload and return (makespan cycles, flops/cycle).
+fn sim_prefill(ctx: &Ctx, w: &crate::workloads::Workload, flops: f64) -> (f64, f64) {
+    let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default())
+        .expect("simulation");
+    (r.makespan, flops / r.makespan)
+}
+
+// ======================================================================
+// E1 — Table 2: compute-memory configurations + areas
+// ======================================================================
+
+/// Table 2: the four DMC and GSM compute-memory configurations with our
+/// area model's breakdown (paper band ~800–930 mm²) and simulated prefill
+/// performance.
+pub fn table2(ctx: &Ctx) -> Vec<Table> {
+    let area = AreaModel::default();
+    let cfg = ctx.cfg();
+    let seq = ctx.seq();
+
+    let mut dmc_t = Table::new(
+        "Table 2 (DMC): config | lmem | systolic | vector | ctrl | interconnect | total mm2 | prefill cycles | flops/cycle",
+        &["cfg", "lmem", "systolic", "vec", "ctrl", "ic", "total", "cycles", "flops/cyc"],
+    );
+    for i in 1..=4 {
+        let mut p = DmcParams::table2(i);
+        p.grid = ctx.dmc_grid();
+        let (_, ctrl, ic, total) = p.area(&area);
+        let w = dmc_prefill(&cfg, seq, &p);
+        let flops = total_flops(&prefill_layer(&cfg, seq));
+        let (cycles, thpt) = sim_prefill(ctx, &w, flops);
+        dmc_t.row(vec![
+            i.to_string(),
+            format!("{:.1}MB", p.lmem_capacity as f64 / (1 << 20) as f64),
+            format!("{}x{}", p.systolic.0, p.systolic.1),
+            p.vector_lanes.to_string(),
+            fmt(ctrl),
+            fmt(ic),
+            fmt(total),
+            fmt(cycles),
+            fmt(thpt),
+        ]);
+    }
+
+    let mut gsm_t = Table::new(
+        "Table 2 (GSM): config | L2 | L1 | systolic | vector | total mm2 | prefill cycles | flops/cycle",
+        &["cfg", "L2", "L1", "systolic", "vec", "total", "cycles", "flops/cyc"],
+    );
+    for i in 1..=4 {
+        let mut p = GsmParams::table2(i);
+        p.sms = ctx.sms();
+        let (_, _, _, total) = p.area(&area);
+        let w = gsm_prefill(&cfg, seq, &p);
+        let flops = total_flops(&prefill_layer(&cfg, seq));
+        let (cycles, thpt) = sim_prefill(ctx, &w, flops);
+        gsm_t.row(vec![
+            i.to_string(),
+            format!("{}MB", p.l2_capacity >> 20),
+            format!("{}KB", p.l1_capacity >> 10),
+            format!("{}x{}", p.systolic.0, p.systolic.1),
+            p.vector_lanes.to_string(),
+            fmt(total),
+            fmt(cycles),
+            fmt(thpt),
+        ]);
+    }
+    vec![dmc_t, gsm_t]
+}
+
+// ======================================================================
+// E4/E5 — Fig. 9(c,d,e): GSM sweeps
+// ======================================================================
+
+/// Apply the fixed-area trade-off: given a baseline config's chip area,
+/// re-solve the largest systolic array affordable at the new L1 spec.
+fn gsm_with(base: &GsmParams, l2_bw: f64, l1_bw: f64, l2_lat: u64, area: &AreaModel) -> GsmParams {
+    let budget = area.gsm_sm(
+        base.l1_capacity,
+        base.l1_bandwidth,
+        base.regfile_capacity,
+        base.systolic,
+        base.vector_lanes,
+    );
+    let fixed = area.sram(base.l1_capacity, l1_bw)
+        + area.regfile(base.regfile_capacity)
+        + area.vector(base.vector_lanes)
+        + area.core_fixed_mm2;
+    let budget = budget * (1.0 + 1e-9); // float-associativity guard
+    let mut n = 8u32;
+    let mut bestn = 0;
+    while n <= 512 {
+        if fixed + area.systolic(n, n) <= budget {
+            bestn = n;
+        }
+        n *= 2;
+    }
+    GsmParams {
+        l2_bandwidth: l2_bw,
+        l1_bandwidth: l1_bw,
+        l2_latency: l2_lat,
+        systolic: (bestn.max(8), bestn.max(8)),
+        ..base.clone()
+    }
+}
+
+/// Fig. 9(c): shared-memory bandwidth sweep across the four GSM configs,
+/// plus Fig. 9(d,e): L1 bandwidth and L2 latency sweeps on configs 2–3.
+pub fn fig9_gsm(ctx: &Ctx) -> Vec<Table> {
+    let area = AreaModel::default();
+    let cfg = ctx.cfg();
+    let seq = ctx.seq();
+    let flops = total_flops(&prefill_layer(&cfg, seq));
+    let l2_bws: &[f64] = if ctx.quick {
+        &[1280.0, 5120.0, 20480.0]
+    } else {
+        &[640.0, 1280.0, 2560.0, 5120.0, 10240.0, 20480.0]
+    };
+
+    let mut fig_c = Table::new(
+        "Fig 9(c): GSM throughput vs shared-memory bandwidth (4 configs)",
+        &["l2_bw(B/cyc)", "cfg1", "cfg2", "cfg3", "cfg4"],
+    );
+    type Point = (usize, f64);
+    let points: Vec<Point> = l2_bws
+        .iter()
+        .flat_map(|bw| (1..=4).map(move |c| (c, *bw)))
+        .collect();
+    let results = run_parallel(&points, ctx.workers, |(c, bw)| {
+        let mut base = GsmParams::table2(*c);
+        base.sms = ctx.sms();
+        let p = gsm_with(&base, *bw, base.l1_bandwidth, base.l2_latency, &area);
+        let w = gsm_prefill(&cfg, seq, &p);
+        sim_prefill(ctx, &w, flops).1
+    });
+    for (i, bw) in l2_bws.iter().enumerate() {
+        let row: Vec<String> = std::iter::once(fmt(*bw))
+            .chain((0..4).map(|c| fmt(results[i * 4 + c])))
+            .collect();
+        fig_c.row(row);
+    }
+
+    // (d, e): per-parameter sweeps on configs 2 and 3
+    let mut fig_de = Table::new(
+        "Fig 9(d,e): GSM parameter impact (throughput flops/cycle)",
+        &["cfg", "param", "value", "flops/cyc"],
+    );
+    let l1_bws: &[f64] = if ctx.quick { &[32.0, 128.0] } else { &[16.0, 32.0, 64.0, 128.0, 256.0] };
+    let l2_lats: &[u64] = if ctx.quick { &[20, 80] } else { &[10, 20, 40, 80, 160] };
+    for c in [2usize, 3] {
+        let mut base = GsmParams::table2(c);
+        base.sms = ctx.sms();
+        for bw in l2_bws {
+            let p = gsm_with(&base, *bw, base.l1_bandwidth, base.l2_latency, &area);
+            let w = gsm_prefill(&cfg, seq, &p);
+            fig_de.row(vec![c.to_string(), "l2_bw".into(), fmt(*bw), fmt(sim_prefill(ctx, &w, flops).1)]);
+        }
+        for bw in l1_bws {
+            let p = gsm_with(&base, base.l2_bandwidth, *bw, base.l2_latency, &area);
+            let w = gsm_prefill(&cfg, seq, &p);
+            fig_de.row(vec![c.to_string(), "l1_bw".into(), fmt(*bw), fmt(sim_prefill(ctx, &w, flops).1)]);
+        }
+        for lat in l2_lats {
+            let p = gsm_with(&base, base.l2_bandwidth, base.l1_bandwidth, *lat, &area);
+            let w = gsm_prefill(&cfg, seq, &p);
+            fig_de.row(vec![c.to_string(), "l2_lat".into(), lat.to_string(), fmt(sim_prefill(ctx, &w, flops).1)]);
+        }
+    }
+    vec![fig_c, fig_de]
+}
+
+// ======================================================================
+// E6/E7 — Fig. 9(f–k): DMC sweeps
+// ======================================================================
+
+/// Fixed-area application of a (lmem capacity, lmem bandwidth) choice:
+/// the systolic array shrinks to fit the baseline per-core budget.
+pub fn dmc_with(base: &DmcParams, lmem_bw: f64, noc_bw: f64, lmem_lat: u64, area: &AreaModel) -> DmcParams {
+    let budget = area.dmc_core(
+        base.lmem_capacity,
+        base.lmem_bandwidth,
+        base.systolic,
+        base.vector_lanes,
+    );
+    let n = area.max_systolic_under(budget, base.lmem_capacity, lmem_bw, base.vector_lanes);
+    DmcParams {
+        lmem_bandwidth: lmem_bw,
+        noc_bandwidth: noc_bw,
+        lmem_latency: lmem_lat,
+        systolic: (n.max(8), n.max(8)),
+        ..base.clone()
+    }
+}
+
+/// Fig. 9(f–h): local-memory bw / NoC bw / local latency on configs 2–4;
+/// Fig. 9(i–k): the same three sweeps across all four configs.
+pub fn fig9_dmc(ctx: &Ctx) -> Vec<Table> {
+    let area = AreaModel::default();
+    let cfg = ctx.cfg();
+    let seq = ctx.seq();
+    let flops = total_flops(&prefill_layer(&cfg, seq));
+    let lmem_bws: &[f64] = if ctx.quick { &[64.0, 304.0] } else { &[38.0, 76.0, 152.0, 304.0, 608.0] };
+    let noc_bws: &[f64] = if ctx.quick { &[16.0, 64.0] } else { &[8.0, 16.0, 32.0, 64.0, 128.0] };
+    let lmem_lats: &[u64] = if ctx.quick { &[2, 8] } else { &[1, 2, 4, 8, 16] };
+
+    let mut t = Table::new(
+        "Fig 9(f-k): DMC parameter impact (throughput flops/cycle)",
+        &["cfg", "param", "value", "systolic", "flops/cyc"],
+    );
+    struct P {
+        c: usize,
+        name: &'static str,
+        lmem_bw: f64,
+        noc_bw: f64,
+        lat: u64,
+        val: f64,
+    }
+    let mut points = Vec::new();
+    for c in 1..=4usize {
+        let base = DmcParams::table2(c);
+        for bw in lmem_bws {
+            points.push(P { c, name: "lmem_bw", lmem_bw: *bw, noc_bw: base.noc_bandwidth, lat: base.lmem_latency, val: *bw });
+        }
+        for bw in noc_bws {
+            points.push(P { c, name: "noc_bw", lmem_bw: base.lmem_bandwidth, noc_bw: *bw, lat: base.lmem_latency, val: *bw });
+        }
+        for lat in lmem_lats {
+            points.push(P { c, name: "lmem_lat", lmem_bw: base.lmem_bandwidth, noc_bw: base.noc_bandwidth, lat: *lat, val: *lat as f64 });
+        }
+    }
+    let results = run_parallel(&points, ctx.workers, |p| {
+        let mut base = DmcParams::table2(p.c);
+        base.grid = ctx.dmc_grid();
+        let params = dmc_with(&base, p.lmem_bw, p.noc_bw, p.lat, &area);
+        let sys = params.systolic.0;
+        let w = dmc_prefill(&cfg, seq, &params);
+        (sys, sim_prefill(ctx, &w, flops).1)
+    });
+    for (p, (sys, thpt)) in points.iter().zip(results) {
+        t.row(vec![
+            p.c.to_string(),
+            p.name.into(),
+            fmt(p.val),
+            format!("{sys}x{sys}"),
+            fmt(thpt),
+        ]);
+    }
+    vec![t]
+}
+
+// ======================================================================
+// E8 — §7.3.3: GSM vs DMC cross-architecture comparison
+// ======================================================================
+
+pub fn fig9_cross(ctx: &Ctx) -> Vec<Table> {
+    let area = AreaModel::default();
+    let cfg = ctx.cfg();
+    let seq = ctx.seq();
+    let flops = total_flops(&prefill_layer(&cfg, seq));
+    let mut t = Table::new(
+        "GSM vs DMC at comparable area (GPT3-6.7B prefill layer)",
+        &["arch", "cfg", "area mm2", "onchip MB", "agg lmem B/cyc", "cycles", "flops/cyc"],
+    );
+    for c in 1..=4usize {
+        let mut d = DmcParams::table2(c);
+        d.grid = ctx.dmc_grid();
+        let w = dmc_prefill(&cfg, seq, &d);
+        let (cycles, thpt) = sim_prefill(ctx, &w, flops);
+        t.row(vec![
+            "DMC".into(),
+            c.to_string(),
+            fmt(d.area(&area).3),
+            fmt(d.total_lmem() as f64 / (1 << 20) as f64),
+            fmt(d.lmem_bandwidth * d.cores() as f64),
+            fmt(cycles),
+            fmt(thpt),
+        ]);
+    }
+    for c in 1..=4usize {
+        let mut g = GsmParams::table2(c);
+        g.sms = ctx.sms();
+        let w = gsm_prefill(&cfg, seq, &g);
+        let (cycles, thpt) = sim_prefill(ctx, &w, flops);
+        let onchip = g.l2_capacity + g.sms as u64 * (g.l1_capacity + g.regfile_capacity);
+        t.row(vec![
+            "GSM".into(),
+            c.to_string(),
+            fmt(g.area(&area).3),
+            fmt(onchip as f64 / (1 << 20) as f64),
+            fmt(g.l2_bandwidth),
+            fmt(cycles),
+            fmt(thpt),
+        ]);
+    }
+    vec![t]
+}
+
+// ======================================================================
+// E9–E12 — Fig. 10: spatial-level DSE
+// ======================================================================
+
+pub fn fig10(ctx: &Ctx) -> Vec<Table> {
+    let area = AreaModel::default();
+    let cost = CostModel::default();
+    let cfg = ctx.cfg();
+    let pos = ctx.seq(); // decode the (seq)-th token
+    let layers = if ctx.quick { 2 } else { 8 };
+
+    // E9: temporal-mapping baseline on one DMC
+    let mut base_t = Table::new(
+        "Fig 10 baseline: DMC decode, temporal mapping (DRAM streaming)",
+        &["pos", "layers", "cycles", "dram util", "best core util"],
+    );
+    {
+        let mut p = DmcParams::default();
+        p.grid = ctx.dmc_grid();
+        if ctx.quick {
+            // scale the DRAM channel down with the chip
+            p.dram_bandwidth = 128.0;
+        }
+        let w = dmc_decode_temporal(&cfg, pos, layers, &p);
+        let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default()).unwrap();
+        let dram = w.hw.points_of_kind("dram")[0];
+        let core_util = w
+            .hw
+            .points_of_kind("compute")
+            .iter()
+            .map(|c| r.utilization(*c))
+            .fold(0.0, f64::max);
+        base_t.row(vec![
+            pos.to_string(),
+            layers.to_string(),
+            fmt(r.makespan),
+            fmt(r.utilization(dram)),
+            fmt(core_util),
+        ]);
+    }
+
+    // E11: chiplets/package sweep with cost, MCM and 2.5D
+    let cpps: &[usize] = if ctx.quick { &[1, 2] } else { &[1, 2, 3, 4, 6] };
+    let mut perf_cost = Table::new(
+        "Fig 10(c,d): MPMC-DMC performance & cost vs chiplets/package",
+        &["packaging", "chiplets/pkg", "cycles", "cost $", "perf/cost (1e6/cyc/$)"],
+    );
+    for pkg in [Packaging::Mcm, Packaging::Interposer2_5D] {
+        for &cpp in cpps {
+            let mut p = MpmcParams::paper(cpp, pkg);
+            if ctx.quick {
+                p.total_chiplets = 3 * layers as usize;
+                p.chiplet.grid = ctx.dmc_grid();
+            }
+            let w = mpmc_decode_spatial(&cfg, pos, layers, &p);
+            let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default()).unwrap();
+            let c = p.system_cost(&area, &cost);
+            perf_cost.row(vec![
+                pkg.name().into(),
+                cpp.to_string(),
+                fmt(r.makespan),
+                fmt(c),
+                fmt(1e6 / r.makespan / c),
+            ]);
+        }
+    }
+
+    // E10/E12: hardware-parameter sweeps under spatial computing
+    let mut sweeps = Table::new(
+        "Fig 10(b,e-g): MPMC-DMC parameter impact (decode cycles)",
+        &["chiplets/pkg", "param", "value", "cycles"],
+    );
+    let lmem_bws: &[f64] = if ctx.quick { &[76.0, 304.0] } else { &[38.0, 76.0, 152.0, 304.0, 608.0] };
+    let noc_bws: &[f64] = if ctx.quick { &[16.0, 64.0] } else { &[8.0, 16.0, 32.0, 64.0, 128.0] };
+    let lats: &[u64] = if ctx.quick { &[2, 8] } else { &[1, 2, 4, 8, 16] };
+    let sweep_cpps: &[usize] = if ctx.quick { &[2] } else { &[1, 2, 4] };
+    for &cpp in sweep_cpps {
+        let mk = |f: &dyn Fn(&mut MpmcParams)| {
+            let mut p = MpmcParams::paper(cpp, Packaging::Mcm);
+            if ctx.quick {
+                p.total_chiplets = 3 * layers as usize;
+                p.chiplet.grid = ctx.dmc_grid();
+            }
+            f(&mut p);
+            let w = mpmc_decode_spatial(&cfg, pos, layers, &p);
+            let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default()).unwrap();
+            r.makespan
+        };
+        for bw in lmem_bws {
+            let cy = mk(&|p: &mut MpmcParams| p.chiplet.lmem_bandwidth = *bw);
+            sweeps.row(vec![cpp.to_string(), "lmem_bw".into(), fmt(*bw), fmt(cy)]);
+        }
+        for bw in noc_bws {
+            let cy = mk(&|p: &mut MpmcParams| p.chiplet.noc_bandwidth = *bw);
+            sweeps.row(vec![cpp.to_string(), "noc_bw".into(), fmt(*bw), fmt(cy)]);
+        }
+        for lat in lats {
+            let cy = mk(&|p: &mut MpmcParams| p.chiplet.lmem_latency = *lat);
+            sweeps.row(vec![cpp.to_string(), "lmem_lat".into(), lat.to_string(), fmt(cy)]);
+        }
+    }
+    vec![base_t, perf_cost, sweeps]
+}
+
+// ======================================================================
+// E2 — Fig. 8(a–f): kernel-level accuracy
+// ======================================================================
+
+/// "Measurement" proxy for Fig 8 (see DESIGN.md substitutions): the same
+/// tile evaluated under an *independently calibrated* quantized roofline
+/// (different pipeline-fill and vector-efficiency constants, i.e. what a
+/// fit to microbenchmarks would give), plus a fixed launch overhead.
+/// Differences between this and MLDSE's evaluator play the role of the
+/// paper's sim-vs-hardware error band (~20% near transition points).
+fn measured_proxy(
+    tile: &ComputeCost,
+    point: &crate::hwir::PointEntry,
+    overhead: f64,
+) -> f64 {
+    use crate::eval::roofline::{RooflineConfig, RooflineEvaluator};
+    let alt = RooflineEvaluator::new(RooflineConfig {
+        pipeline_fill: 0.5,      // vs 1.0 in the MLDSE default
+        vector_efficiency: 0.85, // vs 0.75
+    });
+    let task = crate::taskgraph::Task::new(
+        crate::taskgraph::TaskId(0),
+        "ref",
+        TaskKind::Compute(*tile),
+    );
+    overhead + alt.demand(&task, point).total()
+}
+
+pub fn fig8_kernel(ctx: &Ctx) -> Vec<Table> {
+    let cfg_bytes = 2;
+    let sizes: &[u32] = if ctx.quick {
+        &[256, 1024, 2048]
+    } else {
+        &[256, 512, 768, 1024, 1536, 2048, 3072, 4096]
+    };
+    let mut t = Table::new(
+        "Fig 8(a-f): kernel latency, MLDSE sim vs measurement proxy (rel err)",
+        &["arch", "op", "size", "mldse cycles", "reference", "rel err"],
+    );
+    let mut dmc = DmcParams::table2(2);
+    dmc.grid = ctx.dmc_grid();
+    let dmc_hw = dmc.build();
+    let dmc_entry = dmc_hw
+        .entries()
+        .find(|e| e.point.kind.is_compute())
+        .unwrap();
+    let mut gsm = GsmParams::table2(2);
+    gsm.sms = ctx.sms();
+    let gsm_hw = gsm.build();
+    let gsm_entry = gsm_hw
+        .entries()
+        .find(|e| e.point.kind.is_compute())
+        .unwrap();
+
+    let mut emit = |arch: &str, op: &str, n: u32, sim: f64, reference: f64| {
+        t.row(vec![
+            arch.into(),
+            op.into(),
+            n.to_string(),
+            fmt(sim),
+            fmt(reference),
+            fmt((sim - reference).abs() / reference),
+        ]);
+    };
+    for &n in sizes {
+        for (op_name, cost) in [
+            ("matmul", crate::workloads::ops::matmul(n, n, n, cfg_bytes)),
+            ("softmax", crate::workloads::ops::softmax(n, n, cfg_bytes)),
+            ("mvm", crate::workloads::ops::mvm(n, n, cfg_bytes)),
+        ] {
+            let (d_sim, d_tile) = single_op_dmc(ctx, &dmc, &cost);
+            emit("DMC", op_name, n, d_sim, measured_proxy(&d_tile, dmc_entry, 50.0));
+            let (g_sim, g_tile) = single_op_gsm(ctx, &gsm, &cost);
+            emit("GSM", op_name, n, g_sim, measured_proxy(&g_tile, gsm_entry, 500.0));
+        }
+    }
+    vec![t]
+}
+
+/// One op tiled across a DMC chip (with NoC distribution), simulated.
+fn single_op_dmc(ctx: &Ctx, params: &DmcParams, cost: &ComputeCost) -> (f64, ComputeCost) {
+    let hw = params.build();
+    let cores = hw.points_of_kind("compute");
+    let n = cores.len() as u64;
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    let mut tile = *cost;
+    tile.mac_flops /= n as f64;
+    tile.vec_flops /= n as f64;
+    tile.in_bytes /= n;
+    tile.out_bytes /= n;
+    if tile.dims[0] > 1 {
+        tile.dims[0] = (tile.dims[0] / params.grid.0 as u32).max(1);
+        tile.dims[1] = (tile.dims[1] / params.grid.1 as u32).max(1);
+    } else {
+        // MVM-like: shard the output dimension across the whole chip
+        tile.dims[1] = (tile.dims[1] / n as u32).max(1);
+    }
+    for (i, c) in cores.iter().enumerate() {
+        let t = graph.add(format!("op#{i}"), TaskKind::Compute(tile));
+        mapping.map(t, *c);
+    }
+    let r = simulate(&hw, &graph, &mapping, &ctx.evals, &SimConfig::default()).unwrap();
+    (r.makespan, tile)
+}
+
+/// One op tiled across GSM SMs with L2 reads/writes, simulated.
+fn single_op_gsm(ctx: &Ctx, params: &GsmParams, cost: &ComputeCost) -> (f64, ComputeCost) {
+    let hw = params.build();
+    let sms = hw.points_of_kind("compute");
+    let l2 = hw.points_of_kind("memory")[0];
+    let n = sms.len() as u64;
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    let mut tile = *cost;
+    tile.mac_flops /= n as f64;
+    tile.vec_flops /= n as f64;
+    tile.in_bytes /= n;
+    tile.out_bytes /= n;
+    if tile.dims[0] > 1 {
+        // 2D shard over a virtual 16x(n/16) SM grid to keep arrays filled
+        let rows = 16u32.min(n as u32);
+        let cols = (n as u32 / rows).max(1);
+        tile.dims[0] = (tile.dims[0] / rows).max(1);
+        tile.dims[1] = (tile.dims[1] / cols).max(1);
+    } else {
+        tile.dims[1] = (tile.dims[1] / n as u32).max(1);
+    }
+    for (i, c) in sms.iter().enumerate() {
+        let rd = graph.add(
+            format!("rd#{i}"),
+            TaskKind::Comm { bytes: (cost.in_bytes / n).max(1), hops: 0, route: None },
+        );
+        mapping.map(rd, l2);
+        let t = graph.add(format!("op#{i}"), TaskKind::Compute(tile));
+        mapping.map(t, *c);
+        graph.connect(rd, t);
+        let wr = graph.add(
+            format!("wr#{i}"),
+            TaskKind::Comm { bytes: (cost.out_bytes / n).max(1), hops: 0, route: None },
+        );
+        mapping.map(wr, l2);
+        graph.connect(t, wr);
+    }
+    let r = simulate(&hw, &graph, &mapping, &ctx.evals, &SimConfig::default()).unwrap();
+    (r.makespan, tile)
+}
+
+// ======================================================================
+// E3/E15 — Fig. 8(g): LLM-level accuracy on a 4-device system
+// ======================================================================
+
+/// A 4-GPU-like cluster with *atomic* device modeling (mixed granularity:
+/// each device is one SpacePoint) and full NVLink-style connectivity.
+pub fn gpu_cluster(n: usize) -> Hardware {
+    let mut m = SpaceMatrix::new("cluster", vec![n]);
+    for i in 0..n {
+        m.set(
+            Coord::new(vec![i as u32]),
+            Element::Point(SpacePoint::compute(
+                "gpu",
+                // ~A100: 312 Tflop/s bf16 at 1 GHz -> 2*R*C = 312000
+                ComputeAttrs::new((395, 395), 4096)
+                    .with_lmem(MemoryAttrs::new(40 << 30, 1555.0, 300)),
+            )),
+        );
+    }
+    m.add_comm(SpacePoint::comm(
+        "nvlink",
+        CommAttrs::new(Topology::Ring, 300.0, 500),
+    ));
+    Hardware::build(m)
+}
+
+/// Fig. 8(g): tensor-parallel prefill layer on the 4-device cluster —
+/// event-driven sim vs the closed-form sum (op rooflines + Eq. 7
+/// collectives). Reports accuracy = 1 - rel.err per model and sequence.
+pub fn fig8_llm(ctx: &Ctx) -> Vec<Table> {
+    let models: Vec<(&str, LlmConfig)> = vec![
+        ("Llama2-70B", LlmConfig::llama2_70b()),
+        ("Llama3-70B", LlmConfig::llama3_70b()),
+        ("Qwen-72B", LlmConfig::qwen_72b()),
+    ];
+    let seqs: &[u32] = if ctx.quick { &[512, 2048] } else { &[256, 512, 1024, 2048, 4096] };
+    let ndev = 4usize;
+    let hw = gpu_cluster(ndev);
+    let devices: Vec<MlCoord> = (0..ndev).map(|i| MlCoord::new(vec![Coord::new(vec![i as u32])])).collect();
+    let dev_points = hw.points_of_kind("compute");
+    let link = LinkModel::new(500.0, 300.0);
+    let ev = RooflineEvaluator::default();
+
+    let mut t = Table::new(
+        "Fig 8(g): LLM prefill-layer latency, sim vs closed form",
+        &["model", "seq", "sim cycles", "closed form", "accuracy"],
+    );
+    for (name, cfg) in &models {
+        for &seq in seqs {
+            let ops = prefill_layer(cfg, seq);
+            // --- event-driven: shard each op 4-way + ring all-reduce after
+            //     out-proj and ffn-down
+            let mut graph = TaskGraph::new();
+            let mut mapping = Mapping::new();
+            let mut prev: Option<Vec<crate::taskgraph::TaskId>> = None;
+            for op in &ops {
+                let mut tile = op.cost;
+                tile.mac_flops /= ndev as f64;
+                tile.vec_flops /= ndev as f64;
+                tile.in_bytes /= ndev as u64;
+                tile.out_bytes /= ndev as u64;
+                // device-granularity (atomic GPU) evaluation: no per-array
+                // wave quantization — zeroed dims select the ideal-
+                // throughput roofline path (mixed-granularity modeling)
+                tile.dims = [0, 0, 0];
+                let mut this = Vec::new();
+                for d in 0..ndev {
+                    let id = graph.add(format!("{}#{d}", op.name), TaskKind::Compute(tile));
+                    mapping.map(id, dev_points[d]);
+                    if let Some(p) = &prev {
+                        graph.connect(p[d], id);
+                    }
+                    this.push(id);
+                }
+                if op.name == "out-proj" || op.name == "ffn-down" {
+                    let sinks = crate::workloads::collectives::ring_all_reduce(
+                        &hw,
+                        &mut graph,
+                        &mut mapping,
+                        &devices,
+                        op.act_out_bytes,
+                    );
+                    // wire shard outputs into the new collective's step-0
+                    // heads (the only tasks still without predecessors)
+                    let coll_sources: Vec<_> = graph
+                        .ids()
+                        .filter(|id| {
+                            graph.task(*id).name.starts_with("ar-s0-")
+                                && graph.predecessors(*id).is_empty()
+                        })
+                        .collect();
+                    for s in &this {
+                        for cs in &coll_sources {
+                            graph.connect(*s, *cs);
+                        }
+                    }
+                    this = sinks;
+                }
+                prev = Some(this);
+            }
+            let r = simulate(&hw, &graph, &mapping, &ctx.evals, &SimConfig::default()).unwrap();
+
+            // --- measurement proxy (see DESIGN.md substitutions): an
+            // *independent* closed form — smooth roofline without MXU wave
+            // quantization, plus per-kernel launch overhead and collective
+            // software latency, the effects real GPUs exhibit but the
+            // MLDSE evaluator abstracts. Differences between this and the
+            // event-driven sim play the role of Fig 8(g)'s sim-vs-hardware
+            // error band.
+            let _ = &ev;
+            let gpu = hw.point(dev_points[0]).kind.as_compute().unwrap();
+            let peak = gpu.matrix_flops_per_cycle();
+            let vec_peak = gpu.vector_flops_per_cycle();
+            let hbm = gpu.lmem.as_ref().unwrap();
+            const LAUNCH: f64 = 1500.0; // kernel launch, cycles
+            const COLL_SW: f64 = 3000.0; // collective software stack
+            let mut closed = 0.0;
+            for op in &ops {
+                let mac = op.cost.mac_flops / ndev as f64 / peak;
+                let vecc = op.cost.vec_flops / ndev as f64 / vec_peak;
+                let mem =
+                    (op.cost.in_bytes + op.cost.out_bytes) as f64 / ndev as f64 / hbm.bandwidth;
+                closed += LAUNCH + (mac + vecc).max(mem);
+                if op.name == "out-proj" || op.name == "ffn-down" {
+                    closed += COLL_SW + ar_closed_form(ndev, op.act_out_bytes as f64, link);
+                }
+            }
+            let acc = 1.0 - (r.makespan - closed).abs() / closed;
+            t.row(vec![
+                name.to_string(),
+                seq.to_string(),
+                fmt(r.makespan),
+                fmt(closed),
+                format!("{:.1}%", acc * 100.0),
+            ]);
+        }
+    }
+    vec![t]
+}
+
+// ======================================================================
+// E13 — §7.2 simulation speed: 240 configurations
+// ======================================================================
+
+/// Simulate 240 DMC hardware configurations (4 base configs × 5 lmem bw ×
+/// 4 NoC bw × 3 latencies) on the prefill layer; returns (table, seconds).
+pub fn sim_speed(ctx: &Ctx) -> (Table, f64) {
+    let area = AreaModel::default();
+    let cfg = ctx.cfg();
+    let seq = ctx.seq();
+    let lmem_bws: &[f64] = &[38.0, 76.0, 152.0, 304.0, 608.0];
+    let noc_bws: &[f64] = &[8.0, 16.0, 32.0, 64.0];
+    let lats: &[u64] = &[1, 4, 16];
+    let mut points = Vec::new();
+    for c in 1..=4usize {
+        for &bw in lmem_bws {
+            for &nb in noc_bws {
+                for &lt in lats {
+                    points.push((c, bw, nb, lt));
+                }
+            }
+        }
+    }
+    assert_eq!(points.len(), 240);
+    let start = std::time::Instant::now();
+    let results = run_parallel(&points, ctx.workers, |(c, bw, nb, lt)| {
+        let mut base = DmcParams::table2(*c);
+        base.grid = ctx.dmc_grid();
+        let p = dmc_with(&base, *bw, *nb, *lt, &area);
+        let w = dmc_prefill(&cfg, seq, &p);
+        let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default()).unwrap();
+        r.makespan
+    });
+    let secs = start.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        format!("E13: 240 hardware configurations in {secs:.1} s (paper: 76 s)"),
+        &["configs", "seconds", "best cycles", "worst cycles"],
+    );
+    let best = results.iter().cloned().fold(f64::INFINITY, f64::min);
+    let worst = results.iter().cloned().fold(0.0, f64::max);
+    t.row(vec![
+        results.len().to_string(),
+        format!("{secs:.2}"),
+        fmt(best),
+        fmt(worst),
+    ]);
+    (t, secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_quick_runs() {
+        let ctx = Ctx::quick();
+        let tables = table2(&ctx);
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].rows.len(), 4);
+        assert_eq!(tables[1].rows.len(), 4);
+    }
+
+    #[test]
+    fn fig9_gsm_quick_shared_bw_dominates() {
+        let ctx = Ctx::quick();
+        let tables = fig9_gsm(&ctx);
+        let fig_c = &tables[0];
+        // throughput must rise with shared-memory bandwidth for cfg 4
+        // (smallest L2 -> most bandwidth-starved)
+        let first: f64 = fig_c.rows.first().unwrap()[4].parse().unwrap();
+        let last: f64 = fig_c.rows.last().unwrap()[4].parse().unwrap();
+        assert!(last >= first, "cfg4 thpt should rise with l2 bw: {first} -> {last}");
+    }
+
+    #[test]
+    fn fig9_dmc_quick_lmem_bw_matters() {
+        let ctx = Ctx::quick();
+        let tables = fig9_dmc(&ctx);
+        let rows = &tables[0].rows;
+        assert!(!rows.is_empty());
+        // all four configs present
+        for c in 1..=4 {
+            assert!(rows.iter().any(|r| r[0] == c.to_string()));
+        }
+    }
+
+    #[test]
+    fn fig10_quick_spatial_beats_temporal_and_cost_rises() {
+        let ctx = Ctx::quick();
+        let tables = fig10(&ctx);
+        let temporal: f64 = tables[0].rows[0][2].parse().unwrap();
+        // every spatial configuration beats the temporal baseline
+        for row in &tables[1].rows {
+            let cycles: f64 = row[2].parse().unwrap_or(f64::INFINITY);
+            assert!(cycles < temporal, "spatial {cycles} vs temporal {temporal}");
+        }
+        // costs are positive for every configuration; the full-scale cost
+        // monotonicity claim is covered by
+        // `cost::chiplet::tests::system_cost_grows_with_chiplets_per_package`
+        // (quick mode uses tiny dies where board costs legitimately
+        // dominate packaging).
+        let mcm: Vec<f64> = tables[1]
+            .rows
+            .iter()
+            .filter(|r| r[0] == "MCM")
+            .map(|r| r[3].parse().unwrap())
+            .collect();
+        assert!(mcm.iter().all(|c| *c > 0.0), "{mcm:?}");
+    }
+
+    #[test]
+    fn fig8_kernel_quick_errors_bounded() {
+        let ctx = Ctx::quick();
+        let tables = fig8_kernel(&ctx);
+        for row in &tables[0].rows {
+            let err: f64 = row[5].parse().unwrap();
+            assert!(err < 1.5, "kernel rel err too large: {row:?}");
+        }
+    }
+
+    #[test]
+    fn fig8_llm_quick_accuracy_high() {
+        let ctx = Ctx::quick();
+        let tables = fig8_llm(&ctx);
+        for row in &tables[0].rows {
+            let acc: f64 = row[4].trim_end_matches('%').parse().unwrap();
+            assert!(acc > 80.0, "accuracy too low: {row:?}");
+        }
+    }
+}

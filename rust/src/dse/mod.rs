@@ -1,0 +1,16 @@
+//! Three-tier design-space exploration (paper §7): architecture-level
+//! (template choice), hardware-parameter (sweeps under area budgets), and
+//! mapping (primitive-based search). [`experiments`] encodes every table
+//! and figure of the paper's evaluation; [`search`] provides the
+//! primitive-composed mapping searchers; [`parallel`] and [`report`] are
+//! the sweep substrate.
+
+pub mod experiments;
+pub mod parallel;
+pub mod report;
+pub mod search;
+
+pub use experiments::Ctx;
+pub use parallel::run_parallel;
+pub use report::{fmt, Table};
+pub use search::{anneal_placement, greedy_tiling, SearchConfig};

@@ -1,0 +1,72 @@
+//! Parallel design-point evaluation over a std-thread worker pool (the
+//! offline vendor set has no rayon/tokio).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Evaluate `f` over `points` with up to `workers` threads, preserving
+/// input order in the result.
+pub fn run_parallel<T, R, F>(points: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.max(1).min(points.len().max(1));
+    if workers <= 1 {
+        return points.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..points.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let r = f(&points[i]);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed"))
+        .collect()
+}
+
+/// Default worker count: available parallelism.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let points: Vec<u64> = (0..100).collect();
+        let out = run_parallel(&points, 4, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_path() {
+        let points = vec![1, 2, 3];
+        assert_eq!(run_parallel(&points, 1, |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let points: Vec<u32> = vec![];
+        let out: Vec<u32> = run_parallel(&points, 8, |x| *x);
+        assert!(out.is_empty());
+    }
+}

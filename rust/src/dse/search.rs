@@ -1,0 +1,234 @@
+//! Mapping-strategy search built from the Table-1 primitives (paper §5.2).
+//!
+//! The paper deliberately ships primitives rather than a fixed search
+//! algorithm; these two searchers demonstrate how algorithms compose from
+//! them:
+//!
+//! * [`greedy_tiling`] — graph-transformation search: repeatedly re-tile
+//!   the heaviest compute task while the simulated makespan improves.
+//! * [`anneal_placement`] — task-assignment search: simulated annealing
+//!   over `map_node` moves, using the *state control* primitives
+//!   (`undo`) to reject moves.
+
+use crate::eval::Registry;
+use crate::hwir::{Hardware, PointId};
+use crate::mapping::MappingState;
+use crate::sim::{simulate, SimConfig};
+use crate::util::rng::Pcg;
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub seed: u64,
+    /// Annealing iterations.
+    pub iters: usize,
+    /// Initial temperature as a fraction of the initial makespan.
+    pub init_temp: f64,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            seed: 0xD5E,
+            iters: 60,
+            init_temp: 0.1,
+        }
+    }
+}
+
+fn makespan(
+    hw: &Hardware,
+    state: &MappingState,
+    evals: &Registry,
+    sim_cfg: &SimConfig,
+) -> Option<f64> {
+    simulate(hw, &state.graph, &state.mapping, evals, sim_cfg)
+        .ok()
+        .map(|r| r.makespan)
+}
+
+/// Greedy tiling search: split the most expensive compute task 2-way
+/// (distributing the halves over the least-loaded compute points) while the
+/// makespan improves. Returns the best makespan found.
+pub fn greedy_tiling(
+    hw: &Hardware,
+    state: &mut MappingState,
+    evals: &Registry,
+    sim_cfg: &SimConfig,
+    max_rounds: usize,
+) -> f64 {
+    let compute_points = hw.points_of_kind("compute");
+    let mut best = makespan(hw, state, evals, sim_cfg).unwrap_or(f64::INFINITY);
+    for _ in 0..max_rounds {
+        // heaviest compute task by uncontended demand
+        let heaviest = state
+            .graph
+            .iter()
+            .filter(|t| t.enabled && t.kind.is_compute())
+            .max_by(|a, b| {
+                let da = evals
+                    .demand(a, hw.entry(state.mapping.point_of(a.id).unwrap()))
+                    .total();
+                let db = evals
+                    .demand(b, hw.entry(state.mapping.point_of(b.id).unwrap()))
+                    .total();
+                da.total_cmp(&db)
+            })
+            .map(|t| t.id);
+        let Some(task) = heaviest else { break };
+        let Ok(tiles) = state.tile_task(task, &[2]) else {
+            break;
+        };
+        // place the two tiles on the two least-loaded points
+        let mut load: Vec<(PointId, usize)> = compute_points
+            .iter()
+            .map(|p| (*p, state.mapping.tasks_on(*p).len()))
+            .collect();
+        load.sort_by_key(|(_, l)| *l);
+        for (tile, (p, _)) in tiles.iter().zip(load.iter()) {
+            state.map_node(*tile, *p).ok();
+        }
+        match makespan(hw, state, evals, sim_cfg) {
+            Some(m) if m < best => best = m,
+            _ => {
+                // revert the tiling + placements
+                state.undo();
+                state.undo();
+                state.undo();
+                break;
+            }
+        }
+    }
+    best
+}
+
+/// Simulated-annealing placement search over `map_node` moves.
+/// Returns (best makespan, accepted moves).
+pub fn anneal_placement(
+    hw: &Hardware,
+    state: &mut MappingState,
+    evals: &Registry,
+    sim_cfg: &SimConfig,
+    cfg: &SearchConfig,
+) -> (f64, usize) {
+    let compute_points = hw.points_of_kind("compute");
+    let movable: Vec<_> = state
+        .graph
+        .iter()
+        .filter(|t| t.enabled && t.kind.is_compute())
+        .map(|t| t.id)
+        .collect();
+    let mut rng = Pcg::new(cfg.seed);
+    let mut current = match makespan(hw, state, evals, sim_cfg) {
+        Some(m) => m,
+        None => return (f64::INFINITY, 0),
+    };
+    let mut best = current;
+    let mut accepted = 0;
+    if movable.is_empty() || compute_points.len() < 2 {
+        return (best, 0);
+    }
+    for i in 0..cfg.iters {
+        let temp = cfg.init_temp * current * (1.0 - i as f64 / cfg.iters as f64) + 1e-9;
+        let task = *rng.choose(&movable);
+        let point = *rng.choose(&compute_points);
+        if state.mapping.point_of(task) == Some(point) {
+            continue;
+        }
+        if state.map_node(task, point).is_err() {
+            continue;
+        }
+        match makespan(hw, state, evals, sim_cfg) {
+            Some(m) if m <= current || rng.chance(((current - m) / temp).exp()) => {
+                current = m;
+                best = best.min(m);
+                accepted += 1;
+            }
+            _ => {
+                // state-control primitive: reject via undo
+                state.undo();
+            }
+        }
+    }
+    (best, accepted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{
+        ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint,
+    };
+    use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+
+    fn hw(cores: usize) -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![cores]);
+        for i in 0..cores {
+            m.set(
+                Coord::new(vec![i as u32]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((8, 8), 32).with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+                )),
+            );
+        }
+        Hardware::build(m)
+    }
+
+    fn all_on_one_core(n_tasks: usize, hw: &Hardware) -> MappingState {
+        let mut g = TaskGraph::new();
+        let core = hw.points_of_kind("compute")[0];
+        for i in 0..n_tasks {
+            let mut c = ComputeCost::zero(OpClass::Elementwise);
+            c.vec_flops = 64_000.0;
+            g.add(format!("t{i}"), TaskKind::Compute(c));
+        }
+        let mut st = MappingState::new(g);
+        for t in st.graph.ids().collect::<Vec<_>>() {
+            st.map_node(t, core).unwrap();
+        }
+        st
+    }
+
+    #[test]
+    fn anneal_improves_degenerate_placement() {
+        // 8 independent tasks all on one of 4 cores: annealing must spread
+        // them and cut the makespan.
+        let hw = hw(4);
+        let mut st = all_on_one_core(8, &hw);
+        let evals = Registry::standard();
+        let sim_cfg = SimConfig::default();
+        let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        let (best, accepted) = anneal_placement(
+            &hw,
+            &mut st,
+            &evals,
+            &sim_cfg,
+            &SearchConfig {
+                iters: 80,
+                ..Default::default()
+            },
+        );
+        assert!(accepted > 0);
+        assert!(
+            best < before * 0.6,
+            "anneal failed to improve: {before} -> {best}"
+        );
+    }
+
+    #[test]
+    fn greedy_tiling_splits_heavy_task() {
+        let hw = hw(4);
+        let mut g = TaskGraph::new();
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = 1_000_000.0;
+        let t = g.add("big", TaskKind::Compute(c));
+        let mut st = MappingState::new(g);
+        st.map_node(t, hw.points_of_kind("compute")[0]).unwrap();
+        let evals = Registry::standard();
+        let sim_cfg = SimConfig::default();
+        let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        let best = greedy_tiling(&hw, &mut st, &evals, &sim_cfg, 3);
+        assert!(best < before, "{before} -> {best}");
+    }
+}

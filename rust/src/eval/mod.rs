@@ -1,0 +1,195 @@
+//! Per-`SpacePoint` evaluators (paper §6.1: "each SpacePoint … links to an
+//! evaluator").
+//!
+//! An evaluator maps a task on a point to a service [`Demand`]: a fixed
+//! (latency) part plus a shareable (bandwidth) part. The simulator resolves
+//! contention dynamically — under processor sharing with `k` concurrent
+//! flows, the shareable part progresses at `1/k` rate — so evaluators
+//! describe *uncontended* demand only.
+//!
+//! Provided evaluators:
+//! * [`roofline::RooflineEvaluator`] — the default analytic model: systolic
+//!   tile quantization + memory roofline for compute tasks, hop latency +
+//!   serialization for transfers (what the paper calls "a roofline model
+//!   with mapping", §7.2).
+//! * [`comm`] — closed-form collective latency models (Eq. 7) used for
+//!   validation against the event-driven network simulation.
+//! * [`pjrt::PjrtEvaluator`] — the AOT-compiled JAX/Pallas evaluator
+//!   executed through the PJRT runtime, demonstrating evaluator
+//!   pluggability (and the repo's L1/L2 layers).
+
+pub mod comm;
+pub mod pjrt;
+pub mod roofline;
+
+use crate::hwir::PointEntry;
+use crate::taskgraph::Task;
+
+/// Uncontended service demand of one task evaluation, in cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Demand {
+    /// Fixed latency component (pipeline fill, hop latency, access latency).
+    /// Not subject to bandwidth sharing.
+    pub fixed: f64,
+    /// Shareable component (bytes / bandwidth at full rate). Under
+    /// contention with `k` flows this stretches by `k`.
+    pub shared: f64,
+}
+
+impl Demand {
+    pub fn new(fixed: f64, shared: f64) -> Self {
+        Demand { fixed, shared }
+    }
+
+    /// Demand when run alone.
+    pub fn total(&self) -> f64 {
+        self.fixed + self.shared
+    }
+}
+
+/// An evaluation model `E_p(v)`.
+pub trait Evaluator: Send + Sync {
+    /// Uncontended demand of `task` on `point`. Storage and sync tasks are
+    /// never passed here (they take zero service time by construction).
+    fn demand(&self, task: &Task, point: &PointEntry) -> Demand;
+
+    /// Energy of one task evaluation in pJ. The default coefficient model
+    /// mirrors `python/compile/model.py` (per-MAC / per-vector-FLOP /
+    /// per-byte terms) plus interconnect and DRAM transfer energy.
+    fn energy(&self, task: &Task, point: &PointEntry) -> f64 {
+        energy_model(task, point)
+    }
+
+    /// Name for reports.
+    fn name(&self) -> &str;
+}
+
+/// Energy coefficients in pJ (7nm-class ballpark; must track
+/// `python/compile/model.py`).
+pub mod energy {
+    /// Per MAC (two FLOPs) on the systolic array.
+    pub const E_MAC: f64 = 0.8;
+    /// Per vector FLOP pair.
+    pub const E_VEC: f64 = 0.4;
+    /// Per byte moved through a local SRAM.
+    pub const E_SRAM_BYTE: f64 = 1.1;
+    /// Per byte per hop on an on-chip/-package link.
+    pub const E_LINK_BYTE_HOP: f64 = 0.35;
+    /// Per byte through a DRAM interface.
+    pub const E_DRAM_BYTE: f64 = 8.0;
+}
+
+/// Default task energy model (pJ).
+pub fn energy_model(task: &Task, point: &PointEntry) -> f64 {
+    use crate::hwir::PointKind;
+    use crate::taskgraph::TaskKind;
+    match (&task.kind, &point.point.kind) {
+        (TaskKind::Compute(c), _) => {
+            energy::E_MAC * c.mac_flops / 2.0
+                + energy::E_VEC * c.vec_flops / 2.0
+                + energy::E_SRAM_BYTE * c.local_bytes() as f64
+        }
+        (TaskKind::Comm { bytes, hops, .. }, PointKind::Comm(_)) => {
+            energy::E_LINK_BYTE_HOP * *bytes as f64 * (*hops).max(1) as f64
+        }
+        (TaskKind::Comm { bytes, .. }, PointKind::Dram(_)) => {
+            energy::E_DRAM_BYTE * *bytes as f64
+        }
+        (TaskKind::Comm { bytes, .. }, _) => energy::E_SRAM_BYTE * *bytes as f64,
+        _ => 0.0,
+    }
+}
+
+/// Resolves each point's evaluator binding (`SpacePoint::evaluator` key) to
+/// an [`Evaluator`]. An empty key uses the default.
+pub struct Registry {
+    default: Box<dyn Evaluator>,
+    named: Vec<(String, Box<dyn Evaluator>)>,
+}
+
+impl Registry {
+    pub fn new(default: Box<dyn Evaluator>) -> Self {
+        Registry {
+            default,
+            named: Vec::new(),
+        }
+    }
+
+    /// Registry with the standard roofline evaluator as default.
+    pub fn standard() -> Self {
+        Registry::new(Box::new(roofline::RooflineEvaluator::default()))
+    }
+
+    pub fn register(&mut self, key: impl Into<String>, eval: Box<dyn Evaluator>) {
+        self.named.push((key.into(), eval));
+    }
+
+    /// Evaluator for a point (by its binding key).
+    pub fn for_point(&self, point: &PointEntry) -> &dyn Evaluator {
+        let key = &point.point.evaluator;
+        if !key.is_empty() {
+            for (k, e) in &self.named {
+                if k == key {
+                    return e.as_ref();
+                }
+            }
+            crate::log_warn!(
+                "no evaluator registered for key '{key}' (point {}); using default",
+                point.addr
+            );
+        }
+        self.default.as_ref()
+    }
+
+    /// Demand of a task on a point, dispatched through the binding.
+    pub fn demand(&self, task: &Task, point: &PointEntry) -> Demand {
+        self.for_point(point).demand(task, point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint};
+    use crate::taskgraph::{TaskGraph, TaskKind};
+
+    struct Fixed(f64);
+    impl Evaluator for Fixed {
+        fn demand(&self, _t: &Task, _p: &PointEntry) -> Demand {
+            Demand::new(self.0, 0.0)
+        }
+        fn name(&self) -> &str {
+            "fixed"
+        }
+    }
+
+    fn hw_one_mem(evaluator: &str) -> Hardware {
+        let mut m = SpaceMatrix::new("m", vec![1]);
+        let mut p = SpacePoint::memory("mem", MemoryAttrs::new(1024, 8.0, 3));
+        p.evaluator = evaluator.to_string();
+        m.set(Coord::new(vec![0]), Element::Point(p));
+        Hardware::build(m)
+    }
+
+    #[test]
+    fn registry_dispatches_named() {
+        let hw = hw_one_mem("special");
+        let mut reg = Registry::new(Box::new(Fixed(1.0)));
+        reg.register("special", Box::new(Fixed(42.0)));
+        let mut g = TaskGraph::new();
+        let t = g.add("x", TaskKind::Comm { bytes: 8, hops: 0, route: None });
+        let entry = hw.entries().next().unwrap();
+        let d = reg.demand(g.task(t), entry);
+        assert_eq!(d.total(), 42.0);
+    }
+
+    #[test]
+    fn registry_falls_back_to_default() {
+        let hw = hw_one_mem("unknown-key");
+        let reg = Registry::new(Box::new(Fixed(7.0)));
+        let mut g = TaskGraph::new();
+        let t = g.add("x", TaskKind::Comm { bytes: 8, hops: 0, route: None });
+        let entry = hw.entries().next().unwrap();
+        assert_eq!(reg.demand(g.task(t), entry).total(), 7.0);
+    }
+}

@@ -1,0 +1,271 @@
+//! PJRT-backed evaluator: executes the AOT-compiled JAX/Pallas roofline
+//! evaluator (Layer 1/2 of this repo) through the [`crate::runtime`] bridge.
+//!
+//! Demonstrates the paper's evaluator pluggability: bind
+//! `SpacePoint::evaluator = "pjrt"` and register a [`PjrtEvaluator`] in the
+//! [`super::Registry`]. Task descriptors are batched (the artifact is
+//! lowered at a fixed batch size), results are cached by
+//! `(descriptor, point)` key, and the coordinator pre-warms the cache for a
+//! whole task graph before simulation so the hot loop never blocks on XLA.
+//!
+//! Descriptor layout (must match `python/compile/model.py`):
+//!
+//! | idx | field |
+//! |-----|------------|
+//! | 0   | op code    |
+//! | 1   | mac_flops  |
+//! | 2   | vec_flops  |
+//! | 3   | in_bytes   |
+//! | 4   | out_bytes  |
+//! | 5–7 | m, n, k    |
+//!
+//! Hardware-parameter vector layout:
+//!
+//! | idx | field |
+//! |-----|---------------------|
+//! | 0   | systolic rows R     |
+//! | 1   | systolic cols C     |
+//! | 2   | vector lanes        |
+//! | 3   | lmem bandwidth      |
+//! | 4   | lmem latency        |
+//! | 5   | pipeline fill       |
+//! | 6   | vector efficiency   |
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::hwir::{PointEntry, PointKind};
+use crate::runtime::{Executable, Runtime};
+use crate::taskgraph::{ComputeCost, Task, TaskKind};
+
+use super::roofline::RooflineEvaluator;
+use super::{Demand, Evaluator};
+
+/// Number of per-task descriptor fields.
+pub const DESC_FIELDS: usize = 8;
+/// Number of hardware-parameter fields.
+pub const HW_FIELDS: usize = 7;
+/// Batch size the artifact is lowered at.
+pub const BATCH: usize = 128;
+
+/// Cache key: quantized descriptor + point id.
+type Key = (u32, [u32; 3], u64, u64, u64, u64, u64, u32);
+
+/// Evaluator backed by the AOT-compiled XLA computation.
+pub struct PjrtEvaluator {
+    exe: Executable,
+    cache: Mutex<HashMap<Key, f64>>,
+    /// Fallback for task kinds the artifact does not model (comm tasks).
+    fallback: RooflineEvaluator,
+    /// Cache statistics (hits, misses).
+    stats: Mutex<(u64, u64)>,
+}
+
+impl PjrtEvaluator {
+    /// Load the evaluator artifact (`evaluator_b128.hlo.txt`) from the
+    /// artifacts directory.
+    pub fn load(rt: &Runtime) -> Result<Self> {
+        let path = crate::runtime::artifacts_dir().join(format!("evaluator_b{BATCH}.hlo.txt"));
+        let exe = rt
+            .load_hlo_text(&path)
+            .with_context(|| format!("loading evaluator artifact {}", path.display()))?;
+        Ok(PjrtEvaluator {
+            exe,
+            cache: Mutex::new(HashMap::new()),
+            fallback: RooflineEvaluator::default(),
+            stats: Mutex::new((0, 0)),
+        })
+    }
+
+    fn descriptor(cost: &ComputeCost) -> [f32; DESC_FIELDS] {
+        [
+            cost.op.code() as f32,
+            cost.mac_flops as f32,
+            cost.vec_flops as f32,
+            cost.in_bytes as f32,
+            cost.out_bytes as f32,
+            cost.dims[0] as f32,
+            cost.dims[1] as f32,
+            cost.dims[2] as f32,
+        ]
+    }
+
+    fn hw_params(point: &PointEntry) -> Option<[f32; HW_FIELDS]> {
+        match &point.point.kind {
+            PointKind::Compute(a) => {
+                let (bw, lat) = a
+                    .lmem
+                    .as_ref()
+                    .map(|m| (m.bandwidth as f32, m.latency as f32))
+                    .unwrap_or((f32::INFINITY, 0.0));
+                Some([
+                    a.systolic.0 as f32,
+                    a.systolic.1 as f32,
+                    a.vector_lanes as f32,
+                    bw,
+                    lat,
+                    1.0,  // pipeline fill (matches RooflineConfig::default)
+                    0.75, // vector efficiency
+                ])
+            }
+            _ => None,
+        }
+    }
+
+    fn key(cost: &ComputeCost, point: &PointEntry) -> Key {
+        let (op, dims, ib, ob, db, mf, vf) = cost.dedup_key();
+        (op, dims, ib, ob, db, mf, vf, point.id.0)
+    }
+
+    /// Evaluate a batch of compute costs on one point, filling the cache.
+    pub fn prewarm_batch(&self, costs: &[ComputeCost], point: &PointEntry) -> Result<()> {
+        let Some(hwp) = Self::hw_params(point) else {
+            return Ok(());
+        };
+        for chunk in costs.chunks(BATCH) {
+            let mut desc = vec![0f32; BATCH * DESC_FIELDS];
+            for (i, c) in chunk.iter().enumerate() {
+                desc[i * DESC_FIELDS..(i + 1) * DESC_FIELDS].copy_from_slice(&Self::descriptor(c));
+            }
+            let out = self
+                .exe
+                .run_f32(&[(&desc, &[BATCH, DESC_FIELDS]), (&hwp, &[HW_FIELDS])])?;
+            let lat = &out[0];
+            let mut cache = self.cache.lock().unwrap();
+            for (i, c) in chunk.iter().enumerate() {
+                cache.insert(Self::key(c, point), lat[i] as f64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-evaluate every enabled compute task of a graph on its mapped
+    /// point so the simulation loop is cache-hit only.
+    pub fn prewarm(
+        &self,
+        graph: &crate::taskgraph::TaskGraph,
+        mapping: &crate::mapping::Mapping,
+        hw: &crate::hwir::Hardware,
+    ) -> Result<usize> {
+        // group unique costs per point
+        let mut per_point: HashMap<u32, Vec<ComputeCost>> = HashMap::new();
+        let mut seen: std::collections::HashSet<Key> = std::collections::HashSet::new();
+        for task in graph.iter() {
+            if !task.enabled {
+                continue;
+            }
+            if let TaskKind::Compute(cost) = &task.kind {
+                if let Some(pid) = mapping.point_of(task.id) {
+                    let entry = hw.entry(pid);
+                    let key = Self::key(cost, entry);
+                    if seen.insert(key) {
+                        per_point.entry(pid.0).or_default().push(*cost);
+                    }
+                }
+            }
+        }
+        let mut n = 0;
+        for (pid, costs) in per_point {
+            let entry = hw.entry(crate::hwir::PointId(pid));
+            n += costs.len();
+            self.prewarm_batch(&costs, entry)?;
+        }
+        Ok(n)
+    }
+
+    /// (hits, misses) counters.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        *self.stats.lock().unwrap()
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn demand(&self, task: &Task, point: &PointEntry) -> Demand {
+        match (&task.kind, &point.point.kind) {
+            (TaskKind::Compute(cost), PointKind::Compute(_)) => {
+                let key = Self::key(cost, point);
+                if let Some(v) = self.cache.lock().unwrap().get(&key) {
+                    self.stats.lock().unwrap().0 += 1;
+                    return Demand::new(*v, 0.0);
+                }
+                self.stats.lock().unwrap().1 += 1;
+                // Cache miss: evaluate a batch of one (padded).
+                match self.prewarm_batch(&[*cost], point) {
+                    Ok(()) => {
+                        let v = *self.cache.lock().unwrap().get(&key).unwrap();
+                        Demand::new(v, 0.0)
+                    }
+                    Err(e) => {
+                        crate::log_error!("pjrt evaluation failed: {e:#}; using roofline");
+                        self.fallback.demand(task, point)
+                    }
+                }
+            }
+            _ => self.fallback.demand(task, point),
+        }
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{
+        ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    };
+    use crate::taskgraph::{OpClass, TaskGraph};
+
+    fn hw() -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![1]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((32, 32), 128).with_lmem(MemoryAttrs::new(1 << 21, 64.0, 2)),
+            )),
+        );
+        Hardware::build(m)
+    }
+
+    fn mm_cost(m: u32, n: u32, k: u32) -> ComputeCost {
+        let mut c = ComputeCost::zero(OpClass::MatMul);
+        c.dims = [m, n, k];
+        c.mac_flops = 2.0 * m as f64 * n as f64 * k as f64;
+        c.in_bytes = 2 * (m as u64 * k as u64 + k as u64 * n as u64);
+        c.out_bytes = 2 * m as u64 * n as u64;
+        c
+    }
+
+    /// Requires `make artifacts`; skips otherwise.
+    #[test]
+    fn pjrt_matches_rust_roofline() {
+        let art = crate::runtime::artifacts_dir().join(format!("evaluator_b{BATCH}.hlo.txt"));
+        if !art.exists() {
+            eprintln!("skipping: artifact missing (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let ev = PjrtEvaluator::load(&rt).unwrap();
+        let hw = hw();
+        let entry = hw.entries().next().unwrap();
+        let rust_ev = RooflineEvaluator::default();
+        let mut g = TaskGraph::new();
+        for (m, n, k) in [(32, 32, 64), (128, 128, 128), (33, 65, 100), (2048, 4096, 4096)] {
+            let t = g.add("mm", TaskKind::Compute(mm_cost(m, n, k)));
+            let want = rust_ev.demand(g.task(t), entry).total();
+            let got = ev.demand(g.task(t), entry).total();
+            let rel = (got - want).abs() / want.max(1.0);
+            assert!(
+                rel < 1e-3,
+                "({m},{n},{k}): pjrt {got} vs rust {want} (rel {rel})"
+            );
+        }
+        let (hits, misses) = ev.cache_stats();
+        assert!(misses > 0 && hits + misses >= 4);
+    }
+}

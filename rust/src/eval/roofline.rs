@@ -1,0 +1,263 @@
+//! Default analytic evaluator: "roofline model with mapping" (paper §7.2).
+//!
+//! * **Compute tasks** on a compute point: the systolic-array time is
+//!   *tile-quantized* — a matmul `(m, n, k)` on an `R×C` array takes
+//!   `ceil(m/R) · ceil(n/C) · k` cycles plus a pipeline-fill term `R + C`
+//!   per tile wave. Vector work runs at `2·lanes` FLOPs/cycle. The local
+//!   memory must stream `in_bytes + out_bytes` at its bandwidth. The task
+//!   time is the *max* of the compute and memory streams (they overlap),
+//!   plus the local-memory access latency. This quantization is what
+//!   produces the non-linear transitions MLDSE matches in Fig. 8.
+//! * **Comm tasks** on comm/memory/DRAM points: `hops · link_latency`
+//!   fixed + `bytes / bandwidth` shareable.
+//! * Storage/sync tasks are zero-demand (handled by the engine directly).
+
+use crate::hwir::{PointEntry, PointKind};
+use crate::taskgraph::{ComputeCost, OpClass, Task, TaskKind};
+
+use super::{Demand, Evaluator};
+
+/// Configuration knobs of the roofline model.
+#[derive(Debug, Clone)]
+pub struct RooflineConfig {
+    /// Systolic pipeline fill overhead per tile wave, in cycles per
+    /// (R + C) units. 1.0 = classic output-stationary fill+drain.
+    pub pipeline_fill: f64,
+    /// Fraction of peak vector throughput achieved on non-matmul ops
+    /// (transcendentals in softmax/layernorm lower this).
+    pub vector_efficiency: f64,
+}
+
+impl Default for RooflineConfig {
+    fn default() -> Self {
+        RooflineConfig {
+            pipeline_fill: 1.0,
+            vector_efficiency: 0.75,
+        }
+    }
+}
+
+/// The default evaluator.
+#[derive(Debug, Clone, Default)]
+pub struct RooflineEvaluator {
+    pub cfg: RooflineConfig,
+}
+
+impl RooflineEvaluator {
+    pub fn new(cfg: RooflineConfig) -> Self {
+        RooflineEvaluator { cfg }
+    }
+
+    /// Cycles for the matrix-unit part of a compute task.
+    ///
+    /// `dims = (m, n, k)` with the MXU quantization; falls back to
+    /// `mac_flops / peak` when dims are unknown (zeros).
+    pub fn matrix_cycles(&self, cost: &ComputeCost, systolic: (u32, u32)) -> f64 {
+        if cost.mac_flops <= 0.0 {
+            return 0.0;
+        }
+        let (r, c) = systolic;
+        if r == 0 || c == 0 {
+            return f64::INFINITY; // matrix work on a vector-only unit
+        }
+        let [m, n, k] = cost.dims;
+        if m == 0 || n == 0 || k == 0 {
+            // Unknown shape: ideal throughput.
+            return cost.mac_flops / (2.0 * r as f64 * c as f64);
+        }
+        let waves_m = m.div_ceil(r) as f64;
+        let waves_n = n.div_ceil(c) as f64;
+        let fill = self.cfg.pipeline_fill * (r + c) as f64;
+        waves_m * waves_n * (k as f64 + fill)
+    }
+
+    /// Cycles for the vector-unit part.
+    pub fn vector_cycles(&self, cost: &ComputeCost, lanes: u32) -> f64 {
+        if cost.vec_flops <= 0.0 {
+            return 0.0;
+        }
+        if lanes == 0 {
+            return f64::INFINITY;
+        }
+        let eff = match cost.op {
+            OpClass::Softmax | OpClass::LayerNorm => self.cfg.vector_efficiency,
+            _ => 1.0,
+        };
+        cost.vec_flops / (2.0 * lanes as f64 * eff)
+    }
+}
+
+impl Evaluator for RooflineEvaluator {
+    fn demand(&self, task: &Task, point: &PointEntry) -> Demand {
+        match (&task.kind, &point.point.kind) {
+            (TaskKind::Compute(cost), PointKind::Compute(attrs)) => {
+                let mat = self.matrix_cycles(cost, attrs.systolic);
+                let vec = self.vector_cycles(cost, attrs.vector_lanes);
+                let (mem, lat) = match &attrs.lmem {
+                    Some(lm) => (cost.local_bytes() as f64 / lm.bandwidth, lm.latency as f64),
+                    None => (0.0, 0.0),
+                };
+                // compute and memory streaming overlap; latency is additive
+                Demand::new(lat + (mat + vec).max(mem), 0.0)
+            }
+            (TaskKind::Compute(_), _) => {
+                crate::log_warn!(
+                    "compute task {} on non-compute point {}",
+                    task.name,
+                    point.addr
+                );
+                Demand::new(f64::INFINITY, 0.0)
+            }
+            (TaskKind::Comm { bytes, hops, .. }, PointKind::Comm(attrs)) => Demand::new(
+                *hops as f64 * attrs.link_latency as f64,
+                *bytes as f64 / attrs.link_bandwidth,
+            ),
+            // Memory/DRAM access task: latency + serialization at the
+            // memory's (channel) bandwidth.
+            (TaskKind::Comm { bytes, .. }, PointKind::Memory(m) | PointKind::Dram(m)) => {
+                Demand::new(m.latency as f64, *bytes as f64 / m.bandwidth)
+            }
+            (TaskKind::Comm { .. }, PointKind::Compute(_)) => {
+                crate::log_warn!("comm task {} on compute point {}", task.name, point.addr);
+                Demand::new(f64::INFINITY, 0.0)
+            }
+            // storage / sync: no service time
+            (TaskKind::Storage { .. } | TaskKind::Sync { .. }, _) => Demand::default(),
+        }
+    }
+
+    fn name(&self) -> &str {
+        "roofline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{
+        CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+        Topology,
+    };
+    use crate::taskgraph::TaskGraph;
+
+    fn hw() -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![2]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((32, 32), 128).with_lmem(MemoryAttrs::new(1 << 21, 512.0, 2)),
+            )),
+        );
+        m.set(
+            Coord::new(vec![1]),
+            Element::Point(SpacePoint::dram("dram", MemoryAttrs::new(1 << 33, 128.0, 100))),
+        );
+        m.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 32.0, 2),
+        ));
+        Hardware::build(m)
+    }
+
+    fn matmul(m: u32, n: u32, k: u32) -> Task {
+        let mut g = TaskGraph::new();
+        let mut cost = ComputeCost::zero(OpClass::MatMul);
+        cost.dims = [m, n, k];
+        cost.mac_flops = 2.0 * m as f64 * n as f64 * k as f64;
+        cost.in_bytes = 2 * (m as u64 * k as u64 + k as u64 * n as u64); // bf16
+        cost.out_bytes = 2 * m as u64 * n as u64;
+        let id = g.add("mm", TaskKind::Compute(cost));
+        g.task(id).clone()
+    }
+
+    #[test]
+    fn matmul_tile_quantization() {
+        let hw = hw();
+        let core = hw
+            .entries()
+            .find(|e| e.point.kind.is_compute())
+            .unwrap();
+        let ev = RooflineEvaluator::default();
+        // exactly one wave: 32x32x64
+        let t1 = ev.demand(&matmul(32, 32, 64), core).total();
+        // 33 rows -> 2 waves in m
+        let t2 = ev.demand(&matmul(33, 32, 64), core).total();
+        assert!(t2 > t1 * 1.8, "quantization jump missing: {t1} vs {t2}");
+        // identical work at 64 rows (2 full waves) ≈ t2
+        let t3 = ev.demand(&matmul(64, 32, 64), core).total();
+        assert!((t3 - t2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_roofline() {
+        let hw = hw();
+        let core = hw.entries().find(|e| e.point.kind.is_compute()).unwrap();
+        let ev = RooflineEvaluator::default();
+        // tiny compute, huge memory traffic -> memory bound
+        let mut cost = ComputeCost::zero(OpClass::Elementwise);
+        cost.vec_flops = 128.0;
+        cost.in_bytes = 1 << 20;
+        let mut g = TaskGraph::new();
+        let id = g.add("ew", TaskKind::Compute(cost));
+        let d = ev.demand(g.task(id), core);
+        let expected_mem = (1u64 << 20) as f64 / 512.0;
+        assert!((d.total() - (2.0 + expected_mem)).abs() < 1.0);
+    }
+
+    #[test]
+    fn comm_demand_split_fixed_shared() {
+        let hw = hw();
+        let noc = hw.entries().find(|e| e.point.kind.is_comm()).unwrap();
+        let ev = RooflineEvaluator::default();
+        let mut g = TaskGraph::new();
+        let id = g.add("x", TaskKind::Comm { bytes: 3200, hops: 3, route: None });
+        let d = ev.demand(g.task(id), noc);
+        assert_eq!(d.fixed, 6.0); // 3 hops * 2 cycles
+        assert_eq!(d.shared, 100.0); // 3200 / 32
+    }
+
+    #[test]
+    fn dram_access_demand() {
+        let hw = hw();
+        let dram = hw
+            .entries()
+            .find(|e| e.point.kind.kind_name() == "dram")
+            .unwrap();
+        let ev = RooflineEvaluator::default();
+        let mut g = TaskGraph::new();
+        let id = g.add("ld", TaskKind::Comm { bytes: 12800, hops: 0, route: None });
+        let d = ev.demand(g.task(id), dram);
+        assert_eq!(d.fixed, 100.0);
+        assert_eq!(d.shared, 100.0);
+    }
+
+    #[test]
+    fn storage_and_sync_zero() {
+        let hw = hw();
+        let core = hw.entries().next().unwrap();
+        let ev = RooflineEvaluator::default();
+        let mut g = TaskGraph::new();
+        let s = g.add("s", TaskKind::Storage { bytes: 64 });
+        let y = g.add("y", TaskKind::Sync { sync_id: 0 });
+        assert_eq!(ev.demand(g.task(s), core).total(), 0.0);
+        assert_eq!(ev.demand(g.task(y), core).total(), 0.0);
+    }
+
+    #[test]
+    fn softmax_uses_vector_efficiency() {
+        let hw = hw();
+        let core = hw.entries().find(|e| e.point.kind.is_compute()).unwrap();
+        let ev = RooflineEvaluator::default();
+        let mut sm = ComputeCost::zero(OpClass::Softmax);
+        sm.vec_flops = 1_000_000.0;
+        let mut ew = sm;
+        ew.op = OpClass::Elementwise;
+        let mut g = TaskGraph::new();
+        let a = g.add("sm", TaskKind::Compute(sm));
+        let b = g.add("ew", TaskKind::Compute(ew));
+        let da = ev.demand(g.task(a), core).total();
+        let db = ev.demand(g.task(b), core).total();
+        assert!(da > db);
+    }
+}

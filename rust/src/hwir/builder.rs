@@ -1,0 +1,523 @@
+//! Hardware builder: turns a recursive `SpaceMatrix` description into an
+//! *operable* [`Hardware`] model (paper §4, Figure 2).
+//!
+//! "Operable" means: every `SpacePoint` in the tree (cell points *and*
+//! per-level communication points) gets a dense [`PointId`], a multi-level
+//! address, and O(1) lookup both ways; virtual sync groups are resolved to
+//! point-id sets; and cross-level communication routes can be computed
+//! (the `map_edge` critical-coordinate decomposition of Figure 3).
+
+use std::collections::HashMap;
+
+use super::coord::{Coord, MlCoord};
+use super::matrix::{Element, SpaceMatrix};
+use super::point::SpacePoint;
+
+/// Dense handle of a `SpacePoint` inside a built [`Hardware`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PointId(pub u32);
+
+impl PointId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for PointId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "p{}", self.0)
+    }
+}
+
+/// Multi-level address of a `SpacePoint`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Addr {
+    /// A point occupying a cell, addressed by the coordinate chain.
+    Cell(MlCoord),
+    /// The `domain`-th communication point of the matrix at `matrix`
+    /// (`MlCoord::root()` = the root matrix).
+    Comm { matrix: MlCoord, domain: usize },
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Cell(c) => write!(f, "{c}"),
+            Addr::Comm { matrix, domain } => write!(f, "{matrix}#comm{domain}"),
+        }
+    }
+}
+
+/// Registry entry of one built `SpacePoint`.
+#[derive(Debug, Clone)]
+pub struct PointEntry {
+    pub id: PointId,
+    pub addr: Addr,
+    pub point: SpacePoint,
+    /// Depth of the owning matrix (root matrix = 0). For cell points this is
+    /// `mlcoord.depth() - 1`'s matrix depth + 1; kept simple: number of
+    /// levels above this point.
+    pub level: usize,
+}
+
+/// A resolved virtual synchronization group.
+#[derive(Debug, Clone)]
+pub struct ResolvedSyncGroup {
+    /// Matrix the group was declared on.
+    pub matrix: MlCoord,
+    pub name: String,
+    /// Every point (recursively) under the member cells.
+    pub points: Vec<PointId>,
+}
+
+/// One within-level segment of a cross-level communication route.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommSegment {
+    /// Communication point carrying this segment.
+    pub comm: PointId,
+    /// Entry coordinate within the level.
+    pub from: Coord,
+    /// Exit coordinate within the level.
+    pub to: Coord,
+    /// Hop count under the comm point's topology.
+    pub hops: u64,
+}
+
+/// An operable multi-level hardware model.
+#[derive(Debug, Clone)]
+pub struct Hardware {
+    pub root: SpaceMatrix,
+    entries: Vec<PointEntry>,
+    cell_index: HashMap<MlCoord, PointId>,
+    comm_index: HashMap<(MlCoord, usize), PointId>,
+    /// Shape of every matrix in the tree, keyed by its coordinate chain.
+    matrix_shapes: HashMap<MlCoord, Vec<usize>>,
+    sync_groups: Vec<ResolvedSyncGroup>,
+}
+
+impl Hardware {
+    /// Recursively instantiate a hardware description (Figure 2(a)).
+    pub fn build(root: SpaceMatrix) -> Hardware {
+        let mut hw = Hardware {
+            root: SpaceMatrix::new("", vec![]),
+            entries: Vec::new(),
+            cell_index: HashMap::new(),
+            comm_index: HashMap::new(),
+            matrix_shapes: HashMap::new(),
+            sync_groups: Vec::new(),
+        };
+        hw.walk_matrix(&root, &MlCoord::root());
+        // Resolve sync groups after all points are registered.
+        let mut groups = Vec::new();
+        collect_sync_groups(&root, &MlCoord::root(), &hw, &mut groups);
+        hw.sync_groups = groups;
+        hw.root = root;
+        hw
+    }
+
+    fn walk_matrix(&mut self, m: &SpaceMatrix, at: &MlCoord) {
+        self.matrix_shapes.insert(at.clone(), m.dims.clone());
+        for (domain, comm) in m.comms.iter().enumerate() {
+            let id = self.push_entry(
+                Addr::Comm {
+                    matrix: at.clone(),
+                    domain,
+                },
+                comm.clone(),
+                at.depth(),
+            );
+            self.comm_index.insert((at.clone(), domain), id);
+        }
+        for (coord, element) in m.iter_cells() {
+            let child = at.child(coord);
+            match element {
+                Element::Point(p) => {
+                    let id = self.push_entry(Addr::Cell(child.clone()), p.clone(), at.depth() + 1);
+                    self.cell_index.insert(child, id);
+                }
+                Element::Matrix(inner) => self.walk_matrix(inner, &child),
+            }
+        }
+    }
+
+    fn push_entry(&mut self, addr: Addr, point: SpacePoint, level: usize) -> PointId {
+        let id = PointId(self.entries.len() as u32);
+        self.entries.push(PointEntry {
+            id,
+            addr,
+            point,
+            level,
+        });
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // Retrieval (Figure 2(b))
+    // ------------------------------------------------------------------
+
+    /// Number of registered `SpacePoint`s.
+    pub fn num_points(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn entry(&self, id: PointId) -> &PointEntry {
+        &self.entries[id.index()]
+    }
+
+    pub fn point(&self, id: PointId) -> &SpacePoint {
+        &self.entries[id.index()].point
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &PointEntry> {
+        self.entries.iter()
+    }
+
+    /// Resolve a cell address to its point id (leaf points only).
+    pub fn cell(&self, coord: &MlCoord) -> Option<PointId> {
+        self.cell_index.get(coord).copied()
+    }
+
+    /// Resolve a communication address.
+    pub fn comm(&self, matrix: &MlCoord, domain: usize) -> Option<PointId> {
+        self.comm_index.get(&(matrix.clone(), domain)).copied()
+    }
+
+    /// Resolve any address.
+    pub fn resolve(&self, addr: &Addr) -> Option<PointId> {
+        match addr {
+            Addr::Cell(c) => self.cell(c),
+            Addr::Comm { matrix, domain } => self.comm(matrix, *domain),
+        }
+    }
+
+    /// Recursive element retrieval on the tree itself (the paper's
+    /// `retrieve` interface). Returns `None` for holes / bad coords.
+    pub fn retrieve<'a>(&'a self, coord: &MlCoord) -> Option<&'a Element> {
+        let mut element: Option<&Element> = None;
+        let mut matrix = &self.root;
+        for (i, c) in coord.0.iter().enumerate() {
+            element = matrix.get(c);
+            match element {
+                Some(Element::Matrix(m)) => matrix = m,
+                Some(Element::Point(_)) if i + 1 == coord.0.len() => {}
+                _ if i + 1 < coord.0.len() => return None,
+                _ => {}
+            }
+        }
+        element
+    }
+
+    /// Shape of the matrix at `coord` (root = `MlCoord::root()`).
+    pub fn matrix_shape(&self, coord: &MlCoord) -> Option<&[usize]> {
+        self.matrix_shapes.get(coord).map(|v| v.as_slice())
+    }
+
+    /// All point ids of a given kind name ("compute", "memory", "dram",
+    /// "comm").
+    pub fn points_of_kind(&self, kind: &str) -> Vec<PointId> {
+        self.entries
+            .iter()
+            .filter(|e| e.point.kind.kind_name() == kind)
+            .map(|e| e.id)
+            .collect()
+    }
+
+    /// All point ids whose name matches `name` exactly.
+    pub fn points_named(&self, name: &str) -> Vec<PointId> {
+        self.entries
+            .iter()
+            .filter(|e| e.point.name == name)
+            .map(|e| e.id)
+            .collect()
+    }
+
+    /// Every point under the subtree rooted at `coord` (cell points and comm
+    /// points of nested matrices).
+    pub fn points_under(&self, coord: &MlCoord) -> Vec<PointId> {
+        self.entries
+            .iter()
+            .filter(|e| match &e.addr {
+                Addr::Cell(c) => coord.is_prefix_of(c),
+                Addr::Comm { matrix, .. } => coord.is_prefix_of(matrix),
+            })
+            .map(|e| e.id)
+            .collect()
+    }
+
+    pub fn sync_groups(&self) -> &[ResolvedSyncGroup] {
+        &self.sync_groups
+    }
+
+    /// Find the sync group (if any) with the given name declared anywhere.
+    pub fn sync_group(&self, name: &str) -> Option<&ResolvedSyncGroup> {
+        self.sync_groups.iter().find(|g| g.name == name)
+    }
+
+    // ------------------------------------------------------------------
+    // Cross-level routing (Figure 3)
+    // ------------------------------------------------------------------
+
+    /// Decompose a point-to-point transfer into within-level communication
+    /// segments — the paper's critical-coordinate path for `map_edge`.
+    ///
+    /// The route ascends from `src` to the lowest common ancestor matrix,
+    /// crosses it, and descends to `dst`. Each traversed matrix contributes
+    /// one segment on its communication domain `0`. Within an ascending /
+    /// descending matrix the boundary port is modeled at coordinate
+    /// `(0, …, 0)` of that level; within the common matrix the segment runs
+    /// between the two cells' coordinates at that level.
+    ///
+    /// Matrices without a communication point are skipped (their parent is
+    /// assumed to wire cells directly).
+    pub fn route(&self, src: &MlCoord, dst: &MlCoord) -> Vec<CommSegment> {
+        let common = src.common_depth(dst);
+        let mut segments = Vec::new();
+
+        // Ascend from src's innermost matrix up to (but excluding) the
+        // common matrix.
+        for depth in (common + 1..src.depth()).rev() {
+            let matrix_at = src.prefix(depth);
+            if let Some(seg) = self.level_segment(
+                &matrix_at,
+                src.level(depth).unwrap(),
+                &port_coord(self.matrix_shape(&matrix_at)),
+            ) {
+                segments.push(seg);
+            }
+        }
+
+        // Cross the common matrix (only if src and dst actually diverge
+        // there — always true unless one address prefixes the other).
+        let common_matrix = src.prefix(common);
+        if src.depth() > common && dst.depth() > common {
+            if let Some(seg) = self.level_segment(
+                &common_matrix,
+                src.level(common).unwrap(),
+                dst.level(common).unwrap(),
+            ) {
+                segments.push(seg);
+            }
+        }
+
+        // Descend into dst.
+        for depth in common + 1..dst.depth() {
+            let matrix_at = dst.prefix(depth);
+            if let Some(seg) = self.level_segment(
+                &matrix_at,
+                &port_coord(self.matrix_shape(&matrix_at)),
+                dst.level(depth).unwrap(),
+            ) {
+                segments.push(seg);
+            }
+        }
+
+        segments
+    }
+
+    fn level_segment(&self, matrix: &MlCoord, from: &Coord, to: &Coord) -> Option<CommSegment> {
+        let comm_id = self.comm(matrix, 0)?;
+        let shape = self.matrix_shape(matrix)?;
+        let attrs = self.point(comm_id).kind.as_comm()?;
+        let hops = attrs.topology.hops(from, to, shape);
+        Some(CommSegment {
+            comm: comm_id,
+            from: from.clone(),
+            to: to.clone(),
+            hops,
+        })
+    }
+}
+
+/// Boundary-port convention: coordinate (0, …, 0) of the level.
+fn port_coord(shape: Option<&[usize]>) -> Coord {
+    Coord(vec![0; shape.map(|s| s.len()).unwrap_or(1)])
+}
+
+fn collect_sync_groups(
+    m: &SpaceMatrix,
+    at: &MlCoord,
+    hw: &Hardware,
+    out: &mut Vec<ResolvedSyncGroup>,
+) {
+    for g in &m.sync_groups {
+        let member_coords: Vec<MlCoord> = match &g.members {
+            Some(cells) => cells.iter().map(|c| at.child(c.clone())).collect(),
+            None => m.iter_cells().map(|(c, _)| at.child(c)).collect(),
+        };
+        let mut points = Vec::new();
+        for mc in &member_coords {
+            points.extend(hw.points_under(mc));
+        }
+        points.sort();
+        points.dedup();
+        out.push(ResolvedSyncGroup {
+            matrix: at.clone(),
+            name: g.name.clone(),
+            points,
+        });
+    }
+    for (coord, element) in m.iter_cells() {
+        if let Element::Matrix(inner) = element {
+            collect_sync_groups(inner, &at.child(coord), hw, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::coord::mlc;
+    use crate::hwir::matrix::SyncGroup;
+    use crate::hwir::point::{CommAttrs, ComputeAttrs, MemoryAttrs};
+    use crate::hwir::topology::Topology;
+
+    /// board(2x1, ring) -> chip(2x2, mesh) -> cores; board cell (1,0) is a
+    /// bare DRAM point (mixed granularity).
+    fn sample_hw() -> Hardware {
+        let mut chip = SpaceMatrix::new("chip", vec![2, 2]);
+        for i in 0..2 {
+            for j in 0..2 {
+                chip.set(
+                    Coord::new(vec![i, j]),
+                    Element::Point(SpacePoint::compute(
+                        "core",
+                        ComputeAttrs::new((8, 8), 16),
+                    )),
+                );
+            }
+        }
+        chip.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 32.0, 1),
+        ));
+        chip.add_sync_group(SyncGroup {
+            name: "row0".into(),
+            members: Some(vec![Coord::new(vec![0, 0]), Coord::new(vec![0, 1])]),
+        });
+
+        let mut board = SpaceMatrix::new("board", vec![2, 1]);
+        board.set(Coord::new(vec![0, 0]), Element::Matrix(chip.clone()));
+        board.set(
+            Coord::new(vec![1, 0]),
+            Element::Point(SpacePoint::dram("dram", MemoryAttrs::new(1 << 33, 128.0, 100))),
+        );
+        board.add_comm(SpacePoint::comm(
+            "board-net",
+            CommAttrs::new(Topology::Ring, 16.0, 8),
+        ));
+        Hardware::build(board)
+    }
+
+    #[test]
+    fn registry_counts() {
+        let hw = sample_hw();
+        // 4 cores + 1 noc + 1 dram + 1 board-net
+        assert_eq!(hw.num_points(), 7);
+        assert_eq!(hw.points_of_kind("compute").len(), 4);
+        assert_eq!(hw.points_of_kind("comm").len(), 2);
+        assert_eq!(hw.points_of_kind("dram").len(), 1);
+    }
+
+    #[test]
+    fn cell_and_comm_lookup() {
+        let hw = sample_hw();
+        let core = hw.cell(&mlc(&[&[0, 0], &[1, 1]])).unwrap();
+        assert_eq!(hw.point(core).name, "core");
+        assert_eq!(
+            hw.entry(core).addr,
+            Addr::Cell(mlc(&[&[0, 0], &[1, 1]]))
+        );
+        let noc = hw.comm(&mlc(&[&[0, 0]]), 0).unwrap();
+        assert_eq!(hw.point(noc).name, "noc");
+        let bn = hw.comm(&MlCoord::root(), 0).unwrap();
+        assert_eq!(hw.point(bn).name, "board-net");
+        assert_eq!(hw.cell(&mlc(&[&[0, 0]])), None); // matrix, not a point
+        assert_eq!(hw.cell(&mlc(&[&[5, 0]])), None);
+    }
+
+    #[test]
+    fn retrieve_recursive() {
+        let hw = sample_hw();
+        match hw.retrieve(&mlc(&[&[0, 0]])) {
+            Some(Element::Matrix(m)) => assert_eq!(m.name, "chip"),
+            other => panic!("expected chip matrix, got {other:?}"),
+        }
+        match hw.retrieve(&mlc(&[&[0, 0], &[0, 1]])) {
+            Some(Element::Point(p)) => assert_eq!(p.name, "core"),
+            other => panic!("expected core, got {other:?}"),
+        }
+        assert!(hw.retrieve(&mlc(&[&[1, 0], &[0, 0]])).is_none()); // descends into a point
+    }
+
+    #[test]
+    fn points_under_subtree() {
+        let hw = sample_hw();
+        let under_chip = hw.points_under(&mlc(&[&[0, 0]]));
+        assert_eq!(under_chip.len(), 5); // 4 cores + noc
+        let all = hw.points_under(&MlCoord::root());
+        assert_eq!(all.len(), 7);
+    }
+
+    #[test]
+    fn sync_group_resolution() {
+        let hw = sample_hw();
+        let g = hw.sync_group("row0").unwrap();
+        assert_eq!(g.matrix, mlc(&[&[0, 0]]));
+        assert_eq!(g.points.len(), 2); // two cores, no comm points under cells
+    }
+
+    #[test]
+    fn route_within_level() {
+        let hw = sample_hw();
+        let segs = hw.route(&mlc(&[&[0, 0], &[0, 0]]), &mlc(&[&[0, 0], &[1, 1]]));
+        assert_eq!(segs.len(), 1);
+        let noc = hw.comm(&mlc(&[&[0, 0]]), 0).unwrap();
+        assert_eq!(segs[0].comm, noc);
+        assert_eq!(segs[0].hops, 2); // mesh manhattan (0,0)->(1,1)
+    }
+
+    #[test]
+    fn route_cross_level() {
+        let hw = sample_hw();
+        // core (0,0)->(0,1) on chip to DRAM at board cell (1,0):
+        // ascend chip noc: (0,1) -> port (0,0), then board-net (0,0)->(1,0).
+        let segs = hw.route(&mlc(&[&[0, 0], &[0, 1]]), &mlc(&[&[1, 0]]));
+        assert_eq!(segs.len(), 2);
+        assert_eq!(hw.point(segs[0].comm).name, "noc");
+        assert_eq!(segs[0].hops, 1);
+        assert_eq!(hw.point(segs[1].comm).name, "board-net");
+        assert_eq!(segs[1].hops, 1); // ring over 2 cells
+    }
+
+    #[test]
+    fn route_same_point_is_empty() {
+        let hw = sample_hw();
+        let a = mlc(&[&[0, 0], &[1, 0]]);
+        let segs = hw.route(&a, &a);
+        assert_eq!(segs.iter().map(|s| s.hops).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn prop_route_symmetric_hops() {
+        use crate::util::propcheck::{check, Gen};
+        let hw = sample_hw();
+        let cells: Vec<MlCoord> = hw
+            .entries()
+            .filter_map(|e| match &e.addr {
+                Addr::Cell(c) => Some(c.clone()),
+                _ => None,
+            })
+            .collect();
+        check("route hop-sum symmetric", 64, |g: &mut Gen| {
+            let a = g.pick(&cells).clone();
+            let b = g.pick(&cells).clone();
+            let ab: u64 = hw.route(&a, &b).iter().map(|s| s.hops).sum();
+            let ba: u64 = hw.route(&b, &a).iter().map(|s| s.hops).sum();
+            if ab == ba {
+                Ok(())
+            } else {
+                Err(format!("{a}->{b}: {ab} vs {ba}"))
+            }
+        });
+    }
+}

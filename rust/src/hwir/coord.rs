@@ -1,0 +1,277 @@
+//! Spatial coordinates.
+//!
+//! * [`Coord`] — a position *within one spatial level*, n-dimensional
+//!   (the paper's "(a, b, c)" tuples). The dimensionality must match the
+//!   owning `SpaceMatrix`.
+//! * [`MlCoord`] — a *multi-level* coordinate, the chain of per-level
+//!   coordinates from the outermost level inwards (the paper's
+//!   `((a,b,c) → (d,e))` notation, Figure 2/3).
+
+use std::fmt;
+
+/// Position inside a single spatial level (row-major semantics).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Coord(pub Vec<u32>);
+
+impl Coord {
+    pub fn new(dims: impl Into<Vec<u32>>) -> Self {
+        Coord(dims.into())
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Linearize against a shape (row-major). Returns `None` when the
+    /// dimensionality mismatches or any component is out of bounds.
+    pub fn linearize(&self, shape: &[usize]) -> Option<usize> {
+        if self.0.len() != shape.len() {
+            return None;
+        }
+        let mut idx = 0usize;
+        for (c, s) in self.0.iter().zip(shape) {
+            if *c as usize >= *s {
+                return None;
+            }
+            idx = idx * s + *c as usize;
+        }
+        Some(idx)
+    }
+
+    /// Inverse of [`Coord::linearize`].
+    pub fn from_linear(mut idx: usize, shape: &[usize]) -> Option<Coord> {
+        let total: usize = shape.iter().product();
+        if idx >= total.max(1) {
+            return None;
+        }
+        let mut out = vec![0u32; shape.len()];
+        for (slot, s) in out.iter_mut().zip(shape).rev() {
+            *slot = (idx % s) as u32;
+            idx /= s;
+        }
+        Some(Coord(out))
+    }
+
+    /// Manhattan distance between two coordinates of equal dimensionality.
+    pub fn manhattan(&self, other: &Coord) -> u64 {
+        assert_eq!(self.ndim(), other.ndim(), "dimension mismatch");
+        self.0
+            .iter()
+            .zip(&other.0)
+            .map(|(a, b)| (*a as i64 - *b as i64).unsigned_abs())
+            .sum()
+    }
+
+    /// Manhattan distance with per-dimension wraparound (torus topologies).
+    pub fn torus_distance(&self, other: &Coord, shape: &[usize]) -> u64 {
+        assert_eq!(self.ndim(), other.ndim(), "dimension mismatch");
+        assert_eq!(self.ndim(), shape.len(), "shape mismatch");
+        self.0
+            .iter()
+            .zip(&other.0)
+            .zip(shape)
+            .map(|((a, b), s)| {
+                let d = (*a as i64 - *b as i64).unsigned_abs();
+                d.min(*s as u64 - d)
+            })
+            .sum()
+    }
+}
+
+impl fmt::Display for Coord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{}", c)?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl From<Vec<u32>> for Coord {
+    fn from(v: Vec<u32>) -> Self {
+        Coord(v)
+    }
+}
+
+impl From<&[u32]> for Coord {
+    fn from(v: &[u32]) -> Self {
+        Coord(v.to_vec())
+    }
+}
+
+/// Multi-level coordinate: per-level positions, outermost first.
+///
+/// The empty `MlCoord` addresses the root `SpaceMatrix` itself.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct MlCoord(pub Vec<Coord>);
+
+impl MlCoord {
+    pub fn root() -> Self {
+        MlCoord(Vec::new())
+    }
+
+    pub fn new(levels: Vec<Coord>) -> Self {
+        MlCoord(levels)
+    }
+
+    /// Depth (number of levels descended from the root).
+    pub fn depth(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Extend by one inner-level coordinate.
+    pub fn child(&self, c: Coord) -> MlCoord {
+        let mut v = self.0.clone();
+        v.push(c);
+        MlCoord(v)
+    }
+
+    /// Drop the innermost level (`None` at the root).
+    pub fn parent(&self) -> Option<MlCoord> {
+        if self.0.is_empty() {
+            return None;
+        }
+        let mut v = self.0.clone();
+        v.pop();
+        Some(MlCoord(v))
+    }
+
+    /// Coordinate at level `i` (0 = outermost).
+    pub fn level(&self, i: usize) -> Option<&Coord> {
+        self.0.get(i)
+    }
+
+    /// Innermost coordinate.
+    pub fn leaf(&self) -> Option<&Coord> {
+        self.0.last()
+    }
+
+    /// Longest common prefix depth with another multi-level coordinate —
+    /// the level of the lowest common ancestor matrix.
+    pub fn common_depth(&self, other: &MlCoord) -> usize {
+        self.0
+            .iter()
+            .zip(&other.0)
+            .take_while(|(a, b)| a == b)
+            .count()
+    }
+
+    /// True if `self` is a (strict or equal) prefix of `other`.
+    pub fn is_prefix_of(&self, other: &MlCoord) -> bool {
+        self.0.len() <= other.0.len() && self.common_depth(other) == self.0.len()
+    }
+
+    /// Truncate to the outermost `depth` levels.
+    pub fn prefix(&self, depth: usize) -> MlCoord {
+        MlCoord(self.0[..depth.min(self.0.len())].to_vec())
+    }
+}
+
+impl fmt::Display for MlCoord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0.is_empty() {
+            return write!(f, "(root)");
+        }
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, "→")?;
+            }
+            write!(f, "{}", c)?;
+        }
+        Ok(())
+    }
+}
+
+impl From<Vec<Vec<u32>>> for MlCoord {
+    fn from(v: Vec<Vec<u32>>) -> Self {
+        MlCoord(v.into_iter().map(Coord).collect())
+    }
+}
+
+/// Convenience constructor: `mlc![[0,0],[1,2]]`-style via slices.
+pub fn mlc(levels: &[&[u32]]) -> MlCoord {
+    MlCoord(levels.iter().map(|l| Coord(l.to_vec())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linearize_roundtrip() {
+        let shape = [3usize, 4, 5];
+        for idx in 0..60 {
+            let c = Coord::from_linear(idx, &shape).unwrap();
+            assert_eq!(c.linearize(&shape), Some(idx));
+        }
+        assert_eq!(Coord::from_linear(60, &shape), None);
+        assert_eq!(Coord::new(vec![3, 0, 0]).linearize(&shape), None);
+        assert_eq!(Coord::new(vec![0, 0]).linearize(&shape), None);
+    }
+
+    #[test]
+    fn manhattan_and_torus() {
+        let a = Coord::new(vec![0, 0]);
+        let b = Coord::new(vec![3, 1]);
+        assert_eq!(a.manhattan(&b), 4);
+        // 4-wide torus: distance 3 wraps to 1.
+        assert_eq!(a.torus_distance(&b, &[4, 4]), 2);
+    }
+
+    #[test]
+    fn mlcoord_navigation() {
+        let m = mlc(&[&[0, 1], &[2, 3]]);
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.leaf(), Some(&Coord::new(vec![2, 3])));
+        assert_eq!(m.parent().unwrap(), mlc(&[&[0, 1]]));
+        assert_eq!(m.parent().unwrap().parent().unwrap(), MlCoord::root());
+        assert_eq!(MlCoord::root().parent(), None);
+        let child = m.child(Coord::new(vec![4]));
+        assert_eq!(child.depth(), 3);
+        assert!(m.is_prefix_of(&child));
+        assert!(!child.is_prefix_of(&m));
+    }
+
+    #[test]
+    fn common_depth() {
+        let a = mlc(&[&[0], &[1], &[2]]);
+        let b = mlc(&[&[0], &[1], &[3]]);
+        let c = mlc(&[&[1]]);
+        assert_eq!(a.common_depth(&b), 2);
+        assert_eq!(a.common_depth(&c), 0);
+        assert_eq!(a.common_depth(&a), 3);
+        assert_eq!(a.prefix(2), mlc(&[&[0], &[1]]));
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(mlc(&[&[0, 0], &[2, 1]]).to_string(), "(0,0)→(2,1)");
+        assert_eq!(MlCoord::root().to_string(), "(root)");
+    }
+
+    #[test]
+    fn prop_linearize_bijection() {
+        use crate::util::propcheck::{check, Gen};
+        check("coord linearize bijective", 128, |g: &mut Gen| {
+            let ndim = g.usize(1..=4);
+            let shape: Vec<usize> = (0..ndim).map(|_| g.usize(1..=6)).collect();
+            let total: usize = shape.iter().product();
+            let idx = g.usize(0..=total - 1);
+            let c = Coord::from_linear(idx, &shape).ok_or("from_linear failed")?;
+            if c.linearize(&shape) == Some(idx) {
+                Ok(())
+            } else {
+                Err(format!("roundtrip failed for {idx} in {shape:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,238 @@
+//! `SpaceMatrix` — the recursive, composable container of the hardware IR.
+//!
+//! A `SpaceMatrix` is a multidimensional container whose cells hold either
+//! further `SpaceMatrix`es or `SpacePoint`s (paper §4, Figure 1(c)). Cells
+//! of the same matrix may differ (heterogeneity) and may sit at different
+//! granularities (mixed-granularity modeling). Each matrix additionally owns
+//! its communication `SpacePoint`s (one per communication domain, e.g. NoC +
+//! a separate DMA bus) and any number of *virtual synchronization groups*
+//! (paper §5.1, Figure 4).
+
+use super::coord::Coord;
+use super::point::SpacePoint;
+
+/// One cell of a `SpaceMatrix`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Element {
+    Matrix(SpaceMatrix),
+    Point(SpacePoint),
+}
+
+impl Element {
+    pub fn as_matrix(&self) -> Option<&SpaceMatrix> {
+        match self {
+            Element::Matrix(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_point(&self) -> Option<&SpacePoint> {
+        match self {
+            Element::Point(p) => Some(p),
+            _ => None,
+        }
+    }
+}
+
+/// A virtual synchronization group: a named set of cells of this matrix that
+/// synchronize together when a multi-level time coordinate rolls over
+/// (paper §5.1). Groups may also span *all* cells (`members == None`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncGroup {
+    pub name: String,
+    /// Member cells (within-level coordinates); `None` = every cell.
+    pub members: Option<Vec<Coord>>,
+}
+
+/// Recursive container of hardware elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaceMatrix {
+    /// Level name (e.g. "board", "package", "chiplet", "core-array").
+    pub name: String,
+    /// Shape of the container; `dims.len()` is the coordinate
+    /// dimensionality of this level.
+    pub dims: Vec<usize>,
+    /// Cells in row-major order; `None` marks a hole (unpopulated socket).
+    pub cells: Vec<Option<Element>>,
+    /// Communication domains of this level (NoC, NoP, bus, ...).
+    pub comms: Vec<SpacePoint>,
+    /// Virtual synchronization groups over this level's cells.
+    pub sync_groups: Vec<SyncGroup>,
+}
+
+impl SpaceMatrix {
+    pub fn new(name: impl Into<String>, dims: Vec<usize>) -> Self {
+        let total: usize = dims.iter().product();
+        SpaceMatrix {
+            name: name.into(),
+            dims,
+            cells: vec![None; total],
+            comms: Vec::new(),
+            sync_groups: Vec::new(),
+        }
+    }
+
+    /// Total number of cell slots.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Set the cell at `coord`. Panics on out-of-shape coordinates
+    /// (construction-time programming error).
+    pub fn set(&mut self, coord: Coord, element: Element) {
+        let idx = coord
+            .linearize(&self.dims)
+            .unwrap_or_else(|| panic!("coord {coord} out of shape {:?}", self.dims));
+        self.cells[idx] = Some(element);
+    }
+
+    /// Get the cell at `coord` (None for holes or out-of-shape coords).
+    pub fn get(&self, coord: &Coord) -> Option<&Element> {
+        let idx = coord.linearize(&self.dims)?;
+        self.cells[idx].as_ref()
+    }
+
+    pub fn get_mut(&mut self, coord: &Coord) -> Option<&mut Element> {
+        let idx = coord.linearize(&self.dims)?;
+        self.cells[idx].as_mut()
+    }
+
+    /// Add a communication domain; returns its domain index.
+    pub fn add_comm(&mut self, comm: SpacePoint) -> usize {
+        assert!(comm.kind.is_comm(), "add_comm requires a Comm SpacePoint");
+        self.comms.push(comm);
+        self.comms.len() - 1
+    }
+
+    /// Add a virtual synchronization group; returns its index.
+    pub fn add_sync_group(&mut self, group: SyncGroup) -> usize {
+        self.sync_groups.push(group);
+        self.sync_groups.len() - 1
+    }
+
+    /// Iterate populated cells with their within-level coordinates.
+    pub fn iter_cells(&self) -> impl Iterator<Item = (Coord, &Element)> {
+        self.cells.iter().enumerate().filter_map(move |(i, c)| {
+            c.as_ref()
+                .map(|e| (Coord::from_linear(i, &self.dims).unwrap(), e))
+        })
+    }
+
+    /// Depth of the deepest spatial hierarchy under this matrix (a matrix of
+    /// points has depth 1).
+    pub fn depth(&self) -> usize {
+        1 + self
+            .iter_cells()
+            .map(|(_, e)| match e {
+                Element::Matrix(m) => m.depth(),
+                Element::Point(_) => 0,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total number of `SpacePoint`s in the subtree (cells + comm points).
+    pub fn count_points(&self) -> usize {
+        let cell_points: usize = self
+            .iter_cells()
+            .map(|(_, e)| match e {
+                Element::Matrix(m) => m.count_points(),
+                Element::Point(_) => 1,
+            })
+            .sum();
+        cell_points + self.comms.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::point::{CommAttrs, ComputeAttrs, MemoryAttrs};
+    use crate::hwir::topology::Topology;
+
+    fn core() -> SpacePoint {
+        SpacePoint::compute("core", ComputeAttrs::new((8, 8), 16))
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut m = SpaceMatrix::new("chip", vec![2, 3]);
+        m.set(Coord::new(vec![1, 2]), Element::Point(core()));
+        assert!(m.get(&Coord::new(vec![1, 2])).is_some());
+        assert!(m.get(&Coord::new(vec![0, 0])).is_none()); // hole
+        assert!(m.get(&Coord::new(vec![2, 0])).is_none()); // out of shape
+        assert_eq!(m.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of shape")]
+    fn set_out_of_shape_panics() {
+        let mut m = SpaceMatrix::new("chip", vec![2, 2]);
+        m.set(Coord::new(vec![2, 0]), Element::Point(core()));
+    }
+
+    #[test]
+    fn recursive_depth_and_count() {
+        // package(2x1) -> chip(2x2 of cores) ; one cell holds a bare point
+        // (mixed granularity).
+        let mut chip = SpaceMatrix::new("chip", vec![2, 2]);
+        for i in 0..2 {
+            for j in 0..2 {
+                chip.set(Coord::new(vec![i, j]), Element::Point(core()));
+            }
+        }
+        chip.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 32.0, 1),
+        ));
+
+        let mut pkg = SpaceMatrix::new("package", vec![2]);
+        pkg.set(Coord::new(vec![0]), Element::Matrix(chip));
+        pkg.set(
+            Coord::new(vec![1]),
+            Element::Point(SpacePoint::dram("hbm", MemoryAttrs::new(1 << 33, 256.0, 80))),
+        );
+        pkg.add_comm(SpacePoint::comm(
+            "nop",
+            CommAttrs::new(Topology::Bus, 64.0, 4),
+        ));
+
+        assert_eq!(pkg.depth(), 2);
+        // 4 cores + 1 noc + 1 hbm + 1 nop
+        assert_eq!(pkg.count_points(), 7);
+    }
+
+    #[test]
+    fn iter_cells_skips_holes() {
+        let mut m = SpaceMatrix::new("x", vec![2, 2]);
+        m.set(Coord::new(vec![0, 1]), Element::Point(core()));
+        m.set(Coord::new(vec![1, 0]), Element::Point(core()));
+        let coords: Vec<Coord> = m.iter_cells().map(|(c, _)| c).collect();
+        assert_eq!(
+            coords,
+            vec![Coord::new(vec![0, 1]), Coord::new(vec![1, 0])]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "add_comm requires")]
+    fn add_comm_rejects_non_comm() {
+        let mut m = SpaceMatrix::new("x", vec![1]);
+        m.add_comm(core());
+    }
+
+    #[test]
+    fn sync_groups() {
+        let mut m = SpaceMatrix::new("x", vec![4]);
+        let gid = m.add_sync_group(SyncGroup {
+            name: "left-half".into(),
+            members: Some(vec![Coord::new(vec![0]), Coord::new(vec![1])]),
+        });
+        assert_eq!(gid, 0);
+        assert_eq!(m.sync_groups[0].members.as_ref().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! Hardware intermediate representation (paper §4).
+//!
+//! Multi-level hardware is modeled as a recursive nesting of two data
+//! structures: [`SpaceMatrix`] (a multidimensional container of elements —
+//! further matrices or points) and [`SpacePoint`] (the finest-grained
+//! modeled element: compute, memory, DRAM, or a communication domain).
+//! [`Hardware::build`] recursively instantiates a matrix tree into an
+//! operable model with dense point ids, multi-level coordinates
+//! ([`MlCoord`]), sync-group resolution, and cross-level route computation.
+//! [`spec`] provides the declarative JSON form.
+
+pub mod builder;
+pub mod coord;
+pub mod matrix;
+pub mod point;
+pub mod spec;
+pub mod topology;
+
+pub use builder::{Addr, CommSegment, Hardware, PointEntry, PointId, ResolvedSyncGroup};
+pub use coord::{mlc, Coord, MlCoord};
+pub use matrix::{Element, SpaceMatrix, SyncGroup};
+pub use point::{CommAttrs, ComputeAttrs, MemoryAttrs, PointKind, SpacePoint};
+pub use spec::{parse_spec, to_spec, SpecError};
+pub use topology::Topology;

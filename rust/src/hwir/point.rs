@@ -1,0 +1,229 @@
+//! `SpacePoint` — the finest-grained modeled hardware element.
+//!
+//! A `SpacePoint` does not contain other elements (paper §4). It is one of:
+//! a compute unit, a memory, an external DRAM channel, or a communication
+//! domain (NoC/NoP/bus/...). Each point carries typed attributes consumed by
+//! the evaluators, and at simulation time owns a task queue (compute/comm)
+//! or a storage pool (memory) — those live in the simulator, not here.
+
+use super::topology::Topology;
+
+/// Typed attributes of a compute `SpacePoint`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputeAttrs {
+    /// Systolic array dimensions (rows, cols); `(0, 0)` when absent.
+    pub systolic: (u32, u32),
+    /// Vector unit lanes (FLOPs/cycle on vector work = 2 * lanes for FMA).
+    pub vector_lanes: u32,
+    /// MAC throughput of the systolic array per cycle (rows*cols) — derived.
+    pub macs_per_cycle: u64,
+    /// Local memory feeding this unit (DMC core SRAM; GSM L1+register
+    /// file). `None` models a pure ALU fed entirely by explicit transfers.
+    pub lmem: Option<MemoryAttrs>,
+}
+
+impl ComputeAttrs {
+    pub fn new(systolic: (u32, u32), vector_lanes: u32) -> Self {
+        ComputeAttrs {
+            systolic,
+            vector_lanes,
+            macs_per_cycle: systolic.0 as u64 * systolic.1 as u64,
+            lmem: None,
+        }
+    }
+
+    /// Attach a local memory.
+    pub fn with_lmem(mut self, lmem: MemoryAttrs) -> Self {
+        self.lmem = Some(lmem);
+        self
+    }
+
+    /// Peak matrix FLOPs/cycle (2 per MAC).
+    pub fn matrix_flops_per_cycle(&self) -> f64 {
+        2.0 * self.macs_per_cycle as f64
+    }
+
+    /// Peak vector FLOPs/cycle (2 per lane, FMA).
+    pub fn vector_flops_per_cycle(&self) -> f64 {
+        2.0 * self.vector_lanes as f64
+    }
+}
+
+/// Typed attributes of a memory `SpacePoint` (on-chip SRAM levels and DRAM).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryAttrs {
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// Bandwidth in bytes/cycle.
+    pub bandwidth: f64,
+    /// Access latency in cycles.
+    pub latency: u64,
+}
+
+impl MemoryAttrs {
+    pub fn new(capacity: u64, bandwidth: f64, latency: u64) -> Self {
+        MemoryAttrs {
+            capacity,
+            bandwidth,
+            latency,
+        }
+    }
+}
+
+/// Typed attributes of a communication `SpacePoint` (one communication
+/// domain of a `SpaceMatrix`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommAttrs {
+    pub topology: Topology,
+    /// Per-link bandwidth in bytes/cycle.
+    pub link_bandwidth: f64,
+    /// Per-hop latency in cycles.
+    pub link_latency: u64,
+}
+
+impl CommAttrs {
+    pub fn new(topology: Topology, link_bandwidth: f64, link_latency: u64) -> Self {
+        CommAttrs {
+            topology,
+            link_bandwidth,
+            link_latency,
+        }
+    }
+}
+
+/// The role + attributes of a `SpacePoint`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PointKind {
+    Compute(ComputeAttrs),
+    Memory(MemoryAttrs),
+    /// Off-chip DRAM attached at this level (modeled as a memory with
+    /// channel semantics: contended bandwidth).
+    Dram(MemoryAttrs),
+    Comm(CommAttrs),
+}
+
+impl PointKind {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            PointKind::Compute(_) => "compute",
+            PointKind::Memory(_) => "memory",
+            PointKind::Dram(_) => "dram",
+            PointKind::Comm(_) => "comm",
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, PointKind::Compute(_))
+    }
+    pub fn is_memory(&self) -> bool {
+        matches!(self, PointKind::Memory(_) | PointKind::Dram(_))
+    }
+    pub fn is_comm(&self) -> bool {
+        matches!(self, PointKind::Comm(_))
+    }
+
+    pub fn as_compute(&self) -> Option<&ComputeAttrs> {
+        match self {
+            PointKind::Compute(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_memory(&self) -> Option<&MemoryAttrs> {
+        match self {
+            PointKind::Memory(a) | PointKind::Dram(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_comm(&self) -> Option<&CommAttrs> {
+        match self {
+            PointKind::Comm(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// The finest-grained modeled hardware element.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpacePoint {
+    /// Human-readable role name (e.g. "core", "lmem", "noc", "dram").
+    pub name: String,
+    pub kind: PointKind,
+    /// Evaluator binding key; resolved by `eval::Registry`. Empty = default
+    /// evaluator for the kind.
+    pub evaluator: String,
+}
+
+impl SpacePoint {
+    pub fn compute(name: impl Into<String>, attrs: ComputeAttrs) -> Self {
+        SpacePoint {
+            name: name.into(),
+            kind: PointKind::Compute(attrs),
+            evaluator: String::new(),
+        }
+    }
+
+    pub fn memory(name: impl Into<String>, attrs: MemoryAttrs) -> Self {
+        SpacePoint {
+            name: name.into(),
+            kind: PointKind::Memory(attrs),
+            evaluator: String::new(),
+        }
+    }
+
+    pub fn dram(name: impl Into<String>, attrs: MemoryAttrs) -> Self {
+        SpacePoint {
+            name: name.into(),
+            kind: PointKind::Dram(attrs),
+            evaluator: String::new(),
+        }
+    }
+
+    pub fn comm(name: impl Into<String>, attrs: CommAttrs) -> Self {
+        SpacePoint {
+            name: name.into(),
+            kind: PointKind::Comm(attrs),
+            evaluator: String::new(),
+        }
+    }
+
+    pub fn with_evaluator(mut self, key: impl Into<String>) -> Self {
+        self.evaluator = key.into();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_attrs_derive_throughput() {
+        let a = ComputeAttrs::new((128, 128), 512);
+        assert_eq!(a.macs_per_cycle, 16384);
+        assert_eq!(a.matrix_flops_per_cycle(), 32768.0);
+        assert_eq!(a.vector_flops_per_cycle(), 1024.0);
+    }
+
+    #[test]
+    fn kind_predicates() {
+        let c = SpacePoint::compute("core", ComputeAttrs::new((4, 4), 8));
+        let m = SpacePoint::memory("lmem", MemoryAttrs::new(1 << 20, 64.0, 2));
+        let d = SpacePoint::dram("dram", MemoryAttrs::new(1 << 33, 128.0, 100));
+        let n = SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 32.0, 1),
+        );
+        assert!(c.kind.is_compute() && !c.kind.is_memory());
+        assert!(m.kind.is_memory() && d.kind.is_memory());
+        assert!(n.kind.is_comm());
+        assert_eq!(d.kind.kind_name(), "dram");
+        assert!(m.kind.as_memory().is_some());
+        assert!(m.kind.as_comm().is_none());
+    }
+
+    #[test]
+    fn evaluator_binding() {
+        let p = SpacePoint::compute("core", ComputeAttrs::new((2, 2), 4)).with_evaluator("pjrt");
+        assert_eq!(p.evaluator, "pjrt");
+    }
+}

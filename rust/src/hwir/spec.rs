@@ -1,0 +1,464 @@
+//! Declarative hardware description — the textual form of the hardware IR.
+//!
+//! A JSON document describes the recursive `SpaceMatrix` tree; the parser
+//! turns it into a [`SpaceMatrix`] which [`Hardware::build`] then
+//! instantiates. Example (a 2×2 chip of cores with a mesh NoC):
+//!
+//! ```json
+//! {
+//!   "matrix": {
+//!     "name": "chip", "dims": [2, 2],
+//!     "comms": [{"name": "noc", "topology": "mesh",
+//!                "link_bandwidth": 32, "link_latency": 1}],
+//!     "fill": {"point": {"name": "core", "kind": "compute",
+//!                        "systolic": [8, 8], "vector_lanes": 16}},
+//!     "cells": [{"at": [0, 1], "point": {"name": "io", "kind": "memory",
+//!                "capacity": 1048576, "bandwidth": 64, "latency": 2}}],
+//!     "sync_groups": [{"name": "all", "members": null}]
+//!   }
+//! }
+//! ```
+//!
+//! * `fill` gives a default element stamped into every cell; `cells`
+//!   overrides individual coordinates (heterogeneity). `"hole": true` in a
+//!   cell override leaves the socket empty.
+//! * Cell elements are either `{"point": …}` or `{"matrix": …}` (recursion,
+//!   mixed granularity is free).
+
+use crate::util::json::{Json, JsonError};
+
+use super::coord::Coord;
+use super::matrix::{Element, SpaceMatrix, SyncGroup};
+use super::point::{CommAttrs, ComputeAttrs, MemoryAttrs, PointKind, SpacePoint};
+use super::topology::Topology;
+
+/// Spec parsing error.
+#[derive(Debug)]
+pub struct SpecError(pub String);
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "hardware spec error: {}", self.0)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl From<JsonError> for SpecError {
+    fn from(e: JsonError) -> Self {
+        SpecError(e.to_string())
+    }
+}
+
+type Result<T> = std::result::Result<T, SpecError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(SpecError(msg.into()))
+}
+
+/// Parse a JSON hardware spec into a `SpaceMatrix` tree.
+pub fn parse_spec(text: &str) -> Result<SpaceMatrix> {
+    let root = Json::parse(text)?;
+    let m = root
+        .get("matrix")
+        .ok_or_else(|| SpecError("top level must contain \"matrix\"".into()))?;
+    parse_matrix(m)
+}
+
+fn parse_matrix(j: &Json) -> Result<SpaceMatrix> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("matrix")
+        .to_string();
+    let dims: Vec<usize> = match j.get("dims").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|d| d.as_usize().ok_or(SpecError("dims must be integers".into())))
+            .collect::<Result<_>>()?,
+        None => return err(format!("matrix '{name}' missing dims")),
+    };
+    if dims.is_empty() || dims.iter().any(|d| *d == 0) {
+        return err(format!("matrix '{name}' has empty/zero dims {dims:?}"));
+    }
+    let mut m = SpaceMatrix::new(name.clone(), dims.clone());
+
+    if let Some(comms) = j.get("comms").and_then(Json::as_arr) {
+        for c in comms {
+            m.add_comm(parse_comm_point(c)?);
+        }
+    }
+
+    // Default fill.
+    if let Some(fill) = j.get("fill") {
+        let proto = parse_element(fill)?;
+        let total: usize = dims.iter().product();
+        for idx in 0..total {
+            let coord = Coord::from_linear(idx, &dims).unwrap();
+            m.set(coord, proto.clone());
+        }
+    }
+
+    // Per-cell overrides.
+    if let Some(cells) = j.get("cells").and_then(Json::as_arr) {
+        for cell in cells {
+            let at = cell
+                .get("at")
+                .and_then(Json::as_arr)
+                .ok_or(SpecError("cell override missing \"at\"".into()))?;
+            let coord = Coord(
+                at.iter()
+                    .map(|v| v.as_u64().map(|x| x as u32))
+                    .collect::<Option<Vec<u32>>>()
+                    .ok_or(SpecError("cell \"at\" must be integers".into()))?,
+            );
+            if coord.linearize(&dims).is_none() {
+                return err(format!("cell {coord} out of shape {dims:?} in '{name}'"));
+            }
+            if cell.get("hole").and_then(Json::as_bool) == Some(true) {
+                let idx = coord.linearize(&dims).unwrap();
+                m.cells[idx] = None;
+            } else {
+                m.set(coord, parse_element(cell)?);
+            }
+        }
+    }
+
+    if let Some(groups) = j.get("sync_groups").and_then(Json::as_arr) {
+        for g in groups {
+            let gname = g
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or(SpecError("sync group missing name".into()))?
+                .to_string();
+            let members = match g.get("members") {
+                None | Some(Json::Null) => None,
+                Some(Json::Arr(items)) => Some(
+                    items
+                        .iter()
+                        .map(|it| {
+                            it.as_arr()
+                                .and_then(|a| {
+                                    a.iter()
+                                        .map(|v| v.as_u64().map(|x| x as u32))
+                                        .collect::<Option<Vec<u32>>>()
+                                })
+                                .map(Coord)
+                                .ok_or(SpecError("sync group member must be a coord".into()))
+                        })
+                        .collect::<Result<Vec<Coord>>>()?,
+                ),
+                _ => return err("sync group members must be an array or null"),
+            };
+            m.add_sync_group(SyncGroup {
+                name: gname,
+                members,
+            });
+        }
+    }
+
+    Ok(m)
+}
+
+fn parse_element(j: &Json) -> Result<Element> {
+    if let Some(p) = j.get("point") {
+        Ok(Element::Point(parse_point(p)?))
+    } else if let Some(inner) = j.get("matrix") {
+        Ok(Element::Matrix(parse_matrix(inner)?))
+    } else {
+        err("element must contain \"point\" or \"matrix\"")
+    }
+}
+
+fn parse_point(j: &Json) -> Result<SpacePoint> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("point")
+        .to_string();
+    let kind = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or(SpecError(format!("point '{name}' missing kind")))?;
+    let f = |key: &str| j.get(key).and_then(Json::as_f64);
+    let u = |key: &str| j.get(key).and_then(Json::as_u64);
+
+    let kind = match kind {
+        "compute" => {
+            let systolic = match j.get("systolic").and_then(Json::as_arr) {
+                Some([r, c]) => (
+                    r.as_u64().unwrap_or(0) as u32,
+                    c.as_u64().unwrap_or(0) as u32,
+                ),
+                _ => (0, 0),
+            };
+            let lanes = u("vector_lanes").unwrap_or(0) as u32;
+            let mut attrs = ComputeAttrs::new(systolic, lanes);
+            if let Some(lm) = j.get("lmem") {
+                attrs = attrs.with_lmem(MemoryAttrs::new(
+                    lm.get("capacity")
+                        .and_then(Json::as_u64)
+                        .ok_or(SpecError(format!("lmem of '{name}' missing capacity")))?,
+                    lm.get("bandwidth")
+                        .and_then(Json::as_f64)
+                        .ok_or(SpecError(format!("lmem of '{name}' missing bandwidth")))?,
+                    lm.get("latency").and_then(Json::as_u64).unwrap_or(1),
+                ));
+            }
+            PointKind::Compute(attrs)
+        }
+        "memory" | "dram" => {
+            let attrs = MemoryAttrs::new(
+                u("capacity").ok_or(SpecError(format!("memory '{name}' missing capacity")))?,
+                f("bandwidth").ok_or(SpecError(format!("memory '{name}' missing bandwidth")))?,
+                u("latency").unwrap_or(1),
+            );
+            if kind == "dram" {
+                PointKind::Dram(attrs)
+            } else {
+                PointKind::Memory(attrs)
+            }
+        }
+        other => return err(format!("unknown point kind '{other}'")),
+    };
+    let mut p = SpacePoint {
+        name,
+        kind,
+        evaluator: String::new(),
+    };
+    if let Some(e) = j.get("evaluator").and_then(Json::as_str) {
+        p.evaluator = e.to_string();
+    }
+    Ok(p)
+}
+
+fn parse_comm_point(j: &Json) -> Result<SpacePoint> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .unwrap_or("comm")
+        .to_string();
+    let topo_name = j
+        .get("topology")
+        .and_then(Json::as_str)
+        .ok_or(SpecError(format!("comm '{name}' missing topology")))?;
+    let topology = Topology::parse(topo_name)
+        .ok_or(SpecError(format!("unknown topology '{topo_name}'")))?;
+    let bw = j
+        .get("link_bandwidth")
+        .and_then(Json::as_f64)
+        .ok_or(SpecError(format!("comm '{name}' missing link_bandwidth")))?;
+    let lat = j.get("link_latency").and_then(Json::as_u64).unwrap_or(1);
+    let mut p = SpacePoint::comm(name, CommAttrs::new(topology, bw, lat));
+    if let Some(e) = j.get("evaluator").and_then(Json::as_str) {
+        p.evaluator = e.to_string();
+    }
+    Ok(p)
+}
+
+/// Serialize a `SpaceMatrix` tree back to its JSON spec form (round-trip
+/// support for generated architectures and reports).
+pub fn to_spec(m: &SpaceMatrix) -> Json {
+    let mut top = crate::util::json::JsonObj::new();
+    top.insert("matrix", matrix_to_json(m));
+    Json::Obj(top)
+}
+
+fn matrix_to_json(m: &SpaceMatrix) -> Json {
+    use crate::util::json::JsonObj;
+    let mut o = JsonObj::new();
+    o.insert("name", m.name.as_str().into());
+    o.insert(
+        "dims",
+        Json::Arr(m.dims.iter().map(|d| (*d).into()).collect()),
+    );
+    if !m.comms.is_empty() {
+        o.insert(
+            "comms",
+            Json::Arr(m.comms.iter().map(comm_to_json).collect()),
+        );
+    }
+    let cells: Vec<Json> = m
+        .iter_cells()
+        .map(|(c, e)| {
+            let mut co = JsonObj::new();
+            co.insert(
+                "at",
+                Json::Arr(c.0.iter().map(|v| (*v as u64).into()).collect()),
+            );
+            match e {
+                Element::Point(p) => co.insert("point", point_to_json(p)),
+                Element::Matrix(inner) => co.insert("matrix", matrix_to_json(inner)),
+            }
+            Json::Obj(co)
+        })
+        .collect();
+    if !cells.is_empty() {
+        o.insert("cells", Json::Arr(cells));
+    }
+    if !m.sync_groups.is_empty() {
+        o.insert(
+            "sync_groups",
+            Json::Arr(
+                m.sync_groups
+                    .iter()
+                    .map(|g| {
+                        let mut go = JsonObj::new();
+                        go.insert("name", g.name.as_str().into());
+                        go.insert(
+                            "members",
+                            match &g.members {
+                                None => Json::Null,
+                                Some(cells) => Json::Arr(
+                                    cells
+                                        .iter()
+                                        .map(|c| {
+                                            Json::Arr(
+                                                c.0.iter().map(|v| (*v as u64).into()).collect(),
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            },
+                        );
+                        Json::Obj(go)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    Json::Obj(o)
+}
+
+fn point_to_json(p: &SpacePoint) -> Json {
+    use crate::util::json::JsonObj;
+    let mut o = JsonObj::new();
+    o.insert("name", p.name.as_str().into());
+    o.insert("kind", p.kind.kind_name().into());
+    match &p.kind {
+        PointKind::Compute(a) => {
+            o.insert(
+                "systolic",
+                Json::Arr(vec![(a.systolic.0 as u64).into(), (a.systolic.1 as u64).into()]),
+            );
+            o.insert("vector_lanes", (a.vector_lanes as u64).into());
+            if let Some(lm) = &a.lmem {
+                let mut lo = JsonObj::new();
+                lo.insert("capacity", lm.capacity.into());
+                lo.insert("bandwidth", lm.bandwidth.into());
+                lo.insert("latency", lm.latency.into());
+                o.insert("lmem", Json::Obj(lo));
+            }
+        }
+        PointKind::Memory(a) | PointKind::Dram(a) => {
+            o.insert("capacity", a.capacity.into());
+            o.insert("bandwidth", a.bandwidth.into());
+            o.insert("latency", a.latency.into());
+        }
+        PointKind::Comm(_) => unreachable!("comm points serialized via comm_to_json"),
+    }
+    if !p.evaluator.is_empty() {
+        o.insert("evaluator", p.evaluator.as_str().into());
+    }
+    Json::Obj(o)
+}
+
+fn comm_to_json(p: &SpacePoint) -> Json {
+    use crate::util::json::JsonObj;
+    let mut o = JsonObj::new();
+    let a = p.kind.as_comm().expect("comm point");
+    o.insert("name", p.name.as_str().into());
+    o.insert("topology", a.topology.name().into());
+    o.insert("link_bandwidth", a.link_bandwidth.into());
+    o.insert("link_latency", a.link_latency.into());
+    if !p.evaluator.is_empty() {
+        o.insert("evaluator", p.evaluator.as_str().into());
+    }
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::builder::Hardware;
+    use crate::hwir::coord::mlc;
+
+    const CHIP: &str = r#"{
+      "matrix": {
+        "name": "chip", "dims": [2, 2],
+        "comms": [{"name": "noc", "topology": "mesh",
+                   "link_bandwidth": 32, "link_latency": 1}],
+        "fill": {"point": {"name": "core", "kind": "compute",
+                           "systolic": [8, 8], "vector_lanes": 16}},
+        "cells": [{"at": [0, 1], "point": {"name": "sram", "kind": "memory",
+                   "capacity": 1048576, "bandwidth": 64, "latency": 2}}],
+        "sync_groups": [{"name": "all", "members": null}]
+      }
+    }"#;
+
+    #[test]
+    fn parse_flat_chip() {
+        let m = parse_spec(CHIP).unwrap();
+        assert_eq!(m.name, "chip");
+        assert_eq!(m.dims, vec![2, 2]);
+        assert_eq!(m.comms.len(), 1);
+        let hw = Hardware::build(m);
+        assert_eq!(hw.points_of_kind("compute").len(), 3); // one cell overridden
+        assert_eq!(hw.points_of_kind("memory").len(), 1);
+        let g = hw.sync_group("all").unwrap();
+        assert_eq!(g.points.len(), 4);
+    }
+
+    #[test]
+    fn parse_nested_with_hole() {
+        let spec = r#"{
+          "matrix": {
+            "name": "board", "dims": [3],
+            "comms": [{"name": "bn", "topology": "ring", "link_bandwidth": 8}],
+            "fill": {"matrix": {
+              "name": "chip", "dims": [2],
+              "fill": {"point": {"name": "core", "kind": "compute",
+                                 "systolic": [4, 4]}}
+            }},
+            "cells": [{"at": [2], "hole": true}]
+          }
+        }"#;
+        let hw = Hardware::build(parse_spec(spec).unwrap());
+        assert_eq!(hw.points_of_kind("compute").len(), 4); // 2 chips * 2 cores
+        assert!(hw.retrieve(&mlc(&[&[2]])).is_none());
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_spec("{}").is_err());
+        assert!(parse_spec(r#"{"matrix": {"name": "x"}}"#).is_err()); // no dims
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [1], "fill": {"point": {"kind": "bogus"}}}}"#
+        )
+        .is_err());
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [1], "cells": [{"at": [5], "point":
+                {"kind": "compute"}}]}}"#
+        )
+        .is_err()); // out of shape
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [1], "comms": [{"topology": "warp"}]}}"#
+        )
+        .is_err()); // unknown topology
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        let m = parse_spec(CHIP).unwrap();
+        let j = to_spec(&m).to_string();
+        let m2 = parse_spec(&j).unwrap();
+        // fill was materialized, so compare built hardware point sets
+        let h1 = Hardware::build(m);
+        let h2 = Hardware::build(m2);
+        assert_eq!(h1.num_points(), h2.num_points());
+        for (a, b) in h1.entries().zip(h2.entries()) {
+            assert_eq!(a.addr, b.addr);
+            assert_eq!(a.point, b.point);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Within-level interconnect topologies.
+//!
+//! Each `SpaceMatrix` carries one or more communication `SpacePoint`s whose
+//! [`Topology`] determines hop distance between cells of that level. Hop
+//! distance feeds the communication evaluator: a transfer over a comm point
+//! costs `hops * link_latency + bytes / link_bw` (before contention, which
+//! the scheduler resolves dynamically).
+
+use super::coord::Coord;
+
+/// Interconnect pattern of one spatial level.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Topology {
+    /// n-dimensional mesh; hop count is Manhattan distance.
+    Mesh,
+    /// n-dimensional torus; Manhattan with wraparound.
+    Torus,
+    /// Shared bus; every transfer is one hop and all transfers contend.
+    Bus,
+    /// All-to-all links; one hop, per-pair links (no shared contention
+    /// beyond endpoint ports).
+    FullyConnected,
+    /// Ring over the row-major linearization of the level.
+    Ring,
+    /// Balanced fan-out tree over the row-major linearization; hop count is
+    /// the up-down path length through the lowest common ancestor.
+    Tree { fanout: usize },
+}
+
+impl Topology {
+    /// Parse from the spec string form.
+    pub fn parse(s: &str) -> Option<Topology> {
+        Some(match s {
+            "mesh" | "mesh2d" | "mesh3d" => Topology::Mesh,
+            "torus" | "torus2d" | "torus3d" => Topology::Torus,
+            "bus" => Topology::Bus,
+            "fully_connected" | "all_to_all" | "crossbar" => Topology::FullyConnected,
+            "ring" => Topology::Ring,
+            "tree" => Topology::Tree { fanout: 2 },
+            "tree4" => Topology::Tree { fanout: 4 },
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Mesh => "mesh",
+            Topology::Torus => "torus",
+            Topology::Bus => "bus",
+            Topology::FullyConnected => "fully_connected",
+            Topology::Ring => "ring",
+            Topology::Tree { .. } => "tree",
+        }
+    }
+
+    /// Hop count between two cells of a level with the given shape.
+    ///
+    /// Both coordinates must be valid for `shape`. A zero-distance transfer
+    /// (same cell) is 0 hops.
+    pub fn hops(&self, a: &Coord, b: &Coord, shape: &[usize]) -> u64 {
+        if a == b {
+            return 0;
+        }
+        match self {
+            Topology::Mesh => a.manhattan(b),
+            Topology::Torus => a.torus_distance(b, shape),
+            Topology::Bus => 1,
+            Topology::FullyConnected => 1,
+            Topology::Ring => {
+                let n: usize = shape.iter().product();
+                let ia = a.linearize(shape).expect("coord out of shape") as i64;
+                let ib = b.linearize(shape).expect("coord out of shape") as i64;
+                let d = (ia - ib).unsigned_abs();
+                d.min(n as u64 - d)
+            }
+            Topology::Tree { fanout } => {
+                let ia = a.linearize(shape).expect("coord out of shape");
+                let ib = b.linearize(shape).expect("coord out of shape");
+                tree_hops(ia, ib, *fanout)
+            }
+        }
+    }
+
+    /// Worst-case hop count (network diameter) for a level shape.
+    pub fn diameter(&self, shape: &[usize]) -> u64 {
+        match self {
+            Topology::Mesh => shape.iter().map(|s| (s - 1) as u64).sum(),
+            Topology::Torus => shape.iter().map(|s| (s / 2) as u64).sum(),
+            Topology::Bus | Topology::FullyConnected => 1,
+            Topology::Ring => (shape.iter().product::<usize>() / 2) as u64,
+            Topology::Tree { fanout } => {
+                let n = shape.iter().product::<usize>();
+                2 * tree_depth(n, *fanout)
+            }
+        }
+    }
+
+    /// Bisection link count (used by contention-free aggregate bandwidth
+    /// estimates in reports).
+    pub fn bisection_links(&self, shape: &[usize]) -> u64 {
+        let n: u64 = shape.iter().product::<usize>() as u64;
+        match self {
+            // cut across the largest dimension
+            Topology::Mesh => n / shape.iter().max().copied().unwrap_or(1) as u64,
+            Topology::Torus => 2 * n / shape.iter().max().copied().unwrap_or(1) as u64,
+            Topology::Bus => 1,
+            Topology::FullyConnected => (n / 2) * (n - n / 2),
+            Topology::Ring => 2,
+            Topology::Tree { .. } => 1,
+        }
+    }
+}
+
+fn tree_depth(n: usize, fanout: usize) -> u64 {
+    // depth of a balanced fanout-ary tree with n leaves
+    let mut depth = 0u64;
+    let mut span = 1usize;
+    while span < n {
+        span *= fanout.max(2);
+        depth += 1;
+    }
+    depth
+}
+
+fn tree_hops(mut a: usize, mut b: usize, fanout: usize) -> u64 {
+    let f = fanout.max(2);
+    let mut hops = 0u64;
+    while a != b {
+        a /= f;
+        b /= f;
+        hops += 2;
+    }
+    hops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::coord::Coord;
+
+    fn c(v: &[u32]) -> Coord {
+        Coord(v.to_vec())
+    }
+
+    #[test]
+    fn mesh_hops() {
+        let t = Topology::Mesh;
+        assert_eq!(t.hops(&c(&[0, 0]), &c(&[2, 3]), &[4, 4]), 5);
+        assert_eq!(t.hops(&c(&[1, 1]), &c(&[1, 1]), &[4, 4]), 0);
+        assert_eq!(t.diameter(&[4, 4]), 6);
+    }
+
+    #[test]
+    fn torus_hops_wrap() {
+        let t = Topology::Torus;
+        assert_eq!(t.hops(&c(&[0]), &c(&[3]), &[4]), 1);
+        assert_eq!(t.diameter(&[4, 4]), 4);
+    }
+
+    #[test]
+    fn ring_hops() {
+        let t = Topology::Ring;
+        // 8-node ring laid out as [2,4]: linear idx 0 and 7 are adjacent.
+        assert_eq!(t.hops(&c(&[0, 0]), &c(&[1, 3]), &[2, 4]), 1);
+        assert_eq!(t.hops(&c(&[0, 0]), &c(&[1, 0]), &[2, 4]), 4);
+    }
+
+    #[test]
+    fn bus_and_fc() {
+        assert_eq!(Topology::Bus.hops(&c(&[0]), &c(&[5]), &[8]), 1);
+        assert_eq!(Topology::FullyConnected.hops(&c(&[0]), &c(&[5]), &[8]), 1);
+    }
+
+    #[test]
+    fn tree_hops_via_lca() {
+        let t = Topology::Tree { fanout: 2 };
+        // leaves 0 and 1 share a parent: up+down = 2
+        assert_eq!(t.hops(&c(&[0]), &c(&[1]), &[8]), 2);
+        // leaves 0 and 7 of an 8-leaf binary tree: 3 up + 3 down
+        assert_eq!(t.hops(&c(&[0]), &c(&[7]), &[8]), 6);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Topology::parse("mesh2d"), Some(Topology::Mesh));
+        assert_eq!(Topology::parse("torus"), Some(Topology::Torus));
+        assert_eq!(Topology::parse("tree4"), Some(Topology::Tree { fanout: 4 }));
+        assert_eq!(Topology::parse("nope"), None);
+    }
+
+    #[test]
+    fn prop_hops_symmetric_and_triangle_mesh() {
+        use crate::util::propcheck::{check, Gen};
+        check("mesh hops: symmetry + identity", 128, |g: &mut Gen| {
+            let shape = vec![g.usize(1..=5), g.usize(1..=5)];
+            let total: usize = shape.iter().product();
+            let a = Coord::from_linear(g.usize(0..=total - 1), &shape).unwrap();
+            let b = Coord::from_linear(g.usize(0..=total - 1), &shape).unwrap();
+            for topo in [Topology::Mesh, Topology::Torus, Topology::Ring] {
+                if topo.hops(&a, &b, &shape) != topo.hops(&b, &a, &shape) {
+                    return Err(format!("{topo:?} asymmetric for {a} {b}"));
+                }
+                if topo.hops(&a, &a, &shape) != 0 {
+                    return Err(format!("{topo:?} nonzero self-distance"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # MLDSE — Multi-Level Design Space Explorer
+//!
+//! A meta-DSE infrastructure for multi-level hardware, reproducing
+//! *"MLDSE: Scaling Design Space Exploration Infrastructure for Multi-Level
+//! Hardware"* (CS.AR 2025).
+//!
+//! The crate is organised around the paper's three pillars:
+//!
+//! * **Modeling** — [`hwir`]: a recursive hardware IR (`SpaceMatrix` /
+//!   `SpacePoint`) that can describe arbitrary multi-level hardware with
+//!   mixed granularity, plus a hardware builder and topology models.
+//! * **Mapping** — [`taskgraph`] + [`mapping`]: a spatiotemporal mapping IR
+//!   over tensor-granularity task graphs and the paper's sixteen mapping
+//!   primitives (Table 1), including cross-level communication decomposition
+//!   and hierarchical synchronization with multi-level space-time
+//!   coordinates.
+//! * **Simulation** — [`sim`]: JIT-generated task-level event-driven
+//!   simulation with the hardware-consistent scheduler (Algorithm 1) that
+//!   resolves general task-level resource contention, plus pluggable
+//!   per-`SpacePoint` evaluators ([`eval`]) including a PJRT-backed one
+//!   executing the AOT-compiled JAX/Pallas evaluator ([`runtime`]).
+//!
+//! On top sit the architecture templates ([`arch`]), cost models ([`cost`]),
+//! LLM workload generators ([`workloads`]) and the three-tier DSE engine
+//! ([`dse`]) orchestrated by the [`coordinator`].
+
+pub mod util;
+pub mod hwir;
+pub mod taskgraph;
+pub mod mapping;
+pub mod eval;
+pub mod sim;
+pub mod arch;
+pub mod cost;
+pub mod workloads;
+pub mod dse;
+pub mod runtime;
+pub mod coordinator;

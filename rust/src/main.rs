@@ -1,0 +1,262 @@
+//! `mldse` — command-line interface to the MLDSE infrastructure.
+//!
+//! ```text
+//! mldse info                                   artifact + registry status
+//! mldse simulate --arch dmc|gsm [--config N] [--seq N] [--pjrt] [--json]
+//! mldse decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N]
+//! mldse experiment <name>|all [--quick] [--csv]
+//! mldse hardware --spec FILE                   build + describe a spec
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+
+use std::process::ExitCode;
+
+use mldse::arch::{DmcParams, GsmParams, MpmcParams};
+use mldse::coordinator::{Coordinator, EXPERIMENTS};
+use mldse::cost::Packaging;
+use mldse::sim::SimConfig;
+use mldse::util::json::{Json, JsonObj};
+use mldse::workloads::{
+    dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig,
+};
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn bool_flag(&self, name: &str) -> bool {
+        self.flag(name) == Some("true")
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flag(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return ExitCode::FAILURE;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(),
+        "simulate" => cmd_simulate(&args),
+        "decode" => cmd_decode(&args),
+        "experiment" => cmd_experiment(&args),
+        "hardware" => cmd_hardware(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "mldse — Multi-Level Design Space Explorer\n\
+         \n\
+         commands:\n\
+           info                                  runtime + artifact status\n\
+           simulate --arch dmc|gsm [--config 1-4] [--seq N] [--pjrt] [--json] [--trace out.json]\n\
+           decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N] [--packaging mcm|2.5d]\n\
+           experiment <{}>|all [--quick] [--csv]\n\
+           hardware --spec FILE.json\n",
+        EXPERIMENTS.join("|")
+    );
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("mldse {}", env!("CARGO_PKG_VERSION"));
+    let art = mldse::runtime::artifacts_dir();
+    println!("artifacts dir: {}", art.display());
+    let eval_art = art.join("evaluator_b128.hlo.txt");
+    println!(
+        "evaluator artifact: {}",
+        if eval_art.exists() { "present" } else { "MISSING (run `make artifacts`)" }
+    );
+    if eval_art.exists() {
+        match Coordinator::with_pjrt() {
+            Ok(_) => println!("PJRT runtime: ok"),
+            Err(e) => println!("PJRT runtime: FAILED ({e:#})"),
+        }
+    }
+    println!("experiments: {}", EXPERIMENTS.join(", "));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let arch = args.flag("arch").unwrap_or("dmc");
+    let config = args.num("config", 2usize);
+    let seq = args.num("seq", 2048u32);
+    let cfg = LlmConfig::gpt3_6_7b();
+    let workload = match arch {
+        "dmc" => dmc_prefill(&cfg, seq, &DmcParams::table2(config)),
+        "gsm" => gsm_prefill(&cfg, seq, &GsmParams::table2(config)),
+        other => anyhow::bail!("unknown arch '{other}'"),
+    };
+    let coord = if args.bool_flag("pjrt") {
+        Coordinator::with_pjrt()?
+    } else {
+        Coordinator::standard()
+    };
+    let sim_cfg = SimConfig {
+        iterations: args.num("iterations", 1u32),
+        collect_timeline: args.flag("trace").is_some(),
+        ..Default::default()
+    };
+    let r = if args.bool_flag("pjrt") {
+        coord.simulate_pjrt(&workload, &sim_cfg)?
+    } else {
+        coord.simulate(&workload, &sim_cfg)?
+    };
+    if args.bool_flag("json") {
+        let mut o = JsonObj::new();
+        o.insert("workload", workload.name.as_str().into());
+        o.insert("makespan_cycles", r.makespan.into());
+        o.insert("tasks_completed", r.completed.into());
+        o.insert("truncations", r.truncations.into());
+        o.insert(
+            "notes",
+            Json::Arr(workload.notes.iter().map(|n| n.as_str().into()).collect()),
+        );
+        println!("{}", Json::Obj(o).to_pretty());
+    } else {
+        println!("workload: {}", workload.name);
+        for n in &workload.notes {
+            println!("  note: {n}");
+        }
+        println!("makespan: {:.0} cycles", r.makespan);
+        println!("tasks: {} completed, {} unfinished", r.completed, r.unfinished);
+        println!("contention truncations: {}", r.truncations);
+        println!(
+            "energy: {:.3} mJ (avg power {:.1} W @1GHz)",
+            r.total_energy() * 1e-9,
+            r.avg_power_w(1.0)
+        );
+        if let Some((h, m)) = coord.pjrt_stats() {
+            println!("pjrt cache: {h} hits / {m} misses");
+        }
+    }
+    if let Some(path) = args.flag("trace") {
+        let doc = mldse::sim::chrome_trace(&r, &workload.hw, &workload.graph);
+        std::fs::write(path, doc.to_pretty())?;
+        eprintln!("wrote Chrome trace to {path} (open in chrome://tracing)");
+    }
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+    let mode = args.flag("mode").unwrap_or("spatial");
+    let pos = args.num("pos", 2048u32);
+    let layers = args.num("layers", 8u32);
+    let cfg = LlmConfig::gpt3_6_7b();
+    let coord = Coordinator::standard();
+    let w = match mode {
+        "temporal" => dmc_decode_temporal(&cfg, pos, layers, &DmcParams::default()),
+        "spatial" => {
+            let cpp = args.num("cpp", 2usize);
+            let pkg = match args.flag("packaging").unwrap_or("mcm") {
+                "2.5d" | "interposer" => Packaging::Interposer2_5D,
+                _ => Packaging::Mcm,
+            };
+            mpmc_decode_spatial(&cfg, pos, layers, &MpmcParams::paper(cpp, pkg))
+        }
+        other => anyhow::bail!("unknown decode mode '{other}'"),
+    };
+    let r = coord.simulate(&w, &SimConfig::default())?;
+    println!("workload: {}", w.name);
+    for n in &w.notes {
+        println!("  note: {n}");
+    }
+    println!("decode makespan: {:.0} cycles", r.makespan);
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let quick = args.bool_flag("quick");
+    let coord = Coordinator::standard();
+    let names: Vec<&str> = if name == "all" {
+        EXPERIMENTS.to_vec()
+    } else {
+        vec![name]
+    };
+    for n in names {
+        let tables = coord.run_experiment(n, quick)?;
+        for t in tables {
+            if args.bool_flag("csv") {
+                println!("# {n}");
+                print!("{}", t.to_csv());
+            } else {
+                println!("{}", t.render());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_hardware(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .flag("spec")
+        .ok_or_else(|| anyhow::anyhow!("--spec FILE required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let matrix = mldse::hwir::parse_spec(&text)?;
+    let hw = mldse::hwir::Hardware::build(matrix);
+    println!("points: {}", hw.num_points());
+    for kind in ["compute", "memory", "dram", "comm"] {
+        println!("  {kind}: {}", hw.points_of_kind(kind).len());
+    }
+    println!("depth: {} levels", hw.root.depth());
+    println!("sync groups: {}", hw.sync_groups().len());
+    Ok(())
+}

@@ -1,0 +1,385 @@
+//! Spatiotemporal mapping IR (paper §5.1).
+//!
+//! A [`Mapping`] allocates task-graph nodes onto `SpacePoint`s:
+//!
+//! * **Spatially** every mapped task resides on exactly one point
+//!   (paper: "each task is mapped to one and only one SpacePoint").
+//!   Cross-level communication tasks are *decomposed* into per-level
+//!   sub-tasks, each mapped to one communication point (`map_edge`).
+//! * **Temporally** tasks may carry a multi-level [`TimeCoord`]; rollover
+//!   of a non-innermost digit triggers synchronization within the virtual
+//!   group containing the task's point (Figure 4). [`lower_time_coords`]
+//!   lowers these into explicit barrier sync tasks before simulation.
+
+use std::collections::HashMap;
+
+use crate::hwir::{Hardware, PointId};
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
+
+/// Multi-level time coordinate `(t_n, …, t_1)`, outermost first.
+/// Ordering is lexicographic.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct TimeCoord(pub Vec<u32>);
+
+impl TimeCoord {
+    pub fn new(v: impl Into<Vec<u32>>) -> Self {
+        TimeCoord(v.into())
+    }
+
+    /// True when moving `self -> next` changes a digit other than the
+    /// innermost — the paper's "change in level i (i > 1)" trigger.
+    pub fn rollover_to(&self, next: &TimeCoord) -> bool {
+        let outer_self = &self.0[..self.0.len().saturating_sub(1)];
+        let outer_next = &next.0[..next.0.len().saturating_sub(1)];
+        outer_self != outer_next
+    }
+}
+
+impl std::fmt::Display for TimeCoord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{}", d)?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// Spatial + temporal allocation of a task graph onto hardware.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Mapping {
+    /// Task -> owning point.
+    assign: HashMap<TaskId, PointId>,
+    /// Optional multi-level time coordinate per task.
+    time: HashMap<TaskId, TimeCoord>,
+    /// Decomposed communication tasks: original -> ordered sub-tasks.
+    edge_subs: HashMap<TaskId, Vec<TaskId>>,
+}
+
+impl Mapping {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Map a task onto a point (idempotent re-map allowed).
+    pub fn map(&mut self, task: TaskId, point: PointId) {
+        self.assign.insert(task, point);
+    }
+
+    /// Remove a task's placement; returns the point it was on.
+    pub fn unmap(&mut self, task: TaskId) -> Option<PointId> {
+        self.assign.remove(&task)
+    }
+
+    pub fn point_of(&self, task: TaskId) -> Option<PointId> {
+        self.assign.get(&task).copied()
+    }
+
+    /// `M^{-1}(p)`: all tasks on a point (unordered).
+    pub fn tasks_on(&self, point: PointId) -> Vec<TaskId> {
+        let mut v: Vec<TaskId> = self
+            .assign
+            .iter()
+            .filter(|(_, p)| **p == point)
+            .map(|(t, _)| *t)
+            .collect();
+        v.sort();
+        v
+    }
+
+    pub fn mapped_tasks(&self) -> impl Iterator<Item = (TaskId, PointId)> + '_ {
+        self.assign.iter().map(|(t, p)| (*t, *p))
+    }
+
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    pub fn set_time(&mut self, task: TaskId, coord: TimeCoord) {
+        self.time.insert(task, coord);
+    }
+
+    pub fn time_of(&self, task: TaskId) -> Option<&TimeCoord> {
+        self.time.get(&task)
+    }
+
+    pub fn record_edge_decomposition(&mut self, original: TaskId, subs: Vec<TaskId>) {
+        self.edge_subs.insert(original, subs);
+    }
+
+    pub fn edge_decomposition(&self, original: TaskId) -> Option<&[TaskId]> {
+        self.edge_subs.get(&original).map(|v| v.as_slice())
+    }
+
+    pub fn take_edge_decomposition(&mut self, original: TaskId) -> Option<Vec<TaskId>> {
+        self.edge_subs.remove(&original)
+    }
+
+    /// Validity: every enabled task of the graph is mapped, every mapped
+    /// task exists, and kinds are placed on compatible points.
+    pub fn validate(&self, graph: &TaskGraph, hw: &Hardware) -> Vec<String> {
+        let mut problems = Vec::new();
+        for task in graph.iter() {
+            if !task.enabled {
+                continue;
+            }
+            // Originals of decomposed comm edges are exempt (their subs are
+            // mapped instead).
+            if self.edge_subs.contains_key(&task.id) {
+                continue;
+            }
+            match self.assign.get(&task.id) {
+                None => problems.push(format!("task {} ({}) unmapped", task.id, task.name)),
+                Some(p) => {
+                    let kind = &hw.point(*p).kind;
+                    let ok = match &task.kind {
+                        TaskKind::Compute(_) => kind.is_compute(),
+                        TaskKind::Storage { .. } => kind.is_memory(),
+                        TaskKind::Comm { .. } => kind.is_comm() || kind.is_memory(),
+                        TaskKind::Sync { .. } => true,
+                    };
+                    if !ok {
+                        problems.push(format!(
+                            "task {} ({}) of kind {} mapped to {} point {}",
+                            task.id,
+                            task.name,
+                            task.kind.kind_name(),
+                            kind.kind_name(),
+                            hw.entry(*p).addr,
+                        ));
+                    }
+                }
+            }
+        }
+        for (t, p) in &self.assign {
+            if !graph.contains(*t) {
+                problems.push(format!("mapping references deleted task {t}"));
+            }
+            if p.index() >= hw.num_points() {
+                problems.push(format!("mapping references unknown point {p}"));
+            }
+        }
+        problems
+    }
+}
+
+/// Lower multi-level time coordinates into explicit barrier sync tasks
+/// (paper §5.1 / Figure 4).
+///
+/// For every virtual sync group: collect mapped tasks with time coordinates
+/// on the group's points, order their distinct coordinates
+/// lexicographically, and at every boundary where a non-innermost digit
+/// changes insert one `Sync` task per *occupied* point of the group, wired
+/// from all tasks of the previous epoch window and into all tasks of the
+/// next. Returns the number of barriers inserted.
+pub fn lower_time_coords(
+    graph: &mut TaskGraph,
+    mapping: &mut Mapping,
+    hw: &Hardware,
+    mut next_sync_id: u32,
+) -> u32 {
+    let mut barriers = 0;
+    for group in hw.sync_groups() {
+        let member: std::collections::HashSet<PointId> = group.points.iter().copied().collect();
+        // tasks on the group's points that carry a time coordinate
+        let mut timed: Vec<(TimeCoord, TaskId, PointId)> = mapping
+            .assign
+            .iter()
+            .filter(|(_, p)| member.contains(p))
+            .filter_map(|(t, p)| mapping.time.get(t).map(|tc| (tc.clone(), *t, *p)))
+            .collect();
+        if timed.is_empty() {
+            continue;
+        }
+        timed.sort();
+        // distinct coords in order
+        let mut coords: Vec<TimeCoord> = timed.iter().map(|(c, _, _)| c.clone()).collect();
+        coords.dedup();
+
+        let mut window_start = 0usize; // index into coords of current epoch window
+        for j in 0..coords.len().saturating_sub(1) {
+            if !coords[j].rollover_to(&coords[j + 1]) {
+                continue;
+            }
+            // Barrier between coords[window_start..=j] and coords[j+1..].
+            let prev_window: Vec<TaskId> = timed
+                .iter()
+                .filter(|(c, _, _)| *c >= coords[window_start] && *c <= coords[j])
+                .map(|(_, t, _)| *t)
+                .collect();
+            let next_coord = &coords[j + 1];
+            let next_window_end = coords[j + 1..]
+                .iter()
+                .take_while(|c| !next_coord.rollover_to(c) || *c == next_coord)
+                .last()
+                .cloned()
+                .unwrap_or_else(|| next_coord.clone());
+            let next_window: Vec<TaskId> = timed
+                .iter()
+                .filter(|(c, _, _)| *c >= *next_coord && *c <= next_window_end)
+                .map(|(_, t, _)| *t)
+                .collect();
+
+            // one sync task per occupied point
+            let mut occupied: Vec<PointId> = timed.iter().map(|(_, _, p)| *p).collect();
+            occupied.sort();
+            occupied.dedup();
+            let sync_ids: Vec<TaskId> = occupied
+                .iter()
+                .map(|p| {
+                    let s = graph.add(
+                        format!("sync{}@{}", next_sync_id, p),
+                        TaskKind::Sync {
+                            sync_id: next_sync_id,
+                        },
+                    );
+                    mapping.map(s, *p);
+                    s
+                })
+                .collect();
+            for &prev in &prev_window {
+                for &s in &sync_ids {
+                    graph.connect(prev, s);
+                }
+            }
+            for &s in &sync_ids {
+                for &next in &next_window {
+                    graph.connect(s, next);
+                }
+            }
+            next_sync_id += 1;
+            barriers += 1;
+            window_start = j + 1;
+        }
+    }
+    barriers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{
+        mlc, CommAttrs, ComputeAttrs, Coord, Element, Hardware, SpaceMatrix, SpacePoint,
+        SyncGroup, Topology,
+    };
+    use crate::taskgraph::{ComputeCost, OpClass};
+
+    fn hw_2x2() -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![2, 2]);
+        for i in 0..2 {
+            for j in 0..2 {
+                m.set(
+                    Coord::new(vec![i, j]),
+                    Element::Point(SpacePoint::compute("core", ComputeAttrs::new((4, 4), 8))),
+                );
+            }
+        }
+        m.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 16.0, 1),
+        ));
+        m.add_sync_group(SyncGroup {
+            name: "all".into(),
+            members: None,
+        });
+        Hardware::build(m)
+    }
+
+    #[test]
+    fn map_unmap_roundtrip() {
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let t = g.add("c0", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let p = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let mut m = Mapping::new();
+        m.map(t, p);
+        assert_eq!(m.point_of(t), Some(p));
+        assert_eq!(m.tasks_on(p), vec![t]);
+        assert_eq!(m.unmap(t), Some(p));
+        assert!(m.point_of(t).is_none());
+    }
+
+    #[test]
+    fn validate_catches_unmapped_and_mismatched() {
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let c = g.add("c", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let s = g.add("s", TaskKind::Storage { bytes: 64 });
+        let mut m = Mapping::new();
+        // unmapped tasks flagged
+        let problems = m.validate(&g, &hw);
+        assert_eq!(problems.len(), 2);
+        // storage on a compute point flagged
+        let p = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        m.map(c, p);
+        m.map(s, p);
+        let problems = m.validate(&g, &hw);
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("storage"));
+    }
+
+    #[test]
+    fn rollover_detection() {
+        let a = TimeCoord::new(vec![0, 1]);
+        let b = TimeCoord::new(vec![1, 0]);
+        let c = TimeCoord::new(vec![0, 2]);
+        assert!(a.rollover_to(&b)); // outer digit changed
+        assert!(!a.rollover_to(&c)); // only innermost changed
+    }
+
+    #[test]
+    fn lower_time_coords_inserts_barrier() {
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let p0 = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let p1 = hw.cell(&mlc(&[&[0, 1]])).unwrap();
+        let a = g.add("a", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let b = g.add("b", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let c = g.add("c", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        m.map(a, p0);
+        m.map(b, p1);
+        m.map(c, p0);
+        m.set_time(a, TimeCoord::new(vec![0, 0]));
+        m.set_time(b, TimeCoord::new(vec![0, 1]));
+        m.set_time(c, TimeCoord::new(vec![1, 0])); // rollover after (0,1)
+        let inserted = lower_time_coords(&mut g, &mut m, &hw, 100);
+        assert_eq!(inserted, 1);
+        // two sync tasks (occupied points p0, p1); c must depend on both
+        let sync_ids: Vec<TaskId> = g
+            .iter()
+            .filter(|t| t.kind.is_sync())
+            .map(|t| t.id)
+            .collect();
+        assert_eq!(sync_ids.len(), 2);
+        for s in &sync_ids {
+            assert!(g.successors(*s).contains(&c));
+            assert!(g.predecessors(*s).contains(&a));
+            assert!(g.predecessors(*s).contains(&b));
+        }
+        assert!(g.toposort().is_some());
+    }
+
+    #[test]
+    fn no_rollover_no_barrier() {
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let p0 = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let a = g.add("a", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let b = g.add("b", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        m.map(a, p0);
+        m.map(b, p0);
+        m.set_time(a, TimeCoord::new(vec![0, 0]));
+        m.set_time(b, TimeCoord::new(vec![0, 5]));
+        assert_eq!(lower_time_coords(&mut g, &mut m, &hw, 0), 0);
+        assert_eq!(g.len(), 2);
+    }
+}

@@ -1,0 +1,13 @@
+//! Spatiotemporal mapping (paper §5).
+//!
+//! [`ir`] defines the mapping IR: task→point assignment, cross-level
+//! communication decomposition records, and multi-level time coordinates
+//! with virtual-group synchronization lowering. [`primitives`] implements
+//! the sixteen Table-1 mapping action primitives over a [`MappingState`]
+//! with undo/redo, the substrate user search algorithms are built from.
+
+pub mod ir;
+pub mod primitives;
+
+pub use ir::{lower_time_coords, Mapping, TimeCoord};
+pub use primitives::{MapError, MappingState};

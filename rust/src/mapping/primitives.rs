@@ -1,0 +1,784 @@
+//! Mapping action primitives (paper §5.2, Table 1).
+//!
+//! The sixteen primitives operate on a [`MappingState`] — the pair of task
+//! graph + mapping that a mapping-search algorithm evolves. Every mutating
+//! primitive checkpoints the state first, so the *state control* primitives
+//! `undo` / `redo` can step the search backwards and forwards (the paper's
+//! substrate for e.g. Monte-Carlo tree search).
+//!
+//! | type | primitives |
+//! |---|---|
+//! | graph transformation | `group`, `tile_task`, `tile_group`, `split_edge`, `delete_task`, `copy_task`, `connect` |
+//! | task assignment | `map_node`, `take_out`, `map_edge`, `take_edge_out` |
+//! | synchronization | `sync` (+ `barrier` helper) |
+//! | state control | `enable`, `disable`, `undo`, `redo` |
+
+use crate::hwir::{CommSegment, PointId};
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
+
+use super::ir::Mapping;
+
+/// Error type of primitive application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapError(pub String);
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "mapping error: {}", self.0)
+    }
+}
+
+impl std::error::Error for MapError {}
+
+type Result<T> = std::result::Result<T, MapError>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(MapError(msg.into()))
+}
+
+#[derive(Debug, Clone)]
+struct Snapshot {
+    graph: TaskGraph,
+    mapping: Mapping,
+    next_group: u32,
+}
+
+/// Task graph + mapping under search, with undo/redo history.
+#[derive(Debug)]
+pub struct MappingState {
+    pub graph: TaskGraph,
+    pub mapping: Mapping,
+    next_group: u32,
+    undo_stack: Vec<Snapshot>,
+    redo_stack: Vec<Snapshot>,
+    /// Maximum retained checkpoints (old ones are dropped).
+    pub history_limit: usize,
+}
+
+impl MappingState {
+    pub fn new(graph: TaskGraph) -> Self {
+        MappingState {
+            graph,
+            mapping: Mapping::new(),
+            next_group: 1,
+            undo_stack: Vec::new(),
+            redo_stack: Vec::new(),
+            history_limit: 64,
+        }
+    }
+
+    fn checkpoint(&mut self) {
+        self.undo_stack.push(Snapshot {
+            graph: self.graph.clone(),
+            mapping: self.mapping.clone(),
+            next_group: self.next_group,
+        });
+        if self.undo_stack.len() > self.history_limit {
+            self.undo_stack.remove(0);
+        }
+        self.redo_stack.clear();
+    }
+
+    // ==================================================================
+    // Graph transformation primitives
+    // ==================================================================
+
+    /// `group(tasks)` — tag tasks with a fresh group id so group-wide
+    /// operations (`tile_group`) can address them together.
+    pub fn group(&mut self, tasks: &[TaskId]) -> Result<u32> {
+        for t in tasks {
+            if !self.graph.contains(*t) {
+                return err(format!("group: task {t} does not exist"));
+            }
+        }
+        self.checkpoint();
+        let gid = self.next_group;
+        self.next_group += 1;
+        for t in tasks {
+            self.graph.task_mut(*t).group = gid;
+        }
+        Ok(gid)
+    }
+
+    /// `tile_task(task, tile_vector)` — split a compute or storage task into
+    /// `prod(tile_vector)` tiles with proportionally divided cost. Each tile
+    /// inherits the original's dependencies and placement; the original is
+    /// deleted. Returns the tile ids.
+    pub fn tile_task(&mut self, task: TaskId, tile: &[u32]) -> Result<Vec<TaskId>> {
+        if !self.graph.contains(task) {
+            return err(format!("tile_task: task {task} does not exist"));
+        }
+        if tile.is_empty() || tile.iter().any(|t| *t == 0) {
+            return err(format!("tile_task: bad tile vector {tile:?}"));
+        }
+        let ntiles: u64 = tile.iter().map(|t| *t as u64).product();
+        if ntiles == 1 {
+            return Ok(vec![task]);
+        }
+        let original = self.graph.task(task).clone();
+        let tiled_kind = |i: u64| -> Result<TaskKind> {
+            match &original.kind {
+                TaskKind::Compute(c) => {
+                    let mut t = *c;
+                    t.mac_flops /= ntiles as f64;
+                    t.vec_flops /= ntiles as f64;
+                    t.in_bytes = div_bytes(c.in_bytes, ntiles, i);
+                    t.out_bytes = div_bytes(c.out_bytes, ntiles, i);
+                    t.dram_bytes = div_bytes(c.dram_bytes, ntiles, i);
+                    for (d, tv) in t.dims.iter_mut().zip(tile.iter()) {
+                        if *d > 0 {
+                            *d = (*d).div_ceil(*tv);
+                        }
+                    }
+                    Ok(TaskKind::Compute(t))
+                }
+                TaskKind::Storage { bytes } => Ok(TaskKind::Storage {
+                    bytes: div_bytes(*bytes, ntiles, i),
+                }),
+                TaskKind::Comm { bytes, hops, route } => Ok(TaskKind::Comm {
+                    bytes: div_bytes(*bytes, ntiles, i),
+                    hops: *hops,
+                    route: route.clone(),
+                }),
+                TaskKind::Sync { .. } => err("tile_task: cannot tile a sync task"),
+            }
+        };
+        // Validate before mutating.
+        tiled_kind(0)?;
+        self.checkpoint();
+
+        let preds = self.graph.predecessors(task).to_vec();
+        let succs = self.graph.successors(task).to_vec();
+        let placement = self.mapping.point_of(task);
+        let mut tiles = Vec::with_capacity(ntiles as usize);
+        for i in 0..ntiles {
+            let id = self
+                .graph
+                .add(format!("{}[{}]", original.name, i), tiled_kind(i).unwrap());
+            self.graph.task_mut(id).group = original.group;
+            self.graph.task_mut(id).enabled = original.enabled;
+            for &p in &preds {
+                self.graph.connect(p, id);
+            }
+            for &s in &succs {
+                self.graph.connect(id, s);
+            }
+            if let Some(pt) = placement {
+                self.mapping.map(id, pt);
+            }
+            if let Some(tc) = self.mapping.time_of(task).cloned() {
+                self.mapping.set_time(id, tc);
+            }
+            tiles.push(id);
+        }
+        self.graph.remove(task);
+        self.mapping.unmap(task);
+        Ok(tiles)
+    }
+
+    /// `tile_group(group_id, tile_vector)` — tile every task in a group.
+    pub fn tile_group(&mut self, group_id: u32, tile: &[u32]) -> Result<Vec<TaskId>> {
+        let members: Vec<TaskId> = self
+            .graph
+            .iter()
+            .filter(|t| t.group == group_id)
+            .map(|t| t.id)
+            .collect();
+        if members.is_empty() {
+            return err(format!("tile_group: empty group {group_id}"));
+        }
+        let mut out = Vec::new();
+        for m in members {
+            out.extend(self.tile_task(m, tile)?);
+        }
+        Ok(out)
+    }
+
+    /// `split_edge(task, number)` — split a communication task into `number`
+    /// parallel sub-tasks sharing the data flux.
+    pub fn split_edge(&mut self, task: TaskId, number: u32) -> Result<Vec<TaskId>> {
+        match self.graph.get(task).map(|t| &t.kind) {
+            Some(TaskKind::Comm { .. }) => {}
+            Some(_) => return err(format!("split_edge: {task} is not a comm task")),
+            None => return err(format!("split_edge: task {task} does not exist")),
+        }
+        self.tile_task(task, &[number])
+    }
+
+    /// `delete_task(task)` — remove a task and its edges.
+    pub fn delete_task(&mut self, task: TaskId) -> Result<()> {
+        if !self.graph.contains(task) {
+            return err(format!("delete_task: task {task} does not exist"));
+        }
+        self.checkpoint();
+        self.graph.remove(task);
+        self.mapping.unmap(task);
+        Ok(())
+    }
+
+    /// `copy_task(task)` — duplicate a task together with its dependencies
+    /// and placement (used e.g. to replicate storage across memories).
+    pub fn copy_task(&mut self, task: TaskId) -> Result<TaskId> {
+        if !self.graph.contains(task) {
+            return err(format!("copy_task: task {task} does not exist"));
+        }
+        self.checkpoint();
+        let original = self.graph.task(task).clone();
+        let id = self
+            .graph
+            .add(format!("{}'", original.name), original.kind.clone());
+        self.graph.task_mut(id).group = original.group;
+        for p in self.graph.predecessors(task).to_vec() {
+            self.graph.connect(p, id);
+        }
+        for s in self.graph.successors(task).to_vec() {
+            self.graph.connect(id, s);
+        }
+        if let Some(pt) = self.mapping.point_of(task) {
+            self.mapping.map(id, pt);
+        }
+        Ok(id)
+    }
+
+    /// `connect(task1, task2)` — add a data dependency.
+    pub fn connect(&mut self, a: TaskId, b: TaskId) -> Result<()> {
+        if !self.graph.contains(a) || !self.graph.contains(b) {
+            return err("connect: missing task");
+        }
+        if a == b {
+            return err("connect: self dependency");
+        }
+        self.checkpoint();
+        self.graph.connect(a, b);
+        Ok(())
+    }
+
+    // ==================================================================
+    // Task assignment primitives
+    // ==================================================================
+
+    /// `map_node(task, coord)` — place a task on a point.
+    pub fn map_node(&mut self, task: TaskId, point: PointId) -> Result<()> {
+        if !self.graph.contains(task) {
+            return err(format!("map_node: task {task} does not exist"));
+        }
+        self.checkpoint();
+        self.mapping.map(task, point);
+        Ok(())
+    }
+
+    /// `take_out(task, coord)` — remove a task from the point it occupies.
+    pub fn take_out(&mut self, task: TaskId, point: PointId) -> Result<()> {
+        match self.mapping.point_of(task) {
+            Some(p) if p == point => {
+                self.checkpoint();
+                self.mapping.unmap(task);
+                Ok(())
+            }
+            Some(p) => err(format!("take_out: {task} is on {p}, not {point}")),
+            None => err(format!("take_out: {task} is unmapped")),
+        }
+    }
+
+    /// `map_edge(task, path, sub_paths)` — decompose a communication task
+    /// into a chain of per-level sub-tasks, one per [`CommSegment`]
+    /// (normally produced by [`crate::hwir::Hardware::route`]).
+    ///
+    /// The original task is detached and disabled; `take_edge_out` restores
+    /// it. Returns the sub-task ids in path order. A route with no segments
+    /// (same-point transfer) deletes the comm task and wires predecessors
+    /// directly to successors.
+    pub fn map_edge(&mut self, task: TaskId, segments: &[CommSegment]) -> Result<Vec<TaskId>> {
+        let bytes = match self.graph.get(task).map(|t| &t.kind) {
+            Some(TaskKind::Comm { bytes, .. }) => *bytes,
+            Some(_) => return err(format!("map_edge: {task} is not a comm task")),
+            None => return err(format!("map_edge: task {task} does not exist")),
+        };
+        if self.mapping.edge_decomposition(task).is_some() {
+            return err(format!("map_edge: {task} already decomposed"));
+        }
+        self.checkpoint();
+        let preds = self.graph.predecessors(task).to_vec();
+        let succs = self.graph.successors(task).to_vec();
+        let name = self.graph.task(task).name.clone();
+
+        if segments.is_empty() {
+            // Same-point transfer: zero-cost, collapse the edge.
+            for &p in &preds {
+                for &s in &succs {
+                    self.graph.connect(p, s);
+                }
+                self.graph.disconnect(p, task);
+            }
+            for &s in &succs {
+                self.graph.disconnect(task, s);
+            }
+            self.graph.task_mut(task).enabled = false;
+            self.mapping.unmap(task);
+            self.mapping.record_edge_decomposition(task, Vec::new());
+            return Ok(Vec::new());
+        }
+
+        let mut subs = Vec::with_capacity(segments.len());
+        for (i, seg) in segments.iter().enumerate() {
+            let id = self.graph.add(
+                format!("{name}/{i}"),
+                TaskKind::Comm {
+                    bytes,
+                    hops: seg.hops,
+                    route: Some((seg.from.clone(), seg.to.clone())),
+                },
+            );
+            self.mapping.map(id, seg.comm);
+            if let Some(prev) = subs.last().copied() {
+                self.graph.connect(prev, id);
+            }
+            subs.push(id);
+        }
+        for &p in &preds {
+            self.graph.connect(p, subs[0]);
+            self.graph.disconnect(p, task);
+        }
+        for &s in &succs {
+            self.graph.connect(*subs.last().unwrap(), s);
+            self.graph.disconnect(task, s);
+        }
+        self.graph.task_mut(task).enabled = false;
+        self.mapping.unmap(task);
+        self.mapping.record_edge_decomposition(task, subs.clone());
+        Ok(subs)
+    }
+
+    /// `take_edge_out(task, path)` — undo a `map_edge` decomposition,
+    /// restoring the original communication task and its edges.
+    pub fn take_edge_out(&mut self, task: TaskId) -> Result<()> {
+        let subs = match self.mapping.edge_decomposition(task) {
+            Some(s) => s.to_vec(),
+            None => return err(format!("take_edge_out: {task} is not decomposed")),
+        };
+        self.checkpoint();
+        self.mapping.take_edge_decomposition(task);
+        if subs.is_empty() {
+            // Collapsed same-point edge: we cannot recover which pred->succ
+            // edges belonged to the comm task without records, so leave the
+            // direct edges and simply re-enable.
+            self.graph.task_mut(task).enabled = true;
+            return Ok(());
+        }
+        let preds = self.graph.predecessors(subs[0]).to_vec();
+        let succs = self.graph.successors(*subs.last().unwrap()).to_vec();
+        for &p in &preds {
+            if !subs.contains(&p) {
+                self.graph.connect(p, task);
+            }
+        }
+        for &s in &succs {
+            if !subs.contains(&s) {
+                self.graph.connect(task, s);
+            }
+        }
+        for sub in subs {
+            self.graph.remove(sub);
+            self.mapping.unmap(sub);
+        }
+        self.graph.task_mut(task).enabled = true;
+        Ok(())
+    }
+
+    // ==================================================================
+    // Synchronization primitives
+    // ==================================================================
+
+    /// `sync(sync_id, coord)` — insert a `SyncTask` on a point. All sync
+    /// tasks sharing `sync_id` form one barrier: each completes only when
+    /// every member is ready.
+    pub fn sync(&mut self, sync_id: u32, point: PointId) -> Result<TaskId> {
+        self.checkpoint();
+        let id = self
+            .graph
+            .add(format!("sync{sync_id}@{point}"), TaskKind::Sync { sync_id });
+        self.mapping.map(id, point);
+        Ok(id)
+    }
+
+    /// Convenience: a barrier across `points`, ordered after `after` and
+    /// before `before`.
+    pub fn barrier(
+        &mut self,
+        sync_id: u32,
+        points: &[PointId],
+        after: &[TaskId],
+        before: &[TaskId],
+    ) -> Result<Vec<TaskId>> {
+        if points.is_empty() {
+            return err("barrier: no points");
+        }
+        self.checkpoint();
+        let mut ids = Vec::with_capacity(points.len());
+        for &p in points {
+            let id = self
+                .graph
+                .add(format!("sync{sync_id}@{p}"), TaskKind::Sync { sync_id });
+            self.mapping.map(id, p);
+            ids.push(id);
+        }
+        for &a in after {
+            for &s in &ids {
+                self.graph.connect(a, s);
+            }
+        }
+        for &s in &ids {
+            for &b in before {
+                self.graph.connect(s, b);
+            }
+        }
+        Ok(ids)
+    }
+
+    // ==================================================================
+    // State control primitives
+    // ==================================================================
+
+    /// `enable(task)`.
+    pub fn enable(&mut self, task: TaskId) -> Result<()> {
+        self.set_enabled(task, true)
+    }
+
+    /// `disable(task)` — the simulator skips disabled tasks.
+    pub fn disable(&mut self, task: TaskId) -> Result<()> {
+        self.set_enabled(task, false)
+    }
+
+    fn set_enabled(&mut self, task: TaskId, on: bool) -> Result<()> {
+        if !self.graph.contains(task) {
+            return err(format!("enable/disable: task {task} does not exist"));
+        }
+        self.checkpoint();
+        self.graph.task_mut(task).enabled = on;
+        Ok(())
+    }
+
+    /// `undo()` — revert the most recent primitive. Returns false when the
+    /// history is empty.
+    pub fn undo(&mut self) -> bool {
+        match self.undo_stack.pop() {
+            Some(snap) => {
+                self.redo_stack.push(Snapshot {
+                    graph: std::mem::replace(&mut self.graph, snap.graph),
+                    mapping: std::mem::replace(&mut self.mapping, snap.mapping),
+                    next_group: std::mem::replace(&mut self.next_group, snap.next_group),
+                });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// `redo()` — re-apply an undone primitive.
+    pub fn redo(&mut self) -> bool {
+        match self.redo_stack.pop() {
+            Some(snap) => {
+                self.undo_stack.push(Snapshot {
+                    graph: std::mem::replace(&mut self.graph, snap.graph),
+                    mapping: std::mem::replace(&mut self.mapping, snap.mapping),
+                    next_group: std::mem::replace(&mut self.next_group, snap.next_group),
+                });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Depth of the undo history.
+    pub fn history_len(&self) -> usize {
+        self.undo_stack.len()
+    }
+}
+
+/// Divide `bytes` into `n` near-equal parts; part `i` absorbs the remainder
+/// so totals are conserved exactly.
+fn div_bytes(bytes: u64, n: u64, i: u64) -> u64 {
+    let base = bytes / n;
+    if i == 0 {
+        base + bytes % n
+    } else {
+        base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{
+        mlc, CommAttrs, ComputeAttrs, Coord, Element, Hardware, SpaceMatrix, SpacePoint, Topology,
+    };
+    use crate::taskgraph::{ComputeCost, OpClass};
+
+    fn hw() -> Hardware {
+        let mut chip = SpaceMatrix::new("chip", vec![2, 2]);
+        for i in 0..2 {
+            for j in 0..2 {
+                chip.set(
+                    Coord::new(vec![i, j]),
+                    Element::Point(SpacePoint::compute("core", ComputeAttrs::new((4, 4), 8))),
+                );
+            }
+        }
+        chip.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 16.0, 1),
+        ));
+        let mut board = SpaceMatrix::new("board", vec![2]);
+        board.set(Coord::new(vec![0]), Element::Matrix(chip.clone()));
+        board.set(Coord::new(vec![1]), Element::Matrix(chip));
+        board.add_comm(SpacePoint::comm(
+            "bnet",
+            CommAttrs::new(Topology::Ring, 8.0, 4),
+        ));
+        Hardware::build(board)
+    }
+
+    fn compute_cost(flops: f64) -> TaskKind {
+        let mut c = ComputeCost::zero(OpClass::MatMul);
+        c.mac_flops = flops;
+        c.in_bytes = 1000;
+        c.out_bytes = 100;
+        c.dims = [64, 64, 64];
+        TaskKind::Compute(c)
+    }
+
+    /// a --e--> b (comm task e between two computes)
+    fn chain_state() -> (MappingState, TaskId, TaskId, TaskId) {
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_cost(1000.0));
+        let e = g.add("e", TaskKind::Comm { bytes: 4096, hops: 0, route: None });
+        let b = g.add("b", compute_cost(1000.0));
+        g.connect(a, e);
+        g.connect(e, b);
+        (MappingState::new(g), a, e, b)
+    }
+
+    #[test]
+    fn group_and_tile_group() {
+        let (mut st, a, _e, b) = chain_state();
+        let gid = st.group(&[a, b]).unwrap();
+        let tiles = st.tile_group(gid, &[2, 2]).unwrap();
+        assert_eq!(tiles.len(), 8); // two tasks × 4 tiles
+        assert!(tiles.iter().all(|t| st.graph.task(*t).group == gid));
+        assert!(!st.graph.contains(a));
+    }
+
+    #[test]
+    fn tile_task_divides_cost_and_preserves_totals() {
+        let (mut st, a, _e, _b) = chain_state();
+        let tiles = st.tile_task(a, &[2, 2]).unwrap();
+        assert_eq!(tiles.len(), 4);
+        let mut flops = 0.0;
+        let mut in_bytes = 0;
+        for t in &tiles {
+            if let TaskKind::Compute(c) = &st.graph.task(*t).kind {
+                flops += c.mac_flops;
+                in_bytes += c.in_bytes;
+                assert_eq!(c.dims, [32, 32, 64]); // m,n halved; k untouched
+            }
+        }
+        assert!((flops - 1000.0).abs() < 1e-9);
+        assert_eq!(in_bytes, 1000);
+    }
+
+    #[test]
+    fn tile_task_rewires_edges() {
+        let (mut st, a, e, _b) = chain_state();
+        let tiles = st.tile_task(a, &[3]).unwrap();
+        for t in &tiles {
+            assert!(st.graph.successors(*t).contains(&e));
+        }
+        assert_eq!(st.graph.predecessors(e).len(), 3);
+        assert!(st.graph.validate().is_empty());
+    }
+
+    #[test]
+    fn tile_identity_is_noop() {
+        let (mut st, a, _e, _b) = chain_state();
+        assert_eq!(st.tile_task(a, &[1]).unwrap(), vec![a]);
+        assert!(st.graph.contains(a));
+    }
+
+    #[test]
+    fn split_edge_divides_bytes() {
+        let (mut st, _a, e, b) = chain_state();
+        let subs = st.split_edge(e, 3).unwrap();
+        assert_eq!(subs.len(), 3);
+        let total: u64 = subs
+            .iter()
+            .map(|t| match st.graph.task(*t).kind {
+                TaskKind::Comm { bytes, .. } => bytes,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(total, 4096);
+        for s in &subs {
+            assert!(st.graph.successors(*s).contains(&b));
+        }
+    }
+
+    #[test]
+    fn split_edge_rejects_compute() {
+        let (mut st, a, _e, _b) = chain_state();
+        assert!(st.split_edge(a, 2).is_err());
+    }
+
+    #[test]
+    fn copy_and_delete() {
+        let (mut st, a, e, _b) = chain_state();
+        let a2 = st.copy_task(a).unwrap();
+        assert!(st.graph.successors(a2).contains(&e));
+        st.delete_task(a).unwrap();
+        assert!(!st.graph.contains(a));
+        assert!(st.graph.contains(a2));
+        assert!(st.graph.validate().is_empty());
+    }
+
+    #[test]
+    fn map_and_take_out() {
+        let hw = hw();
+        let (mut st, a, _e, _b) = chain_state();
+        let p = hw.cell(&mlc(&[&[0], &[0, 0]])).unwrap();
+        st.map_node(a, p).unwrap();
+        assert_eq!(st.mapping.point_of(a), Some(p));
+        let q = hw.cell(&mlc(&[&[0], &[0, 1]])).unwrap();
+        assert!(st.take_out(a, q).is_err()); // wrong point
+        st.take_out(a, p).unwrap();
+        assert_eq!(st.mapping.point_of(a), None);
+    }
+
+    #[test]
+    fn map_edge_decomposes_cross_level() {
+        let hw = hw();
+        let (mut st, a, e, b) = chain_state();
+        let src = mlc(&[&[0], &[1, 1]]);
+        let dst = mlc(&[&[1], &[0, 1]]);
+        st.map_node(a, hw.cell(&src).unwrap()).unwrap();
+        st.map_node(b, hw.cell(&dst).unwrap()).unwrap();
+        let segs = hw.route(&src, &dst);
+        assert_eq!(segs.len(), 3); // noc0 up, bnet across, noc1 down
+        let subs = st.map_edge(e, &segs).unwrap();
+        assert_eq!(subs.len(), 3);
+        // chain a -> s0 -> s1 -> s2 -> b
+        assert!(st.graph.successors(a).contains(&subs[0]));
+        assert!(st.graph.successors(subs[0]).contains(&subs[1]));
+        assert!(st.graph.successors(subs[2]).contains(&b));
+        assert!(!st.graph.task(e).enabled);
+        assert!(st.graph.successors(a).len() == 1);
+        // each sub sits on the right comm point
+        for (sub, seg) in subs.iter().zip(&segs) {
+            assert_eq!(st.mapping.point_of(*sub), Some(seg.comm));
+        }
+        // double decomposition rejected
+        assert!(st.map_edge(e, &segs).is_err());
+    }
+
+    #[test]
+    fn take_edge_out_restores() {
+        let hw = hw();
+        let (mut st, a, e, b) = chain_state();
+        let src = mlc(&[&[0], &[1, 1]]);
+        let dst = mlc(&[&[1], &[0, 1]]);
+        let segs = hw.route(&src, &dst);
+        let before_tasks = st.graph.len();
+        st.map_edge(e, &segs).unwrap();
+        st.take_edge_out(e).unwrap();
+        assert_eq!(st.graph.len(), before_tasks);
+        assert!(st.graph.task(e).enabled);
+        assert!(st.graph.successors(a).contains(&e));
+        assert!(st.graph.successors(e).contains(&b));
+        assert!(st.graph.validate().is_empty());
+    }
+
+    #[test]
+    fn sync_and_barrier() {
+        let hw = hw();
+        let (mut st, a, _e, b) = chain_state();
+        let points: Vec<PointId> = hw.points_of_kind("compute")[..2].to_vec();
+        let ids = st.barrier(7, &points, &[a], &[b]).unwrap();
+        assert_eq!(ids.len(), 2);
+        for s in &ids {
+            assert!(st.graph.predecessors(*s).contains(&a));
+            assert!(st.graph.successors(*s).contains(&b));
+            assert!(matches!(
+                st.graph.task(*s).kind,
+                TaskKind::Sync { sync_id: 7 }
+            ));
+        }
+    }
+
+    #[test]
+    fn enable_disable() {
+        let (mut st, a, _e, _b) = chain_state();
+        st.disable(a).unwrap();
+        assert!(!st.graph.task(a).enabled);
+        st.enable(a).unwrap();
+        assert!(st.graph.task(a).enabled);
+    }
+
+    #[test]
+    fn undo_redo_roundtrip() {
+        let (mut st, a, _e, _b) = chain_state();
+        let before = st.graph.clone();
+        st.tile_task(a, &[4]).unwrap();
+        let after = st.graph.clone();
+        assert_ne!(before, after);
+        assert!(st.undo());
+        assert_eq!(st.graph, before);
+        assert!(st.redo());
+        assert_eq!(st.graph, after);
+        assert!(st.redo() == false);
+        // new action clears redo
+        st.undo();
+        st.copy_task(a).unwrap();
+        assert!(!st.redo());
+    }
+
+    #[test]
+    fn undo_depth_limit() {
+        let (mut st, a, _e, _b) = chain_state();
+        st.history_limit = 3;
+        for _ in 0..5 {
+            st.copy_task(a).unwrap();
+        }
+        assert_eq!(st.history_len(), 3);
+    }
+
+    #[test]
+    fn prop_undo_restores_exactly() {
+        use crate::util::propcheck::{check, Gen};
+        check("random primitive then undo restores state", 48, |g: &mut Gen| {
+            let (mut st, a, e, b) = chain_state();
+            // apply a random prefix of primitives
+            let prefix = g.usize(0..=3);
+            for _ in 0..prefix {
+                let _ = match g.usize(0..=2) {
+                    0 => st.copy_task(a).map(|_| ()),
+                    1 => st.split_edge(e, 2).map(|_| ()),
+                    _ => st.connect(a, b).map(|_| ()),
+                };
+            }
+            let graph_before = st.graph.clone();
+            let mapping_before = st.mapping.clone();
+            // one more primitive + undo
+            let applied = match g.usize(0..=3) {
+                0 => st.copy_task(a).is_ok(),
+                1 => st.delete_task(b).is_ok(),
+                2 => st.disable(a).is_ok(),
+                _ => st.group(&[a, b]).is_ok(),
+            };
+            if applied && !st.undo() {
+                return Err("undo failed after successful primitive".into());
+            }
+            if applied && (st.graph != graph_before || st.mapping != mapping_before) {
+                return Err("undo did not restore state".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT runtime — loads AOT-compiled XLA computations (HLO text produced by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! only place the compiled artifacts are touched at run time. The
+//! interchange format is HLO *text*: jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that the crate's bundled XLA rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus the executables loaded on it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe: Mutex::new(exe),
+            path: path.to_path_buf(),
+        })
+    }
+}
+
+/// A compiled XLA executable. Execution is serialized behind a mutex (the
+/// underlying PJRT handles are not Sync).
+pub struct Executable {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    path: PathBuf,
+}
+
+// SAFETY: the raw PJRT handles inside `PjRtLoadedExecutable` are only ever
+// touched while holding `self.exe`'s mutex, and the PJRT CPU client permits
+// invocation from any single thread at a time. The !Send bound on the crate
+// type is the default for raw pointers, not a documented thread-affinity
+// requirement.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with f32 inputs (`(data, shape)` pairs). The computation must
+    /// have been lowered with `return_tuple=True`; returns each tuple element
+    /// flattened to a f32 vector.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let expected: usize = shape.iter().product();
+            anyhow::ensure!(
+                expected == data.len(),
+                "input length {} does not match shape {:?}",
+                data.len(),
+                shape
+            );
+            let shape_i64: Vec<i64> = shape.iter().map(|s| *s as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&shape_i64)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let exe = self.exe.lock().unwrap();
+        let mut result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        drop(exe);
+        let tuple = result.decompose_tuple().context("decomposing result tuple")?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .context("converting result literal to f32 vec")
+            })
+            .collect()
+    }
+}
+
+/// Default artifact directory (`artifacts/` beside the workspace root),
+/// overridable with `MLDSE_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MLDSE_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from the current dir looking for `artifacts/`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// End-to-end check of the load-and-run path, independent of the
+    /// evaluator artifact: requires `make artifacts` to have produced
+    /// `evaluator_b128.hlo.txt`. Skipped (with a note) when absent so
+    /// `cargo test` works before the first artifact build.
+    #[test]
+    fn load_and_run_evaluator_artifact() {
+        let art = artifacts_dir().join("evaluator_b128.hlo.txt");
+        if !art.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", art.display());
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(&art).unwrap();
+        // batch of 128 descriptors x F fields, one hw-param vector
+        let b = 128;
+        let f = crate::eval::pjrt::DESC_FIELDS;
+        let desc = vec![0f32; b * f];
+        let hwp = vec![1f32; crate::eval::pjrt::HW_FIELDS];
+        let out = exe
+            .run_f32(&[(&desc, &[b, f]), (&hwp, &[crate::eval::pjrt::HW_FIELDS])])
+            .unwrap();
+        assert_eq!(out[0].len(), b);
+    }
+}

@@ -1,0 +1,827 @@
+//! The paper's **hardware-consistent dynamic task scheduler** (Algorithm 1,
+//! §6.2) — speculative per-point zone scheduling with a contention-staged
+//! buffer (CSB).
+//!
+//! Unlike [`super::engine`], which sidesteps inconsistency by processing
+//! events in global time order, this scheduler issues *contention zones*
+//! (all activated tasks on one point) eagerly, stages their evaluations in
+//! the CSB, and repairs speculation through the paper's two rules:
+//!
+//! * **commit** — a staged evaluation `v` becomes final when every not-yet-
+//!   activated task mapped to the same point has an earliest-possible start
+//!   (a dependency-propagated lower bound) no earlier than `End(v)`
+//!   (`can_be_committed`). Only committed completions fire ticks.
+//! * **rollback** — when a task activates on a point at a time earlier than
+//!   a staged (or partially progressed) evaluation extends, every item on
+//!   that point is truncated back to the arrival time and re-enters the
+//!   schedule queue for co-evaluation with the newcomer
+//!   (`should_be_rollback`; the paper's `v3[2] -> v3[2][1] + v3[2][2]`
+//!   split).
+//!
+//! Task truncation is explicit: each transfer keeps a piecewise-constant
+//! rate profile, so the prefix before a rollback point survives and only
+//! the remainder is re-evaluated. The scheduler satisfies the paper's
+//! Constraints 1–3 and — by the equivalence tests at the bottom — produces
+//! the same timings as the exact engine while evaluating in a different
+//! (per-point speculative) order.
+//!
+//! Scope: single iteration, static task graphs. Storage occupancy
+//! accounting and dynamic executors live in the main engine.
+
+use std::collections::HashMap;
+
+use crate::eval::Registry;
+use crate::hwir::{Hardware, PointId, PointKind};
+use crate::mapping::Mapping;
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
+
+use super::engine::{SimError, SimResult, Time};
+use super::links::{link_set, LinkId};
+
+/// A piecewise-constant progress profile of a transfer.
+#[derive(Debug, Clone, Default)]
+struct Profile {
+    /// (from, to, rate) segments, contiguous, in time order.
+    segments: Vec<(Time, Time, f64)>,
+}
+
+impl Profile {
+    fn work_done(&self) -> f64 {
+        self.segments.iter().map(|(a, b, r)| (b - a) * r).sum()
+    }
+
+    /// Drop all progress after `t`.
+    fn truncate_at(&mut self, t: Time) {
+        self.segments.retain(|(a, _, _)| *a < t);
+        if let Some(last) = self.segments.last_mut() {
+            if last.1 > t {
+                last.1 = t;
+            }
+        }
+    }
+
+    fn push(&mut self, from: Time, to: Time, rate: f64) {
+        if to > from && rate > 0.0 {
+            self.segments.push((from, to, rate));
+        }
+    }
+}
+
+/// An activated-but-uncommitted piece of work.
+#[derive(Debug, Clone)]
+struct Item {
+    task: TaskId,
+    point: PointId,
+    /// Activation time (exact: all predecessors committed).
+    ready: Time,
+    shared_total: f64,
+    fixed: f64,
+    links: Vec<LinkId>,
+    exclusive: bool,
+    profile: Profile,
+    /// Staged completion time (`None` while still pending in S).
+    staged_end: Option<Time>,
+}
+
+impl Item {
+    fn remaining(&self) -> f64 {
+        (self.shared_total - self.profile.work_done()).max(0.0)
+    }
+
+    /// Earliest time this item can make further progress.
+    fn resume_at(&self) -> Time {
+        self.profile
+            .segments
+            .last()
+            .map(|(_, b, _)| *b)
+            .unwrap_or(self.ready)
+    }
+}
+
+/// Run Algorithm 1. Semantics match [`super::engine::simulate`] with
+/// `iterations = 1`.
+pub fn simulate_consistent(
+    hw: &Hardware,
+    graph: &TaskGraph,
+    mapping: &Mapping,
+    evals: &Registry,
+) -> Result<SimResult, SimError> {
+    Alg1 {
+        hw,
+        graph,
+        mapping,
+        evals,
+        items: Vec::new(),
+        committed: HashMap::new(),
+        deps_left: HashMap::new(),
+        ready_time: HashMap::new(),
+        sync_ready: HashMap::new(),
+        result: SimResult::default(),
+        min_demand_memo: HashMap::new(),
+    }
+    .run()
+}
+
+struct Alg1<'a> {
+    hw: &'a Hardware,
+    graph: &'a TaskGraph,
+    mapping: &'a Mapping,
+    evals: &'a Registry,
+    /// S ∪ CSB: pending items (staged_end == None) and staged items.
+    items: Vec<Item>,
+    /// Committed completion times.
+    committed: HashMap<TaskId, Time>,
+    deps_left: HashMap<TaskId, usize>,
+    ready_time: HashMap<TaskId, Time>,
+    /// sync_id -> (ready members, max ready)
+    sync_ready: HashMap<u32, (usize, Time)>,
+    result: SimResult,
+    min_demand_memo: HashMap<TaskId, f64>,
+}
+
+impl<'a> Alg1<'a> {
+    fn run(mut self) -> Result<SimResult, SimError> {
+        // Validate mapping (reuse engine's checks indirectly).
+        for task in self.graph.iter().filter(|t| t.enabled) {
+            if self.mapping.point_of(task.id).is_none() {
+                return Err(SimError(format!("task {} unmapped", task.name)));
+            }
+        }
+        // Activate sources.
+        let sources: Vec<TaskId> = self
+            .graph
+            .iter()
+            .filter(|t| {
+                t.enabled
+                    && self
+                        .graph
+                        .predecessors(t.id)
+                        .iter()
+                        .all(|p| !self.graph.task(*p).enabled)
+            })
+            .map(|t| t.id)
+            .collect();
+        for s in sources {
+            self.activate(s, 0.0);
+        }
+
+        let mut guard = 0u64;
+        loop {
+            guard += 1;
+            if guard > 50_000_000 {
+                return Err(SimError("algorithm-1 scheduler did not converge".into()));
+            }
+            // Commit scan (repeats until fixpoint because commits activate
+            // successors, which may enable further commits or rollbacks).
+            if self.commit_pass() {
+                continue;
+            }
+            // Issue the zone with the earliest possible start.
+            if self.issue_pass() {
+                continue;
+            }
+            // Fallback progress: commit the globally-earliest staged end.
+            if self.commit_min_end() {
+                continue;
+            }
+            break;
+        }
+
+        for t in self.graph.iter().filter(|t| t.enabled) {
+            if !self.committed.contains_key(&t.id) {
+                self.result.unfinished += 1;
+            }
+        }
+        Ok(self.result)
+    }
+
+    // ------------------------------------------------------------------
+    // Activation & ticks
+    // ------------------------------------------------------------------
+
+    fn activate(&mut self, task: TaskId, at: Time) {
+        let t = self.graph.task(task);
+        let point = self.mapping.point_of(task).unwrap();
+        match &t.kind {
+            // Zero-demand tasks: exact completion at activation.
+            TaskKind::Storage { .. } => {
+                self.commit(task, at, at);
+                return;
+            }
+            TaskKind::Sync { sync_id } => {
+                let members = self
+                    .graph
+                    .iter()
+                    .filter(|x| {
+                        x.enabled
+                            && matches!(&x.kind, TaskKind::Sync { sync_id: s } if s == sync_id)
+                    })
+                    .count();
+                let entry = self.sync_ready.entry(*sync_id).or_insert((0, 0.0));
+                entry.0 += 1;
+                entry.1 = entry.1.max(at);
+                if entry.0 == members {
+                    let when = entry.1;
+                    let ids: Vec<TaskId> = self
+                        .graph
+                        .iter()
+                        .filter(|x| {
+                            x.enabled
+                                && matches!(&x.kind, TaskKind::Sync { sync_id: s } if s == sync_id)
+                        })
+                        .map(|x| x.id)
+                        .collect();
+                    for id in ids {
+                        self.commit(id, when, when);
+                    }
+                }
+                return;
+            }
+            _ => {}
+        }
+        let demand = self.evals.demand(t, self.hw.entry(point));
+        let exclusive = self.hw.point(point).kind.is_compute();
+        let links = self.item_links(point, task);
+        // Rollback rule: the newcomer invalidates any evaluation on this
+        // point that extends beyond its arrival.
+        self.rollback_point(point, at);
+        self.items.push(Item {
+            task,
+            point,
+            ready: at,
+            // exclusive tasks are atomic: all demand in `shared_total`
+            shared_total: if exclusive {
+                demand.total()
+            } else {
+                demand.shared
+            },
+            fixed: if exclusive { 0.0 } else { demand.fixed },
+            links,
+            exclusive,
+            profile: Profile::default(),
+            staged_end: None,
+        });
+    }
+
+    fn item_links(&self, point: PointId, task: TaskId) -> Vec<LinkId> {
+        let entry = self.hw.entry(point);
+        let PointKind::Comm(attrs) = &entry.point.kind else {
+            return Vec::new();
+        };
+        let TaskKind::Comm {
+            route: Some((from, to)),
+            ..
+        } = &self.graph.task(task).kind
+        else {
+            return Vec::new();
+        };
+        let crate::hwir::Addr::Comm { matrix, .. } = &entry.addr else {
+            return Vec::new();
+        };
+        let Some(shape) = self.hw.matrix_shape(matrix) else {
+            return Vec::new();
+        };
+        link_set(&attrs.topology, from, to, shape)
+    }
+
+    fn commit(&mut self, task: TaskId, start: Time, end: Time) {
+        self.committed.insert(task, end);
+        self.result.completed += 1;
+        self.result.makespan = self.result.makespan.max(end);
+        self.result.timings.insert(task, (start, end));
+        // fire ticks
+        for &s in self.graph.successors(task) {
+            if !self.graph.task(s).enabled {
+                continue;
+            }
+            let left = self.deps_left.entry(s).or_insert_with(|| {
+                self.graph
+                    .predecessors(s)
+                    .iter()
+                    .filter(|p| self.graph.task(**p).enabled)
+                    .count()
+            });
+            *left -= 1;
+            let rt = self.ready_time.entry(s).or_insert(0.0);
+            *rt = rt.max(end);
+            if *left == 0 {
+                let at = *rt;
+                self.activate(s, at);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Rollback (should_be_rollback + truncation)
+    // ------------------------------------------------------------------
+
+    /// Truncate every item on `point` back to time `t`; staged items whose
+    /// end exceeds `t` return to the schedule queue.
+    fn rollback_point(&mut self, point: PointId, t: Time) {
+        for item in &mut self.items {
+            if item.point != point {
+                continue;
+            }
+            if item.exclusive {
+                if let Some(end) = item.staged_end {
+                    // retract only if the newcomer should have gone first
+                    if t < end {
+                        item.staged_end = None;
+                        item.profile = Profile::default();
+                        self.result.rollbacks += 1;
+                    }
+                }
+            } else if item.resume_at() > t || item.staged_end.map(|e| e - item.fixed > t).unwrap_or(false) {
+                if item.staged_end.is_some() {
+                    self.result.rollbacks += 1;
+                }
+                item.profile.truncate_at(t);
+                item.staged_end = None;
+                self.result.truncations += 1;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Commit (can_be_committed)
+    // ------------------------------------------------------------------
+
+    /// Dependency-propagated lower bound on a task's activation time.
+    fn lb_start(&mut self, task: TaskId) -> Time {
+        if let Some(end) = self.committed.get(&task) {
+            return *end; // already done; cannot threaten anyone later
+        }
+        if let Some(rt) = self.ready_time.get(&task) {
+            if self.deps_left.get(&task) == Some(&0) {
+                return *rt;
+            }
+        }
+        // max over preds of lower-bound end
+        let preds: Vec<TaskId> = self
+            .graph
+            .predecessors(task)
+            .iter()
+            .filter(|p| self.graph.task(**p).enabled)
+            .copied()
+            .collect();
+        let mut lb: Time = 0.0;
+        for p in preds {
+            lb = lb.max(self.lb_end(p));
+        }
+        lb
+    }
+
+    fn lb_end(&mut self, task: TaskId) -> Time {
+        if let Some(end) = self.committed.get(&task) {
+            return *end;
+        }
+        if let Some(item) = self.items.iter().find(|i| i.task == task) {
+            if let Some(end) = item.staged_end {
+                return end; // rollbacks only push ends later
+            }
+        }
+        let min_d = match self.min_demand_memo.get(&task) {
+            Some(d) => *d,
+            None => {
+                let t = self.graph.task(task);
+                let d = match self.mapping.point_of(task) {
+                    Some(p) => self.evals.demand(t, self.hw.entry(p)).total(),
+                    None => 0.0,
+                };
+                self.min_demand_memo.insert(task, d);
+                d
+            }
+        };
+        self.lb_start(task) + min_d
+    }
+
+    /// Commit every staged item that is provably safe. Returns true if
+    /// anything was committed.
+    fn commit_pass(&mut self) -> bool {
+        let mut progress = false;
+        loop {
+            // pick the safest candidate: smallest staged end first
+            let staged: Vec<(TaskId, PointId, Time)> = self
+                .items
+                .iter()
+                .filter_map(|i| i.staged_end.map(|e| (i.task, i.point, e)))
+                .collect();
+            let mut committed_one = false;
+            for (task, point, end) in staged {
+                if self.can_commit(task, point, end) {
+                    let idx = self.items.iter().position(|i| i.task == task).unwrap();
+                    let item = self.items.remove(idx);
+                    let start = item.ready;
+                    *self.result.point_busy.entry(point).or_insert(0.0) += item.shared_total;
+                    self.commit(task, start, end);
+                    committed_one = true;
+                    progress = true;
+                    break; // items changed; re-scan
+                }
+            }
+            if !committed_one {
+                return progress;
+            }
+        }
+    }
+
+    fn can_commit(&mut self, task: TaskId, point: PointId, end: Time) -> bool {
+        // pending items on the same point are already co-evaluated up to
+        // their profiles; only *unactivated* tasks threaten `task`.
+        let candidates: Vec<TaskId> = self
+            .mapping
+            .tasks_on(point)
+            .into_iter()
+            .filter(|t| {
+                *t != task
+                    && self.graph.task(*t).enabled
+                    && !self.committed.contains_key(t)
+                    && !self.items.iter().any(|i| i.task == *t)
+            })
+            .collect();
+        for u in candidates {
+            if self.lb_start(u) < end {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Progress fallback: nothing is pending, so the globally smallest
+    /// staged end can never be contradicted.
+    fn commit_min_end(&mut self) -> bool {
+        if self.items.iter().any(|i| i.staged_end.is_none()) {
+            return false;
+        }
+        let Some((task, point, end)) = self
+            .items
+            .iter()
+            .filter_map(|i| i.staged_end.map(|e| (i.task, i.point, e)))
+            .min_by(|a, b| a.2.total_cmp(&b.2))
+        else {
+            return false;
+        };
+        let idx = self.items.iter().position(|i| i.task == task).unwrap();
+        let item = self.items.remove(idx);
+        *self.result.point_busy.entry(point).or_insert(0.0) += item.shared_total;
+        self.commit(task, item.ready, end);
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // Issue (zones + truncation)
+    // ------------------------------------------------------------------
+
+    /// Issue the zone with the earliest possible start. Returns true if a
+    /// zone was evaluated.
+    fn issue_pass(&mut self) -> bool {
+        // candidate points with pending items
+        let mut best: Option<(Time, PointId)> = None;
+        for item in self.items.iter().filter(|i| i.staged_end.is_none()) {
+            let t = if item.exclusive {
+                let timer = self.excl_timer(item.point);
+                item.resume_at().max(timer)
+            } else {
+                item.resume_at()
+            };
+            if best.map(|(bt, bp)| (t, item.point.0) < (bt, bp.0)).unwrap_or(true) {
+                best = Some((t, item.point));
+            }
+        }
+        let Some((_, point)) = best else {
+            return false;
+        };
+        if self.hw.point(point).kind.is_compute() {
+            self.issue_exclusive(point)
+        } else {
+            self.issue_shared_zone(point)
+        }
+    }
+
+    /// Timer of an exclusive point = max end over committed/staged tasks.
+    fn excl_timer(&self, point: PointId) -> Time {
+        let mut t: Time = 0.0;
+        for (task, end) in &self.committed {
+            if self.mapping.point_of(*task) == Some(point) {
+                t = t.max(*end);
+            }
+        }
+        for item in &self.items {
+            if item.point == point {
+                if let Some(end) = item.staged_end {
+                    t = t.max(end);
+                }
+            }
+        }
+        t
+    }
+
+    fn issue_exclusive(&mut self, point: PointId) -> bool {
+        // earliest-ready pending task (ties by id), run atomically
+        let Some(idx) = self
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.point == point && i.staged_end.is_none())
+            .min_by(|(_, a), (_, b)| {
+                a.ready
+                    .total_cmp(&b.ready)
+                    .then(a.task.cmp(&b.task))
+            })
+            .map(|(i, _)| i)
+        else {
+            return false;
+        };
+        let timer = self.excl_timer(point);
+        let item = &mut self.items[idx];
+        let start = item.ready.max(timer);
+        let end = start + item.shared_total;
+        item.profile = Profile {
+            segments: vec![(start, end, 1.0)],
+        };
+        item.staged_end = Some(end);
+        true
+    }
+
+    /// Fluid co-evaluation of all pending items on a shared point, stopped
+    /// at the first completion (the paper's bind-and-truncate step).
+    fn issue_shared_zone(&mut self, point: PointId) -> bool {
+        let member_idx: Vec<usize> = self
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.point == point && i.staged_end.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        if member_idx.is_empty() {
+            return false;
+        }
+        // Piecewise sim from the earliest resume point.
+        let mut t: Time = member_idx
+            .iter()
+            .map(|&i| self.items[i].resume_at())
+            .fold(f64::INFINITY, f64::min);
+        let mut remaining: HashMap<usize, f64> =
+            member_idx.iter().map(|&i| (i, self.items[i].remaining())).collect();
+
+        loop {
+            // active members at time t
+            let active: Vec<usize> = member_idx
+                .iter()
+                .copied()
+                .filter(|&i| self.items[i].resume_at() <= t + 1e-12 && remaining[&i] > 1e-12)
+                .collect();
+            // zero-work member completes instantly
+            if let Some(&done) = member_idx
+                .iter()
+                .find(|&&i| remaining[&i] <= 1e-12 && self.items[i].staged_end.is_none())
+            {
+                let item = &mut self.items[done];
+                let end_transfer = item.resume_at().max(item.ready);
+                item.staged_end = Some(end_transfer + item.fixed);
+                return true;
+            }
+            if active.is_empty() {
+                // jump to the next entry
+                let next = member_idx
+                    .iter()
+                    .map(|&i| self.items[i].resume_at())
+                    .filter(|&r| r > t)
+                    .fold(f64::INFINITY, f64::min);
+                if !next.is_finite() {
+                    return false;
+                }
+                t = next;
+                continue;
+            }
+            // rates among active members (same congestion rule as engine)
+            let rates: Vec<f64> = active
+                .iter()
+                .map(|&i| {
+                    let fi = &self.items[i];
+                    let congestion = if fi.links.is_empty() {
+                        active.len() as f64
+                    } else {
+                        let mut worst = 1usize;
+                        for l in &fi.links {
+                            let c = active
+                                .iter()
+                                .filter(|&&j| {
+                                    let fj = &self.items[j];
+                                    fj.links.is_empty() || fj.links.contains(l)
+                                })
+                                .count();
+                            worst = worst.max(c);
+                        }
+                        worst as f64
+                    };
+                    1.0 / congestion.max(1.0)
+                })
+                .collect();
+            // next event: first completion among active or next entry
+            let mut dt = f64::INFINITY;
+            for (&i, &r) in active.iter().zip(&rates) {
+                dt = dt.min(remaining[&i] / r);
+            }
+            let next_entry = member_idx
+                .iter()
+                .map(|&i| self.items[i].resume_at())
+                .filter(|&r| r > t)
+                .fold(f64::INFINITY, f64::min);
+            let t_next = (t + dt).min(next_entry);
+            // advance profiles
+            for (&i, &r) in active.iter().zip(&rates) {
+                self.items[i].profile.push(t, t_next, r);
+                *remaining.get_mut(&i).unwrap() -= (t_next - t) * r;
+            }
+            // completion?
+            if let Some(&done) = active.iter().find(|&&i| remaining[&i] <= 1e-9) {
+                let item = &mut self.items[done];
+                item.staged_end = Some(t_next + item.fixed);
+                self.result.truncations += active.len() as u64 - 1;
+                return true;
+            }
+            t = t_next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Registry;
+    use crate::hwir::{
+        mlc, CommAttrs, ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint,
+        Topology,
+    };
+    use crate::sim::engine::{simulate, SimConfig};
+    use crate::taskgraph::{ComputeCost, OpClass};
+
+    fn tiny_hw() -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![2]);
+        for i in 0..2 {
+            m.set(
+                Coord::new(vec![i]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((4, 4), 8).with_lmem(MemoryAttrs::new(1 << 20, 64.0, 0)),
+                )),
+            );
+        }
+        m.add_comm(SpacePoint::comm(
+            "bus",
+            CommAttrs::new(Topology::Bus, 1.0, 0),
+        ));
+        Hardware::build(m)
+    }
+
+    fn compute_task(cycles: f64) -> TaskKind {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = cycles * 16.0;
+        TaskKind::Compute(c)
+    }
+
+    fn comm_task(bytes: u64) -> TaskKind {
+        TaskKind::Comm { bytes, hops: 0, route: None }
+    }
+
+    /// The Fig. 6 walkthrough must produce the hardware-consistent numbers
+    /// (identical to the exact engine) and exercise truncation + rollback.
+    #[test]
+    fn fig6_matches_engine_with_rollbacks() {
+        let hw = tiny_hw();
+        let mut g = TaskGraph::new();
+        let e = g.add("E", compute_task(100.0));
+        let a = g.add("A", comm_task(50));
+        let f = g.add("F", comm_task(200));
+        let b = g.add("B", compute_task(100.0));
+        let c = g.add("C", comm_task(80));
+        g.connect(e, a);
+        g.connect(e, f);
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.cell(&mlc(&[&[0]])).unwrap();
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e, core);
+        m.map(b, core);
+        for t in [a, f, c] {
+            m.map(t, bus);
+        }
+        let r = simulate_consistent(&hw, &g, &m, &Registry::standard()).unwrap();
+        assert_eq!(r.timings[&a].1, 200.0);
+        assert_eq!(r.timings[&f].1, 400.0);
+        assert_eq!(r.timings[&c].1, 430.0);
+        assert!(r.truncations > 0, "zone truncation must occur");
+        let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.makespan, exact.makespan);
+    }
+
+    /// Speculative issue must roll back: a long transfer is staged before a
+    /// competing transfer's predecessor chain completes.
+    #[test]
+    fn speculation_rolls_back() {
+        let hw = tiny_hw();
+        let mut g = TaskGraph::new();
+        // F starts immediately on the bus; chain e1->e2 later releases C.
+        let f = g.add("F", comm_task(500));
+        let e1 = g.add("e1", compute_task(50.0));
+        let e2 = g.add("e2", compute_task(50.0));
+        let c = g.add("C", comm_task(100));
+        g.connect(e1, e2);
+        g.connect(e2, c);
+        let core = hw.cell(&mlc(&[&[0]])).unwrap();
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e1, core);
+        m.map(e2, core);
+        m.map(f, bus);
+        m.map(c, bus);
+        let r = simulate_consistent(&hw, &g, &m, &Registry::standard()).unwrap();
+        let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        // F: alone 0..100 (100 work), shares 100..300 with C (C: 100 work
+        // done at 300), F remaining 300 alone -> 600.
+        assert_eq!(r.timings[&c].1, 300.0);
+        assert_eq!(r.timings[&f].1, 600.0);
+        assert_eq!(r.makespan, exact.makespan);
+    }
+
+    #[test]
+    fn exclusive_rollback_reorders_fifo() {
+        let hw = tiny_hw();
+        let mut g = TaskGraph::new();
+        // u's chain makes it ready at 20 on core1; v ready at 30 on core1.
+        // If v (on another source path) were staged first, u's arrival must
+        // retract it.
+        let a = g.add("a", compute_task(30.0)); // core0, done 30
+        let v = g.add("v", compute_task(10.0)); // core1 after a
+        let b = g.add("b", compute_task(20.0)); // core0 path, done 20
+        let u = g.add("u", compute_task(100.0)); // core1 after b
+        g.connect(a, v);
+        g.connect(b, u);
+        let core0 = hw.cell(&mlc(&[&[0]])).unwrap();
+        let core1 = hw.cell(&mlc(&[&[1]])).unwrap();
+        let mut m = Mapping::new();
+        m.map(a, core0);
+        m.map(b, core0);
+        m.map(v, core1);
+        m.map(u, core1);
+        let r = simulate_consistent(&hw, &g, &m, &Registry::standard()).unwrap();
+        let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.timings[&u], exact.timings[&u]);
+        assert_eq!(r.timings[&v], exact.timings[&v]);
+        assert_eq!(r.makespan, exact.makespan);
+    }
+
+    /// Randomized equivalence: Algorithm 1 and the exact engine agree on
+    /// every task's completion time.
+    #[test]
+    fn prop_equivalent_to_engine() {
+        use crate::util::propcheck::{check, Gen};
+        check("algorithm-1 == exact engine", 40, |gen: &mut Gen| {
+            let hw = tiny_hw();
+            let core0 = hw.cell(&mlc(&[&[0]])).unwrap();
+            let core1 = hw.cell(&mlc(&[&[1]])).unwrap();
+            let bus = hw.points_of_kind("comm")[0];
+            let n = gen.usize(2..=14);
+            let mut g = TaskGraph::new();
+            let mut m = Mapping::new();
+            let mut ids = Vec::new();
+            for i in 0..n {
+                let (kind, point) = match gen.usize(0..=2) {
+                    0 => (compute_task(gen.usize(1..=60) as f64), core0),
+                    1 => (compute_task(gen.usize(1..=60) as f64), core1),
+                    _ => (comm_task(gen.usize(1..=120) as u64), bus),
+                };
+                let id = g.add(format!("t{i}"), kind);
+                m.map(id, point);
+                ids.push(id);
+            }
+            for i in 0..n {
+                for j in i + 1..n {
+                    if gen.bool() && gen.bool() {
+                        g.connect(ids[i], ids[j]);
+                    }
+                }
+            }
+            let alg1 = simulate_consistent(&hw, &g, &m, &Registry::standard())
+                .map_err(|e| e.to_string())?;
+            let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default())
+                .map_err(|e| e.to_string())?;
+            if (alg1.makespan - exact.makespan).abs() > 1e-6 {
+                return Err(format!(
+                    "makespan {} vs {}",
+                    alg1.makespan, exact.makespan
+                ));
+            }
+            for id in &ids {
+                let a = alg1.timings[id].1;
+                let b = exact.timings[id].1;
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("task {id}: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,1195 @@
+//! Task-level event-driven simulation with hardware-consistent contention
+//! resolution (paper §6).
+//!
+//! ## Semantics
+//!
+//! * An *event* is a task completion; it fires ticks on the task's output
+//!   edges. A task activates (becomes ready) for iteration `i` when every
+//!   input edge holds a tick for `i`; its ready time is the max tick
+//!   timestamp (Eq. 1).
+//! * **Compute points are exclusive**: one task at a time, FIFO by ready
+//!   time, `Start(v) = max(ticks, t_current)`, `End(v) = Start + E_p(v)`,
+//!   and the point's timer advances to `End(v)` (Eq. 1).
+//! * **Communication / memory / DRAM points are shared**: concurrent flows
+//!   progress under processor sharing. A flow's instantaneous rate is
+//!   `1 / congestion` where congestion is the maximum number of flows
+//!   sharing any physical link it occupies ([`super::links`]); flows
+//!   without route information (and all flows on memory/DRAM channels)
+//!   share the whole resource. Rates are recomputed at every arrival and
+//!   departure — this is the fixed point that the paper's Algorithm 1
+//!   (contention zones + truncation + contention-staged buffer with
+//!   commit/rollback) converges to, computed here by processing events in
+//!   global time order. [`super::consistent`] implements the speculative
+//!   per-point Algorithm 1 itself; the two engines agree (see its tests),
+//!   while the naive baseline in [`super::reference`] reproduces the
+//!   paper's Fig. 6 inconsistency.
+//! * **Storage tasks** activate at the first input tick (Eq. 2 `Start`),
+//!   immediately provide ticks on their output edges, occupy their memory's
+//!   capacity while active, and deactivate when the last dependent task
+//!   completes (Eq. 2 `End`).
+//! * **Sync tasks** sharing a `sync_id` form a barrier: all complete at the
+//!   max of their ready times.
+//! * Batches stream through the graph: `SimConfig::iterations` ticks carry
+//!   iteration numbers (§6.1); a task evaluates once per iteration.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::eval::Registry;
+use crate::hwir::{Hardware, PointId, PointKind};
+use crate::mapping::Mapping;
+use crate::taskgraph::{Executor, StaticExecutor, TaskGraph, TaskId, TaskKind};
+
+use super::links::{link_set, LinkId};
+
+/// Simulation time in cycles (fractional under bandwidth sharing).
+pub type Time = f64;
+
+/// Total-ordered f64 for the event queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of input batches streamed through the graph.
+    pub iterations: u32,
+    /// Record a per-task execution timeline.
+    pub collect_timeline: bool,
+    /// Memoize evaluator demands by (descriptor, point) — the
+    /// representative-task deduplication of §7.2.
+    pub dedup: bool,
+    /// Safety cap on processed events.
+    pub max_events: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            iterations: 1,
+            collect_timeline: false,
+            dedup: true,
+            max_events: 500_000_000,
+        }
+    }
+}
+
+/// One timeline record (with `collect_timeline`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineEvent {
+    pub task: TaskId,
+    pub iter: u32,
+    pub point: PointId,
+    pub start: Time,
+    pub end: Time,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    /// Completion time of the last task (cycles).
+    pub makespan: Time,
+    /// (start, end) of each task's final iteration.
+    pub timings: HashMap<TaskId, (Time, Time)>,
+    /// Busy cycles per point (service demand actually delivered).
+    pub point_busy: HashMap<PointId, f64>,
+    /// Completed (task, iteration) evaluations.
+    pub completed: u64,
+    /// Tasks that never ran all iterations (blocked or untriggered).
+    pub unfinished: u64,
+    /// Flow-rate recomputation events where a flow lost bandwidth — the
+    /// engine analogue of Algorithm 1 truncations.
+    pub truncations: u64,
+    /// Contention-staged-buffer rollbacks (only the speculative
+    /// [`super::consistent`] scheduler produces these; the global-order
+    /// engine never needs to roll back).
+    pub rollbacks: u64,
+    /// Energy delivered per point (pJ), from the evaluator energy model.
+    pub point_energy: HashMap<PointId, f64>,
+    /// Peak bytes resident per memory point.
+    pub peak_memory: HashMap<PointId, u64>,
+    /// Capacity violations ("point, peak, capacity").
+    pub memory_violations: Vec<String>,
+    /// Timeline (only with `collect_timeline`).
+    pub timeline: Vec<TimelineEvent>,
+}
+
+impl SimResult {
+    /// Utilization of a point in [0,1].
+    pub fn utilization(&self, point: PointId) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.point_busy.get(&point).copied().unwrap_or(0.0) / self.makespan
+    }
+
+    /// Total energy across all points (pJ).
+    pub fn total_energy(&self) -> f64 {
+        self.point_energy.values().sum()
+    }
+
+    /// Average power in W assuming `freq_ghz` clocking (pJ/cycle ≙ mW at
+    /// 1 GHz).
+    pub fn avg_power_w(&self, freq_ghz: f64) -> f64 {
+        if self.makespan <= 0.0 {
+            return 0.0;
+        }
+        self.total_energy() / self.makespan * freq_ghz * 1e-3
+    }
+}
+
+/// Simulation error.
+#[derive(Debug)]
+pub struct SimError(pub String);
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "simulation error: {}", self.0)
+    }
+}
+impl std::error::Error for SimError {}
+
+// ---------------------------------------------------------------------
+// Engine internals
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Event {
+    /// Task `0` ready for iteration `1`.
+    Arrival(TaskId, u32),
+    /// Exclusive point finished its running task (validity via generation).
+    ExclDone(PointId, u64),
+    /// Candidate completion on a shared point (validity via generation).
+    FlowDone(PointId, u64),
+}
+
+#[derive(Debug)]
+struct Flow {
+    task: TaskId,
+    iter: u32,
+    /// Remaining shareable work (cycles at full rate).
+    remaining: f64,
+    /// Fixed latency appended after the transfer completes.
+    fixed: f64,
+    /// Occupied links; empty = shares the whole resource.
+    links: Vec<LinkId>,
+    /// Current progress rate in (0, 1].
+    rate: f64,
+    start: Time,
+}
+
+#[derive(Debug, Default)]
+struct SharedPoint {
+    flows: Vec<Flow>,
+    last_update: Time,
+    generation: u64,
+}
+
+#[derive(Debug, Default)]
+struct ExclPoint {
+    timer: Time,
+    running: Option<(TaskId, u32, Time, Time)>, // task, iter, start, end
+    pending: BinaryHeap<Reverse<(OrdF64, TaskId, u32)>>,
+    generation: u64,
+}
+
+#[derive(Debug, Default)]
+struct StorageState {
+    resident: bool,
+    bytes: u64,
+    start: Time,
+    consumers_left: u64,
+    last_consumer_end: Time,
+}
+
+struct SyncGroupState {
+    members: Vec<TaskId>,
+    /// per-iteration (ready_count, max_ready)
+    progress: HashMap<u32, (usize, Time)>,
+}
+
+/// Run a simulation with the static executor.
+pub fn simulate(
+    hw: &Hardware,
+    graph: &TaskGraph,
+    mapping: &Mapping,
+    evals: &Registry,
+    cfg: &SimConfig,
+) -> Result<SimResult, SimError> {
+    simulate_dynamic(hw, graph, mapping, evals, cfg, &mut StaticExecutor)
+}
+
+/// Run a simulation with a dynamic-workload executor (§6.1 online mode).
+pub fn simulate_dynamic(
+    hw: &Hardware,
+    graph: &TaskGraph,
+    mapping: &Mapping,
+    evals: &Registry,
+    cfg: &SimConfig,
+    executor: &mut dyn Executor,
+) -> Result<SimResult, SimError> {
+    Engine::new(hw, graph, mapping, evals, cfg)?.run(executor)
+}
+
+struct Engine<'a> {
+    hw: &'a Hardware,
+    graph: &'a TaskGraph,
+    mapping: &'a Mapping,
+    evals: &'a Registry,
+    cfg: &'a SimConfig,
+
+    events: BinaryHeap<Reverse<(OrdF64, u64, u32)>>, // (time, seq) -> event idx? see push
+    event_payload: Vec<Event>,
+    seq: u64,
+
+    shared: HashMap<PointId, SharedPoint>,
+    excl: HashMap<PointId, ExclPoint>,
+    storage: HashMap<TaskId, StorageState>,
+    syncs: HashMap<u32, SyncGroupState>,
+
+    /// Flat (task, iter) tables: index = task.index() * iterations + iter.
+    /// deps_left uses u32::MAX as the "uninitialized" sentinel.
+    deps_left: Vec<u32>,
+    ready_time: Vec<Time>,
+    /// Real (non-phantom) ticks received per (task, iter) — a task whose
+    /// inputs are all dead-branch phantoms is dead itself (§6.1 dynamic
+    /// workloads: untriggered successors must not block joins).
+    real_ticks: Vec<u32>,
+    /// task -> completed iterations.
+    done_iters: Vec<u32>,
+    /// task -> mapped point (precomputed from the mapping for O(1) access).
+    point_of: Vec<Option<PointId>>,
+
+    demand_cache: HashMap<(u64, u64, u64, u32), (crate::eval::Demand, f64)>,
+
+    /// Flat (start, end) per task, NaN = never ran; folded into the result
+    /// map at the end.
+    flat_timings: Vec<(Time, Time)>,
+
+    result: SimResult,
+    mem_usage: HashMap<PointId, u64>,
+}
+
+impl<'a> Engine<'a> {
+    fn new(
+        hw: &'a Hardware,
+        graph: &'a TaskGraph,
+        mapping: &'a Mapping,
+        evals: &'a Registry,
+        cfg: &'a SimConfig,
+    ) -> Result<Self, SimError> {
+        if cfg.iterations == 0 {
+            return Err(SimError("iterations must be >= 1".into()));
+        }
+        // Validate placements of enabled tasks.
+        for task in graph.iter().filter(|t| t.enabled) {
+            match mapping.point_of(task.id) {
+                None => {
+                    return Err(SimError(format!(
+                        "enabled task {} ({}) is unmapped",
+                        task.id, task.name
+                    )))
+                }
+                Some(p) => {
+                    let kind = &hw.point(p).kind;
+                    let ok = match &task.kind {
+                        TaskKind::Compute(_) => kind.is_compute(),
+                        TaskKind::Storage { .. } => kind.is_memory(),
+                        TaskKind::Comm { .. } => kind.is_comm() || kind.is_memory(),
+                        TaskKind::Sync { .. } => true,
+                    };
+                    if !ok {
+                        return Err(SimError(format!(
+                            "task {} ({}) of kind {} mapped to incompatible point {}",
+                            task.id,
+                            task.name,
+                            task.kind.kind_name(),
+                            hw.entry(p).addr
+                        )));
+                    }
+                }
+            }
+        }
+        // Pre-collect sync barriers.
+        let mut syncs: HashMap<u32, SyncGroupState> = HashMap::new();
+        for task in graph.iter().filter(|t| t.enabled) {
+            if let TaskKind::Sync { sync_id } = task.kind {
+                syncs
+                    .entry(sync_id)
+                    .or_insert_with(|| SyncGroupState {
+                        members: Vec::new(),
+                        progress: HashMap::new(),
+                    })
+                    .members
+                    .push(task.id);
+            }
+        }
+        let slots = graph.capacity() * cfg.iterations as usize;
+        let mut point_of = vec![None; graph.capacity()];
+        for (t, p) in mapping.mapped_tasks() {
+            if (t.index()) < point_of.len() {
+                point_of[t.index()] = Some(p);
+            }
+        }
+        Ok(Engine {
+            hw,
+            graph,
+            mapping,
+            evals,
+            cfg,
+            events: BinaryHeap::new(),
+            event_payload: Vec::new(),
+            seq: 0,
+            shared: HashMap::new(),
+            excl: HashMap::new(),
+            storage: HashMap::new(),
+            syncs,
+            deps_left: vec![u32::MAX; slots],
+            ready_time: vec![0.0; slots],
+            real_ticks: vec![0; slots],
+            done_iters: vec![0; graph.capacity()],
+            point_of,
+            demand_cache: HashMap::new(),
+            flat_timings: vec![(f64::NAN, f64::NAN); graph.capacity()],
+            result: SimResult::default(),
+            mem_usage: HashMap::new(),
+        })
+    }
+
+    fn push_event(&mut self, time: Time, ev: Event) {
+        let idx = self.event_payload.len() as u32;
+        self.event_payload.push(ev);
+        self.events.push(Reverse((OrdF64(time), self.seq, idx)));
+        self.seq += 1;
+    }
+
+    /// (service demand, evaluation energy), memoized per representative
+    /// descriptor (the paper's §7.2 deduplication — evaluate one, reuse for
+    /// identical tiles).
+    fn demand_energy(&mut self, task: TaskId) -> (crate::eval::Demand, f64) {
+        let t = self.graph.task(task);
+        let p = self.point_of[task.index()].unwrap();
+        if self.cfg.dedup {
+            let key = match &t.kind {
+                TaskKind::Compute(c) => {
+                    let (op, dims, ib, ob, db, mf, vf) = c.dedup_key();
+                    let h = (op as u64) << 32
+                        ^ (dims[0] as u64) << 40
+                        ^ (dims[1] as u64) << 20
+                        ^ dims[2] as u64;
+                    Some((h ^ mf.rotate_left(24) ^ vf.rotate_left(48), ib ^ ob.rotate_left(16), db, p.0))
+                }
+                TaskKind::Comm { bytes, hops, .. } => Some((*bytes, *hops, u64::MAX, p.0)),
+                _ => None,
+            };
+            if let Some(key) = key {
+                if let Some(de) = self.demand_cache.get(&key) {
+                    return *de;
+                }
+                let ev = self.evals.for_point(self.hw.entry(p));
+                let de = (ev.demand(t, self.hw.entry(p)), ev.energy(t, self.hw.entry(p)));
+                self.demand_cache.insert(key, de);
+                return de;
+            }
+        }
+        let ev = self.evals.for_point(self.hw.entry(p));
+        (ev.demand(t, self.hw.entry(p)), ev.energy(t, self.hw.entry(p)))
+    }
+
+    fn run(mut self, executor: &mut dyn Executor) -> Result<SimResult, SimError> {
+        // Inject source ticks.
+        let sources: Vec<TaskId> = self
+            .graph
+            .iter()
+            .filter(|t| t.enabled && self.graph.predecessors(t.id).iter().all(|p| {
+                // predecessors that are disabled never fire; treat a task as a
+                // source if all its preds are disabled
+                !self.graph.task(*p).enabled
+            }))
+            .map(|t| t.id)
+            .collect();
+        for s in sources {
+            for iter in 0..self.cfg.iterations {
+                self.push_event(0.0, Event::Arrival(s, iter));
+            }
+        }
+
+        let mut processed = 0u64;
+        while let Some(Reverse((OrdF64(now), _, idx))) = self.events.pop() {
+            processed += 1;
+            if processed > self.cfg.max_events {
+                return Err(SimError(format!(
+                    "event cap exceeded ({} events)",
+                    self.cfg.max_events
+                )));
+            }
+            match std::mem::replace(&mut self.event_payload[idx as usize], Event::ExclDone(PointId(u32::MAX), u64::MAX)) {
+                Event::Arrival(task, iter) => self.on_arrival(task, iter, now, executor),
+                Event::ExclDone(point, gen) => self.on_excl_done(point, gen, now, executor),
+                Event::FlowDone(point, gen) => self.on_flow_done(point, gen, now, executor),
+            }
+        }
+
+        // Wind down: release storage tasks without consumers at makespan.
+        let makespan = self.result.makespan;
+        for (task, st) in self.storage.iter() {
+            if st.resident {
+                let end = if st.consumers_left == 0 {
+                    st.last_consumer_end
+                } else {
+                    makespan
+                };
+                let slot = &mut self.flat_timings[task.index()];
+                if slot.1.is_nan() || end > slot.1 {
+                    *slot = (if slot.0.is_nan() { st.start } else { slot.0 }, end);
+                }
+            }
+        }
+        // fold flat timings into the public map
+        for (i, (st, en)) in self.flat_timings.iter().enumerate() {
+            if !en.is_nan() {
+                self.result.timings.insert(TaskId(i as u32), (*st, *en));
+            }
+        }
+        // Unfinished tasks.
+        for t in self.graph.iter().filter(|t| t.enabled) {
+            if t.kind.is_storage() {
+                continue;
+            }
+            let done = self.done_iters[t.id.index()];
+            if done < self.cfg.iterations {
+                self.result.unfinished += 1;
+            }
+        }
+        // Memory peaks vs capacity.
+        for (p, peak) in &self.result.peak_memory {
+            if let Some(m) = self.hw.point(*p).kind.as_memory() {
+                if *peak > m.capacity {
+                    self.result.memory_violations.push(format!(
+                        "{}: peak {} bytes exceeds capacity {}",
+                        self.hw.entry(*p).addr,
+                        peak,
+                        m.capacity
+                    ));
+                }
+            }
+        }
+        Ok(self.result)
+    }
+
+    // ------------------------------------------------------------------
+    // Event handlers
+    // ------------------------------------------------------------------
+
+    fn on_arrival(&mut self, task: TaskId, iter: u32, now: Time, executor: &mut dyn Executor) {
+        // lightweight kind discriminant — avoids cloning route vectors
+        enum K {
+            Compute,
+            Comm,
+            Storage(u64),
+            Sync(u32),
+        }
+        let kind = match &self.graph.task(task).kind {
+            TaskKind::Compute(_) => K::Compute,
+            TaskKind::Comm { .. } => K::Comm,
+            TaskKind::Storage { bytes } => K::Storage(*bytes),
+            TaskKind::Sync { sync_id } => K::Sync(*sync_id),
+        };
+        match kind {
+            K::Compute => {
+                let p = self.point_of[task.index()].unwrap();
+                let excl = self.excl.entry(p).or_default();
+                excl.pending.push(Reverse((OrdF64(now), task, iter)));
+                self.try_start_excl(p, now);
+            }
+            K::Comm => {
+                let p = self.point_of[task.index()].unwrap();
+                self.add_flow(p, task, iter, now);
+            }
+            K::Storage(bytes) => {
+                // Eq. 2: activates at the first tick; output edges always
+                // hold ticks — complete immediately at `now`.
+                let consumers =
+                    self.graph.successors(task).len() as u64 * self.cfg.iterations as u64;
+                let p = self.point_of[task.index()].unwrap();
+                let st = self.storage.entry(task).or_insert_with(|| StorageState {
+                    resident: false,
+                    bytes,
+                    start: now,
+                    consumers_left: consumers,
+                    last_consumer_end: now,
+                });
+                if !st.resident {
+                    st.resident = true;
+                    st.start = now;
+                    let usage = self.mem_usage.entry(p).or_insert(0);
+                    *usage += bytes;
+                    let peak = self.result.peak_memory.entry(p).or_insert(0);
+                    *peak = (*peak).max(*usage);
+                }
+                self.complete(task, iter, now, now, executor);
+            }
+            K::Sync(sync_id) => {
+                let members_done = {
+                    let group = self.syncs.get_mut(&sync_id).expect("sync group");
+                    let entry = group.progress.entry(iter).or_insert((0, 0.0));
+                    entry.0 += 1;
+                    entry.1 = entry.1.max(now);
+                    entry.0 == group.members.len()
+                };
+                if members_done {
+                    let group = &self.syncs[&sync_id];
+                    let at = group.progress[&iter].1;
+                    let members = group.members.clone();
+                    for m in members {
+                        self.complete(m, iter, at, at, executor);
+                    }
+                }
+            }
+        }
+    }
+
+    fn try_start_excl(&mut self, p: PointId, now: Time) {
+        let excl = self.excl.get_mut(&p).unwrap();
+        if excl.running.is_some() {
+            return;
+        }
+        let Some(Reverse((OrdF64(ready), task, iter))) = excl.pending.pop() else {
+            return;
+        };
+        let start = ready.max(excl.timer).max(now);
+        excl.generation += 1;
+        let gen = excl.generation;
+        let (demand, energy) = self.demand_energy(task);
+        let end = start + demand.total();
+        if energy > 0.0 {
+            *self.result.point_energy.entry(p).or_insert(0.0) += energy;
+        }
+        let excl = self.excl.get_mut(&p).unwrap();
+        excl.running = Some((task, iter, start, end));
+        *self.result.point_busy.entry(p).or_insert(0.0) += demand.total();
+        if self.cfg.collect_timeline {
+            self.result.timeline.push(TimelineEvent {
+                task,
+                iter,
+                point: p,
+                start,
+                end,
+            });
+        }
+        self.push_event(end, Event::ExclDone(p, gen));
+    }
+
+    fn on_excl_done(&mut self, p: PointId, gen: u64, now: Time, executor: &mut dyn Executor) {
+        let excl = self.excl.get_mut(&p).unwrap();
+        if excl.generation != gen {
+            return;
+        }
+        let (task, iter, start, end) = excl.running.take().expect("running task");
+        excl.timer = end;
+        self.complete(task, iter, start, end, executor);
+        self.try_start_excl(p, now);
+    }
+
+    // ---------------- shared (fluid) resources ----------------
+
+    fn add_flow(&mut self, p: PointId, task: TaskId, iter: u32, now: Time) {
+        let (demand, energy) = self.demand_energy(task);
+        if energy > 0.0 {
+            *self.result.point_energy.entry(p).or_insert(0.0) += energy;
+        }
+        let links = self.flow_links(p, task);
+        self.advance_flows(p, now);
+        let sp = self.shared.entry(p).or_insert_with(|| SharedPoint {
+            flows: Vec::new(),
+            last_update: now,
+            generation: 0,
+        });
+        sp.flows.push(Flow {
+            task,
+            iter,
+            remaining: demand.shared.max(0.0),
+            fixed: demand.fixed,
+            links,
+            rate: 1.0,
+            start: now,
+        });
+        *self.result.point_busy.entry(p).or_insert(0.0) += demand.shared;
+        self.reschedule_flows(p, now);
+    }
+
+    fn flow_links(&self, p: PointId, task: TaskId) -> Vec<LinkId> {
+        let entry = self.hw.entry(p);
+        let PointKind::Comm(attrs) = &entry.point.kind else {
+            return Vec::new(); // memory/DRAM channel: whole-resource sharing
+        };
+        let TaskKind::Comm {
+            route: Some((from, to)),
+            ..
+        } = &self.graph.task(task).kind
+        else {
+            return Vec::new();
+        };
+        let matrix = match &entry.addr {
+            crate::hwir::Addr::Comm { matrix, .. } => matrix.clone(),
+            _ => return Vec::new(),
+        };
+        let Some(shape) = self.hw.matrix_shape(&matrix) else {
+            return Vec::new();
+        };
+        link_set(&attrs.topology, from, to, shape)
+    }
+
+    /// Integrate flow progress up to `now`.
+    fn advance_flows(&mut self, p: PointId, now: Time) {
+        if let Some(sp) = self.shared.get_mut(&p) {
+            let dt = now - sp.last_update;
+            if dt > 0.0 {
+                for f in &mut sp.flows {
+                    f.remaining -= f.rate * dt;
+                    if f.remaining < 0.0 {
+                        f.remaining = 0.0;
+                    }
+                }
+            }
+            sp.last_update = now;
+        }
+    }
+
+    /// Recompute rates (equal sharing of the bottleneck link) and schedule
+    /// the next completion candidate.
+    fn reschedule_flows(&mut self, p: PointId, now: Time) {
+        let mut trunc = 0u64;
+        let next = {
+            let sp = self.shared.get_mut(&p).unwrap();
+            let n = sp.flows.len();
+            // Link-occupancy histogram: congestion(f) = max over f's links
+            // of sharers (universal flows share everything). O(total links)
+            // instead of the naive O(F²·L²) scan — the engine's hottest
+            // loop on contended NoCs (see EXPERIMENTS.md §Perf).
+            let mut universal = 0usize;
+            let mut link_count: HashMap<LinkId, usize> = HashMap::new();
+            for f in &sp.flows {
+                if f.links.is_empty() {
+                    universal += 1;
+                } else {
+                    for l in &f.links {
+                        *link_count.entry(*l).or_insert(0) += 1;
+                    }
+                }
+            }
+            let mut rates = Vec::with_capacity(n);
+            for fi in &sp.flows {
+                let congestion = if fi.links.is_empty() {
+                    n
+                } else {
+                    let worst = fi.links.iter().map(|l| link_count[l]).max().unwrap_or(1);
+                    worst + universal
+                };
+                rates.push(1.0 / (congestion.max(1)) as f64);
+            }
+            for (f, r) in sp.flows.iter_mut().zip(rates) {
+                if r < f.rate {
+                    trunc += 1; // flow lost bandwidth: Algorithm-1 truncation
+                }
+                f.rate = r;
+            }
+            sp.generation += 1;
+            let gen = sp.generation;
+            sp.flows
+                .iter()
+                .map(|f| now + f.remaining / f.rate)
+                .min_by(|a, b| a.total_cmp(b))
+                .map(|t| (t, gen))
+        };
+        self.result.truncations += trunc;
+        if let Some((t, gen)) = next {
+            self.push_event(t, Event::FlowDone(p, gen));
+        }
+    }
+
+    fn on_flow_done(&mut self, p: PointId, gen: u64, now: Time, executor: &mut dyn Executor) {
+        {
+            let sp = self.shared.get(&p).unwrap();
+            if sp.generation != gen {
+                return;
+            }
+        }
+        self.advance_flows(p, now);
+        // complete all flows that hit zero
+        let finished: Vec<Flow> = {
+            let sp = self.shared.get_mut(&p).unwrap();
+            let mut done = Vec::new();
+            let mut i = 0;
+            while i < sp.flows.len() {
+                if sp.flows[i].remaining <= 1e-9 {
+                    done.push(sp.flows.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            done
+        };
+        for f in finished {
+            let end = now + f.fixed;
+            if self.cfg.collect_timeline {
+                self.result.timeline.push(TimelineEvent {
+                    task: f.task,
+                    iter: f.iter,
+                    point: p,
+                    start: f.start,
+                    end,
+                });
+            }
+            self.complete(f.task, f.iter, f.start, end, executor);
+        }
+        if !self.shared[&p].flows.is_empty() {
+            self.reschedule_flows(p, now);
+        }
+    }
+
+    // ---------------- completion & tick propagation ----------------
+
+    fn complete(
+        &mut self,
+        task: TaskId,
+        iter: u32,
+        start: Time,
+        end: Time,
+        executor: &mut dyn Executor,
+    ) {
+        self.result.completed += 1;
+        if end > self.result.makespan {
+            self.result.makespan = end;
+        }
+        self.flat_timings[task.index()] = (start, end);
+        self.done_iters[task.index()] += 1;
+        // Compute/comm timeline entries are recorded where they are issued;
+        // storage and sync tasks are recorded here.
+        let kind = &self.graph.task(task).kind;
+        if self.cfg.collect_timeline && (kind.is_storage() || kind.is_sync()) {
+            self.result.timeline.push(TimelineEvent {
+                task,
+                iter,
+                point: self.mapping.point_of(task).unwrap_or(PointId(u32::MAX)),
+                start,
+                end,
+            });
+        }
+
+        // Release storage predecessors.
+        for &pred in self.graph.predecessors(task) {
+            if let Some(st) = self.storage.get_mut(&pred) {
+                if st.consumers_left > 0 {
+                    st.consumers_left -= 1;
+                    st.last_consumer_end = st.last_consumer_end.max(end);
+                    if st.consumers_left == 0 && st.resident {
+                        st.resident = false;
+                        let p = self.point_of[pred.index()].unwrap();
+                        let usage = self.mem_usage.entry(p).or_insert(0);
+                        *usage = usage.saturating_sub(st.bytes);
+                        self.flat_timings[pred.index()] = (st.start, st.last_consumer_end);
+                    }
+                }
+            }
+        }
+
+        // Fire ticks on output edges (consulting the dynamic executor).
+        // Untriggered successors receive *phantom* ticks: the dependency is
+        // discharged without data, so a join after an untaken branch still
+        // activates once its live inputs arrive, and all-phantom tasks die
+        // and propagate phantoms downstream.
+        let succs = self.graph.successors(task).to_vec();
+        let triggered = executor.triggered(task, &succs);
+        for s in succs {
+            let real = triggered.contains(&s);
+            self.tick(s, iter, end, real);
+        }
+    }
+
+    /// Deliver one tick (real or phantom) to `(task, iter)`.
+    fn tick(&mut self, s: TaskId, iter: u32, end: Time, real: bool) {
+        if !self.graph.task(s).enabled {
+            return;
+        }
+        let iters = self.cfg.iterations as usize;
+        let slot = s.index() * iters + iter as usize;
+        if self.deps_left[slot] == u32::MAX {
+            self.deps_left[slot] = self
+                .graph
+                .predecessors(s)
+                .iter()
+                .filter(|p| self.graph.task(**p).enabled)
+                .count() as u32;
+        }
+        self.deps_left[slot] -= 1;
+        if real {
+            self.real_ticks[slot] += 1;
+            if end > self.ready_time[slot] {
+                self.ready_time[slot] = end;
+            }
+        }
+        if self.deps_left[slot] == 0 {
+            if self.real_ticks[slot] > 0 {
+                let at = self.ready_time[slot];
+                self.push_event(at, Event::Arrival(s, iter));
+            } else {
+                // dead path: discharge downstream dependencies
+                for next in self.graph.successors(s).to_vec() {
+                    self.tick(next, iter, end, false);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Registry;
+    use crate::hwir::{
+        CommAttrs, ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint, Topology,
+    };
+    use crate::taskgraph::{ComputeCost, OpClass};
+
+    /// One compute core + a bus comm point + a memory.
+    fn tiny_hw(bus_bw: f64) -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![2]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((4, 4), 8).with_lmem(MemoryAttrs::new(1 << 20, 64.0, 0)),
+            )),
+        );
+        m.set(
+            Coord::new(vec![1]),
+            Element::Point(SpacePoint::memory("mem", MemoryAttrs::new(4096, 16.0, 0))),
+        );
+        m.add_comm(SpacePoint::comm(
+            "bus",
+            CommAttrs::new(Topology::Bus, bus_bw, 0),
+        ));
+        Hardware::build(m)
+    }
+
+    fn compute_task(cycles: f64) -> TaskKind {
+        // vec_flops chosen so demand = cycles on 8 lanes (2*8 flops/cycle)
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = cycles * 16.0;
+        TaskKind::Compute(c)
+    }
+
+    fn comm_task(bytes: u64) -> TaskKind {
+        TaskKind::Comm { bytes, hops: 0, route: None }
+    }
+
+    #[test]
+    fn single_chain_timing() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(100.0));
+        let b = g.add("b", comm_task(50)); // 50 bytes / 1 B/cyc = 50 cycles
+        let c = g.add("c", compute_task(25.0));
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(a, core);
+        m.map(b, bus);
+        m.map(c, core);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.makespan, 175.0);
+        assert_eq!(r.timings[&a].1, 100.0);
+        assert_eq!(r.timings[&b].1, 150.0);
+        assert_eq!(r.timings[&c], (150.0, 175.0));
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.unfinished, 0);
+    }
+
+    #[test]
+    fn exclusive_point_serializes() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(100.0));
+        let b = g.add("b", compute_task(100.0));
+        let core = hw.points_of_kind("compute")[0];
+        let mut m = Mapping::new();
+        m.map(a, core);
+        m.map(b, core);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        // both ready at 0; serialized on the exclusive core
+        assert_eq!(r.makespan, 200.0);
+        assert!((r.utilization(core) - 1.0).abs() < 1e-9);
+    }
+
+    /// Hardware-consistent contention (paper Fig. 6 scenario, our numbers):
+    /// E (compute, 100 cy) fires A (50 work) and F (200 work) on a shared
+    /// bus; A's successor B (compute, 100 cy) fires C (80 work) on the bus.
+    ///
+    /// Fluid timeline: A,F share from 100; A done at 200 (rate ½).
+    /// F alone until C arrives at 300 with 100 work left -> 50 left at 300;
+    /// F,C share: F done at 400; C has 50 done, 30 left alone -> done 430.
+    #[test]
+    fn fig6_hardware_consistent_contention() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let e = g.add("E", compute_task(100.0));
+        let a = g.add("A", comm_task(50));
+        let f = g.add("F", comm_task(200));
+        let b = g.add("B", compute_task(100.0));
+        let c = g.add("C", comm_task(80));
+        g.connect(e, a);
+        g.connect(e, f);
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e, core);
+        m.map(b, core);
+        for t in [a, f, c] {
+            m.map(t, bus);
+        }
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.timings[&e].1, 100.0);
+        assert_eq!(r.timings[&a].1, 200.0, "A shares the bus with F");
+        assert_eq!(r.timings[&b].1, 300.0);
+        assert_eq!(r.timings[&f].1, 400.0, "F truncated by C's arrival");
+        assert_eq!(r.timings[&c].1, 430.0);
+        assert!(r.truncations >= 2, "A/F then F/C sharing");
+    }
+
+    #[test]
+    fn link_level_contention_on_mesh() {
+        // 1x3 mesh; flows (0)->(2) and (0)->(1) share the first link;
+        // flow (1)->(2) moves opposite... no — (1)->(2) shares link 1 with
+        // (0)->(2). Verify halved bandwidth on the shared prefix.
+        let mut m = SpaceMatrix::new("chip", vec![3]);
+        for i in 0..3 {
+            m.set(
+                Coord::new(vec![i]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((4, 4), 8).with_lmem(MemoryAttrs::new(1 << 20, 64.0, 0)),
+                )),
+            );
+        }
+        m.add_comm(SpacePoint::comm(
+            "noc",
+            CommAttrs::new(Topology::Mesh, 1.0, 0),
+        ));
+        let hw = Hardware::build(m);
+        let noc = hw.points_of_kind("comm")[0];
+
+        let mut g = TaskGraph::new();
+        let mk = |g: &mut TaskGraph, name: &str, bytes: u64, from: u32, to: u32| {
+            g.add(
+                name,
+                TaskKind::Comm {
+                    bytes,
+                    hops: (from as i64 - to as i64).unsigned_abs(),
+                    route: Some((Coord::new(vec![from]), Coord::new(vec![to]))),
+                },
+            )
+        };
+        let x = mk(&mut g, "x", 100, 0, 2); // links 0,1
+        let y = mk(&mut g, "y", 100, 0, 1); // link 0 (shared with x)
+        let z = mk(&mut g, "z", 100, 2, 0); // reverse direction: no contention
+        let mut map = Mapping::new();
+        for t in [x, y, z] {
+            map.map(t, noc);
+        }
+        let r = simulate(&hw, &g, &map, &Registry::standard(), &SimConfig::default()).unwrap();
+        // z runs at full rate: 100 cycles. x,y share link 0: both at rate ½
+        // until y (100 work) is done at 200; x finishes its last 0 work...
+        // both x and y have 100 work; equal rates -> both complete at 200.
+        assert_eq!(r.timings[&z].1, 100.0);
+        assert_eq!(r.timings[&y].1, 200.0);
+        assert_eq!(r.timings[&x].1, 200.0);
+    }
+
+    #[test]
+    fn storage_lifecycle_and_peak_memory() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let w = g.add("weights", TaskKind::Storage { bytes: 3000 });
+        let a = g.add("a", compute_task(50.0));
+        let c = g.add("use", compute_task(10.0));
+        g.connect(w, c);
+        g.connect(a, c);
+        let core = hw.points_of_kind("compute")[0];
+        let mem = hw.points_of_kind("memory")[0];
+        let mut m = Mapping::new();
+        m.map(w, mem);
+        m.map(a, core);
+        m.map(c, core);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.peak_memory[&mem], 3000);
+        assert!(r.memory_violations.is_empty());
+        // storage lives until its consumer finishes at 60
+        assert_eq!(r.timings[&w], (0.0, 60.0));
+    }
+
+    #[test]
+    fn memory_capacity_violation_reported() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let w = g.add("big", TaskKind::Storage { bytes: 10_000 }); // mem cap 4096
+        let c = g.add("c", compute_task(1.0));
+        g.connect(w, c);
+        let mut m = Mapping::new();
+        m.map(w, hw.points_of_kind("memory")[0]);
+        m.map(c, hw.points_of_kind("compute")[0]);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.memory_violations.len(), 1);
+    }
+
+    #[test]
+    fn sync_barrier_completes_at_max_ready() {
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(100.0));
+        let b = g.add("b", comm_task(30)); // done at 30 on bus
+        let s1 = g.add("s1", TaskKind::Sync { sync_id: 9 });
+        let s2 = g.add("s2", TaskKind::Sync { sync_id: 9 });
+        let after = g.add("after", compute_task(10.0));
+        g.connect(a, s1);
+        g.connect(b, s2);
+        g.connect(s1, after);
+        g.connect(s2, after);
+        let mut m = Mapping::new();
+        m.map(a, core);
+        m.map(b, bus);
+        m.map(s1, core);
+        m.map(s2, bus);
+        m.map(after, core);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        // barrier at max(100, 30) = 100; after runs 100..110
+        assert_eq!(r.timings[&s1].1, 100.0);
+        assert_eq!(r.timings[&s2].1, 100.0);
+        assert_eq!(r.timings[&after], (100.0, 110.0));
+    }
+
+    #[test]
+    fn iterations_stream_through() {
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(10.0));
+        let mut m = Mapping::new();
+        m.map(a, core);
+        let cfg = SimConfig {
+            iterations: 5,
+            ..Default::default()
+        };
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &cfg).unwrap();
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.makespan, 50.0); // serialized on the core
+    }
+
+    #[test]
+    fn disabled_tasks_are_skipped() {
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(10.0));
+        let b = g.add("b", compute_task(10.0));
+        g.task_mut(b).enabled = false;
+        g.connect(a, b);
+        let mut m = Mapping::new();
+        m.map(a, core);
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.makespan, 10.0);
+    }
+
+    #[test]
+    fn unmapped_enabled_task_is_an_error() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        g.add("a", compute_task(10.0));
+        let m = Mapping::new();
+        assert!(simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).is_err());
+    }
+
+    #[test]
+    fn dynamic_executor_prunes_branch() {
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(10.0));
+        let b = g.add("b", compute_task(10.0));
+        let c = g.add("c", compute_task(1000.0));
+        g.connect(a, b);
+        g.connect(a, c);
+        let mut m = Mapping::new();
+        for t in [a, b, c] {
+            m.map(t, core);
+        }
+        let mut trace = crate::taskgraph::Trace::new([a, b]);
+        let r = simulate_dynamic(
+            &hw,
+            &g,
+            &m,
+            &Registry::standard(),
+            &SimConfig::default(),
+            &mut trace,
+        )
+        .unwrap();
+        assert_eq!(r.makespan, 20.0); // c never triggered
+        assert_eq!(r.unfinished, 1);
+    }
+
+    #[test]
+    fn prop_makespan_at_least_critical_path() {
+        use crate::util::propcheck::{check, Gen};
+        check("makespan >= critical path lower bound", 24, |gen: &mut Gen| {
+            let hw = tiny_hw(1.0);
+            let core = hw.points_of_kind("compute")[0];
+            let n = gen.usize(1..=12);
+            let mut g = TaskGraph::new();
+            let mut cycles = Vec::new();
+            let ids: Vec<TaskId> = (0..n)
+                .map(|i| {
+                    let c = gen.usize(1..=50) as f64;
+                    cycles.push(c);
+                    g.add(format!("t{i}"), compute_task(c))
+                })
+                .collect();
+            for i in 0..n {
+                for j in i + 1..n {
+                    if gen.bool() && gen.bool() {
+                        g.connect(ids[i], ids[j]);
+                    }
+                }
+            }
+            let mut m = Mapping::new();
+            for id in &ids {
+                m.map(*id, core);
+            }
+            let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default())
+                .map_err(|e| e.to_string())?;
+            // all on one exclusive core: makespan == sum of cycles
+            let sum: f64 = cycles.iter().sum();
+            if (r.makespan - sum).abs() > 1e-6 {
+                return Err(format!("makespan {} != serial sum {}", r.makespan, sum));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! Physical-link occupancy of communication flows.
+//!
+//! Contention zones in the paper are "sets of tasks that potentially share
+//! and compete for the same hardware resource" — for on-chip/-package
+//! networks the resource is an individual *link*, not the whole NoC (Fig. 6:
+//! two transfers contend only because "their first hop shares a link").
+//! Given a flow's within-level entry/exit coordinates and the level's
+//! topology, [`link_set`] returns the ids of the links it occupies under the
+//! deterministic routing conventions below; two flows contend iff their link
+//! sets intersect.
+//!
+//! Routing conventions:
+//! * **Mesh / Torus** — dimension-order (XY…) routing; torus picks the
+//!   shorter wrap direction per dimension (ties go "up").
+//! * **Ring** — shorter arc over the row-major linearization (ties
+//!   clockwise).
+//! * **Bus** — a single shared link (id 0).
+//! * **Fully-connected** — one dedicated link per ordered endpoint pair.
+//! * **Tree** — the up-down path through the lowest common ancestor.
+
+use crate::hwir::{Coord, Topology};
+
+/// Opaque link identifier, unique within one communication point.
+pub type LinkId = u64;
+
+/// Links occupied by a `from -> to` flow on a level with `shape` under
+/// `topo`. Empty when `from == to` (no network traversal).
+pub fn link_set(topo: &Topology, from: &Coord, to: &Coord, shape: &[usize]) -> Vec<LinkId> {
+    if from == to {
+        return Vec::new();
+    }
+    match topo {
+        Topology::Bus => vec![0],
+        Topology::FullyConnected => {
+            let n: usize = shape.iter().product();
+            let a = from.linearize(shape).expect("coord out of shape");
+            let b = to.linearize(shape).expect("coord out of shape");
+            vec![(a * n + b) as LinkId]
+        }
+        Topology::Ring => ring_links(from, to, shape),
+        Topology::Mesh => mesh_links(from, to, shape, false),
+        Topology::Torus => mesh_links(from, to, shape, true),
+        Topology::Tree { fanout } => tree_links(from, to, shape, *fanout),
+    }
+}
+
+/// Directed mesh/torus link id: (node, dim, direction) encoded.
+fn mesh_link_id(node: usize, dim: usize, positive: bool) -> LinkId {
+    ((node as u64) << 8) | ((dim as u64) << 1) | (positive as u64)
+}
+
+fn mesh_links(from: &Coord, to: &Coord, shape: &[usize], wrap: bool) -> Vec<LinkId> {
+    let mut links = Vec::new();
+    let mut cur = from.0.clone();
+    for dim in 0..shape.len() {
+        let size = shape[dim] as i64;
+        let mut pos = cur[dim] as i64;
+        let dst = to.0[dim] as i64;
+        if pos == dst {
+            continue;
+        }
+        // step direction: mesh = straight; torus = shorter way (ties +)
+        let straight = dst - pos;
+        let step: i64 = if !wrap {
+            straight.signum()
+        } else {
+            let fwd = (dst - pos).rem_euclid(size);
+            let back = (pos - dst).rem_euclid(size);
+            if fwd <= back {
+                1
+            } else {
+                -1
+            }
+        };
+        while pos != dst {
+            let mut node_coord = cur.clone();
+            node_coord[dim] = pos as u32;
+            let node = Coord(node_coord).linearize(shape).expect("coord in shape");
+            links.push(mesh_link_id(node, dim, step > 0));
+            pos = (pos + step).rem_euclid(size);
+        }
+        cur[dim] = dst as u32;
+    }
+    links
+}
+
+fn ring_links(from: &Coord, to: &Coord, shape: &[usize]) -> Vec<LinkId> {
+    let n = shape.iter().product::<usize>() as i64;
+    let a = from.linearize(shape).expect("coord out of shape") as i64;
+    let b = to.linearize(shape).expect("coord out of shape") as i64;
+    let fwd = (b - a).rem_euclid(n);
+    let back = (a - b).rem_euclid(n);
+    let step = if fwd <= back { 1 } else { -1 };
+    let mut links = Vec::new();
+    let mut pos = a;
+    while pos != b {
+        // link between pos and pos+step, directional
+        links.push(((pos as u64) << 1) | ((step > 0) as u64));
+        pos = (pos + step).rem_euclid(n);
+    }
+    links
+}
+
+fn tree_links(from: &Coord, to: &Coord, shape: &[usize], fanout: usize) -> Vec<LinkId> {
+    let f = fanout.max(2);
+    let mut a = from.linearize(shape).expect("coord out of shape");
+    let mut b = to.linearize(shape).expect("coord out of shape");
+    let mut links = Vec::new();
+    let mut level = 0u64;
+    while a != b {
+        // (child node, level) edges; direction folded into distinct up/down ids
+        links.push((a as u64) << 16 | level << 1); // up edge from a's subtree
+        links.push((b as u64) << 16 | level << 1 | 1); // down edge into b's subtree
+        a /= f;
+        b /= f;
+        level += 1;
+    }
+    links
+}
+
+/// True iff two link sets intersect (both sorted or small — linear scan).
+pub fn flows_contend(a: &[LinkId], b: &[LinkId]) -> bool {
+    a.iter().any(|l| b.contains(l))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(v: &[u32]) -> Coord {
+        Coord(v.to_vec())
+    }
+
+    #[test]
+    fn same_endpoint_is_linkless() {
+        assert!(link_set(&Topology::Mesh, &c(&[1, 1]), &c(&[1, 1]), &[4, 4]).is_empty());
+    }
+
+    #[test]
+    fn bus_always_contends() {
+        let a = link_set(&Topology::Bus, &c(&[0]), &c(&[1]), &[4]);
+        let b = link_set(&Topology::Bus, &c(&[2]), &c(&[3]), &[4]);
+        assert!(flows_contend(&a, &b));
+    }
+
+    #[test]
+    fn fully_connected_never_contends_across_pairs() {
+        let a = link_set(&Topology::FullyConnected, &c(&[0]), &c(&[1]), &[4]);
+        let b = link_set(&Topology::FullyConnected, &c(&[0]), &c(&[2]), &[4]);
+        let a2 = link_set(&Topology::FullyConnected, &c(&[0]), &c(&[1]), &[4]);
+        assert!(!flows_contend(&a, &b));
+        assert!(flows_contend(&a, &a2));
+    }
+
+    #[test]
+    fn mesh_xy_routing_length() {
+        let links = link_set(&Topology::Mesh, &c(&[0, 0]), &c(&[2, 3]), &[4, 4]);
+        assert_eq!(links.len(), 5); // manhattan distance
+    }
+
+    #[test]
+    fn mesh_shared_first_hop_contends() {
+        // (0,0)->(0,2) and (0,0)->(0,3): same row, shared first links
+        let a = link_set(&Topology::Mesh, &c(&[0, 0]), &c(&[0, 2]), &[4, 4]);
+        let b = link_set(&Topology::Mesh, &c(&[0, 0]), &c(&[0, 3]), &[4, 4]);
+        assert!(flows_contend(&a, &b));
+        // disjoint rows never contend under XY routing from distinct sources
+        let p = link_set(&Topology::Mesh, &c(&[1, 0]), &c(&[1, 3]), &[4, 4]);
+        let q = link_set(&Topology::Mesh, &c(&[2, 0]), &c(&[2, 3]), &[4, 4]);
+        assert!(!flows_contend(&p, &q));
+    }
+
+    #[test]
+    fn mesh_opposite_directions_do_not_contend() {
+        // full-duplex links: A->B and B->A use different directed links
+        let ab = link_set(&Topology::Mesh, &c(&[0, 0]), &c(&[0, 1]), &[2, 2]);
+        let ba = link_set(&Topology::Mesh, &c(&[0, 1]), &c(&[0, 0]), &[2, 2]);
+        assert!(!flows_contend(&ab, &ba));
+    }
+
+    #[test]
+    fn torus_wraps_shorter_way() {
+        let links = link_set(&Topology::Torus, &c(&[0]), &c(&[3]), &[4]);
+        assert_eq!(links.len(), 1); // wrap 0 -> 3 directly
+        let links2 = link_set(&Topology::Torus, &c(&[0]), &c(&[2]), &[4]);
+        assert_eq!(links2.len(), 2);
+    }
+
+    #[test]
+    fn ring_shorter_arc() {
+        let l = link_set(&Topology::Ring, &c(&[0, 0]), &c(&[1, 3]), &[2, 4]); // idx 0 -> 7
+        assert_eq!(l.len(), 1);
+        // overlapping arcs contend
+        let a = link_set(&Topology::Ring, &c(&[0, 0]), &c(&[0, 2]), &[2, 4]);
+        let b = link_set(&Topology::Ring, &c(&[0, 1]), &c(&[0, 3]), &[2, 4]);
+        assert!(flows_contend(&a, &b));
+    }
+
+    #[test]
+    fn tree_paths_share_root_links() {
+        // 8-leaf binary tree: 0->7 and 1->6 both cross the root
+        let a = link_set(&Topology::Tree { fanout: 2 }, &c(&[0]), &c(&[7]), &[8]);
+        let b = link_set(&Topology::Tree { fanout: 2 }, &c(&[1]), &c(&[6]), &[8]);
+        assert!(flows_contend(&a, &b));
+        // 0->1 stays in the bottom subtree; 6->7 in another
+        let p = link_set(&Topology::Tree { fanout: 2 }, &c(&[0]), &c(&[1]), &[8]);
+        let q = link_set(&Topology::Tree { fanout: 2 }, &c(&[6]), &c(&[7]), &[8]);
+        assert!(!flows_contend(&p, &q));
+    }
+
+    #[test]
+    fn prop_link_count_matches_hops() {
+        use crate::util::propcheck::{check, Gen};
+        check("mesh link count == hop count", 96, |g: &mut Gen| {
+            let shape = vec![g.usize(1..=5), g.usize(1..=5)];
+            let total: usize = shape.iter().product();
+            let a = Coord::from_linear(g.usize(0..=total - 1), &shape).unwrap();
+            let b = Coord::from_linear(g.usize(0..=total - 1), &shape).unwrap();
+            for topo in [Topology::Mesh, Topology::Torus, Topology::Ring] {
+                let hops = topo.hops(&a, &b, &shape);
+                let links = link_set(&topo, &a, &b, &shape);
+                if links.len() as u64 != hops {
+                    return Err(format!(
+                        "{topo:?} {a}->{b} in {shape:?}: {} links vs {hops} hops",
+                        links.len()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Universal multi-level simulator generation (paper §6).
+//!
+//! * [`engine`] — the task-level event-driven simulator with exact
+//!   hardware-consistent contention (global-event-order fluid sharing).
+//! * [`consistent`] — the paper's Algorithm 1: speculative per-point zone
+//!   scheduling with a contention-staged buffer (commit/rollback); agrees
+//!   with [`engine`] by construction (see its equivalence tests).
+//! * [`reference`] — the naive dependency-order baseline *without*
+//!   contention awareness, reproducing the Fig. 6 inconsistency.
+//! * [`links`] — physical-link occupancy for contention-zone detection.
+
+pub mod consistent;
+pub mod engine;
+pub mod links;
+pub mod reference;
+
+pub use engine::{simulate, simulate_dynamic, SimConfig, SimError, SimResult, Time, TimelineEvent};
+
+pub use consistent::simulate_consistent;
+pub use reference::simulate_naive;
+
+pub mod trace;
+pub use trace::chrome_trace;

@@ -1,0 +1,172 @@
+//! Naive dependency-order baseline — *without* the hardware-consistent
+//! scheduler (paper Fig. 6).
+//!
+//! Tasks are evaluated atomically in dependency order at full, uncontended
+//! bandwidth: `Start(v) = max(pred ends)` (plus the point timer on exclusive
+//! compute points), `End(v) = Start + E_p(v)`. Overlapping transfers on a
+//! shared link do **not** slow each other down, so results diverge from real
+//! hardware exactly as the paper's Fig. 6 illustrates. Used by the
+//! `sched_ablation` bench to quantify the inconsistency the
+//! hardware-consistent engine removes.
+
+use std::collections::HashMap;
+
+use crate::eval::Registry;
+use crate::hwir::Hardware;
+use crate::mapping::Mapping;
+use crate::taskgraph::{TaskGraph, TaskKind};
+
+use super::engine::{SimError, SimResult, Time};
+
+/// Run the naive baseline (single iteration).
+pub fn simulate_naive(
+    hw: &Hardware,
+    graph: &TaskGraph,
+    mapping: &Mapping,
+    evals: &Registry,
+) -> Result<SimResult, SimError> {
+    let order = graph
+        .toposort()
+        .ok_or_else(|| SimError("task graph has a cycle".into()))?;
+    let mut result = SimResult::default();
+    let mut timers: HashMap<crate::hwir::PointId, Time> = HashMap::new();
+    let mut ends: HashMap<crate::taskgraph::TaskId, Time> = HashMap::new();
+
+    for id in order {
+        let task = graph.task(id);
+        if !task.enabled {
+            continue;
+        }
+        let ready = graph
+            .predecessors(id)
+            .iter()
+            .filter(|p| graph.task(**p).enabled)
+            .map(|p| ends.get(p).copied().unwrap_or(0.0))
+            .fold(0.0f64, f64::max);
+        let Some(point) = mapping.point_of(id) else {
+            return Err(SimError(format!("task {} unmapped", task.name)));
+        };
+        let (start, end) = match &task.kind {
+            TaskKind::Storage { .. } | TaskKind::Sync { .. } => (ready, ready),
+            TaskKind::Compute(_) => {
+                // exclusive point: serialized on the timer
+                let timer = timers.entry(point).or_insert(0.0);
+                let start = ready.max(*timer);
+                let d = evals.demand(task, hw.entry(point));
+                let end = start + d.total();
+                *timer = end;
+                *result.point_busy.entry(point).or_insert(0.0) += d.total();
+                (start, end)
+            }
+            TaskKind::Comm { .. } => {
+                // full uncontended bandwidth, concurrent with everything
+                let d = evals.demand(task, hw.entry(point));
+                *result.point_busy.entry(point).or_insert(0.0) += d.shared;
+                (ready, ready + d.total())
+            }
+        };
+        ends.insert(id, end);
+        result.timings.insert(id, (start, end));
+        result.makespan = result.makespan.max(end);
+        result.completed += 1;
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Registry;
+    use crate::hwir::{
+        CommAttrs, ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint, Topology,
+    };
+    use crate::sim::engine::{simulate, SimConfig};
+    use crate::taskgraph::{ComputeCost, OpClass, TaskGraph};
+
+    fn hw() -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![1]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((4, 4), 8).with_lmem(MemoryAttrs::new(1 << 20, 64.0, 0)),
+            )),
+        );
+        m.add_comm(SpacePoint::comm(
+            "bus",
+            CommAttrs::new(Topology::Bus, 1.0, 0),
+        ));
+        Hardware::build(m)
+    }
+
+    fn compute_task(cycles: f64) -> TaskKind {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = cycles * 16.0;
+        TaskKind::Compute(c)
+    }
+
+    /// The Fig. 6 scenario: the naive baseline underestimates the makespan
+    /// because overlapping bus transfers keep full bandwidth.
+    #[test]
+    fn naive_underestimates_contended_transfers() {
+        let hw = hw();
+        let mut g = TaskGraph::new();
+        let e = g.add("E", compute_task(100.0));
+        let a = g.add("A", TaskKind::Comm { bytes: 50, hops: 0, route: None });
+        let f = g.add("F", TaskKind::Comm { bytes: 200, hops: 0, route: None });
+        g.connect(e, a);
+        g.connect(e, f);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e, core);
+        m.map(a, bus);
+        m.map(f, bus);
+
+        let naive = simulate_naive(&hw, &g, &m, &Registry::standard()).unwrap();
+        let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        // naive: A at 150, F at 300 (full bandwidth each)
+        assert_eq!(naive.timings[&a].1, 150.0);
+        assert_eq!(naive.timings[&f].1, 300.0);
+        // consistent: sharing pushes A to 200, F to 350
+        assert_eq!(exact.timings[&a].1, 200.0);
+        assert_eq!(exact.timings[&f].1, 350.0);
+        assert!(naive.makespan < exact.makespan);
+    }
+
+    #[test]
+    fn naive_equals_engine_without_contention() {
+        // a pure chain has no overlap, so both simulators agree
+        let hw = hw();
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(10.0));
+        let b = g.add("b", TaskKind::Comm { bytes: 30, hops: 0, route: None });
+        let c = g.add("c", compute_task(20.0));
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(a, core);
+        m.map(b, bus);
+        m.map(c, core);
+        let naive = simulate_naive(&hw, &g, &m, &Registry::standard()).unwrap();
+        let exact = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(naive.makespan, exact.makespan);
+    }
+
+    #[test]
+    fn rejects_cycles() {
+        let hw = hw();
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute_task(1.0));
+        let b = g.add("b", compute_task(1.0));
+        g.connect(a, b);
+        g.connect(b, a);
+        let mut m = Mapping::new();
+        let core = hw.points_of_kind("compute")[0];
+        m.map(a, core);
+        m.map(b, core);
+        assert!(simulate_naive(&hw, &g, &m, &Registry::standard()).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Chrome-trace export of simulation timelines.
+//!
+//! Converts a [`SimResult`] collected with `collect_timeline = true` into
+//! the Chrome tracing JSON format (`chrome://tracing`, Perfetto): one
+//! "process" per `SpacePoint`, one duration event per task evaluation.
+//! Handy for eyeballing contention, pipeline bubbles, and the DRAM
+//! bottleneck of the §7.4 temporal baseline.
+
+use crate::hwir::Hardware;
+use crate::taskgraph::TaskGraph;
+use crate::util::json::{Json, JsonObj};
+
+use super::engine::SimResult;
+
+/// Build the Chrome-trace JSON document.
+pub fn chrome_trace(result: &SimResult, hw: &Hardware, graph: &TaskGraph) -> Json {
+    let mut events = Vec::with_capacity(result.timeline.len() + hw.num_points());
+
+    // Process metadata: name each SpacePoint lane.
+    for entry in hw.entries() {
+        let mut meta = JsonObj::new();
+        meta.insert("name", "process_name".into());
+        meta.insert("ph", "M".into());
+        meta.insert("pid", (entry.id.0 as u64).into());
+        let mut args = JsonObj::new();
+        args.insert(
+            "name",
+            format!("{} {}", entry.point.name, entry.addr).into(),
+        );
+        meta.insert("args", Json::Obj(args));
+        events.push(Json::Obj(meta));
+    }
+
+    for ev in &result.timeline {
+        let mut e = JsonObj::new();
+        let name = graph
+            .get(ev.task)
+            .map(|t| t.name.clone())
+            .unwrap_or_else(|| format!("{}", ev.task));
+        e.insert("name", name.into());
+        e.insert("cat", graph.get(ev.task).map(|t| t.kind.kind_name()).unwrap_or("task").into());
+        e.insert("ph", "X".into());
+        e.insert("pid", (ev.point.0 as u64).into());
+        e.insert("tid", (ev.iter as u64).into());
+        // Chrome traces are in microseconds; keep cycles 1:1.
+        e.insert("ts", ev.start.into());
+        e.insert("dur", (ev.end - ev.start).max(0.0).into());
+        events.push(Json::Obj(e));
+    }
+
+    let mut doc = JsonObj::new();
+    doc.insert("traceEvents", Json::Arr(events));
+    doc.insert("displayTimeUnit", "ns".into());
+    Json::Obj(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Registry;
+    use crate::hwir::{ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint};
+    use crate::mapping::Mapping;
+    use crate::sim::{simulate, SimConfig};
+    use crate::taskgraph::{ComputeCost, OpClass, TaskKind};
+
+    #[test]
+    fn trace_roundtrips_as_json() {
+        let mut m = SpaceMatrix::new("chip", vec![1]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((4, 4), 8).with_lmem(MemoryAttrs::new(1 << 20, 64.0, 0)),
+            )),
+        );
+        let hw = Hardware::build(m);
+        let mut g = TaskGraph::new();
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = 160.0;
+        let a = g.add("a", TaskKind::Compute(c));
+        let b = g.add("b", TaskKind::Compute(c));
+        g.connect(a, b);
+        let mut map = Mapping::new();
+        let core = hw.points_of_kind("compute")[0];
+        map.map(a, core);
+        map.map(b, core);
+        let cfg = SimConfig {
+            collect_timeline: true,
+            ..Default::default()
+        };
+        let r = simulate(&hw, &g, &map, &Registry::standard(), &cfg).unwrap();
+        assert_eq!(r.timeline.len(), 2);
+        let doc = chrome_trace(&r, &hw, &g);
+        let text = doc.to_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 metadata event per point + 2 task events
+        assert_eq!(events.len(), hw.num_points() + 2);
+        // task events carry durations
+        let durs: Vec<f64> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("dur").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(durs.len(), 2);
+        assert!(durs.iter().all(|d| *d > 0.0));
+    }
+}

@@ -1,0 +1,156 @@
+//! Dynamic-workload support (paper §6.1, last paragraph).
+//!
+//! The task graph is statically defined but may contain *dynamic* tasks
+//! (conditional branches, speculative decoding, early exit). MLDSE pairs the
+//! simulator with a *task graph executor* that decides which successors of a
+//! completed task actually trigger:
+//!
+//! * **online mode** — an [`Executor`] callback is consulted during
+//!   simulation; untriggered successors are pruned on the fly.
+//! * **offline mode** — a pre-recorded [`Trace`] of triggered task ids is
+//!   replayed.
+
+use std::collections::HashSet;
+
+use super::graph::TaskGraph;
+use super::task::TaskId;
+
+/// Decides which successors of `completed` actually fire this run.
+pub trait Executor {
+    /// Return the subset of `candidates` (the graph successors of
+    /// `completed`) that are triggered.
+    fn triggered(&mut self, completed: TaskId, candidates: &[TaskId]) -> Vec<TaskId>;
+}
+
+/// Executor that triggers every successor (the static-graph default).
+#[derive(Debug, Default, Clone)]
+pub struct StaticExecutor;
+
+impl Executor for StaticExecutor {
+    fn triggered(&mut self, _completed: TaskId, candidates: &[TaskId]) -> Vec<TaskId> {
+        candidates.to_vec()
+    }
+}
+
+/// Offline mode: replay a recorded set of executed tasks. Successors not in
+/// the trace never trigger.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    executed: HashSet<TaskId>,
+}
+
+impl Trace {
+    pub fn new(executed: impl IntoIterator<Item = TaskId>) -> Self {
+        Trace {
+            executed: executed.into_iter().collect(),
+        }
+    }
+
+    /// Record a trace covering every task of a graph (degenerate static
+    /// case — useful as a baseline in tests).
+    pub fn full(graph: &TaskGraph) -> Self {
+        Trace {
+            executed: graph.ids().collect(),
+        }
+    }
+
+    pub fn contains(&self, id: TaskId) -> bool {
+        self.executed.contains(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.executed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.executed.is_empty()
+    }
+}
+
+impl Executor for Trace {
+    fn triggered(&mut self, _completed: TaskId, candidates: &[TaskId]) -> Vec<TaskId> {
+        candidates
+            .iter()
+            .copied()
+            .filter(|c| self.executed.contains(c))
+            .collect()
+    }
+}
+
+/// Online mode helper: branch executor that picks one successor per branch
+/// point using a caller-provided decision function.
+pub struct BranchExecutor<F>
+where
+    F: FnMut(TaskId, &[TaskId]) -> Option<TaskId>,
+{
+    decide: F,
+}
+
+impl<F> BranchExecutor<F>
+where
+    F: FnMut(TaskId, &[TaskId]) -> Option<TaskId>,
+{
+    pub fn new(decide: F) -> Self {
+        BranchExecutor { decide }
+    }
+}
+
+impl<F> Executor for BranchExecutor<F>
+where
+    F: FnMut(TaskId, &[TaskId]) -> Option<TaskId>,
+{
+    fn triggered(&mut self, completed: TaskId, candidates: &[TaskId]) -> Vec<TaskId> {
+        if candidates.len() <= 1 {
+            return candidates.to_vec();
+        }
+        match (self.decide)(completed, candidates) {
+            Some(choice) => vec![choice],
+            None => candidates.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::task::{ComputeCost, OpClass, TaskKind};
+
+    fn branchy() -> (TaskGraph, [TaskId; 4]) {
+        let mut g = TaskGraph::new();
+        let k = |_: usize| TaskKind::Compute(ComputeCost::zero(OpClass::Custom));
+        let a = g.add("a", k(0));
+        let b = g.add("b", k(1));
+        let c = g.add("c", k(2));
+        let d = g.add("d", k(3));
+        g.connect(a, b);
+        g.connect(a, c);
+        g.connect(b, d);
+        g.connect(c, d);
+        (g, [a, b, c, d])
+    }
+
+    #[test]
+    fn static_executor_triggers_all() {
+        let (g, [a, b, c, _]) = branchy();
+        let mut ex = StaticExecutor;
+        assert_eq!(ex.triggered(a, g.successors(a)), vec![b, c]);
+    }
+
+    #[test]
+    fn trace_filters_untaken_branch() {
+        let (g, [a, b, _c, d]) = branchy();
+        let mut trace = Trace::new([a, b, d]);
+        assert_eq!(trace.triggered(a, g.successors(a)), vec![b]);
+        assert_eq!(trace.len(), 3);
+    }
+
+    #[test]
+    fn branch_executor_picks_one() {
+        let (g, [a, b, c, _]) = branchy();
+        let mut ex = BranchExecutor::new(|_done, cands: &[TaskId]| Some(cands[1]));
+        assert_eq!(ex.triggered(a, g.successors(a)), vec![c]);
+        // single successor: no decision consulted
+        let mut ex2 = BranchExecutor::new(|_d, _c: &[TaskId]| panic!("should not be called"));
+        assert_eq!(ex2.triggered(b, g.successors(b)), g.successors(b).to_vec());
+    }
+}

@@ -1,0 +1,356 @@
+//! The dependency graph `G = (V, D)` of §6.1.
+//!
+//! Nodes are tasks (compute / storage / comm / sync); directed edges are
+//! data dependencies. Deleted tasks leave tombstones so `TaskId`s stay
+//! stable across graph-transformation primitives (required for undo/redo).
+
+use std::collections::VecDeque;
+
+use super::task::{Task, TaskId, TaskKind};
+
+/// Mutable task dependency graph.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TaskGraph {
+    tasks: Vec<Option<Task>>,
+    out_edges: Vec<Vec<TaskId>>,
+    in_edges: Vec<Vec<TaskId>>,
+}
+
+impl TaskGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // ------------------------------------------------------------------
+    // Construction
+    // ------------------------------------------------------------------
+
+    /// Add a task; returns its id.
+    pub fn add(&mut self, name: impl Into<String>, kind: TaskKind) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        self.tasks.push(Some(Task::new(id, name, kind)));
+        self.out_edges.push(Vec::new());
+        self.in_edges.push(Vec::new());
+        id
+    }
+
+    /// Add a data dependency `src -> dst`. Duplicate edges are ignored.
+    pub fn connect(&mut self, src: TaskId, dst: TaskId) {
+        assert!(self.contains(src), "connect: missing src {src}");
+        assert!(self.contains(dst), "connect: missing dst {dst}");
+        assert_ne!(src, dst, "self-dependency {src}");
+        if !self.out_edges[src.index()].contains(&dst) {
+            self.out_edges[src.index()].push(dst);
+            self.in_edges[dst.index()].push(src);
+        }
+    }
+
+    /// Remove the dependency `src -> dst` if present.
+    pub fn disconnect(&mut self, src: TaskId, dst: TaskId) {
+        self.out_edges[src.index()].retain(|t| *t != dst);
+        self.in_edges[dst.index()].retain(|t| *t != src);
+    }
+
+    /// Delete a task and all incident edges (tombstoned).
+    pub fn remove(&mut self, id: TaskId) -> Option<Task> {
+        let task = self.tasks.get_mut(id.index())?.take()?;
+        let preds = std::mem::take(&mut self.in_edges[id.index()]);
+        for p in preds {
+            self.out_edges[p.index()].retain(|t| *t != id);
+        }
+        let succs = std::mem::take(&mut self.out_edges[id.index()]);
+        for s in succs {
+            self.in_edges[s.index()].retain(|t| *t != id);
+        }
+        Some(task)
+    }
+
+    // ------------------------------------------------------------------
+    // Access
+    // ------------------------------------------------------------------
+
+    pub fn contains(&self, id: TaskId) -> bool {
+        self.tasks.get(id.index()).is_some_and(Option::is_some)
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        self.tasks[id.index()].as_ref().expect("task deleted")
+    }
+
+    pub fn get(&self, id: TaskId) -> Option<&Task> {
+        self.tasks.get(id.index())?.as_ref()
+    }
+
+    pub fn task_mut(&mut self, id: TaskId) -> &mut Task {
+        self.tasks[id.index()].as_mut().expect("task deleted")
+    }
+
+    /// Live tasks.
+    pub fn iter(&self) -> impl Iterator<Item = &Task> {
+        self.tasks.iter().filter_map(Option::as_ref)
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.iter().map(|t| t.id)
+    }
+
+    /// Number of live tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.iter().filter(|t| t.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Upper bound over ever-allocated ids (tombstones included) — the size
+    /// to use for id-indexed side tables.
+    pub fn capacity(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn successors(&self, id: TaskId) -> &[TaskId] {
+        &self.out_edges[id.index()]
+    }
+
+    pub fn predecessors(&self, id: TaskId) -> &[TaskId] {
+        &self.in_edges[id.index()]
+    }
+
+    /// Tasks with no predecessors (simulation entry points).
+    pub fn sources(&self) -> Vec<TaskId> {
+        self.iter()
+            .filter(|t| self.in_edges[t.id.index()].is_empty())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    /// Tasks with no successors.
+    pub fn sinks(&self) -> Vec<TaskId> {
+        self.iter()
+            .filter(|t| self.out_edges[t.id.index()].is_empty())
+            .map(|t| t.id)
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Analysis
+    // ------------------------------------------------------------------
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn toposort(&self) -> Option<Vec<TaskId>> {
+        let mut indeg = vec![0usize; self.tasks.len()];
+        for t in self.iter() {
+            indeg[t.id.index()] = self.in_edges[t.id.index()].len();
+        }
+        let mut queue: VecDeque<TaskId> = self
+            .iter()
+            .filter(|t| indeg[t.id.index()] == 0)
+            .map(|t| t.id)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(id) = queue.pop_front() {
+            order.push(id);
+            for &s in &self.out_edges[id.index()] {
+                indeg[s.index()] -= 1;
+                if indeg[s.index()] == 0 {
+                    queue.push_back(s);
+                }
+            }
+        }
+        if order.len() == self.len() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    pub fn has_cycle(&self) -> bool {
+        self.toposort().is_none()
+    }
+
+    /// `a <_d b`: b depends (transitively) on a.
+    pub fn depends_on(&self, b: TaskId, a: TaskId) -> bool {
+        if a == b {
+            return false;
+        }
+        let mut seen = vec![false; self.tasks.len()];
+        let mut stack = vec![a];
+        while let Some(n) = stack.pop() {
+            for &s in &self.out_edges[n.index()] {
+                if s == b {
+                    return true;
+                }
+                if !seen[s.index()] {
+                    seen[s.index()] = true;
+                    stack.push(s);
+                }
+            }
+        }
+        false
+    }
+
+    /// Structural sanity: edge symmetry and no edges touching tombstones.
+    /// Returns a list of problems (empty = valid).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        for (i, slot) in self.tasks.iter().enumerate() {
+            let id = TaskId(i as u32);
+            if slot.is_none() {
+                if !self.out_edges[i].is_empty() || !self.in_edges[i].is_empty() {
+                    problems.push(format!("tombstone {id} has incident edges"));
+                }
+                continue;
+            }
+            for &s in &self.out_edges[i] {
+                if !self.contains(s) {
+                    problems.push(format!("edge {id}->{s} targets a deleted task"));
+                } else if !self.in_edges[s.index()].contains(&id) {
+                    problems.push(format!("edge {id}->{s} missing reverse entry"));
+                }
+            }
+            for &p in &self.in_edges[i] {
+                if !self.contains(p) {
+                    problems.push(format!("edge {p}->{id} from a deleted task"));
+                } else if !self.out_edges[p.index()].contains(&id) {
+                    problems.push(format!("edge {p}->{id} missing forward entry"));
+                }
+            }
+        }
+        problems
+    }
+
+    /// Count of live edges.
+    pub fn num_edges(&self) -> usize {
+        self.iter()
+            .map(|t| self.out_edges[t.id.index()].len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::taskgraph::task::{ComputeCost, OpClass};
+
+    fn compute() -> TaskKind {
+        TaskKind::Compute(ComputeCost::zero(OpClass::Custom))
+    }
+
+    fn diamond() -> (TaskGraph, [TaskId; 4]) {
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute());
+        let b = g.add("b", compute());
+        let c = g.add("c", compute());
+        let d = g.add("d", compute());
+        g.connect(a, b);
+        g.connect(a, c);
+        g.connect(b, d);
+        g.connect(c, d);
+        (g, [a, b, c, d])
+    }
+
+    #[test]
+    fn add_connect_query() {
+        let (g, [a, b, c, d]) = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.successors(a), &[b, c]);
+        assert_eq!(g.predecessors(d), &[b, c]);
+        assert_eq!(g.sources(), vec![a]);
+        assert_eq!(g.sinks(), vec![d]);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute());
+        let b = g.add("b", compute());
+        g.connect(a, b);
+        g.connect(a, b);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn remove_cleans_edges() {
+        let (mut g, [a, b, c, d]) = diamond();
+        g.remove(b);
+        assert_eq!(g.len(), 3);
+        assert!(!g.contains(b));
+        assert_eq!(g.successors(a), &[c]);
+        assert_eq!(g.predecessors(d), &[c]);
+        assert!(g.validate().is_empty());
+        // ids remain stable
+        assert_eq!(g.task(c).id, c);
+    }
+
+    #[test]
+    fn toposort_respects_deps() {
+        let (g, [a, b, c, d]) = diamond();
+        let order = g.toposort().unwrap();
+        let pos = |t: TaskId| order.iter().position(|x| *x == t).unwrap();
+        assert!(pos(a) < pos(b) && pos(a) < pos(c));
+        assert!(pos(b) < pos(d) && pos(c) < pos(d));
+    }
+
+    #[test]
+    fn cycle_detection() {
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute());
+        let b = g.add("b", compute());
+        g.connect(a, b);
+        assert!(!g.has_cycle());
+        g.connect(b, a);
+        assert!(g.has_cycle());
+    }
+
+    #[test]
+    fn depends_on_transitive() {
+        let (g, [a, b, _c, d]) = diamond();
+        assert!(g.depends_on(d, a));
+        assert!(g.depends_on(b, a));
+        assert!(!g.depends_on(a, d));
+        assert!(!g.depends_on(a, a));
+    }
+
+    #[test]
+    #[should_panic(expected = "self-dependency")]
+    fn self_edge_panics() {
+        let mut g = TaskGraph::new();
+        let a = g.add("a", compute());
+        g.connect(a, a);
+    }
+
+    #[test]
+    fn prop_random_dag_toposort_valid() {
+        use crate::util::propcheck::{check, Gen};
+        check("random DAG toposorts consistently", 64, |g: &mut Gen| {
+            let n = g.usize(1..=30);
+            let mut tg = TaskGraph::new();
+            let ids: Vec<TaskId> = (0..n).map(|i| tg.add(format!("t{i}"), compute())).collect();
+            // forward edges only => acyclic by construction
+            for i in 0..n {
+                for j in i + 1..n {
+                    if g.bool() && g.bool() {
+                        tg.connect(ids[i], ids[j]);
+                    }
+                }
+            }
+            let order = tg.toposort().ok_or("cycle in DAG?!")?;
+            let pos: std::collections::HashMap<TaskId, usize> =
+                order.iter().enumerate().map(|(i, t)| (*t, i)).collect();
+            for t in tg.ids() {
+                for &s in tg.successors(t) {
+                    if pos[&t] >= pos[&s] {
+                        return Err(format!("order violates {t}->{s}"));
+                    }
+                }
+            }
+            if !tg.validate().is_empty() {
+                return Err("validate failed".into());
+            }
+            Ok(())
+        });
+    }
+}

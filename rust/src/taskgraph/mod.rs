@@ -1,0 +1,15 @@
+//! Task graph IR (paper §5.1, §6.1).
+//!
+//! Tensor-granularity tasks — computation, storage, communication,
+//! synchronization — connected by data-dependency edges form the dependency
+//! graph `G = (V, D)` that the mapping IR allocates onto hardware and the
+//! event-driven simulator executes. [`dynamic`] adds the executor hooks for
+//! dynamic workloads (online / offline trace modes).
+
+pub mod dynamic;
+pub mod graph;
+pub mod task;
+
+pub use dynamic::{BranchExecutor, Executor, StaticExecutor, Trace};
+pub use graph::TaskGraph;
+pub use task::{ComputeCost, OpClass, Task, TaskId, TaskKind};

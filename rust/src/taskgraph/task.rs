@@ -1,0 +1,250 @@
+//! Task definitions — the nodes of the spatiotemporal mapping IR.
+//!
+//! Tasks are at *tensor granularity* (paper §5.1): a computation task is one
+//! tensor operator (or a tile of one), a storage task is one tensor's
+//! residency in a memory, a communication task is one tensor transfer, and a
+//! synchronization task is a barrier member. Each task carries the cost
+//! descriptor its evaluator consumes.
+
+use std::fmt;
+
+/// Dense task handle within a [`super::graph::TaskGraph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for TaskId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Operator class of a compute task (used by evaluators and by the
+/// representative-task deduplication of §7.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    MatMul,
+    Mvm,
+    Softmax,
+    LayerNorm,
+    Elementwise,
+    Attention,
+    Rope,
+    Custom,
+}
+
+impl OpClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::MatMul => "matmul",
+            OpClass::Mvm => "mvm",
+            OpClass::Softmax => "softmax",
+            OpClass::LayerNorm => "layernorm",
+            OpClass::Elementwise => "elementwise",
+            OpClass::Attention => "attention",
+            OpClass::Rope => "rope",
+            OpClass::Custom => "custom",
+        }
+    }
+
+    /// Numeric id used in evaluator descriptors (must match
+    /// `python/compile/model.py` OP_* constants).
+    pub fn code(&self) -> u32 {
+        match self {
+            OpClass::MatMul => 0,
+            OpClass::Mvm => 1,
+            OpClass::Softmax => 2,
+            OpClass::LayerNorm => 3,
+            OpClass::Elementwise => 4,
+            OpClass::Attention => 5,
+            OpClass::Rope => 6,
+            OpClass::Custom => 7,
+        }
+    }
+}
+
+/// Cost descriptor of a compute task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeCost {
+    /// FLOPs eligible for the systolic array (matrix work).
+    pub mac_flops: f64,
+    /// FLOPs executed on the vector unit.
+    pub vec_flops: f64,
+    /// Operand bytes streamed from the point's local memory.
+    pub in_bytes: u64,
+    /// Result bytes written back to the local memory.
+    pub out_bytes: u64,
+    /// Off-chip traffic this task incurs (weights/KV not resident on-chip);
+    /// set by the mapping/tiling layer, 0 when fully resident.
+    pub dram_bytes: u64,
+    pub op: OpClass,
+    /// Operator dimensions (m, n, k) where applicable, else zeros.
+    pub dims: [u32; 3],
+}
+
+impl ComputeCost {
+    pub fn zero(op: OpClass) -> Self {
+        ComputeCost {
+            mac_flops: 0.0,
+            vec_flops: 0.0,
+            in_bytes: 0,
+            out_bytes: 0,
+            dram_bytes: 0,
+            op,
+            dims: [0; 3],
+        }
+    }
+
+    /// Total bytes moved through the local memory.
+    pub fn local_bytes(&self) -> u64 {
+        self.in_bytes + self.out_bytes
+    }
+
+    /// Key for representative-task deduplication: identical keys have
+    /// identical evaluation results on the same `SpacePoint` (paper §7.2).
+    /// FLOP counts are included bit-exactly — synthetic tasks may differ in
+    /// FLOPs at identical dims/bytes.
+    pub fn dedup_key(&self) -> (u32, [u32; 3], u64, u64, u64, u64, u64) {
+        (
+            self.op.code(),
+            self.dims,
+            self.in_bytes,
+            self.out_bytes,
+            self.dram_bytes,
+            self.mac_flops.to_bits(),
+            self.vec_flops.to_bits(),
+        )
+    }
+}
+
+/// What a task is.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskKind {
+    Compute(ComputeCost),
+    /// A tensor resident in a memory for its activation period (Eq. 2).
+    Storage { bytes: u64 },
+    /// A tensor transfer. `hops` and `route` are set when the task is mapped
+    /// to a comm point (sub-task of a decomposed cross-level transfer);
+    /// `route` (within-level entry/exit coordinates) lets the simulator
+    /// compute which physical links the flow occupies for link-level
+    /// contention detection.
+    Comm {
+        bytes: u64,
+        hops: u64,
+        route: Option<(crate::hwir::Coord, crate::hwir::Coord)>,
+    },
+    /// Barrier member; all sync tasks sharing `sync_id` complete together.
+    Sync { sync_id: u32 },
+}
+
+impl TaskKind {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            TaskKind::Compute(_) => "compute",
+            TaskKind::Storage { .. } => "storage",
+            TaskKind::Comm { .. } => "comm",
+            TaskKind::Sync { .. } => "sync",
+        }
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self, TaskKind::Compute(_))
+    }
+    pub fn is_storage(&self) -> bool {
+        matches!(self, TaskKind::Storage { .. })
+    }
+    pub fn is_comm(&self) -> bool {
+        matches!(self, TaskKind::Comm { .. })
+    }
+    pub fn is_sync(&self) -> bool {
+        matches!(self, TaskKind::Sync { .. })
+    }
+}
+
+/// A node of the task graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub id: TaskId,
+    pub name: String,
+    pub kind: TaskKind,
+    /// Disabled tasks are skipped by the simulator (state-control
+    /// primitives `enable`/`disable`).
+    pub enabled: bool,
+    /// Group id assigned by the `group` primitive (0 = ungrouped).
+    pub group: u32,
+}
+
+impl Task {
+    pub fn new(id: TaskId, name: impl Into<String>, kind: TaskKind) -> Self {
+        Task {
+            id,
+            name: name.into(),
+            kind,
+            enabled: true,
+            group: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_accessors() {
+        let c = ComputeCost {
+            mac_flops: 100.0,
+            vec_flops: 10.0,
+            in_bytes: 64,
+            out_bytes: 32,
+            dram_bytes: 0,
+            op: OpClass::MatMul,
+            dims: [4, 4, 4],
+        };
+        assert_eq!(c.local_bytes(), 96);
+        assert_eq!(c.dedup_key().0, 0);
+    }
+
+    #[test]
+    fn dedup_key_distinguishes() {
+        let mut a = ComputeCost::zero(OpClass::MatMul);
+        a.dims = [2, 2, 2];
+        let mut b = a;
+        b.dims = [2, 2, 3];
+        assert_ne!(a.dedup_key(), b.dedup_key());
+        let mut c = a;
+        c.op = OpClass::Mvm;
+        assert_ne!(a.dedup_key(), c.dedup_key());
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(TaskKind::Storage { bytes: 1 }.is_storage());
+        assert!(TaskKind::Comm { bytes: 1, hops: 0, route: None }.is_comm());
+        assert!(TaskKind::Sync { sync_id: 1 }.is_sync());
+        assert_eq!(TaskKind::Sync { sync_id: 1 }.kind_name(), "sync");
+    }
+
+    #[test]
+    fn op_codes_are_unique() {
+        let ops = [
+            OpClass::MatMul,
+            OpClass::Mvm,
+            OpClass::Softmax,
+            OpClass::LayerNorm,
+            OpClass::Elementwise,
+            OpClass::Attention,
+            OpClass::Rope,
+            OpClass::Custom,
+        ];
+        let mut codes: Vec<u32> = ops.iter().map(|o| o.code()).collect();
+        codes.sort();
+        codes.dedup();
+        assert_eq!(codes.len(), ops.len());
+    }
+}

@@ -1,0 +1,98 @@
+//! Leveled stderr logging controlled by the `MLDSE_LOG` environment variable
+//! (`error`, `warn`, `info` (default), `debug`, `trace`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init() {
+    INIT.get_or_init(|| {
+        let lvl = match std::env::var("MLDSE_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+/// Current log level.
+pub fn level() -> Level {
+    init();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, CLI `--verbose`).
+pub fn set_level(lvl: Level) {
+    init();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// True if a message at `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+#[doc(hidden)]
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        let tag = match lvl {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[mldse {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn  { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn,  format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info  { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info,  format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_and_query_level() {
+        let prev = level();
+        set_level(Level::Error);
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Error));
+        set_level(prev);
+    }
+}

@@ -1,0 +1,20 @@
+//! Self-contained substrate utilities.
+//!
+//! The build environment is fully offline with a fixed vendored crate set, so
+//! everything that would normally come from `serde`, `rand`, `proptest`,
+//! `log`, … is implemented here from scratch:
+//!
+//! * [`json`] — a minimal but complete JSON parser/serializer used by the
+//!   config system and report emission.
+//! * [`rng`] — a deterministic PCG-family PRNG; all stochastic search in the
+//!   DSE engine flows through it so runs are bit-reproducible.
+//! * [`stats`] — small numeric helpers (mean/median/percentile, geomean).
+//! * [`propcheck`] — a miniature property-based testing framework with
+//!   random case generation and iterative shrinking.
+//! * [`logger`] — leveled stderr logging with an env switch (`MLDSE_LOG`).
+
+pub mod json;
+pub mod logger;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,164 @@
+//! Miniature property-based testing framework (offline substitute for
+//! `proptest`).
+//!
+//! A property is a closure over a [`Gen`] handle that draws random inputs and
+//! asserts invariants by returning `Err(reason)` on violation. [`check`]
+//! runs the property `cases` times with derived seeds; on failure it retries
+//! the failing seed with progressively smaller size budgets (a cheap form of
+//! shrinking) and reports the smallest reproduction seed.
+//!
+//! ```no_run
+//! # // no_run: doctest executables cannot resolve the xla rpath in the
+//! # // offline container; the same flow is covered by unit tests below.
+//! use mldse::util::propcheck::{check, Gen};
+//! check("sorting is idempotent", 64, |g: &mut Gen| {
+//!     let mut v = g.vec_u64(0..=100, 0..=20);
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v == w { Ok(()) } else { Err("not idempotent".into()) }
+//! });
+//! ```
+
+use super::rng::Pcg;
+use std::ops::RangeInclusive;
+
+/// Random input source handed to properties.
+pub struct Gen {
+    rng: Pcg,
+    /// Size budget in [0,1]; shrinking retries lower it so ranges shrink
+    /// toward their lower bound.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen {
+            rng: Pcg::new(seed),
+            size,
+        }
+    }
+
+    /// Raw RNG access for custom generators.
+    pub fn rng(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+
+    /// u64 in an inclusive range, scaled by the size budget.
+    pub fn u64(&mut self, range: RangeInclusive<u64>) -> u64 {
+        let (lo, hi) = (*range.start(), *range.end());
+        let span = ((hi - lo) as f64 * self.size).round() as u64;
+        self.rng.range_u64(lo, lo + span)
+    }
+
+    pub fn usize(&mut self, range: RangeInclusive<usize>) -> usize {
+        self.u64(*range.start() as u64..=*range.end() as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, lo + (hi - lo) * self.size)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    /// Vector of u64s with random length.
+    pub fn vec_u64(
+        &mut self,
+        value_range: RangeInclusive<u64>,
+        len_range: RangeInclusive<usize>,
+    ) -> Vec<u64> {
+        let len = self.usize(len_range);
+        (0..len).map(|_| self.u64(value_range.clone())).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` random cases. Panics with a reproduction seed on
+/// the first (shrunk) failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let base_seed = env_seed().unwrap_or(0x4d4c4453_45u64); // "MLDSE"
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        if let Err(msg) = run_case(&mut prop, seed, 1.0) {
+            // Shrink: retry the same seed with smaller size budgets and keep
+            // the smallest budget that still fails.
+            let mut smallest = (1.0, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                if let Err(m) = run_case(&mut prop, seed, size) {
+                    smallest = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}): {}\n\
+                 reproduce with MLDSE_PROP_SEED={seed}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+fn run_case<F>(prop: &mut F, seed: u64, size: f64) -> CaseResult
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let mut gen = Gen::new(seed, size);
+    prop(&mut gen)
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("MLDSE_PROP_SEED").ok()?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u64 in range", 200, |g| {
+            let v = g.u64(5..=10);
+            if (5..=10).contains(&v) {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn vec_generator_respects_len() {
+        check("vec len", 100, |g| {
+            let v = g.vec_u64(0..=9, 2..=5);
+            if (2..=5).contains(&v.len()) && v.iter().all(|x| *x <= 9) {
+                Ok(())
+            } else {
+                Err(format!("bad vec {v:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_given_env_seed() {
+        // Same base seed -> same sequence of cases; just exercise the path.
+        check("bool works", 16, |g| {
+            let _ = g.bool();
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! Collective-communication task graphs (paper §7.2, Eq. 7 validation).
+//!
+//! Expands a ring All-Reduce (reduce-scatter + all-gather) into an explicit
+//! task graph over `n` device cells connected by a communication point, so
+//! the event-driven simulation can be validated against the closed-form
+//! latency-bandwidth models in [`crate::eval::comm`] (<3% target).
+
+use crate::hwir::{Hardware, MlCoord};
+use crate::mapping::Mapping;
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
+
+/// Build a ring All-Reduce task graph over the device cells `devices`
+/// (addressed within the level whose comm point carries the transfers).
+///
+/// The collective is 2(n-1) steps; in step `s`, device `d` sends one
+/// `bytes/n` shard to device `(d+1) % n`. Steps are dependency-chained per
+/// device pair, matching the synchronous ring schedule the closed form
+/// assumes. Returns the sink tasks (one per device).
+pub fn ring_all_reduce(
+    hw: &Hardware,
+    graph: &mut TaskGraph,
+    mapping: &mut Mapping,
+    devices: &[MlCoord],
+    bytes: u64,
+) -> Vec<TaskId> {
+    let n = devices.len();
+    assert!(n >= 2, "all-reduce needs >= 2 devices");
+    let shard = (bytes / n as u64).max(1);
+    let steps = 2 * (n - 1);
+
+    // last task per device (starts as a zero-cost source marker)
+    let mut last: Vec<Option<TaskId>> = vec![None; n];
+    let mut sinks = Vec::new();
+
+    for step in 0..steps {
+        let mut this: Vec<Option<TaskId>> = vec![None; n];
+        for d in 0..n {
+            let dst = (d + 1) % n;
+            let segs = hw.route(&devices[d], &devices[dst]);
+            let mut prev: Option<TaskId> = None;
+            for (i, seg) in segs.iter().enumerate() {
+                let id = graph.add(
+                    format!("ar-s{step}-d{d}/{i}"),
+                    TaskKind::Comm {
+                        bytes: shard,
+                        hops: seg.hops,
+                        route: Some((seg.from.clone(), seg.to.clone())),
+                    },
+                );
+                mapping.map(id, seg.comm);
+                // chain within the route
+                if let Some(p) = prev {
+                    graph.connect(p, id);
+                }
+                prev = Some(id);
+            }
+            let head = segs.first().map(|_| ()).and(prev); // tail of route
+            // step s of device d depends on step s-1 of d (its own send)
+            // and of (d-1) (the shard it forwards arrived)
+            if let Some(first_seg_task) = route_head(graph, &head, segs.len()) {
+                if let Some(p) = last[d] {
+                    graph.connect(p, first_seg_task);
+                }
+                let src_prev = (d + n - 1) % n;
+                if let Some(p) = last[src_prev] {
+                    if p != first_seg_task {
+                        graph.connect(p, first_seg_task);
+                    }
+                }
+            }
+            this[d] = head;
+        }
+        last = this;
+    }
+    for t in last.into_iter().flatten() {
+        sinks.push(t);
+    }
+    sinks
+}
+
+/// Helper: recover the first task of the route chain whose tail is `tail`.
+fn route_head(graph: &TaskGraph, tail: &Option<TaskId>, route_len: usize) -> Option<TaskId> {
+    let mut cur = (*tail)?;
+    for _ in 1..route_len {
+        let preds = graph.predecessors(cur);
+        // the within-route predecessor was connected first
+        cur = *preds.first()?;
+    }
+    Some(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::comm::{ring_all_reduce as ring_closed_form, LinkModel};
+    use crate::eval::Registry;
+    use crate::hwir::{mlc, CommAttrs, ComputeAttrs, Coord, Element, SpaceMatrix, SpacePoint, Topology};
+    use crate::sim::{simulate, SimConfig};
+
+    /// `n` devices on a ring network.
+    fn ring_hw(n: usize, bw: f64, lat: u64) -> Hardware {
+        let mut m = SpaceMatrix::new("cluster", vec![n]);
+        for i in 0..n {
+            m.set(
+                Coord::new(vec![i as u32]),
+                Element::Point(SpacePoint::compute(
+                    "dev",
+                    ComputeAttrs::new((8, 8), 64),
+                )),
+            );
+        }
+        m.add_comm(SpacePoint::comm(
+            "ring",
+            CommAttrs::new(Topology::Ring, bw, lat),
+        ));
+        Hardware::build(m)
+    }
+
+    #[test]
+    fn ring_all_reduce_matches_closed_form() {
+        // E15: event-driven sim vs Eq. 7-family closed form, <3%.
+        for n in [2usize, 4, 8] {
+            let bw = 64.0;
+            let lat = 10u64;
+            let bytes = 4u64 << 20;
+            let hw = ring_hw(n, bw, lat);
+            let devices: Vec<MlCoord> = (0..n).map(|i| mlc(&[&[i as u32]])).collect();
+            let mut graph = TaskGraph::new();
+            let mut mapping = Mapping::new();
+            let sinks =
+                ring_all_reduce(&hw, &mut graph, &mut mapping, &devices, bytes);
+            assert_eq!(sinks.len(), n);
+            let r = simulate(&hw, &graph, &mapping, &Registry::standard(), &SimConfig::default())
+                .unwrap();
+            let expect = ring_closed_form(n, bytes as f64, LinkModel::new(lat as f64, bw));
+            let rel = (r.makespan - expect).abs() / expect;
+            assert!(
+                rel < 0.03,
+                "n={n}: sim {} vs closed form {} (rel {:.3})",
+                r.makespan,
+                expect,
+                rel
+            );
+        }
+    }
+
+    #[test]
+    fn all_reduce_needs_two_devices() {
+        let hw = ring_hw(2, 8.0, 1);
+        let devices: Vec<MlCoord> = (0..2).map(|i| mlc(&[&[i as u32]])).collect();
+        let mut graph = TaskGraph::new();
+        let mut mapping = Mapping::new();
+        let sinks = ring_all_reduce(&hw, &mut graph, &mut mapping, &devices, 1024);
+        assert_eq!(sinks.len(), 2);
+        assert!(graph.toposort().is_some());
+    }
+}

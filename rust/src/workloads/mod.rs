@@ -1,0 +1,14 @@
+//! LLM workload generation (paper §7.1).
+//!
+//! [`ops`] provides tensor-op cost accounting; [`transformer`] describes
+//! GPT3-6.7B / Llama-70B / Qwen-72B layers; [`build`] turns them into
+//! mapped task graphs for the DMC / GSM / MPMC-DMC templates;
+//! [`collectives`] expands ring collectives for the Eq. 7 validation.
+
+pub mod build;
+pub mod collectives;
+pub mod ops;
+pub mod transformer;
+
+pub use build::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, Workload};
+pub use transformer::LlmConfig;

@@ -1,0 +1,162 @@
+//! Operator library: FLOPs / bytes accounting for the tensor-granularity
+//! tasks of LLM workloads (paper §7.1: "Attention, matmul, MLP, and
+//! communication collectives remain key performance drivers").
+//!
+//! All constructors take logical dimensions and element size and produce a
+//! [`ComputeCost`] whose totals satisfy closed-form identities (unit-tested
+//! below) — the workload generators and tiling layer divide these tiles
+//! without losing FLOPs.
+
+use crate::taskgraph::{ComputeCost, OpClass};
+
+/// Matrix multiply `C[m,n] = A[m,k] · B[k,n]`.
+pub fn matmul(m: u32, n: u32, k: u32, elem_bytes: u64) -> ComputeCost {
+    ComputeCost {
+        mac_flops: 2.0 * m as f64 * n as f64 * k as f64,
+        vec_flops: 0.0,
+        in_bytes: elem_bytes * (m as u64 * k as u64 + k as u64 * n as u64),
+        out_bytes: elem_bytes * m as u64 * n as u64,
+        dram_bytes: 0,
+        op: OpClass::MatMul,
+        dims: [m, n, k],
+    }
+}
+
+/// Matrix-vector multiply `y[n] = W[n,k] · x[k]` (decode-stage GEMV).
+pub fn mvm(n: u32, k: u32, elem_bytes: u64) -> ComputeCost {
+    ComputeCost {
+        mac_flops: 2.0 * n as f64 * k as f64,
+        vec_flops: 0.0,
+        in_bytes: elem_bytes * (n as u64 * k as u64 + k as u64),
+        out_bytes: elem_bytes * n as u64,
+        dram_bytes: 0,
+        op: OpClass::Mvm,
+        dims: [1, n, k],
+    }
+}
+
+/// Row-wise softmax over a `[rows, cols]` matrix (~5 flops/element:
+/// max, sub, exp, sum, div).
+pub fn softmax(rows: u32, cols: u32, elem_bytes: u64) -> ComputeCost {
+    let n = rows as u64 * cols as u64;
+    ComputeCost {
+        mac_flops: 0.0,
+        vec_flops: 5.0 * n as f64,
+        in_bytes: elem_bytes * n,
+        out_bytes: elem_bytes * n,
+        dram_bytes: 0,
+        op: OpClass::Softmax,
+        dims: [rows, cols, 0],
+    }
+}
+
+/// LayerNorm over `[tokens, hidden]` (~10 flops/element: two passes +
+/// normalize + affine).
+pub fn layernorm(tokens: u32, hidden: u32, elem_bytes: u64) -> ComputeCost {
+    let n = tokens as u64 * hidden as u64;
+    ComputeCost {
+        mac_flops: 0.0,
+        vec_flops: 10.0 * n as f64,
+        in_bytes: elem_bytes * n,
+        out_bytes: elem_bytes * n,
+        dram_bytes: 0,
+        op: OpClass::LayerNorm,
+        dims: [tokens, hidden, 0],
+    }
+}
+
+/// Element-wise activation (GELU/SiLU ≈ 8 flops/element).
+pub fn activation(elems: u64, elem_bytes: u64) -> ComputeCost {
+    ComputeCost {
+        mac_flops: 0.0,
+        vec_flops: 8.0 * elems as f64,
+        in_bytes: elem_bytes * elems,
+        out_bytes: elem_bytes * elems,
+        dram_bytes: 0,
+        op: OpClass::Elementwise,
+        dims: [0, 0, 0],
+    }
+}
+
+/// Rotary position embedding over `[tokens, hidden]` (~6 flops/element on
+/// the rotated half).
+pub fn rope(tokens: u32, hidden: u32, elem_bytes: u64) -> ComputeCost {
+    let n = tokens as u64 * hidden as u64;
+    ComputeCost {
+        mac_flops: 0.0,
+        vec_flops: 3.0 * n as f64,
+        in_bytes: elem_bytes * n,
+        out_bytes: elem_bytes * n,
+        dram_bytes: 0,
+        op: OpClass::Rope,
+        dims: [tokens, hidden, 0],
+    }
+}
+
+/// Attention score computation `Q·Kᵀ` for all heads:
+/// `[seq_q, seq_k] × heads` with head dim `dh`.
+pub fn attention_scores(seq_q: u32, seq_k: u32, heads: u32, dh: u32, elem_bytes: u64) -> ComputeCost {
+    let mut c = matmul(seq_q, seq_k * heads, dh, elem_bytes);
+    c.op = OpClass::Attention;
+    // operands: Q [seq_q, heads*dh] + K [seq_k, heads*dh]
+    c.in_bytes = elem_bytes
+        * (seq_q as u64 * heads as u64 * dh as u64 + seq_k as u64 * heads as u64 * dh as u64);
+    c.out_bytes = elem_bytes * seq_q as u64 * seq_k as u64 * heads as u64;
+    c
+}
+
+/// Attention context `softmax(S)·V` for all heads.
+pub fn attention_context(seq_q: u32, seq_k: u32, heads: u32, dh: u32, elem_bytes: u64) -> ComputeCost {
+    let mut c = matmul(seq_q, dh * heads, seq_k, elem_bytes);
+    c.op = OpClass::Attention;
+    c.in_bytes = elem_bytes
+        * (seq_q as u64 * seq_k as u64 * heads as u64 + seq_k as u64 * heads as u64 * dh as u64);
+    c.out_bytes = elem_bytes * seq_q as u64 * heads as u64 * dh as u64;
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops_closed_form() {
+        let c = matmul(128, 256, 512, 2);
+        assert_eq!(c.mac_flops, 2.0 * 128.0 * 256.0 * 512.0);
+        assert_eq!(c.in_bytes, 2 * (128 * 512 + 512 * 256));
+        assert_eq!(c.out_bytes, 2 * 128 * 256);
+        assert_eq!(c.dims, [128, 256, 512]);
+    }
+
+    #[test]
+    fn mvm_is_m1_matmul() {
+        let v = mvm(4096, 4096, 2);
+        let m = matmul(1, 4096, 4096, 2);
+        assert_eq!(v.mac_flops, m.mac_flops);
+        assert_eq!(v.dims[0], 1);
+    }
+
+    #[test]
+    fn softmax_flops_scale_with_elems() {
+        let c = softmax(2048, 2048, 2);
+        assert_eq!(c.vec_flops, 5.0 * 2048.0 * 2048.0);
+        assert_eq!(c.mac_flops, 0.0);
+    }
+
+    #[test]
+    fn attention_ops_gpt3_layer_flops() {
+        // GPT3-6.7B: hidden 4096, 32 heads, dh 128, seq 2048.
+        // scores + context = 2 * (2*S*S*h) = 4*S²*h MACs-flops
+        let s = attention_scores(2048, 2048, 32, 128, 2);
+        let c = attention_context(2048, 2048, 32, 128, 2);
+        let total = s.mac_flops + c.mac_flops;
+        let expect = 4.0 * 2048.0f64 * 2048.0 * 4096.0;
+        assert!((total - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn scores_output_is_sq_sk_heads() {
+        let s = attention_scores(2048, 2048, 32, 128, 2);
+        assert_eq!(s.out_bytes, 2 * 2048 * 2048 * 32);
+    }
+}

@@ -1,0 +1,295 @@
+//! Transformer workload descriptions (paper §7.1).
+//!
+//! [`LlmConfig`] captures the model shapes the paper evaluates (GPT3-6.7B
+//! for the DSE studies; Llama2/3-70B and Qwen-72B for accuracy); the layer
+//! functions emit the ordered op list of one transformer layer for prefill
+//! (a `[seq, hidden]` activation) or decode (one token against a KV cache),
+//! which the builders in [`super::build`] turn into mapped task graphs.
+
+use crate::taskgraph::ComputeCost;
+
+use super::ops;
+
+/// LLM shape parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LlmConfig {
+    pub hidden: u32,
+    pub heads: u32,
+    /// FFN inner dimension (4·hidden for GPT-3, 3.5·hidden-ish for Llama).
+    pub ffn: u32,
+    pub layers: u32,
+    /// Bytes per element (2 = bf16).
+    pub elem_bytes: u64,
+}
+
+impl LlmConfig {
+    /// GPT3-6.7B: hidden 4096, 32 heads, 32 layers (paper §7.1).
+    pub fn gpt3_6_7b() -> LlmConfig {
+        LlmConfig {
+            hidden: 4096,
+            heads: 32,
+            ffn: 16384,
+            layers: 32,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Llama2-70B: hidden 8192, 64 heads, 80 layers, FFN 28672.
+    pub fn llama2_70b() -> LlmConfig {
+        LlmConfig {
+            hidden: 8192,
+            heads: 64,
+            ffn: 28672,
+            layers: 80,
+            elem_bytes: 2,
+        }
+    }
+
+    /// Llama3-70B: same trunk shape as Llama2-70B (GQA differs; the paper
+    /// notes these differences have minimal performance impact).
+    pub fn llama3_70b() -> LlmConfig {
+        LlmConfig::llama2_70b()
+    }
+
+    /// Qwen-72B: hidden 8192, 64 heads, 80 layers, FFN 24576.
+    pub fn qwen_72b() -> LlmConfig {
+        LlmConfig {
+            hidden: 8192,
+            heads: 64,
+            ffn: 24576,
+            layers: 80,
+            elem_bytes: 2,
+        }
+    }
+
+    pub fn head_dim(&self) -> u32 {
+        self.hidden / self.heads
+    }
+
+    /// Weight bytes of one layer (QKV + out + both FFN mats).
+    pub fn layer_weight_bytes(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        self.elem_bytes * (3 * h * h + h * h + 2 * h * f)
+    }
+
+    /// KV-cache bytes per layer at context length `ctx`.
+    pub fn kv_bytes_per_layer(&self, ctx: u32) -> u64 {
+        2 * self.elem_bytes * ctx as u64 * self.hidden as u64
+    }
+}
+
+/// One operator of a layer: name, compute cost, weight bytes it reads, and
+/// the activation bytes it produces (what flows to the next op).
+#[derive(Debug, Clone)]
+pub struct LayerOp {
+    pub name: &'static str,
+    pub cost: ComputeCost,
+    pub weight_bytes: u64,
+    pub act_out_bytes: u64,
+}
+
+/// Ordered ops of one prefill layer over `seq` tokens (batch 1).
+pub fn prefill_layer(cfg: &LlmConfig, seq: u32) -> Vec<LayerOp> {
+    let h = cfg.hidden;
+    let f = cfg.ffn;
+    let e = cfg.elem_bytes;
+    let dh = cfg.head_dim();
+    let act = e * seq as u64 * h as u64;
+    vec![
+        LayerOp {
+            name: "ln1",
+            cost: ops::layernorm(seq, h, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "qkv",
+            cost: ops::matmul(seq, 3 * h, h, e),
+            weight_bytes: e * 3 * h as u64 * h as u64,
+            act_out_bytes: 3 * act,
+        },
+        LayerOp {
+            name: "scores",
+            cost: ops::attention_scores(seq, seq, cfg.heads, dh, e),
+            weight_bytes: 0,
+            act_out_bytes: e * seq as u64 * seq as u64 * cfg.heads as u64,
+        },
+        LayerOp {
+            name: "softmax",
+            cost: ops::softmax(seq * cfg.heads, seq, e),
+            weight_bytes: 0,
+            act_out_bytes: e * seq as u64 * seq as u64 * cfg.heads as u64,
+        },
+        LayerOp {
+            name: "context",
+            cost: ops::attention_context(seq, seq, cfg.heads, dh, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "out-proj",
+            cost: ops::matmul(seq, h, h, e),
+            weight_bytes: e * h as u64 * h as u64,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "ln2",
+            cost: ops::layernorm(seq, h, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "ffn-up",
+            cost: ops::matmul(seq, f, h, e),
+            weight_bytes: e * h as u64 * f as u64,
+            act_out_bytes: e * seq as u64 * f as u64,
+        },
+        LayerOp {
+            name: "gelu",
+            cost: ops::activation(seq as u64 * f as u64, e),
+            weight_bytes: 0,
+            act_out_bytes: e * seq as u64 * f as u64,
+        },
+        LayerOp {
+            name: "ffn-down",
+            cost: ops::matmul(seq, h, f, e),
+            weight_bytes: e * h as u64 * f as u64,
+            act_out_bytes: act,
+        },
+    ]
+}
+
+/// Ordered ops of one decode layer generating the token at position `pos`
+/// (KV length `pos`, batch 1).
+pub fn decode_layer(cfg: &LlmConfig, pos: u32) -> Vec<LayerOp> {
+    let h = cfg.hidden;
+    let f = cfg.ffn;
+    let e = cfg.elem_bytes;
+    let dh = cfg.head_dim();
+    let act = e * h as u64;
+    vec![
+        LayerOp {
+            name: "ln1",
+            cost: ops::layernorm(1, h, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "qkv",
+            cost: ops::mvm(3 * h, h, e),
+            weight_bytes: e * 3 * h as u64 * h as u64,
+            act_out_bytes: 3 * act,
+        },
+        LayerOp {
+            name: "scores",
+            cost: ops::attention_scores(1, pos, cfg.heads, dh, e),
+            weight_bytes: 0, // reads the KV cache instead
+            act_out_bytes: e * pos as u64 * cfg.heads as u64,
+        },
+        LayerOp {
+            name: "softmax",
+            cost: ops::softmax(cfg.heads, pos, e),
+            weight_bytes: 0,
+            act_out_bytes: e * pos as u64 * cfg.heads as u64,
+        },
+        LayerOp {
+            name: "context",
+            cost: ops::attention_context(1, pos, cfg.heads, dh, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "out-proj",
+            cost: ops::mvm(h, h, e),
+            weight_bytes: e * h as u64 * h as u64,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "ln2",
+            cost: ops::layernorm(1, h, e),
+            weight_bytes: 0,
+            act_out_bytes: act,
+        },
+        LayerOp {
+            name: "ffn-up",
+            cost: ops::mvm(f, h, e),
+            weight_bytes: e * h as u64 * f as u64,
+            act_out_bytes: e * f as u64,
+        },
+        LayerOp {
+            name: "silu",
+            cost: ops::activation(f as u64, e),
+            weight_bytes: 0,
+            act_out_bytes: e * f as u64,
+        },
+        LayerOp {
+            name: "ffn-down",
+            cost: ops::mvm(h, f, e),
+            weight_bytes: e * h as u64 * f as u64,
+            act_out_bytes: act,
+        },
+    ]
+}
+
+/// Total FLOPs of an op list.
+pub fn total_flops(ops: &[LayerOp]) -> f64 {
+    ops.iter().map(|o| o.cost.mac_flops + o.cost.vec_flops).sum()
+}
+
+/// Total weight bytes of an op list.
+pub fn total_weight_bytes(ops: &[LayerOp]) -> u64 {
+    ops.iter().map(|o| o.weight_bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpt3_layer_weights_closed_form() {
+        let cfg = LlmConfig::gpt3_6_7b();
+        // 12 h² per layer for GPT-3 (4h² attn + 8h² ffn), bf16
+        let expect = 2 * 12 * 4096u64 * 4096;
+        assert_eq!(cfg.layer_weight_bytes(), expect);
+        let ops = prefill_layer(&cfg, 2048);
+        assert_eq!(total_weight_bytes(&ops), expect);
+    }
+
+    #[test]
+    fn gpt3_prefill_flops_near_12h2s() {
+        // dense matmul flops per layer ≈ 2·S·12h² + attention 4·S²·h
+        let cfg = LlmConfig::gpt3_6_7b();
+        let s = 2048u64;
+        let ops = prefill_layer(&cfg, s as u32);
+        let mac: f64 = ops.iter().map(|o| o.cost.mac_flops).sum();
+        let expect = 2.0 * s as f64 * 12.0 * 4096.0f64 * 4096.0
+            + 4.0 * (s * s) as f64 * 4096.0;
+        assert!((mac - expect).abs() / expect < 1e-12, "{mac} vs {expect}");
+    }
+
+    #[test]
+    fn decode_flops_are_prefill_over_seq() {
+        // decode of one token ≈ prefill flops / seq (matmul part)
+        let cfg = LlmConfig::gpt3_6_7b();
+        let s = 2048;
+        let pre: f64 = prefill_layer(&cfg, s).iter().map(|o| o.cost.mac_flops).sum();
+        let dec: f64 = decode_layer(&cfg, s).iter().map(|o| o.cost.mac_flops).sum();
+        let ratio = pre / dec / s as f64;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn kv_cache_size() {
+        let cfg = LlmConfig::gpt3_6_7b();
+        // 2 (K,V) * 2 B * 2048 * 4096 = 32 MiB per layer
+        assert_eq!(cfg.kv_bytes_per_layer(2048), 32 << 20);
+    }
+
+    #[test]
+    fn model_zoo_shapes() {
+        assert_eq!(LlmConfig::llama2_70b().head_dim(), 128);
+        assert_eq!(LlmConfig::qwen_72b().ffn, 24576);
+        assert_eq!(LlmConfig::gpt3_6_7b().head_dim(), 128);
+    }
+}

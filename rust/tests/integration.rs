@@ -1,0 +1,283 @@
+//! End-to-end integration tests over the public API: spec text → hardware →
+//! workload → mapping primitives → simulation → reports.
+
+use mldse::arch::{DmcParams, GsmParams, MpmcParams};
+use mldse::coordinator::Coordinator;
+use mldse::cost::Packaging;
+use mldse::eval::Registry;
+use mldse::hwir::{mlc, Hardware};
+use mldse::sim::{simulate, SimConfig};
+use mldse::workloads::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig};
+
+fn small_cfg() -> LlmConfig {
+    LlmConfig {
+        hidden: 512,
+        heads: 8,
+        ffn: 2048,
+        layers: 4,
+        elem_bytes: 2,
+    }
+}
+
+/// Declarative spec text → operable hardware → simulation.
+#[test]
+fn spec_to_simulation_end_to_end() {
+    let spec = r#"{
+      "matrix": {
+        "name": "board", "dims": [2],
+        "comms": [{"name": "bnet", "topology": "ring",
+                   "link_bandwidth": 16, "link_latency": 4}],
+        "cells": [
+          {"at": [0], "matrix": {
+            "name": "chip", "dims": [2, 2],
+            "comms": [{"name": "noc", "topology": "mesh",
+                       "link_bandwidth": 32, "link_latency": 1}],
+            "fill": {"point": {"name": "core", "kind": "compute",
+                     "systolic": [16, 16], "vector_lanes": 64,
+                     "lmem": {"capacity": 1048576, "bandwidth": 64,
+                              "latency": 2}}}
+          }},
+          {"at": [1], "point": {"name": "dram", "kind": "dram",
+           "capacity": 1073741824, "bandwidth": 256, "latency": 80}}
+        ]
+      }
+    }"#;
+    let hw = Hardware::build(mldse::hwir::parse_spec(spec).unwrap());
+    assert_eq!(hw.points_of_kind("compute").len(), 4);
+    assert_eq!(hw.root.depth(), 2);
+
+    // roundtrip through the serializer
+    let text = mldse::hwir::to_spec(&hw.root).to_pretty();
+    let hw2 = Hardware::build(mldse::hwir::parse_spec(&text).unwrap());
+    assert_eq!(hw2.num_points(), hw.num_points());
+
+    // map a tiny graph across the spec-built hardware and simulate
+    use mldse::mapping::MappingState;
+    use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+    let mut g = TaskGraph::new();
+    let mut c = ComputeCost::zero(OpClass::MatMul);
+    c.dims = [64, 64, 64];
+    c.mac_flops = 2.0 * 64.0f64.powi(3);
+    c.in_bytes = 16384;
+    c.out_bytes = 8192;
+    let t = g.add("mm", TaskKind::Compute(c));
+    let x = g.add("xfer", TaskKind::Comm { bytes: 8192, hops: 0, route: None });
+    let u = g.add("mm2", TaskKind::Compute(c));
+    g.connect(t, x);
+    g.connect(x, u);
+    let mut st = MappingState::new(g);
+    let c00 = hw.cell(&mlc(&[&[0], &[0, 0]])).unwrap();
+    let c11 = hw.cell(&mlc(&[&[0], &[1, 1]])).unwrap();
+    st.map_node(t, c00).unwrap();
+    st.map_node(u, c11).unwrap();
+    let segs = hw.route(&mlc(&[&[0], &[0, 0]]), &mlc(&[&[0], &[1, 1]]));
+    st.map_edge(x, &segs).unwrap();
+    let r = simulate(&hw, &st.graph, &st.mapping, &Registry::standard(), &SimConfig::default())
+        .unwrap();
+    assert!(r.makespan > 0.0);
+    assert_eq!(r.unfinished, 0);
+}
+
+/// Table 3 "flexible spatial level": the same workload code runs on a
+/// 2-level chip and on a 4-level board without changes.
+#[test]
+fn capability_flexible_spatial_levels() {
+    let cfg = small_cfg();
+    // 2 levels
+    let flat = dmc_decode_temporal(&cfg, 128, 1, &DmcParams { grid: (2, 2), ..Default::default() });
+    assert_eq!(flat.hw.root.depth(), 2);
+    // 4 levels (board -> package -> chiplet -> core)
+    let mut p = MpmcParams::paper(2, Packaging::Mcm);
+    p.total_chiplets = 4;
+    p.chiplet.grid = (2, 2);
+    let deep = mpmc_decode_spatial(&cfg, 128, 1, &p);
+    assert_eq!(deep.hw.root.depth(), 3);
+    let evals = Registry::standard();
+    for w in [&flat, &deep] {
+        let r = simulate(&w.hw, &w.graph, &w.mapping, &evals, &SimConfig::default()).unwrap();
+        assert_eq!(r.unfinished, 0, "{}", w.name);
+    }
+}
+
+/// Table 3 "flexible organization": heterogeneous cells in one matrix —
+/// two compute chiplets with different systolic arrays plus an IO die,
+/// like the paper's Figure 3 package.
+#[test]
+fn capability_heterogeneous_package() {
+    use mldse::hwir::{CommAttrs, ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint, Topology};
+    let mut pkg = SpaceMatrix::new("package", vec![3]);
+    let mut big = SpaceMatrix::new("compute-big", vec![2]);
+    for i in 0..2 {
+        big.set(
+            Coord::new(vec![i]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((64, 64), 256).with_lmem(MemoryAttrs::new(1 << 20, 128.0, 1)),
+            )),
+        );
+    }
+    big.add_comm(SpacePoint::comm("noc", CommAttrs::new(Topology::Mesh, 32.0, 1)));
+    let mut small = SpaceMatrix::new("compute-small", vec![4]);
+    for i in 0..4 {
+        small.set(
+            Coord::new(vec![i]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((16, 16), 64).with_lmem(MemoryAttrs::new(1 << 19, 64.0, 1)),
+            )),
+        );
+    }
+    small.add_comm(SpacePoint::comm("noc", CommAttrs::new(Topology::Ring, 16.0, 1)));
+    pkg.set(Coord::new(vec![0]), Element::Matrix(big));
+    pkg.set(Coord::new(vec![1]), Element::Matrix(small));
+    pkg.set(
+        Coord::new(vec![2]),
+        Element::Point(SpacePoint::dram("io-die", MemoryAttrs::new(1 << 30, 256.0, 60))),
+    );
+    pkg.add_comm(SpacePoint::comm("nop", CommAttrs::new(Topology::Bus, 64.0, 4)));
+    let hw = Hardware::build(pkg);
+    assert_eq!(hw.points_of_kind("compute").len(), 6);
+    // cross-chiplet route passes both NoCs and the NoP
+    let segs = hw.route(&mlc(&[&[0], &[1]]), &mlc(&[&[1], &[3]]));
+    let names: Vec<&str> = segs.iter().map(|s| hw.point(s.comm).name.as_str()).collect();
+    assert_eq!(names, ["noc", "nop", "noc"]);
+}
+
+/// Table 3 "mixed granularity": a cluster mixing atomic GPUs with a
+/// fine-grained chiplet model in the same matrix simulates fine.
+#[test]
+fn capability_mixed_granularity() {
+    use mldse::hwir::{CommAttrs, ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint, Topology};
+    use mldse::mapping::Mapping;
+    use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+
+    let mut cluster = SpaceMatrix::new("cluster", vec![2]);
+    // coarse: one atomic GPU
+    cluster.set(
+        Coord::new(vec![0]),
+        Element::Point(SpacePoint::compute(
+            "gpu",
+            ComputeAttrs::new((395, 395), 4096).with_lmem(MemoryAttrs::new(40 << 30, 1555.0, 300)),
+        )),
+    );
+    // fine: a 2x2-core accelerator modeled to core level
+    let dmc = DmcParams { grid: (2, 2), with_dram: false, ..Default::default() };
+    cluster.set(Coord::new(vec![1]), Element::Matrix(dmc.chip_matrix("accel")));
+    cluster.add_comm(SpacePoint::comm(
+        "fabric",
+        CommAttrs::new(Topology::FullyConnected, 64.0, 100),
+    ));
+    let hw = Hardware::build(cluster);
+    assert_eq!(hw.points_of_kind("compute").len(), 5);
+
+    let mut g = TaskGraph::new();
+    let mut big = ComputeCost::zero(OpClass::MatMul);
+    big.mac_flops = 1e9;
+    let on_gpu = g.add("gpu-op", TaskKind::Compute(big));
+    let mut tiny = ComputeCost::zero(OpClass::MatMul);
+    tiny.mac_flops = 1e6;
+    tiny.dims = [64, 64, 64];
+    let on_core = g.add("core-op", TaskKind::Compute(tiny));
+    let x = g.add("x", TaskKind::Comm { bytes: 1 << 20, hops: 0, route: None });
+    g.connect(on_gpu, x);
+    g.connect(x, on_core);
+    let mut m = Mapping::new();
+    m.map(on_gpu, hw.cell(&mlc(&[&[0]])).unwrap());
+    m.map(on_core, hw.cell(&mlc(&[&[1], &[1, 1]])).unwrap());
+    m.map(x, hw.comm(&mlc(&[]), 0).unwrap());
+    let r = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+    assert_eq!(r.unfinished, 0);
+    assert!(r.timings[&on_core].1 > r.timings[&on_gpu].1);
+}
+
+/// Failure injection: bad workloads fail loudly, not silently.
+#[test]
+fn failure_injection() {
+    let cfg = small_cfg();
+    let w = dmc_prefill(&cfg, 128, &DmcParams { grid: (2, 2), ..Default::default() });
+    let evals = Registry::standard();
+
+    // zero iterations rejected
+    let bad = SimConfig { iterations: 0, ..Default::default() };
+    assert!(simulate(&w.hw, &w.graph, &w.mapping, &evals, &bad).is_err());
+
+    // event cap enforced
+    let capped = SimConfig { max_events: 3, ..Default::default() };
+    assert!(simulate(&w.hw, &w.graph, &w.mapping, &evals, &capped).is_err());
+
+    // unmapping an enabled task is caught
+    let mut broken = mldse::mapping::Mapping::new();
+    for (t, p) in w.mapping.mapped_tasks() {
+        broken.map(t, p);
+    }
+    let victim = w.graph.iter().find(|t| t.enabled).unwrap().id;
+    broken.unmap(victim);
+    assert!(simulate(&w.hw, &w.graph, &broken, &evals, &SimConfig::default()).is_err());
+
+    // mapping validation reports the same problem
+    assert!(!broken.validate(&w.graph, &w.hw).is_empty());
+}
+
+/// The three simulators stay consistent on a real workload: exact engine
+/// and Algorithm 1 agree; the naive baseline disagrees under contention.
+#[test]
+fn schedulers_cross_validate_on_real_workload() {
+    let cfg = small_cfg();
+    let params = DmcParams {
+        grid: (2, 2),
+        noc_bandwidth: 2.0,       // heavy NoC contention
+        dram_bandwidth: 64.0,     // narrow DRAM channel
+        lmem_capacity: 1 << 19,   // force weight streaming -> DRAM flows
+        ..Default::default()
+    };
+    let w = dmc_prefill(&cfg, 128, &params);
+    let evals = Registry::standard();
+    let exact = simulate(&w.hw, &w.graph, &w.mapping, &evals, &SimConfig::default()).unwrap();
+    let alg1 = mldse::sim::simulate_consistent(&w.hw, &w.graph, &w.mapping, &evals).unwrap();
+    assert!(
+        (exact.makespan - alg1.makespan).abs() / exact.makespan < 1e-9,
+        "exact {} vs alg1 {}",
+        exact.makespan,
+        alg1.makespan
+    );
+    // the naive baseline diverges under contention (direction depends on
+    // how its topo-order traversal interleaves with full-bandwidth comm)
+    let naive = mldse::sim::simulate_naive(&w.hw, &w.graph, &w.mapping, &evals).unwrap();
+    assert!(exact.truncations > 0, "workload should exhibit contention");
+    let rel = (naive.makespan - exact.makespan).abs() / exact.makespan;
+    assert!(rel > 1e-3, "naive should diverge: {} vs {}", naive.makespan, exact.makespan);
+}
+
+/// Energy accounting: streaming architectures burn DRAM energy; on-chip
+/// (spatial) execution doesn't.
+#[test]
+fn energy_accounting_tracks_dram_traffic() {
+    let cfg = small_cfg();
+    let temporal = dmc_decode_temporal(&cfg, 256, 1, &DmcParams { grid: (2, 2), ..Default::default() });
+    let evals = Registry::standard();
+    let r = simulate(&temporal.hw, &temporal.graph, &temporal.mapping, &evals, &SimConfig::default())
+        .unwrap();
+    let dram = temporal.hw.points_of_kind("dram")[0];
+    let dram_e = r.point_energy.get(&dram).copied().unwrap_or(0.0);
+    assert!(dram_e > 0.0, "DRAM energy must be accounted");
+    assert!(r.total_energy() > dram_e);
+    assert!(r.avg_power_w(1.0) > 0.0);
+}
+
+/// GSM vs DMC at full scale through the coordinator (the §7.3.3 headline).
+#[test]
+fn dmc_beats_gsm_at_comparable_area() {
+    let coord = Coordinator::standard();
+    let cfg = LlmConfig::gpt3_6_7b();
+    let seq = 512; // reduced for test runtime
+    let dmc = dmc_prefill(&cfg, seq, &DmcParams::table2(2));
+    let gsm = gsm_prefill(&cfg, seq, &GsmParams::table2(2));
+    let rd = coord.simulate(&dmc, &SimConfig::default()).unwrap();
+    let rg = coord.simulate(&gsm, &SimConfig::default()).unwrap();
+    assert!(
+        rd.makespan < rg.makespan,
+        "DMC {} vs GSM {}",
+        rd.makespan,
+        rg.makespan
+    );
+}
