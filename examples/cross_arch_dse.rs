@@ -9,7 +9,7 @@
 
 use mldse::coordinator::Coordinator;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldse::util::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let coord = Coordinator::standard();
 

@@ -22,7 +22,7 @@ fn compute(cycles: f64) -> TaskKind {
     TaskKind::Compute(c)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldse::util::error::Result<()> {
     let params = DmcParams {
         grid: (2, 2),
         ..Default::default()

@@ -25,7 +25,7 @@ use mldse::dse::report::{fmt, Table};
 use mldse::sim::SimConfig;
 use mldse::workloads::{dmc_decode_temporal, mpmc_decode_spatial, LlmConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldse::util::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let t0 = std::time::Instant::now();
 
@@ -60,8 +60,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---------------- architecture tier ----------------
     println!("[2/4] architecture tier: temporal DMC vs spatial MPMC-DMC");
-    let mut dmc = DmcParams::default();
-    dmc.grid = grid;
+    let dmc = DmcParams {
+        grid,
+        ..DmcParams::default()
+    };
     let temporal = dmc_decode_temporal(&cfg, pos, layers, &dmc);
     let rt = coord.simulate(&temporal, &SimConfig::default())?;
     println!(
@@ -79,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             "      PJRT evaluator agrees to {:.2e} rel. error (cache {hits} hits / {misses} misses)",
             rel
         );
-        anyhow::ensure!(rel < 1e-3, "PJRT/analytic divergence");
+        mldse::ensure!(rel < 1e-3, "PJRT/analytic divergence");
     }
 
     // ---------------- parameter tier ----------------

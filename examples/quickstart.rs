@@ -15,7 +15,7 @@ use mldse::mapping::MappingState;
 use mldse::sim::{simulate, SimConfig};
 use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldse::util::error::Result<()> {
     // ------------------------------------------------------------------
     // 1. Model hardware: board -> { chip (2x2 cores, mesh NoC), DRAM }
     //    (recursive SpaceMatrix / SpacePoint construction, paper §4)

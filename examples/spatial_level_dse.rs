@@ -13,7 +13,7 @@ use mldse::coordinator::Coordinator;
 use mldse::cost::Packaging;
 use mldse::hwir::mlc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mldse::util::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let coord = Coordinator::standard();
 

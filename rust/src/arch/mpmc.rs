@@ -54,7 +54,6 @@ impl MpmcParams {
             nop_latency: nop_lat,
             board_bandwidth: 4.0,
             board_latency: 2500, // PCB SerDes + protocol + switch stack
-
         }
     }
 

@@ -7,8 +7,6 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::dse::experiments::{self, Ctx};
 use crate::dse::report::Table;
 use crate::eval::pjrt::PjrtEvaluator;
@@ -17,6 +15,7 @@ use crate::hwir::PointEntry;
 use crate::runtime::Runtime;
 use crate::sim::{simulate, SimConfig, SimResult};
 use crate::taskgraph::Task;
+use crate::util::error::Result;
 use crate::workloads::Workload;
 
 /// Forwarding evaluator so the shared PJRT evaluator can live in the
@@ -85,7 +84,7 @@ impl Coordinator {
     /// blocks on XLA). Errors if PJRT is unavailable.
     pub fn simulate_pjrt(&self, w: &Workload, cfg: &SimConfig) -> Result<SimResult> {
         let Some(ev) = &self.pjrt else {
-            anyhow::bail!("PJRT evaluator not loaded (run `make artifacts`)");
+            crate::bail!("PJRT evaluator not loaded (run `make artifacts`)");
         };
         let n = ev.prewarm(&w.graph, &w.mapping, &w.hw)?;
         crate::log_debug!("pjrt prewarm: {n} unique descriptors");
@@ -111,7 +110,7 @@ impl Coordinator {
             "fig9-cross" => experiments::fig9_cross(&ctx),
             "fig10" => experiments::fig10(&ctx),
             "sim-speed" => vec![experiments::sim_speed(&ctx).0],
-            other => anyhow::bail!(
+            other => crate::bail!(
                 "unknown experiment '{other}' (try table2, fig8-kernel, fig8-llm, \
                  fig9-gsm, fig9-dmc, fig9-cross, fig10, sim-speed)"
             ),
@@ -169,8 +168,9 @@ mod tests {
         assert!(c.run_experiment("nope", true).is_err());
     }
 
-    /// Full L3->PJRT round trip (skips when artifacts are absent): the
-    /// PJRT-backed simulation must agree with the analytic one.
+    /// Full L3->PJRT round trip (skips when artifacts are absent or the
+    /// build carries the null PJRT backend): the PJRT-backed simulation
+    /// must agree with the analytic one.
     #[test]
     fn pjrt_simulation_matches_analytic() {
         let art = crate::runtime::artifacts_dir().join("evaluator_b128.hlo.txt");
@@ -178,7 +178,10 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let c = Coordinator::with_pjrt().unwrap();
+        let Ok(c) = Coordinator::with_pjrt() else {
+            eprintln!("skipping: PJRT backend unavailable (null backend build)");
+            return;
+        };
         let w = tiny_workload();
         let analytic = c.simulate(&w, &SimConfig::default()).unwrap();
         let pjrt = c.simulate_pjrt(&w, &SimConfig::default()).unwrap();

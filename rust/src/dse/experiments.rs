@@ -396,8 +396,10 @@ pub fn fig10(ctx: &Ctx) -> Vec<Table> {
         &["pos", "layers", "cycles", "dram util", "best core util"],
     );
     {
-        let mut p = DmcParams::default();
-        p.grid = ctx.dmc_grid();
+        let mut p = DmcParams {
+            grid: ctx.dmc_grid(),
+            ..DmcParams::default()
+        };
         if ctx.quick {
             // scale the DRAM channel down with the chip
             p.dram_bandwidth = 128.0;

@@ -1,8 +1,14 @@
 //! Parallel design-point evaluation over a std-thread worker pool (the
 //! offline vendor set has no rayon/tokio).
+//!
+//! Work distribution is a single atomic cursor (cheap work stealing), and
+//! result collection is mutex-free: each worker appends `(index, result)`
+//! pairs to its own private buffer, and the buffers are stitched back into
+//! input order after the pool joins. The previous design funneled every
+//! completion through one `Mutex<Vec<Option<R>>>`, which serialized all
+//! workers on result delivery for sweep workloads with cheap items.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Evaluate `f` over `points` with up to `workers` threads, preserving
 /// input order in the result.
@@ -17,25 +23,38 @@ where
         return points.iter().map(&f).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<R>>> =
-        Mutex::new((0..points.len()).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= points.len() {
-                    break;
-                }
-                let r = f(&points[i]);
-                results.lock().unwrap()[i] = Some(r);
-            });
-        }
+    let worker_outputs: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    // Private per-worker output: no cross-thread contention
+                    // on the hot path.
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= points.len() {
+                            break;
+                        }
+                        out.push((i, f(&points[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
     });
-    results
-        .into_inner()
-        .unwrap()
+    // Stitch the chunks back into input order.
+    let mut slots: Vec<Option<R>> = (0..points.len()).map(|_| None).collect();
+    for (i, r) in worker_outputs.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "item {i} evaluated twice");
+        slots[i] = Some(r);
+    }
+    slots
         .into_iter()
-        .map(|r| r.expect("worker completed"))
+        .map(|r| r.expect("every item evaluated exactly once"))
         .collect()
 }
 
@@ -68,5 +87,38 @@ mod tests {
         let points: Vec<u32> = vec![];
         let out: Vec<u32> = run_parallel(&points, 8, |x| *x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_points() {
+        let points = vec![10u32, 20];
+        assert_eq!(run_parallel(&points, 64, |x| x + 1), vec![11, 21]);
+    }
+
+    /// Order preservation under many workers with heavily skewed per-item
+    /// cost: early items are slow and late items are instant, so workers
+    /// finish far out of submission order and the stitch step must restore
+    /// input order exactly.
+    #[test]
+    fn preserves_order_under_skewed_cost() {
+        let n = 256usize;
+        let points: Vec<usize> = (0..n).collect();
+        let out = run_parallel(&points, 16, |&i| {
+            if i % 17 == 0 {
+                // A sprinkling of slow items keeps several workers busy
+                // while the rest of the queue drains instantly.
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            } else {
+                std::thread::yield_now();
+            }
+            (i, std::thread::current().id())
+        });
+        assert_eq!(out.len(), n);
+        for (slot, (i, _)) in out.iter().enumerate() {
+            assert_eq!(slot, *i, "result stitched out of order");
+        }
+        // sanity: the pool actually ran on more than one thread
+        let distinct: std::collections::HashSet<_> = out.iter().map(|(_, t)| *t).collect();
+        assert!(distinct.len() > 1, "expected multi-threaded execution");
     }
 }

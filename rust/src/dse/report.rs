@@ -39,7 +39,7 @@ impl Table {
             cells
                 .iter()
                 .zip(widths)
-                .map(|(c, w)| format!("{c:>w$}"))
+                .map(|(c, w)| format!("{c:>width$}", width = *w))
                 .collect::<Vec<_>>()
                 .join("  ")
         };

@@ -34,7 +34,7 @@
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::hwir::{PointEntry, PointKind};
 use crate::runtime::{Executable, Runtime};
@@ -241,7 +241,7 @@ mod tests {
         c
     }
 
-    /// Requires `make artifacts`; skips otherwise.
+    /// Requires `make artifacts` and a real PJRT backend; skips otherwise.
     #[test]
     fn pjrt_matches_rust_roofline() {
         let art = crate::runtime::artifacts_dir().join(format!("evaluator_b{BATCH}.hlo.txt"));
@@ -249,7 +249,10 @@ mod tests {
             eprintln!("skipping: artifact missing (run `make artifacts`)");
             return;
         }
-        let rt = Runtime::cpu().unwrap();
+        let Ok(rt) = Runtime::cpu() else {
+            eprintln!("skipping: PJRT backend unavailable (null backend build)");
+            return;
+        };
         let ev = PjrtEvaluator::load(&rt).unwrap();
         let hw = hw();
         let entry = hw.entries().next().unwrap();

@@ -16,6 +16,7 @@ use mldse::arch::{DmcParams, GsmParams, MpmcParams};
 use mldse::coordinator::{Coordinator, EXPERIMENTS};
 use mldse::cost::Packaging;
 use mldse::sim::SimConfig;
+use mldse::util::error::Result;
 use mldse::util::json::{Json, JsonObj};
 use mldse::workloads::{
     dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig,
@@ -111,7 +112,7 @@ fn print_usage() {
     );
 }
 
-fn cmd_info() -> anyhow::Result<()> {
+fn cmd_info() -> Result<()> {
     println!("mldse {}", env!("CARGO_PKG_VERSION"));
     let art = mldse::runtime::artifacts_dir();
     println!("artifacts dir: {}", art.display());
@@ -130,7 +131,7 @@ fn cmd_info() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> Result<()> {
     let arch = args.flag("arch").unwrap_or("dmc");
     let config = args.num("config", 2usize);
     let seq = args.num("seq", 2048u32);
@@ -138,7 +139,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let workload = match arch {
         "dmc" => dmc_prefill(&cfg, seq, &DmcParams::table2(config)),
         "gsm" => gsm_prefill(&cfg, seq, &GsmParams::table2(config)),
-        other => anyhow::bail!("unknown arch '{other}'"),
+        other => mldse::bail!("unknown arch '{other}'"),
     };
     let coord = if args.bool_flag("pjrt") {
         Coordinator::with_pjrt()?
@@ -191,7 +192,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_decode(args: &Args) -> anyhow::Result<()> {
+fn cmd_decode(args: &Args) -> Result<()> {
     let mode = args.flag("mode").unwrap_or("spatial");
     let pos = args.num("pos", 2048u32);
     let layers = args.num("layers", 8u32);
@@ -207,7 +208,7 @@ fn cmd_decode(args: &Args) -> anyhow::Result<()> {
             };
             mpmc_decode_spatial(&cfg, pos, layers, &MpmcParams::paper(cpp, pkg))
         }
-        other => anyhow::bail!("unknown decode mode '{other}'"),
+        other => mldse::bail!("unknown decode mode '{other}'"),
     };
     let r = coord.simulate(&w, &SimConfig::default())?;
     println!("workload: {}", w.name);
@@ -218,7 +219,7 @@ fn cmd_decode(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+fn cmd_experiment(args: &Args) -> Result<()> {
     let name = args
         .positional
         .first()
@@ -245,10 +246,10 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_hardware(args: &Args) -> anyhow::Result<()> {
+fn cmd_hardware(args: &Args) -> Result<()> {
     let path = args
         .flag("spec")
-        .ok_or_else(|| anyhow::anyhow!("--spec FILE required"))?;
+        .ok_or_else(|| mldse::format_err!("--spec FILE required"))?;
     let text = std::fs::read_to_string(path)?;
     let matrix = mldse::hwir::parse_spec(&text)?;
     let hw = mldse::hwir::Hardware::build(matrix);

@@ -732,7 +732,7 @@ mod tests {
         assert_eq!(st.graph, before);
         assert!(st.redo());
         assert_eq!(st.graph, after);
-        assert!(st.redo() == false);
+        assert!(!st.redo());
         // new action clears redo
         st.undo();
         st.copy_task(a).unwrap();

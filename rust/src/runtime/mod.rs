@@ -1,65 +1,53 @@
-//! PJRT runtime — loads AOT-compiled XLA computations (HLO text produced by
-//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//! PJRT runtime bridge — loads AOT-compiled XLA computations (HLO text
+//! produced by `python/compile/aot.py`) and executes them from the Rust hot
+//! path.
 //!
 //! Python runs only at build time (`make artifacts`); this module is the
-//! only place the compiled artifacts are touched at run time. The
-//! interchange format is HLO *text*: jax ≥ 0.5 emits `HloModuleProto`s with
-//! 64-bit instruction ids that the crate's bundled XLA rejects, while the
-//! text parser reassigns ids (see /opt/xla-example/README.md).
+//! only place the compiled artifacts are touched at run time.
+//!
+//! **Null backend.** The offline vendor set ships no XLA/PJRT bindings, so
+//! this build carries the *null* backend: the [`Runtime`] and [`Executable`]
+//! types keep their full API surface, but [`Runtime::cpu`] reports the
+//! backend as unavailable and every caller falls back to the analytic
+//! evaluators ([`crate::eval::roofline`]). The [`crate::eval::pjrt`]
+//! evaluator, the coordinator and the CLI all handle that fallback
+//! gracefully, and their artifact-dependent tests skip. Dropping an
+//! XLA-binding crate into the vendor set only requires reimplementing the
+//! three methods below — no caller changes.
 
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use crate::util::error::Result;
 
-/// A PJRT CPU client plus the executables loaded on it.
+/// Message used by every entry point of the null backend.
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: this build has no vendored XLA bindings \
+     (the analytic roofline evaluator is used instead)";
+
+/// A PJRT CPU client plus the executables loaded on it (null backend).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    _priv: (),
 }
 
 impl Runtime {
-    /// Create a CPU runtime.
+    /// Create a CPU runtime. Always fails on the null backend.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        crate::log_debug!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime { client })
+        crate::log_debug!("{UNAVAILABLE}");
+        Err(crate::format_err!("{UNAVAILABLE}"))
     }
 
     /// Load and compile an HLO-text artifact.
     pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
         let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe: Mutex::new(exe),
-            path: path.to_path_buf(),
-        })
+        Err(crate::format_err!("loading {}: {UNAVAILABLE}", path.display()))
     }
 }
 
-/// A compiled XLA executable. Execution is serialized behind a mutex (the
-/// underlying PJRT handles are not Sync).
+/// A compiled XLA executable (null backend: never instantiable because
+/// [`Runtime::cpu`] fails first).
 pub struct Executable {
-    exe: Mutex<xla::PjRtLoadedExecutable>,
     path: PathBuf,
 }
-
-// SAFETY: the raw PJRT handles inside `PjRtLoadedExecutable` are only ever
-// touched while holding `self.exe`'s mutex, and the PJRT CPU client permits
-// invocation from any single thread at a time. The !Send bound on the crate
-// type is the default for raw pointers, not a documented thread-affinity
-// requirement.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
 
 impl Executable {
     pub fn path(&self) -> &Path {
@@ -70,36 +58,19 @@ impl Executable {
     /// have been lowered with `return_tuple=True`; returns each tuple element
     /// flattened to a f32 vector.
     pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
         for (data, shape) in inputs {
             let expected: usize = shape.iter().product();
-            anyhow::ensure!(
+            crate::ensure!(
                 expected == data.len(),
                 "input length {} does not match shape {:?}",
                 data.len(),
                 shape
             );
-            let shape_i64: Vec<i64> = shape.iter().map(|s| *s as i64).collect();
-            let lit = xla::Literal::vec1(data)
-                .reshape(&shape_i64)
-                .context("reshaping input literal")?;
-            literals.push(lit);
         }
-        let exe = self.exe.lock().unwrap();
-        let mut result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.path.display()))?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        drop(exe);
-        let tuple = result.decompose_tuple().context("decomposing result tuple")?;
-        tuple
-            .into_iter()
-            .map(|lit| {
-                lit.to_vec::<f32>()
-                    .context("converting result literal to f32 vec")
-            })
-            .collect()
+        Err(crate::format_err!(
+            "executing {}: {UNAVAILABLE}",
+            self.path.display()
+        ))
     }
 }
 
@@ -126,27 +97,19 @@ pub fn artifacts_dir() -> PathBuf {
 mod tests {
     use super::*;
 
-    /// End-to-end check of the load-and-run path, independent of the
-    /// evaluator artifact: requires `make artifacts` to have produced
-    /// `evaluator_b128.hlo.txt`. Skipped (with a note) when absent so
-    /// `cargo test` works before the first artifact build.
     #[test]
-    fn load_and_run_evaluator_artifact() {
-        let art = artifacts_dir().join("evaluator_b128.hlo.txt");
-        if !art.exists() {
-            eprintln!("skipping: {} not built (run `make artifacts`)", art.display());
-            return;
-        }
-        let rt = Runtime::cpu().unwrap();
-        let exe = rt.load_hlo_text(&art).unwrap();
-        // batch of 128 descriptors x F fields, one hw-param vector
-        let b = 128;
-        let f = crate::eval::pjrt::DESC_FIELDS;
-        let desc = vec![0f32; b * f];
-        let hwp = vec![1f32; crate::eval::pjrt::HW_FIELDS];
-        let out = exe
-            .run_f32(&[(&desc, &[b, f]), (&hwp, &[crate::eval::pjrt::HW_FIELDS])])
-            .unwrap();
-        assert_eq!(out[0].len(), b);
+    fn null_backend_reports_unavailable() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unavailable"),
+            "unexpected error: {err:#}"
+        );
+    }
+
+    #[test]
+    fn artifacts_dir_is_nonempty_path() {
+        let dir = artifacts_dir();
+        assert!(!dir.as_os_str().is_empty());
+        assert!(dir.ends_with("artifacts"));
     }
 }

@@ -1,0 +1,170 @@
+//! Minimal error-handling substrate (offline substitute for `anyhow`).
+//!
+//! [`Error`] is a context chain of human-readable messages: constructing one
+//! from any `std::error::Error` captures its whole `source()` chain, and the
+//! [`Context`] extension trait prepends higher-level context the way
+//! `anyhow::Context` does. `{err}` prints the outermost message; `{err:#}`
+//! prints the full chain separated by `": "`.
+//!
+//! The crate-root macros [`crate::format_err!`], [`crate::bail!`] and
+//! [`crate::ensure!`] mirror their `anyhow` namesakes.
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Crate-standard result type (defaults the error to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a single message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Prepend one level of context.
+    pub fn wrap(mut self, msg: impl fmt::Display) -> Error {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The message chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Like `anyhow::Error`, `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent with
+// the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Context`-style extension for results and options.
+pub trait Context<T> {
+    /// Attach a fixed context message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    /// Attach a lazily computed context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($t:tt)*) => { $crate::util::error::Error::msg(format!($($t)*)) };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::format_err!($($t)*).into()) };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outer_and_alternate_chain() {
+        let e = Error::msg("inner").wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.chain(), ["outer", "inner"]);
+    }
+
+    #[test]
+    fn from_std_error_captures_sources() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "missing file");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading spec").unwrap_err();
+        assert_eq!(format!("{e:#}"), "loading spec: missing file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("index {} missing", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "index 3 missing");
+        assert_eq!(Some(5).context("present").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(fail: bool) -> Result<u32> {
+            crate::ensure!(!fail, "failed with code {}", 7);
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        let e = inner(true).unwrap_err();
+        assert_eq!(format!("{e}"), "failed with code 7");
+        let e = crate::format_err!("x = {}", 2);
+        assert_eq!(format!("{e}"), "x = 2");
+    }
+}

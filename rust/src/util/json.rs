@@ -177,13 +177,9 @@ impl Json {
     // ------------------------------------------------------------------
     // Serialization
     // ------------------------------------------------------------------
-
-    /// Compact single-line serialization.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out, None, 0);
-        out
-    }
+    //
+    // Compact single-line serialization is the `Display` impl below (so
+    // `.to_string()` comes from the std `ToString` blanket impl).
 
     /// Pretty-printed serialization with 2-space indent.
     pub fn to_pretty(&self) -> String {
@@ -238,6 +234,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    /// Compact single-line serialization.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        f.write_str(&out)
     }
 }
 

@@ -4,6 +4,8 @@
 //! everything that would normally come from `serde`, `rand`, `proptest`,
 //! `log`, … is implemented here from scratch:
 //!
+//! * [`error`] — a context-chain error type with `anyhow`-style `Context`,
+//!   `bail!` / `ensure!` / `format_err!` macros.
 //! * [`json`] — a minimal but complete JSON parser/serializer used by the
 //!   config system and report emission.
 //! * [`rng`] — a deterministic PCG-family PRNG; all stochastic search in the
@@ -13,6 +15,7 @@
 //!   random case generation and iterative shrinking.
 //! * [`logger`] — leveled stderr logging with an env switch (`MLDSE_LOG`).
 
+pub mod error;
 pub mod json;
 pub mod logger;
 pub mod propcheck;

@@ -48,6 +48,7 @@ fn tile_cost(cost: &ComputeCost, parts: u64, row_parts: u32, col_parts: u32) -> 
 
 /// Route a transfer between two cells and lower it into chained comm tasks
 /// (map_edge semantics, done directly on graph+mapping).
+#[allow(clippy::too_many_arguments)]
 fn add_routed_comm(
     hw: &Hardware,
     graph: &mut TaskGraph,
@@ -110,8 +111,7 @@ pub fn dmc_prefill(cfg: &LlmConfig, seq: u32, params: &DmcParams) -> Workload {
     let worst_act = ops.iter().map(|o| o.act_out_bytes).max().unwrap_or(0);
     let need = weights + 2 * worst_act;
     let have = params.total_lmem();
-    let stream_weights = need > have || dram.is_none() == false && need > have;
-    let stream_weights = stream_weights && dram.is_some();
+    let stream_weights = need > have && dram.is_some();
     notes.push(format!(
         "layer working set {:.1} MiB vs {:.1} MiB on-chip -> weights {}",
         need as f64 / (1 << 20) as f64,
@@ -334,7 +334,7 @@ pub fn dmc_decode_temporal(
     // KV cache storage on DRAM.
     let kv_store = graph.add(
         "kv@dram",
-        TaskKind::Storage { bytes: kv_bytes as u64 * layers as u64 },
+        TaskKind::Storage { bytes: kv_bytes * layers as u64 },
     );
     mapping.map(kv_store, dram);
 

@@ -1,0 +1,244 @@
+//! Regression tests for the declarative hardware-spec round trip:
+//! `hwir::parse_spec` → `hwir::to_spec` → `hwir::parse_spec` must be a
+//! fixed point for nested matrices, `fill` cells, holes, sync groups and
+//! evaluator bindings — and malformed input must fail loudly at the right
+//! layer (`util::json` for syntax, `SpecError` for structure).
+
+use mldse::hwir::{parse_spec, to_spec, Hardware, SpaceMatrix};
+use mldse::util::json::Json;
+
+/// A deliberately gnarly spec: three levels, a heterogeneous override, a
+/// hole, a comm point with an evaluator binding, and both kinds of sync
+/// group (explicit members and all-cells).
+const NESTED: &str = r#"{
+  "matrix": {
+    "name": "board", "dims": [2, 2],
+    "comms": [{"name": "bnet", "topology": "ring",
+               "link_bandwidth": 8, "link_latency": 16,
+               "evaluator": "pjrt"}],
+    "fill": {"matrix": {
+      "name": "chip", "dims": [3],
+      "comms": [{"name": "noc", "topology": "mesh",
+                 "link_bandwidth": 32, "link_latency": 1}],
+      "fill": {"point": {"name": "core", "kind": "compute",
+               "systolic": [16, 16], "vector_lanes": 64,
+               "lmem": {"capacity": 2097152, "bandwidth": 152,
+                        "latency": 2}}},
+      "cells": [{"at": [2], "point": {"name": "sram", "kind": "memory",
+                 "capacity": 8388608, "bandwidth": 128, "latency": 4}}],
+      "sync_groups": [{"name": "cores", "members": [[0], [1]]}]
+    }},
+    "cells": [
+      {"at": [1, 1], "hole": true},
+      {"at": [0, 1], "point": {"name": "hbm", "kind": "dram",
+       "capacity": 17179869184, "bandwidth": 2048, "latency": 100,
+       "evaluator": "dramsim"}}
+    ],
+    "sync_groups": [{"name": "everything", "members": null}]
+  }
+}"#;
+
+fn assert_same_hardware(a: &SpaceMatrix, b: &SpaceMatrix) {
+    let ha = Hardware::build(a.clone());
+    let hb = Hardware::build(b.clone());
+    assert_eq!(ha.num_points(), hb.num_points());
+    for (ea, eb) in ha.entries().zip(hb.entries()) {
+        assert_eq!(ea.addr, eb.addr);
+        assert_eq!(ea.point, eb.point);
+        assert_eq!(ea.level, eb.level);
+    }
+    assert_eq!(ha.sync_groups().len(), hb.sync_groups().len());
+    for (ga, gb) in ha.sync_groups().iter().zip(hb.sync_groups()) {
+        assert_eq!(ga.name, gb.name);
+        assert_eq!(ga.matrix, gb.matrix);
+        assert_eq!(ga.points, gb.points);
+    }
+}
+
+#[test]
+fn nested_spec_roundtrips_compact_and_pretty() {
+    let m = parse_spec(NESTED).unwrap();
+    // Parsed shape: the 2x2 board fill stamps a chip everywhere, then the
+    // overrides punch a hole at (1,1) and a DRAM at (0,1) -> 2 chips of
+    // 3 cells each (one overridden to a memory), 1 dram.
+    let hw = Hardware::build(m.clone());
+    assert_eq!(hw.points_of_kind("compute").len(), 4);
+    assert_eq!(hw.points_of_kind("memory").len(), 2);
+    assert_eq!(hw.points_of_kind("dram").len(), 1);
+    assert_eq!(hw.points_of_kind("comm").len(), 3); // bnet + 2 nocs
+
+    let compact = to_spec(&m).to_string();
+    let m2 = parse_spec(&compact).unwrap();
+    assert_same_hardware(&m, &m2);
+
+    let pretty = to_spec(&m).to_pretty();
+    let m3 = parse_spec(&pretty).unwrap();
+    assert_same_hardware(&m, &m3);
+}
+
+#[test]
+fn serializer_is_idempotent_after_first_materialization() {
+    // `fill` is materialized into explicit cells on the first parse, so
+    // from the second round on, the textual form must be a fixed point.
+    let m1 = parse_spec(NESTED).unwrap();
+    let text1 = to_spec(&m1).to_string();
+    let m2 = parse_spec(&text1).unwrap();
+    let text2 = to_spec(&m2).to_string();
+    assert_eq!(text1, text2);
+}
+
+#[test]
+fn evaluator_bindings_survive_roundtrip() {
+    let m = parse_spec(NESTED).unwrap();
+    let m2 = parse_spec(&to_spec(&m).to_string()).unwrap();
+    let hw = Hardware::build(m2);
+    let dram = hw.points_of_kind("dram")[0];
+    assert_eq!(hw.point(dram).evaluator, "dramsim");
+    let bnet = hw.comm(&mldse::hwir::MlCoord::root(), 0).unwrap();
+    assert_eq!(hw.point(bnet).evaluator, "pjrt");
+}
+
+#[test]
+fn holes_and_sync_groups_survive_roundtrip() {
+    let m = parse_spec(NESTED).unwrap();
+    let m2 = parse_spec(&to_spec(&m).to_string()).unwrap();
+    let hw = Hardware::build(m2);
+    // the (1,1) hole stays a hole
+    assert!(hw.retrieve(&mldse::hwir::mlc(&[&[1, 1]])).is_none());
+    // all-cells group resolves over every populated cell's subtree
+    let all = hw.sync_group("everything").unwrap();
+    assert_eq!(all.points.len(), hw.num_points() - 1); // minus board's bnet
+    // explicit-member group resolved per chip
+    let cores = hw.sync_group("cores").unwrap();
+    assert_eq!(cores.points.len(), 2);
+}
+
+#[test]
+fn fill_only_spec_roundtrips() {
+    let spec = r#"{
+      "matrix": {
+        "name": "chip", "dims": [2, 3],
+        "fill": {"point": {"name": "core", "kind": "compute",
+                 "systolic": [8, 8], "vector_lanes": 16}}
+      }
+    }"#;
+    let m = parse_spec(spec).unwrap();
+    let m2 = parse_spec(&to_spec(&m).to_string()).unwrap();
+    assert_same_hardware(&m, &m2);
+    assert_eq!(Hardware::build(m2).points_of_kind("compute").len(), 6);
+}
+
+// ----------------------------------------------------------------------
+// Malformed input: JSON syntax layer (util::json directly)
+// ----------------------------------------------------------------------
+
+#[test]
+fn json_syntax_errors_carry_offsets() {
+    for bad in [
+        "",
+        "{",
+        r#"{"matrix""#,
+        r#"{"matrix": }"#,
+        r#"{"matrix": {"dims": [2,]}}"#,
+        r#"{"a": "unterminated}"#,
+        r#"{"a": 1} trailing"#,
+        r#"{"a": 01x}"#,
+        "{\"a\": \"bad\\escape\"}",
+    ] {
+        let err = Json::parse(bad).unwrap_err();
+        assert!(
+            err.offset <= bad.len(),
+            "offset {} beyond input len {} for {bad:?}",
+            err.offset,
+            bad.len()
+        );
+        assert!(!err.message.is_empty());
+        // and the spec layer surfaces the same failure as a SpecError
+        assert!(parse_spec(bad).is_err(), "spec accepted bad JSON {bad:?}");
+    }
+}
+
+#[test]
+fn json_unicode_escape_errors() {
+    assert!(Json::parse(r#""\u12""#).is_err()); // truncated escape
+    assert!(Json::parse(r#""\ud800""#).is_err()); // unpaired surrogate
+    assert!(Json::parse(r#""\ud800A""#).is_err()); // bad low surrogate
+    assert_eq!(
+        Json::parse(r#""😀""#).unwrap().as_str(),
+        Some("😀")
+    );
+}
+
+// ----------------------------------------------------------------------
+// Malformed input: spec structure layer
+// ----------------------------------------------------------------------
+
+#[test]
+fn structurally_invalid_specs_are_rejected() {
+    let cases: &[(&str, &str)] = &[
+        ("{}", "missing matrix"),
+        (r#"{"matrix": {"name": "x"}}"#, "missing dims"),
+        (r#"{"matrix": {"dims": []}}"#, "empty dims"),
+        (r#"{"matrix": {"dims": [0]}}"#, "zero dim"),
+        (r#"{"matrix": {"dims": [1.5]}}"#, "fractional dim"),
+        (
+            r#"{"matrix": {"dims": [1], "fill": {"point": {"kind": "warp"}}}}"#,
+            "unknown point kind",
+        ),
+        (
+            r#"{"matrix": {"dims": [1], "fill": {"point": {"name": "m", "kind": "memory"}}}}"#,
+            "memory without capacity",
+        ),
+        (
+            r#"{"matrix": {"dims": [1], "fill": {"wat": 1}}}"#,
+            "element without point/matrix",
+        ),
+        (
+            r#"{"matrix": {"dims": [2], "cells": [{"point": {"kind": "compute"}}]}}"#,
+            "cell without at",
+        ),
+        (
+            r#"{"matrix": {"dims": [2], "cells": [{"at": [9], "point": {"kind": "compute"}}]}}"#,
+            "cell out of shape",
+        ),
+        (
+            r#"{"matrix": {"dims": [1], "comms": [{"link_bandwidth": 8}]}}"#,
+            "comm without topology",
+        ),
+        (
+            r#"{"matrix": {"dims": [1], "comms": [{"topology": "hypercube", "link_bandwidth": 8}]}}"#,
+            "unknown topology",
+        ),
+        (
+            r#"{"matrix": {"dims": [1], "comms": [{"topology": "bus"}]}}"#,
+            "comm without bandwidth",
+        ),
+        (
+            r#"{"matrix": {"dims": [2], "sync_groups": [{"members": [[0]]}]}}"#,
+            "sync group without name",
+        ),
+        (
+            r#"{"matrix": {"dims": [2], "sync_groups": [{"name": "g", "members": [0]}]}}"#,
+            "sync member not a coord",
+        ),
+        (
+            r#"{"matrix": {"dims": [2], "sync_groups": [{"name": "g", "members": "all"}]}}"#,
+            "sync members wrong type",
+        ),
+    ];
+    for (spec, why) in cases {
+        assert!(parse_spec(spec).is_err(), "accepted invalid spec ({why})");
+    }
+}
+
+#[test]
+fn spec_error_messages_name_the_offender() {
+    let err = parse_spec(r#"{"matrix": {"name": "widget"}}"#).unwrap_err();
+    assert!(err.to_string().contains("widget"), "got: {err}");
+    let err = parse_spec(
+        r#"{"matrix": {"dims": [1], "comms": [{"name": "warpnet",
+            "topology": "warp", "link_bandwidth": 1}]}}"#,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("warp"), "got: {err}");
+}
