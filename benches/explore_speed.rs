@@ -1,0 +1,44 @@
+//! Bench: exploration-engine throughput (evals/sec) for the four
+//! explorers on the DMC hardware-parameter preset, demonstrating the
+//! memoized batched evaluation path. Run with
+//! `cargo bench --bench explore_speed` (add MLDSE_BENCH_QUICK=1 for the
+//! smoke-sized configuration).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use mldse::dse::explore::{
+    explore, explorer_by_name, preset, ExploreOpts, Objective,
+};
+use mldse::eval::Registry;
+
+fn main() {
+    let quick = common::quick();
+    let preset_name = if quick { "dmc-quick" } else { "dmc" };
+    let budget = if quick { 24 } else { 200 };
+    let registry = Registry::standard();
+    for name in ["grid", "random", "hill", "anneal"] {
+        let (space, objectives): (_, Vec<Box<dyn Objective>>) =
+            preset(preset_name).expect("preset");
+        let explorer = explorer_by_name(name, 0xD5E).expect("explorer");
+        let opts = ExploreOpts {
+            budget,
+            ..Default::default()
+        };
+        let report = explore(
+            space.as_ref(),
+            &objectives,
+            explorer.as_ref(),
+            &registry,
+            &opts,
+        )
+        .expect("exploration");
+        println!("{}", report.summary_table().render());
+        println!(
+            "[bench] explore {preset_name}/{name}: {} evals, {} sims, {:.2} evals/s",
+            report.evals.len(),
+            report.sim_calls,
+            report.evals_per_sec()
+        );
+    }
+}

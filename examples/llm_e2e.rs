@@ -18,6 +18,10 @@
 //! make artifacts && cargo run --release --example llm_e2e [-- --quick]
 //! ```
 
+// The mapping tier deliberately drives the legacy `anneal_placement` shim
+// to prove it still works; new code should use `dse::explore` directly.
+#![allow(deprecated)]
+
 use mldse::arch::{DmcParams, MpmcParams};
 use mldse::coordinator::Coordinator;
 use mldse::cost::{AreaModel, CostModel, Packaging};

@@ -144,6 +144,33 @@ impl DmcParams {
         Hardware::build(board)
     }
 
+    /// Fixed-area application of new (local-memory bandwidth, NoC
+    /// bandwidth, local latency) choices: the per-core area budget is this
+    /// baseline's, and the systolic array shrinks to whatever still fits
+    /// next to the re-banked local memory (§7.3.2 trade-off).
+    pub fn with_fixed_area(
+        &self,
+        lmem_bw: f64,
+        noc_bw: f64,
+        lmem_lat: u64,
+        area: &AreaModel,
+    ) -> DmcParams {
+        let budget = area.dmc_core(
+            self.lmem_capacity,
+            self.lmem_bandwidth,
+            self.systolic,
+            self.vector_lanes,
+        );
+        let n = area.max_systolic_under(budget, self.lmem_capacity, lmem_bw, self.vector_lanes);
+        DmcParams {
+            lmem_bandwidth: lmem_bw,
+            noc_bandwidth: noc_bw,
+            lmem_latency: lmem_lat,
+            systolic: (n.max(8), n.max(8)),
+            ..self.clone()
+        }
+    }
+
     /// Chip area breakdown: (cores, control, interconnect, total) in mm².
     pub fn area(&self, model: &AreaModel) -> (f64, f64, f64, f64) {
         let cores = self.cores() as f64

@@ -135,6 +135,46 @@ impl GsmParams {
         Hardware::build(board)
     }
 
+    /// Fixed-area application of new (shared-memory bandwidth, L1
+    /// bandwidth, shared-memory latency) choices: keep this baseline's
+    /// per-SM area budget and re-solve the largest systolic array
+    /// affordable at the new L1 spec (§7.3.2 trade-off).
+    pub fn with_fixed_area(
+        &self,
+        l2_bw: f64,
+        l1_bw: f64,
+        l2_lat: u64,
+        area: &AreaModel,
+    ) -> GsmParams {
+        let budget = area.gsm_sm(
+            self.l1_capacity,
+            self.l1_bandwidth,
+            self.regfile_capacity,
+            self.systolic,
+            self.vector_lanes,
+        );
+        let fixed = area.sram(self.l1_capacity, l1_bw)
+            + area.regfile(self.regfile_capacity)
+            + area.vector(self.vector_lanes)
+            + area.core_fixed_mm2;
+        let budget = budget * (1.0 + 1e-9); // float-associativity guard
+        let mut n = 8u32;
+        let mut bestn = 0;
+        while n <= 512 {
+            if fixed + area.systolic(n, n) <= budget {
+                bestn = n;
+            }
+            n *= 2;
+        }
+        GsmParams {
+            l2_bandwidth: l2_bw,
+            l1_bandwidth: l1_bw,
+            l2_latency: l2_lat,
+            systolic: (bestn.max(8), bestn.max(8)),
+            ..self.clone()
+        }
+    }
+
     /// Chip area breakdown: (sms+l2, control, interconnect, total) in mm².
     pub fn area(&self, model: &AreaModel) -> (f64, f64, f64, f64) {
         let sm_area = self.sms as f64

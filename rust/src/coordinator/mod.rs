@@ -109,10 +109,11 @@ impl Coordinator {
             "fig9-dmc" => experiments::fig9_dmc(&ctx),
             "fig9-cross" => experiments::fig9_cross(&ctx),
             "fig10" => experiments::fig10(&ctx),
+            "map-search" => experiments::map_search(&ctx),
             "sim-speed" => vec![experiments::sim_speed(&ctx).0],
             other => crate::bail!(
-                "unknown experiment '{other}' (try table2, fig8-kernel, fig8-llm, \
-                 fig9-gsm, fig9-dmc, fig9-cross, fig10, sim-speed)"
+                "unknown experiment '{other}' (valid: {})",
+                EXPERIMENTS.join(", ")
             ),
         };
         Ok(tables)
@@ -128,6 +129,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "fig9-dmc",
     "fig9-cross",
     "fig10",
+    "map-search",
     "sim-speed",
 ];
 
@@ -163,9 +165,23 @@ mod tests {
     }
 
     #[test]
-    fn unknown_experiment_rejected() {
+    fn unknown_experiment_rejected_with_valid_names() {
         let c = Coordinator::standard();
-        assert!(c.run_experiment("nope", true).is_err());
+        let err = c.run_experiment("nope", true).unwrap_err();
+        let msg = format!("{err:#}");
+        for name in EXPERIMENTS {
+            assert!(msg.contains(name), "'{name}' missing from: {msg}");
+        }
+    }
+
+    #[test]
+    fn every_listed_experiment_dispatches() {
+        // `map-search` is the cheapest end-to-end check; the others are
+        // covered by their own quick tests in `dse::experiments`.
+        let c = Coordinator::standard();
+        let tables = c.run_experiment("map-search", true).unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].rows.len(), 4);
     }
 
     /// Full L3->PJRT round trip (skips when artifacts are absent or the

@@ -4,7 +4,7 @@
 //! experiment index E1–E16).
 
 use crate::arch::{DmcParams, GsmParams, MpmcParams};
-use crate::cost::{AreaModel, CostModel, Packaging};
+use crate::cost::{AreaModel, Packaging};
 use crate::eval::comm::{all_reduce as ar_closed_form, LinkModel};
 use crate::eval::roofline::RooflineEvaluator;
 use crate::eval::{Evaluator, Registry};
@@ -18,6 +18,13 @@ use crate::taskgraph::{ComputeCost, TaskGraph, TaskKind};
 use crate::workloads::transformer::{prefill_layer, total_flops};
 use crate::workloads::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig};
 
+use crate::util::error::Result;
+
+use super::explore::{
+    explore, placement_demo, AnnealExplorer, Axis, AxisKind, Candidate, CostUsd, Design,
+    DesignSpace, Edp, ExploreOpts, Explorer, GridExplorer, HillClimbExplorer, Makespan,
+    Objective, PackagingSpace, RandomExplorer,
+};
 use super::parallel::run_parallel;
 use super::report::{fmt, Table};
 
@@ -159,33 +166,7 @@ pub fn table2(ctx: &Ctx) -> Vec<Table> {
 /// Apply the fixed-area trade-off: given a baseline config's chip area,
 /// re-solve the largest systolic array affordable at the new L1 spec.
 fn gsm_with(base: &GsmParams, l2_bw: f64, l1_bw: f64, l2_lat: u64, area: &AreaModel) -> GsmParams {
-    let budget = area.gsm_sm(
-        base.l1_capacity,
-        base.l1_bandwidth,
-        base.regfile_capacity,
-        base.systolic,
-        base.vector_lanes,
-    );
-    let fixed = area.sram(base.l1_capacity, l1_bw)
-        + area.regfile(base.regfile_capacity)
-        + area.vector(base.vector_lanes)
-        + area.core_fixed_mm2;
-    let budget = budget * (1.0 + 1e-9); // float-associativity guard
-    let mut n = 8u32;
-    let mut bestn = 0;
-    while n <= 512 {
-        if fixed + area.systolic(n, n) <= budget {
-            bestn = n;
-        }
-        n *= 2;
-    }
-    GsmParams {
-        l2_bandwidth: l2_bw,
-        l1_bandwidth: l1_bw,
-        l2_latency: l2_lat,
-        systolic: (bestn.max(8), bestn.max(8)),
-        ..base.clone()
-    }
+    base.with_fixed_area(l2_bw, l1_bw, l2_lat, area)
 }
 
 /// Fig. 9(c): shared-memory bandwidth sweep across the four GSM configs,
@@ -205,18 +186,18 @@ pub fn fig9_gsm(ctx: &Ctx) -> Vec<Table> {
         "Fig 9(c): GSM throughput vs shared-memory bandwidth (4 configs)",
         &["l2_bw(B/cyc)", "cfg1", "cfg2", "cfg3", "cfg4"],
     );
-    type Point = (usize, f64);
-    let points: Vec<Point> = l2_bws
-        .iter()
-        .flat_map(|bw| (1..=4).map(move |c| (c, *bw)))
-        .collect();
-    let results = run_parallel(&points, ctx.workers, |(c, bw)| {
-        let mut base = GsmParams::table2(*c);
-        base.sms = ctx.sms();
-        let p = gsm_with(&base, *bw, base.l1_bandwidth, base.l2_latency, &area);
-        let w = gsm_prefill(&cfg, seq, &p);
-        sim_prefill(ctx, &w, flops).1
-    });
+    // Rewired through the exploration API: the (bandwidth, config) grid is
+    // a DesignSpace enumerated by the grid explorer in row order.
+    let space = GsmBwSpace::new(ctx, l2_bws);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: space.size() as usize,
+        workers: ctx.workers,
+        ..Default::default()
+    };
+    let report =
+        explore(&space, &objectives, &GridExplorer, &ctx.evals, &opts).expect("fig9-gsm explore");
+    let results: Vec<f64> = report.evals.iter().map(|e| flops / e.objectives[0]).collect();
     for (i, bw) in l2_bws.iter().enumerate() {
         let row: Vec<String> = std::iter::once(fmt(*bw))
             .chain((0..4).map(|c| fmt(results[i * 4 + c])))
@@ -257,76 +238,182 @@ pub fn fig9_gsm(ctx: &Ctx) -> Vec<Table> {
 // E6/E7 — Fig. 9(f–k): DMC sweeps
 // ======================================================================
 
-/// Fixed-area application of a (lmem capacity, lmem bandwidth) choice:
-/// the systolic array shrinks to fit the baseline per-core budget.
+/// Fixed-area application of a (lmem bandwidth, NoC bandwidth, latency)
+/// choice: the systolic array shrinks to fit the baseline per-core budget.
 pub fn dmc_with(base: &DmcParams, lmem_bw: f64, noc_bw: f64, lmem_lat: u64, area: &AreaModel) -> DmcParams {
-    let budget = area.dmc_core(
-        base.lmem_capacity,
-        base.lmem_bandwidth,
-        base.systolic,
-        base.vector_lanes,
-    );
-    let n = area.max_systolic_under(budget, base.lmem_capacity, lmem_bw, base.vector_lanes);
-    DmcParams {
-        lmem_bandwidth: lmem_bw,
-        noc_bandwidth: noc_bw,
-        lmem_latency: lmem_lat,
-        systolic: (n.max(8), n.max(8)),
-        ..base.clone()
+    base.with_fixed_area(lmem_bw, noc_bw, lmem_lat, area)
+}
+
+/// The Fig 9(f–k) union-of-sweeps as a design space: (Table-2 config,
+/// swept parameter, value index). The three per-parameter value lists
+/// share one length, so the union of 1-D sweeps is a clean grid whose
+/// lexicographic enumeration reproduces the paper's row order.
+struct DmcSweepSpace {
+    llm: LlmConfig,
+    seq: u32,
+    grid: (usize, usize),
+    area: AreaModel,
+    lmem_bws: Vec<f64>,
+    noc_bws: Vec<f64>,
+    lmem_lats: Vec<u64>,
+    axes: Vec<Axis>,
+}
+
+impl DmcSweepSpace {
+    fn new(ctx: &Ctx) -> DmcSweepSpace {
+        let lmem_bws: Vec<f64> = if ctx.quick {
+            vec![64.0, 304.0]
+        } else {
+            vec![38.0, 76.0, 152.0, 304.0, 608.0]
+        };
+        let noc_bws: Vec<f64> = if ctx.quick {
+            vec![16.0, 64.0]
+        } else {
+            vec![8.0, 16.0, 32.0, 64.0, 128.0]
+        };
+        let lmem_lats: Vec<u64> = if ctx.quick { vec![2, 8] } else { vec![1, 2, 4, 8, 16] };
+        // the shared `value` axis indexes all three lists, so they must
+        // stay the same length
+        assert_eq!(lmem_bws.len(), noc_bws.len());
+        assert_eq!(lmem_bws.len(), lmem_lats.len());
+        let value_idx: Vec<u64> = (0..lmem_bws.len() as u64).collect();
+        let axes = vec![
+            Axis::u64s("cfg", AxisKind::Arch, &[1, 2, 3, 4]),
+            Axis::tags(
+                "param",
+                AxisKind::HwParam,
+                vec!["lmem_bw".into(), "noc_bw".into(), "lmem_lat".into()],
+            ),
+            Axis::u64s("value", AxisKind::HwParam, &value_idx),
+        ];
+        DmcSweepSpace {
+            llm: ctx.cfg(),
+            seq: ctx.seq(),
+            grid: ctx.dmc_grid(),
+            area: AreaModel::default(),
+            lmem_bws,
+            noc_bws,
+            lmem_lats,
+            axes,
+        }
+    }
+
+    /// (config, parameter name, swept value, resolved params).
+    fn describe(&self, c: &Candidate) -> (usize, &'static str, f64, DmcParams) {
+        let cfg = self.axes[0].values.num(c.0[0] as usize) as usize;
+        let mut base = DmcParams::table2(cfg);
+        base.grid = self.grid;
+        let vi = c.0[2] as usize;
+        let (name, val, params) = match c.0[1] {
+            0 => {
+                let v = self.lmem_bws[vi];
+                let p = base.with_fixed_area(v, base.noc_bandwidth, base.lmem_latency, &self.area);
+                ("lmem_bw", v, p)
+            }
+            1 => {
+                let v = self.noc_bws[vi];
+                let p = base.with_fixed_area(base.lmem_bandwidth, v, base.lmem_latency, &self.area);
+                ("noc_bw", v, p)
+            }
+            _ => {
+                let v = self.lmem_lats[vi];
+                let p = base.with_fixed_area(base.lmem_bandwidth, base.noc_bandwidth, v, &self.area);
+                ("lmem_lat", v as f64, p)
+            }
+        };
+        (cfg, name, val, params)
+    }
+}
+
+impl DesignSpace for DmcSweepSpace {
+    fn name(&self) -> &str {
+        "fig9-dmc"
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for fig9-dmc");
+        let (_, _, _, params) = self.describe(c);
+        Ok(Design::new(dmc_prefill(&self.llm, self.seq, &params)))
+    }
+}
+
+/// The Fig 9(c) sweep as a design space: shared-memory bandwidth × config.
+struct GsmBwSpace {
+    llm: LlmConfig,
+    seq: u32,
+    sms: usize,
+    area: AreaModel,
+    axes: Vec<Axis>,
+}
+
+impl GsmBwSpace {
+    fn new(ctx: &Ctx, l2_bws: &[f64]) -> GsmBwSpace {
+        let axes = vec![
+            Axis::f64s("l2_bw", AxisKind::HwParam, l2_bws),
+            Axis::u64s("cfg", AxisKind::Arch, &[1, 2, 3, 4]),
+        ];
+        GsmBwSpace {
+            llm: ctx.cfg(),
+            seq: ctx.seq(),
+            sms: ctx.sms(),
+            area: AreaModel::default(),
+            axes,
+        }
+    }
+}
+
+impl DesignSpace for GsmBwSpace {
+    fn name(&self) -> &str {
+        "fig9-gsm-l2bw"
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for fig9-gsm");
+        let bw = self.axes[0].values.num(c.0[0] as usize);
+        let cfg = self.axes[1].values.num(c.0[1] as usize) as usize;
+        let mut base = GsmParams::table2(cfg);
+        base.sms = self.sms;
+        let p = base.with_fixed_area(bw, base.l1_bandwidth, base.l2_latency, &self.area);
+        Ok(Design::new(gsm_prefill(&self.llm, self.seq, &p)))
     }
 }
 
 /// Fig. 9(f–h): local-memory bw / NoC bw / local latency on configs 2–4;
-/// Fig. 9(i–k): the same three sweeps across all four configs.
+/// Fig. 9(i–k): the same three sweeps across all four configs. Runs through
+/// the exploration API (grid explorer over [`DmcSweepSpace`]).
 pub fn fig9_dmc(ctx: &Ctx) -> Vec<Table> {
-    let area = AreaModel::default();
-    let cfg = ctx.cfg();
-    let seq = ctx.seq();
-    let flops = total_flops(&prefill_layer(&cfg, seq));
-    let lmem_bws: &[f64] = if ctx.quick { &[64.0, 304.0] } else { &[38.0, 76.0, 152.0, 304.0, 608.0] };
-    let noc_bws: &[f64] = if ctx.quick { &[16.0, 64.0] } else { &[8.0, 16.0, 32.0, 64.0, 128.0] };
-    let lmem_lats: &[u64] = if ctx.quick { &[2, 8] } else { &[1, 2, 4, 8, 16] };
+    let space = DmcSweepSpace::new(ctx);
+    let flops = total_flops(&prefill_layer(&space.llm, space.seq));
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: space.size() as usize,
+        workers: ctx.workers,
+        ..Default::default()
+    };
+    let report =
+        explore(&space, &objectives, &GridExplorer, &ctx.evals, &opts).expect("fig9-dmc explore");
 
     let mut t = Table::new(
         "Fig 9(f-k): DMC parameter impact (throughput flops/cycle)",
         &["cfg", "param", "value", "systolic", "flops/cyc"],
     );
-    struct P {
-        c: usize,
-        name: &'static str,
-        lmem_bw: f64,
-        noc_bw: f64,
-        lat: u64,
-        val: f64,
-    }
-    let mut points = Vec::new();
-    for c in 1..=4usize {
-        let base = DmcParams::table2(c);
-        for bw in lmem_bws {
-            points.push(P { c, name: "lmem_bw", lmem_bw: *bw, noc_bw: base.noc_bandwidth, lat: base.lmem_latency, val: *bw });
-        }
-        for bw in noc_bws {
-            points.push(P { c, name: "noc_bw", lmem_bw: base.lmem_bandwidth, noc_bw: *bw, lat: base.lmem_latency, val: *bw });
-        }
-        for lat in lmem_lats {
-            points.push(P { c, name: "lmem_lat", lmem_bw: base.lmem_bandwidth, noc_bw: base.noc_bandwidth, lat: *lat, val: *lat as f64 });
-        }
-    }
-    let results = run_parallel(&points, ctx.workers, |p| {
-        let mut base = DmcParams::table2(p.c);
-        base.grid = ctx.dmc_grid();
-        let params = dmc_with(&base, p.lmem_bw, p.noc_bw, p.lat, &area);
+    for ev in &report.evals {
+        let (cfg, name, val, params) = space.describe(&ev.candidate);
         let sys = params.systolic.0;
-        let w = dmc_prefill(&cfg, seq, &params);
-        (sys, sim_prefill(ctx, &w, flops).1)
-    });
-    for (p, (sys, thpt)) in points.iter().zip(results) {
         t.row(vec![
-            p.c.to_string(),
-            p.name.into(),
-            fmt(p.val),
+            cfg.to_string(),
+            name.into(),
+            fmt(val),
             format!("{sys}x{sys}"),
-            fmt(thpt),
+            fmt(flops / ev.objectives[0]),
         ]);
     }
     vec![t]
@@ -384,8 +471,6 @@ pub fn fig9_cross(ctx: &Ctx) -> Vec<Table> {
 // ======================================================================
 
 pub fn fig10(ctx: &Ctx) -> Vec<Table> {
-    let area = AreaModel::default();
-    let cost = CostModel::default();
     let cfg = ctx.cfg();
     let pos = ctx.seq(); // decode the (seq)-th token
     let layers = if ctx.quick { 2 } else { 8 };
@@ -422,30 +507,37 @@ pub fn fig10(ctx: &Ctx) -> Vec<Table> {
         ]);
     }
 
-    // E11: chiplets/package sweep with cost, MCM and 2.5D
+    // E11: chiplets/package sweep with cost, MCM and 2.5D — rewired
+    // through the exploration API: packaging × chiplets/package is a
+    // two-axis PackagingSpace graded by (makespan, manufacturing cost).
     let cpps: &[usize] = if ctx.quick { &[1, 2] } else { &[1, 2, 3, 4, 6] };
     let mut perf_cost = Table::new(
         "Fig 10(c,d): MPMC-DMC performance & cost vs chiplets/package",
         &["packaging", "chiplets/pkg", "cycles", "cost $", "perf/cost (1e6/cyc/$)"],
     );
-    for pkg in [Packaging::Mcm, Packaging::Interposer2_5D] {
-        for &cpp in cpps {
-            let mut p = MpmcParams::paper(cpp, pkg);
-            if ctx.quick {
-                p.total_chiplets = 3 * layers as usize;
-                p.chiplet.grid = ctx.dmc_grid();
-            }
-            let w = mpmc_decode_spatial(&cfg, pos, layers, &p);
-            let r = simulate(&w.hw, &w.graph, &w.mapping, &ctx.evals, &SimConfig::default()).unwrap();
-            let c = p.system_cost(&area, &cost);
-            perf_cost.row(vec![
-                pkg.name().into(),
-                cpp.to_string(),
-                fmt(r.makespan),
-                fmt(c),
-                fmt(1e6 / r.makespan / c),
-            ]);
-        }
+    let shrink = if ctx.quick {
+        Some((ctx.dmc_grid(), 3 * layers as usize))
+    } else {
+        None
+    };
+    let space = PackagingSpace::new("fig10-packaging", cfg, pos, layers, cpps, shrink);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
+    let opts = ExploreOpts {
+        budget: space.size() as usize,
+        workers: ctx.workers,
+        ..Default::default()
+    };
+    let report = explore(&space, &objectives, &GridExplorer, &ctx.evals, &opts)
+        .expect("fig10 packaging explore");
+    for ev in &report.evals {
+        let (pkg, cpp) = space.describe(&ev.candidate);
+        perf_cost.row(vec![
+            pkg.name().into(),
+            cpp.to_string(),
+            fmt(ev.objectives[0]),
+            fmt(ev.objectives[1]),
+            fmt(1e6 / ev.objectives[0] / ev.objectives[1]),
+        ]);
     }
 
     // E10/E12: hardware-parameter sweeps under spatial computing
@@ -822,6 +914,63 @@ pub fn sim_speed(ctx: &Ctx) -> (Table, f64) {
     (t, secs)
 }
 
+// ======================================================================
+// E14 — mapping-tier search: explorer comparison
+// ======================================================================
+
+/// E14: mapping-tier DSE — the four explorers race on one placement
+/// problem (skewed independent tasks, all starting on a single core of a
+/// DMC chip), with makespan and EDP as objectives. Demonstrates the
+/// `DesignSpace`/`Explorer` substrate on the third DSE tier.
+pub fn map_search(ctx: &Ctx) -> Vec<Table> {
+    let (n_tasks, grid, budget) = if ctx.quick {
+        (8usize, (2usize, 2usize), 40usize)
+    } else {
+        (12, (4, 2), 150)
+    };
+    let space = placement_demo("map-search", grid, n_tasks);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(Edp)];
+    let mut t = Table::new(
+        "E14: mapping search — explorer comparison on a placement space",
+        &["explorer", "evals", "sims", "cache hits", "accepted", "best cycles"],
+    );
+    let explorers: Vec<Box<dyn Explorer>> = vec![
+        Box::new(GridExplorer),
+        Box::new(RandomExplorer { seed: 0xD5E }),
+        Box::new(HillClimbExplorer {
+            seed: 0xD5E,
+            from_initial: true,
+            restarts: true,
+        }),
+        Box::new(AnnealExplorer {
+            seed: 0xD5E,
+            init_temp: 0.1,
+        }),
+    ];
+    for explorer in &explorers {
+        let opts = ExploreOpts {
+            budget,
+            workers: ctx.workers,
+            ..Default::default()
+        };
+        let report = explore(&space, &objectives, explorer.as_ref(), &ctx.evals, &opts)
+            .expect("map-search explore");
+        let best = report
+            .best()
+            .map(|e| e.objectives[0])
+            .unwrap_or(f64::INFINITY);
+        t.row(vec![
+            report.explorer.clone(),
+            report.evals.len().to_string(),
+            report.sim_calls.to_string(),
+            report.cache_hits.to_string(),
+            report.moves_accepted.to_string(),
+            fmt(best),
+        ]);
+    }
+    vec![t]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -890,6 +1039,25 @@ mod tests {
         for row in &tables[0].rows {
             let err: f64 = row[5].parse().unwrap();
             assert!(err < 1.5, "kernel rel err too large: {row:?}");
+        }
+    }
+
+    #[test]
+    fn map_search_quick_compares_explorers() {
+        let ctx = Ctx::quick();
+        let tables = map_search(&ctx);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 4);
+        let names: Vec<&str> = rows.iter().map(|r| r[0].as_str()).collect();
+        assert_eq!(names, ["grid", "random", "hill", "anneal"]);
+        for row in rows {
+            let best: f64 = row[5].parse().unwrap();
+            assert!(best > 0.0 && best.is_finite(), "{row:?}");
+        }
+        // hill and anneal actually move off the degenerate placement
+        for row in rows.iter().skip(2) {
+            let accepted: usize = row[4].parse().unwrap();
+            assert!(accepted > 0, "{row:?}");
         }
     }
 

@@ -1,0 +1,247 @@
+//! Search strategies over a [`DesignSpace`](super::space::DesignSpace):
+//! exhaustive grid, seeded random sampling, restarting hill-climbing and
+//! simulated annealing. All are deterministic for a fixed seed and
+//! independent of the worker count — candidate batches are evaluated in
+//! input order and every decision depends only on returned scores.
+
+use crate::util::error::Result;
+use crate::util::rng::Pcg;
+
+use super::Engine;
+
+/// A search strategy: propose candidates through the engine until the
+/// evaluation budget is exhausted.
+pub trait Explorer {
+    fn name(&self) -> &str;
+
+    fn run(&self, engine: &mut Engine) -> Result<()>;
+}
+
+/// Exhaustive enumeration in lexicographic candidate order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GridExplorer;
+
+impl Explorer for GridExplorer {
+    fn name(&self) -> &str {
+        "grid"
+    }
+
+    fn run(&self, engine: &mut Engine) -> Result<()> {
+        let space = engine.space();
+        let size = space.size();
+        let chunk = engine.opts().batch.max(1);
+        let mut i = 0u64;
+        while i < size && engine.remaining() > 0 {
+            let mut batch = Vec::with_capacity(chunk);
+            while i < size && batch.len() < chunk {
+                batch.push(space.nth(i));
+                i += 1;
+            }
+            engine.eval_batch(&batch);
+        }
+        Ok(())
+    }
+}
+
+/// Uniform random sampling (with replacement) from a fixed seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomExplorer {
+    pub seed: u64,
+}
+
+impl Explorer for RandomExplorer {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn run(&self, engine: &mut Engine) -> Result<()> {
+        let space = engine.space();
+        let size = space.size();
+        if size == 0 {
+            return Ok(());
+        }
+        let chunk = engine.opts().batch.max(1);
+        let mut rng = Pcg::new(self.seed);
+        while engine.remaining() > 0 {
+            let k = engine.remaining().min(chunk);
+            let batch: Vec<_> = (0..k).map(|_| space.nth(rng.below(size))).collect();
+            engine.eval_batch(&batch);
+        }
+        Ok(())
+    }
+}
+
+/// Steepest-descent hill climbing with random restarts: from a start
+/// point, evaluate all ±1-digit neighbors as one batch and move to the
+/// best strictly-improving one; restart at a random candidate on local
+/// optima until the budget runs out.
+#[derive(Debug, Clone, Copy)]
+pub struct HillClimbExplorer {
+    pub seed: u64,
+    /// Start the first climb from the space's distinguished initial
+    /// candidate instead of a random one.
+    pub from_initial: bool,
+    /// Restart on local optima (disable for a single greedy pass).
+    pub restarts: bool,
+}
+
+impl Default for HillClimbExplorer {
+    fn default() -> Self {
+        HillClimbExplorer {
+            seed: 0xD5E,
+            from_initial: false,
+            restarts: true,
+        }
+    }
+}
+
+impl Explorer for HillClimbExplorer {
+    fn name(&self) -> &str {
+        "hill"
+    }
+
+    fn run(&self, engine: &mut Engine) -> Result<()> {
+        let space = engine.space();
+        let size = space.size();
+        if size == 0 {
+            return Ok(());
+        }
+        let mut rng = Pcg::new(self.seed);
+        let mut first = true;
+        while engine.remaining() > 0 {
+            let start = if first && self.from_initial {
+                space.initial()
+            } else {
+                space.nth(rng.below(size))
+            };
+            first = false;
+            let Some(scores) = engine.eval_one(&start) else {
+                break;
+            };
+            let mut current = start;
+            let mut current_score = scores[0];
+            loop {
+                if engine.remaining() == 0 {
+                    break;
+                }
+                let neighbors = space.neighbors(&current);
+                if neighbors.is_empty() {
+                    break;
+                }
+                let scores = engine.eval_batch(&neighbors);
+                let mut best: Option<usize> = None;
+                let mut best_score = current_score;
+                for (i, s) in scores.iter().enumerate() {
+                    if s[0] < best_score {
+                        best_score = s[0];
+                        best = Some(i);
+                    }
+                }
+                match best {
+                    Some(i) => {
+                        current = neighbors[i].clone();
+                        current_score = best_score;
+                        engine.moves_accepted += 1;
+                    }
+                    None => break,
+                }
+            }
+            if !self.restarts {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Simulated annealing over single-digit moves with a linear temperature
+/// decay proportional to the current score (the `anneal_placement`
+/// schedule, generalized to any design space).
+#[derive(Debug, Clone, Copy)]
+pub struct AnnealExplorer {
+    pub seed: u64,
+    /// Initial temperature as a fraction of the current score.
+    pub init_temp: f64,
+}
+
+impl Default for AnnealExplorer {
+    fn default() -> Self {
+        AnnealExplorer {
+            seed: 0xD5E,
+            init_temp: 0.1,
+        }
+    }
+}
+
+impl Explorer for AnnealExplorer {
+    fn name(&self) -> &str {
+        "anneal"
+    }
+
+    fn run(&self, engine: &mut Engine) -> Result<()> {
+        let space = engine.space();
+        if space.size() == 0 {
+            return Ok(());
+        }
+        let mut rng = Pcg::new(self.seed);
+        // Always score the starting point, even in degenerate spaces with
+        // no axes — callers (e.g. the `anneal_placement` shim) rely on the
+        // baseline appearing in the log.
+        let Some(scores) = engine.eval_one(&space.initial()) else {
+            return Ok(());
+        };
+        let cards: Vec<usize> = space.axes().iter().map(|a| a.len()).collect();
+        if cards.is_empty() {
+            return Ok(());
+        }
+        let mut current = space.initial();
+        let mut current_score = scores[0];
+        let moves = engine.remaining();
+        if moves == 0 {
+            return Ok(());
+        }
+        for i in 0..moves {
+            if engine.remaining() == 0 {
+                break;
+            }
+            let temp = self.init_temp * current_score * (1.0 - i as f64 / moves as f64) + 1e-9;
+            let axis = rng.index(cards.len());
+            if cards[axis] <= 1 {
+                continue;
+            }
+            let v = rng.index(cards[axis]) as u32;
+            if v == current.0[axis] {
+                continue;
+            }
+            let mut cand = current.clone();
+            cand.0[axis] = v;
+            let Some(scores) = engine.eval_one(&cand) else {
+                break;
+            };
+            let m = scores[0];
+            if m <= current_score || rng.chance(((current_score - m) / temp).exp()) {
+                current = cand;
+                current_score = m;
+                engine.moves_accepted += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Resolve an explorer by CLI name.
+pub fn explorer_by_name(name: &str, seed: u64) -> Result<Box<dyn Explorer>> {
+    match name {
+        "grid" => Ok(Box::new(GridExplorer)),
+        "random" => Ok(Box::new(RandomExplorer { seed })),
+        "hill" => Ok(Box::new(HillClimbExplorer {
+            seed,
+            ..Default::default()
+        })),
+        "anneal" => Ok(Box::new(AnnealExplorer {
+            seed,
+            ..Default::default()
+        })),
+        other => crate::bail!("unknown explorer '{other}' (valid: grid, random, hill, anneal)"),
+    }
+}

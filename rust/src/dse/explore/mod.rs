@@ -1,0 +1,479 @@
+//! First-class exploration API (the paper's three-tier DSE, §7, as a
+//! composable substrate).
+//!
+//! * [`space`] — [`DesignSpace`]: typed [`Axis`] descriptors over
+//!   architecture templates, hardware parameters and mapping knobs, with a
+//!   uniform digit-vector [`Candidate`] encoding.
+//! * [`objective`] — [`Objective`]: minimized figures of merit (makespan,
+//!   EDP, area-constrained makespan, manufacturing cost) evaluated from
+//!   one simulation per candidate.
+//! * [`explorers`] — [`Explorer`]: exhaustive grid, seeded random,
+//!   hill-climbing and simulated annealing.
+//! * [`report`] — [`ExplorationReport`]: best candidate, Pareto front,
+//!   full evaluation log and throughput counters, as tables or JSON.
+//!
+//! The [`Engine`] evaluates candidate batches through
+//! [`run_parallel`](super::parallel::run_parallel) in deterministic input
+//! order with a candidate-fingerprint memo cache, so results are
+//! bit-identical across worker counts and repeated seeds, and repeated
+//! candidates cost nothing.
+
+pub mod explorers;
+pub mod objective;
+pub mod report;
+pub mod space;
+
+pub use explorers::{
+    explorer_by_name, AnnealExplorer, Explorer, GridExplorer, HillClimbExplorer, RandomExplorer,
+};
+pub use objective::{AreaConstrainedMakespan, CostUsd, Edp, Makespan, Objective};
+pub use report::{Evaluation, ExplorationReport};
+pub use space::{
+    placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Candidate, Design,
+    DesignSpace, PackagingSpace, ParamSpace, PlacementSpace,
+};
+
+use std::collections::{HashMap, HashSet};
+
+use crate::eval::Registry;
+use crate::sim::{simulate, SimConfig};
+use crate::util::error::Result;
+
+use super::parallel::run_parallel;
+
+/// Exploration options.
+#[derive(Debug, Clone)]
+pub struct ExploreOpts {
+    /// Maximum logged evaluations (cache hits included).
+    pub budget: usize,
+    /// Worker threads for batch evaluation.
+    pub workers: usize,
+    /// Memoize objective vectors by candidate fingerprint.
+    pub cache: bool,
+    /// Maximum candidates per parallel batch.
+    pub batch: usize,
+    pub sim: SimConfig,
+}
+
+impl Default for ExploreOpts {
+    fn default() -> Self {
+        ExploreOpts {
+            budget: 64,
+            workers: super::parallel::default_workers(),
+            cache: true,
+            batch: 64,
+            sim: SimConfig::default(),
+        }
+    }
+}
+
+fn evaluate_candidate(
+    space: &dyn DesignSpace,
+    objectives: &[Box<dyn Objective>],
+    evals: &Registry,
+    sim: &SimConfig,
+    c: &Candidate,
+) -> Option<Vec<f64>> {
+    if !space.in_bounds(c) {
+        return None;
+    }
+    let design = space.materialize(c).ok()?;
+    let w = &design.workload;
+    let r = simulate(&w.hw, &w.graph, &w.mapping, evals, sim).ok()?;
+    Some(objectives.iter().map(|o| o.score(&design, &r)).collect())
+}
+
+/// Batched, memoized candidate evaluation: explorers propose candidates,
+/// the engine simulates the cache misses through the worker pool and logs
+/// every evaluation in proposal order.
+pub struct Engine<'a> {
+    space: &'a dyn DesignSpace,
+    objectives: &'a [Box<dyn Objective>],
+    evals: &'a Registry,
+    opts: &'a ExploreOpts,
+    cache: HashMap<Vec<u32>, Vec<f64>>,
+    log: Vec<Evaluation>,
+    sim_calls: usize,
+    cache_hits: usize,
+    failures: usize,
+    /// Incremented by the local searchers on accepted moves.
+    pub moves_accepted: usize,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        evals: &'a Registry,
+        opts: &'a ExploreOpts,
+    ) -> Engine<'a> {
+        Engine {
+            space,
+            objectives,
+            evals,
+            opts,
+            cache: HashMap::new(),
+            log: Vec::new(),
+            sim_calls: 0,
+            cache_hits: 0,
+            failures: 0,
+            moves_accepted: 0,
+        }
+    }
+
+    pub fn space(&self) -> &'a dyn DesignSpace {
+        self.space
+    }
+
+    pub fn opts(&self) -> &'a ExploreOpts {
+        self.opts
+    }
+
+    /// Evaluations still allowed by the budget.
+    pub fn remaining(&self) -> usize {
+        self.opts.budget.saturating_sub(self.log.len())
+    }
+
+    /// The evaluation log so far.
+    pub fn log(&self) -> &[Evaluation] {
+        &self.log
+    }
+
+    /// Unique candidate simulations launched so far.
+    pub fn sim_calls(&self) -> usize {
+        self.sim_calls
+    }
+
+    /// Evaluate one candidate; `None` when the budget is exhausted.
+    pub fn eval_one(&mut self, c: &Candidate) -> Option<Vec<f64>> {
+        self.eval_batch(std::slice::from_ref(c)).into_iter().next()
+    }
+
+    /// Evaluate a batch of candidates (truncated to the remaining budget),
+    /// returning their objective vectors in input order. Cache misses are
+    /// deduplicated and simulated through the worker pool; every requested
+    /// candidate is logged.
+    pub fn eval_batch(&mut self, candidates: &[Candidate]) -> Vec<Vec<f64>> {
+        let take = candidates.len().min(self.remaining());
+        let batch = &candidates[..take];
+        if batch.is_empty() {
+            return Vec::new();
+        }
+
+        // Cache hits (previous batches AND duplicates within this batch),
+        // and the unique misses in first-seen order.
+        let mut precached: Vec<bool> = Vec::with_capacity(batch.len());
+        let mut to_run: Vec<Candidate> = Vec::new();
+        let mut queued: HashSet<Vec<u32>> = HashSet::new();
+        for c in batch {
+            if self.opts.cache {
+                if self.cache.contains_key(&c.0) || queued.contains(&c.0) {
+                    precached.push(true);
+                } else {
+                    precached.push(false);
+                    queued.insert(c.0.clone());
+                    to_run.push(c.clone());
+                }
+            } else {
+                // caching disabled: every proposal simulates
+                precached.push(false);
+                to_run.push(c.clone());
+            }
+        }
+
+        let space = self.space;
+        let objectives = self.objectives;
+        let evals = self.evals;
+        let sim = &self.opts.sim;
+        let results: Vec<Option<Vec<f64>>> = run_parallel(&to_run, self.opts.workers, |c| {
+            evaluate_candidate(space, objectives, evals, sim, c)
+        });
+        self.sim_calls += to_run.len();
+
+        let n_obj = self.objectives.len();
+        let mut fresh: HashMap<Vec<u32>, Vec<f64>> = HashMap::new();
+        for (c, r) in to_run.iter().zip(results) {
+            let values = match r {
+                Some(v) => v,
+                None => {
+                    self.failures += 1;
+                    vec![f64::INFINITY; n_obj]
+                }
+            };
+            if self.opts.cache {
+                self.cache.insert(c.0.clone(), values);
+            } else {
+                fresh.insert(c.0.clone(), values);
+            }
+        }
+
+        let mut out = Vec::with_capacity(take);
+        for (c, hit) in batch.iter().zip(&precached) {
+            let store = if self.opts.cache { &self.cache } else { &fresh };
+            let values = store.get(&c.0).expect("candidate evaluated").clone();
+            if *hit {
+                self.cache_hits += 1;
+            }
+            let label = self.space.label(c);
+            self.log.push(Evaluation {
+                candidate: c.clone(),
+                label,
+                objectives: values.clone(),
+                cached: *hit,
+            });
+            out.push(values);
+        }
+        out
+    }
+
+    fn into_report(self, explorer: &str, elapsed_secs: f64) -> ExplorationReport {
+        ExplorationReport {
+            space: self.space.name().to_string(),
+            explorer: explorer.to_string(),
+            objective_names: self.objectives.iter().map(|o| o.name().to_string()).collect(),
+            evals: self.log,
+            sim_calls: self.sim_calls,
+            cache_hits: self.cache_hits,
+            failures: self.failures,
+            moves_accepted: self.moves_accepted,
+            elapsed_secs,
+            space_size: self.space.size(),
+        }
+    }
+}
+
+/// Run one exploration: drive `explorer` over `space`, scoring candidates
+/// with `objectives`, and return the structured report.
+pub fn explore(
+    space: &dyn DesignSpace,
+    objectives: &[Box<dyn Objective>],
+    explorer: &dyn Explorer,
+    evals: &Registry,
+    opts: &ExploreOpts,
+) -> Result<ExplorationReport> {
+    crate::ensure!(
+        !objectives.is_empty(),
+        "explore: at least one objective required"
+    );
+    let start = std::time::Instant::now();
+    let mut engine = Engine::new(space, objectives, evals, opts);
+    explorer.run(&mut engine)?;
+    let elapsed = start.elapsed().as_secs_f64();
+    Ok(engine.into_report(explorer.name(), elapsed))
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! A cheap synthetic space for engine/explorer tests: one compute task
+    //! on one core, whose work grows quadratically with the distance from
+    //! a target digit pair — the makespan surface is a paraboloid with a
+    //! unique minimum.
+
+    use crate::hwir::{
+        ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    };
+    use crate::mapping::Mapping;
+    use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+    use crate::workloads::Workload;
+
+    use super::space::{Axis, AxisKind, Candidate, Design, DesignSpace};
+    use super::*;
+
+    pub struct ParaboloidSpace {
+        axes: Vec<Axis>,
+        pub target: (u32, u32),
+    }
+
+    impl ParaboloidSpace {
+        pub fn new(w: u64, h: u64, target: (u32, u32)) -> ParaboloidSpace {
+            let xs: Vec<u64> = (0..w).collect();
+            let ys: Vec<u64> = (0..h).collect();
+            ParaboloidSpace {
+                axes: vec![
+                    Axis::u64s("x", AxisKind::HwParam, &xs),
+                    Axis::u64s("y", AxisKind::HwParam, &ys),
+                ],
+                target,
+            }
+        }
+    }
+
+    impl DesignSpace for ParaboloidSpace {
+        fn name(&self) -> &str {
+            "paraboloid"
+        }
+
+        fn axes(&self) -> &[Axis] {
+            &self.axes
+        }
+
+        fn materialize(&self, c: &Candidate) -> crate::util::error::Result<Design> {
+            crate::ensure!(self.in_bounds(c), "out of bounds");
+            let dx = c.0[0] as f64 - self.target.0 as f64;
+            let dy = c.0[1] as f64 - self.target.1 as f64;
+            let mut m = SpaceMatrix::new("chip", vec![1]);
+            m.set(
+                Coord::new(vec![0]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((8, 8), 32)
+                        .with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+                )),
+            );
+            let hw = Hardware::build(m);
+            let core = hw.points_of_kind("compute")[0];
+            let mut graph = TaskGraph::new();
+            let mut cost = ComputeCost::zero(OpClass::Elementwise);
+            cost.vec_flops = 10_000.0 * (1.0 + dx * dx + dy * dy);
+            let t = graph.add("work", TaskKind::Compute(cost));
+            let mut mapping = Mapping::new();
+            mapping.map(t, core);
+            Ok(Design::new(Workload {
+                hw,
+                graph,
+                mapping,
+                name: "paraboloid".into(),
+                notes: Vec::new(),
+            }))
+        }
+    }
+
+    pub fn makespan_objectives() -> Vec<Box<dyn Objective>> {
+        vec![Box::new(Makespan)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{makespan_objectives, ParaboloidSpace};
+    use super::*;
+
+    fn run(
+        explorer: &dyn Explorer,
+        space: &ParaboloidSpace,
+        budget: usize,
+        workers: usize,
+        cache: bool,
+    ) -> ExplorationReport {
+        let objectives = makespan_objectives();
+        let opts = ExploreOpts {
+            budget,
+            workers,
+            cache,
+            ..Default::default()
+        };
+        explore(space, &objectives, explorer, &Registry::standard(), &opts).unwrap()
+    }
+
+    #[test]
+    fn grid_enumerates_in_order_and_respects_budget() {
+        let space = ParaboloidSpace::new(4, 3, (1, 1));
+        let r = run(&GridExplorer, &space, 100, 2, true);
+        assert_eq!(r.evals.len(), 12);
+        assert_eq!(r.sim_calls, 12);
+        assert_eq!(r.cache_hits, 0);
+        for (i, e) in r.evals.iter().enumerate() {
+            assert_eq!(e.candidate.0, space.nth(i as u64).0);
+        }
+        assert_eq!(r.best().unwrap().candidate.0, vec![1, 1]);
+
+        let r = run(&GridExplorer, &space, 5, 2, true);
+        assert_eq!(r.evals.len(), 5);
+    }
+
+    #[test]
+    fn random_finds_good_points_and_hits_cache() {
+        let space = ParaboloidSpace::new(3, 3, (2, 0));
+        let r = run(&RandomExplorer { seed: 7 }, &space, 40, 4, true);
+        assert_eq!(r.evals.len(), 40);
+        // 40 draws from 9 candidates must repeat (pigeonhole)
+        assert!(r.cache_hits > 0);
+        assert!(r.sim_calls <= 9);
+        assert_eq!(r.sim_calls + r.cache_hits, 40);
+        // the reported best is the minimum of the log
+        let min = r
+            .evals
+            .iter()
+            .map(|e| e.objectives[0])
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(r.best().unwrap().objectives[0], min);
+    }
+
+    #[test]
+    fn hill_climb_descends_to_optimum() {
+        let space = ParaboloidSpace::new(8, 8, (5, 2));
+        let r = run(
+            &HillClimbExplorer {
+                seed: 3,
+                from_initial: true,
+                restarts: false,
+            },
+            &space,
+            200,
+            4,
+            true,
+        );
+        assert_eq!(r.best().unwrap().candidate.0, vec![5, 2]);
+        assert!(r.moves_accepted > 0);
+    }
+
+    #[test]
+    fn anneal_improves_over_initial() {
+        let space = ParaboloidSpace::new(8, 8, (6, 3));
+        let r = run(&AnnealExplorer { seed: 11, init_temp: 0.1 }, &space, 120, 1, true);
+        let initial = r.evals[0].objectives[0];
+        let best = r.best().unwrap().objectives[0];
+        assert!(best < initial, "{initial} -> {best}");
+        assert!(r.moves_accepted > 0);
+    }
+
+    #[test]
+    fn failures_score_infinite_without_aborting() {
+        struct Broken(ParaboloidSpace);
+        impl DesignSpace for Broken {
+            fn name(&self) -> &str {
+                "broken"
+            }
+            fn axes(&self) -> &[Axis] {
+                self.0.axes()
+            }
+            fn materialize(&self, c: &Candidate) -> crate::util::error::Result<Design> {
+                crate::ensure!(c.0[0] != 1, "axis x = 1 is cursed");
+                self.0.materialize(c)
+            }
+        }
+        let space = Broken(ParaboloidSpace::new(3, 1, (0, 0)));
+        let objectives = makespan_objectives();
+        let opts = ExploreOpts {
+            budget: 10,
+            workers: 2,
+            ..Default::default()
+        };
+        let r = explore(
+            &space,
+            &objectives,
+            &GridExplorer,
+            &Registry::standard(),
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(r.evals.len(), 3);
+        assert_eq!(r.failures, 1);
+        assert!(r.evals[1].objectives[0].is_infinite());
+        assert_eq!(r.best().unwrap().candidate.0, vec![0, 0]);
+    }
+
+    #[test]
+    fn no_objectives_is_an_error() {
+        let space = ParaboloidSpace::new(2, 2, (0, 0));
+        let objectives: Vec<Box<dyn Objective>> = Vec::new();
+        let r = explore(
+            &space,
+            &objectives,
+            &GridExplorer,
+            &Registry::standard(),
+            &ExploreOpts::default(),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Objectives: scalar figures of merit over a materialized design and its
+//! simulation result. All objectives are minimized; multi-objective
+//! exploration reports a Pareto front over the whole objective vector.
+
+use crate::sim::SimResult;
+
+use super::space::Design;
+
+/// A figure of merit (lower is better) computed from one simulation.
+pub trait Objective: Send + Sync {
+    fn name(&self) -> &str;
+
+    /// Score a design; return `f64::INFINITY` for infeasible designs.
+    fn score(&self, design: &Design, sim: &SimResult) -> f64;
+}
+
+/// Simulated makespan in cycles.
+pub struct Makespan;
+
+impl Objective for Makespan {
+    fn name(&self) -> &str {
+        "makespan"
+    }
+
+    fn score(&self, _design: &Design, sim: &SimResult) -> f64 {
+        sim.makespan
+    }
+}
+
+/// Energy-delay product: total energy (pJ) × makespan (cycles).
+pub struct Edp;
+
+impl Objective for Edp {
+    fn name(&self) -> &str {
+        "edp"
+    }
+
+    fn score(&self, _design: &Design, sim: &SimResult) -> f64 {
+        sim.total_energy() * sim.makespan
+    }
+}
+
+/// Makespan subject to a silicon-area budget: designs whose reported area
+/// exceeds the budget are infeasible. Designs without an area figure pass
+/// unconstrained.
+pub struct AreaConstrainedMakespan {
+    pub budget_mm2: f64,
+    name: String,
+}
+
+impl AreaConstrainedMakespan {
+    pub fn new(budget_mm2: f64) -> AreaConstrainedMakespan {
+        AreaConstrainedMakespan {
+            budget_mm2,
+            name: format!("makespan@area<={budget_mm2:.0}mm2"),
+        }
+    }
+}
+
+impl Objective for AreaConstrainedMakespan {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn score(&self, design: &Design, sim: &SimResult) -> f64 {
+        match design.area_mm2 {
+            Some(a) if a > self.budget_mm2 => f64::INFINITY,
+            _ => sim.makespan,
+        }
+    }
+}
+
+/// Manufacturing cost in dollars (infeasible when the space attaches no
+/// cost model).
+pub struct CostUsd;
+
+impl Objective for CostUsd {
+    fn name(&self) -> &str {
+        "cost_usd"
+    }
+
+    fn score(&self, design: &Design, _sim: &SimResult) -> f64 {
+        design.cost_usd.unwrap_or(f64::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::space::{placement_demo, DesignSpace};
+    use super::*;
+    use crate::eval::Registry;
+    use crate::sim::{simulate, SimConfig};
+
+    fn sample() -> (Design, SimResult) {
+        let space = placement_demo("obj-test", (2, 2), 2);
+        let d = space.materialize(&space.initial()).unwrap();
+        let r = simulate(
+            &d.workload.hw,
+            &d.workload.graph,
+            &d.workload.mapping,
+            &Registry::standard(),
+            &SimConfig::default(),
+        )
+        .unwrap();
+        (d, r)
+    }
+
+    #[test]
+    fn makespan_and_edp_positive() {
+        let (d, r) = sample();
+        assert!(Makespan.score(&d, &r) > 0.0);
+        assert!(Edp.score(&d, &r) > Makespan.score(&d, &r));
+    }
+
+    #[test]
+    fn area_constraint_gates() {
+        let (mut d, r) = sample();
+        d.area_mm2 = Some(100.0);
+        let tight = AreaConstrainedMakespan::new(50.0);
+        let loose = AreaConstrainedMakespan::new(200.0);
+        assert!(tight.score(&d, &r).is_infinite());
+        assert_eq!(loose.score(&d, &r), r.makespan);
+        assert!(tight.name().contains("50"));
+        // no area figure -> unconstrained
+        d.area_mm2 = None;
+        assert_eq!(tight.score(&d, &r), r.makespan);
+    }
+
+    #[test]
+    fn cost_requires_cost_model() {
+        let (mut d, r) = sample();
+        assert!(CostUsd.score(&d, &r).is_infinite());
+        d.cost_usd = Some(42.0);
+        assert_eq!(CostUsd.score(&d, &r), 42.0);
+    }
+}

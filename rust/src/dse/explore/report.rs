@@ -1,0 +1,318 @@
+//! Structured exploration results: the full evaluation log, best
+//! candidate, Pareto front, and throughput counters — renderable as
+//! console tables or JSON.
+
+use crate::util::json::{Json, JsonObj};
+
+use super::super::report::{fmt, Table};
+use super::space::Candidate;
+
+/// One logged candidate evaluation, in exploration order.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    pub candidate: Candidate,
+    pub label: String,
+    /// One score per objective (lower is better; `INFINITY` = infeasible
+    /// or failed).
+    pub objectives: Vec<f64>,
+    /// True when served from the memo cache.
+    pub cached: bool,
+}
+
+/// The result of one exploration run.
+#[derive(Debug)]
+pub struct ExplorationReport {
+    pub space: String,
+    pub explorer: String,
+    pub objective_names: Vec<String>,
+    /// Every evaluation, in exploration order.
+    pub evals: Vec<Evaluation>,
+    /// Candidates actually simulated (memo-cache misses).
+    pub sim_calls: usize,
+    pub cache_hits: usize,
+    /// Evaluations that failed to materialize or simulate.
+    pub failures: usize,
+    /// Moves accepted by the local searchers (0 for grid/random).
+    pub moves_accepted: usize,
+    pub elapsed_secs: f64,
+    /// Total size of the explored space.
+    pub space_size: u64,
+}
+
+impl ExplorationReport {
+    /// Index of the best evaluation by the first objective (earliest wins
+    /// ties — deterministic).
+    pub fn best_index(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.evals.iter().enumerate() {
+            let score = e.objectives[0];
+            match best {
+                Some(b) if self.evals[b].objectives[0] <= score => {}
+                _ => best = Some(i),
+            }
+        }
+        best
+    }
+
+    pub fn best(&self) -> Option<&Evaluation> {
+        self.best_index().map(|i| &self.evals[i])
+    }
+
+    /// Indices of the non-dominated evaluations (unique candidates, first
+    /// occurrence), sorted by the first objective.
+    pub fn pareto(&self) -> Vec<usize> {
+        let mut unique: Vec<usize> = Vec::new();
+        for (i, e) in self.evals.iter().enumerate() {
+            if !unique.iter().any(|&j| self.evals[j].candidate == e.candidate) {
+                unique.push(i);
+            }
+        }
+        let dominates = |a: &[f64], b: &[f64]| -> bool {
+            a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+        };
+        let mut front: Vec<usize> = unique
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let me = &self.evals[i].objectives;
+                !unique
+                    .iter()
+                    .any(|&j| j != i && dominates(&self.evals[j].objectives, me))
+            })
+            .collect();
+        front.sort_by(|&a, &b| {
+            self.evals[a].objectives[0]
+                .total_cmp(&self.evals[b].objectives[0])
+                .then(a.cmp(&b))
+        });
+        front
+    }
+
+    pub fn evals_per_sec(&self) -> f64 {
+        if self.elapsed_secs > 0.0 {
+            self.evals.len() as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// One-row run summary.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(
+            format!("Exploration: {} via {}", self.space, self.explorer),
+            &[
+                "space size",
+                "evals",
+                "sims",
+                "cache hits",
+                "failures",
+                "accepted",
+                "best",
+                "evals/s",
+            ],
+        );
+        let best = self
+            .best()
+            .map(|e| format!("{} ({})", fmt(e.objectives[0]), e.label))
+            .unwrap_or_else(|| "-".to_string());
+        t.row(vec![
+            self.space_size.to_string(),
+            self.evals.len().to_string(),
+            self.sim_calls.to_string(),
+            self.cache_hits.to_string(),
+            self.failures.to_string(),
+            self.moves_accepted.to_string(),
+            best,
+            fmt(self.evals_per_sec()),
+        ]);
+        t
+    }
+
+    /// The Pareto front, one row per non-dominated candidate.
+    pub fn pareto_table(&self) -> Table {
+        let mut headers: Vec<&str> = vec!["candidate"];
+        for n in &self.objective_names {
+            headers.push(n.as_str());
+        }
+        let mut t = Table::new(
+            format!(
+                "Pareto front over ({})",
+                self.objective_names.join(", ")
+            ),
+            &headers,
+        );
+        for i in self.pareto() {
+            let e = &self.evals[i];
+            let mut row = vec![e.label.clone()];
+            row.extend(e.objectives.iter().map(|v| fmt(*v)));
+            t.row(row);
+        }
+        t
+    }
+
+    /// The `n` best evaluations by the first objective.
+    pub fn top_table(&self, n: usize) -> Table {
+        let mut headers: Vec<&str> = vec!["#", "candidate"];
+        for name in &self.objective_names {
+            headers.push(name.as_str());
+        }
+        headers.push("cached");
+        let mut t = Table::new(format!("Top {n} evaluations"), &headers);
+        let mut order: Vec<usize> = (0..self.evals.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.evals[a].objectives[0]
+                .total_cmp(&self.evals[b].objectives[0])
+                .then(a.cmp(&b))
+        });
+        for (rank, &i) in order.iter().take(n).enumerate() {
+            let e = &self.evals[i];
+            let mut row = vec![(rank + 1).to_string(), e.label.clone()];
+            row.extend(e.objectives.iter().map(|v| fmt(*v)));
+            row.push(if e.cached { "y" } else { "n" }.to_string());
+            t.row(row);
+        }
+        t
+    }
+
+    fn eval_json(&self, e: &Evaluation) -> Json {
+        let mut o = JsonObj::new();
+        o.insert(
+            "candidate",
+            Json::Arr(e.candidate.0.iter().map(|d| (*d as u64).into()).collect()),
+        );
+        o.insert("fingerprint", format!("{:016x}", e.candidate.fingerprint()).into());
+        o.insert("label", e.label.as_str().into());
+        o.insert(
+            "objectives",
+            Json::Arr(e.objectives.iter().map(|v| (*v).into()).collect()),
+        );
+        o.insert("cached", e.cached.into());
+        Json::Obj(o)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("space", self.space.as_str().into());
+        o.insert("explorer", self.explorer.as_str().into());
+        o.insert("space_size", self.space_size.into());
+        o.insert(
+            "objectives",
+            Json::Arr(self.objective_names.iter().map(|n| n.as_str().into()).collect()),
+        );
+        o.insert("evals", (self.evals.len() as u64).into());
+        o.insert("sim_calls", (self.sim_calls as u64).into());
+        o.insert("cache_hits", (self.cache_hits as u64).into());
+        o.insert("failures", (self.failures as u64).into());
+        o.insert("moves_accepted", (self.moves_accepted as u64).into());
+        o.insert("elapsed_secs", self.elapsed_secs.into());
+        o.insert("evals_per_sec", self.evals_per_sec().into());
+        match self.best() {
+            Some(e) => o.insert("best", self.eval_json(e)),
+            None => o.insert("best", Json::Null),
+        }
+        o.insert(
+            "pareto",
+            Json::Arr(
+                self.pareto()
+                    .into_iter()
+                    .map(|i| self.eval_json(&self.evals[i]))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "log",
+            Json::Arr(self.evals.iter().map(|e| self.eval_json(e)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(digits: Vec<u32>, objectives: Vec<f64>) -> Evaluation {
+        let label = format!("{objectives:?}");
+        Evaluation {
+            candidate: Candidate(digits),
+            label,
+            objectives,
+            cached: false,
+        }
+    }
+
+    fn report(evals: Vec<Evaluation>) -> ExplorationReport {
+        ExplorationReport {
+            space: "synthetic".into(),
+            explorer: "none".into(),
+            objective_names: vec!["a".into(), "b".into()],
+            evals,
+            sim_calls: 0,
+            cache_hits: 0,
+            failures: 0,
+            moves_accepted: 0,
+            elapsed_secs: 1.0,
+            space_size: 10,
+        }
+    }
+
+    #[test]
+    fn best_earliest_on_tie() {
+        let r = report(vec![
+            ev(vec![0], vec![2.0, 0.0]),
+            ev(vec![1], vec![1.0, 0.0]),
+            ev(vec![2], vec![1.0, 0.0]),
+        ]);
+        assert_eq!(r.best_index(), Some(1));
+        assert_eq!(r.best().unwrap().candidate.0, vec![1]);
+    }
+
+    #[test]
+    fn pareto_filters_dominated_and_duplicates() {
+        let r = report(vec![
+            ev(vec![0], vec![1.0, 5.0]),
+            ev(vec![1], vec![2.0, 1.0]),
+            ev(vec![2], vec![3.0, 3.0]), // dominated by [1]
+            ev(vec![1], vec![2.0, 1.0]), // duplicate candidate
+        ]);
+        let front = r.pareto();
+        assert_eq!(front, vec![0, 1]);
+    }
+
+    #[test]
+    fn pareto_single_objective_is_best() {
+        let mut r = report(vec![
+            ev(vec![0], vec![3.0]),
+            ev(vec![1], vec![1.0]),
+            ev(vec![2], vec![2.0]),
+        ]);
+        r.objective_names = vec!["a".into()];
+        assert_eq!(r.pareto(), vec![1]);
+    }
+
+    #[test]
+    fn tables_and_json_render() {
+        let r = report(vec![
+            ev(vec![0], vec![1.0, 5.0]),
+            ev(vec![1], vec![2.0, 1.0]),
+        ]);
+        let s = r.summary_table().render();
+        assert!(s.contains("synthetic"), "{s}");
+        let p = r.pareto_table().render();
+        assert!(p.contains("Pareto"), "{p}");
+        assert_eq!(r.top_table(1).rows.len(), 1);
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("space").unwrap().as_str(), Some("synthetic"));
+        assert_eq!(parsed.get("evals").unwrap().as_f64(), Some(2.0));
+        assert!(parsed.get("best").unwrap().get("objectives").is_some());
+    }
+
+    #[test]
+    fn empty_report_has_no_best() {
+        let r = report(Vec::new());
+        assert!(r.best().is_none());
+        assert!(r.pareto().is_empty());
+        assert_eq!(r.to_json().get("best"), Some(&Json::Null));
+    }
+}

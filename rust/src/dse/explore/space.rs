@@ -1,0 +1,959 @@
+//! Design spaces: typed axes, candidate encoding, the [`DesignSpace`]
+//! trait, and the built-in parametric spaces over the architecture
+//! templates.
+//!
+//! A candidate is a digit vector — one digit per axis, each digit an index
+//! into that axis's value list. This makes every space uniformly
+//! enumerable (mixed-radix decode), samplable (uniform digit draws),
+//! perturbable (±1 digit moves for the local searchers) and memoizable
+//! (the digits are the fingerprint).
+
+use crate::arch::{DmcParams, GsmParams, MpmcParams};
+use crate::cost::{AreaModel, CostModel, Packaging};
+use crate::hwir::{Hardware, PointId};
+use crate::mapping::Mapping;
+use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskId, TaskKind};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::workloads::{dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig, Workload};
+
+use super::super::report::fmt;
+use super::objective::{CostUsd, Edp, Makespan, Objective};
+
+// ======================================================================
+// Axes and candidates
+// ======================================================================
+
+/// Which DSE tier an axis explores (paper §7): architecture template
+/// choice, hardware parameter, or mapping decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AxisKind {
+    Arch,
+    HwParam,
+    Mapping,
+}
+
+impl AxisKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AxisKind::Arch => "arch",
+            AxisKind::HwParam => "hw-param",
+            AxisKind::Mapping => "mapping",
+        }
+    }
+}
+
+/// The value list of one axis.
+#[derive(Debug, Clone)]
+pub enum AxisValues {
+    F64(Vec<f64>),
+    U64(Vec<u64>),
+    /// Categorical values (template names, packaging technologies, …).
+    Tag(Vec<String>),
+    /// `n` index-labeled values `0..n` — a compact encoding for axes
+    /// whose values are positions in some external list (e.g. compute
+    /// points of a placement space), avoiding per-axis label storage.
+    Count(usize),
+}
+
+impl AxisValues {
+    pub fn len(&self) -> usize {
+        match self {
+            AxisValues::F64(v) => v.len(),
+            AxisValues::U64(v) => v.len(),
+            AxisValues::Tag(v) => v.len(),
+            AxisValues::Count(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Numeric view of value `i` (categorical values map to their index).
+    pub fn num(&self, i: usize) -> f64 {
+        match self {
+            AxisValues::F64(v) => v[i],
+            AxisValues::U64(v) => v[i] as f64,
+            AxisValues::Tag(_) | AxisValues::Count(_) => i as f64,
+        }
+    }
+
+    /// Human-readable label of value `i`.
+    pub fn label(&self, i: usize) -> String {
+        match self {
+            AxisValues::F64(v) => fmt(v[i]),
+            AxisValues::U64(v) => v[i].to_string(),
+            AxisValues::Tag(v) => v[i].clone(),
+            AxisValues::Count(_) => i.to_string(),
+        }
+    }
+}
+
+/// A typed axis descriptor: name, DSE tier, and candidate values.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub kind: AxisKind,
+    pub values: AxisValues,
+}
+
+impl Axis {
+    pub fn f64s(name: impl Into<String>, kind: AxisKind, values: &[f64]) -> Axis {
+        Axis {
+            name: name.into(),
+            kind,
+            values: AxisValues::F64(values.to_vec()),
+        }
+    }
+
+    pub fn u64s(name: impl Into<String>, kind: AxisKind, values: &[u64]) -> Axis {
+        Axis {
+            name: name.into(),
+            kind,
+            values: AxisValues::U64(values.to_vec()),
+        }
+    }
+
+    pub fn tags(name: impl Into<String>, kind: AxisKind, values: Vec<String>) -> Axis {
+        Axis {
+            name: name.into(),
+            kind,
+            values: AxisValues::Tag(values),
+        }
+    }
+
+    /// An axis of `n` index-labeled values `0..n`.
+    pub fn count(name: impl Into<String>, kind: AxisKind, n: usize) -> Axis {
+        Axis {
+            name: name.into(),
+            kind,
+            values: AxisValues::Count(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// One point of a design space: a digit per axis, each digit indexing
+/// into the axis's value list. The digits double as the memo-cache
+/// fingerprint.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Candidate(pub Vec<u32>);
+
+impl Candidate {
+    /// FNV-1a fingerprint of the digit vector (stable across runs).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for d in &self.0 {
+            for b in d.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+}
+
+/// A materialized candidate: a ready-to-simulate workload plus the
+/// side-channel figures (area, manufacturing cost) that the non-makespan
+/// objectives consume.
+#[derive(Debug)]
+pub struct Design {
+    pub workload: Workload,
+    /// Chip/system silicon area, when the space computes one.
+    pub area_mm2: Option<f64>,
+    /// Manufacturing cost in dollars, when the space computes one.
+    pub cost_usd: Option<f64>,
+}
+
+impl Design {
+    pub fn new(workload: Workload) -> Design {
+        Design {
+            workload,
+            area_mm2: None,
+            cost_usd: None,
+        }
+    }
+}
+
+// ======================================================================
+// The DesignSpace trait
+// ======================================================================
+
+/// An enumerable/samplable candidate set over typed axes.
+///
+/// Implementors provide the axes and `materialize`; enumeration, random
+/// access, labeling, bounds checking and neighbor generation all come for
+/// free from the digit encoding.
+pub trait DesignSpace: Sync {
+    fn name(&self) -> &str;
+
+    /// The typed axis descriptors; axis `i` has `axes()[i].len()` values.
+    fn axes(&self) -> &[Axis];
+
+    /// Decode a candidate into a concrete, simulatable design.
+    fn materialize(&self, c: &Candidate) -> Result<Design>;
+
+    /// Total number of candidates (product of axis cardinalities).
+    fn size(&self) -> u64 {
+        self.axes()
+            .iter()
+            .fold(1u64, |acc, a| acc.saturating_mul(a.len() as u64))
+    }
+
+    /// The `i`-th candidate in lexicographic order (last axis fastest).
+    fn nth(&self, mut i: u64) -> Candidate {
+        let axes = self.axes();
+        let mut digits = vec![0u32; axes.len()];
+        for k in (0..axes.len()).rev() {
+            let card = axes[k].len().max(1) as u64;
+            digits[k] = (i % card) as u32;
+            i /= card;
+        }
+        Candidate(digits)
+    }
+
+    /// The search starting point (all-zeros unless the space has a
+    /// distinguished baseline, e.g. an existing placement).
+    fn initial(&self) -> Candidate {
+        Candidate(vec![0; self.axes().len()])
+    }
+
+    fn in_bounds(&self, c: &Candidate) -> bool {
+        c.0.len() == self.axes().len()
+            && c.0
+                .iter()
+                .zip(self.axes())
+                .all(|(d, a)| (*d as usize) < a.len())
+    }
+
+    /// Single-digit ±1 perturbations, in axis order (the move set of the
+    /// local searchers).
+    fn neighbors(&self, c: &Candidate) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for (k, a) in self.axes().iter().enumerate() {
+            let d = c.0[k];
+            if d > 0 {
+                let mut n = c.clone();
+                n.0[k] = d - 1;
+                out.push(n);
+            }
+            if (d as usize) + 1 < a.len() {
+                let mut n = c.clone();
+                n.0[k] = d + 1;
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// `axis=value` rendering of a candidate.
+    fn label(&self, c: &Candidate) -> String {
+        self.axes()
+            .iter()
+            .zip(&c.0)
+            .map(|(a, d)| format!("{}={}", a.name, a.values.label(*d as usize)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+// ======================================================================
+// Parametric spaces over the architecture templates
+// ======================================================================
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArchKind {
+    Dmc,
+    Gsm,
+}
+
+const DMC_AXES: &[&str] = &["cfg", "lmem_bw", "noc_bw", "lmem_lat"];
+const GSM_AXES: &[&str] = &["cfg", "l2_bw", "l1_bw", "l2_lat"];
+
+/// Hardware-parameter space over the DMC or GSM template: a `cfg` axis
+/// selects the Table-2 baseline, and bandwidth/latency axes are applied
+/// through the fixed-area transform (`with_fixed_area`). Buildable in code
+/// or from a JSON description (`mldse explore --space FILE.json`).
+pub struct ParamSpace {
+    name: String,
+    arch: ArchKind,
+    axes: Vec<Axis>,
+    llm: LlmConfig,
+    seq: u32,
+    dmc_grid: (usize, usize),
+    gsm_sms: usize,
+    area: AreaModel,
+}
+
+impl ParamSpace {
+    fn base(name: &str, arch: ArchKind, quick: bool) -> ParamSpace {
+        let llm = if quick {
+            LlmConfig {
+                hidden: 512,
+                heads: 8,
+                ffn: 2048,
+                layers: 8,
+                elem_bytes: 2,
+            }
+        } else {
+            LlmConfig::gpt3_6_7b()
+        };
+        ParamSpace {
+            name: name.to_string(),
+            arch,
+            axes: Vec::new(),
+            llm,
+            seq: if quick { 256 } else { 2048 },
+            dmc_grid: if quick { (4, 4) } else { (16, 8) },
+            gsm_sms: if quick { 16 } else { 128 },
+            area: AreaModel::default(),
+        }
+    }
+
+    /// A DMC-template space with no axes yet (`quick` shrinks the model,
+    /// sequence length and chip grid to CI sizes).
+    pub fn dmc(name: &str, quick: bool) -> ParamSpace {
+        ParamSpace::base(name, ArchKind::Dmc, quick)
+    }
+
+    /// A GSM-template space with no axes yet.
+    pub fn gsm(name: &str, quick: bool) -> ParamSpace {
+        ParamSpace::base(name, ArchKind::Gsm, quick)
+    }
+
+    fn valid_axes(&self) -> &'static [&'static str] {
+        match self.arch {
+            ArchKind::Dmc => DMC_AXES,
+            ArchKind::Gsm => GSM_AXES,
+        }
+    }
+
+    /// Add an axis by parameter name; errors on names the template does
+    /// not expose.
+    pub fn axis(mut self, name: &str, values: &[f64]) -> Result<ParamSpace> {
+        crate::ensure!(
+            self.valid_axes().contains(&name),
+            "unknown axis '{name}' for {} space (valid: {})",
+            match self.arch {
+                ArchKind::Dmc => "dmc",
+                ArchKind::Gsm => "gsm",
+            },
+            self.valid_axes().join(", ")
+        );
+        crate::ensure!(!values.is_empty(), "axis '{name}' has no values");
+        if name == "cfg" {
+            for v in values {
+                crate::ensure!(
+                    (1.0..=4.0).contains(v) && v.fract() == 0.0,
+                    "axis 'cfg' values must be integers 1..=4 (got {v})"
+                );
+            }
+        }
+        let kind = if name == "cfg" {
+            AxisKind::Arch
+        } else {
+            AxisKind::HwParam
+        };
+        let axis = if name == "cfg" || name.ends_with("_lat") {
+            Axis::u64s(name, kind, &values.iter().map(|v| *v as u64).collect::<Vec<_>>())
+        } else {
+            Axis::f64s(name, kind, values)
+        };
+        self.axes.push(axis);
+        Ok(self)
+    }
+
+    /// Override the sequence length.
+    pub fn seq(mut self, seq: u32) -> ParamSpace {
+        self.seq = seq;
+        self
+    }
+
+    /// Parse a space description:
+    ///
+    /// `{"name": "...", "arch": "dmc"|"gsm", "quick": bool, "seq": n,
+    ///   "axes": {"cfg": [1,2], "lmem_bw": [76, 152], ...}}`
+    pub fn from_json(text: &str) -> Result<ParamSpace> {
+        let doc = Json::parse(text)?;
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom-space")
+            .to_string();
+        let arch = match doc.get("arch").and_then(|v| v.as_str()) {
+            Some("dmc") => ArchKind::Dmc,
+            Some("gsm") => ArchKind::Gsm,
+            Some(other) => crate::bail!("unknown arch '{other}' (valid: dmc, gsm)"),
+            None => crate::bail!("space file needs an \"arch\" field (dmc or gsm)"),
+        };
+        let quick = doc
+            .get("quick")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let mut space = ParamSpace::base(&name, arch, quick);
+        if let Some(seq) = doc.get("seq").and_then(|v| v.as_u64()) {
+            space.seq = seq as u32;
+        }
+        let axes = doc
+            .get("axes")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| crate::format_err!("space file needs an \"axes\" object"))?;
+        for (axis_name, values) in axes.iter() {
+            let arr = values
+                .as_arr()
+                .ok_or_else(|| crate::format_err!("axis '{axis_name}' must be an array"))?;
+            let mut nums = Vec::with_capacity(arr.len());
+            for v in arr {
+                nums.push(v.as_f64().ok_or_else(|| {
+                    crate::format_err!("axis '{axis_name}' has a non-numeric value")
+                })?);
+            }
+            space = space.axis(axis_name, &nums)?;
+        }
+        crate::ensure!(!space.axes.is_empty(), "space '{name}' defines no axes");
+        Ok(space)
+    }
+
+    /// Resolved template parameters for a candidate (no hardware build).
+    fn dmc_params(&self, c: &Candidate) -> DmcParams {
+        let mut cfg_idx = 2usize;
+        let mut lmem_bw = None;
+        let mut noc_bw = None;
+        let mut lmem_lat = None;
+        for (a, d) in self.axes.iter().zip(&c.0) {
+            let v = a.values.num(*d as usize);
+            match a.name.as_str() {
+                "cfg" => cfg_idx = v as usize,
+                "lmem_bw" => lmem_bw = Some(v),
+                "noc_bw" => noc_bw = Some(v),
+                "lmem_lat" => lmem_lat = Some(v as u64),
+                _ => {}
+            }
+        }
+        let mut base = DmcParams::table2(cfg_idx);
+        base.grid = self.dmc_grid;
+        base.with_fixed_area(
+            lmem_bw.unwrap_or(base.lmem_bandwidth),
+            noc_bw.unwrap_or(base.noc_bandwidth),
+            lmem_lat.unwrap_or(base.lmem_latency),
+            &self.area,
+        )
+    }
+
+    fn gsm_params(&self, c: &Candidate) -> GsmParams {
+        let mut cfg_idx = 2usize;
+        let mut l2_bw = None;
+        let mut l1_bw = None;
+        let mut l2_lat = None;
+        for (a, d) in self.axes.iter().zip(&c.0) {
+            let v = a.values.num(*d as usize);
+            match a.name.as_str() {
+                "cfg" => cfg_idx = v as usize,
+                "l2_bw" => l2_bw = Some(v),
+                "l1_bw" => l1_bw = Some(v),
+                "l2_lat" => l2_lat = Some(v as u64),
+                _ => {}
+            }
+        }
+        let mut base = GsmParams::table2(cfg_idx);
+        base.sms = self.gsm_sms;
+        base.with_fixed_area(
+            l2_bw.unwrap_or(base.l2_bandwidth),
+            l1_bw.unwrap_or(base.l1_bandwidth),
+            l2_lat.unwrap_or(base.l2_latency),
+            &self.area,
+        )
+    }
+}
+
+impl DesignSpace for ParamSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        match self.arch {
+            ArchKind::Dmc => {
+                let p = self.dmc_params(c);
+                let mut d = Design::new(dmc_prefill(&self.llm, self.seq, &p));
+                d.area_mm2 = Some(p.area(&self.area).3);
+                Ok(d)
+            }
+            ArchKind::Gsm => {
+                let p = self.gsm_params(c);
+                let mut d = Design::new(gsm_prefill(&self.llm, self.seq, &p));
+                d.area_mm2 = Some(p.area(&self.area).3);
+                Ok(d)
+            }
+        }
+    }
+}
+
+// ======================================================================
+// Packaging space (MPMC-DMC, Fig. 10 trade-off)
+// ======================================================================
+
+/// Performance/cost space over the MPMC-DMC spatial-computing system:
+/// packaging technology × chiplets-per-package, with manufacturing cost
+/// attached to each design for the [`CostUsd`] objective.
+pub struct PackagingSpace {
+    name: String,
+    llm: LlmConfig,
+    pos: u32,
+    layers: u32,
+    /// Quick-mode shrink: (chiplet grid, total chiplet pool).
+    shrink: Option<((usize, usize), usize)>,
+    axes: Vec<Axis>,
+    area: AreaModel,
+    cost: CostModel,
+}
+
+impl PackagingSpace {
+    pub fn new(
+        name: &str,
+        llm: LlmConfig,
+        pos: u32,
+        layers: u32,
+        cpps: &[usize],
+        shrink: Option<((usize, usize), usize)>,
+    ) -> PackagingSpace {
+        let axes = vec![
+            Axis::tags(
+                "packaging",
+                AxisKind::Arch,
+                vec!["MCM".to_string(), "2.5D".to_string()],
+            ),
+            Axis::u64s(
+                "cpp",
+                AxisKind::HwParam,
+                &cpps.iter().map(|c| *c as u64).collect::<Vec<_>>(),
+            ),
+        ];
+        PackagingSpace {
+            name: name.to_string(),
+            llm,
+            pos,
+            layers,
+            shrink,
+            axes,
+            area: AreaModel::default(),
+            cost: CostModel::default(),
+        }
+    }
+
+    /// (packaging, chiplets/package) of a candidate.
+    pub fn describe(&self, c: &Candidate) -> (Packaging, usize) {
+        let pkg = if c.0[0] == 0 {
+            Packaging::Mcm
+        } else {
+            Packaging::Interposer2_5D
+        };
+        let cpp = self.axes[1].values.num(c.0[1] as usize) as usize;
+        (pkg, cpp)
+    }
+
+    fn params(&self, c: &Candidate) -> Result<MpmcParams> {
+        let (pkg, cpp) = self.describe(c);
+        let mut p = MpmcParams::paper(cpp, pkg);
+        if let Some((grid, total)) = self.shrink {
+            p.total_chiplets = total;
+            p.chiplet.grid = grid;
+        }
+        crate::ensure!(
+            p.total_chiplets % p.chiplets_per_package == 0,
+            "{} chiplets not divisible into packages of {cpp}",
+            p.total_chiplets
+        );
+        crate::ensure!(
+            p.total_chiplets >= 3 * self.layers as usize,
+            "spatial decode needs 3 chiplets per layer"
+        );
+        Ok(p)
+    }
+}
+
+impl DesignSpace for PackagingSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let p = self.params(c)?;
+        let mut d = Design::new(mpmc_decode_spatial(&self.llm, self.pos, self.layers, &p));
+        d.cost_usd = Some(p.system_cost(&self.area, &self.cost));
+        d.area_mm2 = Some(p.chiplet.area(&self.area).3 * p.total_chiplets as f64);
+        Ok(d)
+    }
+}
+
+// ======================================================================
+// Placement space (mapping tier)
+// ======================================================================
+
+/// Mapping-tier space: one axis per movable (enabled compute) task, whose
+/// values are the hardware's compute points. The baseline mapping supplies
+/// the initial candidate; non-movable tasks keep their base placement.
+pub struct PlacementSpace {
+    name: String,
+    hw: Hardware,
+    graph: TaskGraph,
+    base: Mapping,
+    movable: Vec<TaskId>,
+    points: Vec<PointId>,
+    initial: Vec<u32>,
+    axes: Vec<Axis>,
+}
+
+impl PlacementSpace {
+    pub fn new(name: &str, hw: Hardware, graph: TaskGraph, base: Mapping) -> PlacementSpace {
+        let movable: Vec<TaskId> = graph
+            .iter()
+            .filter(|t| t.enabled && t.kind.is_compute())
+            .map(|t| t.id)
+            .collect();
+        let points = hw.points_of_kind("compute");
+        let initial: Vec<u32> = movable
+            .iter()
+            .map(|t| {
+                base.point_of(*t)
+                    .and_then(|p| points.iter().position(|q| *q == p))
+                    .unwrap_or(0) as u32
+            })
+            .collect();
+        // one compact index axis per task (values = compute-point indices)
+        let axes: Vec<Axis> = movable
+            .iter()
+            .map(|t| Axis::count(graph.task(*t).name.clone(), AxisKind::Mapping, points.len()))
+            .collect();
+        PlacementSpace {
+            name: name.to_string(),
+            hw,
+            graph,
+            base,
+            movable,
+            points,
+            initial,
+            axes,
+        }
+    }
+
+    /// Write a candidate's placement into an external mapping (used by the
+    /// legacy `anneal_placement` shim to update the caller's state).
+    pub fn apply(&self, c: &Candidate, mapping: &mut Mapping) {
+        for (i, t) in self.movable.iter().enumerate() {
+            mapping.map(*t, self.points[c.0[i] as usize]);
+        }
+    }
+}
+
+impl DesignSpace for PlacementSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn initial(&self) -> Candidate {
+        Candidate(self.initial.clone())
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let mut mapping = self.base.clone();
+        for (i, t) in self.movable.iter().enumerate() {
+            mapping.map(*t, self.points[c.0[i] as usize]);
+        }
+        Ok(Design::new(Workload {
+            hw: self.hw.clone(),
+            graph: self.graph.clone(),
+            mapping,
+            name: self.name.clone(),
+            notes: Vec::new(),
+        }))
+    }
+}
+
+// ======================================================================
+// Presets
+// ======================================================================
+
+/// Names accepted by [`preset`].
+pub fn preset_names() -> &'static [&'static str] {
+    &[
+        "dmc",
+        "dmc-quick",
+        "dmc-area",
+        "gsm",
+        "gsm-quick",
+        "packaging",
+        "packaging-quick",
+        "mapping",
+    ]
+}
+
+fn dmc_preset(name: &str, quick: bool) -> Result<ParamSpace> {
+    let (lmem, noc, lat): (&[f64], &[f64], &[f64]) = if quick {
+        (&[64.0, 304.0], &[16.0, 64.0], &[2.0, 8.0])
+    } else {
+        (
+            &[38.0, 76.0, 152.0, 304.0, 608.0],
+            &[8.0, 16.0, 32.0, 64.0, 128.0],
+            &[1.0, 2.0, 4.0, 8.0, 16.0],
+        )
+    };
+    ParamSpace::dmc(name, quick)
+        .axis("cfg", &[1.0, 2.0, 3.0, 4.0])?
+        .axis("lmem_bw", lmem)?
+        .axis("noc_bw", noc)?
+        .axis("lmem_lat", lat)
+}
+
+fn gsm_preset(name: &str, quick: bool) -> Result<ParamSpace> {
+    let l2: &[f64] = if quick {
+        &[1280.0, 5120.0, 20480.0]
+    } else {
+        &[640.0, 1280.0, 2560.0, 5120.0, 10240.0, 20480.0]
+    };
+    ParamSpace::gsm(name, quick)
+        .axis("cfg", &[1.0, 2.0, 3.0, 4.0])?
+        .axis("l2_bw", l2)
+}
+
+/// A small mapping-tier demo problem: `n_tasks` skewed independent compute
+/// tasks, all initially on the first core of a DMC chip.
+pub fn placement_demo(name: &str, grid: (usize, usize), n_tasks: usize) -> PlacementSpace {
+    let params = DmcParams {
+        grid,
+        with_dram: false,
+        ..DmcParams::default()
+    };
+    let hw = params.build();
+    let core0 = hw.points_of_kind("compute")[0];
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    for i in 0..n_tasks {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = 40_000.0 * (1 + i % 4) as f64;
+        let t = graph.add(format!("t{i}"), TaskKind::Compute(c));
+        mapping.map(t, core0);
+    }
+    PlacementSpace::new(name, hw, graph, mapping)
+}
+
+/// Resolve a named preset into a (space, default objectives) pair.
+pub fn preset(name: &str) -> Result<(Box<dyn DesignSpace>, Vec<Box<dyn Objective>>)> {
+    let perf: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(Edp)];
+    match name {
+        "dmc" => Ok((Box::new(dmc_preset("dmc", false)?), perf)),
+        "dmc-quick" => Ok((Box::new(dmc_preset("dmc-quick", true)?), perf)),
+        "dmc-area" => {
+            let objs: Vec<Box<dyn Objective>> = vec![
+                Box::new(super::objective::AreaConstrainedMakespan::new(900.0)),
+                Box::new(Edp),
+            ];
+            Ok((Box::new(dmc_preset("dmc-area", false)?), objs))
+        }
+        "gsm" => Ok((Box::new(gsm_preset("gsm", false)?), perf)),
+        "gsm-quick" => Ok((Box::new(gsm_preset("gsm-quick", true)?), perf)),
+        "packaging" => {
+            let space = PackagingSpace::new(
+                "packaging",
+                LlmConfig::gpt3_6_7b(),
+                2048,
+                8,
+                &[1, 2, 3, 4, 6],
+                None,
+            );
+            let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
+            Ok((Box::new(space), objs))
+        }
+        "packaging-quick" => {
+            let llm = LlmConfig {
+                hidden: 512,
+                heads: 8,
+                ffn: 2048,
+                layers: 8,
+                elem_bytes: 2,
+            };
+            let space = PackagingSpace::new(
+                "packaging-quick",
+                llm,
+                256,
+                2,
+                &[1, 2],
+                Some(((4, 4), 6)),
+            );
+            let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
+            Ok((Box::new(space), objs))
+        }
+        "mapping" => Ok((Box::new(placement_demo("mapping", (2, 2), 8)), perf)),
+        other => crate::bail!(
+            "unknown preset '{other}' (valid: {})",
+            preset_names().join(", ")
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digit_enumeration_roundtrip() {
+        let space = dmc_preset("t", true).unwrap();
+        // 4 cfg * 2 lmem * 2 noc * 2 lat
+        assert_eq!(space.size(), 32);
+        assert_eq!(space.nth(0).0, vec![0, 0, 0, 0]);
+        assert_eq!(space.nth(1).0, vec![0, 0, 0, 1]);
+        assert_eq!(space.nth(2).0, vec![0, 0, 1, 0]);
+        assert_eq!(space.nth(31).0, vec![3, 1, 1, 1]);
+        // lexicographic: index i reconstructs from digits
+        for i in 0..32u64 {
+            let c = space.nth(i);
+            let mut j = 0u64;
+            for (d, a) in c.0.iter().zip(space.axes()) {
+                j = j * a.len() as u64 + *d as u64;
+            }
+            assert_eq!(i, j);
+        }
+    }
+
+    #[test]
+    fn neighbors_are_single_digit_moves() {
+        let space = dmc_preset("t", true).unwrap();
+        let c = Candidate(vec![0, 1, 0, 1]);
+        let ns = space.neighbors(&c);
+        // cfg can go up; lmem down; noc up; lat down
+        assert_eq!(ns.len(), 4);
+        for n in &ns {
+            let diff: u32 = n
+                .0
+                .iter()
+                .zip(&c.0)
+                .map(|(a, b)| if a == b { 0 } else { 1 })
+                .sum();
+            assert_eq!(diff, 1);
+            assert!(space.in_bounds(n));
+        }
+    }
+
+    #[test]
+    fn labels_and_kinds() {
+        let space = dmc_preset("t", true).unwrap();
+        let c = space.nth(0);
+        let label = space.label(&c);
+        assert!(label.contains("cfg=1"), "{label}");
+        assert!(label.contains("lmem_bw=64"), "{label}");
+        assert_eq!(space.axes()[0].kind, AxisKind::Arch);
+        assert_eq!(space.axes()[1].kind, AxisKind::HwParam);
+    }
+
+    #[test]
+    fn unknown_axis_rejected_with_valid_list() {
+        let err = ParamSpace::dmc("t", true).axis("l2_bw", &[1.0]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown axis"), "{msg}");
+        assert!(msg.contains("lmem_bw"), "{msg}");
+    }
+
+    #[test]
+    fn json_space_parses_and_materializes() {
+        let text = r#"{
+            "name": "mini",
+            "arch": "dmc",
+            "quick": true,
+            "seq": 128,
+            "axes": {"cfg": [2, 3], "lmem_bw": [76, 152]}
+        }"#;
+        let space = ParamSpace::from_json(text).unwrap();
+        assert_eq!(space.name(), "mini");
+        assert_eq!(space.size(), 4);
+        let d = space.materialize(&space.nth(0)).unwrap();
+        assert!(d.area_mm2.unwrap() > 0.0);
+        assert!(d.workload.graph.len() > 0);
+    }
+
+    #[test]
+    fn json_space_errors() {
+        assert!(ParamSpace::from_json("{}").is_err());
+        assert!(ParamSpace::from_json(r#"{"arch": "tpu", "axes": {}}"#).is_err());
+        assert!(
+            ParamSpace::from_json(r#"{"arch": "dmc", "axes": {"cfg": ["x"]}}"#).is_err()
+        );
+        assert!(ParamSpace::from_json(r#"{"arch": "dmc", "axes": {}}"#).is_err());
+    }
+
+    #[test]
+    fn placement_space_initial_matches_base() {
+        let space = placement_demo("demo", (2, 2), 4);
+        let init = space.initial();
+        assert_eq!(init.0, vec![0, 0, 0, 0]);
+        assert_eq!(space.axes().len(), 4);
+        assert_eq!(space.size(), 4u64.pow(4));
+        let d = space.materialize(&init).unwrap();
+        assert_eq!(d.workload.graph.len(), 4);
+        // all four tasks on the first compute point
+        let p0 = space.points[0];
+        assert_eq!(d.workload.mapping.tasks_on(p0).len(), 4);
+    }
+
+    #[test]
+    fn packaging_space_costs_attached() {
+        let llm = LlmConfig {
+            hidden: 512,
+            heads: 8,
+            ffn: 2048,
+            layers: 8,
+            elem_bytes: 2,
+        };
+        let space = PackagingSpace::new("pkg", llm, 128, 2, &[1, 2], Some(((2, 2), 6)));
+        assert_eq!(space.size(), 4);
+        let d = space.materialize(&space.nth(0)).unwrap();
+        assert!(d.cost_usd.unwrap() > 0.0);
+        let (pkg, cpp) = space.describe(&space.nth(0));
+        assert_eq!(pkg, Packaging::Mcm);
+        assert_eq!(cpp, 1);
+        let (pkg, cpp) = space.describe(&space.nth(3));
+        assert_eq!(pkg, Packaging::Interposer2_5D);
+        assert_eq!(cpp, 2);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        for name in preset_names() {
+            // full-size presets still construct cheaply (no hardware built)
+            let (space, objs) = preset(name).unwrap();
+            assert!(space.size() > 0, "{name}");
+            assert!(objs.len() >= 2, "{name}");
+        }
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_candidates() {
+        let a = Candidate(vec![1, 2, 3]);
+        let b = Candidate(vec![1, 2, 4]);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), Candidate(vec![1, 2, 3]).fingerprint());
+    }
+}

@@ -1,11 +1,25 @@
 //! Three-tier design-space exploration (paper §7): architecture-level
 //! (template choice), hardware-parameter (sweeps under area budgets), and
-//! mapping (primitive-based search). [`experiments`] encodes every table
-//! and figure of the paper's evaluation; [`search`] provides the
-//! primitive-composed mapping searchers; [`parallel`] and [`report`] are
-//! the sweep substrate.
+//! mapping (primitive-based search).
+//!
+//! The module is layered bottom-up:
+//!
+//! * [`parallel`] — the order-preserving worker pool every sweep and
+//!   search runs on.
+//! * [`report`] — result tables (console / CSV / JSON).
+//! * [`explore`] — the first-class exploration API: [`explore::DesignSpace`]
+//!   (typed axes over arch templates, hardware parameters and mapping
+//!   knobs), [`explore::Objective`] (makespan, EDP, area-constrained
+//!   makespan, cost), [`explore::Explorer`] (grid / random / hill-climb /
+//!   simulated annealing) and the batched, memoized evaluation
+//!   [`explore::Engine`] producing [`explore::ExplorationReport`]s.
+//! * [`search`] — legacy mapping searchers, kept as thin deprecated shims
+//!   over [`explore`]'s `PlacementSpace`/`TilingSpace`.
+//! * [`experiments`] — every table and figure of the paper's evaluation;
+//!   the grid sweeps and the mapping search run through [`explore`].
 
 pub mod experiments;
+pub mod explore;
 pub mod parallel;
 pub mod report;
 pub mod search;
@@ -13,4 +27,5 @@ pub mod search;
 pub use experiments::Ctx;
 pub use parallel::run_parallel;
 pub use report::{fmt, Table};
+#[allow(deprecated)]
 pub use search::{anneal_placement, greedy_tiling, SearchConfig};

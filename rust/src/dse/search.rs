@@ -1,20 +1,27 @@
 //! Mapping-strategy search built from the Table-1 primitives (paper §5.2).
 //!
-//! The paper deliberately ships primitives rather than a fixed search
-//! algorithm; these two searchers demonstrate how algorithms compose from
-//! them:
+//! The original hand-coded searchers are now thin deprecated shims over
+//! the [`explore`](super::explore) API:
 //!
-//! * [`greedy_tiling`] — graph-transformation search: repeatedly re-tile
-//!   the heaviest compute task while the simulated makespan improves.
-//! * [`anneal_placement`] — task-assignment search: simulated annealing
-//!   over `map_node` moves, using the *state control* primitives
-//!   (`undo`) to reject moves.
+//! * [`greedy_tiling`] — graph-transformation search, ported as
+//!   [`TilingSpace`] (one `rounds` axis whose value applies that many
+//!   greedy split-and-spread rounds) climbed by
+//!   [`HillClimbExplorer`](super::explore::HillClimbExplorer).
+//! * [`anneal_placement`] — task-assignment search, ported as
+//!   [`PlacementSpace`](super::explore::PlacementSpace) driven by
+//!   [`AnnealExplorer`](super::explore::AnnealExplorer).
 
 use crate::eval::Registry;
 use crate::hwir::{Hardware, PointId};
 use crate::mapping::MappingState;
-use crate::sim::{simulate, SimConfig};
-use crate::util::rng::Pcg;
+use crate::sim::SimConfig;
+use crate::util::error::Result;
+
+use super::explore::{
+    explore, AnnealExplorer, Axis, AxisKind, Candidate, Design, DesignSpace, ExploreOpts,
+    HillClimbExplorer, Makespan, Objective, PlacementSpace,
+};
+use crate::workloads::Workload;
 
 /// Search configuration.
 #[derive(Debug, Clone)]
@@ -36,20 +43,119 @@ impl Default for SearchConfig {
     }
 }
 
-fn makespan(
-    hw: &Hardware,
-    state: &MappingState,
-    evals: &Registry,
-    sim_cfg: &SimConfig,
-) -> Option<f64> {
-    simulate(hw, &state.graph, &state.mapping, evals, sim_cfg)
-        .ok()
-        .map(|r| r.makespan)
+/// One greedy tiling round: split the most expensive enabled compute task
+/// 2-way and spread the halves over the two least-loaded compute points.
+/// Returns false when no task can be split.
+fn greedy_round(hw: &Hardware, state: &mut MappingState, evals: &Registry) -> bool {
+    let compute_points = hw.points_of_kind("compute");
+    let heaviest = state
+        .graph
+        .iter()
+        .filter(|t| t.enabled && t.kind.is_compute())
+        .max_by(|a, b| {
+            let da = evals
+                .demand(a, hw.entry(state.mapping.point_of(a.id).unwrap()))
+                .total();
+            let db = evals
+                .demand(b, hw.entry(state.mapping.point_of(b.id).unwrap()))
+                .total();
+            da.total_cmp(&db)
+        })
+        .map(|t| t.id);
+    let Some(task) = heaviest else {
+        return false;
+    };
+    let Ok(tiles) = state.tile_task(task, &[2]) else {
+        return false;
+    };
+    let mut load: Vec<(PointId, usize)> = compute_points
+        .iter()
+        .map(|p| (*p, state.mapping.tasks_on(*p).len()))
+        .collect();
+    load.sort_by_key(|(_, l)| *l);
+    for (tile, (p, _)) in tiles.iter().zip(load.iter()) {
+        state.map_node(*tile, *p).ok();
+    }
+    true
+}
+
+/// Graph-transformation design space: a single `rounds` axis whose value
+/// `k` means "apply `k` greedy tiling rounds to the base mapping state".
+/// Hill-climbing from `rounds = 0` reproduces the legacy greedy search,
+/// which stopped at the first non-improving round.
+pub struct TilingSpace<'a> {
+    hw: &'a Hardware,
+    evals: &'a Registry,
+    base: &'a MappingState,
+    axes: Vec<Axis>,
+}
+
+impl<'a> TilingSpace<'a> {
+    pub fn new(
+        hw: &'a Hardware,
+        evals: &'a Registry,
+        base: &'a MappingState,
+        max_rounds: usize,
+    ) -> TilingSpace<'a> {
+        let rounds: Vec<u64> = (0..=max_rounds as u64).collect();
+        TilingSpace {
+            hw,
+            evals,
+            base,
+            axes: vec![Axis::u64s("rounds", AxisKind::Mapping, &rounds)],
+        }
+    }
+
+    /// Rebuild the base state and apply `k` greedy rounds to it.
+    fn expanded(&self, k: usize) -> MappingState {
+        let mut state = MappingState::new(self.base.graph.clone());
+        state.mapping = self.base.mapping.clone();
+        for _ in 0..k {
+            if !greedy_round(self.hw, &mut state, self.evals) {
+                break;
+            }
+        }
+        state
+    }
+
+    /// Apply candidate `c`'s rounds to an external state (used by the
+    /// legacy shim to update the caller's `MappingState` in place).
+    pub fn apply(&self, c: &Candidate, state: &mut MappingState) {
+        for _ in 0..c.0[0] {
+            if !greedy_round(self.hw, state, self.evals) {
+                break;
+            }
+        }
+    }
+}
+
+impl DesignSpace for TilingSpace<'_> {
+    fn name(&self) -> &str {
+        "greedy-tiling"
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for tiling space");
+        let state = self.expanded(c.0[0] as usize);
+        Ok(Design::new(Workload {
+            hw: self.hw.clone(),
+            graph: state.graph,
+            mapping: state.mapping,
+            name: "greedy-tiling".into(),
+            notes: Vec::new(),
+        }))
+    }
 }
 
 /// Greedy tiling search: split the most expensive compute task 2-way
-/// (distributing the halves over the least-loaded compute points) while the
-/// makespan improves. Returns the best makespan found.
+/// (distributing the halves over the least-loaded compute points) while
+/// the makespan improves. Returns the best makespan found and leaves
+/// `state` at the best round count.
+#[deprecated(note = "use dse::explore with TilingSpace + HillClimbExplorer")]
 pub fn greedy_tiling(
     hw: &Hardware,
     state: &mut MappingState,
@@ -57,53 +163,43 @@ pub fn greedy_tiling(
     sim_cfg: &SimConfig,
     max_rounds: usize,
 ) -> f64 {
-    let compute_points = hw.points_of_kind("compute");
-    let mut best = makespan(hw, state, evals, sim_cfg).unwrap_or(f64::INFINITY);
-    for _ in 0..max_rounds {
-        // heaviest compute task by uncontended demand
-        let heaviest = state
-            .graph
-            .iter()
-            .filter(|t| t.enabled && t.kind.is_compute())
-            .max_by(|a, b| {
-                let da = evals
-                    .demand(a, hw.entry(state.mapping.point_of(a.id).unwrap()))
-                    .total();
-                let db = evals
-                    .demand(b, hw.entry(state.mapping.point_of(b.id).unwrap()))
-                    .total();
-                da.total_cmp(&db)
-            })
-            .map(|t| t.id);
-        let Some(task) = heaviest else { break };
-        let Ok(tiles) = state.tile_task(task, &[2]) else {
+    let space = TilingSpace::new(hw, evals, state, max_rounds);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: 2 * (max_rounds + 1),
+        workers: 1,
+        sim: sim_cfg.clone(),
+        ..Default::default()
+    };
+    let explorer = HillClimbExplorer {
+        seed: 0,
+        from_initial: true,
+        restarts: false,
+    };
+    let Ok(report) = explore(&space, &objectives, &explorer, evals, &opts) else {
+        return f64::INFINITY;
+    };
+    let Some(best) = report.best() else {
+        return f64::INFINITY;
+    };
+    let best_score = best.objectives[0];
+    let rounds = best.candidate.0[0] as usize;
+    // drop the space's borrow of `state` before replaying the winning
+    // round count onto the caller's state
+    drop(report);
+    drop(space);
+    for _ in 0..rounds {
+        if !greedy_round(hw, state, evals) {
             break;
-        };
-        // place the two tiles on the two least-loaded points
-        let mut load: Vec<(PointId, usize)> = compute_points
-            .iter()
-            .map(|p| (*p, state.mapping.tasks_on(*p).len()))
-            .collect();
-        load.sort_by_key(|(_, l)| *l);
-        for (tile, (p, _)) in tiles.iter().zip(load.iter()) {
-            state.map_node(*tile, *p).ok();
-        }
-        match makespan(hw, state, evals, sim_cfg) {
-            Some(m) if m < best => best = m,
-            _ => {
-                // revert the tiling + placements
-                state.undo();
-                state.undo();
-                state.undo();
-                break;
-            }
         }
     }
-    best
+    best_score
 }
 
 /// Simulated-annealing placement search over `map_node` moves.
-/// Returns (best makespan, accepted moves).
+/// Returns (best makespan, accepted moves) and leaves `state` at the best
+/// placement found.
+#[deprecated(note = "use dse::explore with PlacementSpace + AnnealExplorer")]
 pub fn anneal_placement(
     hw: &Hardware,
     state: &mut MappingState,
@@ -111,46 +207,31 @@ pub fn anneal_placement(
     sim_cfg: &SimConfig,
     cfg: &SearchConfig,
 ) -> (f64, usize) {
-    let compute_points = hw.points_of_kind("compute");
-    let movable: Vec<_> = state
-        .graph
-        .iter()
-        .filter(|t| t.enabled && t.kind.is_compute())
-        .map(|t| t.id)
-        .collect();
-    let mut rng = Pcg::new(cfg.seed);
-    let mut current = match makespan(hw, state, evals, sim_cfg) {
-        Some(m) => m,
-        None => return (f64::INFINITY, 0),
+    let space = PlacementSpace::new(
+        "anneal-placement",
+        hw.clone(),
+        state.graph.clone(),
+        state.mapping.clone(),
+    );
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: cfg.iters + 1,
+        workers: 1,
+        sim: sim_cfg.clone(),
+        ..Default::default()
     };
-    let mut best = current;
-    let mut accepted = 0;
-    if movable.is_empty() || compute_points.len() < 2 {
-        return (best, 0);
-    }
-    for i in 0..cfg.iters {
-        let temp = cfg.init_temp * current * (1.0 - i as f64 / cfg.iters as f64) + 1e-9;
-        let task = *rng.choose(&movable);
-        let point = *rng.choose(&compute_points);
-        if state.mapping.point_of(task) == Some(point) {
-            continue;
-        }
-        if state.map_node(task, point).is_err() {
-            continue;
-        }
-        match makespan(hw, state, evals, sim_cfg) {
-            Some(m) if m <= current || rng.chance(((current - m) / temp).exp()) => {
-                current = m;
-                best = best.min(m);
-                accepted += 1;
-            }
-            _ => {
-                // state-control primitive: reject via undo
-                state.undo();
-            }
-        }
-    }
-    (best, accepted)
+    let explorer = AnnealExplorer {
+        seed: cfg.seed,
+        init_temp: cfg.init_temp,
+    };
+    let Ok(report) = explore(&space, &objectives, &explorer, evals, &opts) else {
+        return (f64::INFINITY, 0);
+    };
+    let Some(best) = report.best() else {
+        return (f64::INFINITY, 0);
+    };
+    space.apply(&best.candidate, &mut state.mapping);
+    (best.objectives[0], report.moves_accepted)
 }
 
 #[cfg(test)]
@@ -159,6 +240,7 @@ mod tests {
     use crate::hwir::{
         ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint,
     };
+    use crate::sim::simulate;
     use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
 
     fn hw(cores: usize) -> Hardware {
@@ -190,7 +272,19 @@ mod tests {
         st
     }
 
+    fn makespan(
+        hw: &Hardware,
+        state: &MappingState,
+        evals: &Registry,
+        sim_cfg: &SimConfig,
+    ) -> Option<f64> {
+        simulate(hw, &state.graph, &state.mapping, evals, sim_cfg)
+            .ok()
+            .map(|r| r.makespan)
+    }
+
     #[test]
+    #[allow(deprecated)]
     fn anneal_improves_degenerate_placement() {
         // 8 independent tasks all on one of 4 cores: annealing must spread
         // them and cut the makespan.
@@ -214,9 +308,13 @@ mod tests {
             best < before * 0.6,
             "anneal failed to improve: {before} -> {best}"
         );
+        // the caller's state now carries the best placement found
+        let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        assert!((after - best).abs() / best < 1e-9, "{after} vs {best}");
     }
 
     #[test]
+    #[allow(deprecated)]
     fn greedy_tiling_splits_heavy_task() {
         let hw = hw(4);
         let mut g = TaskGraph::new();
@@ -230,5 +328,22 @@ mod tests {
         let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
         let best = greedy_tiling(&hw, &mut st, &evals, &sim_cfg, 3);
         assert!(best < before, "{before} -> {best}");
+        // state was advanced to the winning round count
+        let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        assert!((after - best).abs() / best < 1e-9, "{after} vs {best}");
+    }
+
+    #[test]
+    fn tiling_space_round_zero_is_identity() {
+        let hw = hw(2);
+        let st = all_on_one_core(2, &hw);
+        let evals = Registry::standard();
+        let space = TilingSpace::new(&hw, &evals, &st, 2);
+        assert_eq!(space.size(), 3);
+        let d = space.materialize(&Candidate(vec![0])).unwrap();
+        assert_eq!(d.workload.graph.len(), st.graph.len());
+        let d1 = space.materialize(&Candidate(vec![1])).unwrap();
+        // one round replaces a task with two tiles
+        assert_eq!(d1.workload.graph.len(), st.graph.len() + 1);
     }
 }

@@ -4,7 +4,9 @@
 //! mldse info                                   artifact + registry status
 //! mldse simulate --arch dmc|gsm [--config N] [--seq N] [--pjrt] [--json]
 //! mldse decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N]
-//! mldse experiment <name>|all [--quick] [--csv]
+//! mldse experiment <name>|all [--quick] [--csv] | --list
+//! mldse explore --space FILE.json|--preset NAME [--explorer grid|random|hill|anneal]
+//!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
 //! mldse hardware --spec FILE                   build + describe a spec
 //! ```
 //!
@@ -15,8 +17,13 @@ use std::process::ExitCode;
 use mldse::arch::{DmcParams, GsmParams, MpmcParams};
 use mldse::coordinator::{Coordinator, EXPERIMENTS};
 use mldse::cost::Packaging;
+use mldse::dse::explore::{
+    explore, explorer_by_name, preset, preset_names, DesignSpace, Edp, ExploreOpts, Makespan,
+    Objective, ParamSpace,
+};
+use mldse::dse::parallel::default_workers;
 use mldse::sim::SimConfig;
-use mldse::util::error::Result;
+use mldse::util::error::{Context, Result};
 use mldse::util::json::{Json, JsonObj};
 use mldse::workloads::{
     dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, LlmConfig,
@@ -58,10 +65,47 @@ impl Args {
         self.flag(name) == Some("true")
     }
 
-    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
-        self.flag(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
+    /// Parse a numeric flag; a missing flag yields the default, an
+    /// unparsable value is an error naming the flag.
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| mldse::format_err!("--{name}: invalid value '{v}'")),
+        }
+    }
+
+    /// Reject flags the command does not define.
+    fn allow(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let valid = if allowed.is_empty() {
+            "none".to_string()
+        } else {
+            allowed
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        mldse::bail!(
+            "unknown flag{s} {list} for '{cmd}' (valid: {valid})",
+            s = if unknown.len() > 1 { "s" } else { "" },
+            list = unknown
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
     }
 }
 
@@ -74,10 +118,11 @@ fn main() -> ExitCode {
     let cmd = argv[0].clone();
     let args = Args::parse(&argv[1..]);
     let result = match cmd.as_str() {
-        "info" => cmd_info(),
+        "info" => cmd_info(&args),
         "simulate" => cmd_simulate(&args),
         "decode" => cmd_decode(&args),
         "experiment" => cmd_experiment(&args),
+        "explore" => cmd_explore(&args),
         "hardware" => cmd_hardware(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -106,13 +151,18 @@ fn print_usage() {
            info                                  runtime + artifact status\n\
            simulate --arch dmc|gsm [--config 1-4] [--seq N] [--pjrt] [--json] [--trace out.json]\n\
            decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N] [--packaging mcm|2.5d]\n\
-           experiment <{}>|all [--quick] [--csv]\n\
+           experiment <{experiments}>|all [--quick] [--csv] | --list\n\
+           explore --space FILE.json|--preset NAME [--explorer grid|random|hill|anneal]\n\
+                   [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
+                   (presets: {presets})\n\
            hardware --spec FILE.json\n",
-        EXPERIMENTS.join("|")
+        experiments = EXPERIMENTS.join("|"),
+        presets = preset_names().join(", ")
     );
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    args.allow("info", &[])?;
     println!("mldse {}", env!("CARGO_PKG_VERSION"));
     let art = mldse::runtime::artifacts_dir();
     println!("artifacts dir: {}", art.display());
@@ -128,13 +178,18 @@ fn cmd_info() -> Result<()> {
         }
     }
     println!("experiments: {}", EXPERIMENTS.join(", "));
+    println!("explore presets: {}", preset_names().join(", "));
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    args.allow(
+        "simulate",
+        &["arch", "config", "seq", "pjrt", "json", "trace", "iterations"],
+    )?;
     let arch = args.flag("arch").unwrap_or("dmc");
-    let config = args.num("config", 2usize);
-    let seq = args.num("seq", 2048u32);
+    let config = args.num("config", 2usize)?;
+    let seq = args.num("seq", 2048u32)?;
     let cfg = LlmConfig::gpt3_6_7b();
     let workload = match arch {
         "dmc" => dmc_prefill(&cfg, seq, &DmcParams::table2(config)),
@@ -147,7 +202,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         Coordinator::standard()
     };
     let sim_cfg = SimConfig {
-        iterations: args.num("iterations", 1u32),
+        iterations: args.num("iterations", 1u32)?,
         collect_timeline: args.flag("trace").is_some(),
         ..Default::default()
     };
@@ -193,15 +248,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_decode(args: &Args) -> Result<()> {
+    args.allow("decode", &["mode", "pos", "layers", "cpp", "packaging"])?;
     let mode = args.flag("mode").unwrap_or("spatial");
-    let pos = args.num("pos", 2048u32);
-    let layers = args.num("layers", 8u32);
+    let pos = args.num("pos", 2048u32)?;
+    let layers = args.num("layers", 8u32)?;
     let cfg = LlmConfig::gpt3_6_7b();
     let coord = Coordinator::standard();
     let w = match mode {
         "temporal" => dmc_decode_temporal(&cfg, pos, layers, &DmcParams::default()),
         "spatial" => {
-            let cpp = args.num("cpp", 2usize);
+            let cpp = args.num("cpp", 2usize)?;
             let pkg = match args.flag("packaging").unwrap_or("mcm") {
                 "2.5d" | "interposer" => Packaging::Interposer2_5D,
                 _ => Packaging::Mcm,
@@ -220,11 +276,24 @@ fn cmd_decode(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
+    args.allow("experiment", &["quick", "csv", "list"])?;
+    if args.bool_flag("list") {
+        for n in EXPERIMENTS {
+            println!("{n}");
+        }
+        return Ok(());
+    }
     let name = args
         .positional
         .first()
         .map(|s| s.as_str())
         .unwrap_or("all");
+    if name != "all" && !EXPERIMENTS.contains(&name) {
+        mldse::bail!(
+            "unknown experiment '{name}'; valid: {}, or 'all' (see `mldse experiment --list`)",
+            EXPERIMENTS.join(", ")
+        );
+    }
     let quick = args.bool_flag("quick");
     let coord = Coordinator::standard();
     let names: Vec<&str> = if name == "all" {
@@ -246,7 +315,69 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_explore(args: &Args) -> Result<()> {
+    args.allow(
+        "explore",
+        &[
+            "space", "preset", "explorer", "budget", "workers", "seed", "json", "no-cache", "top",
+        ],
+    )?;
+    let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
+        match (args.flag("space"), args.flag("preset")) {
+            (Some(_), Some(_)) => {
+                mldse::bail!("explore: --space and --preset are mutually exclusive")
+            }
+            (Some(path), None) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading space file '{path}'"))?;
+                let s = ParamSpace::from_json(&text)
+                    .with_context(|| format!("parsing space file '{path}'"))?;
+                let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(Edp)];
+                (Box::new(s), objs)
+            }
+            (None, Some(name)) => preset(name)?,
+            (None, None) => mldse::bail!(
+                "explore: --space FILE.json or --preset NAME required (presets: {})",
+                preset_names().join(", ")
+            ),
+        };
+    let explorer_name = args.flag("explorer").unwrap_or("grid");
+    let seed = args.num("seed", 0xD5Eu64)?;
+    let explorer = explorer_by_name(explorer_name, seed)?;
+    let default_budget = if explorer_name == "grid" {
+        space.size().min(1024) as usize
+    } else {
+        64
+    };
+    let opts = ExploreOpts {
+        budget: args.num("budget", default_budget)?,
+        workers: args.num("workers", default_workers())?,
+        cache: !args.bool_flag("no-cache"),
+        ..Default::default()
+    };
+    let top = args.num("top", 10usize)?;
+    let registry = mldse::eval::Registry::standard();
+    let report = explore(
+        space.as_ref(),
+        &objectives,
+        explorer.as_ref(),
+        &registry,
+        &opts,
+    )?;
+    if args.bool_flag("json") {
+        println!("{}", report.to_json().to_pretty());
+    } else {
+        println!("{}", report.summary_table().render());
+        println!("{}", report.pareto_table().render());
+        if top > 0 {
+            println!("{}", report.top_table(top).render());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_hardware(args: &Args) -> Result<()> {
+    args.allow("hardware", &["spec"])?;
     let path = args
         .flag("spec")
         .ok_or_else(|| mldse::format_err!("--spec FILE required"))?;
