@@ -1,18 +1,34 @@
-//! Bench E13 (§7.2 speed claim): simulate 240 hardware configurations of
-//! the DMC template on the GPT3-6.7B prefill layer and report wall time
-//! (paper: 240 configurations in 76 s). Also reports raw simulator event
-//! throughput on a single large workload.
+//! Bench E13 (§7.2 speed claim) plus the simulator-throughput trajectory.
+//!
+//! Three tiers, all recorded into a machine-readable `BENCH_sim.json` at
+//! the repo root (uploaded as a CI artifact) so the trajectory is tracked
+//! PR over PR:
+//!
+//! 1. **configs** — 240 DMC hardware configurations on the GPT3-6.7B
+//!    prefill layer (paper: 240 configurations in 76 s);
+//! 2. **prefill** — raw engine event throughput on one large workload;
+//! 3. **contended NoC** — a mesh-NoC flow storm with mixed routed and
+//!    routeless transfers, run under both the incremental contention
+//!    tracker and the legacy full per-event recompute
+//!    (`SimConfig::incremental = false`). The reported speedup is the
+//!    headline number for the incremental-contention overhaul.
 
 #[path = "common/mod.rs"]
 mod common;
 
+use mldse::arch::DmcParams;
 use mldse::dse::experiments::{sim_speed, Ctx};
 use mldse::eval::Registry;
 use mldse::sim::{simulate, SimConfig};
-use mldse::workloads::{dmc_prefill, LlmConfig};
+use mldse::util::json::{Json, JsonObj};
+use mldse::workloads::{contended_noc, dmc_prefill, LlmConfig};
 
 fn main() {
-    let ctx = if common::quick() { Ctx::quick() } else { Ctx::standard() };
+    let quick = common::quick();
+    let ctx = if quick { Ctx::quick() } else { Ctx::standard() };
+    let mut out = JsonObj::new();
+    out.insert("bench", "sim_speed".into());
+    out.insert("quick", quick.into());
 
     // --- headline: 240 configurations ---
     let (table, secs) = sim_speed(&ctx);
@@ -21,15 +37,17 @@ fn main() {
         "[bench] sim_speed: 240 configs in {secs:.2}s ({:.1} configs/s; paper: 240 in 76s)",
         240.0 / secs
     );
+    out.insert("configs_240_wall_s", secs.into());
+    out.insert("configs_per_s", (240.0 / secs).into());
 
     // --- raw engine throughput on one workload ---
-    let cfg = if common::quick() {
+    let cfg = if quick {
         LlmConfig { hidden: 512, heads: 8, ffn: 2048, layers: 8, elem_bytes: 2 }
     } else {
         LlmConfig::gpt3_6_7b()
     };
-    let seq = if common::quick() { 256 } else { 2048 };
-    let params = mldse::arch::DmcParams::table2(2);
+    let seq = if quick { 256 } else { 2048 };
+    let params = DmcParams::table2(2).expect("config in 1..=4");
     let w = dmc_prefill(&cfg, seq, &params);
     let evals = Registry::standard();
     let mut completed = 0u64;
@@ -42,4 +60,46 @@ fn main() {
         completed as f64 / median,
         completed
     );
+    out.insert("prefill_wall_s", median.into());
+    out.insert("prefill_events_per_s", (completed as f64 / median).into());
+    out.insert("prefill_tasks", completed.into());
+
+    // --- contended NoC: incremental vs full per-event recompute ---
+    let (flows, grid, iters) = if quick {
+        (96usize, (4usize, 4usize), 2u32)
+    } else {
+        (384, (8, 8), 4)
+    };
+    let wc = contended_noc(flows, grid, 0xBE9C);
+    let base = SimConfig { iterations: iters, ..Default::default() };
+    let mut done_incr = 0u64;
+    let incr_s = common::bench("contended NoC (incremental)", 5, || {
+        let r = simulate(&wc.hw, &wc.graph, &wc.mapping, &evals, &base).unwrap();
+        assert_eq!(r.unfinished, 0);
+        done_incr = r.completed;
+    });
+    let full_cfg = SimConfig { incremental: false, ..base };
+    let mut done_full = 0u64;
+    let full_s = common::bench("contended NoC (full recompute)", 5, || {
+        let r = simulate(&wc.hw, &wc.graph, &wc.mapping, &evals, &full_cfg).unwrap();
+        done_full = r.completed;
+    });
+    assert_eq!(done_incr, done_full, "paths must complete the same work");
+    let ev_incr = done_incr as f64 / incr_s;
+    let ev_full = done_full as f64 / full_s;
+    println!(
+        "[bench] contended NoC ({flows} flows, {}x{} mesh, {iters} iters): \
+         {ev_incr:.0} ev/s incremental vs {ev_full:.0} ev/s full recompute ({:.2}x)",
+        grid.0,
+        grid.1,
+        ev_incr / ev_full
+    );
+    out.insert("contended_flows", flows.into());
+    out.insert("contended_events_per_s_incremental", ev_incr.into());
+    out.insert("contended_events_per_s_full", ev_full.into());
+    out.insert("contended_speedup", (ev_incr / ev_full).into());
+
+    let doc = Json::Obj(out).to_pretty();
+    std::fs::write("BENCH_sim.json", &doc).expect("write BENCH_sim.json");
+    println!("[bench] wrote BENCH_sim.json");
 }

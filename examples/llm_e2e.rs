@@ -18,10 +18,6 @@
 //! make artifacts && cargo run --release --example llm_e2e [-- --quick]
 //! ```
 
-// The mapping tier deliberately drives the legacy `anneal_placement` shim
-// to prove it still works; new code should use `dse::explore` directly.
-#![allow(deprecated)]
-
 use mldse::arch::{DmcParams, MpmcParams};
 use mldse::coordinator::Coordinator;
 use mldse::cost::{AreaModel, CostModel, Packaging};
@@ -129,8 +125,9 @@ fn main() -> mldse::util::error::Result<()> {
     // ---------------- mapping tier ----------------
     println!("[4/4] mapping tier: annealing placement search (Table-1 primitives)");
     {
-        use mldse::dse::search::{anneal_placement, SearchConfig};
-        use mldse::mapping::MappingState;
+        use mldse::dse::explore::{
+            explore, AnnealExplorer, ExploreOpts, Makespan, Objective, PlacementSpace,
+        };
         // search over a single decode layer's mapping on one chiplet
         let mut p = MpmcParams::paper(best_cpp, Packaging::Mcm);
         p.chiplet.noc_bandwidth = best_nb;
@@ -139,26 +136,26 @@ fn main() -> mldse::util::error::Result<()> {
             p.chiplet.grid = grid;
         }
         let w = mpmc_decode_spatial(&cfg, pos, 1, &p);
-        let hw = w.hw;
-        let mut st = MappingState::new(w.graph);
-        st.mapping = w.mapping;
-        st.history_limit = 4;
-        let sim_cfg = SimConfig::default();
         let iters = if quick { 20 } else { 40 };
-        let (best_map, accepted) = anneal_placement(
-            &hw,
-            &mut st,
-            coord.registry(),
-            &sim_cfg,
-            &SearchConfig {
-                iters,
-                ..Default::default()
-            },
-        );
+        let space = PlacementSpace::new("decode-layer-placement", w.hw, w.graph, w.mapping);
+        let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+        let opts = ExploreOpts {
+            budget: iters + 1,
+            workers: 1,
+            ..Default::default()
+        };
+        let explorer = AnnealExplorer {
+            seed: 0xD5E,
+            init_temp: 0.1,
+        };
+        let report = explore(&space, &objectives, &explorer, coord.registry(), &opts)?;
+        let best = report
+            .best()
+            .ok_or_else(|| mldse::format_err!("placement search produced no evaluations"))?;
         println!(
             "      single-layer mapping search: best {} cycles after {} accepted moves",
-            fmt(best_map),
-            accepted
+            fmt(best.objectives[0]),
+            report.moves_accepted
         );
     }
 

@@ -12,6 +12,7 @@ use crate::hwir::{
     CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
     Topology,
 };
+use crate::util::error::Result;
 
 /// DMC design parameters (bandwidths in bytes/cycle, capacities in bytes).
 #[derive(Debug, Clone, PartialEq)]
@@ -64,9 +65,13 @@ impl DmcParams {
     }
 
     /// The four Table-2 compute-memory configurations (1-indexed).
-    pub fn table2(config: usize) -> DmcParams {
+    ///
+    /// The index arrives from user input (`mldse simulate --config`, JSON
+    /// space files), so out-of-range values are a configuration *error*,
+    /// never a panic.
+    pub fn table2(config: usize) -> Result<DmcParams> {
         let base = DmcParams::default();
-        match config {
+        Ok(match config {
             1 => DmcParams {
                 lmem_capacity: 1 << 20,
                 systolic: (128, 128),
@@ -91,8 +96,8 @@ impl DmcParams {
                 vector_lanes: 128,
                 ..base
             },
-            other => panic!("table2 config {other} out of range 1..=4"),
-        }
+            other => crate::bail!("DMC table2 config {other} out of range 1..=4"),
+        })
     }
 
     /// The core-array `SpaceMatrix` (chip without board/DRAM wrapper).
@@ -213,13 +218,13 @@ mod tests {
 
     #[test]
     fn table2_configs_distinct_and_total_memory() {
-        let c2 = DmcParams::table2(2);
+        let c2 = DmcParams::table2(2).unwrap();
         assert_eq!(c2.total_lmem(), 256 << 20); // 2MB * 128 = 256MB
-        let c3 = DmcParams::table2(3);
+        let c3 = DmcParams::table2(3).unwrap();
         assert_eq!(c3.total_lmem(), 320 << 20); // 2.5MB * 128 = 320MB (IPU-like)
         for i in 1..=4 {
             for j in i + 1..=4 {
-                assert_ne!(DmcParams::table2(i), DmcParams::table2(j));
+                assert_ne!(DmcParams::table2(i).unwrap(), DmcParams::table2(j).unwrap());
             }
         }
     }
@@ -237,14 +242,17 @@ mod tests {
     #[test]
     fn area_monotone_in_systolic() {
         let m = AreaModel::default();
-        let small = DmcParams::table2(4).area(&m).3;
-        let big = DmcParams::table2(1).area(&m).3;
+        let small = DmcParams::table2(4).unwrap().area(&m).3;
+        let big = DmcParams::table2(1).unwrap().area(&m).3;
         assert!(big > small);
     }
 
     #[test]
-    #[should_panic(expected = "out of range")]
-    fn table2_bad_index() {
-        DmcParams::table2(0);
+    fn table2_out_of_range_is_an_error() {
+        for bad in [0usize, 5, 99] {
+            let err = DmcParams::table2(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("out of range"), "unexpected message: {msg}");
+        }
     }
 }

@@ -12,6 +12,7 @@ use crate::hwir::{
     CommAttrs, ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
     Topology,
 };
+use crate::util::error::Result;
 
 /// GSM design parameters (bandwidths in bytes/cycle, capacities in bytes).
 #[derive(Debug, Clone, PartialEq)]
@@ -57,9 +58,13 @@ impl Default for GsmParams {
 
 impl GsmParams {
     /// The four Table-2 compute-memory configurations (1-indexed).
-    pub fn table2(config: usize) -> GsmParams {
+    ///
+    /// The index arrives from user input (`mldse simulate --config`, JSON
+    /// space files), so out-of-range values are a configuration *error*,
+    /// never a panic.
+    pub fn table2(config: usize) -> Result<GsmParams> {
         let base = GsmParams::default();
-        match config {
+        Ok(match config {
             1 => GsmParams {
                 l2_capacity: 256 << 20,
                 l1_capacity: 128 << 10,
@@ -88,8 +93,8 @@ impl GsmParams {
                 vector_lanes: 128,
                 ..base
             },
-            other => panic!("table2 config {other} out of range 1..=4"),
-        }
+            other => crate::bail!("GSM table2 config {other} out of range 1..=4"),
+        })
     }
 
     /// Build `board -> { SM array, L2, DRAM }`.
@@ -208,8 +213,17 @@ mod tests {
 
     #[test]
     fn table2_l2_sizes() {
-        assert_eq!(GsmParams::table2(1).l2_capacity, 256 << 20);
-        assert_eq!(GsmParams::table2(4).l2_capacity, 32 << 20);
+        assert_eq!(GsmParams::table2(1).unwrap().l2_capacity, 256 << 20);
+        assert_eq!(GsmParams::table2(4).unwrap().l2_capacity, 32 << 20);
+    }
+
+    #[test]
+    fn table2_out_of_range_is_an_error() {
+        for bad in [0usize, 5, 42] {
+            let err = GsmParams::table2(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("out of range"), "unexpected message: {msg}");
+        }
     }
 
     #[test]
@@ -217,8 +231,8 @@ mod tests {
         // paper §7.3.3 insight (1): register files burn area, so GSM's
         // total on-chip memory is smaller at a comparable chip area.
         use crate::arch::dmc::DmcParams;
-        let gsm = GsmParams::table2(2);
-        let dmc = DmcParams::table2(2);
+        let gsm = GsmParams::table2(2).unwrap();
+        let dmc = DmcParams::table2(2).unwrap();
         let gsm_mem = gsm.l2_capacity + gsm.sms as u64 * (gsm.l1_capacity + gsm.regfile_capacity);
         assert!(gsm_mem < dmc.total_lmem());
     }
@@ -226,8 +240,8 @@ mod tests {
     #[test]
     fn area_dominated_by_l2_for_big_configs() {
         let m = AreaModel::default();
-        let a1 = GsmParams::table2(1).area(&m).3; // 256MB L2
-        let a4 = GsmParams::table2(4).area(&m).3; // 32MB L2, big arrays
+        let a1 = GsmParams::table2(1).unwrap().area(&m).3; // 256MB L2
+        let a4 = GsmParams::table2(4).unwrap().area(&m).3; // 32MB L2, big arrays
         assert!(a1 > 0.0 && a4 > 0.0);
     }
 }

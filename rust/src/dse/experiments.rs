@@ -115,7 +115,7 @@ pub fn table2(ctx: &Ctx) -> Vec<Table> {
         &["cfg", "lmem", "systolic", "vec", "ctrl", "ic", "total", "cycles", "flops/cyc"],
     );
     for i in 1..=4 {
-        let mut p = DmcParams::table2(i);
+        let mut p = DmcParams::table2(i).expect("config in 1..=4");
         p.grid = ctx.dmc_grid();
         let (_, ctrl, ic, total) = p.area(&area);
         let w = dmc_prefill(&cfg, seq, &p);
@@ -139,7 +139,7 @@ pub fn table2(ctx: &Ctx) -> Vec<Table> {
         &["cfg", "L2", "L1", "systolic", "vec", "total", "cycles", "flops/cyc"],
     );
     for i in 1..=4 {
-        let mut p = GsmParams::table2(i);
+        let mut p = GsmParams::table2(i).expect("config in 1..=4");
         p.sms = ctx.sms();
         let (_, _, _, total) = p.area(&area);
         let w = gsm_prefill(&cfg, seq, &p);
@@ -213,7 +213,7 @@ pub fn fig9_gsm(ctx: &Ctx) -> Vec<Table> {
     let l1_bws: &[f64] = if ctx.quick { &[32.0, 128.0] } else { &[16.0, 32.0, 64.0, 128.0, 256.0] };
     let l2_lats: &[u64] = if ctx.quick { &[20, 80] } else { &[10, 20, 40, 80, 160] };
     for c in [2usize, 3] {
-        let mut base = GsmParams::table2(c);
+        let mut base = GsmParams::table2(c).expect("config in 1..=4");
         base.sms = ctx.sms();
         for bw in l2_bws {
             let p = gsm_with(&base, *bw, base.l1_bandwidth, base.l2_latency, &area);
@@ -301,7 +301,7 @@ impl DmcSweepSpace {
     /// (config, parameter name, swept value, resolved params).
     fn describe(&self, c: &Candidate) -> (usize, &'static str, f64, DmcParams) {
         let cfg = self.axes[0].values.num(c.0[0] as usize) as usize;
-        let mut base = DmcParams::table2(cfg);
+        let mut base = DmcParams::table2(cfg).expect("config in 1..=4");
         base.grid = self.grid;
         let vi = c.0[2] as usize;
         let (name, val, params) = match c.0[1] {
@@ -379,7 +379,7 @@ impl DesignSpace for GsmBwSpace {
         crate::ensure!(self.in_bounds(c), "candidate out of bounds for fig9-gsm");
         let bw = self.axes[0].values.num(c.0[0] as usize);
         let cfg = self.axes[1].values.num(c.0[1] as usize) as usize;
-        let mut base = GsmParams::table2(cfg);
+        let mut base = GsmParams::table2(cfg).expect("config in 1..=4");
         base.sms = self.sms;
         let p = base.with_fixed_area(bw, base.l1_bandwidth, base.l2_latency, &self.area);
         Ok(Design::new(gsm_prefill(&self.llm, self.seq, &p)))
@@ -433,7 +433,7 @@ pub fn fig9_cross(ctx: &Ctx) -> Vec<Table> {
         &["arch", "cfg", "area mm2", "onchip MB", "agg lmem B/cyc", "cycles", "flops/cyc"],
     );
     for c in 1..=4usize {
-        let mut d = DmcParams::table2(c);
+        let mut d = DmcParams::table2(c).expect("config in 1..=4");
         d.grid = ctx.dmc_grid();
         let w = dmc_prefill(&cfg, seq, &d);
         let (cycles, thpt) = sim_prefill(ctx, &w, flops);
@@ -448,7 +448,7 @@ pub fn fig9_cross(ctx: &Ctx) -> Vec<Table> {
         ]);
     }
     for c in 1..=4usize {
-        let mut g = GsmParams::table2(c);
+        let mut g = GsmParams::table2(c).expect("config in 1..=4");
         g.sms = ctx.sms();
         let w = gsm_prefill(&cfg, seq, &g);
         let (cycles, thpt) = sim_prefill(ctx, &w, flops);
@@ -616,14 +616,14 @@ pub fn fig8_kernel(ctx: &Ctx) -> Vec<Table> {
         "Fig 8(a-f): kernel latency, MLDSE sim vs measurement proxy (rel err)",
         &["arch", "op", "size", "mldse cycles", "reference", "rel err"],
     );
-    let mut dmc = DmcParams::table2(2);
+    let mut dmc = DmcParams::table2(2).expect("config in 1..=4");
     dmc.grid = ctx.dmc_grid();
     let dmc_hw = dmc.build();
     let dmc_entry = dmc_hw
         .entries()
         .find(|e| e.point.kind.is_compute())
         .unwrap();
-    let mut gsm = GsmParams::table2(2);
+    let mut gsm = GsmParams::table2(2).expect("config in 1..=4");
     gsm.sms = ctx.sms();
     let gsm_hw = gsm.build();
     let gsm_entry = gsm_hw
@@ -891,7 +891,7 @@ pub fn sim_speed(ctx: &Ctx) -> (Table, f64) {
     assert_eq!(points.len(), 240);
     let start = std::time::Instant::now();
     let results = run_parallel(&points, ctx.workers, |(c, bw, nb, lt)| {
-        let mut base = DmcParams::table2(*c);
+        let mut base = DmcParams::table2(*c).expect("config in 1..=4");
         base.grid = ctx.dmc_grid();
         let p = dmc_with(&base, *bw, *nb, *lt, &area);
         let w = dmc_prefill(&cfg, seq, &p);

@@ -155,7 +155,7 @@ impl Explorer for HillClimbExplorer {
 }
 
 /// Simulated annealing over single-digit moves with a linear temperature
-/// decay proportional to the current score (the `anneal_placement`
+/// decay proportional to the current score (the legacy placement-
 /// schedule, generalized to any design space).
 #[derive(Debug, Clone, Copy)]
 pub struct AnnealExplorer {
@@ -185,7 +185,7 @@ impl Explorer for AnnealExplorer {
         }
         let mut rng = Pcg::new(self.seed);
         // Always score the starting point, even in degenerate spaces with
-        // no axes — callers (e.g. the `anneal_placement` shim) rely on the
+        // no axes — callers driving PlacementSpace directly rely on the
         // baseline appearing in the log.
         let Some(scores) = engine.eval_one(&space.initial()) else {
             return Ok(());

@@ -423,7 +423,8 @@ impl ParamSpace {
     }
 
     /// Resolved template parameters for a candidate (no hardware build).
-    fn dmc_params(&self, c: &Candidate) -> DmcParams {
+    /// Errors on out-of-range `cfg` values (user-supplied space files).
+    fn dmc_params(&self, c: &Candidate) -> Result<DmcParams> {
         let mut cfg_idx = 2usize;
         let mut lmem_bw = None;
         let mut noc_bw = None;
@@ -438,17 +439,17 @@ impl ParamSpace {
                 _ => {}
             }
         }
-        let mut base = DmcParams::table2(cfg_idx);
+        let mut base = DmcParams::table2(cfg_idx)?;
         base.grid = self.dmc_grid;
-        base.with_fixed_area(
+        Ok(base.with_fixed_area(
             lmem_bw.unwrap_or(base.lmem_bandwidth),
             noc_bw.unwrap_or(base.noc_bandwidth),
             lmem_lat.unwrap_or(base.lmem_latency),
             &self.area,
-        )
+        ))
     }
 
-    fn gsm_params(&self, c: &Candidate) -> GsmParams {
+    fn gsm_params(&self, c: &Candidate) -> Result<GsmParams> {
         let mut cfg_idx = 2usize;
         let mut l2_bw = None;
         let mut l1_bw = None;
@@ -463,14 +464,14 @@ impl ParamSpace {
                 _ => {}
             }
         }
-        let mut base = GsmParams::table2(cfg_idx);
+        let mut base = GsmParams::table2(cfg_idx)?;
         base.sms = self.gsm_sms;
-        base.with_fixed_area(
+        Ok(base.with_fixed_area(
             l2_bw.unwrap_or(base.l2_bandwidth),
             l1_bw.unwrap_or(base.l1_bandwidth),
             l2_lat.unwrap_or(base.l2_latency),
             &self.area,
-        )
+        ))
     }
 }
 
@@ -487,13 +488,13 @@ impl DesignSpace for ParamSpace {
         crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
         match self.arch {
             ArchKind::Dmc => {
-                let p = self.dmc_params(c);
+                let p = self.dmc_params(c)?;
                 let mut d = Design::new(dmc_prefill(&self.llm, self.seq, &p));
                 d.area_mm2 = Some(p.area(&self.area).3);
                 Ok(d)
             }
             ArchKind::Gsm => {
-                let p = self.gsm_params(c);
+                let p = self.gsm_params(c)?;
                 let mut d = Design::new(gsm_prefill(&self.llm, self.seq, &p));
                 d.area_mm2 = Some(p.area(&self.area).3);
                 Ok(d)
@@ -656,7 +657,7 @@ impl PlacementSpace {
     }
 
     /// Write a candidate's placement into an external mapping (used by the
-    /// legacy `anneal_placement` shim to update the caller's state).
+    /// annealing-placement flow to update the caller's state).
     pub fn apply(&self, c: &Candidate, mapping: &mut Mapping) {
         for (i, t) in self.movable.iter().enumerate() {
             mapping.map(*t, self.points[c.0[i] as usize]);
@@ -874,6 +875,22 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown axis"), "{msg}");
         assert!(msg.contains("lmem_bw"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_cfg_is_an_error_not_a_panic() {
+        // user-supplied space files with bad table2 configs must surface
+        // as CLI errors, both at parse time and at materialization
+        let err = ParamSpace::from_json(
+            r#"{"arch": "dmc", "quick": true, "axes": {"cfg": [9]}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("cfg"), "{err:#}");
+        let err = ParamSpace::from_json(
+            r#"{"arch": "gsm", "quick": true, "axes": {"cfg": [0]}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("cfg"), "{err:#}");
     }
 
     #[test]

@@ -13,8 +13,8 @@
 //!   makespan, cost), [`explore::Explorer`] (grid / random / hill-climb /
 //!   simulated annealing) and the batched, memoized evaluation
 //!   [`explore::Engine`] producing [`explore::ExplorationReport`]s.
-//! * [`search`] — legacy mapping searchers, kept as thin deprecated shims
-//!   over [`explore`]'s `PlacementSpace`/`TilingSpace`.
+//! * [`search`] — the greedy graph-transformation space
+//!   ([`search::TilingSpace`]) driven through [`explore`].
 //! * [`experiments`] — every table and figure of the paper's evaluation;
 //!   the grid sweeps and the mapping search run through [`explore`].
 
@@ -27,5 +27,4 @@ pub mod search;
 pub use experiments::Ctx;
 pub use parallel::run_parallel;
 pub use report::{fmt, Table};
-#[allow(deprecated)]
-pub use search::{anneal_placement, greedy_tiling, SearchConfig};
+pub use search::TilingSpace;

@@ -1,47 +1,22 @@
 //! Mapping-strategy search built from the Table-1 primitives (paper §5.2).
 //!
-//! The original hand-coded searchers are now thin deprecated shims over
-//! the [`explore`](super::explore) API:
-//!
-//! * [`greedy_tiling`] — graph-transformation search, ported as
-//!   [`TilingSpace`] (one `rounds` axis whose value applies that many
-//!   greedy split-and-spread rounds) climbed by
-//!   [`HillClimbExplorer`](super::explore::HillClimbExplorer).
-//! * [`anneal_placement`] — task-assignment search, ported as
-//!   [`PlacementSpace`](super::explore::PlacementSpace) driven by
-//!   [`AnnealExplorer`](super::explore::AnnealExplorer).
+//! The graph-transformation search lives here as [`TilingSpace`] — one
+//! `rounds` axis whose value applies that many greedy split-and-spread
+//! rounds — typically climbed by
+//! [`HillClimbExplorer`](super::explore::HillClimbExplorer). The
+//! task-assignment search is
+//! [`PlacementSpace`](super::explore::PlacementSpace) driven by
+//! [`AnnealExplorer`](super::explore::AnnealExplorer). (The legacy
+//! `greedy_tiling`/`anneal_placement` shims over these spaces were
+//! deprecated one PR cycle ago and have been removed.)
 
 use crate::eval::Registry;
 use crate::hwir::{Hardware, PointId};
 use crate::mapping::MappingState;
-use crate::sim::SimConfig;
 use crate::util::error::Result;
 
-use super::explore::{
-    explore, AnnealExplorer, Axis, AxisKind, Candidate, Design, DesignSpace, ExploreOpts,
-    HillClimbExplorer, Makespan, Objective, PlacementSpace,
-};
+use super::explore::{Axis, AxisKind, Candidate, Design, DesignSpace};
 use crate::workloads::Workload;
-
-/// Search configuration.
-#[derive(Debug, Clone)]
-pub struct SearchConfig {
-    pub seed: u64,
-    /// Annealing iterations.
-    pub iters: usize,
-    /// Initial temperature as a fraction of the initial makespan.
-    pub init_temp: f64,
-}
-
-impl Default for SearchConfig {
-    fn default() -> Self {
-        SearchConfig {
-            seed: 0xD5E,
-            iters: 60,
-            init_temp: 0.1,
-        }
-    }
-}
 
 /// One greedy tiling round: split the most expensive enabled compute task
 /// 2-way and spread the halves over the two least-loaded compute points.
@@ -118,8 +93,8 @@ impl<'a> TilingSpace<'a> {
         state
     }
 
-    /// Apply candidate `c`'s rounds to an external state (used by the
-    /// legacy shim to update the caller's `MappingState` in place).
+    /// Apply candidate `c`'s rounds to an external state (updates the
+    /// caller's `MappingState` in place after a search picks a winner).
     pub fn apply(&self, c: &Candidate, state: &mut MappingState) {
         for _ in 0..c.0[0] {
             if !greedy_round(self.hw, state, self.evals) {
@@ -151,96 +126,15 @@ impl DesignSpace for TilingSpace<'_> {
     }
 }
 
-/// Greedy tiling search: split the most expensive compute task 2-way
-/// (distributing the halves over the least-loaded compute points) while
-/// the makespan improves. Returns the best makespan found and leaves
-/// `state` at the best round count.
-#[deprecated(note = "use dse::explore with TilingSpace + HillClimbExplorer")]
-pub fn greedy_tiling(
-    hw: &Hardware,
-    state: &mut MappingState,
-    evals: &Registry,
-    sim_cfg: &SimConfig,
-    max_rounds: usize,
-) -> f64 {
-    let space = TilingSpace::new(hw, evals, state, max_rounds);
-    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
-    let opts = ExploreOpts {
-        budget: 2 * (max_rounds + 1),
-        workers: 1,
-        sim: sim_cfg.clone(),
-        ..Default::default()
-    };
-    let explorer = HillClimbExplorer {
-        seed: 0,
-        from_initial: true,
-        restarts: false,
-    };
-    let Ok(report) = explore(&space, &objectives, &explorer, evals, &opts) else {
-        return f64::INFINITY;
-    };
-    let Some(best) = report.best() else {
-        return f64::INFINITY;
-    };
-    let best_score = best.objectives[0];
-    let rounds = best.candidate.0[0] as usize;
-    // drop the space's borrow of `state` before replaying the winning
-    // round count onto the caller's state
-    drop(report);
-    drop(space);
-    for _ in 0..rounds {
-        if !greedy_round(hw, state, evals) {
-            break;
-        }
-    }
-    best_score
-}
-
-/// Simulated-annealing placement search over `map_node` moves.
-/// Returns (best makespan, accepted moves) and leaves `state` at the best
-/// placement found.
-#[deprecated(note = "use dse::explore with PlacementSpace + AnnealExplorer")]
-pub fn anneal_placement(
-    hw: &Hardware,
-    state: &mut MappingState,
-    evals: &Registry,
-    sim_cfg: &SimConfig,
-    cfg: &SearchConfig,
-) -> (f64, usize) {
-    let space = PlacementSpace::new(
-        "anneal-placement",
-        hw.clone(),
-        state.graph.clone(),
-        state.mapping.clone(),
-    );
-    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
-    let opts = ExploreOpts {
-        budget: cfg.iters + 1,
-        workers: 1,
-        sim: sim_cfg.clone(),
-        ..Default::default()
-    };
-    let explorer = AnnealExplorer {
-        seed: cfg.seed,
-        init_temp: cfg.init_temp,
-    };
-    let Ok(report) = explore(&space, &objectives, &explorer, evals, &opts) else {
-        return (f64::INFINITY, 0);
-    };
-    let Some(best) = report.best() else {
-        return (f64::INFINITY, 0);
-    };
-    space.apply(&best.candidate, &mut state.mapping);
-    (best.objectives[0], report.moves_accepted)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hwir::{
-        ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint,
+    use crate::dse::explore::{
+        explore, AnnealExplorer, ExploreOpts, HillClimbExplorer, Makespan, Objective,
+        PlacementSpace,
     };
-    use crate::sim::simulate;
+    use crate::hwir::{ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint};
+    use crate::sim::{simulate, SimConfig};
     use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
 
     fn hw(cores: usize) -> Hardware {
@@ -284,38 +178,50 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
     fn anneal_improves_degenerate_placement() {
-        // 8 independent tasks all on one of 4 cores: annealing must spread
-        // them and cut the makespan.
+        // 8 independent tasks all on one of 4 cores: annealing over
+        // PlacementSpace must spread them and cut the makespan.
         let hw = hw(4);
         let mut st = all_on_one_core(8, &hw);
         let evals = Registry::standard();
         let sim_cfg = SimConfig::default();
         let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
-        let (best, accepted) = anneal_placement(
-            &hw,
-            &mut st,
-            &evals,
-            &sim_cfg,
-            &SearchConfig {
-                iters: 80,
-                ..Default::default()
-            },
+        let space = PlacementSpace::new(
+            "anneal-placement",
+            hw.clone(),
+            st.graph.clone(),
+            st.mapping.clone(),
         );
-        assert!(accepted > 0);
+        let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+        let opts = ExploreOpts {
+            budget: 81,
+            workers: 1,
+            sim: sim_cfg.clone(),
+            ..Default::default()
+        };
+        let explorer = AnnealExplorer {
+            seed: 0xD5E,
+            init_temp: 0.1,
+        };
+        let report = explore(&space, &objectives, &explorer, &evals, &opts).unwrap();
+        assert!(report.moves_accepted > 0);
+        let best = report.best().unwrap();
+        let best_score = best.objectives[0];
         assert!(
-            best < before * 0.6,
-            "anneal failed to improve: {before} -> {best}"
+            best_score < before * 0.6,
+            "anneal failed to improve: {before} -> {best_score}"
         );
-        // the caller's state now carries the best placement found
+        // applying the winning candidate reproduces its score
+        space.apply(&best.candidate, &mut st.mapping);
         let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
-        assert!((after - best).abs() / best < 1e-9, "{after} vs {best}");
+        assert!(
+            (after - best_score).abs() / best_score < 1e-9,
+            "{after} vs {best_score}"
+        );
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn greedy_tiling_splits_heavy_task() {
+    fn hill_climbed_tiling_splits_heavy_task() {
         let hw = hw(4);
         let mut g = TaskGraph::new();
         let mut c = ComputeCost::zero(OpClass::Elementwise);
@@ -326,11 +232,36 @@ mod tests {
         let evals = Registry::standard();
         let sim_cfg = SimConfig::default();
         let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
-        let best = greedy_tiling(&hw, &mut st, &evals, &sim_cfg, 3);
-        assert!(best < before, "{before} -> {best}");
-        // state was advanced to the winning round count
+        let (best_score, rounds) = {
+            let space = TilingSpace::new(&hw, &evals, &st, 3);
+            let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+            let opts = ExploreOpts {
+                budget: 8,
+                workers: 1,
+                sim: sim_cfg.clone(),
+                ..Default::default()
+            };
+            let explorer = HillClimbExplorer {
+                seed: 0,
+                from_initial: true,
+                restarts: false,
+            };
+            let report = explore(&space, &objectives, &explorer, &evals, &opts).unwrap();
+            let best = report.best().unwrap();
+            (best.objectives[0], best.candidate.0[0] as usize)
+        };
+        assert!(best_score < before, "{before} -> {best_score}");
+        // replaying the winning round count reproduces the score
+        for _ in 0..rounds {
+            if !greedy_round(&hw, &mut st, &evals) {
+                break;
+            }
+        }
         let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
-        assert!((after - best).abs() / best < 1e-9, "{after} vs {best}");
+        assert!(
+            (after - best_score).abs() / best_score < 1e-9,
+            "{after} vs {best_score}"
+        );
     }
 
     #[test]

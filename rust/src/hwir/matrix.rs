@@ -82,12 +82,28 @@ impl SpaceMatrix {
     }
 
     /// Set the cell at `coord`. Panics on out-of-shape coordinates
-    /// (construction-time programming error).
+    /// (construction-time programming error). Code handling *user input*
+    /// (JSON specs) must go through [`SpaceMatrix::try_set`] instead.
     pub fn set(&mut self, coord: Coord, element: Element) {
-        let idx = coord
-            .linearize(&self.dims)
-            .unwrap_or_else(|| panic!("coord {coord} out of shape {:?}", self.dims));
-        self.cells[idx] = Some(element);
+        if let Err(e) = self.try_set(coord, element) {
+            panic!("{e}");
+        }
+    }
+
+    /// Fallible [`SpaceMatrix::set`]: `Err` describes an out-of-shape (or
+    /// wrong-arity) coordinate instead of panicking, so malformed spec
+    /// files surface as errors.
+    pub fn try_set(&mut self, coord: Coord, element: Element) -> Result<(), String> {
+        match coord.linearize(&self.dims) {
+            Some(idx) => {
+                self.cells[idx] = Some(element);
+                Ok(())
+            }
+            None => Err(format!(
+                "coord {coord} out of shape {:?} of '{}'",
+                self.dims, self.name
+            )),
+        }
     }
 
     /// Get the cell at `coord` (None for holes or out-of-shape coords).
@@ -173,6 +189,19 @@ mod tests {
     fn set_out_of_shape_panics() {
         let mut m = SpaceMatrix::new("chip", vec![2, 2]);
         m.set(Coord::new(vec![2, 0]), Element::Point(core()));
+    }
+
+    #[test]
+    fn try_set_reports_bad_coords_instead_of_panicking() {
+        let mut m = SpaceMatrix::new("chip", vec![2, 2]);
+        let err = m
+            .try_set(Coord::new(vec![2, 0]), Element::Point(core()))
+            .unwrap_err();
+        assert!(err.contains("out of shape"), "{err}");
+        // wrong arity is also an error, not a crash
+        assert!(m.try_set(Coord::new(vec![1]), Element::Point(core())).is_err());
+        assert!(m.try_set(Coord::new(vec![1, 1]), Element::Point(core())).is_ok());
+        assert!(m.get(&Coord::new(vec![1, 1])).is_some());
     }
 
     #[test]

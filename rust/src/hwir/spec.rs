@@ -112,14 +112,15 @@ fn parse_matrix(j: &Json) -> Result<SpaceMatrix> {
                     .collect::<Option<Vec<u32>>>()
                     .ok_or(SpecError("cell \"at\" must be integers".into()))?,
             );
-            if coord.linearize(&dims).is_none() {
-                return err(format!("cell {coord} out of shape {dims:?} in '{name}'"));
-            }
             if cell.get("hole").and_then(Json::as_bool) == Some(true) {
-                let idx = coord.linearize(&dims).unwrap();
+                let Some(idx) = coord.linearize(&dims) else {
+                    return err(format!("hole {coord} out of shape {dims:?} in '{name}'"));
+                };
                 m.cells[idx] = None;
             } else {
-                m.set(coord, parse_element(cell)?);
+                let element = parse_element(cell)?;
+                m.try_set(coord, element)
+                    .map_err(|e| SpecError(format!("in '{name}': {e}")))?;
             }
         }
     }
@@ -150,6 +151,15 @@ fn parse_matrix(j: &Json) -> Result<SpaceMatrix> {
                 ),
                 _ => return err("sync group members must be an array or null"),
             };
+            if let Some(cells) = &members {
+                for c in cells {
+                    if c.linearize(&dims).is_none() {
+                        return err(format!(
+                            "sync group '{gname}' member {c} out of shape {dims:?} in '{name}'"
+                        ));
+                    }
+                }
+            }
             m.add_sync_group(SyncGroup {
                 name: gname,
                 members,
@@ -445,6 +455,35 @@ mod tests {
             r#"{"matrix": {"dims": [1], "comms": [{"topology": "warp"}]}}"#
         )
         .is_err()); // unknown topology
+    }
+
+    #[test]
+    fn out_of_shape_coords_are_spec_errors_not_panics() {
+        // hole override outside dims
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [2], "cells": [{"at": [5], "hole": true}]}}"#
+        )
+        .is_err());
+        // point override outside dims (the fill-style cell path)
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [2, 2], "cells": [{"at": [2, 0], "point":
+                {"name": "c", "kind": "compute"}}]}}"#
+        )
+        .is_err());
+        // wrong coordinate arity
+        assert!(parse_spec(
+            r#"{"matrix": {"dims": [2, 2], "cells": [{"at": [1], "point":
+                {"name": "c", "kind": "compute"}}]}}"#
+        )
+        .is_err());
+        // sync-group member outside dims
+        let e = parse_spec(
+            r#"{"matrix": {"dims": [2],
+                "fill": {"point": {"name": "c", "kind": "compute"}},
+                "sync_groups": [{"name": "g", "members": [[7]]}]}}"#,
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("out of shape"), "{e}");
     }
 
     #[test]

@@ -192,8 +192,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let seq = args.num("seq", 2048u32)?;
     let cfg = LlmConfig::gpt3_6_7b();
     let workload = match arch {
-        "dmc" => dmc_prefill(&cfg, seq, &DmcParams::table2(config)),
-        "gsm" => gsm_prefill(&cfg, seq, &GsmParams::table2(config)),
+        "dmc" => dmc_prefill(&cfg, seq, &DmcParams::table2(config)?),
+        "gsm" => gsm_prefill(&cfg, seq, &GsmParams::table2(config)?),
         other => mldse::bail!("unknown arch '{other}'"),
     };
     let coord = if args.bool_flag("pjrt") {

@@ -31,12 +31,12 @@
 use std::collections::HashMap;
 
 use crate::eval::Registry;
-use crate::hwir::{Hardware, PointId, PointKind};
+use crate::hwir::{Hardware, PointId};
 use crate::mapping::Mapping;
 use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
 
-use super::engine::{SimError, SimResult, Time};
-use super::links::{link_set, LinkId};
+use super::engine::{completion_eps, SimError, SimResult, Time};
+use super::links::RouteTable;
 
 /// A piecewise-constant progress profile of a transfer.
 #[derive(Debug, Clone, Default)]
@@ -76,7 +76,9 @@ struct Item {
     ready: Time,
     shared_total: f64,
     fixed: f64,
-    links: Vec<LinkId>,
+    /// Dense per-point link indices from the shared [`RouteTable`];
+    /// empty = shares the whole resource.
+    links: Vec<u32>,
     exclusive: bool,
     profile: Profile,
     /// Staged completion time (`None` while still pending in S).
@@ -106,11 +108,15 @@ pub fn simulate_consistent(
     mapping: &Mapping,
     evals: &Registry,
 ) -> Result<SimResult, SimError> {
+    // Shared link-set machinery with the exact engine: intern every routed
+    // flow's link set once, remapped to dense per-point indices.
+    let routes = RouteTable::from_mapping(hw, graph, mapping);
     Alg1 {
         hw,
         graph,
         mapping,
         evals,
+        routes,
         items: Vec::new(),
         committed: HashMap::new(),
         deps_left: HashMap::new(),
@@ -127,6 +133,7 @@ struct Alg1<'a> {
     graph: &'a TaskGraph,
     mapping: &'a Mapping,
     evals: &'a Registry,
+    routes: RouteTable,
     /// S ∪ CSB: pending items (staged_end == None) and staged items.
     items: Vec<Item>,
     /// Committed completion times.
@@ -241,7 +248,7 @@ impl<'a> Alg1<'a> {
         }
         let demand = self.evals.demand(t, self.hw.entry(point));
         let exclusive = self.hw.point(point).kind.is_compute();
-        let links = self.item_links(point, task);
+        let links = self.routes.links_of(task).to_vec();
         // Rollback rule: the newcomer invalidates any evaluation on this
         // point that extends beyond its arrival.
         self.rollback_point(point, at);
@@ -261,27 +268,6 @@ impl<'a> Alg1<'a> {
             profile: Profile::default(),
             staged_end: None,
         });
-    }
-
-    fn item_links(&self, point: PointId, task: TaskId) -> Vec<LinkId> {
-        let entry = self.hw.entry(point);
-        let PointKind::Comm(attrs) = &entry.point.kind else {
-            return Vec::new();
-        };
-        let TaskKind::Comm {
-            route: Some((from, to)),
-            ..
-        } = &self.graph.task(task).kind
-        else {
-            return Vec::new();
-        };
-        let crate::hwir::Addr::Comm { matrix, .. } = &entry.addr else {
-            return Vec::new();
-        };
-        let Some(shape) = self.hw.matrix_shape(matrix) else {
-            return Vec::new();
-        };
-        link_set(&attrs.topology, from, to, shape)
     }
 
     fn commit(&mut self, task: TaskId, start: Time, end: Time) {
@@ -564,18 +550,28 @@ impl<'a> Alg1<'a> {
         let mut remaining: HashMap<usize, f64> =
             member_idx.iter().map(|&i| (i, self.items[i].remaining())).collect();
 
+        // Completion tolerance scaled to each item's size and the current
+        // zone time (see `engine::completion_eps`): with an absolute
+        // epsilon a large transfer's — or a late small transfer's — float
+        // residue never drops below it while the retry step rounds below
+        // the time resolution, spinning this loop forever (the zone loop
+        // has no event cap).
+        let done_eps = |item: &Item, at: Time| completion_eps(item.shared_total, at);
+
         loop {
             // active members at time t
             let active: Vec<usize> = member_idx
                 .iter()
                 .copied()
-                .filter(|&i| self.items[i].resume_at() <= t + 1e-12 && remaining[&i] > 1e-12)
+                .filter(|&i| {
+                    self.items[i].resume_at() <= t + 1e-12
+                        && remaining[&i] > done_eps(&self.items[i], t)
+                })
                 .collect();
-            // zero-work member completes instantly
-            if let Some(&done) = member_idx
-                .iter()
-                .find(|&&i| remaining[&i] <= 1e-12 && self.items[i].staged_end.is_none())
-            {
+            // worked-off member completes instantly
+            if let Some(&done) = member_idx.iter().find(|&&i| {
+                remaining[&i] <= done_eps(&self.items[i], t) && self.items[i].staged_end.is_none()
+            }) {
                 let item = &mut self.items[done];
                 let end_transfer = item.resume_at().max(item.ready);
                 item.staged_end = Some(end_transfer + item.fixed);
@@ -635,7 +631,10 @@ impl<'a> Alg1<'a> {
                 *remaining.get_mut(&i).unwrap() -= (t_next - t) * r;
             }
             // completion?
-            if let Some(&done) = active.iter().find(|&&i| remaining[&i] <= 1e-9) {
+            if let Some(&done) = active
+                .iter()
+                .find(|&&i| remaining[&i] <= done_eps(&self.items[i], t_next))
+            {
                 let item = &mut self.items[done];
                 item.staged_end = Some(t_next + item.fixed);
                 self.result.truncations += active.len() as u64 - 1;

@@ -31,16 +31,31 @@
 //!   max of their ready times.
 //! * Batches stream through the graph: `SimConfig::iterations` ticks carry
 //!   iteration numbers (§6.1); a task evaluates once per iteration.
+//!
+//! ## Incremental contention tracking
+//!
+//! The hot loop of a contended simulation is the per-event rate update.
+//! Instead of rebuilding a link-occupancy histogram from scratch at every
+//! arrival/departure, the engine interns each routed flow's link set once
+//! at setup ([`super::links::RouteTable`]), remaps link ids to dense
+//! per-point indices, and maintains a flat occupancy counter array with
+//! ±1 deltas as flows come and go. Each flow carries its current
+//! *bottleneck* (max occupancy over its links); only flows whose
+//! bottleneck can have changed are re-derived, and the per-event rate pass
+//! is a flat O(flows) sweep with no hashing or allocation. Setting
+//! [`SimConfig::incremental`] to `false` falls back to a full per-event
+//! recompute; both paths are bit-identical (golden-tested) and the
+//! incremental invariants are cross-checked by debug assertions.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use crate::eval::Registry;
-use crate::hwir::{Hardware, PointId, PointKind};
+use crate::hwir::{Hardware, PointId};
 use crate::mapping::Mapping;
 use crate::taskgraph::{Executor, StaticExecutor, TaskGraph, TaskId, TaskKind};
 
-use super::links::{link_set, LinkId};
+use super::links::RouteTable;
 
 /// Simulation time in cycles (fractional under bandwidth sharing).
 pub type Time = f64;
@@ -72,6 +87,12 @@ pub struct SimConfig {
     pub dedup: bool,
     /// Safety cap on processed events.
     pub max_events: u64,
+    /// Use the incremental contention tracker (±1 link-occupancy deltas;
+    /// only flows whose bottleneck count changed are re-derived). `false`
+    /// falls back to the full per-event recompute. Both paths produce
+    /// bit-identical [`SimResult`]s — the flag exists for cross-checking
+    /// and regression triage, not for accuracy trade-offs.
+    pub incremental: bool,
 }
 
 impl Default for SimConfig {
@@ -81,6 +102,7 @@ impl Default for SimConfig {
             collect_timeline: false,
             dedup: true,
             max_events: 500_000_000,
+            incremental: true,
         }
     }
 }
@@ -95,8 +117,10 @@ pub struct TimelineEvent {
     pub end: Time,
 }
 
-/// Simulation output.
-#[derive(Debug, Clone, Default)]
+/// Simulation output. `PartialEq` supports the golden tests pinning
+/// bit-identical results across the incremental and full-recompute
+/// contention paths.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimResult {
     /// Completion time of the last task (cycles).
     pub makespan: Time,
@@ -180,20 +204,201 @@ struct Flow {
     iter: u32,
     /// Remaining shareable work (cycles at full rate).
     remaining: f64,
+    /// Initial shareable work; completion tolerance scales with it.
+    total: f64,
     /// Fixed latency appended after the transfer completes.
     fixed: f64,
-    /// Occupied links; empty = shares the whole resource.
-    links: Vec<LinkId>,
+    /// `(offset, len)` span of dense link indices in the route table;
+    /// `len == 0` = shares the whole resource.
+    links: (u32, u32),
+    /// Max occupancy over the flow's links (incrementally maintained;
+    /// meaningless for whole-resource flows).
+    bottleneck: u32,
     /// Current progress rate in (0, 1].
     rate: f64,
     start: Time,
 }
 
+/// Completion tolerance for a flow of `total` work checked at time `now`.
+///
+/// Two failure modes of a fixed absolute epsilon: (1) a very large
+/// transfer's accumulated integration error (`remaining -= rate * dt`)
+/// scales with its work, so the residual can exceed the epsilon; (2) a
+/// residual below ~ulp(`now`) makes the retry completion time round back
+/// to `now`, respawning zero-length FlowDone events forever. The size
+/// term covers (1); the time term covers (2) with a few ulps of headroom
+/// — since `rate <= 1`, any residual above it yields a retry step that
+/// strictly advances time, so at most one extra event fires instead of a
+/// spin, and genuinely small flows late in long simulations are not
+/// swallowed. Shared with the Algorithm-1 scheduler, whose zone loop has
+/// the same failure modes (and no event cap).
+pub(super) fn completion_eps(total: f64, now: Time) -> f64 {
+    let size = 1e-9 * total.max(1.0);
+    let time = 4.0 * f64::EPSILON * now;
+    size.max(time)
+}
+
 #[derive(Debug, Default)]
 struct SharedPoint {
     flows: Vec<Flow>,
+    /// Per dense link: number of flows occupying it (incremental mode).
+    occupancy: Vec<u32>,
+    /// Per dense link: indices into `flows` of its occupants (incremental
+    /// mode's reverse index for targeted bottleneck repair).
+    link_flows: Vec<Vec<u32>>,
+    /// Flows sharing the whole resource (no link information).
+    universal: u32,
     last_update: Time,
     generation: u64,
+}
+
+impl SharedPoint {
+    fn new(num_links: usize) -> SharedPoint {
+        SharedPoint {
+            flows: Vec::new(),
+            occupancy: vec![0; num_links],
+            link_flows: vec![Vec::new(); num_links],
+            universal: 0,
+            last_update: 0.0,
+            generation: 0,
+        }
+    }
+
+    /// Register a flow; in incremental mode, bump its links' occupancy and
+    /// raise the bottleneck of every flow sharing a bumped link.
+    fn add_flow_entry(&mut self, flow: Flow, routes: &RouteTable, incremental: bool) {
+        let idx = self.flows.len() as u32;
+        let (off, len) = flow.links;
+        self.flows.push(flow);
+        if !incremental {
+            return;
+        }
+        if len == 0 {
+            self.universal += 1;
+            return;
+        }
+        let mut bottleneck = 1u32;
+        for &l in routes.span(off, len) {
+            let li = l as usize;
+            self.occupancy[li] += 1;
+            let occ = self.occupancy[li];
+            for &fi in &self.link_flows[li] {
+                let fb = &mut self.flows[fi as usize].bottleneck;
+                if occ > *fb {
+                    *fb = occ;
+                }
+            }
+            self.link_flows[li].push(idx);
+            if occ > bottleneck {
+                bottleneck = occ;
+            }
+        }
+        self.flows[idx as usize].bottleneck = bottleneck;
+    }
+
+    /// Unregister and return the flow at `i`; in incremental mode, drop its
+    /// links' occupancy and re-derive the bottleneck only of flows whose
+    /// bottleneck sat exactly on a decremented link. `scratch` is a reused
+    /// buffer of flow indices needing re-derivation.
+    fn remove_flow_entry(
+        &mut self,
+        i: usize,
+        routes: &RouteTable,
+        incremental: bool,
+        scratch: &mut Vec<u32>,
+    ) -> Flow {
+        if incremental {
+            let (off, len) = self.flows[i].links;
+            if len == 0 {
+                self.universal -= 1;
+            } else {
+                scratch.clear();
+                for &l in routes.span(off, len) {
+                    let li = l as usize;
+                    let pos = self.link_flows[li]
+                        .iter()
+                        .position(|&x| x == i as u32)
+                        .expect("flow registered on its link");
+                    self.link_flows[li].swap_remove(pos);
+                    self.occupancy[li] -= 1;
+                    let old_occ = self.occupancy[li] + 1;
+                    for &fi in &self.link_flows[li] {
+                        if self.flows[fi as usize].bottleneck == old_occ {
+                            scratch.push(fi);
+                        }
+                    }
+                }
+                // a survivor sharing several decremented links gets marked
+                // once per link — re-derive each at most once
+                scratch.sort_unstable();
+                scratch.dedup();
+                for &fi in scratch.iter() {
+                    let (o2, l2) = self.flows[fi as usize].links;
+                    let mut worst = 1u32;
+                    for &l in routes.span(o2, l2) {
+                        worst = worst.max(self.occupancy[l as usize]);
+                    }
+                    self.flows[fi as usize].bottleneck = worst;
+                }
+            }
+        }
+        let last = self.flows.len() - 1;
+        let flow = self.flows.swap_remove(i);
+        if incremental && i < last {
+            // the flow formerly at `last` now sits at `i`: repair the
+            // reverse index
+            let (off, len) = self.flows[i].links;
+            for &l in routes.span(off, len) {
+                for x in self.link_flows[l as usize].iter_mut() {
+                    if *x == last as u32 {
+                        *x = i as u32;
+                        break;
+                    }
+                }
+            }
+        }
+        flow
+    }
+
+    /// Debug cross-check: the incrementally maintained occupancy, reverse
+    /// index, universal count and per-flow bottlenecks must match a from-
+    /// scratch recompute.
+    #[cfg(debug_assertions)]
+    fn assert_consistent(&self, routes: &RouteTable) {
+        let mut occ = vec![0u32; self.occupancy.len()];
+        let mut uni = 0u32;
+        for f in &self.flows {
+            let (off, len) = f.links;
+            if len == 0 {
+                uni += 1;
+            } else {
+                for &l in routes.span(off, len) {
+                    occ[l as usize] += 1;
+                }
+            }
+        }
+        debug_assert_eq!(uni, self.universal, "universal-flow count drifted");
+        debug_assert_eq!(occ, self.occupancy, "link occupancy drifted");
+        for (li, lf) in self.link_flows.iter().enumerate() {
+            debug_assert_eq!(
+                lf.len() as u32,
+                occ[li],
+                "reverse index size drifted on link {li}"
+            );
+        }
+        for f in &self.flows {
+            let (off, len) = f.links;
+            if len > 0 {
+                let worst = routes
+                    .span(off, len)
+                    .iter()
+                    .map(|&l| occ[l as usize])
+                    .max()
+                    .unwrap_or(1);
+                debug_assert_eq!(worst, f.bottleneck, "bottleneck of {} drifted", f.task);
+            }
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -253,10 +458,15 @@ struct Engine<'a> {
     event_payload: Vec<Event>,
     seq: u64,
 
-    shared: HashMap<PointId, SharedPoint>,
-    excl: HashMap<PointId, ExclPoint>,
-    storage: HashMap<TaskId, StorageState>,
+    /// Dense per-point shared/exclusive state (indexed by `PointId`).
+    shared: Vec<SharedPoint>,
+    excl: Vec<ExclPoint>,
+    /// Dense per-task storage residency state (indexed by `TaskId`).
+    storage: Vec<Option<StorageState>>,
     syncs: HashMap<u32, SyncGroupState>,
+
+    /// Interned, densely remapped per-(task, point) link sets.
+    routes: RouteTable,
 
     /// Flat (task, iter) tables: index = task.index() * iterations + iter.
     /// deps_left uses u32::MAX as the "uninitialized" sentinel.
@@ -270,7 +480,13 @@ struct Engine<'a> {
     done_iters: Vec<u32>,
     /// task -> mapped point (precomputed from the mapping for O(1) access).
     point_of: Vec<Option<PointId>>,
+    /// task -> count of enabled predecessors (precomputed).
+    enabled_in_deg: Vec<u32>,
 
+    /// task -> memoized (demand, energy); first fill goes through the
+    /// §7.2 representative-descriptor dedup map below. Only used with
+    /// `cfg.dedup` (without it every activation re-evaluates, as before).
+    demand_memo: Vec<Option<(crate::eval::Demand, f64)>>,
     demand_cache: HashMap<(u64, u64, u64, u32), (crate::eval::Demand, f64)>,
 
     /// Flat (start, end) per task, NaN = never ran; folded into the result
@@ -278,7 +494,14 @@ struct Engine<'a> {
     flat_timings: Vec<(Time, Time)>,
 
     result: SimResult,
-    mem_usage: HashMap<PointId, u64>,
+    /// Bytes currently resident per memory point (indexed by `PointId`).
+    mem_usage: Vec<u64>,
+    /// Reused buffers (flow removal repair, successor fan-out, dead-path
+    /// phantom cascade, completed-flow drain).
+    flow_scratch: Vec<u32>,
+    succ_scratch: Vec<TaskId>,
+    dead_scratch: Vec<TaskId>,
+    finished_scratch: Vec<Flow>,
 }
 
 impl<'a> Engine<'a> {
@@ -342,6 +565,15 @@ impl<'a> Engine<'a> {
                 point_of[t.index()] = Some(p);
             }
         }
+        // Intern every routed flow's link set once, remapped to dense
+        // per-point indices, so the event loop never re-derives routes.
+        let routes = RouteTable::build(hw, graph, &point_of);
+        let n_points = hw.num_points();
+        let shared: Vec<SharedPoint> = (0..n_points)
+            .map(|i| SharedPoint::new(routes.num_links(PointId(i as u32))))
+            .collect();
+        let excl: Vec<ExclPoint> = (0..n_points).map(|_| ExclPoint::default()).collect();
+        let storage: Vec<Option<StorageState>> = (0..graph.capacity()).map(|_| None).collect();
         Ok(Engine {
             hw,
             graph,
@@ -351,19 +583,26 @@ impl<'a> Engine<'a> {
             events: BinaryHeap::new(),
             event_payload: Vec::new(),
             seq: 0,
-            shared: HashMap::new(),
-            excl: HashMap::new(),
-            storage: HashMap::new(),
+            shared,
+            excl,
+            storage,
             syncs,
+            routes,
             deps_left: vec![u32::MAX; slots],
             ready_time: vec![0.0; slots],
             real_ticks: vec![0; slots],
             done_iters: vec![0; graph.capacity()],
             point_of,
+            enabled_in_deg: graph.enabled_in_degrees(),
+            demand_memo: vec![None; graph.capacity()],
             demand_cache: HashMap::new(),
             flat_timings: vec![(f64::NAN, f64::NAN); graph.capacity()],
             result: SimResult::default(),
-            mem_usage: HashMap::new(),
+            mem_usage: vec![0; n_points],
+            flow_scratch: Vec::new(),
+            succ_scratch: Vec::new(),
+            dead_scratch: Vec::new(),
+            finished_scratch: Vec::new(),
         })
     }
 
@@ -374,10 +613,14 @@ impl<'a> Engine<'a> {
         self.seq += 1;
     }
 
-    /// (service demand, evaluation energy), memoized per representative
-    /// descriptor (the paper's §7.2 deduplication — evaluate one, reuse for
-    /// identical tiles).
+    /// (service demand, evaluation energy). With `cfg.dedup` the result is
+    /// memoized twice: per task (repeat iterations hit a flat array) and
+    /// per representative descriptor (the paper's §7.2 deduplication —
+    /// evaluate one, reuse for identical tiles on the same point).
     fn demand_energy(&mut self, task: TaskId) -> (crate::eval::Demand, f64) {
+        if let Some(de) = self.demand_memo[task.index()] {
+            return de;
+        }
         let t = self.graph.task(task);
         let p = self.point_of[task.index()].unwrap();
         if self.cfg.dedup {
@@ -394,12 +637,15 @@ impl<'a> Engine<'a> {
                 _ => None,
             };
             if let Some(key) = key {
-                if let Some(de) = self.demand_cache.get(&key) {
-                    return *de;
-                }
-                let ev = self.evals.for_point(self.hw.entry(p));
-                let de = (ev.demand(t, self.hw.entry(p)), ev.energy(t, self.hw.entry(p)));
-                self.demand_cache.insert(key, de);
+                let de = if let Some(de) = self.demand_cache.get(&key) {
+                    *de
+                } else {
+                    let ev = self.evals.for_point(self.hw.entry(p));
+                    let de = (ev.demand(t, self.hw.entry(p)), ev.energy(t, self.hw.entry(p)));
+                    self.demand_cache.insert(key, de);
+                    de
+                };
+                self.demand_memo[task.index()] = Some(de);
                 return de;
             }
         }
@@ -443,14 +689,15 @@ impl<'a> Engine<'a> {
 
         // Wind down: release storage tasks without consumers at makespan.
         let makespan = self.result.makespan;
-        for (task, st) in self.storage.iter() {
+        for (i, slot_st) in self.storage.iter().enumerate() {
+            let Some(st) = slot_st else { continue };
             if st.resident {
                 let end = if st.consumers_left == 0 {
                     st.last_consumer_end
                 } else {
                     makespan
                 };
-                let slot = &mut self.flat_timings[task.index()];
+                let slot = &mut self.flat_timings[i];
                 if slot.1.is_nan() || end > slot.1 {
                     *slot = (if slot.0.is_nan() { st.start } else { slot.0 }, end);
                 }
@@ -509,7 +756,7 @@ impl<'a> Engine<'a> {
         match kind {
             K::Compute => {
                 let p = self.point_of[task.index()].unwrap();
-                let excl = self.excl.entry(p).or_default();
+                let excl = &mut self.excl[p.index()];
                 excl.pending.push(Reverse((OrdF64(now), task, iter)));
                 self.try_start_excl(p, now);
             }
@@ -523,7 +770,7 @@ impl<'a> Engine<'a> {
                 let consumers =
                     self.graph.successors(task).len() as u64 * self.cfg.iterations as u64;
                 let p = self.point_of[task.index()].unwrap();
-                let st = self.storage.entry(task).or_insert_with(|| StorageState {
+                let st = self.storage[task.index()].get_or_insert_with(|| StorageState {
                     resident: false,
                     bytes,
                     start: now,
@@ -533,10 +780,10 @@ impl<'a> Engine<'a> {
                 if !st.resident {
                     st.resident = true;
                     st.start = now;
-                    let usage = self.mem_usage.entry(p).or_insert(0);
-                    *usage += bytes;
+                    self.mem_usage[p.index()] += bytes;
+                    let usage = self.mem_usage[p.index()];
                     let peak = self.result.peak_memory.entry(p).or_insert(0);
-                    *peak = (*peak).max(*usage);
+                    *peak = (*peak).max(usage);
                 }
                 self.complete(task, iter, now, now, executor);
             }
@@ -561,7 +808,7 @@ impl<'a> Engine<'a> {
     }
 
     fn try_start_excl(&mut self, p: PointId, now: Time) {
-        let excl = self.excl.get_mut(&p).unwrap();
+        let excl = &mut self.excl[p.index()];
         if excl.running.is_some() {
             return;
         }
@@ -576,7 +823,7 @@ impl<'a> Engine<'a> {
         if energy > 0.0 {
             *self.result.point_energy.entry(p).or_insert(0.0) += energy;
         }
-        let excl = self.excl.get_mut(&p).unwrap();
+        let excl = &mut self.excl[p.index()];
         excl.running = Some((task, iter, start, end));
         *self.result.point_busy.entry(p).or_insert(0.0) += demand.total();
         if self.cfg.collect_timeline {
@@ -592,7 +839,7 @@ impl<'a> Engine<'a> {
     }
 
     fn on_excl_done(&mut self, p: PointId, gen: u64, now: Time, executor: &mut dyn Executor) {
-        let excl = self.excl.get_mut(&p).unwrap();
+        let excl = &mut self.excl[p.index()];
         if excl.generation != gen {
             return;
         }
@@ -609,109 +856,106 @@ impl<'a> Engine<'a> {
         if energy > 0.0 {
             *self.result.point_energy.entry(p).or_insert(0.0) += energy;
         }
-        let links = self.flow_links(p, task);
+        let links = self.routes.span_of(task);
         self.advance_flows(p, now);
-        let sp = self.shared.entry(p).or_insert_with(|| SharedPoint {
-            flows: Vec::new(),
-            last_update: now,
-            generation: 0,
-        });
-        sp.flows.push(Flow {
+        let total = demand.shared.max(0.0);
+        let flow = Flow {
             task,
             iter,
-            remaining: demand.shared.max(0.0),
+            remaining: total,
+            total,
             fixed: demand.fixed,
             links,
+            bottleneck: 0,
             rate: 1.0,
             start: now,
-        });
+        };
+        self.shared[p.index()].add_flow_entry(flow, &self.routes, self.cfg.incremental);
         *self.result.point_busy.entry(p).or_insert(0.0) += demand.shared;
         self.reschedule_flows(p, now);
     }
 
-    fn flow_links(&self, p: PointId, task: TaskId) -> Vec<LinkId> {
-        let entry = self.hw.entry(p);
-        let PointKind::Comm(attrs) = &entry.point.kind else {
-            return Vec::new(); // memory/DRAM channel: whole-resource sharing
-        };
-        let TaskKind::Comm {
-            route: Some((from, to)),
-            ..
-        } = &self.graph.task(task).kind
-        else {
-            return Vec::new();
-        };
-        let matrix = match &entry.addr {
-            crate::hwir::Addr::Comm { matrix, .. } => matrix.clone(),
-            _ => return Vec::new(),
-        };
-        let Some(shape) = self.hw.matrix_shape(&matrix) else {
-            return Vec::new();
-        };
-        link_set(&attrs.topology, from, to, shape)
-    }
-
     /// Integrate flow progress up to `now`.
     fn advance_flows(&mut self, p: PointId, now: Time) {
-        if let Some(sp) = self.shared.get_mut(&p) {
-            let dt = now - sp.last_update;
-            if dt > 0.0 {
-                for f in &mut sp.flows {
-                    f.remaining -= f.rate * dt;
-                    if f.remaining < 0.0 {
-                        f.remaining = 0.0;
-                    }
+        let sp = &mut self.shared[p.index()];
+        let dt = now - sp.last_update;
+        if dt > 0.0 {
+            for f in &mut sp.flows {
+                f.remaining -= f.rate * dt;
+                if f.remaining < 0.0 {
+                    f.remaining = 0.0;
                 }
             }
-            sp.last_update = now;
         }
+        sp.last_update = now;
     }
 
-    /// Recompute rates (equal sharing of the bottleneck link) and schedule
-    /// the next completion candidate.
+    /// Re-derive rates (equal sharing of the bottleneck link) from the
+    /// incrementally maintained occupancy and schedule the next completion
+    /// candidate. congestion(f) = max occupancy over f's links + universal
+    /// sharers; universal flows contend with everything. The expensive
+    /// part — re-deriving bottlenecks — already happened in the ±1 delta
+    /// updates; this pass is a flat O(flows) sweep. Without
+    /// `cfg.incremental` the occupancy histogram and every bottleneck are
+    /// rebuilt from scratch first (the pre-incremental engine, kept for
+    /// golden cross-checks).
     fn reschedule_flows(&mut self, p: PointId, now: Time) {
-        let mut trunc = 0u64;
-        let next = {
-            let sp = self.shared.get_mut(&p).unwrap();
-            let n = sp.flows.len();
-            // Link-occupancy histogram: congestion(f) = max over f's links
-            // of sharers (universal flows share everything). O(total links)
-            // instead of the naive O(F²·L²) scan — the engine's hottest
-            // loop on contended NoCs (see EXPERIMENTS.md §Perf).
-            let mut universal = 0usize;
-            let mut link_count: HashMap<LinkId, usize> = HashMap::new();
-            for f in &sp.flows {
-                if f.links.is_empty() {
-                    universal += 1;
-                } else {
-                    for l in &f.links {
-                        *link_count.entry(*l).or_insert(0) += 1;
+        let (next, trunc) = {
+            let routes = &self.routes;
+            let sp = &mut self.shared[p.index()];
+            if !self.cfg.incremental {
+                for c in sp.occupancy.iter_mut() {
+                    *c = 0;
+                }
+                sp.universal = 0;
+                for f in &sp.flows {
+                    let (off, len) = f.links;
+                    if len == 0 {
+                        sp.universal += 1;
+                    } else {
+                        for &l in routes.span(off, len) {
+                            sp.occupancy[l as usize] += 1;
+                        }
+                    }
+                }
+                for f in &mut sp.flows {
+                    let (off, len) = f.links;
+                    if len > 0 {
+                        let mut worst = 1u32;
+                        for &l in routes.span(off, len) {
+                            worst = worst.max(sp.occupancy[l as usize]);
+                        }
+                        f.bottleneck = worst;
                     }
                 }
             }
-            let mut rates = Vec::with_capacity(n);
-            for fi in &sp.flows {
-                let congestion = if fi.links.is_empty() {
+            #[cfg(debug_assertions)]
+            if self.cfg.incremental {
+                sp.assert_consistent(routes);
+            }
+            let n = sp.flows.len() as u32;
+            let universal = sp.universal;
+            let mut trunc = 0u64;
+            let mut earliest = f64::INFINITY;
+            for f in &mut sp.flows {
+                let congestion = if f.links.1 == 0 {
                     n
                 } else {
-                    let worst = fi.links.iter().map(|l| link_count[l]).max().unwrap_or(1);
-                    worst + universal
+                    f.bottleneck + universal
                 };
-                rates.push(1.0 / (congestion.max(1)) as f64);
-            }
-            for (f, r) in sp.flows.iter_mut().zip(rates) {
+                let r = 1.0 / congestion.max(1) as f64;
                 if r < f.rate {
                     trunc += 1; // flow lost bandwidth: Algorithm-1 truncation
                 }
                 f.rate = r;
+                let done = now + f.remaining / r;
+                if done < earliest {
+                    earliest = done;
+                }
             }
             sp.generation += 1;
             let gen = sp.generation;
-            sp.flows
-                .iter()
-                .map(|f| now + f.remaining / f.rate)
-                .min_by(|a, b| a.total_cmp(b))
-                .map(|t| (t, gen))
+            (if n > 0 { Some((earliest, gen)) } else { None }, trunc)
         };
         self.result.truncations += trunc;
         if let Some((t, gen)) = next {
@@ -720,28 +964,28 @@ impl<'a> Engine<'a> {
     }
 
     fn on_flow_done(&mut self, p: PointId, gen: u64, now: Time, executor: &mut dyn Executor) {
-        {
-            let sp = self.shared.get(&p).unwrap();
-            if sp.generation != gen {
-                return;
-            }
+        if self.shared[p.index()].generation != gen {
+            return;
         }
         self.advance_flows(p, now);
-        // complete all flows that hit zero
-        let finished: Vec<Flow> = {
-            let sp = self.shared.get_mut(&p).unwrap();
-            let mut done = Vec::new();
+        // complete all flows that hit zero (tolerance scaled to flow size)
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        finished.clear();
+        {
+            let incremental = self.cfg.incremental;
+            let routes = &self.routes;
+            let scratch = &mut self.flow_scratch;
+            let sp = &mut self.shared[p.index()];
             let mut i = 0;
             while i < sp.flows.len() {
-                if sp.flows[i].remaining <= 1e-9 {
-                    done.push(sp.flows.swap_remove(i));
+                if sp.flows[i].remaining <= completion_eps(sp.flows[i].total, now) {
+                    finished.push(sp.remove_flow_entry(i, routes, incremental, scratch));
                 } else {
                     i += 1;
                 }
             }
-            done
-        };
-        for f in finished {
+        }
+        for f in finished.drain(..) {
             let end = now + f.fixed;
             if self.cfg.collect_timeline {
                 self.result.timeline.push(TimelineEvent {
@@ -754,7 +998,8 @@ impl<'a> Engine<'a> {
             }
             self.complete(f.task, f.iter, f.start, end, executor);
         }
-        if !self.shared[&p].flows.is_empty() {
+        self.finished_scratch = finished;
+        if !self.shared[p.index()].flows.is_empty() {
             self.reschedule_flows(p, now);
         }
     }
@@ -790,15 +1035,15 @@ impl<'a> Engine<'a> {
 
         // Release storage predecessors.
         for &pred in self.graph.predecessors(task) {
-            if let Some(st) = self.storage.get_mut(&pred) {
+            if let Some(st) = self.storage[pred.index()].as_mut() {
                 if st.consumers_left > 0 {
                     st.consumers_left -= 1;
                     st.last_consumer_end = st.last_consumer_end.max(end);
                     if st.consumers_left == 0 && st.resident {
                         st.resident = false;
                         let p = self.point_of[pred.index()].unwrap();
-                        let usage = self.mem_usage.entry(p).or_insert(0);
-                        *usage = usage.saturating_sub(st.bytes);
+                        self.mem_usage[p.index()] =
+                            self.mem_usage[p.index()].saturating_sub(st.bytes);
                         self.flat_timings[pred.index()] = (st.start, st.last_consumer_end);
                     }
                 }
@@ -810,28 +1055,36 @@ impl<'a> Engine<'a> {
         // discharged without data, so a join after an untaken branch still
         // activates once its live inputs arrive, and all-phantom tasks die
         // and propagate phantoms downstream.
-        let succs = self.graph.successors(task).to_vec();
+        let mut succs = std::mem::take(&mut self.succ_scratch);
+        succs.clear();
+        succs.extend_from_slice(self.graph.successors(task));
         let triggered = executor.triggered(task, &succs);
-        for s in succs {
+        for &s in &succs {
             let real = triggered.contains(&s);
             self.tick(s, iter, end, real);
         }
+        self.succ_scratch = succs;
     }
 
-    /// Deliver one tick (real or phantom) to `(task, iter)`.
+    /// Deliver one tick (real or phantom) to `(task, iter)`, then discharge
+    /// any dead-path cascade (all-phantom joins) iteratively — the reused
+    /// stack pops in the same depth-first order the old recursion visited,
+    /// without a `to_vec` allocation per dead task.
     fn tick(&mut self, s: TaskId, iter: u32, end: Time, real: bool) {
+        self.tick_one(s, iter, end, real);
+        while let Some(next) = self.dead_scratch.pop() {
+            self.tick_one(next, iter, end, false);
+        }
+    }
+
+    fn tick_one(&mut self, s: TaskId, iter: u32, end: Time, real: bool) {
         if !self.graph.task(s).enabled {
             return;
         }
         let iters = self.cfg.iterations as usize;
         let slot = s.index() * iters + iter as usize;
         if self.deps_left[slot] == u32::MAX {
-            self.deps_left[slot] = self
-                .graph
-                .predecessors(s)
-                .iter()
-                .filter(|p| self.graph.task(**p).enabled)
-                .count() as u32;
+            self.deps_left[slot] = self.enabled_in_deg[s.index()];
         }
         self.deps_left[slot] -= 1;
         if real {
@@ -845,9 +1098,10 @@ impl<'a> Engine<'a> {
                 let at = self.ready_time[slot];
                 self.push_event(at, Event::Arrival(s, iter));
             } else {
-                // dead path: discharge downstream dependencies
-                for next in self.graph.successors(s).to_vec() {
-                    self.tick(next, iter, end, false);
+                // dead path: queue successors for phantom discharge
+                // (reversed so the stack pops them in graph order)
+                for &next in self.graph.successors(s).iter().rev() {
+                    self.dead_scratch.push(next);
                 }
             }
         }
@@ -1153,6 +1407,101 @@ mod tests {
         .unwrap();
         assert_eq!(r.makespan, 20.0); // c never triggered
         assert_eq!(r.unfinished, 1);
+    }
+
+    #[test]
+    fn huge_transfers_complete_despite_float_residue() {
+        // Bytes near 2^50: with the old absolute 1e-9 completion epsilon,
+        // the float residue left in `remaining` after advancing could
+        // exceed the tolerance — and the rescheduled completion could
+        // round below the time resolution, respawning zero-length
+        // FlowDone events until the event cap. The size-scaled tolerance
+        // must finish in a handful of events with exact work conservation.
+        let hw = tiny_hw(1.0);
+        let bus = hw.points_of_kind("comm")[0];
+        let mut g = TaskGraph::new();
+        let work = [(1u64 << 50) + 1, (1u64 << 50) + 3, (1u64 << 50) + 7];
+        let mut m = Mapping::new();
+        for (i, w) in work.iter().enumerate() {
+            let t = g.add(format!("x{i}"), comm_task(*w));
+            m.map(t, bus);
+        }
+        let cfg = SimConfig {
+            max_events: 10_000,
+            ..Default::default()
+        };
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &cfg).unwrap();
+        assert_eq!(r.completed, 3);
+        // unit-bandwidth shared bus that is never idle: makespan == total
+        let total: f64 = work.iter().map(|w| *w as f64).sum();
+        assert!(
+            (r.makespan - total).abs() / total < 1e-9,
+            "{} vs {total}",
+            r.makespan
+        );
+    }
+
+    #[test]
+    fn small_flows_late_in_long_simulations_complete() {
+        // A ~2^50-cycle transfer shares the bus with a 100-byte flow
+        // released near its end: the small flow's residue after advancing
+        // (~ulp of the absolute time) dwarfs any size-scaled tolerance,
+        // so the epsilon must scale with simulation time too, or the
+        // completion event respawns at the same timestamp forever.
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut g = TaskGraph::new();
+        let big = g.add("big", comm_task(1u64 << 50));
+        let gate = g.add("gate", compute_task((1u64 << 50) as f64 - 1000.0));
+        let small = g.add("small", comm_task(100));
+        g.connect(gate, small);
+        let mut m = Mapping::new();
+        m.map(big, bus);
+        m.map(gate, core);
+        m.map(small, bus);
+        let cfg = SimConfig {
+            max_events: 10_000,
+            ..Default::default()
+        };
+        let r = simulate(&hw, &g, &m, &Registry::standard(), &cfg).unwrap();
+        assert_eq!(r.completed, 3);
+        assert!(r.makespan >= (1u64 << 50) as f64);
+    }
+
+    #[test]
+    fn full_recompute_path_matches_incremental() {
+        // fig6 scenario under both contention paths: bit-identical output
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let e = g.add("E", compute_task(100.0));
+        let a = g.add("A", comm_task(50));
+        let f = g.add("F", comm_task(200));
+        let b = g.add("B", compute_task(100.0));
+        let c = g.add("C", comm_task(80));
+        g.connect(e, a);
+        g.connect(e, f);
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e, core);
+        m.map(b, core);
+        for t in [a, f, c] {
+            m.map(t, bus);
+        }
+        let base = SimConfig {
+            collect_timeline: true,
+            ..Default::default()
+        };
+        let incr = simulate(&hw, &g, &m, &Registry::standard(), &base).unwrap();
+        let full_cfg = SimConfig {
+            incremental: false,
+            ..base
+        };
+        let full = simulate(&hw, &g, &m, &Registry::standard(), &full_cfg).unwrap();
+        assert_eq!(incr, full);
     }
 
     #[test]

@@ -18,10 +18,122 @@
 //! * **Fully-connected** — one dedicated link per ordered endpoint pair.
 //! * **Tree** — the up-down path through the lowest common ancestor.
 
-use crate::hwir::{Coord, Topology};
+use std::collections::HashMap;
+
+use crate::hwir::{Addr, Coord, Hardware, PointId, PointKind, Topology};
+use crate::mapping::Mapping;
+use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
 
 /// Opaque link identifier, unique within one communication point.
 pub type LinkId = u64;
+
+/// Interned per-(task, point) link sets with dense per-point link indices.
+///
+/// Built once at simulation setup from the precomputed task→point map:
+/// every enabled communication task with route information gets its
+/// [`link_set`] computed exactly once, and the sparse [`LinkId`]s are
+/// remapped to contiguous `0..num_links(point)` indices so link occupancy
+/// can live in a flat counter array instead of a hash map. Both the exact
+/// engine and the Algorithm-1 scheduler share this table.
+#[derive(Debug, Clone, Default)]
+pub struct RouteTable {
+    /// Flat arena of dense per-point link indices, one contiguous span per
+    /// routed task.
+    arena: Vec<u32>,
+    /// Per task index: `(offset, len)` into `arena`; `len == 0` means the
+    /// flow shares the whole resource (no route / memory channel).
+    spans: Vec<(u32, u32)>,
+    /// Per point index: number of distinct links any routed task occupies.
+    num_links: Vec<u32>,
+}
+
+impl RouteTable {
+    /// Intern the link sets of every enabled, routed communication task.
+    /// `point_of` is the task-index→point map precomputed from the mapping.
+    pub fn build(hw: &Hardware, graph: &TaskGraph, point_of: &[Option<PointId>]) -> RouteTable {
+        let mut table = RouteTable {
+            arena: Vec::new(),
+            spans: vec![(0, 0); graph.capacity()],
+            num_links: vec![0; hw.num_points()],
+        };
+        // one interner per comm point: sparse LinkId -> dense index
+        let mut interners: Vec<HashMap<LinkId, u32>> = vec![HashMap::new(); hw.num_points()];
+        for task in graph.iter().filter(|t| t.enabled) {
+            let TaskKind::Comm {
+                route: Some((from, to)),
+                ..
+            } = &task.kind
+            else {
+                continue;
+            };
+            let Some(p) = point_of.get(task.id.index()).copied().flatten() else {
+                continue;
+            };
+            let entry = hw.entry(p);
+            // memory/DRAM channels share the whole resource: no links
+            let PointKind::Comm(attrs) = &entry.point.kind else {
+                continue;
+            };
+            let Addr::Comm { matrix, .. } = &entry.addr else {
+                continue;
+            };
+            let Some(shape) = hw.matrix_shape(matrix) else {
+                continue;
+            };
+            let raw = link_set(&attrs.topology, from, to, shape);
+            if raw.is_empty() {
+                continue;
+            }
+            let off = table.arena.len() as u32;
+            let interner = &mut interners[p.index()];
+            for id in raw {
+                let next = interner.len() as u32;
+                let dense = *interner.entry(id).or_insert(next);
+                table.arena.push(dense);
+            }
+            table.num_links[p.index()] = interner.len() as u32;
+            table.spans[task.id.index()] = (off, table.arena.len() as u32 - off);
+        }
+        table
+    }
+
+    /// [`RouteTable::build`] from a mapping directly, deriving the
+    /// task-index→point map (for callers that don't keep one around).
+    pub fn from_mapping(hw: &Hardware, graph: &TaskGraph, mapping: &Mapping) -> RouteTable {
+        let mut point_of = vec![None; graph.capacity()];
+        for (t, p) in mapping.mapped_tasks() {
+            if t.index() < point_of.len() {
+                point_of[t.index()] = Some(p);
+            }
+        }
+        RouteTable::build(hw, graph, &point_of)
+    }
+
+    /// `(offset, len)` span of a task's dense link set (`len == 0` =
+    /// whole-resource sharing).
+    pub fn span_of(&self, task: TaskId) -> (u32, u32) {
+        self.spans.get(task.index()).copied().unwrap_or((0, 0))
+    }
+
+    /// Resolve a span into the dense link indices it covers.
+    pub fn span(&self, off: u32, len: u32) -> &[u32] {
+        &self.arena[off as usize..(off + len) as usize]
+    }
+
+    /// Dense link indices occupied by a task (empty = whole-resource).
+    pub fn links_of(&self, task: TaskId) -> &[u32] {
+        let (off, len) = self.span_of(task);
+        self.span(off, len)
+    }
+
+    /// Number of distinct dense links of a point's occupancy array.
+    pub fn num_links(&self, point: PointId) -> usize {
+        self.num_links
+            .get(point.index())
+            .map(|n| *n as usize)
+            .unwrap_or(0)
+    }
+}
 
 /// Links occupied by a `from -> to` flow on a level with `shape` under
 /// `topo`. Empty when `from == to` (no network traversal).
@@ -206,6 +318,109 @@ mod tests {
         let p = link_set(&Topology::Tree { fanout: 2 }, &c(&[0]), &c(&[1]), &[8]);
         let q = link_set(&Topology::Tree { fanout: 2 }, &c(&[6]), &c(&[7]), &[8]);
         assert!(!flows_contend(&p, &q));
+    }
+
+    // ------------------------------------------------------------------
+    // Routing regression suite: exact link sets, pinning the deterministic
+    // routing conventions so the dense-remap refactor (RouteTable) can
+    // never silently change routes. Ids follow mesh_link_id / ring / tree
+    // encodings documented above.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn mesh_exact_dimension_order_links() {
+        // (0,0)->(1,2) in 4x4: dim 0 first (one +step at node 0), then
+        // dim 1 (+steps at nodes (1,0)=4 and (1,1)=5).
+        let links = link_set(&Topology::Mesh, &c(&[0, 0]), &c(&[1, 2]), &[4, 4]);
+        assert_eq!(links, vec![1, 1027, 1283]);
+    }
+
+    #[test]
+    fn torus_tie_breaks_upward() {
+        // distance 2 both ways in a size-4 ring of nodes: tie goes "up"
+        // (+1 direction), so 0->2 crosses nodes 0 and 1 positively.
+        let links = link_set(&Topology::Torus, &c(&[0]), &c(&[2]), &[4]);
+        assert_eq!(links, vec![1, 257]);
+        // strictly shorter wrap goes downward: 0->3 is one -step at node 0
+        let links = link_set(&Topology::Torus, &c(&[0]), &c(&[3]), &[4]);
+        assert_eq!(links, vec![0]);
+        // 2D tie in both dims: up in dim 0 (nodes 0, 4), then up in dim 1
+        // (nodes (2,0)=8 and (2,1)=9)
+        let links = link_set(&Topology::Torus, &c(&[0, 0]), &c(&[2, 2]), &[4, 4]);
+        assert_eq!(links, vec![1, 1025, 2051, 2307]);
+    }
+
+    #[test]
+    fn ring_exact_multidim_linearization() {
+        // row-major linearization over [2,4]: (0,3)=3 -> (1,0)=4 is one
+        // clockwise hop; (1,3)=7 -> (0,0)=0 wraps clockwise across 7.
+        assert_eq!(link_set(&Topology::Ring, &c(&[0, 3]), &c(&[1, 0]), &[2, 4]), vec![7]);
+        assert_eq!(link_set(&Topology::Ring, &c(&[1, 3]), &c(&[0, 0]), &[2, 4]), vec![15]);
+        // equal arcs tie clockwise: 0 -> 4 over 8 nodes
+        assert_eq!(
+            link_set(&Topology::Ring, &c(&[0, 0]), &c(&[1, 0]), &[2, 4]),
+            vec![1, 3, 5, 7]
+        );
+    }
+
+    #[test]
+    fn tree_exact_lca_paths() {
+        let t = Topology::Tree { fanout: 2 };
+        // siblings meet one level up: up-edge from 2, down-edge into 3
+        assert_eq!(link_set(&t, &c(&[2]), &c(&[3]), &[8]), vec![131072, 196609]);
+        // cousins one subtree over
+        assert_eq!(link_set(&t, &c(&[4]), &c(&[5]), &[8]), vec![262144, 327681]);
+        // opposite corners climb all the way to the root (3 levels)
+        assert_eq!(
+            link_set(&t, &c(&[0]), &c(&[7]), &[8]),
+            vec![0, 458753, 2, 196611, 4, 65541]
+        );
+    }
+
+    #[test]
+    fn route_table_interns_dense_per_point_indices() {
+        use crate::hwir::{CommAttrs, ComputeAttrs, Element, Hardware, SpaceMatrix, SpacePoint};
+        use crate::taskgraph::{TaskGraph, TaskKind};
+
+        let mut m = SpaceMatrix::new("chip", vec![3]);
+        for i in 0..3 {
+            m.set(
+                Coord::new(vec![i]),
+                Element::Point(SpacePoint::compute("core", ComputeAttrs::new((4, 4), 8))),
+            );
+        }
+        m.add_comm(SpacePoint::comm("noc", CommAttrs::new(Topology::Mesh, 1.0, 0)));
+        let hw = Hardware::build(m);
+        let noc = hw.points_of_kind("comm")[0];
+
+        let mut g = TaskGraph::new();
+        let mk = |g: &mut TaskGraph, name: &str, from: u32, to: u32| {
+            g.add(
+                name,
+                TaskKind::Comm {
+                    bytes: 10,
+                    hops: (from as i64 - to as i64).unsigned_abs(),
+                    route: Some((Coord::new(vec![from]), Coord::new(vec![to]))),
+                },
+            )
+        };
+        let x = mk(&mut g, "x", 0, 2);
+        let y = mk(&mut g, "y", 0, 1);
+        let z = mk(&mut g, "z", 2, 0);
+        let u = g.add("u", TaskKind::Comm { bytes: 10, hops: 0, route: None });
+        let mut point_of = vec![None; g.capacity()];
+        for t in [x, y, z, u] {
+            point_of[t.index()] = Some(noc);
+        }
+        let table = RouteTable::build(&hw, &g, &point_of);
+        // 4 distinct directed links: x's two, z's two (y shares x's first)
+        assert_eq!(table.num_links(noc), 4);
+        assert_eq!(table.links_of(x), &[0, 1]);
+        assert_eq!(table.links_of(y), &[0]); // shared first hop, same id
+        assert_eq!(table.links_of(z), &[2, 3]); // reverse direction disjoint
+        assert!(table.links_of(u).is_empty()); // routeless = whole resource
+        // dense ids agree with the raw link_set contention structure
+        assert_eq!(table.links_of(x)[0], table.links_of(y)[0]);
     }
 
     #[test]

@@ -117,6 +117,21 @@ impl TaskGraph {
         &self.in_edges[id.index()]
     }
 
+    /// Per-task count of *enabled* predecessors, indexed by
+    /// [`TaskId::index`] (tombstones and disabled tasks get 0). The
+    /// simulator's dependency counters are seeded from this once per run
+    /// instead of re-filtering predecessor lists per (task, iteration).
+    pub fn enabled_in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.tasks.len()];
+        for t in self.iter().filter(|t| t.enabled) {
+            deg[t.id.index()] = self.in_edges[t.id.index()]
+                .iter()
+                .filter(|p| self.task(**p).enabled)
+                .count() as u32;
+        }
+        deg
+    }
+
     /// Tasks with no predecessors (simulation entry points).
     pub fn sources(&self) -> Vec<TaskId> {
         self.iter()
@@ -292,6 +307,21 @@ mod tests {
         let pos = |t: TaskId| order.iter().position(|x| *x == t).unwrap();
         assert!(pos(a) < pos(b) && pos(a) < pos(c));
         assert!(pos(b) < pos(d) && pos(c) < pos(d));
+    }
+
+    #[test]
+    fn enabled_in_degrees_skip_disabled_and_tombstones() {
+        let (mut g, [a, b, c, d]) = diamond();
+        g.task_mut(b).enabled = false;
+        let deg = g.enabled_in_degrees();
+        assert_eq!(deg[a.index()], 0);
+        assert_eq!(deg[b.index()], 0); // disabled task itself zeroed
+        assert_eq!(deg[c.index()], 1);
+        assert_eq!(deg[d.index()], 1); // only c counts, b is disabled
+        g.remove(c);
+        let deg = g.enabled_in_degrees();
+        assert_eq!(deg[c.index()], 0); // tombstone
+        assert_eq!(deg[d.index()], 0);
     }
 
     #[test]

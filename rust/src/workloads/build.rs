@@ -539,6 +539,63 @@ pub fn mpmc_decode_spatial(
     }
 }
 
+// ======================================================================
+// Synthetic contention stress (engine benchmarking + golden tests)
+// ======================================================================
+
+/// A contention-heavy synthetic workload on a `grid` DMC mesh: `flows`
+/// transfers between seeded-random coordinates (every fifth routeless,
+/// i.e. whole-NoC sharing), each released by a staggered compute preamble
+/// so flows arrive and depart at distinct times and every event triggers
+/// a rate update. Shared by `benches/sim_speed.rs` and the golden
+/// incremental-vs-full equivalence tests so the benchmarked workload is
+/// exactly the one proven bit-identical.
+pub fn contended_noc(flows: usize, grid: (usize, usize), seed: u64) -> Workload {
+    use crate::hwir::Coord;
+    use crate::taskgraph::OpClass;
+    use crate::util::rng::Pcg;
+
+    let hw = DmcParams {
+        grid,
+        with_dram: false,
+        ..DmcParams::default()
+    }
+    .build();
+    let cores = hw.points_of_kind("compute");
+    let noc = hw.points_named("noc")[0];
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    let mut rng = Pcg::new(seed);
+    let (rows, cols) = (grid.0 as u64, grid.1 as u64);
+    for i in 0..flows {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = (rng.below(64) + 1) as f64 * 1024.0;
+        let src = graph.add(format!("src{i}"), TaskKind::Compute(c));
+        mapping.map(src, cores[i % cores.len()]);
+        let from = Coord::new(vec![rng.below(rows) as u32, rng.below(cols) as u32]);
+        let to = Coord::new(vec![rng.below(rows) as u32, rng.below(cols) as u32]);
+        let hops = from.manhattan(&to);
+        let bytes = rng.below(2000) + 100;
+        let xfer = if i % 5 == 0 {
+            graph.add(format!("u{i}"), TaskKind::Comm { bytes, hops: 0, route: None })
+        } else {
+            graph.add(
+                format!("x{i}"),
+                TaskKind::Comm { bytes, hops, route: Some((from, to)) },
+            )
+        };
+        mapping.map(xfer, noc);
+        graph.connect(src, xfer);
+    }
+    Workload {
+        hw,
+        graph,
+        mapping,
+        name: format!("contended-noc-f{flows}-{}x{}", grid.0, grid.1),
+        notes: Vec::new(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

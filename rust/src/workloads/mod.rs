@@ -10,5 +10,7 @@ pub mod collectives;
 pub mod ops;
 pub mod transformer;
 
-pub use build::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, Workload};
+pub use build::{
+    contended_noc, dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decode_spatial, Workload,
+};
 pub use transformer::LlmConfig;

@@ -270,8 +270,8 @@ fn dmc_beats_gsm_at_comparable_area() {
     let coord = Coordinator::standard();
     let cfg = LlmConfig::gpt3_6_7b();
     let seq = 512; // reduced for test runtime
-    let dmc = dmc_prefill(&cfg, seq, &DmcParams::table2(2));
-    let gsm = gsm_prefill(&cfg, seq, &GsmParams::table2(2));
+    let dmc = dmc_prefill(&cfg, seq, &DmcParams::table2(2).unwrap());
+    let gsm = gsm_prefill(&cfg, seq, &GsmParams::table2(2).unwrap());
     let rd = coord.simulate(&dmc, &SimConfig::default()).unwrap();
     let rg = coord.simulate(&gsm, &SimConfig::default()).unwrap();
     assert!(

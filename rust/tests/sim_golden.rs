@@ -1,0 +1,130 @@
+//! Golden equivalence: the incremental contention tracker must produce
+//! **bit-identical** `SimResult`s (makespan, timings, busy/energy maps,
+//! truncation counts, timeline) to the full per-event recompute across the
+//! paper's workload families — the fig6 contention scenario, fig8-style
+//! kernel/decode graphs, the fig9 DMC/GSM prefill workloads, and a
+//! synthetic contended-NoC storm with mixed routed/universal flows.
+
+use mldse::arch::{DmcParams, GsmParams};
+use mldse::eval::Registry;
+use mldse::mapping::Mapping;
+use mldse::sim::{simulate, SimConfig, SimResult};
+use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+use mldse::workloads::{
+    contended_noc, dmc_decode_temporal, dmc_prefill, gsm_prefill, LlmConfig, Workload,
+};
+
+fn small_llm() -> LlmConfig {
+    LlmConfig {
+        hidden: 256,
+        heads: 4,
+        ffn: 1024,
+        layers: 2,
+        elem_bytes: 2,
+    }
+}
+
+fn small_dmc() -> DmcParams {
+    let mut p = DmcParams::table2(2).unwrap();
+    p.grid = (4, 4);
+    p
+}
+
+/// Run both contention paths and assert full structural equality.
+fn assert_bit_identical(w: &Workload, iterations: u32) -> (SimResult, SimResult) {
+    let evals = Registry::standard();
+    let base = SimConfig {
+        iterations,
+        collect_timeline: true,
+        ..Default::default()
+    };
+    let incr = simulate(&w.hw, &w.graph, &w.mapping, &evals, &base)
+        .unwrap_or_else(|e| panic!("incremental sim of {} failed: {e}", w.name));
+    let full_cfg = SimConfig {
+        incremental: false,
+        ..base
+    };
+    let full = simulate(&w.hw, &w.graph, &w.mapping, &evals, &full_cfg)
+        .unwrap_or_else(|e| panic!("full-recompute sim of {} failed: {e}", w.name));
+    assert_eq!(
+        incr, full,
+        "incremental vs full recompute diverged for {}",
+        w.name
+    );
+    (incr, full)
+}
+
+#[test]
+fn golden_fig6_contention_scenario() {
+    // The paper's Fig. 6 walkthrough: two transfers share a bus, a third
+    // arrives mid-flight and truncates the survivor.
+    let hw = small_dmc().build();
+    let cores = hw.points_of_kind("compute");
+    let noc = hw.points_named("noc")[0];
+    let mut g = TaskGraph::new();
+    let mut m = Mapping::new();
+    let compute = |g: &mut TaskGraph, m: &mut Mapping, name: &str, cyc: f64, core: usize| {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = cyc * 2.0 * small_dmc().vector_lanes as f64;
+        let t = g.add(name, TaskKind::Compute(c));
+        m.map(t, cores[core]);
+        t
+    };
+    let comm = |g: &mut TaskGraph, m: &mut Mapping, name: &str, bytes: u64| {
+        let t = g.add(name, TaskKind::Comm { bytes, hops: 0, route: None });
+        m.map(t, noc);
+        t
+    };
+    let e = compute(&mut g, &mut m, "E", 100.0, 0);
+    let a = comm(&mut g, &mut m, "A", 50);
+    let f = comm(&mut g, &mut m, "F", 200);
+    let b = compute(&mut g, &mut m, "B", 100.0, 1);
+    let c = comm(&mut g, &mut m, "C", 80);
+    g.connect(e, a);
+    g.connect(e, f);
+    g.connect(a, b);
+    g.connect(b, c);
+    let w = Workload {
+        hw,
+        graph: g,
+        mapping: m,
+        name: "fig6-golden".into(),
+        notes: Vec::new(),
+    };
+    let (incr, _) = assert_bit_identical(&w, 1);
+    assert!(incr.truncations > 0, "fig6 must exercise truncation");
+}
+
+#[test]
+fn golden_contended_noc_storm() {
+    // Mixed routed + universal flows hammering one mesh NoC: the exact
+    // scenario the incremental occupancy tracker optimizes, built by the
+    // same generator `benches/sim_speed.rs` measures — what the bench
+    // times is what the golden test proves bit-identical.
+    let w = contended_noc(48, (4, 4), 0xD5E);
+    let (incr, _) = assert_bit_identical(&w, 2);
+    assert!(incr.truncations > 0, "storm must exercise contention");
+    assert_eq!(incr.unfinished, 0);
+}
+
+#[test]
+fn golden_fig9_dmc_prefill() {
+    let w = dmc_prefill(&small_llm(), 128, &small_dmc());
+    assert_bit_identical(&w, 1);
+    // multi-iteration streaming must agree too
+    assert_bit_identical(&w, 3);
+}
+
+#[test]
+fn golden_fig9_gsm_prefill() {
+    let mut p = GsmParams::table2(2).unwrap();
+    p.sms = 16;
+    let w = gsm_prefill(&small_llm(), 128, &p);
+    assert_bit_identical(&w, 1);
+}
+
+#[test]
+fn golden_fig8_decode_graph() {
+    let w = dmc_decode_temporal(&small_llm(), 128, 2, &small_dmc());
+    assert_bit_identical(&w, 1);
+}
