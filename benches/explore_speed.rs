@@ -1,22 +1,63 @@
-//! Bench: exploration-engine throughput (evals/sec) for the four
-//! explorers on the DMC hardware-parameter preset, demonstrating the
-//! memoized batched evaluation path. Run with
-//! `cargo bench --bench explore_speed` (add MLDSE_BENCH_QUICK=1 for the
-//! smoke-sized configuration).
+//! Bench: exploration-engine throughput (evals/sec), recorded into a
+//! machine-readable `BENCH_explore.json` at the repo root (uploaded as a
+//! CI artifact, mirroring `BENCH_sim.json`) so the exploration-throughput
+//! trajectory is tracked PR over PR.
+//!
+//! Three sections:
+//!
+//! 1. **presets** — evals/sec for the four explorers on the DMC
+//!    hardware-parameter preset (the whole-candidate-topology case);
+//! 2. **SA mapping tier** — the headline number for the throughput
+//!    overhaul: a simulated-annealing placement search run through the new
+//!    engine (persistent worker pool + topology-keyed setup reuse +
+//!    arena-reusing sim sessions) versus the pre-overhaul batched engine
+//!    (`streaming = false`, `setup_reuse = false`: per-batch scoped
+//!    threads, fresh hardware/route-table/arenas per candidate);
+//! 3. **hill-climb mapping tier** — same comparison with batched neighbor
+//!    proposals, exercising the streaming pool with multi-candidate
+//!    batches.
+//!
+//! Run with `cargo bench --bench explore_speed` (MLDSE_BENCH_QUICK=1 for
+//! the smoke-sized configuration).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use mldse::dse::explore::{
-    explore, explorer_by_name, preset, ExploreOpts, Objective,
+    explore, explorer_by_name, placement_demo, preset, AnnealExplorer, Explorer, ExploreOpts,
+    HillClimbExplorer, Makespan, Objective,
 };
 use mldse::eval::Registry;
+use mldse::util::json::{Json, JsonObj};
+
+/// Median seconds for one exploration run under `opts`.
+fn time_explore(
+    name: &str,
+    space: &dyn mldse::dse::explore::DesignSpace,
+    objectives: &[Box<dyn Objective>],
+    explorer: &dyn Explorer,
+    registry: &Registry,
+    opts: &ExploreOpts,
+    reps: usize,
+) -> (f64, mldse::dse::explore::ExplorationReport) {
+    let mut last = None;
+    let median = common::bench(name, reps, || {
+        last = Some(explore(space, objectives, explorer, registry, opts).expect("explore"));
+    });
+    (median, last.expect("at least one run"))
+}
 
 fn main() {
     let quick = common::quick();
+    let registry = Registry::standard();
+    let mut out = JsonObj::new();
+    out.insert("bench", "explore_speed".into());
+    out.insert("quick", quick.into());
+
+    // --- 1. explorer throughput on the DMC hardware-parameter preset ---
     let preset_name = if quick { "dmc-quick" } else { "dmc" };
     let budget = if quick { 24 } else { 200 };
-    let registry = Registry::standard();
+    let mut presets = JsonObj::new();
     for name in ["grid", "random", "hill", "anneal"] {
         let (space, objectives): (_, Vec<Box<dyn Objective>>) =
             preset(preset_name).expect("preset");
@@ -40,5 +81,141 @@ fn main() {
             report.sim_calls,
             report.evals_per_sec()
         );
+        presets.insert(
+            format!("{preset_name}/{name}"),
+            report.evals_per_sec().into(),
+        );
     }
+    out.insert("presets", Json::Obj(presets));
+
+    // --- 2. SA mapping tier: new engine vs pre-overhaul batched engine ---
+    // The placement space shares one topology across every candidate, so
+    // the setup cache builds hardware/route-table once for the whole
+    // search and the annealer's one-candidate proposals ride the
+    // arena-reusing inline path instead of a spawn-join barrier.
+    // A hardware-heavy placement problem: the legacy path clones the
+    // 36/64-core chip and rebuilds routes + arenas per candidate, while
+    // the new path rebinds a small mapping against one shared setup.
+    let (grid, tasks, sa_budget, reps) = if quick {
+        ((6usize, 6usize), 12usize, 300usize, 3usize)
+    } else {
+        ((8, 8), 24, 2000, 5)
+    };
+    let space = placement_demo("map-sa-bench", grid, tasks);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let annealer = AnnealExplorer {
+        seed: 0xD5E,
+        init_temp: 0.1,
+    };
+    let new_opts = ExploreOpts {
+        budget: sa_budget,
+        ..Default::default()
+    };
+    let legacy_opts = ExploreOpts {
+        budget: sa_budget,
+        streaming: false,
+        setup_reuse: false,
+        ..Default::default()
+    };
+    let (new_s, new_report) = time_explore(
+        "SA mapping (streaming + setup reuse)",
+        &space,
+        &objectives,
+        &annealer,
+        &registry,
+        &new_opts,
+        reps,
+    );
+    let (legacy_s, legacy_report) = time_explore(
+        "SA mapping (batched legacy)",
+        &space,
+        &objectives,
+        &annealer,
+        &registry,
+        &legacy_opts,
+        reps,
+    );
+    // both paths must agree bit-exactly (the determinism suite pins the
+    // full report; this is the bench-side sanity check)
+    assert_eq!(new_report.evals.len(), legacy_report.evals.len());
+    assert_eq!(
+        new_report.best().map(|e| e.objectives[0].to_bits()),
+        legacy_report.best().map(|e| e.objectives[0].to_bits()),
+        "streaming and batched paths diverged"
+    );
+    let sa_new = sa_budget as f64 / new_s;
+    let sa_legacy = sa_budget as f64 / legacy_s;
+    println!(
+        "[bench] SA mapping tier ({}x{} grid, {tasks} tasks, {sa_budget} evals): \
+         {sa_new:.0} evals/s new vs {sa_legacy:.0} evals/s legacy ({:.2}x), \
+         setup cache hit rate {:.3}",
+        grid.0,
+        grid.1,
+        sa_new / sa_legacy,
+        new_report.setup_hit_rate()
+    );
+    let mut sa = JsonObj::new();
+    sa.insert("budget", (sa_budget as u64).into());
+    sa.insert("evals_per_sec_streaming", sa_new.into());
+    sa.insert("evals_per_sec_batched_legacy", sa_legacy.into());
+    sa.insert("streaming_vs_batched_speedup", (sa_new / sa_legacy).into());
+    sa.insert("setup_cache_hit_rate", new_report.setup_hit_rate().into());
+    sa.insert("setup_builds", (new_report.setup_builds as u64).into());
+    sa.insert("sim_calls", (new_report.sim_calls as u64).into());
+    out.insert("sa_mapping", Json::Obj(sa));
+
+    // --- 3. hill-climb mapping tier (multi-candidate neighbor batches) ---
+    let hc_budget = if quick { 200 } else { 1200 };
+    let climber = HillClimbExplorer {
+        seed: 0xD5E,
+        from_initial: true,
+        restarts: true,
+    };
+    let hc_new = ExploreOpts {
+        budget: hc_budget,
+        ..Default::default()
+    };
+    let hc_legacy = ExploreOpts {
+        budget: hc_budget,
+        streaming: false,
+        setup_reuse: false,
+        ..Default::default()
+    };
+    let (hn_s, _) = time_explore(
+        "hill mapping (streaming + setup reuse)",
+        &space,
+        &objectives,
+        &climber,
+        &registry,
+        &hc_new,
+        reps,
+    );
+    let (hl_s, _) = time_explore(
+        "hill mapping (batched legacy)",
+        &space,
+        &objectives,
+        &climber,
+        &registry,
+        &hc_legacy,
+        reps,
+    );
+    let hc_speedup = (hc_budget as f64 / hn_s) / (hc_budget as f64 / hl_s);
+    println!(
+        "[bench] hill mapping tier: {:.0} evals/s new vs {:.0} evals/s legacy ({hc_speedup:.2}x)",
+        hc_budget as f64 / hn_s,
+        hc_budget as f64 / hl_s,
+    );
+    let mut hc = JsonObj::new();
+    hc.insert("budget", (hc_budget as u64).into());
+    hc.insert("evals_per_sec_streaming", (hc_budget as f64 / hn_s).into());
+    hc.insert(
+        "evals_per_sec_batched_legacy",
+        (hc_budget as f64 / hl_s).into(),
+    );
+    hc.insert("streaming_vs_batched_speedup", hc_speedup.into());
+    out.insert("hill_mapping", Json::Obj(hc));
+
+    let doc = Json::Obj(out).to_pretty();
+    std::fs::write("BENCH_explore.json", &doc).expect("write BENCH_explore.json");
+    println!("[bench] wrote BENCH_explore.json");
 }

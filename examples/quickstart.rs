@@ -111,7 +111,7 @@ fn main() -> mldse::util::error::Result<()> {
     println!("makespan: {:.1} cycles", result.makespan);
     println!("tasks completed: {}", result.completed);
     for (p, peak) in &result.peak_memory {
-        println!("peak memory on {}: {} bytes", hw.entry(*p).addr, peak);
+        println!("peak memory on {}: {} bytes", hw.entry(p).addr, peak);
     }
 
     // undo/redo state control works too:

@@ -12,11 +12,24 @@
 //! * [`report`] — [`ExplorationReport`]: best candidate, Pareto front,
 //!   full evaluation log and throughput counters, as tables or JSON.
 //!
-//! The [`Engine`] evaluates candidate batches through
-//! [`run_parallel`](super::parallel::run_parallel) in deterministic input
-//! order with a candidate-fingerprint memo cache, so results are
-//! bit-identical across worker counts and repeated seeds, and repeated
-//! candidates cost nothing.
+//! ## Evaluation pipeline
+//!
+//! The [`Engine`] memoizes objective vectors by candidate fingerprint and
+//! evaluates cache misses through a **persistent**
+//! [`WorkerPool`](super::parallel::WorkerPool) spawned once per
+//! exploration — perturbative explorers proposing one candidate at a time
+//! no longer pay a thread spawn/join barrier per proposal. Evaluation is
+//! split per [`DesignSpace::topology_key`]: the hardware model, task-graph
+//! skeleton, interned route table and simulator arenas are built once per
+//! distinct key (an [`EvalPlan`], shared via `Arc` across workers) and
+//! only the per-candidate [`Binding`] (mapping + side figures) is rebuilt,
+//! so mapping-tier searches reuse one setup for the entire run. Each
+//! worker keeps a [`SimSession`] whose arenas persist across candidates.
+//!
+//! Results are **bit-identical** across worker counts, repeated seeds, the
+//! streaming and batched dispatch paths, and with the setup cache on or
+//! off; evaluator panics are caught per candidate and surface as failures
+//! instead of aborting the sweep.
 
 pub mod explorers;
 pub mod objective;
@@ -29,29 +42,45 @@ pub use explorers::{
 pub use objective::{AreaConstrainedMakespan, CostUsd, Edp, Makespan, Objective};
 pub use report::{Evaluation, ExplorationReport};
 pub use space::{
-    placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Candidate, Design,
-    DesignSpace, PackagingSpace, ParamSpace, PlacementSpace,
+    placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Binding, Candidate, Design,
+    DesignSpace, DesignView, PackagingSpace, ParamSpace, PlacementSpace,
 };
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::Scope;
 
 use crate::eval::Registry;
-use crate::sim::{simulate, SimConfig};
+use crate::hwir::Hardware;
+use crate::sim::links::RouteTable;
+use crate::sim::{simulate, SimConfig, SimSession, SimSetup};
+use crate::taskgraph::TaskGraph;
 use crate::util::error::Result;
 
-use super::parallel::run_parallel;
+use super::parallel::{catch_job, run_parallel_try, JobOutcome, WorkerPool};
 
 /// Exploration options.
 #[derive(Debug, Clone)]
 pub struct ExploreOpts {
     /// Maximum logged evaluations (cache hits included).
     pub budget: usize,
-    /// Worker threads for batch evaluation.
+    /// Worker threads for candidate evaluation.
     pub workers: usize,
     /// Memoize objective vectors by candidate fingerprint.
     pub cache: bool,
     /// Maximum candidates per parallel batch.
     pub batch: usize,
+    /// Evaluate through the persistent streaming worker pool (spawned once
+    /// per exploration, fed via submit/drain). `false` falls back to the
+    /// batched compatibility path — a one-shot pool per proposal batch —
+    /// which is result-identical and kept for benchmarking and triage.
+    pub streaming: bool,
+    /// Share topology-keyed evaluation setups (hardware model, route
+    /// table, simulator arenas) across candidates with equal
+    /// [`DesignSpace::topology_key`]s. `false` rebuilds everything per
+    /// candidate (the pre-overhaul engine) — result-identical.
+    pub setup_reuse: bool,
     pub sim: SimConfig,
 }
 
@@ -62,35 +91,218 @@ impl Default for ExploreOpts {
             workers: super::parallel::default_workers(),
             cache: true,
             batch: 64,
+            streaming: true,
+            setup_reuse: true,
             sim: SimConfig::default(),
         }
     }
 }
 
-fn evaluate_candidate(
+/// The shared half of candidate evaluation: everything that depends only
+/// on the candidate's [`DesignSpace::topology_key`] — built once per
+/// distinct key and shared via `Arc` across workers for the whole run.
+pub struct EvalPlan {
+    pub hw: Arc<Hardware>,
+    pub graph: Arc<TaskGraph>,
+    /// Interned per-(task, point) link sets of the topology's routed
+    /// communication tasks (route-identical for every candidate sharing
+    /// the key, per the `topology_key` contract).
+    pub routes: Arc<RouteTable>,
+    /// Unique id within one exploration; keys the simulator sessions'
+    /// cross-candidate demand-cache reuse.
+    pub id: u64,
+}
+
+type PlanResult = std::result::Result<Arc<EvalPlan>, String>;
+
+/// Exactly-once, topology-keyed plan cache shared by all workers. Each
+/// key's plan is built by the first worker to observe it (others block on
+/// the cell), so the build counter is deterministic: one build per
+/// distinct key, at any worker count.
+struct SetupCache {
+    cells: Mutex<HashMap<Vec<u32>, Arc<OnceLock<PlanResult>>>>,
+    builds: AtomicUsize,
+    /// Successful acquisitions of an already-built plan. Which worker
+    /// performs a build may race, but the totals are deterministic:
+    /// `hits = successful acquisitions - successful builds`.
+    hits: AtomicUsize,
+    next_id: AtomicU64,
+}
+
+impl SetupCache {
+    fn new() -> SetupCache {
+        SetupCache {
+            cells: Mutex::new(HashMap::new()),
+            builds: AtomicUsize::new(0),
+            hits: AtomicUsize::new(0),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Materialize `c` and split it into a shareable plan + its binding.
+    fn build(
+        &self,
+        space: &dyn DesignSpace,
+        c: &Candidate,
+    ) -> std::result::Result<(Arc<EvalPlan>, Binding), String> {
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let d = space.materialize(c).map_err(|e| format!("{e:#}"))?;
+        let routes = Arc::new(RouteTable::from_mapping(
+            &d.workload.hw,
+            &d.workload.graph,
+            &d.workload.mapping,
+        ));
+        let Design {
+            workload,
+            area_mm2,
+            cost_usd,
+        } = d;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let plan = Arc::new(EvalPlan {
+            hw: Arc::new(workload.hw),
+            graph: Arc::new(workload.graph),
+            routes,
+            id,
+        });
+        Ok((
+            plan,
+            Binding {
+                mapping: workload.mapping,
+                area_mm2,
+                cost_usd,
+            },
+        ))
+    }
+
+    /// The cached plan for `key`, built exactly once from `c` (the first
+    /// candidate observed with that key). Returns the representative's
+    /// binding when this call did the build, `None` on a cache hit.
+    fn plan_for(
+        &self,
+        space: &dyn DesignSpace,
+        key: Vec<u32>,
+        c: &Candidate,
+    ) -> (PlanResult, Option<Binding>) {
+        let cell = {
+            let mut cells = self.cells.lock().expect("setup cache poisoned");
+            Arc::clone(cells.entry(key).or_default())
+        };
+        let mut rep: Option<Binding> = None;
+        let res = cell
+            .get_or_init(|| match self.build(space, c) {
+                Ok((plan, binding)) => {
+                    rep = Some(binding);
+                    Ok(plan)
+                }
+                Err(e) => Err(e),
+            })
+            .clone();
+        (res, rep)
+    }
+}
+
+/// Evaluate one candidate against the shared setup cache, reusing the
+/// session's simulator arenas. Runs on pool workers and on the inline
+/// serial path alike.
+fn evaluate_shared(
     space: &dyn DesignSpace,
     objectives: &[Box<dyn Objective>],
     evals: &Registry,
     sim: &SimConfig,
+    setups: &SetupCache,
+    session: &mut SimSession,
     c: &Candidate,
-) -> Option<Vec<f64>> {
+) -> std::result::Result<Vec<f64>, String> {
     if !space.in_bounds(c) {
-        return None;
+        return Err(format!("candidate out of bounds for '{}'", space.name()));
     }
-    let design = space.materialize(c).ok()?;
-    let w = &design.workload;
-    let r = simulate(&w.hw, &w.graph, &w.mapping, evals, sim).ok()?;
-    Some(objectives.iter().map(|o| o.score(&design, &r)).collect())
+    let (plan, binding) = match space.topology_key(c) {
+        // No topology key (the default): every candidate is its own
+        // topology and exact repeats are already served by the value
+        // memo — build ephemerally and let the plan drop with this
+        // evaluation instead of retaining every topology for the run.
+        None => setups.build(space, c)?,
+        Some(key) => {
+            let (plan, rep) = setups.plan_for(space, key, c);
+            let plan = plan?;
+            let binding = match rep {
+                Some(b) => b,
+                None => {
+                    // reused a previously built plan
+                    setups.hits.fetch_add(1, Ordering::Relaxed);
+                    space.bind(c).map_err(|e| format!("{e:#}"))?
+                }
+            };
+            (plan, binding)
+        }
+    };
+    let setup = SimSetup {
+        routes: Some(Arc::clone(&plan.routes)),
+        key: Some(plan.id),
+    };
+    let r = session
+        .simulate_prepared(&plan.hw, &plan.graph, &binding.mapping, evals, sim, &setup)
+        .map_err(|e| e.to_string())?;
+    let view = DesignView {
+        hw: &*plan.hw,
+        graph: &*plan.graph,
+        mapping: &binding.mapping,
+        area_mm2: binding.area_mm2,
+        cost_usd: binding.cost_usd,
+    };
+    Ok(objectives.iter().map(|o| o.score(&view, &r)).collect())
 }
 
-/// Batched, memoized candidate evaluation: explorers propose candidates,
-/// the engine simulates the cache misses through the worker pool and logs
-/// every evaluation in proposal order.
-pub struct Engine<'a> {
+/// The pre-overhaul evaluation path — fresh materialization and a
+/// stateless simulation per candidate — behind
+/// `ExploreOpts::setup_reuse = false`. Result-identical to
+/// [`evaluate_shared`]; kept as the benchmark baseline and for triage.
+/// Each evaluation counts as a setup build (nothing is reused), so the
+/// report's `setup_hit_rate` honestly reads 0.
+fn evaluate_fresh(
+    space: &dyn DesignSpace,
+    objectives: &[Box<dyn Objective>],
+    evals: &Registry,
+    sim: &SimConfig,
+    setups: &SetupCache,
+    c: &Candidate,
+) -> std::result::Result<Vec<f64>, String> {
+    if !space.in_bounds(c) {
+        return Err(format!("candidate out of bounds for '{}'", space.name()));
+    }
+    setups.builds.fetch_add(1, Ordering::Relaxed);
+    let design = space.materialize(c).map_err(|e| format!("{e:#}"))?;
+    let w = &design.workload;
+    let r = simulate(&w.hw, &w.graph, &w.mapping, evals, sim).map_err(|e| e.to_string())?;
+    Ok(objectives
+        .iter()
+        .map(|o| o.score(&design.view(), &r))
+        .collect())
+}
+
+type EvalResult = std::result::Result<Vec<f64>, String>;
+
+fn flatten_outcome(outcome: JobOutcome<EvalResult>) -> EvalResult {
+    match outcome {
+        JobOutcome::Done(r) => r,
+        JobOutcome::Panicked(msg) => Err(format!("evaluator panicked: {msg}")),
+    }
+}
+
+/// Streaming, memoized candidate evaluation: explorers propose candidates,
+/// the engine feeds the cache misses to the persistent worker pool (or
+/// evaluates them inline when that is cheaper) and logs every evaluation
+/// in proposal order.
+pub struct Engine<'a, 'scope> {
     space: &'a dyn DesignSpace,
     objectives: &'a [Box<dyn Objective>],
     evals: &'a Registry,
     opts: &'a ExploreOpts,
+    setups: Arc<SetupCache>,
+    pool: Option<WorkerPool<'scope, Candidate, EvalResult>>,
+    /// Session for inline evaluation (serial runs and single-miss
+    /// batches); its arenas persist across the whole exploration.
+    session: SimSession,
     cache: HashMap<Vec<u32>, Vec<f64>>,
     log: Vec<Evaluation>,
     sim_calls: usize,
@@ -100,18 +312,73 @@ pub struct Engine<'a> {
     pub moves_accepted: usize,
 }
 
-impl<'a> Engine<'a> {
+impl<'a> Engine<'a, 'static> {
+    /// A pool-less engine: misses evaluate inline (one worker) or through
+    /// a one-shot scoped pool per batch. [`explore`] builds the streaming
+    /// variant with a persistent pool via [`Engine::new_in`] instead.
     pub fn new(
         space: &'a dyn DesignSpace,
         objectives: &'a [Box<dyn Objective>],
         evals: &'a Registry,
         opts: &'a ExploreOpts,
-    ) -> Engine<'a> {
+    ) -> Engine<'a, 'static> {
+        Engine::assemble(space, objectives, evals, opts, Arc::new(SetupCache::new()), None)
+    }
+}
+
+impl<'a, 'scope> Engine<'a, 'scope> {
+    /// An engine whose persistent worker pool lives on `scope`: spawned
+    /// once, fed by streaming submit/drain for the whole exploration,
+    /// joined when the engine drops.
+    pub fn new_in<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        evals: &'a Registry,
+        opts: &'a ExploreOpts,
+    ) -> Engine<'a, 'scope>
+    where
+        'a: 'scope,
+    {
+        let setups = Arc::new(SetupCache::new());
+        let pool = if opts.streaming && opts.workers > 1 {
+            let sim = opts.sim.clone();
+            let setup_reuse = opts.setup_reuse;
+            let worker_setups = Arc::clone(&setups);
+            Some(WorkerPool::new(
+                scope,
+                opts.workers,
+                SimSession::new,
+                move |session: &mut SimSession, c: &Candidate| {
+                    if setup_reuse {
+                        evaluate_shared(space, objectives, evals, &sim, &worker_setups, session, c)
+                    } else {
+                        evaluate_fresh(space, objectives, evals, &sim, &worker_setups, c)
+                    }
+                },
+            ))
+        } else {
+            None
+        };
+        Engine::assemble(space, objectives, evals, opts, setups, pool)
+    }
+
+    fn assemble(
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        evals: &'a Registry,
+        opts: &'a ExploreOpts,
+        setups: Arc<SetupCache>,
+        pool: Option<WorkerPool<'scope, Candidate, EvalResult>>,
+    ) -> Engine<'a, 'scope> {
         Engine {
             space,
             objectives,
             evals,
             opts,
+            setups,
+            pool,
+            session: SimSession::new(),
             cache: HashMap::new(),
             log: Vec::new(),
             sim_calls: 0,
@@ -149,10 +416,72 @@ impl<'a> Engine<'a> {
         self.eval_batch(std::slice::from_ref(c)).into_iter().next()
     }
 
+    /// Evaluate one candidate inline on the engine's own session, with
+    /// the same panic capture as the pool workers.
+    fn eval_inline(&mut self, c: &Candidate) -> EvalResult {
+        let space = self.space;
+        let objectives = self.objectives;
+        let evals = self.evals;
+        let sim = &self.opts.sim;
+        let setup_reuse = self.opts.setup_reuse;
+        let setups = &self.setups;
+        let session = &mut self.session;
+        flatten_outcome(catch_job(move || {
+            if setup_reuse {
+                evaluate_shared(space, objectives, evals, sim, setups, session, c)
+            } else {
+                evaluate_fresh(space, objectives, evals, sim, setups, c)
+            }
+        }))
+    }
+
+    /// Evaluate the deduplicated misses of a batch, in miss order: inline
+    /// when serial is cheaper (one worker or a single miss — the common
+    /// case for annealing), through the persistent pool when streaming,
+    /// or through a one-shot scoped pool on the batched path.
+    fn eval_misses(&mut self, batch: &[Candidate], miss_idx: &[usize]) -> Vec<EvalResult> {
+        if miss_idx.is_empty() {
+            return Vec::new();
+        }
+        if self.opts.workers <= 1 || miss_idx.len() == 1 {
+            return miss_idx.iter().map(|&i| self.eval_inline(&batch[i])).collect();
+        }
+        if let Some(pool) = self.pool.as_mut() {
+            for &i in miss_idx {
+                pool.submit(batch[i].clone());
+            }
+            return pool
+                .drain()
+                .into_iter()
+                .map(|(_, o)| flatten_outcome(o))
+                .collect();
+        }
+        // Batched compatibility path: one-shot pool per batch.
+        let space = self.space;
+        let objectives = self.objectives;
+        let evals = self.evals;
+        let sim = &self.opts.sim;
+        let setup_reuse = self.opts.setup_reuse;
+        let setups = &self.setups;
+        let refs: Vec<&Candidate> = miss_idx.iter().map(|&i| &batch[i]).collect();
+        run_parallel_try(&refs, self.opts.workers, |&c| {
+            if setup_reuse {
+                let mut session = SimSession::new();
+                evaluate_shared(space, objectives, evals, sim, setups, &mut session, c)
+            } else {
+                evaluate_fresh(space, objectives, evals, sim, setups, c)
+            }
+        })
+        .into_iter()
+        .map(flatten_outcome)
+        .collect()
+    }
+
     /// Evaluate a batch of candidates (truncated to the remaining budget),
     /// returning their objective vectors in input order. Cache misses are
-    /// deduplicated and simulated through the worker pool; every requested
-    /// candidate is logged.
+    /// deduplicated and evaluated via [`Engine::eval_misses`]; every
+    /// requested candidate is logged. Lookups borrow the candidate digits;
+    /// each miss allocates its memo key exactly once.
     pub fn eval_batch(&mut self, candidates: &[Candidate]) -> Vec<Vec<f64>> {
         let take = candidates.len().min(self.remaining());
         let batch = &candidates[..take];
@@ -160,66 +489,72 @@ impl<'a> Engine<'a> {
             return Vec::new();
         }
 
-        // Cache hits (previous batches AND duplicates within this batch),
-        // and the unique misses in first-seen order.
-        let mut precached: Vec<bool> = Vec::with_capacity(batch.len());
-        let mut to_run: Vec<Candidate> = Vec::new();
-        let mut queued: HashSet<Vec<u32>> = HashSet::new();
-        for c in batch {
-            if self.opts.cache {
-                if self.cache.contains_key(&c.0) || queued.contains(&c.0) {
-                    precached.push(true);
-                } else {
-                    precached.push(false);
-                    queued.insert(c.0.clone());
-                    to_run.push(c.clone());
+        // Hits (previous batches AND duplicates within this batch) vs the
+        // unique misses in first-seen order.
+        let mut hit: Vec<bool> = Vec::with_capacity(batch.len());
+        let mut miss_idx: Vec<usize> = Vec::new();
+        {
+            let mut queued: HashSet<&[u32]> = HashSet::new();
+            for c in batch.iter() {
+                let dup = self.opts.cache
+                    && (self.cache.contains_key(c.0.as_slice())
+                        || queued.contains(c.0.as_slice()));
+                hit.push(dup);
+                if !dup {
+                    miss_idx.push(hit.len() - 1);
+                    if self.opts.cache {
+                        queued.insert(c.0.as_slice());
+                    }
                 }
-            } else {
-                // caching disabled: every proposal simulates
-                precached.push(false);
-                to_run.push(c.clone());
             }
         }
 
-        let space = self.space;
-        let objectives = self.objectives;
-        let evals = self.evals;
-        let sim = &self.opts.sim;
-        let results: Vec<Option<Vec<f64>>> = run_parallel(&to_run, self.opts.workers, |c| {
-            evaluate_candidate(space, objectives, evals, sim, c)
-        });
-        self.sim_calls += to_run.len();
+        let outcomes = self.eval_misses(batch, &miss_idx);
+        self.sim_calls += miss_idx.len();
 
+        // Store miss results (one owned key per miss — the entry the memo
+        // keeps); failures score INFINITY and carry the error message.
         let n_obj = self.objectives.len();
-        let mut fresh: HashMap<Vec<u32>, Vec<f64>> = HashMap::new();
-        for (c, r) in to_run.iter().zip(results) {
-            let values = match r {
-                Some(v) => v,
-                None => {
+        let mut local: Vec<Option<Vec<f64>>> = vec![None; batch.len()];
+        let mut errors: Vec<Option<String>> = vec![None; batch.len()];
+        for (&i, outcome) in miss_idx.iter().zip(outcomes) {
+            let values = match outcome {
+                Ok(v) => v,
+                Err(msg) => {
                     self.failures += 1;
+                    errors[i] = Some(msg);
                     vec![f64::INFINITY; n_obj]
                 }
             };
             if self.opts.cache {
-                self.cache.insert(c.0.clone(), values);
+                self.cache.insert(batch[i].0.clone(), values);
             } else {
-                fresh.insert(c.0.clone(), values);
+                local[i] = Some(values);
             }
         }
 
-        let mut out = Vec::with_capacity(take);
-        for (c, hit) in batch.iter().zip(&precached) {
-            let store = if self.opts.cache { &self.cache } else { &fresh };
-            let values = store.get(&c.0).expect("candidate evaluated").clone();
-            if *hit {
+        // Log every requested candidate in proposal order.
+        let mut out = Vec::with_capacity(batch.len());
+        for (i, c) in batch.iter().enumerate() {
+            let values: Vec<f64> = if self.opts.cache {
+                self.cache
+                    .get(c.0.as_slice())
+                    .expect("candidate evaluated")
+                    .clone()
+            } else {
+                local[i].take().expect("candidate evaluated")
+            };
+            if hit[i] {
                 self.cache_hits += 1;
             }
             let label = self.space.label(c);
+            let error = errors[i].take().map(|msg| format!("{label}: {msg}"));
             self.log.push(Evaluation {
                 candidate: c.clone(),
                 label,
                 objectives: values.clone(),
-                cached: *hit,
+                cached: hit[i],
+                error,
             });
             out.push(values);
         }
@@ -235,6 +570,8 @@ impl<'a> Engine<'a> {
             sim_calls: self.sim_calls,
             cache_hits: self.cache_hits,
             failures: self.failures,
+            setup_builds: self.setups.builds.load(Ordering::Relaxed),
+            setup_hits: self.setups.hits.load(Ordering::Relaxed),
             moves_accepted: self.moves_accepted,
             elapsed_secs,
             space_size: self.space.size(),
@@ -243,7 +580,8 @@ impl<'a> Engine<'a> {
 }
 
 /// Run one exploration: drive `explorer` over `space`, scoring candidates
-/// with `objectives`, and return the structured report.
+/// with `objectives`, and return the structured report. The engine's
+/// persistent worker pool lives for exactly this call.
 pub fn explore(
     space: &dyn DesignSpace,
     objectives: &[Box<dyn Objective>],
@@ -256,10 +594,12 @@ pub fn explore(
         "explore: at least one objective required"
     );
     let start = std::time::Instant::now();
-    let mut engine = Engine::new(space, objectives, evals, opts);
-    explorer.run(&mut engine)?;
-    let elapsed = start.elapsed().as_secs_f64();
-    Ok(engine.into_report(explorer.name(), elapsed))
+    std::thread::scope(|scope| {
+        let mut engine = Engine::new_in(scope, space, objectives, evals, opts);
+        explorer.run(&mut engine)?;
+        let elapsed = start.elapsed().as_secs_f64();
+        Ok(engine.into_report(explorer.name(), elapsed))
+    })
 }
 
 #[cfg(test)]
@@ -460,6 +800,11 @@ mod tests {
         assert_eq!(r.evals.len(), 3);
         assert_eq!(r.failures, 1);
         assert!(r.evals[1].objectives[0].is_infinite());
+        // the failure carries the candidate label and the cause
+        let err = r.evals[1].error.as_deref().unwrap();
+        assert!(err.contains("cursed"), "{err}");
+        assert!(err.contains("x=1"), "{err}");
+        assert!(r.evals[0].error.is_none());
         assert_eq!(r.best().unwrap().candidate.0, vec![0, 0]);
     }
 
@@ -475,5 +820,56 @@ mod tests {
             &ExploreOpts::default(),
         );
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn setup_builds_counted_once_per_distinct_candidate_on_default_keys() {
+        // ParaboloidSpace keeps the default (whole-candidate) topology key:
+        // every distinct simulated candidate builds its own setup.
+        let space = ParaboloidSpace::new(3, 3, (1, 1));
+        let r = run(&GridExplorer, &space, 9, 2, true);
+        assert_eq!(r.sim_calls, 9);
+        assert_eq!(r.setup_builds, 9);
+        assert_eq!(r.setup_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn streaming_and_batched_paths_agree() {
+        let space = ParaboloidSpace::new(5, 5, (3, 1));
+        let objectives = makespan_objectives();
+        let mk = |streaming: bool, setup_reuse: bool| ExploreOpts {
+            budget: 40,
+            workers: 4,
+            streaming,
+            setup_reuse,
+            ..Default::default()
+        };
+        let explorer = HillClimbExplorer {
+            seed: 5,
+            from_initial: true,
+            restarts: true,
+        };
+        let registry = Registry::standard();
+        let base = explore(&space, &objectives, &explorer, &registry, &mk(true, true)).unwrap();
+        for (streaming, setup_reuse) in [(false, true), (true, false), (false, false)] {
+            let other = explore(
+                &space,
+                &objectives,
+                &explorer,
+                &registry,
+                &mk(streaming, setup_reuse),
+            )
+            .unwrap();
+            assert_eq!(base.evals.len(), other.evals.len());
+            for (x, y) in base.evals.iter().zip(&other.evals) {
+                assert_eq!(x.candidate, y.candidate);
+                assert_eq!(x.cached, y.cached);
+                for (u, v) in x.objectives.iter().zip(&y.objectives) {
+                    assert_eq!(u.to_bits(), v.to_bits());
+                }
+            }
+            assert_eq!(base.sim_calls, other.sim_calls);
+            assert_eq!(base.cache_hits, other.cache_hits);
+        }
     }
 }

@@ -4,14 +4,19 @@
 
 use crate::sim::SimResult;
 
-use super::space::Design;
+use super::space::DesignView;
 
 /// A figure of merit (lower is better) computed from one simulation.
+///
+/// Scoring takes a borrowed [`DesignView`] (not an owned `Design`): with
+/// topology-keyed setup reuse, the hardware model and graph skeleton live
+/// once per topology and only the mapping is per-candidate, so objectives
+/// must not assume per-candidate ownership.
 pub trait Objective: Send + Sync {
     fn name(&self) -> &str;
 
     /// Score a design; return `f64::INFINITY` for infeasible designs.
-    fn score(&self, design: &Design, sim: &SimResult) -> f64;
+    fn score(&self, design: &DesignView, sim: &SimResult) -> f64;
 }
 
 /// Simulated makespan in cycles.
@@ -22,7 +27,7 @@ impl Objective for Makespan {
         "makespan"
     }
 
-    fn score(&self, _design: &Design, sim: &SimResult) -> f64 {
+    fn score(&self, _design: &DesignView, sim: &SimResult) -> f64 {
         sim.makespan
     }
 }
@@ -35,7 +40,7 @@ impl Objective for Edp {
         "edp"
     }
 
-    fn score(&self, _design: &Design, sim: &SimResult) -> f64 {
+    fn score(&self, _design: &DesignView, sim: &SimResult) -> f64 {
         sim.total_energy() * sim.makespan
     }
 }
@@ -62,7 +67,7 @@ impl Objective for AreaConstrainedMakespan {
         &self.name
     }
 
-    fn score(&self, design: &Design, sim: &SimResult) -> f64 {
+    fn score(&self, design: &DesignView, sim: &SimResult) -> f64 {
         match design.area_mm2 {
             Some(a) if a > self.budget_mm2 => f64::INFINITY,
             _ => sim.makespan,
@@ -79,14 +84,14 @@ impl Objective for CostUsd {
         "cost_usd"
     }
 
-    fn score(&self, design: &Design, _sim: &SimResult) -> f64 {
+    fn score(&self, design: &DesignView, _sim: &SimResult) -> f64 {
         design.cost_usd.unwrap_or(f64::INFINITY)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::space::{placement_demo, DesignSpace};
+    use super::super::space::{placement_demo, Design, DesignSpace};
     use super::*;
     use crate::eval::Registry;
     use crate::sim::{simulate, SimConfig};
@@ -108,8 +113,8 @@ mod tests {
     #[test]
     fn makespan_and_edp_positive() {
         let (d, r) = sample();
-        assert!(Makespan.score(&d, &r) > 0.0);
-        assert!(Edp.score(&d, &r) > Makespan.score(&d, &r));
+        assert!(Makespan.score(&d.view(), &r) > 0.0);
+        assert!(Edp.score(&d.view(), &r) > Makespan.score(&d.view(), &r));
     }
 
     #[test]
@@ -118,19 +123,19 @@ mod tests {
         d.area_mm2 = Some(100.0);
         let tight = AreaConstrainedMakespan::new(50.0);
         let loose = AreaConstrainedMakespan::new(200.0);
-        assert!(tight.score(&d, &r).is_infinite());
-        assert_eq!(loose.score(&d, &r), r.makespan);
+        assert!(tight.score(&d.view(), &r).is_infinite());
+        assert_eq!(loose.score(&d.view(), &r), r.makespan);
         assert!(tight.name().contains("50"));
         // no area figure -> unconstrained
         d.area_mm2 = None;
-        assert_eq!(tight.score(&d, &r), r.makespan);
+        assert_eq!(tight.score(&d.view(), &r), r.makespan);
     }
 
     #[test]
     fn cost_requires_cost_model() {
         let (mut d, r) = sample();
-        assert!(CostUsd.score(&d, &r).is_infinite());
+        assert!(CostUsd.score(&d.view(), &r).is_infinite());
         d.cost_usd = Some(42.0);
-        assert_eq!(CostUsd.score(&d, &r), 42.0);
+        assert_eq!(CostUsd.score(&d.view(), &r), 42.0);
     }
 }

@@ -17,6 +17,10 @@ pub struct Evaluation {
     pub objectives: Vec<f64>,
     /// True when served from the memo cache.
     pub cached: bool,
+    /// Why the evaluation failed (materialization/simulation error or a
+    /// caught evaluator panic), labeled with the candidate. `None` on
+    /// success and on cache hits replaying an earlier failure.
+    pub error: Option<String>,
 }
 
 /// The result of one exploration run.
@@ -30,8 +34,17 @@ pub struct ExplorationReport {
     /// Candidates actually simulated (memo-cache misses).
     pub sim_calls: usize,
     pub cache_hits: usize,
-    /// Evaluations that failed to materialize or simulate.
+    /// Evaluations that failed to materialize or simulate (including
+    /// caught evaluator panics).
     pub failures: usize,
+    /// Topology-keyed evaluation setups built (hardware model + route
+    /// table + arenas). Deterministic: keyed setups build exactly once
+    /// per distinct key; key-less evaluations build ephemerally per sim.
+    pub setup_builds: usize,
+    /// Simulations that reused an already-built setup (successful plan
+    /// acquisitions that did not build). Deterministic at any worker
+    /// count.
+    pub setup_hits: usize,
     /// Moves accepted by the local searchers (0 for grid/random).
     pub moves_accepted: usize,
     pub elapsed_secs: f64,
@@ -187,7 +200,21 @@ impl ExplorationReport {
             Json::Arr(e.objectives.iter().map(|v| (*v).into()).collect()),
         );
         o.insert("cached", e.cached.into());
+        if let Some(err) = &e.error {
+            o.insert("error", err.as_str().into());
+        }
         Json::Obj(o)
+    }
+
+    /// Fraction of simulations that reused a cached evaluation setup
+    /// (0 when nothing simulated; failed evaluations never count as
+    /// reuse).
+    pub fn setup_hit_rate(&self) -> f64 {
+        if self.sim_calls == 0 {
+            0.0
+        } else {
+            self.setup_hits as f64 / self.sim_calls as f64
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -203,6 +230,8 @@ impl ExplorationReport {
         o.insert("sim_calls", (self.sim_calls as u64).into());
         o.insert("cache_hits", (self.cache_hits as u64).into());
         o.insert("failures", (self.failures as u64).into());
+        o.insert("setup_builds", (self.setup_builds as u64).into());
+        o.insert("setup_hits", (self.setup_hits as u64).into());
         o.insert("moves_accepted", (self.moves_accepted as u64).into());
         o.insert("elapsed_secs", self.elapsed_secs.into());
         o.insert("evals_per_sec", self.evals_per_sec().into());
@@ -238,6 +267,7 @@ mod tests {
             label,
             objectives,
             cached: false,
+            error: None,
         }
     }
 
@@ -250,6 +280,8 @@ mod tests {
             sim_calls: 0,
             cache_hits: 0,
             failures: 0,
+            setup_builds: 0,
+            setup_hits: 0,
             moves_accepted: 0,
             elapsed_secs: 1.0,
             space_size: 10,

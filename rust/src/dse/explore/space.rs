@@ -181,6 +181,54 @@ impl Design {
             cost_usd: None,
         }
     }
+
+    /// Borrowed view for objective scoring.
+    pub fn view(&self) -> DesignView<'_> {
+        DesignView {
+            hw: &self.workload.hw,
+            graph: &self.workload.graph,
+            mapping: &self.workload.mapping,
+            area_mm2: self.area_mm2,
+            cost_usd: self.cost_usd,
+        }
+    }
+}
+
+/// A borrowed view of one evaluated design, as seen by [`Objective`]s.
+///
+/// Objectives used to take the owned [`Design`]; with topology-keyed setup
+/// reuse the hardware model and task-graph skeleton live once in a shared
+/// `Arc` per topology and only the mapping is per-candidate, so scoring
+/// receives borrows instead of forcing a per-candidate rebuild.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignView<'a> {
+    pub hw: &'a Hardware,
+    pub graph: &'a TaskGraph,
+    pub mapping: &'a Mapping,
+    pub area_mm2: Option<f64>,
+    pub cost_usd: Option<f64>,
+}
+
+/// The per-candidate half of a topology-shared evaluation: everything
+/// [`DesignSpace::materialize`] produces *except* the hardware model and
+/// the task-graph skeleton (which candidates sharing a
+/// [`DesignSpace::topology_key`] reuse from a cached setup).
+#[derive(Debug)]
+pub struct Binding {
+    pub mapping: Mapping,
+    pub area_mm2: Option<f64>,
+    pub cost_usd: Option<f64>,
+}
+
+impl Binding {
+    /// Decompose a full materialization into its per-candidate binding.
+    pub fn of(design: Design) -> Binding {
+        Binding {
+            mapping: design.workload.mapping,
+            area_mm2: design.area_mm2,
+            cost_usd: design.cost_usd,
+        }
+    }
 }
 
 // ======================================================================
@@ -200,6 +248,36 @@ pub trait DesignSpace: Sync {
 
     /// Decode a candidate into a concrete, simulatable design.
     fn materialize(&self, c: &Candidate) -> Result<Design>;
+
+    /// Hardware fingerprint of a candidate: candidates with equal
+    /// `Some(key)`s share one evaluation setup — hardware model,
+    /// task-graph skeleton, interned route table and simulator arenas are
+    /// built once per distinct key and reused across the whole search.
+    ///
+    /// The default, `None`, means "every candidate is its own topology"
+    /// (no sharing — always correct, and free: nothing is allocated or
+    /// retained). Spaces that only perturb mapping-tier axes on a fixed
+    /// topology (e.g. [`PlacementSpace`]) override this with the subset
+    /// of digits that actually changes the hardware — often the empty
+    /// vector, meaning one setup for the whole space. Contract: all
+    /// candidates sharing a key must materialize the same hardware, the
+    /// same graph skeleton, and the same placement for every routed
+    /// communication task, and [`DesignSpace::bind`] must agree with
+    /// [`DesignSpace::materialize`] on the per-candidate mapping.
+    fn topology_key(&self, c: &Candidate) -> Option<Vec<u32>> {
+        let _ = c;
+        None
+    }
+
+    /// The per-candidate half of an evaluation against a shared setup:
+    /// the mapping plus side figures, *without* rebuilding hardware or
+    /// graph. The default decomposes a full [`DesignSpace::materialize`]
+    /// (correct for any space); spaces that coarsen
+    /// [`DesignSpace::topology_key`] should override it with a cheap
+    /// mapping-only path.
+    fn bind(&self, c: &Candidate) -> Result<Binding> {
+        Ok(Binding::of(self.materialize(c)?))
+    }
 
     /// Total number of candidates (product of axis cardinalities).
     fn size(&self) -> u64 {
@@ -681,9 +759,7 @@ impl DesignSpace for PlacementSpace {
     fn materialize(&self, c: &Candidate) -> Result<Design> {
         crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
         let mut mapping = self.base.clone();
-        for (i, t) in self.movable.iter().enumerate() {
-            mapping.map(*t, self.points[c.0[i] as usize]);
-        }
+        self.apply(c, &mut mapping);
         Ok(Design::new(Workload {
             hw: self.hw.clone(),
             graph: self.graph.clone(),
@@ -691,6 +767,25 @@ impl DesignSpace for PlacementSpace {
             name: self.name.clone(),
             notes: Vec::new(),
         }))
+    }
+
+    /// Every candidate shares one topology: only compute-task placement
+    /// moves, so the hardware, the graph and every routed communication
+    /// task's placement are fixed across the space.
+    fn topology_key(&self, _c: &Candidate) -> Option<Vec<u32>> {
+        Some(Vec::new())
+    }
+
+    /// Mapping-only rebinding: no hardware/graph clone per candidate.
+    fn bind(&self, c: &Candidate) -> Result<Binding> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let mut mapping = self.base.clone();
+        self.apply(c, &mut mapping);
+        Ok(Binding {
+            mapping,
+            area_mm2: None,
+            cost_usd: None,
+        })
     }
 }
 

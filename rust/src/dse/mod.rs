@@ -4,8 +4,9 @@
 //!
 //! The module is layered bottom-up:
 //!
-//! * [`parallel`] — the order-preserving worker pool every sweep and
-//!   search runs on.
+//! * [`parallel`] — the order-preserving worker machinery every sweep and
+//!   search runs on: the persistent streaming [`parallel::WorkerPool`]
+//!   plus the one-shot [`parallel::run_parallel`] wrapper.
 //! * [`report`] — result tables (console / CSV / JSON).
 //! * [`explore`] — the first-class exploration API: [`explore::DesignSpace`]
 //!   (typed axes over arch templates, hardware parameters and mapping
@@ -25,6 +26,8 @@ pub mod report;
 pub mod search;
 
 pub use experiments::Ctx;
-pub use parallel::run_parallel;
+pub use parallel::{
+    default_workers, resolve_workers, run_parallel, run_parallel_try, JobOutcome, WorkerPool,
+};
 pub use report::{fmt, Table};
 pub use search::TilingSpace;

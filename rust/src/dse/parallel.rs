@@ -1,18 +1,238 @@
 //! Parallel design-point evaluation over a std-thread worker pool (the
 //! offline vendor set has no rayon/tokio).
 //!
-//! Work distribution is a single atomic cursor (cheap work stealing), and
-//! result collection is mutex-free: each worker appends `(index, result)`
-//! pairs to its own private buffer, and the buffers are stitched back into
-//! input order after the pool joins. The previous design funneled every
-//! completion through one `Mutex<Vec<Option<R>>>`, which serialized all
-//! workers on result delivery for sweep workloads with cheap items.
+//! The centerpiece is [`WorkerPool`]: a *persistent* pool of scoped
+//! threads fed by a shared job queue with a streaming `submit`/`drain`
+//! API. Perturbative explorers (hill-climbing, simulated annealing)
+//! propose candidates one or a few at a time; the old design stood up a
+//! fresh `std::thread::scope` per batch, so thread spawn/join dominated
+//! the wall-clock of mapping-tier searches. A pool is spawned once per
+//! exploration, jobs stream through it for the whole run, and it joins on
+//! drop.
+//!
+//! Each worker owns local state (`init` is called once per worker thread —
+//! the DSE engine passes a simulation session whose arenas persist across
+//! jobs), and every job runs under `catch_unwind`, so one panicking
+//! evaluator surfaces as a per-job [`JobOutcome::Panicked`] instead of
+//! aborting the whole sweep.
+//!
+//! [`run_parallel`] remains as a thin compatibility wrapper over the
+//! one-shot scoped path, preserving its original signature, semantics and
+//! lock-free atomic-cursor work distribution (panics propagate after all
+//! items finish; results in input order).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{Scope, ScopedJoinHandle};
 
-/// Evaluate `f` over `points` with up to `workers` threads, preserving
-/// input order in the result.
-pub fn run_parallel<T, R, F>(points: &[T], workers: usize, f: F) -> Vec<R>
+use crate::util::error::Result;
+
+/// The result of one pool job: the evaluator's return value, or the
+/// message of the panic it died with.
+#[derive(Debug)]
+pub enum JobOutcome<R> {
+    Done(R),
+    Panicked(String),
+}
+
+impl<R> JobOutcome<R> {
+    /// Unwrap a finished job, panicking with the captured message when the
+    /// job itself panicked (the `run_parallel` compatibility behavior).
+    pub fn unwrap_done(self) -> R {
+        match self {
+            JobOutcome::Done(r) => r,
+            JobOutcome::Panicked(msg) => panic!("worker panicked: {msg}"),
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload as a message.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run `f` under `catch_unwind`, mapping a panic to its message. Used both
+/// by pool workers and by the serial in-line evaluation paths so panic
+/// semantics are identical at every worker count.
+pub fn catch_job<R>(f: impl FnOnce() -> R) -> JobOutcome<R> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => JobOutcome::Done(r),
+        Err(p) => JobOutcome::Panicked(panic_message(p)),
+    }
+}
+
+struct PoolShared<T, R> {
+    /// Pending jobs in submission order (job id, payload).
+    queue: Mutex<VecDeque<(u64, T)>>,
+    /// Signals workers that a job (or shutdown) is available.
+    available: Condvar,
+    /// Finished jobs, in completion order.
+    done: Mutex<Vec<(u64, JobOutcome<R>)>>,
+    /// Signals the submitter that results arrived.
+    delivered: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent, scope-bound worker pool with streaming `submit`/`drain`.
+///
+/// Spawned once (inside a `std::thread::scope` so jobs may borrow from the
+/// caller), fed by a shared queue, joined on drop. `drain` blocks until
+/// every in-flight job finished and returns outcomes sorted by job id —
+/// i.e. in submission order — so callers get deterministic result order
+/// regardless of which worker finished first.
+pub struct WorkerPool<'scope, T: Send, R: Send> {
+    shared: Arc<PoolShared<T, R>>,
+    handles: Vec<ScopedJoinHandle<'scope, ()>>,
+    next_job: u64,
+    in_flight: usize,
+}
+
+impl<'scope, T: Send + 'scope, R: Send + 'scope> WorkerPool<'scope, T, R> {
+    /// Spawn `workers` threads on `scope`. `init` runs once per worker to
+    /// build its thread-local state; `f` evaluates one job against that
+    /// state. Both may borrow anything that outlives the scope.
+    pub fn new<'env, S, I, F>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        init: I,
+        f: F,
+    ) -> WorkerPool<'scope, T, R>
+    where
+        S: 'scope,
+        I: Fn() -> S + Send + Sync + 'scope,
+        F: Fn(&mut S, &T) -> R + Send + Sync + 'scope,
+    {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            done: Mutex::new(Vec::new()),
+            delivered: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let ctx = Arc::new((init, f));
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let ctx = Arc::clone(&ctx);
+                scope.spawn(move || {
+                    let (init, f) = (&ctx.0, &ctx.1);
+                    // A panicking `init` must not kill the worker: the job
+                    // loop still runs, reporting the init failure per job,
+                    // so `drain` never hangs on a dead worker.
+                    let mut state = match catch_job(init) {
+                        JobOutcome::Done(s) => Ok(s),
+                        JobOutcome::Panicked(msg) => Err(msg),
+                    };
+                    loop {
+                        let job = {
+                            let mut q = shared.queue.lock().expect("pool queue poisoned");
+                            loop {
+                                if let Some(j) = q.pop_front() {
+                                    break Some(j);
+                                }
+                                if shared.shutdown.load(Ordering::Acquire) {
+                                    break None;
+                                }
+                                q = shared.available.wait(q).expect("pool queue poisoned");
+                            }
+                        };
+                        let Some((id, job)) = job else { return };
+                        let outcome = match &mut state {
+                            Ok(s) => catch_job(|| f(s, &job)),
+                            Err(msg) => {
+                                JobOutcome::Panicked(format!("worker init panicked: {msg}"))
+                            }
+                        };
+                        let mut d = shared.done.lock().expect("pool results poisoned");
+                        d.push((id, outcome));
+                        shared.delivered.notify_all();
+                    }
+                })
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            handles,
+            next_job: 0,
+            in_flight: 0,
+        }
+    }
+
+    /// Enqueue one job; returns its id (submission order, starting at 0
+    /// and never reset — ids stay unique across the pool's lifetime).
+    pub fn submit(&mut self, job: T) -> u64 {
+        let id = self.next_job;
+        self.next_job += 1;
+        self.in_flight += 1;
+        self.shared
+            .queue
+            .lock()
+            .expect("pool queue poisoned")
+            .push_back((id, job));
+        self.shared.available.notify_one();
+        id
+    }
+
+    /// Number of submitted jobs not yet drained.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Block until every in-flight job finished; outcomes sorted by job id
+    /// (= submission order).
+    pub fn drain(&mut self) -> Vec<(u64, JobOutcome<R>)> {
+        let mut out: Vec<(u64, JobOutcome<R>)> = Vec::with_capacity(self.in_flight);
+        {
+            let mut d = self.shared.done.lock().expect("pool results poisoned");
+            while self.in_flight > 0 {
+                if d.is_empty() {
+                    d = self.shared.delivered.wait(d).expect("pool results poisoned");
+                    continue;
+                }
+                self.in_flight -= d.len();
+                out.append(&mut d);
+            }
+        }
+        out.sort_unstable_by_key(|(id, _)| *id);
+        out
+    }
+}
+
+impl<T: Send, R: Send> Drop for WorkerPool<'_, T, R> {
+    fn drop(&mut self) {
+        {
+            // Set the flag under the queue lock: a worker is either still
+            // before its empty-check (and will observe the flag) or already
+            // waiting (and will receive the notification) — no lost wakeup.
+            let _guard = self.shared.queue.lock().expect("pool queue poisoned");
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Evaluate `f` over `points` with up to `workers` threads, catching
+/// per-item panics; results in input order.
+///
+/// The fixed-size one-shot case keeps the lock-free design the streaming
+/// [`WorkerPool`] cannot use: work distribution is a single atomic cursor
+/// and each worker appends `(index, outcome)` pairs to its own private
+/// buffer, stitched back into input order after the scope joins — no
+/// mutex/condvar traffic per item, which matters for sweeps of cheap
+/// items. (The streaming pool needs blocking wakeups because its job feed
+/// is open-ended.)
+pub fn run_parallel_try<T, R, F>(points: &[T], workers: usize, f: F) -> Vec<JobOutcome<R>>
 where
     T: Sync,
     R: Send,
@@ -20,10 +240,10 @@ where
 {
     let workers = workers.max(1).min(points.len().max(1));
     if workers <= 1 {
-        return points.iter().map(&f).collect();
+        return points.iter().map(|p| catch_job(|| f(p))).collect();
     }
     let next = AtomicUsize::new(0);
-    let worker_outputs: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+    let worker_outputs: Vec<Vec<(usize, JobOutcome<R>)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 scope.spawn(|| {
@@ -35,7 +255,7 @@ where
                         if i >= points.len() {
                             break;
                         }
-                        out.push((i, f(&points[i])));
+                        out.push((i, catch_job(|| f(&points[i]))));
                     }
                     out
                 })
@@ -43,11 +263,11 @@ where
             .collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("worker panicked"))
+            .map(|h| h.join().expect("worker thread died outside a job"))
             .collect()
     });
     // Stitch the chunks back into input order.
-    let mut slots: Vec<Option<R>> = (0..points.len()).map(|_| None).collect();
+    let mut slots: Vec<Option<JobOutcome<R>>> = (0..points.len()).map(|_| None).collect();
     for (i, r) in worker_outputs.into_iter().flatten() {
         debug_assert!(slots[i].is_none(), "item {i} evaluated twice");
         slots[i] = Some(r);
@@ -58,11 +278,64 @@ where
         .collect()
 }
 
-/// Default worker count: available parallelism.
+/// Evaluate `f` over `points` with up to `workers` threads, preserving
+/// input order in the result. Compatibility wrapper over
+/// [`run_parallel_try`]'s one-shot atomic-cursor path (NOT the streaming
+/// [`WorkerPool`], which trades lock-freedom for an open-ended job feed):
+/// a panicking item still panics the caller (after all other items
+/// finish), with the original message attached — use
+/// [`run_parallel_try`] to handle per-item panics instead.
+pub fn run_parallel<T, R, F>(points: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    run_parallel_try(points, workers, f)
+        .into_iter()
+        .map(JobOutcome::unwrap_done)
+        .collect()
+}
+
+/// Default worker count: the `MLDSE_WORKERS` override when set to a valid
+/// value, otherwise available parallelism. Infallible variant of
+/// [`resolve_workers`] for contexts without error plumbing (an invalid
+/// override falls back to auto-detection there and errors in the CLI).
 pub fn default_workers() -> usize {
+    resolve_workers(0).unwrap_or_else(|_| available_workers())
+}
+
+fn available_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Resolve a requested worker count: `0` means auto-detect — the
+/// `MLDSE_WORKERS` environment override when present (validated), else
+/// available parallelism. Nonzero requests pass through unchanged.
+pub fn resolve_workers(requested: usize) -> Result<usize> {
+    if requested > 0 {
+        return Ok(requested);
+    }
+    match std::env::var("MLDSE_WORKERS") {
+        Ok(v) => {
+            let n: usize = v.trim().parse().map_err(|_| {
+                crate::format_err!(
+                    "MLDSE_WORKERS: invalid value '{v}' (want a positive integer)"
+                )
+            })?;
+            crate::ensure!(
+                n > 0,
+                "MLDSE_WORKERS: must be >= 1 (unset it or use a positive count)"
+            );
+            Ok(n)
+        }
+        Err(std::env::VarError::NotPresent) => Ok(available_workers()),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            crate::bail!("MLDSE_WORKERS: value is not valid UTF-8")
+        }
+    }
 }
 
 #[cfg(test)]
@@ -120,5 +393,124 @@ mod tests {
         // sanity: the pool actually ran on more than one thread
         let distinct: std::collections::HashSet<_> = out.iter().map(|(_, t)| *t).collect();
         assert!(distinct.len() > 1, "expected multi-threaded execution");
+    }
+
+    /// Streaming reuse: several submit/drain rounds against ONE pool, with
+    /// worker-local state proving the same threads (and their state)
+    /// survive across rounds — the spawn-per-batch barrier is gone.
+    #[test]
+    fn pool_streams_across_rounds_with_worker_state() {
+        std::thread::scope(|scope| {
+            // state = jobs processed by this worker so far
+            let mut pool: WorkerPool<'_, u64, (u64, usize)> =
+                WorkerPool::new(scope, 4, || 0usize, |seen, &x| {
+                    *seen += 1;
+                    (x * 10, *seen)
+                });
+            let mut total_state = 0usize;
+            for round in 0..5u64 {
+                for k in 0..8 {
+                    pool.submit(round * 8 + k);
+                }
+                let results = pool.drain();
+                assert_eq!(results.len(), 8);
+                for (slot, (id, out)) in results.iter().enumerate() {
+                    assert_eq!(*id, round * 8 + slot as u64, "ids in submission order");
+                    match out {
+                        JobOutcome::Done((v, seen)) => {
+                            assert_eq!(*v, (round * 8 + slot as u64) * 10);
+                            total_state = total_state.max(*seen);
+                        }
+                        JobOutcome::Panicked(m) => panic!("unexpected panic: {m}"),
+                    }
+                }
+            }
+            // 40 jobs over 4 workers: at least one worker saw >= 10 — its
+            // local state accumulated across rounds.
+            assert!(total_state >= 10, "worker state reset between rounds");
+        });
+    }
+
+    /// A panicking worker `init` must not hang `drain`: every job completes
+    /// with a `Panicked` outcome naming the init failure.
+    #[test]
+    fn pool_survives_panicking_init() {
+        std::thread::scope(|scope| {
+            let mut pool: WorkerPool<'_, u32, u32> =
+                WorkerPool::new(scope, 3, || -> u32 { panic!("no state today") }, |s, &x| {
+                    *s + x
+                });
+            for x in 0..6 {
+                pool.submit(x);
+            }
+            let results = pool.drain();
+            assert_eq!(results.len(), 6);
+            for (_, o) in results {
+                match o {
+                    JobOutcome::Panicked(m) => {
+                        assert!(m.contains("worker init panicked"), "{m}");
+                        assert!(m.contains("no state today"), "{m}");
+                    }
+                    JobOutcome::Done(v) => panic!("job ran without state: {v}"),
+                }
+            }
+        });
+    }
+
+    /// A panicking job is captured per item; the sweep completes and the
+    /// panic message survives.
+    #[test]
+    fn panics_are_caught_per_job() {
+        let points: Vec<u32> = (0..16).collect();
+        let out = run_parallel_try(&points, 4, |&x| {
+            if x == 7 {
+                panic!("cursed item {x}");
+            }
+            x + 1
+        });
+        assert_eq!(out.len(), 16);
+        for (i, o) in out.iter().enumerate() {
+            match o {
+                JobOutcome::Done(v) => {
+                    assert_ne!(i, 7);
+                    assert_eq!(*v, i as u32 + 1);
+                }
+                JobOutcome::Panicked(msg) => {
+                    assert_eq!(i, 7);
+                    assert!(msg.contains("cursed item 7"), "{msg}");
+                }
+            }
+        }
+        // serial path has identical semantics
+        let out = run_parallel_try(&points, 1, |&x| {
+            if x == 7 {
+                panic!("cursed item {x}");
+            }
+            x + 1
+        });
+        assert!(matches!(&out[7], JobOutcome::Panicked(m) if m.contains("cursed item 7")));
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn run_parallel_propagates_panics() {
+        let points: Vec<u32> = (0..4).collect();
+        let _ = run_parallel(&points, 2, |&x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn resolve_workers_passthrough_and_auto() {
+        assert_eq!(resolve_workers(3).unwrap(), 3);
+        // auto-detect never yields zero (env-dependent value, so only
+        // sanity-check positivity when MLDSE_WORKERS isn't interfering)
+        if std::env::var("MLDSE_WORKERS").is_err() {
+            assert!(resolve_workers(0).unwrap() >= 1);
+            assert!(default_workers() >= 1);
+        }
     }
 }

@@ -23,6 +23,15 @@ impl PointId {
     }
 }
 
+impl crate::util::densemap::DenseKey for PointId {
+    fn dense_index(self) -> usize {
+        self.0 as usize
+    }
+    fn from_dense_index(i: usize) -> Self {
+        PointId(i as u32)
+    }
+}
+
 impl std::fmt::Display for PointId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "p{}", self.0)

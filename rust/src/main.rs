@@ -21,7 +21,7 @@ use mldse::dse::explore::{
     explore, explorer_by_name, preset, preset_names, DesignSpace, Edp, ExploreOpts, Makespan,
     Objective, ParamSpace,
 };
-use mldse::dse::parallel::default_workers;
+use mldse::dse::parallel::resolve_workers;
 use mldse::sim::SimConfig;
 use mldse::util::error::{Context, Result};
 use mldse::util::json::{Json, JsonObj};
@@ -154,7 +154,8 @@ fn print_usage() {
            experiment <{experiments}>|all [--quick] [--csv] | --list\n\
            explore --space FILE.json|--preset NAME [--explorer grid|random|hill|anneal]\n\
                    [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
-                   (presets: {presets})\n\
+                   (presets: {presets}; --workers 0 = auto-detect,\n\
+                    honoring the MLDSE_WORKERS environment override)\n\
            hardware --spec FILE.json\n",
         experiments = EXPERIMENTS.join("|"),
         presets = preset_names().join(", ")
@@ -349,9 +350,12 @@ fn cmd_explore(args: &Args) -> Result<()> {
     } else {
         64
     };
+    // --workers 0 (or omitting the flag) auto-detects: the MLDSE_WORKERS
+    // environment override when set (validated), else available cores.
+    let workers = resolve_workers(args.num("workers", 0usize)?)?;
     let opts = ExploreOpts {
         budget: args.num("budget", default_budget)?,
-        workers: args.num("workers", default_workers())?,
+        workers,
         cache: !args.bool_flag("no-cache"),
         ..Default::default()
     };

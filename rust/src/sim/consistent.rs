@@ -398,7 +398,7 @@ impl<'a> Alg1<'a> {
                     let idx = self.items.iter().position(|i| i.task == task).unwrap();
                     let item = self.items.remove(idx);
                     let start = item.ready;
-                    *self.result.point_busy.entry(point).or_insert(0.0) += item.shared_total;
+                    *self.result.point_busy.entry_or(point, 0.0) += item.shared_total;
                     self.commit(task, start, end);
                     committed_one = true;
                     progress = true;
@@ -449,7 +449,7 @@ impl<'a> Alg1<'a> {
         };
         let idx = self.items.iter().position(|i| i.task == task).unwrap();
         let item = self.items.remove(idx);
-        *self.result.point_busy.entry(point).or_insert(0.0) += item.shared_total;
+        *self.result.point_busy.entry_or(point, 0.0) += item.shared_total;
         self.commit(task, item.ready, end);
         true
     }

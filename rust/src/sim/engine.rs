@@ -49,11 +49,13 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use crate::eval::Registry;
 use crate::hwir::{Hardware, PointId};
 use crate::mapping::Mapping;
 use crate::taskgraph::{Executor, StaticExecutor, TaskGraph, TaskId, TaskKind};
+use crate::util::densemap::DenseMap;
 
 use super::links::RouteTable;
 
@@ -119,15 +121,18 @@ pub struct TimelineEvent {
 
 /// Simulation output. `PartialEq` supports the golden tests pinning
 /// bit-identical results across the incremental and full-recompute
-/// contention paths.
+/// contention paths. The per-task/per-point maps are dense `Vec`-backed
+/// maps ([`DenseMap`]) with stable index-order iteration — no per-result
+/// hashing, and derived artifacts (e.g. `memory_violations`) come out in
+/// a deterministic order.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SimResult {
     /// Completion time of the last task (cycles).
     pub makespan: Time,
     /// (start, end) of each task's final iteration.
-    pub timings: HashMap<TaskId, (Time, Time)>,
+    pub timings: DenseMap<TaskId, (Time, Time)>,
     /// Busy cycles per point (service demand actually delivered).
-    pub point_busy: HashMap<PointId, f64>,
+    pub point_busy: DenseMap<PointId, f64>,
     /// Completed (task, iteration) evaluations.
     pub completed: u64,
     /// Tasks that never ran all iterations (blocked or untriggered).
@@ -140,9 +145,9 @@ pub struct SimResult {
     /// engine never needs to roll back).
     pub rollbacks: u64,
     /// Energy delivered per point (pJ), from the evaluator energy model.
-    pub point_energy: HashMap<PointId, f64>,
+    pub point_energy: DenseMap<PointId, f64>,
     /// Peak bytes resident per memory point.
-    pub peak_memory: HashMap<PointId, u64>,
+    pub peak_memory: DenseMap<PointId, u64>,
     /// Capacity violations ("point, peak, capacity").
     pub memory_violations: Vec<String>,
     /// Timeline (only with `collect_timeline`).
@@ -253,15 +258,23 @@ struct SharedPoint {
 }
 
 impl SharedPoint {
-    fn new(num_links: usize) -> SharedPoint {
-        SharedPoint {
-            flows: Vec::new(),
-            occupancy: vec![0; num_links],
-            link_flows: vec![Vec::new(); num_links],
-            universal: 0,
-            last_update: 0.0,
-            generation: 0,
+    /// Reset for a fresh simulation with `num_links` dense links, keeping
+    /// every allocation (flow vec, occupancy array, reverse index) that is
+    /// already the right shape.
+    fn reset(&mut self, num_links: usize) {
+        self.flows.clear();
+        self.occupancy.clear();
+        self.occupancy.resize(num_links, 0);
+        self.link_flows.truncate(num_links);
+        for lf in &mut self.link_flows {
+            lf.clear();
         }
+        while self.link_flows.len() < num_links {
+            self.link_flows.push(Vec::new());
+        }
+        self.universal = 0;
+        self.last_update = 0.0;
+        self.generation = 0;
     }
 
     /// Register a flow; in incremental mode, bump its links' occupancy and
@@ -409,6 +422,15 @@ struct ExclPoint {
     generation: u64,
 }
 
+impl ExclPoint {
+    fn reset(&mut self) {
+        self.timer = 0.0;
+        self.running = None;
+        self.pending.clear();
+        self.generation = 0;
+    }
+}
+
 #[derive(Debug, Default)]
 struct StorageState {
     resident: bool,
@@ -422,6 +444,101 @@ struct SyncGroupState {
     members: Vec<TaskId>,
     /// per-iteration (ready_count, max_ready)
     progress: HashMap<u32, (usize, Time)>,
+}
+
+/// Every growable buffer the engine needs, kept between runs by a
+/// [`SimSession`] so back-to-back simulations reuse allocations (and —
+/// when the caller vouches for a shared setup via [`SimSetup::key`] — the
+/// per-(descriptor, point) demand cache) instead of rebuilding them.
+#[derive(Default)]
+struct Arena {
+    events: BinaryHeap<Reverse<(OrdF64, u64, u32)>>,
+    event_payload: Vec<Event>,
+    shared: Vec<SharedPoint>,
+    excl: Vec<ExclPoint>,
+    storage: Vec<Option<StorageState>>,
+    deps_left: Vec<u32>,
+    ready_time: Vec<Time>,
+    real_ticks: Vec<u32>,
+    done_iters: Vec<u32>,
+    point_of: Vec<Option<PointId>>,
+    enabled_in_deg: Vec<u32>,
+    demand_memo: Vec<Option<(crate::eval::Demand, f64)>>,
+    demand_cache: HashMap<(u64, u64, u64, u32), (crate::eval::Demand, f64)>,
+    flat_timings: Vec<(Time, Time)>,
+    mem_usage: Vec<u64>,
+    flow_scratch: Vec<u32>,
+    succ_scratch: Vec<TaskId>,
+    dead_scratch: Vec<TaskId>,
+    finished_scratch: Vec<Flow>,
+    /// Setup key the demand cache was filled under (`None` = stale).
+    demand_token: Option<u64>,
+}
+
+/// A prebuilt, shareable simulation setup.
+///
+/// `routes` is the interned [`RouteTable`] of a fixed (hardware, graph,
+/// comm-task placement) triple — built once and shared across every
+/// candidate on that topology instead of re-derived per simulation. `key`
+/// is a caller-chosen identity for the setup: simulations carrying the
+/// same key on the same [`SimSession`] keep the (task descriptor, point)
+/// demand cache warm across candidates. Only pass equal keys for
+/// simulations on the same hardware with the same evaluator registry.
+#[derive(Debug, Clone, Default)]
+pub struct SimSetup {
+    pub routes: Option<Arc<RouteTable>>,
+    pub key: Option<u64>,
+}
+
+/// Reusable simulation context (the engine's `reset`/re-entry path).
+///
+/// One session per evaluation thread: each [`SimSession::simulate`] run
+/// borrows the session's arena — event heap, per-point contention
+/// state, flat (task, iter) tables, scratch buffers — resets it in place,
+/// and returns it when done, so thousands of back-to-back candidate
+/// simulations allocate once instead of once per candidate. Results are
+/// bit-identical to the stateless [`simulate`] entry point.
+#[derive(Default)]
+pub struct SimSession {
+    arena: Arena,
+}
+
+impl SimSession {
+    pub fn new() -> SimSession {
+        SimSession::default()
+    }
+
+    /// Simulate with this session's reusable buffers (no shared setup).
+    pub fn simulate(
+        &mut self,
+        hw: &Hardware,
+        graph: &TaskGraph,
+        mapping: &Mapping,
+        evals: &Registry,
+        cfg: &SimConfig,
+    ) -> Result<SimResult, SimError> {
+        self.simulate_prepared(hw, graph, mapping, evals, cfg, &SimSetup::default())
+    }
+
+    /// Simulate against a shared, prebuilt [`SimSetup`].
+    pub fn simulate_prepared(
+        &mut self,
+        hw: &Hardware,
+        graph: &TaskGraph,
+        mapping: &Mapping,
+        evals: &Registry,
+        cfg: &SimConfig,
+        setup: &SimSetup,
+    ) -> Result<SimResult, SimError> {
+        // Take the arena out for the run: an error (or a panic unwinding
+        // through an evaluator) simply discards it, and the next call
+        // starts from a fresh default instead of inheriting torn state.
+        let arena = std::mem::take(&mut self.arena);
+        let engine = Engine::new(hw, graph, mapping, evals, cfg, setup, arena)?;
+        let (result, arena) = engine.run(&mut StaticExecutor)?;
+        self.arena = arena;
+        Ok(result)
+    }
 }
 
 /// Run a simulation with the static executor.
@@ -444,7 +561,9 @@ pub fn simulate_dynamic(
     cfg: &SimConfig,
     executor: &mut dyn Executor,
 ) -> Result<SimResult, SimError> {
-    Engine::new(hw, graph, mapping, evals, cfg)?.run(executor)
+    let setup = SimSetup::default();
+    let engine = Engine::new(hw, graph, mapping, evals, cfg, &setup, Arena::default())?;
+    engine.run(executor).map(|(result, _arena)| result)
 }
 
 struct Engine<'a> {
@@ -465,8 +584,9 @@ struct Engine<'a> {
     storage: Vec<Option<StorageState>>,
     syncs: HashMap<u32, SyncGroupState>,
 
-    /// Interned, densely remapped per-(task, point) link sets.
-    routes: RouteTable,
+    /// Interned, densely remapped per-(task, point) link sets — either
+    /// taken from a shared [`SimSetup`] or built for this run.
+    routes: Arc<RouteTable>,
 
     /// Flat (task, iter) tables: index = task.index() * iterations + iter.
     /// deps_left uses u32::MAX as the "uninitialized" sentinel.
@@ -488,6 +608,9 @@ struct Engine<'a> {
     /// `cfg.dedup` (without it every activation re-evaluates, as before).
     demand_memo: Vec<Option<(crate::eval::Demand, f64)>>,
     demand_cache: HashMap<(u64, u64, u64, u32), (crate::eval::Demand, f64)>,
+    /// Setup key guarding cross-run reuse of `demand_cache` (see
+    /// [`SimSetup::key`]).
+    demand_token: Option<u64>,
 
     /// Flat (start, end) per task, NaN = never ran; folded into the result
     /// map at the end.
@@ -511,6 +634,8 @@ impl<'a> Engine<'a> {
         mapping: &'a Mapping,
         evals: &'a Registry,
         cfg: &'a SimConfig,
+        setup: &SimSetup,
+        arena: Arena,
     ) -> Result<Self, SimError> {
         if cfg.iterations == 0 {
             return Err(SimError("iterations must be >= 1".into()));
@@ -558,51 +683,116 @@ impl<'a> Engine<'a> {
                     .push(task.id);
             }
         }
-        let slots = graph.capacity() * cfg.iterations as usize;
-        let mut point_of = vec![None; graph.capacity()];
+        let cap = graph.capacity();
+        let slots = cap * cfg.iterations as usize;
+        let mut point_of = arena.point_of;
+        point_of.clear();
+        point_of.resize(cap, None);
         for (t, p) in mapping.mapped_tasks() {
             if (t.index()) < point_of.len() {
                 point_of[t.index()] = Some(p);
             }
         }
         // Intern every routed flow's link set once, remapped to dense
-        // per-point indices, so the event loop never re-derives routes.
-        let routes = RouteTable::build(hw, graph, &point_of);
+        // per-point indices, so the event loop never re-derives routes —
+        // or adopt the setup's prebuilt table and skip even that.
+        let routes = match &setup.routes {
+            Some(rt) => Arc::clone(rt),
+            None => Arc::new(RouteTable::build(hw, graph, &point_of)),
+        };
         let n_points = hw.num_points();
-        let shared: Vec<SharedPoint> = (0..n_points)
-            .map(|i| SharedPoint::new(routes.num_links(PointId(i as u32))))
-            .collect();
-        let excl: Vec<ExclPoint> = (0..n_points).map(|_| ExclPoint::default()).collect();
-        let storage: Vec<Option<StorageState>> = (0..graph.capacity()).map(|_| None).collect();
+
+        // Reset the arena in place: every buffer keeps its allocation when
+        // it is already the right shape (same topology across candidates).
+        let mut shared = arena.shared;
+        if shared.len() != n_points {
+            shared.clear();
+            shared.resize_with(n_points, SharedPoint::default);
+        }
+        for (i, sp) in shared.iter_mut().enumerate() {
+            sp.reset(routes.num_links(PointId(i as u32)));
+        }
+        let mut excl = arena.excl;
+        if excl.len() != n_points {
+            excl.clear();
+            excl.resize_with(n_points, ExclPoint::default);
+        }
+        for ep in excl.iter_mut() {
+            ep.reset();
+        }
+        let mut storage = arena.storage;
+        storage.clear();
+        storage.resize_with(cap, || None);
+        let mut deps_left = arena.deps_left;
+        deps_left.clear();
+        deps_left.resize(slots, u32::MAX);
+        let mut ready_time = arena.ready_time;
+        ready_time.clear();
+        ready_time.resize(slots, 0.0);
+        let mut real_ticks = arena.real_ticks;
+        real_ticks.clear();
+        real_ticks.resize(slots, 0);
+        let mut done_iters = arena.done_iters;
+        done_iters.clear();
+        done_iters.resize(cap, 0);
+        let mut enabled_in_deg = arena.enabled_in_deg;
+        graph.enabled_in_degrees_into(&mut enabled_in_deg);
+        let mut demand_memo = arena.demand_memo;
+        demand_memo.clear();
+        demand_memo.resize_with(cap, || None);
+        let mut demand_cache = arena.demand_cache;
+        if setup.key.is_none() || arena.demand_token != setup.key {
+            demand_cache.clear();
+        }
+        let mut flat_timings = arena.flat_timings;
+        flat_timings.clear();
+        flat_timings.resize(cap, (f64::NAN, f64::NAN));
+        let mut mem_usage = arena.mem_usage;
+        mem_usage.clear();
+        mem_usage.resize(n_points, 0);
+        let mut events = arena.events;
+        events.clear();
+        let mut event_payload = arena.event_payload;
+        event_payload.clear();
+        let mut flow_scratch = arena.flow_scratch;
+        flow_scratch.clear();
+        let mut succ_scratch = arena.succ_scratch;
+        succ_scratch.clear();
+        let mut dead_scratch = arena.dead_scratch;
+        dead_scratch.clear();
+        let mut finished_scratch = arena.finished_scratch;
+        finished_scratch.clear();
+
         Ok(Engine {
             hw,
             graph,
             mapping,
             evals,
             cfg,
-            events: BinaryHeap::new(),
-            event_payload: Vec::new(),
+            events,
+            event_payload,
             seq: 0,
             shared,
             excl,
             storage,
             syncs,
             routes,
-            deps_left: vec![u32::MAX; slots],
-            ready_time: vec![0.0; slots],
-            real_ticks: vec![0; slots],
-            done_iters: vec![0; graph.capacity()],
+            deps_left,
+            ready_time,
+            real_ticks,
+            done_iters,
             point_of,
-            enabled_in_deg: graph.enabled_in_degrees(),
-            demand_memo: vec![None; graph.capacity()],
-            demand_cache: HashMap::new(),
-            flat_timings: vec![(f64::NAN, f64::NAN); graph.capacity()],
+            enabled_in_deg,
+            demand_memo,
+            demand_cache,
+            demand_token: setup.key,
+            flat_timings,
             result: SimResult::default(),
-            mem_usage: vec![0; n_points],
-            flow_scratch: Vec::new(),
-            succ_scratch: Vec::new(),
-            dead_scratch: Vec::new(),
-            finished_scratch: Vec::new(),
+            mem_usage,
+            flow_scratch,
+            succ_scratch,
+            dead_scratch,
+            finished_scratch,
         })
     }
 
@@ -653,7 +843,7 @@ impl<'a> Engine<'a> {
         (ev.demand(t, self.hw.entry(p)), ev.energy(t, self.hw.entry(p)))
     }
 
-    fn run(mut self, executor: &mut dyn Executor) -> Result<SimResult, SimError> {
+    fn run(mut self, executor: &mut dyn Executor) -> Result<(SimResult, Arena), SimError> {
         // Inject source ticks.
         let sources: Vec<TaskId> = self
             .graph
@@ -719,20 +909,44 @@ impl<'a> Engine<'a> {
                 self.result.unfinished += 1;
             }
         }
-        // Memory peaks vs capacity.
+        // Memory peaks vs capacity (index order: deterministic report).
         for (p, peak) in &self.result.peak_memory {
-            if let Some(m) = self.hw.point(*p).kind.as_memory() {
+            if let Some(m) = self.hw.point(p).kind.as_memory() {
                 if *peak > m.capacity {
                     self.result.memory_violations.push(format!(
                         "{}: peak {} bytes exceeds capacity {}",
-                        self.hw.entry(*p).addr,
+                        self.hw.entry(p).addr,
                         peak,
                         m.capacity
                     ));
                 }
             }
         }
-        Ok(self.result)
+        // Hand the arena back for the next run on this session.
+        let result = std::mem::take(&mut self.result);
+        let arena = Arena {
+            events: self.events,
+            event_payload: self.event_payload,
+            shared: self.shared,
+            excl: self.excl,
+            storage: self.storage,
+            deps_left: self.deps_left,
+            ready_time: self.ready_time,
+            real_ticks: self.real_ticks,
+            done_iters: self.done_iters,
+            point_of: self.point_of,
+            enabled_in_deg: self.enabled_in_deg,
+            demand_memo: self.demand_memo,
+            demand_cache: self.demand_cache,
+            flat_timings: self.flat_timings,
+            mem_usage: self.mem_usage,
+            flow_scratch: self.flow_scratch,
+            succ_scratch: self.succ_scratch,
+            dead_scratch: self.dead_scratch,
+            finished_scratch: self.finished_scratch,
+            demand_token: self.demand_token,
+        };
+        Ok((result, arena))
     }
 
     // ------------------------------------------------------------------
@@ -782,7 +996,7 @@ impl<'a> Engine<'a> {
                     st.start = now;
                     self.mem_usage[p.index()] += bytes;
                     let usage = self.mem_usage[p.index()];
-                    let peak = self.result.peak_memory.entry(p).or_insert(0);
+                    let peak = self.result.peak_memory.entry_or(p, 0);
                     *peak = (*peak).max(usage);
                 }
                 self.complete(task, iter, now, now, executor);
@@ -821,11 +1035,11 @@ impl<'a> Engine<'a> {
         let (demand, energy) = self.demand_energy(task);
         let end = start + demand.total();
         if energy > 0.0 {
-            *self.result.point_energy.entry(p).or_insert(0.0) += energy;
+            *self.result.point_energy.entry_or(p, 0.0) += energy;
         }
         let excl = &mut self.excl[p.index()];
         excl.running = Some((task, iter, start, end));
-        *self.result.point_busy.entry(p).or_insert(0.0) += demand.total();
+        *self.result.point_busy.entry_or(p, 0.0) += demand.total();
         if self.cfg.collect_timeline {
             self.result.timeline.push(TimelineEvent {
                 task,
@@ -854,7 +1068,7 @@ impl<'a> Engine<'a> {
     fn add_flow(&mut self, p: PointId, task: TaskId, iter: u32, now: Time) {
         let (demand, energy) = self.demand_energy(task);
         if energy > 0.0 {
-            *self.result.point_energy.entry(p).or_insert(0.0) += energy;
+            *self.result.point_energy.entry_or(p, 0.0) += energy;
         }
         let links = self.routes.span_of(task);
         self.advance_flows(p, now);
@@ -871,7 +1085,7 @@ impl<'a> Engine<'a> {
             start: now,
         };
         self.shared[p.index()].add_flow_entry(flow, &self.routes, self.cfg.incremental);
-        *self.result.point_busy.entry(p).or_insert(0.0) += demand.shared;
+        *self.result.point_busy.entry_or(p, 0.0) += demand.shared;
         self.reschedule_flows(p, now);
     }
 
@@ -1502,6 +1716,72 @@ mod tests {
         };
         let full = simulate(&hw, &g, &m, &Registry::standard(), &full_cfg).unwrap();
         assert_eq!(incr, full);
+    }
+
+    /// Session re-entry: back-to-back runs on one `SimSession` (same and
+    /// different workloads, with and without a prebuilt route table and a
+    /// shared setup key) are bit-identical to the stateless entry point.
+    #[test]
+    fn sim_session_reuse_is_bit_identical() {
+        let hw = tiny_hw(1.0);
+        let mut g = TaskGraph::new();
+        let e = g.add("E", compute_task(100.0));
+        let a = g.add("A", comm_task(50));
+        let f = g.add("F", comm_task(200));
+        let b = g.add("B", compute_task(100.0));
+        let c = g.add("C", comm_task(80));
+        g.connect(e, a);
+        g.connect(e, f);
+        g.connect(a, b);
+        g.connect(b, c);
+        let core = hw.points_of_kind("compute")[0];
+        let bus = hw.points_of_kind("comm")[0];
+        let mut m = Mapping::new();
+        m.map(e, core);
+        m.map(b, core);
+        for t in [a, f, c] {
+            m.map(t, bus);
+        }
+        let cfg = SimConfig {
+            collect_timeline: true,
+            ..Default::default()
+        };
+        let golden = simulate(&hw, &g, &m, &Registry::standard(), &cfg).unwrap();
+
+        let evals = Registry::standard();
+        let mut session = SimSession::new();
+        // plain session reuse: arenas reset in place between runs
+        for _ in 0..3 {
+            let r = session.simulate(&hw, &g, &m, &evals, &cfg).unwrap();
+            assert_eq!(r, golden);
+        }
+        // prepared setup: prebuilt route table + stable key (warm demand
+        // cache across runs)
+        let mut point_of = vec![None; g.capacity()];
+        for (t, p) in m.mapped_tasks() {
+            point_of[t.index()] = Some(p);
+        }
+        let routes = Arc::new(RouteTable::build(&hw, &g, &point_of));
+        let setup = SimSetup {
+            routes: Some(routes),
+            key: Some(42),
+        };
+        for _ in 0..3 {
+            let r = session
+                .simulate_prepared(&hw, &g, &m, &evals, &cfg, &setup)
+                .unwrap();
+            assert_eq!(r, golden);
+        }
+        // interleave a different-shaped workload: arenas must re-shape
+        let hw2 = tiny_hw(2.0);
+        let mut g2 = TaskGraph::new();
+        let x = g2.add("x", compute_task(10.0));
+        let mut m2 = Mapping::new();
+        m2.map(x, hw2.points_of_kind("compute")[0]);
+        let small = session.simulate(&hw2, &g2, &m2, &evals, &cfg).unwrap();
+        assert_eq!(small.makespan, 10.0);
+        let r = session.simulate(&hw, &g, &m, &evals, &cfg).unwrap();
+        assert_eq!(r, golden);
     }
 
     #[test]

@@ -47,10 +47,23 @@ pub struct RouteTable {
     num_links: Vec<u32>,
 }
 
+thread_local! {
+    /// Per-thread count of [`RouteTable::build`] invocations, for tests and
+    /// benches instrumenting topology-keyed setup reuse ("was the route
+    /// table really built only once for this search?").
+    static ROUTE_BUILDS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of [`RouteTable::build`] calls made on the current thread.
+pub fn route_builds_this_thread() -> u64 {
+    ROUTE_BUILDS.with(|c| c.get())
+}
+
 impl RouteTable {
     /// Intern the link sets of every enabled, routed communication task.
     /// `point_of` is the task-index→point map precomputed from the mapping.
     pub fn build(hw: &Hardware, graph: &TaskGraph, point_of: &[Option<PointId>]) -> RouteTable {
+        ROUTE_BUILDS.with(|c| c.set(c.get() + 1));
         let mut table = RouteTable {
             arena: Vec::new(),
             spans: vec![(0, 0); graph.capacity()],

@@ -14,7 +14,10 @@ pub mod engine;
 pub mod links;
 pub mod reference;
 
-pub use engine::{simulate, simulate_dynamic, SimConfig, SimError, SimResult, Time, TimelineEvent};
+pub use engine::{
+    simulate, simulate_dynamic, SimConfig, SimError, SimResult, SimSession, SimSetup, Time,
+    TimelineEvent,
+};
 
 pub use consistent::simulate_consistent;
 pub use reference::simulate_naive;

@@ -55,13 +55,13 @@ pub fn simulate_naive(
                 let d = evals.demand(task, hw.entry(point));
                 let end = start + d.total();
                 *timer = end;
-                *result.point_busy.entry(point).or_insert(0.0) += d.total();
+                *result.point_busy.entry_or(point, 0.0) += d.total();
                 (start, end)
             }
             TaskKind::Comm { .. } => {
                 // full uncontended bandwidth, concurrent with everything
                 let d = evals.demand(task, hw.entry(point));
-                *result.point_busy.entry(point).or_insert(0.0) += d.shared;
+                *result.point_busy.entry_or(point, 0.0) += d.shared;
                 (ready, ready + d.total())
             }
         };

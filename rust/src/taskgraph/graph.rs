@@ -122,14 +122,22 @@ impl TaskGraph {
     /// simulator's dependency counters are seeded from this once per run
     /// instead of re-filtering predecessor lists per (task, iteration).
     pub fn enabled_in_degrees(&self) -> Vec<u32> {
-        let mut deg = vec![0u32; self.tasks.len()];
+        let mut deg = Vec::new();
+        self.enabled_in_degrees_into(&mut deg);
+        deg
+    }
+
+    /// [`Self::enabled_in_degrees`] into a caller-owned buffer, for
+    /// simulation sessions that reuse their arenas across runs.
+    pub fn enabled_in_degrees_into(&self, deg: &mut Vec<u32>) {
+        deg.clear();
+        deg.resize(self.tasks.len(), 0);
         for t in self.iter().filter(|t| t.enabled) {
             deg[t.id.index()] = self.in_edges[t.id.index()]
                 .iter()
                 .filter(|p| self.task(**p).enabled)
                 .count() as u32;
         }
-        deg
     }
 
     /// Tasks with no predecessors (simulation entry points).

@@ -18,6 +18,15 @@ impl TaskId {
     }
 }
 
+impl crate::util::densemap::DenseKey for TaskId {
+    fn dense_index(self) -> usize {
+        self.0 as usize
+    }
+    fn from_dense_index(i: usize) -> Self {
+        TaskId(i as u32)
+    }
+}
+
 impl fmt::Display for TaskId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "t{}", self.0)

@@ -1,0 +1,250 @@
+//! Dense `Vec`-backed maps over index-like keys (`TaskId`, `PointId`).
+//!
+//! The simulator result maps used to be `HashMap`s keyed by the dense id
+//! types, which costs a hash + allocation per insert on the DSE hot path
+//! and iterates in a nondeterministic order. [`DenseMap`] stores values in
+//! a plain `Vec<Option<V>>` indexed by the key's integer index: O(1)
+//! unhashed access, one allocation amortized over the whole map, and
+//! stable (index-order) iteration — which also makes derived artifacts
+//! like the memory-violation list deterministic.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::ops::Index;
+
+/// An index-like key: a newtype over a small dense integer id.
+pub trait DenseKey: Copy {
+    fn dense_index(self) -> usize;
+    fn from_dense_index(i: usize) -> Self;
+}
+
+/// A map from a [`DenseKey`] to `V`, backed by a `Vec<Option<V>>`.
+#[derive(Clone)]
+pub struct DenseMap<K, V> {
+    slots: Vec<Option<V>>,
+    len: usize,
+    _key: PhantomData<K>,
+}
+
+impl<K, V> Default for DenseMap<K, V> {
+    fn default() -> Self {
+        DenseMap {
+            slots: Vec::new(),
+            len: 0,
+            _key: PhantomData,
+        }
+    }
+}
+
+impl<K: DenseKey, V> DenseMap<K, V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size the backing vector for keys `0..n` (avoids regrowth when
+    /// the caller knows the index universe, e.g. `hw.num_points()`).
+    pub fn with_capacity(n: usize) -> Self {
+        let mut slots = Vec::new();
+        slots.resize_with(n, || None);
+        DenseMap {
+            slots,
+            len: 0,
+            _key: PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains_key(&self, k: &K) -> bool {
+        self.get(k).is_some()
+    }
+
+    pub fn get(&self, k: &K) -> Option<&V> {
+        self.slots.get(k.dense_index()).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, k: &K) -> Option<&mut V> {
+        self.slots.get_mut(k.dense_index()).and_then(|s| s.as_mut())
+    }
+
+    pub fn insert(&mut self, k: K, v: V) -> Option<V> {
+        let i = k.dense_index();
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        let old = self.slots[i].replace(v);
+        if old.is_none() {
+            self.len += 1;
+        }
+        old
+    }
+
+    /// The value at `k`, inserting `default` first when absent — the dense
+    /// analogue of `HashMap::entry(k).or_insert(default)`.
+    pub fn entry_or(&mut self, k: K, default: V) -> &mut V {
+        let i = k.dense_index();
+        if i >= self.slots.len() {
+            self.slots.resize_with(i + 1, || None);
+        }
+        let slot = &mut self.slots[i];
+        if slot.is_none() {
+            *slot = Some(default);
+            self.len += 1;
+        }
+        slot.as_mut().expect("slot just filled")
+    }
+
+    /// Entries in key-index order.
+    pub fn iter(&self) -> impl Iterator<Item = (K, &V)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (K::from_dense_index(i), v)))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = K> + '_ {
+        self.iter().map(|(k, _)| k)
+    }
+
+    pub fn values(&self) -> impl Iterator<Item = &V> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+}
+
+impl<K: DenseKey, V: PartialEq> PartialEq for DenseMap<K, V> {
+    /// Logical equality: same key set with equal values, regardless of
+    /// backing-vector capacity.
+    fn eq(&self, other: &Self) -> bool {
+        if self.len != other.len {
+            return false;
+        }
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .all(|(i, s)| other.slots.get(i).map(|o| o.as_ref()) == Some(s.as_ref()))
+    }
+}
+
+impl<K: DenseKey, V> Index<&K> for DenseMap<K, V> {
+    type Output = V;
+
+    fn index(&self, k: &K) -> &V {
+        self.get(k).expect("no entry for key in DenseMap")
+    }
+}
+
+impl<K: DenseKey, V> Index<K> for DenseMap<K, V> {
+    type Output = V;
+
+    fn index(&self, k: K) -> &V {
+        self.get(&k).expect("no entry for key in DenseMap")
+    }
+}
+
+impl<'a, K: DenseKey, V> IntoIterator for &'a DenseMap<K, V> {
+    type Item = (K, &'a V);
+    type IntoIter = Box<dyn Iterator<Item = (K, &'a V)> + 'a>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        Box::new(self.iter())
+    }
+}
+
+impl<K: DenseKey, V> FromIterator<(K, V)> for DenseMap<K, V> {
+    fn from_iter<I: IntoIterator<Item = (K, V)>>(iter: I) -> Self {
+        let mut m = DenseMap::new();
+        for (k, v) in iter {
+            m.insert(k, v);
+        }
+        m
+    }
+}
+
+impl<K: DenseKey + fmt::Debug, V: fmt::Debug> fmt::Debug for DenseMap<K, V> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_map().entries(self.iter()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Id(u32);
+    impl DenseKey for Id {
+        fn dense_index(self) -> usize {
+            self.0 as usize
+        }
+        fn from_dense_index(i: usize) -> Self {
+            Id(i as u32)
+        }
+    }
+
+    #[test]
+    fn insert_get_update() {
+        let mut m: DenseMap<Id, f64> = DenseMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(Id(3), 1.5), None);
+        assert_eq!(m.insert(Id(0), 2.5), None);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(&Id(3)), Some(&1.5));
+        assert_eq!(m.get(&Id(1)), None);
+        assert_eq!(m.insert(Id(3), 9.0), Some(1.5));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[&Id(3)], 9.0);
+        assert_eq!(m[Id(0)], 2.5);
+    }
+
+    #[test]
+    fn entry_or_accumulates() {
+        let mut m: DenseMap<Id, f64> = DenseMap::new();
+        *m.entry_or(Id(5), 0.0) += 2.0;
+        *m.entry_or(Id(5), 0.0) += 3.0;
+        assert_eq!(m[&Id(5)], 5.0);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn iteration_is_index_ordered() {
+        let mut m: DenseMap<Id, u32> = DenseMap::new();
+        m.insert(Id(7), 70);
+        m.insert(Id(2), 20);
+        m.insert(Id(4), 40);
+        let keys: Vec<u32> = m.keys().map(|k| k.0).collect();
+        assert_eq!(keys, vec![2, 4, 7]);
+        let vals: Vec<u32> = m.values().copied().collect();
+        assert_eq!(vals, vec![20, 40, 70]);
+        let pairs: Vec<(u32, u32)> = (&m).into_iter().map(|(k, v)| (k.0, *v)).collect();
+        assert_eq!(pairs, vec![(2, 20), (4, 40), (7, 70)]);
+    }
+
+    #[test]
+    fn equality_ignores_capacity() {
+        let mut a: DenseMap<Id, u32> = DenseMap::with_capacity(64);
+        let mut b: DenseMap<Id, u32> = DenseMap::new();
+        a.insert(Id(1), 10);
+        b.insert(Id(1), 10);
+        assert_eq!(a, b);
+        b.insert(Id(9), 90);
+        assert_ne!(a, b);
+        a.insert(Id(9), 91);
+        assert_ne!(a, b);
+        a.insert(Id(9), 90);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_iter_collects() {
+        let m: DenseMap<Id, u32> = [(Id(1), 1), (Id(0), 0)].into_iter().collect();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[&Id(0)], 0);
+    }
+}

@@ -14,7 +14,10 @@
 //! * [`propcheck`] — a miniature property-based testing framework with
 //!   random case generation and iterative shrinking.
 //! * [`logger`] — leveled stderr logging with an env switch (`MLDSE_LOG`).
+//! * [`densemap`] — `Vec`-backed maps over dense id keys with stable
+//!   iteration order (the simulator result maps).
 
+pub mod densemap;
 pub mod error;
 pub mod json;
 pub mod logger;

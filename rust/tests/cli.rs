@@ -1,0 +1,109 @@
+//! CLI worker-ergonomics tests, run against the real `mldse` binary
+//! (Cargo exposes its path via `CARGO_BIN_EXE_mldse`): `--workers 0`
+//! auto-detects, the `MLDSE_WORKERS` environment override is honored, and
+//! invalid values fail with proper error messages naming the source.
+
+use std::process::Command;
+
+fn mldse() -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mldse"));
+    // isolate from the ambient environment
+    cmd.env_remove("MLDSE_WORKERS");
+    cmd
+}
+
+/// A tiny exploration: the `mapping` preset is a 4-core placement demo,
+/// cheap enough for debug-build CLI tests.
+const EXPLORE: &[&str] = &[
+    "explore", "--preset", "mapping", "--explorer", "anneal", "--budget", "6",
+];
+
+#[test]
+fn workers_zero_means_auto_detect() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--workers", "0"])
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Exploration"), "{stdout}");
+}
+
+#[test]
+fn invalid_workers_flag_is_a_named_error() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--workers", "abc"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--workers: invalid value 'abc'"),
+        "{stderr}"
+    );
+}
+
+#[test]
+fn env_override_sets_auto_detected_workers() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--workers", "0"])
+        .env("MLDSE_WORKERS", "2")
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn invalid_env_override_is_a_named_error() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--workers", "0"])
+        .env("MLDSE_WORKERS", "lots")
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("MLDSE_WORKERS: invalid value 'lots'"),
+        "{stderr}"
+    );
+}
+
+#[test]
+fn explicit_workers_bypasses_a_broken_env_override() {
+    // a nonzero --workers never consults the environment
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--workers", "2"])
+        .env("MLDSE_WORKERS", "garbage")
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn zero_env_override_is_rejected() {
+    let out = mldse()
+        .args(EXPLORE)
+        .env("MLDSE_WORKERS", "0")
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("MLDSE_WORKERS"), "{stderr}");
+}

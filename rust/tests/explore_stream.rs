@@ -1,0 +1,211 @@
+//! Exploration-throughput overhaul regression suite:
+//!
+//! * **Determinism** — bit-identical `ExplorationReport` JSON between the
+//!   streaming (persistent worker pool) and batched (one-shot pool per
+//!   batch) evaluation paths, across all four explorers, worker counts
+//!   {1, 2, 8} and two seeds.
+//! * **Topology-keyed setup reuse** — a `PlacementSpace` search builds the
+//!   `RouteTable` exactly once (thread-local build counter) and reports a
+//!   single setup build.
+//! * **Panic hardening** — a deliberately panicking objective surfaces as
+//!   a counted failure carrying the candidate label, instead of aborting
+//!   the sweep.
+
+use mldse::dse::explore::{
+    explore, explorer_by_name, placement_demo, Axis, AxisKind, Candidate, Design, DesignSpace,
+    DesignView, ExplorationReport, ExploreOpts, GridExplorer, Makespan, Objective,
+};
+use mldse::eval::Registry;
+use mldse::hwir::{ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint};
+use mldse::mapping::Mapping;
+use mldse::sim::SimResult;
+use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+use mldse::workloads::Workload;
+
+fn report_json(mut r: ExplorationReport) -> String {
+    // elapsed wall-clock (and the derived evals/sec) is the only
+    // legitimately nondeterministic part of a report — zero it so the
+    // rest must match byte for byte.
+    r.elapsed_secs = 0.0;
+    r.to_json().to_string()
+}
+
+#[test]
+fn determinism_suite_streaming_vs_batched_bit_identical_json() {
+    let space = placement_demo("det-suite", (2, 2), 6);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    for explorer_name in ["grid", "random", "hill", "anneal"] {
+        for seed in [7u64, 3203] {
+            let explorer = explorer_by_name(explorer_name, seed).unwrap();
+            let mut golden: Option<String> = None;
+            for workers in [1usize, 2, 8] {
+                for streaming in [true, false] {
+                    let opts = ExploreOpts {
+                        budget: 24,
+                        workers,
+                        streaming,
+                        ..Default::default()
+                    };
+                    let r = explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                        .unwrap_or_else(|e| {
+                            panic!("{explorer_name}/seed {seed}/workers {workers}: {e:#}")
+                        });
+                    assert!(!r.evals.is_empty());
+                    let json = report_json(r);
+                    match &golden {
+                        None => golden = Some(json),
+                        Some(g) => assert_eq!(
+                            *g, json,
+                            "{explorer_name} seed {seed}: workers={workers} \
+                             streaming={streaming} diverged from the serial baseline"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn placement_search_builds_route_table_exactly_once() {
+    // workers = 1 keeps every evaluation on this thread, so the
+    // thread-local RouteTable build counter sees exactly this search.
+    let space = placement_demo("topo-cache", (2, 2), 4);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: 10,
+        workers: 1,
+        ..Default::default()
+    };
+    let before = mldse::sim::links::route_builds_this_thread();
+    let r = explore(
+        &space,
+        &objectives,
+        &GridExplorer,
+        &Registry::standard(),
+        &opts,
+    )
+    .unwrap();
+    let built = mldse::sim::links::route_builds_this_thread() - before;
+    assert_eq!(r.sim_calls, 10);
+    assert_eq!(
+        built, 1,
+        "PlacementSpace candidates share one topology: the RouteTable must \
+         be interned once and reused by every simulation"
+    );
+    assert_eq!(r.setup_builds, 1);
+    assert_eq!(r.setup_hits, 9, "every sim after the first reuses the setup");
+    assert!(r.setup_hit_rate() > 0.8, "{}", r.setup_hit_rate());
+}
+
+/// A 1-axis space whose only purpose is to attach the axis value as
+/// `area_mm2`, so an objective can be detonated on one specific candidate.
+struct AreaSpace {
+    axes: Vec<Axis>,
+}
+
+impl AreaSpace {
+    fn new(n: u64) -> AreaSpace {
+        let vals: Vec<u64> = (0..n).collect();
+        AreaSpace {
+            axes: vec![Axis::u64s("a", AxisKind::HwParam, &vals)],
+        }
+    }
+}
+
+impl DesignSpace for AreaSpace {
+    fn name(&self) -> &str {
+        "area-space"
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> mldse::util::error::Result<Design> {
+        let mut m = SpaceMatrix::new("chip", vec![1]);
+        m.set(
+            Coord::new(vec![0]),
+            Element::Point(SpacePoint::compute(
+                "core",
+                ComputeAttrs::new((8, 8), 32).with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+            )),
+        );
+        let hw = Hardware::build(m);
+        let core = hw.points_of_kind("compute")[0];
+        let mut graph = TaskGraph::new();
+        let mut cost = ComputeCost::zero(OpClass::Elementwise);
+        cost.vec_flops = 1_000.0 * (1.0 + c.0[0] as f64);
+        let t = graph.add("work", TaskKind::Compute(cost));
+        let mut mapping = Mapping::new();
+        mapping.map(t, core);
+        let mut d = Design::new(Workload {
+            hw,
+            graph,
+            mapping,
+            name: "area-space".into(),
+            notes: Vec::new(),
+        });
+        d.area_mm2 = Some(c.0[0] as f64);
+        Ok(d)
+    }
+}
+
+/// Panics when scoring the design whose area equals `trigger`.
+struct ExplodingObjective {
+    trigger: f64,
+}
+
+impl Objective for ExplodingObjective {
+    fn name(&self) -> &str {
+        "exploding"
+    }
+
+    fn score(&self, design: &DesignView, sim: &SimResult) -> f64 {
+        if design.area_mm2 == Some(self.trigger) {
+            panic!("objective exploded on area {}", self.trigger);
+        }
+        sim.makespan
+    }
+}
+
+#[test]
+fn panicking_objective_is_a_counted_failure_not_an_abort() {
+    let space = AreaSpace::new(6);
+    let objectives: Vec<Box<dyn Objective>> =
+        vec![Box::new(ExplodingObjective { trigger: 3.0 })];
+    // exercise both the pooled (workers > 1, multi-miss batch) and the
+    // inline serial path — panic semantics must be identical
+    for workers in [4usize, 1] {
+        let opts = ExploreOpts {
+            budget: 6,
+            workers,
+            ..Default::default()
+        };
+        let r = explore(
+            &space,
+            &objectives,
+            &GridExplorer,
+            &Registry::standard(),
+            &opts,
+        )
+        .unwrap_or_else(|e| panic!("sweep aborted (workers {workers}): {e:#}"));
+        assert_eq!(r.evals.len(), 6, "workers {workers}");
+        assert_eq!(r.failures, 1, "workers {workers}");
+        assert!(r.evals[3].objectives[0].is_infinite());
+        let err = r.evals[3].error.as_deref().unwrap();
+        assert!(err.contains("a=3"), "candidate label missing: {err}");
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("objective exploded on area 3"), "{err}");
+        // every other candidate evaluated normally
+        for (i, e) in r.evals.iter().enumerate() {
+            if i != 3 {
+                assert!(e.objectives[0].is_finite(), "eval {i}");
+                assert!(e.error.is_none(), "eval {i}");
+            }
+        }
+        // and the best ignores the exploded candidate
+        assert_eq!(r.best().unwrap().candidate.0, vec![0]);
+    }
+}
