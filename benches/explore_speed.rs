@@ -106,6 +106,7 @@ fn main() {
     let annealer = AnnealExplorer {
         seed: 0xD5E,
         init_temp: 0.1,
+        tiered: false,
     };
     let new_opts = ExploreOpts {
         budget: sa_budget,
@@ -214,6 +215,50 @@ fn main() {
     );
     hc.insert("streaming_vs_batched_speedup", hc_speedup.into());
     out.insert("hill_mapping", Json::Obj(hc));
+
+    // --- 4. joint three-tier search (composed NestedSpace) ---
+    // The tier-aware annealer over arch × hw-param × mapping: throughput
+    // plus how hard the per-outer-candidate EvalPlan cache works.
+    let tt_budget = if quick { 24 } else { 120 };
+    let tt_space = mldse::dse::explore::three_tier("three-tier-bench", quick)
+        .expect("three-tier space");
+    let tt_objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let tt_annealer = AnnealExplorer {
+        seed: 0xD5E,
+        init_temp: 0.1,
+        tiered: true,
+    };
+    let tt_opts = ExploreOpts {
+        budget: tt_budget,
+        ..Default::default()
+    };
+    let (tt_s, tt_report) = time_explore(
+        "three-tier joint search (tiered SA)",
+        &tt_space,
+        &tt_objectives,
+        &tt_annealer,
+        &registry,
+        &tt_opts,
+        reps.min(3),
+    );
+    println!(
+        "[bench] three-tier joint search: {:.1} evals/s, {} outer topologies built \
+         for {} sims (setup hit rate {:.3})",
+        tt_report.evals.len() as f64 / tt_s,
+        tt_report.setup_builds,
+        tt_report.sim_calls,
+        tt_report.setup_hit_rate()
+    );
+    let mut tt = JsonObj::new();
+    tt.insert("budget", (tt_budget as u64).into());
+    tt.insert(
+        "evals_per_sec",
+        (tt_report.evals.len() as f64 / tt_s).into(),
+    );
+    tt.insert("setup_builds", (tt_report.setup_builds as u64).into());
+    tt.insert("sim_calls", (tt_report.sim_calls as u64).into());
+    tt.insert("setup_cache_hit_rate", tt_report.setup_hit_rate().into());
+    out.insert("three_tier", Json::Obj(tt));
 
     let doc = Json::Obj(out).to_pretty();
     std::fs::write("BENCH_explore.json", &doc).expect("write BENCH_explore.json");

@@ -50,6 +50,7 @@ fn main() {
     let annealer = AnnealExplorer {
         seed: 0xD5E,
         init_temp: 0.1,
+        tiered: false,
     };
     let anneal = explore(&space, &objectives, &annealer, &registry, &opts).expect("anneal");
     println!("{}", anneal.summary_table().render());

@@ -147,6 +147,7 @@ fn main() -> mldse::util::error::Result<()> {
         let explorer = AnnealExplorer {
             seed: 0xD5E,
             init_temp: 0.1,
+            tiered: false,
         };
         let report = explore(&space, &objectives, &explorer, coord.registry(), &opts)?;
         let best = report

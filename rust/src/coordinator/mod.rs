@@ -110,6 +110,7 @@ impl Coordinator {
             "fig9-cross" => experiments::fig9_cross(&ctx),
             "fig10" => experiments::fig10(&ctx),
             "map-search" => experiments::map_search(&ctx),
+            "three-tier" => experiments::three_tier(&ctx),
             "sim-speed" => vec![experiments::sim_speed(&ctx).0],
             other => crate::bail!(
                 "unknown experiment '{other}' (valid: {})",
@@ -130,6 +131,7 @@ pub const EXPERIMENTS: &[&str] = &[
     "fig9-cross",
     "fig10",
     "map-search",
+    "three-tier",
     "sim-speed",
 ];
 

@@ -21,9 +21,9 @@ use crate::workloads::{dmc_decode_temporal, dmc_prefill, gsm_prefill, mpmc_decod
 use crate::util::error::Result;
 
 use super::explore::{
-    explore, placement_demo, AnnealExplorer, Axis, AxisKind, Candidate, CostUsd, Design,
-    DesignSpace, Edp, ExploreOpts, Explorer, GridExplorer, HillClimbExplorer, Makespan,
-    Objective, PackagingSpace, RandomExplorer,
+    explore, placement_demo, three_tier as three_tier_space, AnnealExplorer, Axis, AxisKind,
+    Candidate, CostUsd, Design, DesignSpace, Edp, ExploreOpts, Explorer, GridExplorer,
+    HillClimbExplorer, Makespan, Objective, PackagingSpace, RandomExplorer,
 };
 use super::parallel::run_parallel;
 use super::report::{fmt, Table};
@@ -945,6 +945,7 @@ pub fn map_search(ctx: &Ctx) -> Vec<Table> {
         Box::new(AnnealExplorer {
             seed: 0xD5E,
             init_temp: 0.1,
+            tiered: false,
         }),
     ];
     for explorer in &explorers {
@@ -969,6 +970,65 @@ pub fn map_search(ctx: &Ctx) -> Vec<Table> {
         ]);
     }
     vec![t]
+}
+
+// ======================================================================
+// E16 — three-tier joint DSE (§7 end to end)
+// ======================================================================
+
+/// E16: the paper's headline narrative as ONE search — MPMC packaging
+/// technology (architecture tier) × chiplets/package and chiplet
+/// local-memory bandwidth (hardware-parameter tier) × a placement
+/// mapping program (mapping tier), jointly explored by the tier-aware
+/// annealer over a [`NestedSpace`](super::explore::NestedSpace). The
+/// outer digits key the evaluation setup, so hardware + route table are
+/// built once per distinct (packaging, cpp, lmem_bw) point and only the
+/// mapping rebinds inside it.
+pub fn three_tier(ctx: &Ctx) -> Vec<Table> {
+    let space = three_tier_space("three-tier", ctx.quick).expect("three-tier space");
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
+    let budget = if ctx.quick { 40 } else { 160 };
+    let explorer = AnnealExplorer {
+        seed: 0xD5E,
+        init_temp: 0.1,
+        tiered: true,
+    };
+    let opts = ExploreOpts {
+        budget,
+        workers: ctx.workers,
+        ..Default::default()
+    };
+    let report = explore(&space, &objectives, &explorer, &ctx.evals, &opts)
+        .expect("three-tier explore");
+
+    let summary = report.summary_table();
+
+    let mut best_t = Table::new(
+        "E16: three-tier joint search — best candidate by DSE tier",
+        &["tier", "axis", "value"],
+    );
+    if let Some(best) = report.best() {
+        for (axis, d) in space.axes().iter().zip(&best.candidate.0) {
+            best_t.row(vec![
+                axis.kind.name().into(),
+                axis.name.clone(),
+                axis.values.label(*d as usize),
+            ]);
+        }
+    }
+
+    let mut reuse_t = Table::new(
+        "E16: joint-search setup reuse (one EvalPlan per distinct outer candidate)",
+        &["sims", "outer topologies built", "setup hits", "hit rate"],
+    );
+    reuse_t.row(vec![
+        report.sim_calls.to_string(),
+        report.setup_builds.to_string(),
+        report.setup_hits.to_string(),
+        format!("{:.0}%", report.setup_hit_rate() * 100.0),
+    ]);
+
+    vec![summary, best_t, reuse_t]
 }
 
 #[cfg(test)]
@@ -1059,6 +1119,26 @@ mod tests {
             let accepted: usize = row[4].parse().unwrap();
             assert!(accepted > 0, "{row:?}");
         }
+    }
+
+    #[test]
+    fn three_tier_quick_covers_all_tiers_and_reuses_setups() {
+        let ctx = Ctx::quick();
+        let tables = three_tier(&ctx);
+        assert_eq!(tables.len(), 3);
+        // the best-candidate breakdown names every DSE tier
+        let tiers: Vec<&str> = tables[1].rows.iter().map(|r| r[0].as_str()).collect();
+        for tier in ["arch", "hw-param", "mapping"] {
+            assert!(tiers.contains(&tier), "missing {tier} in {tiers:?}");
+        }
+        // joint search shares setups: strictly fewer plan builds than sims
+        let sims: usize = tables[2].rows[0][0].parse().unwrap();
+        let builds: usize = tables[2].rows[0][1].parse().unwrap();
+        let hits: usize = tables[2].rows[0][2].parse().unwrap();
+        assert!(sims > 0);
+        assert!(builds >= 1);
+        assert!(builds < sims, "{builds} builds for {sims} sims");
+        assert_eq!(builds + hits, sims);
     }
 
     #[test]

@@ -1,0 +1,925 @@
+//! The design-space algebra: composition combinators over
+//! [`DesignSpace`].
+//!
+//! * [`ProductSpace`] composes heterogeneous spaces **side by side**:
+//!   digit vectors concatenate and every axis keeps its sub-space's
+//!   [`AxisKind`] tier. The first sub-space materializes the design; each
+//!   later sub *refines* it ([`DesignSpace::refine`] — e.g. a
+//!   [`ProgramSpace`] replaying a mapping program on the materialized
+//!   workload).
+//! * [`NestedSpace`] composes **conditionally**: an outer (architecture /
+//!   packaging) candidate *instantiates* the inner (hw-param / mapping)
+//!   space through a factory, and the outer digits become the natural
+//!   [`DesignSpace::topology_key`] prefix — a joint three-tier search
+//!   builds one `EvalPlan` (hardware model + interned route table +
+//!   simulator arenas) per distinct outer candidate and rebinds only the
+//!   mapping inside it.
+//!
+//! Both combinators — and the mapping programs they embed — are
+//! JSON-definable ([`space_from_json`]), so `mldse explore --space
+//! FILE.json` can drive a composed three-tier search from a file. The
+//! paper's §7 narrative (architecture × hardware parameter × mapping,
+//! jointly) is packaged as [`three_tier`], reachable as the `three-tier`
+//! preset and experiment.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::mapping::{placement_program, MappingProgram};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::objective::{AreaConstrainedMakespan, CostUsd, Edp, Makespan, Objective};
+use super::program::ProgramSpace;
+use super::space::{
+    Axis, AxisKind, Binding, Candidate, Design, DesignSpace, PackagingSpace, ParamSpace,
+};
+
+/// A boxed design space that can cross worker threads (all composition
+/// combinators store and return these).
+pub type BoxSpace = Box<dyn DesignSpace + Send>;
+
+// ======================================================================
+// ProductSpace
+// ======================================================================
+
+/// Side-by-side composition: `subs[0]` materializes, `subs[1..]` refine.
+///
+/// Axes concatenate in sub order (names prefixed `"{sub}.{axis}"` so
+/// labels stay unambiguous); a candidate splits positionally back into
+/// per-sub candidates.
+type BaseResult = std::result::Result<Arc<Design>, String>;
+
+pub struct ProductSpace {
+    name: String,
+    subs: Vec<BoxSpace>,
+    axes: Vec<Axis>,
+    /// `offsets[i]..offsets[i+1]` is sub `i`'s digit range.
+    offsets: Vec<usize>,
+    /// `subs[0]` designs cached per sub-0 candidate, so keyed rebinds
+    /// ([`DesignSpace::bind`]) clone instead of re-materializing the
+    /// hardware. Only the bind path populates it — bind runs only for
+    /// topology-keyed candidates, whose distinct sub-0 digits are bounded
+    /// by the distinct keys of the search.
+    base_cache: Mutex<HashMap<Vec<u32>, Arc<OnceLock<BaseResult>>>>,
+}
+
+impl ProductSpace {
+    pub fn new(name: &str, subs: Vec<BoxSpace>) -> Result<ProductSpace> {
+        crate::ensure!(!subs.is_empty(), "product space '{name}' has no sub-spaces");
+        let mut axes = Vec::new();
+        let mut offsets = Vec::with_capacity(subs.len() + 1);
+        offsets.push(0);
+        for sub in &subs {
+            for a in sub.axes() {
+                axes.push(Axis {
+                    name: format!("{}.{}", sub.name(), a.name),
+                    kind: a.kind,
+                    values: a.values.clone(),
+                });
+            }
+            offsets.push(axes.len());
+        }
+        Ok(ProductSpace {
+            name: name.to_string(),
+            subs,
+            axes,
+            offsets,
+            base_cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The composed sub-spaces, in digit order.
+    pub fn subs(&self) -> &[BoxSpace] {
+        &self.subs
+    }
+
+    /// Split a product candidate into per-sub candidates.
+    pub fn split(&self, c: &Candidate) -> Vec<Candidate> {
+        (0..self.subs.len())
+            .map(|i| Candidate(c.0[self.offsets[i]..self.offsets[i + 1]].to_vec()))
+            .collect()
+    }
+
+    /// The cached `subs[0]` design for one sub-0 candidate (built exactly
+    /// once, shared across worker threads).
+    fn base_for(&self, part0: &Candidate) -> BaseResult {
+        let cell = {
+            let mut cache = self.base_cache.lock().expect("product cache poisoned");
+            Arc::clone(cache.entry(part0.0.clone()).or_default())
+        };
+        cell.get_or_init(|| {
+            self.subs[0]
+                .materialize(part0)
+                .map(Arc::new)
+                .map_err(|e| format!("{e:#}"))
+        })
+        .clone()
+    }
+}
+
+impl DesignSpace for ProductSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn initial(&self) -> Candidate {
+        let mut digits = Vec::with_capacity(self.axes.len());
+        for sub in &self.subs {
+            digits.extend(sub.initial().0);
+        }
+        Candidate(digits)
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let parts = self.split(c);
+        let mut design = self.subs[0]
+            .materialize(&parts[0])
+            .with_context(|| format!("product '{}' sub '{}'", self.name, self.subs[0].name()))?;
+        for (sub, part) in self.subs.iter().zip(&parts).skip(1) {
+            design = sub
+                .refine(design, part)
+                .with_context(|| format!("product '{}' sub '{}'", self.name, sub.name()))?;
+        }
+        Ok(design)
+    }
+
+    /// Composition rule: a sub with its own topology key contributes that
+    /// key; a key-less sub with no mapping-tier axes is hardware-defining
+    /// and contributes its full digits; a key-less sub *with* mapping
+    /// axes (e.g. a tiling program) forfeits sharing for the whole
+    /// product. Contributions are length-prefixed so concatenation stays
+    /// injective. All-key-less products stay key-less (ephemeral setups).
+    fn topology_key(&self, c: &Candidate) -> Option<Vec<u32>> {
+        let parts = self.split(c);
+        let mut contributions = Vec::with_capacity(self.subs.len());
+        let mut any_keyed = false;
+        for (sub, part) in self.subs.iter().zip(&parts) {
+            match sub.topology_key(part) {
+                Some(k) => {
+                    any_keyed = true;
+                    contributions.push(k);
+                }
+                None => {
+                    if sub.axes().iter().any(|a| a.kind == AxisKind::Mapping) {
+                        return None;
+                    }
+                    contributions.push(part.0.clone());
+                }
+            }
+        }
+        if !any_keyed {
+            return None;
+        }
+        let mut key = Vec::new();
+        for k in contributions {
+            key.push(k.len() as u32);
+            key.extend(k);
+        }
+        Some(key)
+    }
+
+    /// Keyed rebinding: clone the cached `subs[0]` design and replay only
+    /// the refinement subs, instead of re-materializing the hardware per
+    /// candidate.
+    fn bind(&self, c: &Candidate) -> Result<Binding> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let parts = self.split(c);
+        let base = self
+            .base_for(&parts[0])
+            .map_err(|msg| crate::format_err!("{msg}"))?;
+        let mut design = (*base).clone();
+        for (sub, part) in self.subs.iter().zip(&parts).skip(1) {
+            design = sub
+                .refine(design, part)
+                .with_context(|| format!("product '{}' sub '{}'", self.name, sub.name()))?;
+        }
+        Ok(Binding::of(design))
+    }
+}
+
+// ======================================================================
+// NestedSpace
+// ======================================================================
+
+/// Builds the inner space for one outer candidate (receives the outer
+/// candidate and its materialized design).
+pub type InnerFactory = Box<dyn Fn(&Candidate, &Design) -> Result<BoxSpace> + Send + Sync>;
+
+struct InnerEntry {
+    space: BoxSpace,
+    /// Side figures of the *outer* design, inherited by every nested
+    /// candidate whose inner design does not supply its own.
+    area_mm2: Option<f64>,
+    cost_usd: Option<f64>,
+}
+
+type InnerResult = std::result::Result<Arc<InnerEntry>, String>;
+
+/// Conditional composition: `outer` picks an architecture point, the
+/// factory instantiates the inner space over its materialized design,
+/// and the joint candidate is `[outer digits ++ inner digits]`.
+///
+/// The inner space's *shape* (axis count and cardinalities) must not vary
+/// across outer candidates — the factory output is checked against the
+/// template instantiated from `outer.initial()`. Inner instances are
+/// cached per outer candidate (built exactly once, shared across worker
+/// threads), and [`DesignSpace::topology_key`] prefixes the inner key
+/// with the outer digits, so a topology-keyed engine builds one
+/// evaluation setup per distinct outer point.
+pub struct NestedSpace {
+    name: String,
+    outer: BoxSpace,
+    factory: InnerFactory,
+    axes: Vec<Axis>,
+    n_outer: usize,
+    inner_initial: Vec<u32>,
+    cache: Mutex<HashMap<Vec<u32>, Arc<OnceLock<InnerResult>>>>,
+}
+
+impl NestedSpace {
+    pub fn new(name: &str, outer: BoxSpace, factory: InnerFactory) -> Result<NestedSpace> {
+        let outer_initial = outer.initial();
+        let design = outer.materialize(&outer_initial).with_context(|| {
+            format!("nested '{name}': materializing the outer initial candidate for the template")
+        })?;
+        let template = factory(&outer_initial, &design)
+            .with_context(|| format!("nested '{name}': instantiating the inner template"))?;
+        let mut axes = outer.axes().to_vec();
+        axes.extend(template.axes().to_vec());
+        let n_outer = outer.axes().len();
+        let inner_initial = template.initial().0;
+        let entry = Arc::new(InnerEntry {
+            space: template,
+            area_mm2: design.area_mm2,
+            cost_usd: design.cost_usd,
+        });
+        let seeded = Arc::new(OnceLock::new());
+        let set = seeded.set(Ok(entry));
+        debug_assert!(set.is_ok(), "freshly created cell");
+        let cache = Mutex::new(HashMap::from([(outer_initial.0, seeded)]));
+        Ok(NestedSpace {
+            name: name.to_string(),
+            outer,
+            factory,
+            axes,
+            n_outer,
+            inner_initial,
+            cache,
+        })
+    }
+
+    /// Nest a mapping program: the inner space is a [`ProgramSpace`]
+    /// replaying `program` on whatever workload the outer candidate
+    /// materializes (`ComputePoints` hole domains resolve against that
+    /// hardware).
+    pub fn with_program(
+        name: &str,
+        outer: BoxSpace,
+        program: MappingProgram,
+    ) -> Result<NestedSpace> {
+        let inner_name = format!("{name}.program");
+        let factory: InnerFactory = Box::new(move |_outer_c, design: &Design| {
+            let w = &design.workload;
+            ProgramSpace::over(
+                &inner_name,
+                w.hw.clone(),
+                w.graph.clone(),
+                w.mapping.clone(),
+                program.clone(),
+            )
+            .map(|s| Box::new(s) as BoxSpace)
+        });
+        NestedSpace::new(name, outer, factory)
+    }
+
+    /// The outer space.
+    pub fn outer(&self) -> &dyn DesignSpace {
+        self.outer.as_ref()
+    }
+
+    /// Number of leading digits that belong to the outer space.
+    pub fn outer_digits(&self) -> usize {
+        self.n_outer
+    }
+
+    fn entry_for(&self, outer_digits: &[u32]) -> InnerResult {
+        let cell = {
+            let mut cache = self.cache.lock().expect("nested cache poisoned");
+            Arc::clone(cache.entry(outer_digits.to_vec()).or_default())
+        };
+        cell.get_or_init(|| {
+            let outer_c = Candidate(outer_digits.to_vec());
+            let design = self
+                .outer
+                .materialize(&outer_c)
+                .map_err(|e| format!("{e:#}"))?;
+            let space = (self.factory)(&outer_c, &design).map_err(|e| format!("{e:#}"))?;
+            let template = &self.axes[self.n_outer..];
+            let shape_ok = space.axes().len() == template.len()
+                && space
+                    .axes()
+                    .iter()
+                    .zip(template)
+                    .all(|(a, t)| a.len() == t.len());
+            if !shape_ok {
+                return Err(format!(
+                    "nested '{}': inner space shape for outer candidate {:?} does not match \
+                     the template ({} axes of cardinalities {:?} expected)",
+                    self.name,
+                    outer_digits,
+                    template.len(),
+                    template.iter().map(Axis::len).collect::<Vec<_>>()
+                ));
+            }
+            Ok(Arc::new(InnerEntry {
+                space,
+                area_mm2: design.area_mm2,
+                cost_usd: design.cost_usd,
+            }))
+        })
+        .clone()
+    }
+
+    fn split<'c>(&self, c: &'c Candidate) -> (&'c [u32], &'c [u32]) {
+        c.0.split_at(self.n_outer)
+    }
+}
+
+impl DesignSpace for NestedSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn initial(&self) -> Candidate {
+        let mut digits = self.outer.initial().0;
+        digits.extend(&self.inner_initial);
+        Candidate(digits)
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let (outer, inner) = self.split(c);
+        let entry = self
+            .entry_for(outer)
+            .map_err(|msg| crate::format_err!("{msg}"))?;
+        let mut design = entry.space.materialize(&Candidate(inner.to_vec()))?;
+        design.area_mm2 = design.area_mm2.or(entry.area_mm2);
+        design.cost_usd = design.cost_usd.or(entry.cost_usd);
+        Ok(design)
+    }
+
+    /// `outer digits ++ inner key`: one shared evaluation setup per
+    /// distinct outer candidate when the inner space is itself keyed
+    /// (e.g. an assignment-only program). A key-less inner (tiling under
+    /// a hole) makes the whole nested candidate key-less.
+    fn topology_key(&self, c: &Candidate) -> Option<Vec<u32>> {
+        if !self.in_bounds(c) {
+            return None;
+        }
+        let (outer, inner) = self.split(c);
+        let entry = self.entry_for(outer).ok()?;
+        let inner_key = entry.space.topology_key(&Candidate(inner.to_vec()))?;
+        let mut key = outer.to_vec();
+        key.extend(inner_key);
+        Some(key)
+    }
+
+    /// Inner-space rebinding against the cached instantiation: no outer
+    /// re-materialization, no hardware clone.
+    fn bind(&self, c: &Candidate) -> Result<Binding> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let (outer, inner) = self.split(c);
+        let entry = self
+            .entry_for(outer)
+            .map_err(|msg| crate::format_err!("{msg}"))?;
+        let mut binding = entry.space.bind(&Candidate(inner.to_vec()))?;
+        binding.area_mm2 = binding.area_mm2.or(entry.area_mm2);
+        binding.cost_usd = binding.cost_usd.or(entry.cost_usd);
+        Ok(binding)
+    }
+}
+
+// ======================================================================
+// The three-tier composed space (paper §7, end to end)
+// ======================================================================
+
+/// The paper's headline joint search as one composed space:
+///
+/// * **Architecture tier** — MPMC packaging technology (MCM vs 2.5D
+///   interposer) and chiplets per package;
+/// * **Hardware-parameter tier** — chiplet local-memory bandwidth under
+///   the fixed paper templates;
+/// * **Mapping tier** — a placement [`MappingProgram`] whose holes
+///   re-place the heaviest decode tasks, instantiated per outer
+///   candidate over the materialized MPMC workload.
+///
+/// Every candidate is one joint digit vector; the outer digits key the
+/// shared evaluation setup, so the engine builds hardware + route table
+/// once per distinct (packaging, cpp, lmem_bw) point.
+pub fn three_tier(name: &str, quick: bool) -> Result<NestedSpace> {
+    let lmem_bws: &[f64] = if quick {
+        &[76.0, 304.0]
+    } else {
+        &[76.0, 152.0, 304.0]
+    };
+    let outer = PackagingSpace::paper_preset(name, quick).with_lmem_bw_axis(lmem_bws);
+    let holes = if quick { 2 } else { 3 };
+    NestedSpace::with_program(name, Box::new(outer), placement_program(holes))
+}
+
+// ======================================================================
+// JSON space files
+// ======================================================================
+
+/// Parse a space file. Dispatches on `"type"`:
+///
+/// | `"type"` | space |
+/// |---|---|
+/// | `"param"` (or absent) | [`ParamSpace`] (DMC/GSM hw-param axes) |
+/// | `"packaging"` | [`PackagingSpace`] (MPMC packaging × cpp × lmem_bw) |
+/// | `"product"` | [`ProductSpace`] over `"subs"` (later subs refine) |
+/// | `"nested"` | [`NestedSpace`] over `"outer"` + `"program"` |
+/// | `"program"` | only valid *inside* `product`/`nested` |
+pub fn space_from_json(text: &str) -> Result<BoxSpace> {
+    let doc = Json::parse(text).context("parsing space file")?;
+    space_from_json_value(&doc)
+}
+
+pub fn space_from_json_value(doc: &Json) -> Result<BoxSpace> {
+    let ty = doc.get("type").and_then(|v| v.as_str()).unwrap_or("param");
+    match ty {
+        "param" => Ok(Box::new(ParamSpace::from_json_value(doc)?)),
+        "packaging" => Ok(Box::new(PackagingSpace::from_json_value(doc)?)),
+        "product" => {
+            let name = doc
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("product")
+                .to_string();
+            let subs_json = doc
+                .get("subs")
+                .and_then(|v| v.as_arr())
+                .context("a product space needs a \"subs\" array")?;
+            let mut subs = Vec::with_capacity(subs_json.len());
+            for (i, sub) in subs_json.iter().enumerate() {
+                let space = if sub.get("type").and_then(|v| v.as_str()) == Some("program") {
+                    crate::ensure!(
+                        i > 0,
+                        "product '{name}': the first sub must materialize a workload \
+                         (a program space can only refine)"
+                    );
+                    Box::new(program_space_from_json(sub)?) as BoxSpace
+                } else {
+                    space_from_json_value(sub)
+                        .with_context(|| format!("product '{name}' sub {i}"))?
+                };
+                subs.push(space);
+            }
+            Ok(Box::new(ProductSpace::new(&name, subs)?))
+        }
+        "nested" => {
+            let name = doc
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("nested")
+                .to_string();
+            let outer_json = doc
+                .get("outer")
+                .context("a nested space needs an \"outer\" space object")?;
+            let outer = space_from_json_value(outer_json)
+                .with_context(|| format!("nested '{name}' outer"))?;
+            let program_json = doc
+                .get("program")
+                .context("a nested space needs a \"program\" instruction array")?;
+            let program = MappingProgram::from_json_value(program_json)
+                .with_context(|| format!("nested '{name}' program"))?;
+            Ok(Box::new(NestedSpace::with_program(&name, outer, program)?))
+        }
+        "program" => crate::bail!(
+            "a top-level program space has no base workload to replay against; \
+             use it as the inner of a \"nested\" space or a non-leading sub of a \
+             \"product\""
+        ),
+        other => crate::bail!(
+            "unknown space type '{other}' (valid: param, packaging, product, nested)"
+        ),
+    }
+}
+
+fn program_space_from_json(doc: &Json) -> Result<ProgramSpace> {
+    let name = doc
+        .get("name")
+        .and_then(|v| v.as_str())
+        .unwrap_or("program")
+        .to_string();
+    let program_json = doc
+        .get("program")
+        .context("a program space needs a \"program\" instruction array")?;
+    let program = MappingProgram::from_json_value(program_json)
+        .with_context(|| format!("program '{name}'"))?;
+    ProgramSpace::floating(&name, program)
+}
+
+/// Parse the optional `"objectives"` list of a space file
+/// (`["makespan", "edp", "cost_usd", "makespan@area<=900"]`); `None`
+/// when the file does not specify objectives.
+pub fn objectives_from_json(doc: &Json) -> Result<Option<Vec<Box<dyn Objective>>>> {
+    let Some(list) = doc.get("objectives") else {
+        return Ok(None);
+    };
+    let arr = list
+        .as_arr()
+        .context("\"objectives\" must be an array of names")?;
+    crate::ensure!(!arr.is_empty(), "\"objectives\" must not be empty");
+    let mut out: Vec<Box<dyn Objective>> = Vec::with_capacity(arr.len());
+    for v in arr {
+        let name = v.as_str().context("objective names must be strings")?;
+        out.push(match name {
+            "makespan" => Box::new(Makespan),
+            "edp" => Box::new(Edp),
+            "cost" | "cost_usd" => Box::new(CostUsd),
+            other => match other.strip_prefix("makespan@area<=") {
+                Some(budget) => {
+                    let b: f64 = budget.parse().map_err(|_| {
+                        crate::format_err!("objective '{other}': invalid area budget '{budget}'")
+                    })?;
+                    Box::new(AreaConstrainedMakespan::new(b))
+                }
+                None => crate::bail!(
+                    "unknown objective '{other}' (valid: makespan, edp, cost_usd, \
+                     makespan@area<=N)"
+                ),
+            },
+        });
+    }
+    Ok(Some(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::hwir::{
+        ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint,
+    };
+    use crate::mapping::{Mapping, Param, Prim, TaskSel};
+    use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+    use crate::workloads::Workload;
+
+    fn tiny_hw(cores: usize) -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![cores]);
+        for i in 0..cores {
+            m.set(
+                Coord::new(vec![i as u32]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((8, 8), 32).with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+                )),
+            );
+        }
+        Hardware::build(m)
+    }
+
+    /// A 1-axis Arch-tier outer space: the digit picks the number of
+    /// tasks; all tasks start on core 0 of a fixed 4-core chip.
+    struct TinyOuter {
+        axes: Vec<Axis>,
+    }
+
+    impl TinyOuter {
+        fn new() -> TinyOuter {
+            TinyOuter {
+                axes: vec![Axis::u64s("tasks", AxisKind::Arch, &[2, 3])],
+            }
+        }
+    }
+
+    impl DesignSpace for TinyOuter {
+        fn name(&self) -> &str {
+            "tiny-outer"
+        }
+
+        fn axes(&self) -> &[Axis] {
+            &self.axes
+        }
+
+        fn materialize(&self, c: &Candidate) -> Result<Design> {
+            crate::ensure!(self.in_bounds(c), "out of bounds");
+            let n = self.axes[0].values.num(c.0[0] as usize) as usize;
+            let hw = tiny_hw(4);
+            let core0 = hw.points_of_kind("compute")[0];
+            let mut graph = TaskGraph::new();
+            let mut mapping = Mapping::new();
+            for i in 0..n {
+                let mut cost = ComputeCost::zero(OpClass::Elementwise);
+                cost.vec_flops = 10_000.0 * (1 + i) as f64;
+                let t = graph.add(format!("t{i}"), TaskKind::Compute(cost));
+                mapping.map(t, core0);
+            }
+            let mut d = Design::new(Workload {
+                hw,
+                graph,
+                mapping,
+                name: "tiny".into(),
+                notes: Vec::new(),
+            });
+            d.area_mm2 = Some(100.0 + n as f64);
+            Ok(d)
+        }
+    }
+
+    #[test]
+    fn product_concatenates_axes_and_splits_candidates() {
+        let param = ParamSpace::dmc("dmc", true)
+            .axis("cfg", &[1.0, 2.0])
+            .unwrap();
+        let program = ProgramSpace::floating(
+            "prog",
+            MappingProgram::new(vec![Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::hole("p", &[0, 5, 9]),
+            }]),
+        )
+        .unwrap();
+        let product =
+            ProductSpace::new("joint", vec![Box::new(param), Box::new(program)]).unwrap();
+        assert_eq!(product.axes().len(), 2);
+        assert_eq!(product.axes()[0].name, "dmc.cfg");
+        assert_eq!(product.axes()[0].kind, AxisKind::Arch);
+        assert_eq!(product.axes()[1].name, "prog.p");
+        assert_eq!(product.axes()[1].kind, AxisKind::Mapping);
+        assert_eq!(product.size(), 6);
+        let parts = product.split(&Candidate(vec![1, 2]));
+        assert_eq!(parts[0].0, vec![1]);
+        assert_eq!(parts[1].0, vec![2]);
+        // materialize = param workload refined by the program: choosing a
+        // different hole value moves the heaviest task, nothing else
+        let d0 = product.materialize(&Candidate(vec![0, 0])).unwrap();
+        let d1 = product.materialize(&Candidate(vec![0, 1])).unwrap();
+        assert_eq!(d0.workload.graph.len(), d1.workload.graph.len());
+        assert_ne!(d0.workload.mapping, d1.workload.mapping);
+        // side figures from the materializing sub survive refinement
+        assert!(d1.area_mm2.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn product_topology_key_composes_per_sub() {
+        let param = ParamSpace::dmc("dmc", true)
+            .axis("cfg", &[1.0, 2.0])
+            .unwrap();
+        let program = ProgramSpace::floating(
+            "prog",
+            MappingProgram::new(vec![Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::hole("p", &[0, 5]),
+            }]),
+        )
+        .unwrap();
+        let product =
+            ProductSpace::new("joint", vec![Box::new(param), Box::new(program)]).unwrap();
+        // param digits key the hardware; mapping digits are shared out
+        let k00 = product.topology_key(&Candidate(vec![0, 0])).unwrap();
+        let k01 = product.topology_key(&Candidate(vec![0, 1])).unwrap();
+        let k10 = product.topology_key(&Candidate(vec![1, 0])).unwrap();
+        assert_eq!(k00, k01, "mapping digit must not change the key");
+        assert_ne!(k00, k10, "hw digit must change the key");
+
+        // a tiling program under a hole forfeits sharing
+        let tiling = ProgramSpace::floating(
+            "tile",
+            MappingProgram::new(vec![Prim::GreedyRounds {
+                rounds: Param::hole("r", &[0, 1]),
+            }]),
+        )
+        .unwrap();
+        let param = ParamSpace::dmc("dmc", true)
+            .axis("cfg", &[1.0, 2.0])
+            .unwrap();
+        let product =
+            ProductSpace::new("joint2", vec![Box::new(param), Box::new(tiling)]).unwrap();
+        assert_eq!(product.topology_key(&Candidate(vec![0, 0])), None);
+
+        // a product of key-less hardware-only spaces stays key-less
+        let a = ParamSpace::dmc("a", true).axis("cfg", &[1.0, 2.0]).unwrap();
+        let product = ProductSpace::new("solo", vec![Box::new(a) as BoxSpace]).unwrap();
+        assert_eq!(product.topology_key(&Candidate(vec![0])), None);
+    }
+
+    #[test]
+    fn product_bind_agrees_with_materialize() {
+        let param = ParamSpace::dmc("dmc", true)
+            .axis("cfg", &[1.0, 2.0])
+            .unwrap();
+        let program = ProgramSpace::floating(
+            "prog",
+            MappingProgram::new(vec![Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::hole("p", &[0, 5, 9]),
+            }]),
+        )
+        .unwrap();
+        let product =
+            ProductSpace::new("joint", vec![Box::new(param), Box::new(program)]).unwrap();
+        for digits in [vec![0, 0], vec![0, 2], vec![1, 1]] {
+            let c = Candidate(digits);
+            let d = product.materialize(&c).unwrap();
+            let b = product.bind(&c).unwrap();
+            assert_eq!(d.workload.mapping, b.mapping, "candidate {c:?}");
+            assert_eq!(d.area_mm2, b.area_mm2);
+        }
+    }
+
+    #[test]
+    fn packaging_json_rejects_zero_cpp() {
+        let err = space_from_json(r#"{"type": "packaging", "quick": true, "cpp": [0, 2]}"#)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains(">= 1"), "{err:#}");
+    }
+
+    #[test]
+    fn nested_instantiates_inner_once_per_outer_candidate() {
+        static CALLS: AtomicUsize = AtomicUsize::new(0);
+        let factory: InnerFactory = Box::new(|_c, design: &Design| {
+            CALLS.fetch_add(1, Ordering::SeqCst);
+            let w = &design.workload;
+            ProgramSpace::over(
+                "inner",
+                w.hw.clone(),
+                w.graph.clone(),
+                w.mapping.clone(),
+                placement_program(1),
+            )
+            .map(|s| Box::new(s) as BoxSpace)
+        });
+        let nested = NestedSpace::new("nest", Box::new(TinyOuter::new()), factory).unwrap();
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1, "template instantiation");
+        // axes: outer `tasks` + inner hole over 4 compute points
+        assert_eq!(nested.axes().len(), 2);
+        assert_eq!(nested.axes()[0].kind, AxisKind::Arch);
+        assert_eq!(nested.axes()[1].kind, AxisKind::Mapping);
+        assert_eq!(nested.size(), 2 * 4);
+        assert_eq!(nested.outer_digits(), 1);
+        // the template instantiation is reused for the initial outer point
+        for inner in 0..4 {
+            nested.materialize(&Candidate(vec![0, inner])).unwrap();
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1);
+        // a new outer candidate instantiates exactly once more
+        for inner in 0..4 {
+            let d = nested.materialize(&Candidate(vec![1, inner])).unwrap();
+            // outer side figures propagate to nested candidates
+            assert_eq!(d.area_mm2, Some(103.0));
+        }
+        assert_eq!(CALLS.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn nested_topology_key_prefixes_outer_digits() {
+        let nested = NestedSpace::with_program(
+            "nest",
+            Box::new(TinyOuter::new()),
+            placement_program(1),
+        )
+        .unwrap();
+        let k_a = nested.topology_key(&Candidate(vec![0, 0])).unwrap();
+        let k_b = nested.topology_key(&Candidate(vec![0, 3])).unwrap();
+        let k_c = nested.topology_key(&Candidate(vec![1, 0])).unwrap();
+        assert_eq!(k_a, vec![0]);
+        assert_eq!(k_a, k_b, "inner digits must not change the key");
+        assert_ne!(k_a, k_c, "outer digits must change the key");
+        // bind rebinds against the cached inner instantiation
+        let b = nested.bind(&Candidate(vec![0, 2])).unwrap();
+        let d = nested.materialize(&Candidate(vec![0, 2])).unwrap();
+        assert_eq!(b.mapping, d.workload.mapping);
+        assert_eq!(b.area_mm2, d.area_mm2);
+    }
+
+    #[test]
+    fn nested_initial_concatenates() {
+        let nested = NestedSpace::with_program(
+            "nest",
+            Box::new(TinyOuter::new()),
+            placement_program(1),
+        )
+        .unwrap();
+        assert_eq!(nested.initial().0, vec![0, 0]);
+        assert!(nested.in_bounds(&nested.initial()));
+    }
+
+    #[test]
+    fn three_tier_quick_has_all_three_tiers() {
+        let space = three_tier("tt", true).unwrap();
+        let kinds: Vec<AxisKind> = space.axes().iter().map(|a| a.kind).collect();
+        assert!(kinds.contains(&AxisKind::Arch), "{kinds:?}");
+        assert!(kinds.contains(&AxisKind::HwParam), "{kinds:?}");
+        assert!(kinds.contains(&AxisKind::Mapping), "{kinds:?}");
+        // outer = packaging, cpp, lmem_bw; inner = 2 placement holes
+        assert_eq!(space.outer_digits(), 3);
+        assert_eq!(space.axes().len(), 5);
+        // joint candidates share setups per outer point
+        let init = space.initial();
+        assert_eq!(space.topology_key(&init).unwrap(), vec![0, 0, 0]);
+        // manufacturing cost flows from the outer packaging design
+        let d = space.materialize(&init).unwrap();
+        assert!(d.cost_usd.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_nested_space_parses_and_materializes() {
+        let text = r#"{
+            "type": "nested",
+            "name": "tt-json",
+            "outer": {"type": "packaging", "quick": true, "lmem_bw": [76, 304]},
+            "program": [
+                {"op": "map_node", "task": "heaviest",
+                 "point": {"hole": "p0", "points": "compute"}},
+                {"op": "map_node", "task": "heaviest",
+                 "point": {"hole": "p1", "points": "compute"}}
+            ]
+        }"#;
+        let space = space_from_json(text).unwrap();
+        assert_eq!(space.name(), "tt-json");
+        // identical shape to the built-in three-tier quick space
+        let preset = three_tier("tt", true).unwrap();
+        assert_eq!(space.axes().len(), preset.axes().len());
+        for (a, b) in space.axes().iter().zip(preset.axes()) {
+            assert_eq!(a.len(), b.len(), "{} vs {}", a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+        }
+        let d = space.materialize(&space.initial()).unwrap();
+        assert!(d.workload.graph.len() > 0);
+    }
+
+    #[test]
+    fn json_product_space_parses() {
+        let text = r#"{
+            "type": "product",
+            "name": "joint",
+            "subs": [
+                {"type": "param", "arch": "dmc", "quick": true,
+                 "axes": {"cfg": [1, 2]}},
+                {"type": "program", "name": "remap", "program": [
+                    {"op": "map_node", "task": "heaviest",
+                     "point": {"hole": "p", "choices": [0, 3]}}
+                ]}
+            ]
+        }"#;
+        let space = space_from_json(text).unwrap();
+        assert_eq!(space.size(), 4);
+        let d = space.materialize(&space.nth(3)).unwrap();
+        assert!(d.workload.graph.len() > 0);
+    }
+
+    #[test]
+    fn json_space_errors_are_descriptive() {
+        // unknown type
+        let err = space_from_json(r#"{"type": "warp"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("warp"), "{err:#}");
+        // top-level program rejected with guidance
+        let err = space_from_json(r#"{"type": "program", "program": []}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("nested"), "{err:#}");
+        // program as the *first* product sub rejected
+        let err = space_from_json(
+            r#"{"type": "product", "subs": [{"type": "program", "program": []}]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("first sub"), "{err:#}");
+        // nested without a program
+        let err = space_from_json(
+            r#"{"type": "nested", "outer": {"type": "packaging", "quick": true}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("program"), "{err:#}");
+        // no-type default remains the classic param schema
+        assert!(space_from_json(r#"{"arch": "dmc", "axes": {"cfg": [1]}}"#).is_ok());
+    }
+
+    #[test]
+    fn objectives_parse_from_json() {
+        let doc = Json::parse(
+            r#"{"objectives": ["makespan", "edp", "cost_usd", "makespan@area<=900"]}"#,
+        )
+        .unwrap();
+        let objs = objectives_from_json(&doc).unwrap().unwrap();
+        assert_eq!(objs.len(), 4);
+        assert_eq!(objs[0].name(), "makespan");
+        assert_eq!(objs[3].name(), "makespan@area<=900mm2");
+        // absent key -> None (caller falls back to defaults)
+        let doc = Json::parse("{}").unwrap();
+        assert!(objectives_from_json(&doc).unwrap().is_none());
+        // unknown objective
+        let doc = Json::parse(r#"{"objectives": ["speed"]}"#).unwrap();
+        assert!(objectives_from_json(&doc).is_err());
+    }
+}

@@ -3,10 +3,20 @@
 //! simulated annealing. All are deterministic for a fixed seed and
 //! independent of the worker count — candidate batches are evaluated in
 //! input order and every decision depends only on returned scores.
+//!
+//! For composed spaces ([`NestedSpace`](super::compose::NestedSpace),
+//! [`ProductSpace`](super::compose::ProductSpace)) the annealer supports
+//! **tier-aware perturbation** ([`AnnealExplorer::tiered`], CLI name
+//! `anneal-tiered`): moves within the mapping tier perturb one digit as
+//! usual, but a move on an architecture/hw-param axis *resamples every
+//! mapping-tier digit* — the nested mapping space is conditioned on the
+//! outer choice, so carrying a stale placement across an architecture
+//! move would anneal against the wrong landscape.
 
 use crate::util::error::Result;
 use crate::util::rng::Pcg;
 
+use super::space::AxisKind;
 use super::Engine;
 
 /// A search strategy: propose candidates through the engine until the
@@ -162,6 +172,10 @@ pub struct AnnealExplorer {
     pub seed: u64,
     /// Initial temperature as a fraction of the current score.
     pub init_temp: f64,
+    /// Tier-aware perturbation: a move on a non-mapping axis also
+    /// resamples every mapping-tier digit (see the module docs). Off by
+    /// default — single-tier spaces are unaffected either way.
+    pub tiered: bool,
 }
 
 impl Default for AnnealExplorer {
@@ -169,13 +183,18 @@ impl Default for AnnealExplorer {
         AnnealExplorer {
             seed: 0xD5E,
             init_temp: 0.1,
+            tiered: false,
         }
     }
 }
 
 impl Explorer for AnnealExplorer {
     fn name(&self) -> &str {
-        "anneal"
+        if self.tiered {
+            "anneal-tiered"
+        } else {
+            "anneal"
+        }
     }
 
     fn run(&self, engine: &mut Engine) -> Result<()> {
@@ -191,6 +210,7 @@ impl Explorer for AnnealExplorer {
             return Ok(());
         };
         let cards: Vec<usize> = space.axes().iter().map(|a| a.len()).collect();
+        let kinds: Vec<AxisKind> = space.axes().iter().map(|a| a.kind).collect();
         if cards.is_empty() {
             return Ok(());
         }
@@ -215,6 +235,16 @@ impl Explorer for AnnealExplorer {
             }
             let mut cand = current.clone();
             cand.0[axis] = v;
+            if self.tiered && kinds[axis] != AxisKind::Mapping {
+                // outer (arch/hw-param) move: the conditioned mapping
+                // tier restarts from a fresh sample instead of dragging
+                // the previous topology's placement along
+                for (k, card) in cards.iter().enumerate() {
+                    if kinds[k] == AxisKind::Mapping && *card > 1 {
+                        cand.0[k] = rng.index(*card) as u32;
+                    }
+                }
+            }
             let Some(scores) = engine.eval_one(&cand) else {
                 break;
             };
@@ -242,6 +272,13 @@ pub fn explorer_by_name(name: &str, seed: u64) -> Result<Box<dyn Explorer>> {
             seed,
             ..Default::default()
         })),
-        other => crate::bail!("unknown explorer '{other}' (valid: grid, random, hill, anneal)"),
+        "anneal-tiered" => Ok(Box::new(AnnealExplorer {
+            seed,
+            tiered: true,
+            ..Default::default()
+        })),
+        other => crate::bail!(
+            "unknown explorer '{other}' (valid: grid, random, hill, anneal, anneal-tiered)"
+        ),
     }
 }

@@ -4,11 +4,20 @@
 //! * [`space`] — [`DesignSpace`]: typed [`Axis`] descriptors over
 //!   architecture templates, hardware parameters and mapping knobs, with a
 //!   uniform digit-vector [`Candidate`] encoding.
+//! * [`compose`] — the design-space **algebra**: [`ProductSpace`]
+//!   (side-by-side composition, concatenated digits) and [`NestedSpace`]
+//!   (an outer candidate instantiates the inner space; outer digits
+//!   prefix the topology key), plus the JSON space-file dispatcher
+//!   ([`space_from_json`]) and the [`three_tier`] composed space.
+//! * [`program`] — [`ProgramSpace`]: the holes of a
+//!   [`MappingProgram`](crate::mapping::MappingProgram) exposed as
+//!   mapping-tier axes, replayed through the §5.2 primitives at bind
+//!   time.
 //! * [`objective`] — [`Objective`]: minimized figures of merit (makespan,
 //!   EDP, area-constrained makespan, manufacturing cost) evaluated from
 //!   one simulation per candidate.
 //! * [`explorers`] — [`Explorer`]: exhaustive grid, seeded random,
-//!   hill-climbing and simulated annealing.
+//!   hill-climbing and simulated annealing (optionally tier-aware).
 //! * [`report`] — [`ExplorationReport`]: best candidate, Pareto front,
 //!   full evaluation log and throughput counters, as tables or JSON.
 //!
@@ -31,15 +40,22 @@
 //! off; evaluator panics are caught per candidate and surface as failures
 //! instead of aborting the sweep.
 
+pub mod compose;
 pub mod explorers;
 pub mod objective;
+pub mod program;
 pub mod report;
 pub mod space;
 
+pub use compose::{
+    objectives_from_json, space_from_json, space_from_json_value, three_tier, BoxSpace,
+    InnerFactory, NestedSpace, ProductSpace,
+};
 pub use explorers::{
     explorer_by_name, AnnealExplorer, Explorer, GridExplorer, HillClimbExplorer, RandomExplorer,
 };
 pub use objective::{AreaConstrainedMakespan, CostUsd, Edp, Makespan, Objective};
+pub use program::ProgramSpace;
 pub use report::{Evaluation, ExplorationReport};
 pub use space::{
     placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Binding, Candidate, Design,
@@ -760,7 +776,17 @@ mod tests {
     #[test]
     fn anneal_improves_over_initial() {
         let space = ParaboloidSpace::new(8, 8, (6, 3));
-        let r = run(&AnnealExplorer { seed: 11, init_temp: 0.1 }, &space, 120, 1, true);
+        let r = run(
+            &AnnealExplorer {
+                seed: 11,
+                init_temp: 0.1,
+                tiered: false,
+            },
+            &space,
+            120,
+            1,
+            true,
+        );
         let initial = r.evals[0].objectives[0];
         let best = r.best().unwrap().objectives[0];
         assert!(best < initial, "{initial} -> {best}");

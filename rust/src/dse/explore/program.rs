@@ -1,0 +1,466 @@
+//! [`ProgramSpace`]: a [`MappingProgram`]'s typed holes exposed as
+//! mapping-tier axes.
+//!
+//! A candidate is one binding digit per distinct hole; materialization
+//! *replays* the program through a fresh [`MappingState`] clone of the
+//! base workload, so the §5.2 Table-1 primitives themselves are the
+//! mapping-exploration substrate. This is the canonical mapping-search
+//! path: the greedy tiling search that used to live in `dse::search`
+//! ([`ProgramSpace::greedy_tiling`]) and hole-parameterized placement
+//! programs ([`crate::mapping::placement_program`]) are both one-line
+//! program constructions now.
+//!
+//! A `ProgramSpace` comes in two flavors:
+//!
+//! * **Over a base workload** ([`ProgramSpace::over`]) — owns the
+//!   hardware, graph and mapping the program replays against;
+//!   `materialize`/`bind` work, and `ComputePoints` hole domains resolve
+//!   to the base hardware's compute points. This is what
+//!   [`NestedSpace`](super::compose::NestedSpace) instantiates per outer
+//!   candidate.
+//! * **Floating** ([`ProgramSpace::floating`]) — no base; every hole
+//!   needs explicit choices, and the space only works as a *refinement*
+//!   sub of a [`ProductSpace`](super::compose::ProductSpace) (its
+//!   [`DesignSpace::refine`] replays the program on the design the
+//!   preceding sub materialized).
+
+use crate::eval::Registry;
+use crate::hwir::Hardware;
+use crate::mapping::program::{Hole, ParamDomain};
+use crate::mapping::{Mapping, MappingProgram, MappingState};
+use crate::taskgraph::TaskGraph;
+use crate::util::error::{Context, Result};
+use crate::workloads::Workload;
+
+use super::space::{Axis, AxisKind, Binding, Candidate, Design, DesignSpace};
+
+struct Base {
+    hw: Hardware,
+    graph: TaskGraph,
+    mapping: Mapping,
+}
+
+/// A design space whose axes are the holes of a mapping program (see the
+/// module docs).
+pub struct ProgramSpace {
+    name: String,
+    base: Option<Base>,
+    program: MappingProgram,
+    axes: Vec<Axis>,
+    evals: Registry,
+}
+
+impl ProgramSpace {
+    fn assemble(
+        name: &str,
+        base: Option<Base>,
+        program: MappingProgram,
+    ) -> Result<ProgramSpace> {
+        let n_compute = base
+            .as_ref()
+            .map(|b| b.hw.points_of_kind("compute").len());
+        let holes: Vec<Hole> = program
+            .resolved_holes(n_compute)
+            .with_context(|| format!("program space '{name}'"))?;
+        let axes = holes
+            .iter()
+            .map(|h| match &h.domain {
+                ParamDomain::ComputePoints => {
+                    Axis::count(h.name.clone(), AxisKind::Mapping, h.card)
+                }
+                ParamDomain::U32s(ch) => Axis::u64s(
+                    h.name.clone(),
+                    AxisKind::Mapping,
+                    &ch.iter().map(|c| *c as u64).collect::<Vec<_>>(),
+                ),
+            })
+            .collect();
+        Ok(ProgramSpace {
+            name: name.to_string(),
+            base,
+            program,
+            axes,
+            evals: Registry::standard(),
+        })
+    }
+
+    /// A program space over a concrete base workload: candidates replay
+    /// the program on a clone of (`graph`, `mapping`) against `hw`.
+    ///
+    /// Replay-time task *selection* (`heaviest`, the greedy-round spread)
+    /// ranks tasks with the analytic standard registry by default; use
+    /// [`ProgramSpace::with_registry`] when selection should follow a
+    /// custom cost model. (Candidate *scoring* always uses the registry
+    /// passed to `explore` — this only affects which tasks the program
+    /// picks.)
+    pub fn over(
+        name: &str,
+        hw: Hardware,
+        graph: TaskGraph,
+        mapping: Mapping,
+        program: MappingProgram,
+    ) -> Result<ProgramSpace> {
+        ProgramSpace::assemble(name, Some(Base { hw, graph, mapping }), program)
+    }
+
+    /// Replace the evaluator registry used for replay-time task
+    /// selection (see [`ProgramSpace::over`]).
+    pub fn with_registry(mut self, evals: Registry) -> ProgramSpace {
+        self.evals = evals;
+        self
+    }
+
+    /// A base-less program space: every hole must carry explicit choices,
+    /// and candidates apply only through [`DesignSpace::refine`].
+    pub fn floating(name: &str, program: MappingProgram) -> Result<ProgramSpace> {
+        ProgramSpace::assemble(name, None, program)
+    }
+
+    /// The canonical greedy tiling search (formerly `dse::search::
+    /// TilingSpace`): one `rounds` hole whose value `k` applies `k`
+    /// greedy split-and-spread rounds to the base state.
+    pub fn greedy_tiling(
+        name: &str,
+        hw: &Hardware,
+        base: &MappingState,
+        max_rounds: usize,
+    ) -> Result<ProgramSpace> {
+        let rounds: Vec<u32> = (0..=max_rounds as u32).collect();
+        let program = MappingProgram::new(vec![crate::mapping::Prim::GreedyRounds {
+            rounds: crate::mapping::Param::hole("rounds", &rounds),
+        }]);
+        ProgramSpace::over(
+            name,
+            hw.clone(),
+            base.graph.clone(),
+            base.mapping.clone(),
+            program,
+        )
+    }
+
+    /// The program under exploration.
+    pub fn program(&self) -> &MappingProgram {
+        &self.program
+    }
+
+    fn replayed(&self, c: &Candidate) -> Result<MappingState> {
+        let base = self.base.as_ref().with_context(|| {
+            format!(
+                "program space '{}' floats free of a base workload; use it as a \
+                 product/nested sub-space",
+                self.name
+            )
+        })?;
+        let mut state = MappingState::new(base.graph.clone());
+        state.mapping = base.mapping.clone();
+        self.program
+            .replay(&mut state, &base.hw, &self.evals, &c.0)
+            .with_context(|| format!("program space '{}'", self.name))?;
+        Ok(state)
+    }
+
+    /// Replay candidate `c`'s program onto an external state (updates the
+    /// caller's `MappingState` after a search picks a winner).
+    pub fn apply(&self, c: &Candidate, state: &mut MappingState) -> Result<()> {
+        let base = self.base.as_ref().with_context(|| {
+            format!("program space '{}' has no base hardware to apply against", self.name)
+        })?;
+        self.program.replay(state, &base.hw, &self.evals, &c.0)
+    }
+}
+
+impl DesignSpace for ProgramSpace {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    fn materialize(&self, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let base = self.base.as_ref().with_context(|| {
+            format!(
+                "program space '{}' floats free of a base workload; use it as a \
+                 product/nested sub-space",
+                self.name
+            )
+        })?;
+        let state = self.replayed(c)?;
+        Ok(Design::new(Workload {
+            hw: base.hw.clone(),
+            graph: state.graph,
+            mapping: state.mapping,
+            name: self.name.clone(),
+            notes: Vec::new(),
+        }))
+    }
+
+    /// Plan-safe programs (assignment-only under every binding — see
+    /// [`MappingProgram::plan_safe`]) share one topology for the whole
+    /// space; programs that tile/split under a hole rebuild per candidate.
+    fn topology_key(&self, _c: &Candidate) -> Option<Vec<u32>> {
+        self.program.plan_safe().then(Vec::new)
+    }
+
+    /// Mapping-only rebinding: replays the program but skips the
+    /// hardware clone (plan-safe programs produce the plan's graph
+    /// skeleton by construction).
+    fn bind(&self, c: &Candidate) -> Result<Binding> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let state = self.replayed(c)?;
+        Ok(Binding {
+            mapping: state.mapping,
+            area_mm2: None,
+            cost_usd: None,
+        })
+    }
+
+    /// Product composition: replay the program on the design the
+    /// preceding sub-spaces produced (its hardware, graph and mapping),
+    /// keeping the base design's side figures.
+    fn refine(&self, base: Design, c: &Candidate) -> Result<Design> {
+        crate::ensure!(self.in_bounds(c), "candidate out of bounds for '{}'", self.name);
+        let Design {
+            workload,
+            area_mm2,
+            cost_usd,
+        } = base;
+        let mut state = MappingState::new(workload.graph);
+        state.mapping = workload.mapping;
+        self.program
+            .replay(&mut state, &workload.hw, &self.evals, &c.0)
+            .with_context(|| {
+                format!("program space '{}' (refining '{}')", self.name, workload.name)
+            })?;
+        Ok(Design {
+            workload: Workload {
+                hw: workload.hw,
+                graph: state.graph,
+                mapping: state.mapping,
+                name: workload.name,
+                notes: workload.notes,
+            },
+            area_mm2,
+            cost_usd,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        explore, AnnealExplorer, ExploreOpts, HillClimbExplorer, Makespan, Objective,
+    };
+    use super::*;
+    use crate::hwir::{ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint};
+    use crate::mapping::{placement_program, Param, Prim, TaskSel};
+    use crate::sim::{simulate, SimConfig};
+    use crate::taskgraph::{ComputeCost, OpClass, TaskKind};
+
+    fn hw(cores: usize) -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![cores]);
+        for i in 0..cores {
+            m.set(
+                Coord::new(vec![i as u32]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((8, 8), 32).with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+                )),
+            );
+        }
+        Hardware::build(m)
+    }
+
+    fn all_on_one_core(n_tasks: usize, hw: &Hardware) -> MappingState {
+        let mut g = TaskGraph::new();
+        let core = hw.points_of_kind("compute")[0];
+        for i in 0..n_tasks {
+            let mut c = ComputeCost::zero(OpClass::Elementwise);
+            c.vec_flops = 64_000.0;
+            g.add(format!("t{i}"), TaskKind::Compute(c));
+        }
+        let mut st = MappingState::new(g);
+        for t in st.graph.ids().collect::<Vec<_>>() {
+            st.map_node(t, core).unwrap();
+        }
+        st
+    }
+
+    fn makespan(
+        hw: &Hardware,
+        state: &MappingState,
+        evals: &Registry,
+        sim_cfg: &SimConfig,
+    ) -> Option<f64> {
+        simulate(hw, &state.graph, &state.mapping, evals, sim_cfg)
+            .ok()
+            .map(|r| r.makespan)
+    }
+
+    #[test]
+    fn greedy_tiling_round_zero_is_identity() {
+        let hw = hw(2);
+        let st = all_on_one_core(2, &hw);
+        let space = ProgramSpace::greedy_tiling("tiling", &hw, &st, 2).unwrap();
+        assert_eq!(space.size(), 3);
+        assert_eq!(space.axes()[0].kind, AxisKind::Mapping);
+        // a holey graph-mutating program cannot share a topology
+        assert_eq!(space.topology_key(&Candidate(vec![0])), None);
+        let d = space.materialize(&Candidate(vec![0])).unwrap();
+        assert_eq!(d.workload.graph.len(), st.graph.len());
+        let d1 = space.materialize(&Candidate(vec![1])).unwrap();
+        // one round replaces a task with two tiles
+        assert_eq!(d1.workload.graph.len(), st.graph.len() + 1);
+    }
+
+    #[test]
+    fn hill_climbed_tiling_splits_heavy_task() {
+        let hw = hw(4);
+        let mut g = TaskGraph::new();
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = 1_000_000.0;
+        let t = g.add("big", TaskKind::Compute(c));
+        let mut st = MappingState::new(g);
+        st.map_node(t, hw.points_of_kind("compute")[0]).unwrap();
+        let evals = Registry::standard();
+        let sim_cfg = SimConfig::default();
+        let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        let (best_score, best_candidate) = {
+            let space = ProgramSpace::greedy_tiling("tiling", &hw, &st, 3).unwrap();
+            let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+            let opts = ExploreOpts {
+                budget: 8,
+                workers: 1,
+                sim: sim_cfg.clone(),
+                ..Default::default()
+            };
+            let explorer = HillClimbExplorer {
+                seed: 0,
+                from_initial: true,
+                restarts: false,
+            };
+            let report = explore(&space, &objectives, &explorer, &evals, &opts).unwrap();
+            let best = report.best().unwrap();
+            (best.objectives[0], best.candidate.clone())
+        };
+        assert!(best_score < before, "{before} -> {best_score}");
+        // replaying the winning candidate through `apply` reproduces the
+        // score exactly
+        let space = ProgramSpace::greedy_tiling("tiling", &hw, &st, 3).unwrap();
+        space.apply(&best_candidate, &mut st).unwrap();
+        let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        assert!(
+            (after - best_score).abs() / best_score < 1e-9,
+            "{after} vs {best_score}"
+        );
+    }
+
+    #[test]
+    fn anneal_improves_degenerate_placement_through_a_program() {
+        // 8 independent tasks all on one of 4 cores: annealing the holes
+        // of a placement *program* must spread them and cut the makespan
+        let hw = hw(4);
+        let mut st = all_on_one_core(8, &hw);
+        let evals = Registry::standard();
+        let sim_cfg = SimConfig::default();
+        let before = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        let space = ProgramSpace::over(
+            "anneal-program",
+            hw.clone(),
+            st.graph.clone(),
+            st.mapping.clone(),
+            placement_program(6),
+        )
+        .unwrap();
+        // assignment-only program: one shared topology for the space
+        assert_eq!(space.topology_key(&space.initial()), Some(Vec::new()));
+        let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+        let opts = ExploreOpts {
+            budget: 81,
+            workers: 1,
+            sim: sim_cfg.clone(),
+            ..Default::default()
+        };
+        let explorer = AnnealExplorer {
+            seed: 0xD5E,
+            init_temp: 0.1,
+            tiered: false,
+        };
+        let report = explore(&space, &objectives, &explorer, &evals, &opts).unwrap();
+        assert!(report.moves_accepted > 0);
+        let best = report.best().unwrap();
+        let best_score = best.objectives[0];
+        assert!(
+            best_score < before * 0.6,
+            "anneal failed to improve: {before} -> {best_score}"
+        );
+        // applying the winning candidate reproduces its score
+        space.apply(&best.candidate, &mut st).unwrap();
+        let after = makespan(&hw, &st, &evals, &sim_cfg).unwrap();
+        assert!(
+            (after - best_score).abs() / best_score < 1e-9,
+            "{after} vs {best_score}"
+        );
+    }
+
+    #[test]
+    fn bind_agrees_with_materialize() {
+        let hw = hw(4);
+        let st = all_on_one_core(5, &hw);
+        let space = ProgramSpace::over(
+            "bind-check",
+            hw,
+            st.graph.clone(),
+            st.mapping.clone(),
+            placement_program(2),
+        )
+        .unwrap();
+        for i in [0u64, 3, 7] {
+            let c = space.nth(i * 2 % space.size());
+            let d = space.materialize(&c).unwrap();
+            let b = space.bind(&c).unwrap();
+            assert_eq!(d.workload.mapping, b.mapping, "candidate {c:?}");
+        }
+    }
+
+    #[test]
+    fn floating_space_materialize_is_an_error_but_refine_works() {
+        let program = MappingProgram::new(vec![Prim::MapNode {
+            task: TaskSel::Name("t1".into()),
+            point: Param::hole("p", &[0, 2]),
+        }]);
+        let space = ProgramSpace::floating("float", program).unwrap();
+        assert_eq!(space.size(), 2);
+        let err = space.materialize(&Candidate(vec![0])).unwrap_err();
+        assert!(format!("{err:#}").contains("base workload"), "{err:#}");
+
+        // refine replays onto a provided design
+        let hw = hw(4);
+        let st = all_on_one_core(3, &hw);
+        let base = Design::new(Workload {
+            hw: hw.clone(),
+            graph: st.graph.clone(),
+            mapping: st.mapping.clone(),
+            name: "base".into(),
+            notes: Vec::new(),
+        });
+        let refined = space.refine(base, &Candidate(vec![1])).unwrap();
+        let t1 = refined
+            .workload
+            .graph
+            .iter()
+            .find(|t| t.name == "t1")
+            .unwrap()
+            .id;
+        let points = hw.points_of_kind("compute");
+        assert_eq!(refined.workload.mapping.point_of(t1), Some(points[2]));
+    }
+
+    #[test]
+    fn compute_point_holes_require_a_base() {
+        let err = ProgramSpace::floating("float", placement_program(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("compute points"), "{err:#}");
+    }
+}

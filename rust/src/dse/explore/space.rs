@@ -164,7 +164,7 @@ impl Candidate {
 /// A materialized candidate: a ready-to-simulate workload plus the
 /// side-channel figures (area, manufacturing cost) that the non-makespan
 /// objectives consume.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Design {
     pub workload: Workload,
     /// Chip/system silicon area, when the space computes one.
@@ -341,6 +341,22 @@ pub trait DesignSpace: Sync {
             .collect::<Vec<_>>()
             .join(" ")
     }
+
+    /// Product composition hook: apply this space's candidate as a
+    /// *refinement* of a design some other space materialized (see
+    /// [`ProductSpace`](super::compose::ProductSpace) — its first
+    /// sub-space materializes, every later sub refines). Spaces that
+    /// transform an existing workload (e.g.
+    /// [`ProgramSpace`](super::program::ProgramSpace)) override this; the
+    /// default declines.
+    fn refine(&self, base: Design, c: &Candidate) -> Result<Design> {
+        let _ = (base, c);
+        crate::bail!(
+            "space '{}' cannot refine an existing design (only program-style \
+             spaces compose as non-leading product subs)",
+            self.name()
+        )
+    }
 }
 
 // ======================================================================
@@ -461,6 +477,12 @@ impl ParamSpace {
     ///   "axes": {"cfg": [1,2], "lmem_bw": [76, 152], ...}}`
     pub fn from_json(text: &str) -> Result<ParamSpace> {
         let doc = Json::parse(text)?;
+        ParamSpace::from_json_value(&doc)
+    }
+
+    /// Parse from an already-parsed JSON value (the `"type": "param"`
+    /// arm of composed space files).
+    pub fn from_json_value(doc: &Json) -> Result<ParamSpace> {
         let name = doc
             .get("name")
             .and_then(|v| v.as_str())
@@ -633,6 +655,84 @@ impl PackagingSpace {
         }
     }
 
+    /// The paper-preset instance behind the `packaging`/`packaging-quick`
+    /// presets and the `"type": "packaging"` space files (and the outer
+    /// tier of the `three-tier` composed space).
+    pub fn paper_preset(name: &str, quick: bool) -> PackagingSpace {
+        if quick {
+            let llm = LlmConfig {
+                hidden: 512,
+                heads: 8,
+                ffn: 2048,
+                layers: 8,
+                elem_bytes: 2,
+            };
+            PackagingSpace::new(name, llm, 256, 2, &[1, 2], Some(((4, 4), 6)))
+        } else {
+            PackagingSpace::new(name, LlmConfig::gpt3_6_7b(), 2048, 8, &[1, 2, 3, 4, 6], None)
+        }
+    }
+
+    /// Append a chiplet local-memory bandwidth axis (hw-param tier): the
+    /// value overrides `MpmcParams::chiplet.lmem_bandwidth`.
+    pub fn with_lmem_bw_axis(mut self, values: &[f64]) -> PackagingSpace {
+        self.axes
+            .push(Axis::f64s("lmem_bw", AxisKind::HwParam, values));
+        self
+    }
+
+    /// Parse a `{"type": "packaging"}` space file value:
+    ///
+    /// `{"name": "...", "quick": bool, "pos": n, "layers": n,
+    ///   "cpp": [1, 2, ...], "lmem_bw": [76, 304]}`
+    ///
+    /// Missing fields default to [`PackagingSpace::paper_preset`] at the
+    /// given `quick` setting.
+    pub fn from_json_value(doc: &Json) -> Result<PackagingSpace> {
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("packaging")
+            .to_string();
+        let quick = doc.get("quick").and_then(|v| v.as_bool()).unwrap_or(false);
+        let mut space = PackagingSpace::paper_preset(&name, quick);
+        if let Some(pos) = doc.get("pos").and_then(|v| v.as_u64()) {
+            space.pos = pos as u32;
+        }
+        if let Some(layers) = doc.get("layers").and_then(|v| v.as_u64()) {
+            space.layers = layers as u32;
+        }
+        if let Some(cpps) = doc.get("cpp") {
+            let arr = cpps
+                .as_arr()
+                .ok_or_else(|| crate::format_err!("\"cpp\" must be an array"))?;
+            let mut vals = Vec::with_capacity(arr.len());
+            for v in arr {
+                let cpp = v
+                    .as_u64()
+                    .ok_or_else(|| crate::format_err!("\"cpp\" has a non-integer value"))?;
+                crate::ensure!(cpp >= 1, "\"cpp\" values must be >= 1 (got {cpp})");
+                vals.push(cpp);
+            }
+            crate::ensure!(!vals.is_empty(), "\"cpp\" must not be empty");
+            space.axes[1] = Axis::u64s("cpp", AxisKind::HwParam, &vals);
+        }
+        if let Some(bws) = doc.get("lmem_bw") {
+            let arr = bws
+                .as_arr()
+                .ok_or_else(|| crate::format_err!("\"lmem_bw\" must be an array"))?;
+            let mut vals = Vec::with_capacity(arr.len());
+            for v in arr {
+                vals.push(v.as_f64().ok_or_else(|| {
+                    crate::format_err!("\"lmem_bw\" has a non-numeric value")
+                })?);
+            }
+            crate::ensure!(!vals.is_empty(), "\"lmem_bw\" must not be empty");
+            space = space.with_lmem_bw_axis(&vals);
+        }
+        Ok(space)
+    }
+
     /// (packaging, chiplets/package) of a candidate.
     pub fn describe(&self, c: &Candidate) -> (Packaging, usize) {
         let pkg = if c.0[0] == 0 {
@@ -650,6 +750,12 @@ impl PackagingSpace {
         if let Some((grid, total)) = self.shrink {
             p.total_chiplets = total;
             p.chiplet.grid = grid;
+        }
+        // optional appended hw-param axes (axis index 2+)
+        for (a, d) in self.axes.iter().zip(&c.0).skip(2) {
+            if a.name == "lmem_bw" {
+                p.chiplet.lmem_bandwidth = a.values.num(*d as usize);
+            }
         }
         crate::ensure!(
             p.total_chiplets % p.chiplets_per_package == 0,
@@ -804,6 +910,8 @@ pub fn preset_names() -> &'static [&'static str] {
         "packaging",
         "packaging-quick",
         "mapping",
+        "three-tier",
+        "three-tier-quick",
     ]
 }
 
@@ -871,38 +979,17 @@ pub fn preset(name: &str) -> Result<(Box<dyn DesignSpace>, Vec<Box<dyn Objective
         }
         "gsm" => Ok((Box::new(gsm_preset("gsm", false)?), perf)),
         "gsm-quick" => Ok((Box::new(gsm_preset("gsm-quick", true)?), perf)),
-        "packaging" => {
-            let space = PackagingSpace::new(
-                "packaging",
-                LlmConfig::gpt3_6_7b(),
-                2048,
-                8,
-                &[1, 2, 3, 4, 6],
-                None,
-            );
-            let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
-            Ok((Box::new(space), objs))
-        }
-        "packaging-quick" => {
-            let llm = LlmConfig {
-                hidden: 512,
-                heads: 8,
-                ffn: 2048,
-                layers: 8,
-                elem_bytes: 2,
-            };
-            let space = PackagingSpace::new(
-                "packaging-quick",
-                llm,
-                256,
-                2,
-                &[1, 2],
-                Some(((4, 4), 6)),
-            );
+        "packaging" | "packaging-quick" => {
+            let space = PackagingSpace::paper_preset(name, name.ends_with("-quick"));
             let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
             Ok((Box::new(space), objs))
         }
         "mapping" => Ok((Box::new(placement_demo("mapping", (2, 2), 8)), perf)),
+        "three-tier" | "three-tier-quick" => {
+            let space = super::compose::three_tier(name, name.ends_with("-quick"))?;
+            let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(CostUsd)];
+            Ok((Box::new(space), objs))
+        }
         other => crate::bail!(
             "unknown preset '{other}' (valid: {})",
             preset_names().join(", ")

@@ -10,24 +10,26 @@
 //! * [`report`] — result tables (console / CSV / JSON).
 //! * [`explore`] — the first-class exploration API: [`explore::DesignSpace`]
 //!   (typed axes over arch templates, hardware parameters and mapping
-//!   knobs), [`explore::Objective`] (makespan, EDP, area-constrained
-//!   makespan, cost), [`explore::Explorer`] (grid / random / hill-climb /
-//!   simulated annealing) and the batched, memoized evaluation
-//!   [`explore::Engine`] producing [`explore::ExplorationReport`]s.
-//! * [`search`] — the greedy graph-transformation space
-//!   ([`search::TilingSpace`]) driven through [`explore`].
+//!   knobs) with the composition algebra ([`explore::ProductSpace`] /
+//!   [`explore::NestedSpace`]) and the mapping-program space
+//!   ([`explore::ProgramSpace`]); [`explore::Objective`] (makespan, EDP,
+//!   area-constrained makespan, cost); [`explore::Explorer`] (grid /
+//!   random / hill-climb / simulated annealing, optionally tier-aware)
+//!   and the batched, memoized evaluation [`explore::Engine`] producing
+//!   [`explore::ExplorationReport`]s. (The former `search` module's
+//!   greedy tiling lives on as
+//!   [`explore::ProgramSpace::greedy_tiling`].)
 //! * [`experiments`] — every table and figure of the paper's evaluation;
-//!   the grid sweeps and the mapping search run through [`explore`].
+//!   the grid sweeps, the mapping search and the joint `three-tier`
+//!   search run through [`explore`].
 
 pub mod experiments;
 pub mod explore;
 pub mod parallel;
 pub mod report;
-pub mod search;
 
 pub use experiments::Ctx;
 pub use parallel::{
     default_workers, resolve_workers, run_parallel, run_parallel_try, JobOutcome, WorkerPool,
 };
 pub use report::{fmt, Table};
-pub use search::TilingSpace;

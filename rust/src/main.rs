@@ -5,7 +5,8 @@
 //! mldse simulate --arch dmc|gsm [--config N] [--seq N] [--pjrt] [--json]
 //! mldse decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N]
 //! mldse experiment <name>|all [--quick] [--csv] | --list
-//! mldse explore --space FILE.json|--preset NAME [--explorer grid|random|hill|anneal]
+//! mldse explore --space FILE.json|--preset NAME
+//!               [--explorer grid|random|hill|anneal|anneal-tiered]
 //!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
 //! mldse hardware --spec FILE                   build + describe a spec
 //! ```
@@ -18,8 +19,8 @@ use mldse::arch::{DmcParams, GsmParams, MpmcParams};
 use mldse::coordinator::{Coordinator, EXPERIMENTS};
 use mldse::cost::Packaging;
 use mldse::dse::explore::{
-    explore, explorer_by_name, preset, preset_names, DesignSpace, Edp, ExploreOpts, Makespan,
-    Objective, ParamSpace,
+    explore, explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
+    DesignSpace, Edp, ExploreOpts, Makespan, Objective,
 };
 use mldse::dse::parallel::resolve_workers;
 use mldse::sim::SimConfig;
@@ -152,10 +153,13 @@ fn print_usage() {
            simulate --arch dmc|gsm [--config 1-4] [--seq N] [--pjrt] [--json] [--trace out.json]\n\
            decode --mode temporal|spatial [--pos N] [--layers N] [--cpp N] [--packaging mcm|2.5d]\n\
            experiment <{experiments}>|all [--quick] [--csv] | --list\n\
-           explore --space FILE.json|--preset NAME [--explorer grid|random|hill|anneal]\n\
+           explore --space FILE.json|--preset NAME\n\
+                   [--explorer grid|random|hill|anneal|anneal-tiered]\n\
                    [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
                    (presets: {presets}; --workers 0 = auto-detect,\n\
-                    honoring the MLDSE_WORKERS environment override)\n\
+                    honoring the MLDSE_WORKERS environment override; space\n\
+                    files compose param/packaging/product/nested spaces —\n\
+                    see README \"Composable design spaces\")\n\
            hardware --spec FILE.json\n",
         experiments = EXPERIMENTS.join("|"),
         presets = preset_names().join(", ")
@@ -331,10 +335,16 @@ fn cmd_explore(args: &Args) -> Result<()> {
             (Some(path), None) => {
                 let text = std::fs::read_to_string(path)
                     .with_context(|| format!("reading space file '{path}'"))?;
-                let s = ParamSpace::from_json(&text)
+                let doc = mldse::util::json::Json::parse(&text)
                     .with_context(|| format!("parsing space file '{path}'"))?;
-                let objs: Vec<Box<dyn Objective>> = vec![Box::new(Makespan), Box::new(Edp)];
-                (Box::new(s), objs)
+                let s = space_from_json_value(&doc)
+                    .with_context(|| format!("parsing space file '{path}'"))?;
+                // the file may pick its own objectives; default (makespan,
+                // EDP) otherwise
+                let objs = objectives_from_json(&doc)
+                    .with_context(|| format!("parsing space file '{path}'"))?
+                    .unwrap_or_else(|| vec![Box::new(Makespan), Box::new(Edp)]);
+                (s as Box<dyn DesignSpace>, objs)
             }
             (None, Some(name)) => preset(name)?,
             (None, None) => mldse::bail!(

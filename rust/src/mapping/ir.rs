@@ -368,6 +368,103 @@ mod tests {
     }
 
     #[test]
+    fn rollover_edge_cases() {
+        // empty coords: no outer digits, never a rollover
+        let empty = TimeCoord::new(Vec::<u32>::new());
+        assert!(!empty.rollover_to(&empty));
+        // single-level coords: only the innermost digit exists, so no
+        // move between them is a rollover (paper: "change in level i>1")
+        let a = TimeCoord::new(vec![0]);
+        let b = TimeCoord::new(vec![7]);
+        assert!(!a.rollover_to(&b));
+        assert!(!b.rollover_to(&a));
+        // unequal lengths: the outer prefixes differ structurally, which
+        // counts as a rollover in both directions
+        let deep = TimeCoord::new(vec![0, 0]);
+        let shallow = TimeCoord::new(vec![0]);
+        assert!(shallow.rollover_to(&deep));
+        assert!(deep.rollover_to(&shallow));
+        // ...unless both outer prefixes are empty-vs-equal
+        let empty_to_single = TimeCoord::new(Vec::<u32>::new());
+        assert!(!empty_to_single.rollover_to(&shallow));
+        // same outer prefix at depth 3, innermost churns freely
+        let x = TimeCoord::new(vec![1, 2, 0]);
+        let y = TimeCoord::new(vec![1, 2, 9]);
+        let z = TimeCoord::new(vec![1, 3, 0]);
+        assert!(!x.rollover_to(&y));
+        assert!(x.rollover_to(&z));
+    }
+
+    #[test]
+    fn lower_single_level_coords_is_a_noop() {
+        // single-level time coordinates have no outer digit to roll over:
+        // lowering inserts nothing regardless of how the digits differ
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let p0 = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let p1 = hw.cell(&mlc(&[&[0, 1]])).unwrap();
+        for (i, p) in [(0u32, p0), (5, p1), (9, p0)] {
+            let t = g.add(format!("t{i}"), TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+            m.map(t, p);
+            m.set_time(t, TimeCoord::new(vec![i]));
+        }
+        assert_eq!(lower_time_coords(&mut g, &mut m, &hw, 0), 0);
+        assert_eq!(g.len(), 3);
+    }
+
+    #[test]
+    fn lower_skips_tasks_without_time_coords() {
+        // uncoordinated tasks on the same points neither anchor barriers
+        // nor get wired into them
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let p0 = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let p1 = hw.cell(&mlc(&[&[0, 1]])).unwrap();
+        let timed_a = g.add("ta", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let timed_b = g.add("tb", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let free = g.add("free", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        m.map(timed_a, p0);
+        m.map(timed_b, p0);
+        m.map(free, p1);
+        m.set_time(timed_a, TimeCoord::new(vec![0, 0]));
+        m.set_time(timed_b, TimeCoord::new(vec![1, 0]));
+        assert_eq!(lower_time_coords(&mut g, &mut m, &hw, 0), 1);
+        // one sync on the single *occupied-by-timed* point; `free` (p1,
+        // no coord) contributes no sync task and gains no edges
+        let syncs: Vec<TaskId> = g.iter().filter(|t| t.kind.is_sync()).map(|t| t.id).collect();
+        assert_eq!(syncs.len(), 1);
+        assert_eq!(m.point_of(syncs[0]), Some(p0));
+        assert!(g.predecessors(free).is_empty());
+        assert!(g.successors(free).is_empty());
+    }
+
+    #[test]
+    fn lower_mixed_coordinate_depths() {
+        // a shallow (1-digit) coord between deep ones: the unequal-length
+        // prefix comparison makes each depth change a barrier boundary
+        let hw = hw_2x2();
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let p0 = hw.cell(&mlc(&[&[0, 0]])).unwrap();
+        let a = g.add("a", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        let b = g.add("b", TaskKind::Compute(ComputeCost::zero(OpClass::MatMul)));
+        m.map(a, p0);
+        m.map(b, p0);
+        m.set_time(a, TimeCoord::new(vec![3]));
+        m.set_time(b, TimeCoord::new(vec![0, 1]));
+        // lexicographic order: (0,1) < (3); prefixes [] vs [0] differ
+        let inserted = lower_time_coords(&mut g, &mut m, &hw, 40);
+        assert_eq!(inserted, 1);
+        let syncs: Vec<TaskId> = g.iter().filter(|t| t.kind.is_sync()).map(|t| t.id).collect();
+        assert_eq!(syncs.len(), 1);
+        assert!(g.predecessors(syncs[0]).contains(&b));
+        assert!(g.successors(syncs[0]).contains(&a));
+        assert!(g.toposort().is_some());
+    }
+
+    #[test]
     fn no_rollover_no_barrier() {
         let hw = hw_2x2();
         let mut g = TaskGraph::new();

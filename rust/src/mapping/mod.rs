@@ -5,9 +5,14 @@
 //! with virtual-group synchronization lowering. [`primitives`] implements
 //! the sixteen Table-1 mapping action primitives over a [`MappingState`]
 //! with undo/redo, the substrate user search algorithms are built from.
+//! [`program`] lifts the primitives into a serializable, parameterized
+//! [`MappingProgram`] IR — the mapping-exploration substrate that
+//! `dse::explore::ProgramSpace` exposes as a design space.
 
 pub mod ir;
 pub mod primitives;
+pub mod program;
 
 pub use ir::{lower_time_coords, Mapping, TimeCoord};
 pub use primitives::{MapError, MappingState};
+pub use program::{placement_program, MappingProgram, Param, ParamDomain, Prim, TaskSel};

@@ -13,6 +13,8 @@
 //! | synchronization | `sync` (+ `barrier` helper) |
 //! | state control | `enable`, `disable`, `undo`, `redo` |
 
+use std::collections::VecDeque;
+
 use crate::hwir::{CommSegment, PointId};
 use crate::taskgraph::{TaskGraph, TaskId, TaskKind};
 
@@ -28,7 +30,15 @@ impl std::fmt::Display for MapError {
     }
 }
 
-impl std::error::Error for MapError {}
+/// Primitive failures propagate into the crate-wide error chain with
+/// their detail preserved as a separate context level, so callers can
+/// stack higher-level context on top (`?` + `Context::context`) instead
+/// of re-formatting ad-hoc strings.
+impl From<MapError> for crate::util::error::Error {
+    fn from(e: MapError) -> crate::util::error::Error {
+        crate::util::error::Error::msg(e.0).wrap("mapping error")
+    }
+}
 
 type Result<T> = std::result::Result<T, MapError>;
 
@@ -49,7 +59,8 @@ pub struct MappingState {
     pub graph: TaskGraph,
     pub mapping: Mapping,
     next_group: u32,
-    undo_stack: Vec<Snapshot>,
+    /// Checkpoint ring: old entries evict from the front in O(1).
+    undo_stack: VecDeque<Snapshot>,
     redo_stack: Vec<Snapshot>,
     /// Maximum retained checkpoints (old ones are dropped).
     pub history_limit: usize,
@@ -61,20 +72,20 @@ impl MappingState {
             graph,
             mapping: Mapping::new(),
             next_group: 1,
-            undo_stack: Vec::new(),
+            undo_stack: VecDeque::new(),
             redo_stack: Vec::new(),
             history_limit: 64,
         }
     }
 
     fn checkpoint(&mut self) {
-        self.undo_stack.push(Snapshot {
+        self.undo_stack.push_back(Snapshot {
             graph: self.graph.clone(),
             mapping: self.mapping.clone(),
             next_group: self.next_group,
         });
         if self.undo_stack.len() > self.history_limit {
-            self.undo_stack.remove(0);
+            self.undo_stack.pop_front();
         }
         self.redo_stack.clear();
     }
@@ -461,7 +472,7 @@ impl MappingState {
     /// `undo()` — revert the most recent primitive. Returns false when the
     /// history is empty.
     pub fn undo(&mut self) -> bool {
-        match self.undo_stack.pop() {
+        match self.undo_stack.pop_back() {
             Some(snap) => {
                 self.redo_stack.push(Snapshot {
                     graph: std::mem::replace(&mut self.graph, snap.graph),
@@ -478,7 +489,7 @@ impl MappingState {
     pub fn redo(&mut self) -> bool {
         match self.redo_stack.pop() {
             Some(snap) => {
-                self.undo_stack.push(Snapshot {
+                self.undo_stack.push_back(Snapshot {
                     graph: std::mem::replace(&mut self.graph, snap.graph),
                     mapping: std::mem::replace(&mut self.mapping, snap.mapping),
                     next_group: std::mem::replace(&mut self.next_group, snap.next_group),
@@ -747,6 +758,42 @@ mod tests {
             st.copy_task(a).unwrap();
         }
         assert_eq!(st.history_len(), 3);
+    }
+
+    #[test]
+    fn history_eviction_drops_oldest_first() {
+        // after overflowing the limit, undo steps back through the
+        // *newest* checkpoints (the oldest were evicted from the front)
+        let (mut st, a, _e, _b) = chain_state();
+        st.history_limit = 2;
+        st.copy_task(a).unwrap(); // checkpoint 1 (evicted)
+        let after_two = {
+            st.copy_task(a).unwrap(); // checkpoint 2
+            st.graph.clone()
+        };
+        st.copy_task(a).unwrap(); // checkpoint 3
+        assert!(st.undo());
+        assert_eq!(st.graph, after_two);
+        assert!(st.undo());
+        assert!(!st.undo(), "oldest checkpoint must have been evicted");
+    }
+
+    #[test]
+    fn map_error_propagates_into_error_chain_with_context() {
+        use crate::util::error::Context;
+        let (mut st, ..) = chain_state();
+        let err: crate::util::error::Error = st
+            .delete_task(TaskId(999))
+            .context("applying mapping program")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert_eq!(
+            err.chain().len(),
+            3,
+            "context + 'mapping error' + detail: {msg}"
+        );
+        assert!(msg.starts_with("applying mapping program: mapping error:"), "{msg}");
+        assert!(msg.contains("does not exist"), "{msg}");
     }
 
     #[test]

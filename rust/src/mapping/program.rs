@@ -1,0 +1,1083 @@
+//! Mapping-program IR: serializable sequences of Table-1 primitive
+//! invocations with typed parameter holes (paper §5.2).
+//!
+//! A [`MappingProgram`] is an ordered list of [`Prim`] instructions. Every
+//! instruction parameter is a [`Param`] — either a literal or a named
+//! *hole* ranging over a typed [`ParamDomain`]. The holes are what a
+//! mapping-tier design space explores: `dse::explore::ProgramSpace`
+//! exposes one mapping-tier axis per distinct hole and *replays* the
+//! program through a [`MappingState`] at bind time, so the §5.2 primitives
+//! themselves become the mapping-exploration substrate instead of opaque
+//! per-space knobs.
+//!
+//! Programs round-trip through JSON (`to_json`/`from_json`), which is how
+//! `mldse explore --space FILE.json` defines the mapping tier of a
+//! composed (`nested`/`product`) space.
+//!
+//! ## Plan safety
+//!
+//! [`MappingProgram::plan_safe`] reports whether every replay of the
+//! program — at *any* hole binding — produces the same task-graph skeleton
+//! and only moves compute tasks. Plan-safe programs may share one
+//! topology-keyed evaluation setup (`EvalPlan`: hardware + interned route
+//! table + simulator arenas) across all hole bindings; programs that tile
+//! or split under a hole rebuild per candidate. The rule is syntactic and
+//! conservative: every graph-mutating instruction must be hole-free and
+//! precede every instruction that carries a hole.
+
+use std::collections::HashMap;
+
+use crate::eval::Registry;
+use crate::hwir::{Hardware, PointId};
+use crate::taskgraph::TaskId;
+use crate::util::error::{Context, Result};
+use crate::util::json::{Json, JsonObj};
+
+use super::primitives::MappingState;
+
+// ======================================================================
+// Parameters and holes
+// ======================================================================
+
+/// The value domain of a hole.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParamDomain {
+    /// Explicit choice list; a binding digit indexes into it.
+    U32s(Vec<u32>),
+    /// All compute points of the hardware the program is instantiated
+    /// over; a binding digit *is* the compute-point index. Requires a
+    /// base workload (nested/`ProgramSpace::over`) to resolve.
+    ComputePoints,
+}
+
+/// One instruction parameter: a literal value or a typed hole.
+///
+/// Holes sharing a name share one binding (and must share one domain) —
+/// a program can tie two parameters together by naming them identically.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Param {
+    Lit(u32),
+    Hole { name: String, domain: ParamDomain },
+}
+
+impl Param {
+    pub fn hole(name: impl Into<String>, choices: &[u32]) -> Param {
+        Param::Hole {
+            name: name.into(),
+            domain: ParamDomain::U32s(choices.to_vec()),
+        }
+    }
+
+    pub fn point_hole(name: impl Into<String>) -> Param {
+        Param::Hole {
+            name: name.into(),
+            domain: ParamDomain::ComputePoints,
+        }
+    }
+
+    fn as_hole(&self) -> Option<(&str, &ParamDomain)> {
+        match self {
+            Param::Lit(_) => None,
+            Param::Hole { name, domain } => Some((name, domain)),
+        }
+    }
+}
+
+/// A task operand: which task(s) an instruction applies to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskSel {
+    /// The unique task with this name in the current graph (error when
+    /// absent or ambiguous).
+    Name(String),
+    /// A task id of the base graph (stable across replays from one base).
+    Id(u32),
+    /// The `index`-th output task of instruction `instr`.
+    Out { instr: usize, index: usize },
+    /// All output tasks of instruction `instr`.
+    Outs { instr: usize },
+    /// The heaviest enabled, mapped compute task (by evaluator demand at
+    /// its current placement; ties break to the smallest id) that no
+    /// earlier `map_node` of this replay has already placed.
+    Heaviest,
+}
+
+// ======================================================================
+// Instructions
+// ======================================================================
+
+/// One primitive invocation. The graph-transformation and synchronization
+/// instructions mutate the task-graph skeleton; `map_node` is pure
+/// assignment (restricted to compute tasks, so routed communication
+/// placement — and with it the interned route table — is binding-
+/// invariant).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Prim {
+    /// `tile_task(task, [factor])` on every selected task.
+    TileTask { task: TaskSel, factor: Param },
+    /// `split_edge(edge, ways)` on every selected comm task.
+    SplitEdge { edge: TaskSel, ways: Param },
+    /// `map_node(task, compute_point[point])` on every selected task.
+    MapNode { task: TaskSel, point: Param },
+    /// A `sync` barrier across the occupied points of `after`, ordered
+    /// after `after` and before `before`.
+    Barrier { after: TaskSel, before: TaskSel },
+    Disable { task: TaskSel },
+    Enable { task: TaskSel },
+    /// `rounds` greedy split-and-spread rounds: tile the heaviest enabled
+    /// compute task 2-way and spread the halves over the least-loaded
+    /// compute points (the canonical greedy tiling search, built from
+    /// `tile_task` + `map_node`).
+    GreedyRounds { rounds: Param },
+}
+
+impl Prim {
+    /// Parameters of this instruction, in order.
+    fn params(&self) -> Vec<&Param> {
+        match self {
+            Prim::TileTask { factor, .. } => vec![factor],
+            Prim::SplitEdge { ways, .. } => vec![ways],
+            Prim::MapNode { point, .. } => vec![point],
+            Prim::GreedyRounds { rounds } => vec![rounds],
+            Prim::Barrier { .. } | Prim::Disable { .. } | Prim::Enable { .. } => Vec::new(),
+        }
+    }
+
+    /// True when replaying this instruction can change the task-graph
+    /// skeleton (tasks, edges, enabled flags) rather than only the
+    /// task→point assignment.
+    fn mutates_graph(&self) -> bool {
+        !matches!(self, Prim::MapNode { .. })
+    }
+
+    fn selectors(&self) -> Vec<&TaskSel> {
+        match self {
+            Prim::TileTask { task, .. }
+            | Prim::MapNode { task, .. }
+            | Prim::Disable { task }
+            | Prim::Enable { task } => vec![task],
+            Prim::SplitEdge { edge, .. } => vec![edge],
+            Prim::Barrier { after, before } => vec![after, before],
+            Prim::GreedyRounds { .. } => Vec::new(),
+        }
+    }
+
+    fn op_name(&self) -> &'static str {
+        match self {
+            Prim::TileTask { .. } => "tile_task",
+            Prim::SplitEdge { .. } => "split_edge",
+            Prim::MapNode { .. } => "map_node",
+            Prim::Barrier { .. } => "barrier",
+            Prim::Disable { .. } => "disable",
+            Prim::Enable { .. } => "enable",
+            Prim::GreedyRounds { .. } => "greedy_rounds",
+        }
+    }
+}
+
+// ======================================================================
+// The program
+// ======================================================================
+
+/// One resolved hole: name, domain, and the number of binding digits it
+/// accepts (`ComputePoints` resolves against a concrete hardware).
+#[derive(Debug, Clone)]
+pub struct Hole {
+    pub name: String,
+    pub domain: ParamDomain,
+    /// Cardinality of the binding digit (`ComputePoints` => number of
+    /// compute points of the instantiation hardware).
+    pub card: usize,
+}
+
+/// An ordered, serializable list of parameterized primitive invocations.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MappingProgram {
+    pub instrs: Vec<Prim>,
+}
+
+impl MappingProgram {
+    pub fn new(instrs: Vec<Prim>) -> MappingProgram {
+        MappingProgram { instrs }
+    }
+
+    /// The distinct holes in first-occurrence order. Same-name holes must
+    /// agree on their domain; `Out`/`Outs` selectors must reference an
+    /// earlier instruction.
+    pub fn holes(&self) -> Result<Vec<(String, ParamDomain)>> {
+        let mut seen: HashMap<&str, &ParamDomain> = HashMap::new();
+        let mut out: Vec<(String, ParamDomain)> = Vec::new();
+        for (i, instr) in self.instrs.iter().enumerate() {
+            for sel in instr.selectors() {
+                if let TaskSel::Out { instr: j, .. } | TaskSel::Outs { instr: j } = sel {
+                    crate::ensure!(
+                        *j < i,
+                        "instruction {i} ({}) references outputs of instruction {j}, \
+                         which does not precede it",
+                        instr.op_name()
+                    );
+                }
+            }
+            for p in instr.params() {
+                if let Some((name, domain)) = p.as_hole() {
+                    match seen.get(name) {
+                        Some(prev) => crate::ensure!(
+                            *prev == domain,
+                            "hole '{name}' declared with two different domains"
+                        ),
+                        None => {
+                            if let ParamDomain::U32s(ch) = domain {
+                                crate::ensure!(!ch.is_empty(), "hole '{name}' has no choices");
+                            }
+                            seen.insert(name, domain);
+                            out.push((name.to_string(), domain.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Resolve the holes against an instantiation hardware (`None` when the
+    /// program floats free of any base — then every domain must be
+    /// explicit).
+    pub fn resolved_holes(&self, n_compute: Option<usize>) -> Result<Vec<Hole>> {
+        self.holes()?
+            .into_iter()
+            .map(|(name, domain)| {
+                let card = match &domain {
+                    ParamDomain::U32s(ch) => ch.len(),
+                    ParamDomain::ComputePoints => match n_compute {
+                        Some(n) if n > 0 => n,
+                        Some(_) => crate::bail!(
+                            "hole '{name}' ranges over compute points, but the hardware has none"
+                        ),
+                        None => crate::bail!(
+                            "hole '{name}' ranges over compute points and needs a base workload \
+                             to resolve (use a nested space or ProgramSpace::over, or give the \
+                             hole explicit choices)"
+                        ),
+                    },
+                };
+                Ok(Hole { name, domain, card })
+            })
+            .collect()
+    }
+
+    /// True when every replay, at any hole binding, yields the same
+    /// task-graph skeleton and only reassigns compute tasks — the
+    /// precondition for sharing one topology-keyed evaluation setup
+    /// across the whole binding space (see module docs).
+    pub fn plan_safe(&self) -> bool {
+        let mut seen_hole = false;
+        for instr in &self.instrs {
+            let has_hole = instr.params().iter().any(|p| p.as_hole().is_some());
+            if instr.mutates_graph() && (has_hole || seen_hole) {
+                return false;
+            }
+            if has_hole {
+                seen_hole = true;
+            }
+        }
+        true
+    }
+
+    /// Replay the program onto `state`, resolving hole `i` (in
+    /// [`MappingProgram::holes`] order) to binding digit `binding[i]`.
+    /// Primitive failures propagate as [`crate::util::error::Error`]s
+    /// with the failing instruction as context.
+    pub fn replay(
+        &self,
+        state: &mut MappingState,
+        hw: &Hardware,
+        evals: &Registry,
+        binding: &[u32],
+    ) -> Result<()> {
+        let holes = self.holes()?;
+        crate::ensure!(
+            binding.len() == holes.len(),
+            "program has {} holes but the binding provides {} digits",
+            holes.len(),
+            binding.len()
+        );
+        let compute_points = hw.points_of_kind("compute");
+        let digit_of: HashMap<&str, u32> = holes
+            .iter()
+            .zip(binding)
+            .map(|((name, _), d)| (name.as_str(), *d))
+            .collect();
+        let resolve = |p: &Param| -> Result<u32> {
+            match p {
+                Param::Lit(v) => Ok(*v),
+                Param::Hole { name, domain } => {
+                    let digit = *digit_of.get(name.as_str()).expect("hole listed") as usize;
+                    match domain {
+                        ParamDomain::U32s(ch) => {
+                            crate::ensure!(
+                                digit < ch.len(),
+                                "hole '{name}': binding digit {digit} out of range \
+                                 (choices: {})",
+                                ch.len()
+                            );
+                            Ok(ch[digit])
+                        }
+                        ParamDomain::ComputePoints => Ok(digit as u32),
+                    }
+                }
+            }
+        };
+        let point_at = |idx: u32| -> Result<PointId> {
+            compute_points.get(idx as usize).copied().with_context(|| {
+                format!(
+                    "compute-point index {idx} out of range (hardware has {})",
+                    compute_points.len()
+                )
+            })
+        };
+
+        // Outputs of each replayed instruction, and the tasks explicit
+        // map_nodes have placed (excluded from later `Heaviest` picks).
+        let mut outs: Vec<Vec<TaskId>> = Vec::with_capacity(self.instrs.len());
+        let mut placed: Vec<TaskId> = Vec::new();
+
+        for (i, instr) in self.instrs.iter().enumerate() {
+            let ctx = || format!("program instruction {i} ({})", instr.op_name());
+            let produced: Vec<TaskId> = match instr {
+                Prim::TileTask { task, factor } => {
+                    let f = resolve(factor).with_context(ctx)?;
+                    crate::ensure!(f > 0, "{}: tile factor must be positive", ctx());
+                    let targets = resolve_sel(task, state, hw, evals, &outs, &placed)
+                        .with_context(ctx)?;
+                    let mut tiles = Vec::new();
+                    for t in targets {
+                        tiles.extend(state.tile_task(t, &[f]).with_context(ctx)?);
+                    }
+                    tiles
+                }
+                Prim::SplitEdge { edge, ways } => {
+                    let w = resolve(ways).with_context(ctx)?;
+                    crate::ensure!(w > 0, "{}: split ways must be positive", ctx());
+                    let targets = resolve_sel(edge, state, hw, evals, &outs, &placed)
+                        .with_context(ctx)?;
+                    let mut subs = Vec::new();
+                    for t in targets {
+                        subs.extend(state.split_edge(t, w).with_context(ctx)?);
+                    }
+                    subs
+                }
+                Prim::MapNode { task, point } => {
+                    let idx = resolve(point).with_context(ctx)?;
+                    let p = point_at(idx).with_context(ctx)?;
+                    let targets = resolve_sel(task, state, hw, evals, &outs, &placed)
+                        .with_context(ctx)?;
+                    for &t in &targets {
+                        crate::ensure!(
+                            state.graph.task(t).kind.is_compute(),
+                            "{}: only compute tasks may be re-placed by a program \
+                             (task {t} is {})",
+                            ctx(),
+                            state.graph.task(t).kind.kind_name()
+                        );
+                        state.map_node(t, p).with_context(ctx)?;
+                        placed.push(t);
+                    }
+                    targets
+                }
+                Prim::Barrier { after, before } => {
+                    let after_t =
+                        resolve_sel(after, state, hw, evals, &outs, &placed).with_context(ctx)?;
+                    let before_t =
+                        resolve_sel(before, state, hw, evals, &outs, &placed).with_context(ctx)?;
+                    let mut points: Vec<PointId> = after_t
+                        .iter()
+                        .filter_map(|t| state.mapping.point_of(*t))
+                        .collect();
+                    points.sort();
+                    points.dedup();
+                    crate::ensure!(
+                        !points.is_empty(),
+                        "{}: no mapped 'after' task to anchor the barrier",
+                        ctx()
+                    );
+                    state
+                        .barrier(1000 + i as u32, &points, &after_t, &before_t)
+                        .with_context(ctx)?
+                }
+                Prim::Disable { task } => {
+                    let targets = resolve_sel(task, state, hw, evals, &outs, &placed)
+                        .with_context(ctx)?;
+                    for &t in &targets {
+                        state.disable(t).with_context(ctx)?;
+                    }
+                    targets
+                }
+                Prim::Enable { task } => {
+                    let targets = resolve_sel(task, state, hw, evals, &outs, &placed)
+                        .with_context(ctx)?;
+                    for &t in &targets {
+                        state.enable(t).with_context(ctx)?;
+                    }
+                    targets
+                }
+                Prim::GreedyRounds { rounds } => {
+                    let k = resolve(rounds).with_context(ctx)?;
+                    for _ in 0..k {
+                        if !greedy_round(hw, state, evals) {
+                            break;
+                        }
+                    }
+                    Vec::new()
+                }
+            };
+            outs.push(produced);
+        }
+        Ok(())
+    }
+
+    // ==================================================================
+    // JSON round trip
+    // ==================================================================
+
+    /// Serialize as a JSON array of instruction objects (the `"program"`
+    /// field of `nested`/`product` space files).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.instrs.iter().map(instr_to_json).collect())
+    }
+
+    pub fn from_json(text: &str) -> Result<MappingProgram> {
+        let doc = Json::parse(text).context("parsing mapping program")?;
+        MappingProgram::from_json_value(&doc)
+    }
+
+    /// Parse from a JSON array value. Schema per instruction:
+    ///
+    /// ```json
+    /// {"op": "tile_task",     "task": SEL, "factor": PARAM}
+    /// {"op": "split_edge",    "edge": SEL, "ways": PARAM}
+    /// {"op": "map_node",      "task": SEL, "point": PARAM}
+    /// {"op": "barrier",       "after": SEL, "before": SEL}
+    /// {"op": "disable"|"enable", "task": SEL}
+    /// {"op": "greedy_rounds", "rounds": PARAM}
+    /// ```
+    ///
+    /// `SEL` is `"heaviest"`, a task name string, `{"name": s}`,
+    /// `{"id": n}`, `{"out": [instr, index]}` or `{"outs": instr}`.
+    /// `PARAM` is a number (literal) or
+    /// `{"hole": name, "choices": [..]}` / `{"hole": name, "points": "compute"}`.
+    pub fn from_json_value(v: &Json) -> Result<MappingProgram> {
+        let arr = v
+            .as_arr()
+            .context("a mapping program must be a JSON array of instructions")?;
+        let mut instrs = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            instrs.push(
+                instr_from_json(item).with_context(|| format!("program instruction {i}"))?,
+            );
+        }
+        let program = MappingProgram { instrs };
+        program.holes()?; // validate hole/selector consistency up front
+        Ok(program)
+    }
+}
+
+/// Resolve a task selector against the current state. Every variant
+/// returns the selected tasks in a deterministic order.
+fn resolve_sel(
+    sel: &TaskSel,
+    state: &MappingState,
+    hw: &Hardware,
+    evals: &Registry,
+    outs: &[Vec<TaskId>],
+    placed: &[TaskId],
+) -> Result<Vec<TaskId>> {
+    match sel {
+        TaskSel::Name(name) => {
+            let matches: Vec<TaskId> = state
+                .graph
+                .iter()
+                .filter(|t| t.name == *name)
+                .map(|t| t.id)
+                .collect();
+            match matches.len() {
+                0 => crate::bail!("no task named '{name}'"),
+                1 => Ok(matches),
+                n => crate::bail!("task name '{name}' is ambiguous ({n} tasks)"),
+            }
+        }
+        TaskSel::Id(raw) => {
+            let id = TaskId(*raw);
+            crate::ensure!(state.graph.contains(id), "task {id} does not exist");
+            Ok(vec![id])
+        }
+        TaskSel::Out { instr, index } => {
+            let o = outs
+                .get(*instr)
+                .with_context(|| format!("instruction {instr} has not been replayed"))?;
+            o.get(*index).copied().map(|t| vec![t]).with_context(|| {
+                format!(
+                    "instruction {instr} produced {} outputs, index {index} is out of range",
+                    o.len()
+                )
+            })
+        }
+        TaskSel::Outs { instr } => outs
+            .get(*instr)
+            .cloned()
+            .with_context(|| format!("instruction {instr} has not been replayed")),
+        TaskSel::Heaviest => {
+            let heaviest = state
+                .graph
+                .iter()
+                .filter(|t| t.enabled && t.kind.is_compute() && !placed.contains(&t.id))
+                .filter_map(|t| {
+                    state
+                        .mapping
+                        .point_of(t.id)
+                        .map(|p| (evals.demand(t, hw.entry(p)).total(), t.id))
+                })
+                .max_by(|(da, ia), (db, ib)| da.total_cmp(db).then(ib.cmp(ia)))
+                .map(|(_, id)| id);
+            match heaviest {
+                Some(id) => Ok(vec![id]),
+                None => crate::bail!("heaviest: no enabled, mapped compute task left to select"),
+            }
+        }
+    }
+}
+
+/// One greedy tiling round: split the most expensive enabled compute task
+/// 2-way and spread the halves over the two least-loaded compute points.
+/// Returns false when no task can be split. (The canonical §5.2 greedy
+/// search step, formerly `dse::search::greedy_round`.)
+fn greedy_round(hw: &Hardware, state: &mut MappingState, evals: &Registry) -> bool {
+    let compute_points = hw.points_of_kind("compute");
+    let heaviest = state
+        .graph
+        .iter()
+        .filter(|t| t.enabled && t.kind.is_compute())
+        .max_by(|a, b| {
+            let da = evals
+                .demand(a, hw.entry(state.mapping.point_of(a.id).unwrap()))
+                .total();
+            let db = evals
+                .demand(b, hw.entry(state.mapping.point_of(b.id).unwrap()))
+                .total();
+            da.total_cmp(&db)
+        })
+        .map(|t| t.id);
+    let Some(task) = heaviest else {
+        return false;
+    };
+    let Ok(tiles) = state.tile_task(task, &[2]) else {
+        return false;
+    };
+    let mut load: Vec<(PointId, usize)> = compute_points
+        .iter()
+        .map(|p| (*p, state.mapping.tasks_on(*p).len()))
+        .collect();
+    load.sort_by_key(|(_, l)| *l);
+    for (tile, (p, _)) in tiles.iter().zip(load.iter()) {
+        state.map_node(*tile, *p).ok();
+    }
+    true
+}
+
+// ======================================================================
+// JSON helpers
+// ======================================================================
+
+fn sel_to_json(sel: &TaskSel) -> Json {
+    match sel {
+        TaskSel::Heaviest => "heaviest".into(),
+        TaskSel::Name(n) => {
+            let mut o = JsonObj::new();
+            o.insert("name", n.as_str().into());
+            Json::Obj(o)
+        }
+        TaskSel::Id(id) => {
+            let mut o = JsonObj::new();
+            o.insert("id", (*id as u64).into());
+            Json::Obj(o)
+        }
+        TaskSel::Out { instr, index } => {
+            let mut o = JsonObj::new();
+            o.insert("out", Json::Arr(vec![(*instr as u64).into(), (*index as u64).into()]));
+            Json::Obj(o)
+        }
+        TaskSel::Outs { instr } => {
+            let mut o = JsonObj::new();
+            o.insert("outs", (*instr as u64).into());
+            Json::Obj(o)
+        }
+    }
+}
+
+fn sel_from_json(v: &Json) -> Result<TaskSel> {
+    if let Some(s) = v.as_str() {
+        return Ok(if s == "heaviest" {
+            TaskSel::Heaviest
+        } else {
+            TaskSel::Name(s.to_string())
+        });
+    }
+    let obj = v.as_obj().context(
+        "task selector must be a string, \"heaviest\", {\"name\"}, {\"id\"}, {\"out\"} or {\"outs\"}",
+    )?;
+    if let Some(n) = obj.get("name").and_then(|x| x.as_str()) {
+        return Ok(TaskSel::Name(n.to_string()));
+    }
+    if let Some(id) = obj.get("id").and_then(|x| x.as_u64()) {
+        return Ok(TaskSel::Id(id as u32));
+    }
+    if let Some(pair) = obj.get("out").and_then(|x| x.as_arr()) {
+        let first = pair.first().and_then(|x| x.as_usize());
+        let second = pair.get(1).and_then(|x| x.as_usize());
+        let (i, j) = match (first, second) {
+            (Some(i), Some(j)) if pair.len() == 2 => (i, j),
+            _ => crate::bail!("\"out\" selector must be [instr, index]"),
+        };
+        return Ok(TaskSel::Out { instr: i, index: j });
+    }
+    if let Some(i) = obj.get("outs").and_then(|x| x.as_usize()) {
+        return Ok(TaskSel::Outs { instr: i });
+    }
+    crate::bail!("unrecognized task selector")
+}
+
+fn param_to_json(p: &Param) -> Json {
+    match p {
+        Param::Lit(v) => (*v as u64).into(),
+        Param::Hole { name, domain } => {
+            let mut o = JsonObj::new();
+            o.insert("hole", name.as_str().into());
+            match domain {
+                ParamDomain::U32s(ch) => o.insert(
+                    "choices",
+                    Json::Arr(ch.iter().map(|c| (*c as u64).into()).collect()),
+                ),
+                ParamDomain::ComputePoints => o.insert("points", "compute".into()),
+            }
+            Json::Obj(o)
+        }
+    }
+}
+
+fn param_from_json(v: &Json) -> Result<Param> {
+    if let Some(n) = v.as_u64() {
+        return Ok(Param::Lit(n as u32));
+    }
+    let obj = v
+        .as_obj()
+        .context("parameter must be a number or {\"hole\": ...}")?;
+    let name = obj
+        .get("hole")
+        .and_then(|x| x.as_str())
+        .context("parameter object needs a \"hole\" name")?
+        .to_string();
+    if let Some(points) = obj.get("points") {
+        crate::ensure!(
+            points.as_str() == Some("compute"),
+            "hole '{name}': only \"points\": \"compute\" is supported"
+        );
+        return Ok(Param::Hole {
+            name,
+            domain: ParamDomain::ComputePoints,
+        });
+    }
+    let choices = obj
+        .get("choices")
+        .and_then(|x| x.as_arr())
+        .with_context(|| format!("hole '{name}' needs \"choices\" or \"points\""))?;
+    let mut ch = Vec::with_capacity(choices.len());
+    for c in choices {
+        ch.push(
+            c.as_u64()
+                .with_context(|| format!("hole '{name}': non-numeric choice"))? as u32,
+        );
+    }
+    Ok(Param::Hole {
+        name,
+        domain: ParamDomain::U32s(ch),
+    })
+}
+
+fn instr_to_json(instr: &Prim) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("op", instr.op_name().into());
+    match instr {
+        Prim::TileTask { task, factor } => {
+            o.insert("task", sel_to_json(task));
+            o.insert("factor", param_to_json(factor));
+        }
+        Prim::SplitEdge { edge, ways } => {
+            o.insert("edge", sel_to_json(edge));
+            o.insert("ways", param_to_json(ways));
+        }
+        Prim::MapNode { task, point } => {
+            o.insert("task", sel_to_json(task));
+            o.insert("point", param_to_json(point));
+        }
+        Prim::Barrier { after, before } => {
+            o.insert("after", sel_to_json(after));
+            o.insert("before", sel_to_json(before));
+        }
+        Prim::Disable { task } | Prim::Enable { task } => {
+            o.insert("task", sel_to_json(task));
+        }
+        Prim::GreedyRounds { rounds } => {
+            o.insert("rounds", param_to_json(rounds));
+        }
+    }
+    Json::Obj(o)
+}
+
+fn instr_from_json(v: &Json) -> Result<Prim> {
+    let obj = v.as_obj().context("instruction must be a JSON object")?;
+    let op = obj
+        .get("op")
+        .and_then(|x| x.as_str())
+        .context("instruction needs an \"op\" field")?;
+    let sel = |field: &str| -> Result<TaskSel> {
+        sel_from_json(
+            obj.get(field)
+                .with_context(|| format!("'{op}' needs a \"{field}\" selector"))?,
+        )
+    };
+    let param = |field: &str| -> Result<Param> {
+        param_from_json(
+            obj.get(field)
+                .with_context(|| format!("'{op}' needs a \"{field}\" parameter"))?,
+        )
+    };
+    match op {
+        "tile_task" => Ok(Prim::TileTask {
+            task: sel("task")?,
+            factor: param("factor")?,
+        }),
+        "split_edge" => Ok(Prim::SplitEdge {
+            edge: sel("edge")?,
+            ways: param("ways")?,
+        }),
+        "map_node" => Ok(Prim::MapNode {
+            task: sel("task")?,
+            point: param("point")?,
+        }),
+        "barrier" => Ok(Prim::Barrier {
+            after: sel("after")?,
+            before: sel("before")?,
+        }),
+        "disable" => Ok(Prim::Disable { task: sel("task")? }),
+        "enable" => Ok(Prim::Enable { task: sel("task")? }),
+        "greedy_rounds" => Ok(Prim::GreedyRounds {
+            rounds: param("rounds")?,
+        }),
+        other => crate::bail!(
+            "unknown program op '{other}' (valid: tile_task, split_edge, map_node, \
+             barrier, disable, enable, greedy_rounds)"
+        ),
+    }
+}
+
+/// The standard placement program: `k` holes, each re-placing the
+/// currently heaviest not-yet-placed compute task onto any compute point.
+/// Pure assignment — plan-safe, so an exploration over its bindings
+/// shares one evaluation setup per topology.
+pub fn placement_program(k: usize) -> MappingProgram {
+    MappingProgram::new(
+        (0..k)
+            .map(|i| Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::point_hole(format!("p{i}")),
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwir::{ComputeAttrs, Coord, Element, MemoryAttrs, SpaceMatrix, SpacePoint};
+    use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
+
+    fn hw(cores: usize) -> Hardware {
+        let mut m = SpaceMatrix::new("chip", vec![cores]);
+        for i in 0..cores {
+            m.set(
+                Coord::new(vec![i as u32]),
+                Element::Point(SpacePoint::compute(
+                    "core",
+                    ComputeAttrs::new((8, 8), 32).with_lmem(MemoryAttrs::new(1 << 20, 512.0, 1)),
+                )),
+            );
+        }
+        Hardware::build(m)
+    }
+
+    /// `n` independent compute tasks with skewed cost, all on core 0.
+    fn base_state(n: usize, hw: &Hardware) -> MappingState {
+        let core0 = hw.points_of_kind("compute")[0];
+        let mut g = TaskGraph::new();
+        for i in 0..n {
+            let mut c = ComputeCost::zero(OpClass::Elementwise);
+            c.vec_flops = 40_000.0 * (1 + i % 4) as f64;
+            g.add(format!("t{i}"), TaskKind::Compute(c));
+        }
+        let mut st = MappingState::new(g);
+        for t in st.graph.ids().collect::<Vec<_>>() {
+            st.map_node(t, core0).unwrap();
+        }
+        st
+    }
+
+    #[test]
+    fn holes_dedup_and_order() {
+        let prog = MappingProgram::new(vec![
+            Prim::MapNode {
+                task: TaskSel::Name("t0".into()),
+                point: Param::point_hole("p"),
+            },
+            Prim::MapNode {
+                task: TaskSel::Name("t1".into()),
+                point: Param::hole("q", &[0, 1, 2]),
+            },
+            Prim::MapNode {
+                task: TaskSel::Name("t2".into()),
+                point: Param::point_hole("p"), // tied to the first hole
+            },
+        ]);
+        let holes = prog.holes().unwrap();
+        assert_eq!(holes.len(), 2);
+        assert_eq!(holes[0].0, "p");
+        assert_eq!(holes[1].0, "q");
+        let resolved = prog.resolved_holes(Some(4)).unwrap();
+        assert_eq!(resolved[0].card, 4);
+        assert_eq!(resolved[1].card, 3);
+        // floating resolution requires explicit domains
+        assert!(prog.resolved_holes(None).is_err());
+    }
+
+    #[test]
+    fn conflicting_hole_domains_rejected() {
+        let prog = MappingProgram::new(vec![
+            Prim::TileTask {
+                task: TaskSel::Name("t0".into()),
+                factor: Param::hole("h", &[2, 4]),
+            },
+            Prim::SplitEdge {
+                edge: TaskSel::Name("e".into()),
+                ways: Param::hole("h", &[3]),
+            },
+        ]);
+        let err = prog.holes().unwrap_err();
+        assert!(format!("{err:#}").contains("two different domains"), "{err:#}");
+    }
+
+    #[test]
+    fn forward_output_reference_rejected() {
+        let prog = MappingProgram::new(vec![Prim::MapNode {
+            task: TaskSel::Outs { instr: 3 },
+            point: Param::Lit(0),
+        }]);
+        assert!(prog.holes().is_err());
+    }
+
+    #[test]
+    fn plan_safety_rules() {
+        // pure assignment with holes: safe
+        assert!(placement_program(3).plan_safe());
+        // hole-free tiling before any hole: safe
+        let prefix_then_holes = MappingProgram::new(vec![
+            Prim::TileTask {
+                task: TaskSel::Name("t0".into()),
+                factor: Param::Lit(2),
+            },
+            Prim::MapNode {
+                task: TaskSel::Outs { instr: 0 },
+                point: Param::point_hole("p"),
+            },
+        ]);
+        assert!(prefix_then_holes.plan_safe());
+        // a hole inside a graph-mutating instruction: unsafe
+        let holey_tile = MappingProgram::new(vec![Prim::GreedyRounds {
+            rounds: Param::hole("r", &[0, 1, 2]),
+        }]);
+        assert!(!holey_tile.plan_safe());
+        // graph mutation after a hole: unsafe
+        let mutate_after_hole = MappingProgram::new(vec![
+            Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::point_hole("p"),
+            },
+            Prim::TileTask {
+                task: TaskSel::Name("t0".into()),
+                factor: Param::Lit(2),
+            },
+        ]);
+        assert!(!mutate_after_hole.plan_safe());
+    }
+
+    #[test]
+    fn replay_places_heaviest_tasks() {
+        let hw = hw(4);
+        let evals = Registry::standard();
+        let mut st = base_state(4, &hw);
+        // t3 is the heaviest (4x), then t2 (3x)
+        let prog = placement_program(2);
+        prog.replay(&mut st, &hw, &evals, &[1, 2]).unwrap();
+        let points = hw.points_of_kind("compute");
+        let t3 = st.graph.iter().find(|t| t.name == "t3").unwrap().id;
+        let t2 = st.graph.iter().find(|t| t.name == "t2").unwrap().id;
+        assert_eq!(st.mapping.point_of(t3), Some(points[1]));
+        assert_eq!(st.mapping.point_of(t2), Some(points[2]));
+    }
+
+    #[test]
+    fn replay_tile_and_spread_via_outputs() {
+        let hw = hw(4);
+        let evals = Registry::standard();
+        let mut st = base_state(1, &hw);
+        let prog = MappingProgram::new(vec![
+            Prim::TileTask {
+                task: TaskSel::Name("t0".into()),
+                factor: Param::Lit(4),
+            },
+            Prim::MapNode {
+                task: TaskSel::Out { instr: 0, index: 2 },
+                point: Param::Lit(3),
+            },
+        ]);
+        prog.replay(&mut st, &hw, &evals, &[]).unwrap();
+        assert_eq!(st.graph.len(), 4);
+        let points = hw.points_of_kind("compute");
+        assert_eq!(st.mapping.tasks_on(points[3]).len(), 1);
+        assert!(st.graph.validate().is_empty());
+    }
+
+    #[test]
+    fn replay_greedy_rounds_matches_manual() {
+        let hw = hw(4);
+        let evals = Registry::standard();
+        let mut by_program = base_state(2, &hw);
+        let prog = MappingProgram::new(vec![Prim::GreedyRounds {
+            rounds: Param::Lit(2),
+        }]);
+        prog.replay(&mut by_program, &hw, &evals, &[]).unwrap();
+
+        let mut manual = base_state(2, &hw);
+        for _ in 0..2 {
+            assert!(greedy_round(&hw, &mut manual, &evals));
+        }
+        assert_eq!(by_program.graph, manual.graph);
+        assert_eq!(by_program.mapping, manual.mapping);
+    }
+
+    #[test]
+    fn replay_errors_carry_instruction_context() {
+        let hw = hw(2);
+        let evals = Registry::standard();
+        let mut st = base_state(2, &hw);
+        let prog = MappingProgram::new(vec![Prim::SplitEdge {
+            edge: TaskSel::Name("t0".into()), // a compute task, not an edge
+            ways: Param::Lit(2),
+        }]);
+        let err = prog.replay(&mut st, &hw, &evals, &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("instruction 0"), "{msg}");
+        assert!(msg.contains("split_edge"), "{msg}");
+        assert!(msg.contains("mapping error"), "{msg}");
+    }
+
+    #[test]
+    fn map_node_rejects_non_compute_targets() {
+        let hw = hw(2);
+        let evals = Registry::standard();
+        let mut g = TaskGraph::new();
+        g.add("s", TaskKind::Storage { bytes: 64 });
+        let mut st = MappingState::new(g);
+        let prog = MappingProgram::new(vec![Prim::MapNode {
+            task: TaskSel::Name("s".into()),
+            point: Param::Lit(0),
+        }]);
+        let err = prog.replay(&mut st, &hw, &evals, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("compute"), "{err:#}");
+    }
+
+    #[test]
+    fn barrier_wires_after_and_before() {
+        let hw = hw(2);
+        let evals = Registry::standard();
+        let mut st = base_state(3, &hw);
+        let prog = MappingProgram::new(vec![Prim::Barrier {
+            after: TaskSel::Name("t0".into()),
+            before: TaskSel::Name("t2".into()),
+        }]);
+        prog.replay(&mut st, &hw, &evals, &[]).unwrap();
+        let t0 = st.graph.iter().find(|t| t.name == "t0").unwrap().id;
+        let t2 = st.graph.iter().find(|t| t.name == "t2").unwrap().id;
+        let syncs: Vec<TaskId> = st
+            .graph
+            .iter()
+            .filter(|t| t.kind.is_sync())
+            .map(|t| t.id)
+            .collect();
+        assert_eq!(syncs.len(), 1); // one occupied point among `after`
+        assert!(st.graph.predecessors(syncs[0]).contains(&t0));
+        assert!(st.graph.successors(syncs[0]).contains(&t2));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let prog = MappingProgram::new(vec![
+            Prim::TileTask {
+                task: TaskSel::Name("attn".into()),
+                factor: Param::hole("f", &[2, 4]),
+            },
+            Prim::SplitEdge {
+                edge: TaskSel::Id(7),
+                ways: Param::Lit(3),
+            },
+            Prim::MapNode {
+                task: TaskSel::Heaviest,
+                point: Param::point_hole("p0"),
+            },
+            Prim::MapNode {
+                task: TaskSel::Out { instr: 0, index: 1 },
+                point: Param::Lit(2),
+            },
+            Prim::Barrier {
+                after: TaskSel::Outs { instr: 0 },
+                before: TaskSel::Name("tail".into()),
+            },
+            Prim::Disable {
+                task: TaskSel::Name("dead".into()),
+            },
+            Prim::Enable {
+                task: TaskSel::Name("dead".into()),
+            },
+            Prim::GreedyRounds {
+                rounds: Param::Lit(2),
+            },
+        ]);
+        let text = prog.to_json().to_string();
+        let back = MappingProgram::from_json(&text).unwrap();
+        assert_eq!(prog, back);
+        // and a task literally named "heaviest" survives the round trip
+        let named = MappingProgram::new(vec![Prim::Disable {
+            task: TaskSel::Name("heaviest".into()),
+        }]);
+        let back = MappingProgram::from_json(&named.to_json().to_string()).unwrap();
+        assert_eq!(named, back);
+    }
+
+    #[test]
+    fn json_errors_are_descriptive() {
+        assert!(MappingProgram::from_json("{}").is_err());
+        let err = MappingProgram::from_json(r#"[{"op": "frobnicate"}]"#).unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"), "{err:#}");
+        let err = MappingProgram::from_json(r#"[{"op": "map_node", "task": "t"}]"#).unwrap_err();
+        assert!(format!("{err:#}").contains("point"), "{err:#}");
+        let holeless = r#"[{"op": "map_node", "task": "t", "point": {"hole": "p"}}]"#;
+        let err = MappingProgram::from_json(holeless).unwrap_err();
+        assert!(format!("{err:#}").contains("choices"), "{err:#}");
+    }
+}

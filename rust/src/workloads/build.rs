@@ -18,7 +18,7 @@ use crate::taskgraph::{ComputeCost, TaskGraph, TaskId, TaskKind};
 use super::transformer::{decode_layer, prefill_layer, LayerOp, LlmConfig};
 
 /// A ready-to-simulate workload.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct Workload {
     pub hw: Hardware,
     pub graph: TaskGraph,

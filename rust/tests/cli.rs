@@ -2,6 +2,9 @@
 //! (Cargo exposes its path via `CARGO_BIN_EXE_mldse`): `--workers 0`
 //! auto-detects, the `MLDSE_WORKERS` environment override is honored, and
 //! invalid values fail with proper error messages naming the source.
+//! Also the three-tier acceptance check: the composed space explored from
+//! the CLI preset and from the shipped JSON space file produce
+//! bit-identical reports at every worker count.
 
 use std::process::Command;
 
@@ -94,6 +97,72 @@ fn explicit_workers_bypasses_a_broken_env_override() {
         "stderr: {}",
         String::from_utf8_lossy(&out.stderr)
     );
+}
+
+/// Run one three-tier exploration and return its JSON report with the
+/// wall-clock-derived fields zeroed (the only legitimately
+/// nondeterministic entries).
+fn three_tier_report(source: &[&str], workers: &str) -> String {
+    let out = mldse()
+        .args([
+            "explore",
+            "--explorer",
+            "anneal-tiered",
+            "--budget",
+            "6",
+            "--json",
+            "--workers",
+            workers,
+        ])
+        .args(source)
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf8 report");
+    // zero the timing fields line-by-line (the report is pretty-printed,
+    // one key per line)
+    stdout
+        .lines()
+        .map(|l| {
+            let t = l.trim_start();
+            if t.starts_with("\"elapsed_secs\"") || t.starts_with("\"evals_per_sec\"") {
+                let indent = &l[..l.len() - t.len()];
+                let comma = if t.ends_with(',') { "," } else { "" };
+                let key = t.split(':').next().unwrap();
+                format!("{indent}{key}: 0{comma}")
+            } else {
+                l.to_string()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn three_tier_preset_and_space_file_agree_across_worker_counts() {
+    let space_file = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/examples/spaces/three_tier_quick.json"
+    );
+    let preset: &[&str] = &["--preset", "three-tier-quick"];
+    let from_file: &[&str] = &["--space", space_file];
+    let golden = three_tier_report(preset, "1");
+    assert!(golden.contains("\"three-tier-quick\""), "{golden}");
+    for (source, workers) in [
+        (preset, "2"),
+        (from_file, "1"),
+        (from_file, "2"),
+    ] {
+        let report = three_tier_report(source, workers);
+        assert_eq!(
+            golden, report,
+            "three-tier report diverged (source {source:?}, workers {workers})"
+        );
+    }
 }
 
 #[test]

@@ -133,6 +133,7 @@ fn explorers_deterministic_across_worker_counts_and_reruns() {
         Box::new(AnnealExplorer {
             seed: 42,
             init_temp: 0.1,
+            tiered: false,
         }),
     ];
     for explorer in &explorers {
@@ -154,6 +155,7 @@ fn placement_space_deterministic_too() {
     let annealer = AnnealExplorer {
         seed: 7,
         init_temp: 0.1,
+        tiered: false,
     };
     let a = run(&space, &annealer, 25, 1, &registry, true);
     let b = run(&space, &annealer, 25, 8, &registry, true);

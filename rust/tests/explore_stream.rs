@@ -3,17 +3,20 @@
 //! * **Determinism** — bit-identical `ExplorationReport` JSON between the
 //!   streaming (persistent worker pool) and batched (one-shot pool per
 //!   batch) evaluation paths, across all four explorers, worker counts
-//!   {1, 2, 8} and two seeds.
+//!   {1, 2, 8} and two seeds — and the same guarantee for a composed
+//!   `NestedSpace` three-tier search (tier-aware annealer included).
 //! * **Topology-keyed setup reuse** — a `PlacementSpace` search builds the
 //!   `RouteTable` exactly once (thread-local build counter) and reports a
-//!   single setup build.
+//!   single setup build; a joint `NestedSpace` search builds the inner
+//!   `EvalPlan` (hardware + `RouteTable`) exactly once per *distinct
+//!   outer candidate*.
 //! * **Panic hardening** — a deliberately panicking objective surfaces as
 //!   a counted failure carrying the candidate label, instead of aborting
 //!   the sweep.
 
 use mldse::dse::explore::{
-    explore, explorer_by_name, placement_demo, Axis, AxisKind, Candidate, Design, DesignSpace,
-    DesignView, ExplorationReport, ExploreOpts, GridExplorer, Makespan, Objective,
+    explore, explorer_by_name, placement_demo, three_tier, Axis, AxisKind, Candidate, Design,
+    DesignSpace, DesignView, ExplorationReport, ExploreOpts, GridExplorer, Makespan, Objective,
 };
 use mldse::eval::Registry;
 use mldse::hwir::{ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint};
@@ -65,6 +68,92 @@ fn determinism_suite_streaming_vs_batched_bit_identical_json() {
             }
         }
     }
+}
+
+#[test]
+fn nested_three_tier_determinism_across_workers_and_paths() {
+    // the composed three-tier space must give bit-identical reports at
+    // any worker count, on both dispatch paths, for a fixed seed —
+    // including the tier-aware annealer, whose outer moves resample the
+    // nested mapping tier
+    let space = three_tier("det-three-tier", true).unwrap();
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    for explorer_name in ["random", "anneal-tiered"] {
+        let explorer = explorer_by_name(explorer_name, 17).unwrap();
+        let mut golden: Option<String> = None;
+        for workers in [1usize, 2, 8] {
+            for streaming in [true, false] {
+                let opts = ExploreOpts {
+                    budget: 8,
+                    workers,
+                    streaming,
+                    ..Default::default()
+                };
+                let r = explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                    .unwrap_or_else(|e| panic!("{explorer_name}/workers {workers}: {e:#}"));
+                assert!(!r.evals.is_empty());
+                let json = report_json(r);
+                match &golden {
+                    None => golden = Some(json),
+                    Some(g) => assert_eq!(
+                        *g, json,
+                        "{explorer_name}: workers={workers} streaming={streaming} \
+                         diverged on the nested space"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_search_builds_one_eval_plan_per_distinct_outer_candidate() {
+    // Acceptance: during a joint three-tier search, the inner EvalPlan
+    // (hardware model + interned RouteTable) is built exactly once per
+    // distinct outer candidate. workers = 1 keeps every evaluation on
+    // this thread so the thread-local RouteTable build counter sees
+    // exactly this search.
+    let space = three_tier("plan-once", true).unwrap();
+    let n_outer = space.outer_digits();
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let opts = ExploreOpts {
+        budget: 12,
+        workers: 1,
+        ..Default::default()
+    };
+    let explorer = explorer_by_name("random", 23).unwrap();
+    let before = mldse::sim::links::route_builds_this_thread();
+    let r = explore(
+        &space,
+        &objectives,
+        explorer.as_ref(),
+        &Registry::standard(),
+        &opts,
+    )
+    .unwrap();
+    let route_builds = mldse::sim::links::route_builds_this_thread() - before;
+
+    // distinct outer prefixes among the logged evaluations
+    let mut outer_points: Vec<Vec<u32>> = r
+        .evals
+        .iter()
+        .map(|e| e.candidate.0[..n_outer].to_vec())
+        .collect();
+    outer_points.sort();
+    outer_points.dedup();
+    let distinct = outer_points.len();
+    assert!(distinct >= 2, "seed must visit several outer candidates");
+    assert_eq!(
+        route_builds as usize, distinct,
+        "one RouteTable per distinct outer candidate"
+    );
+    assert_eq!(r.setup_builds, distinct, "one EvalPlan per distinct outer candidate");
+    assert_eq!(
+        r.setup_hits,
+        r.sim_calls - distinct,
+        "every other simulation rebinds against a cached plan"
+    );
 }
 
 #[test]
