@@ -4,6 +4,18 @@
 //! independent of the worker count — candidate batches are evaluated in
 //! input order and every decision depends only on returned scores.
 //!
+//! ## The step protocol
+//!
+//! Explorers are **stateless strategy objects** driven by an external
+//! loop: [`Explorer::fresh`] builds a serializable [`ExplorerState`],
+//! [`Explorer::propose`] emits the next candidate batch against that
+//! state, and [`Explorer::observe`] folds the evaluated scores back in
+//! (returning the number of accepted moves). The driving loop lives in
+//! [`ExplorationSession`](super::ExplorationSession), which may
+//! checkpoint the state between steps — every explorer externalizes its
+//! cursor, RNG stream, temperature schedule and current-best into the
+//! state, so a restored session continues the search bit-for-bit.
+//!
 //! For composed spaces ([`NestedSpace`](super::compose::NestedSpace),
 //! [`ProductSpace`](super::compose::ProductSpace)) the annealer supports
 //! **tier-aware perturbation** ([`AnnealExplorer::tiered`], CLI name
@@ -14,17 +26,202 @@
 //! move would anneal against the wrong landscape.
 
 use crate::util::error::Result;
+use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Pcg;
 
-use super::space::AxisKind;
-use super::Engine;
+use super::session::{hex_f64, hex_u64, parse_hex_f64, parse_hex_u64};
+use super::space::{AxisKind, Candidate, DesignSpace};
 
-/// A search strategy: propose candidates through the engine until the
-/// evaluation budget is exhausted.
+/// Per-step budget view handed to [`Explorer::propose`] and
+/// [`Explorer::observe`].
+#[derive(Debug, Clone, Copy)]
+pub struct StepLimits {
+    /// Evaluations still allowed by the budget (after logging, for
+    /// `observe`).
+    pub remaining: usize,
+    /// Maximum candidates per proposal batch.
+    pub batch: usize,
+}
+
+/// Which stage of its loop a stateful explorer is in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExplorerPhase {
+    /// Propose/score a starting point (hill restart, annealing baseline).
+    Start,
+    /// Regular stepping (grid/random batches, climbing, annealing moves).
+    Step,
+}
+
+impl ExplorerPhase {
+    fn as_str(self) -> &'static str {
+        match self {
+            ExplorerPhase::Start => "start",
+            ExplorerPhase::Step => "step",
+        }
+    }
+}
+
+/// The externalized, serializable state of one exploration strategy: a
+/// tagged union of every field the built-in explorers need. Unused fields
+/// stay at their defaults and round-trip through JSON unchanged.
+///
+/// All 64-bit quantities (cursors, RNG streams) and scores serialize as
+/// fixed-width hex strings — the JSON layer stores numbers as `f64`,
+/// which would silently round `u64`s above 2^53 and collapse
+/// `INFINITY` (a legitimate failed-candidate score) to `null`.
+#[derive(Debug, Clone)]
+pub struct ExplorerState {
+    /// Name of the explorer this state belongs to (checked on resume).
+    pub explorer: String,
+    pub phase: ExplorerPhase,
+    /// Grid: next enumeration index. Anneal: next move-iteration index.
+    pub cursor: u64,
+    /// Anneal: total move iterations (fixes the temperature schedule).
+    pub moves: u64,
+    /// Anneal: iteration index of the in-flight proposal (consumed by
+    /// `observe` to recompute its temperature).
+    pub pending: u64,
+    /// The strategy's RNG stream (`None` for deterministic enumeration).
+    pub rng: Option<Pcg>,
+    /// Local searchers: the current position.
+    pub current: Option<Candidate>,
+    /// Local searchers: score of `current` (first objective).
+    pub current_score: f64,
+    /// Hill: next start point is the first of the run.
+    pub first: bool,
+    /// The strategy finished (exhausted enumeration, hit its move limit,
+    /// or reached a terminal local optimum).
+    pub done: bool,
+}
+
+impl ExplorerState {
+    /// A blank state tagged with an explorer name.
+    pub fn blank(explorer: &str) -> ExplorerState {
+        ExplorerState {
+            explorer: explorer.to_string(),
+            phase: ExplorerPhase::Step,
+            cursor: 0,
+            moves: 0,
+            pending: 0,
+            rng: None,
+            current: None,
+            current_score: f64::INFINITY,
+            first: true,
+            done: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("explorer", self.explorer.as_str().into());
+        o.insert("phase", self.phase.as_str().into());
+        o.insert("cursor", hex_u64(self.cursor));
+        o.insert("moves", hex_u64(self.moves));
+        o.insert("pending", hex_u64(self.pending));
+        match &self.rng {
+            Some(rng) => {
+                let (state, inc) = rng.to_parts();
+                let mut r = JsonObj::new();
+                r.insert("state", hex_u64(state));
+                r.insert("inc", hex_u64(inc));
+                o.insert("rng", Json::Obj(r));
+            }
+            None => o.insert("rng", Json::Null),
+        }
+        match &self.current {
+            Some(c) => o.insert(
+                "current",
+                Json::Arr(c.0.iter().map(|d| (*d as u64).into()).collect()),
+            ),
+            None => o.insert("current", Json::Null),
+        }
+        o.insert("current_score", hex_f64(self.current_score));
+        o.insert("first", self.first.into());
+        o.insert("done", self.done.into());
+        Json::Obj(o)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ExplorerState> {
+        let explorer = doc
+            .get("explorer")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| crate::format_err!("explorer state: missing \"explorer\" name"))?
+            .to_string();
+        let phase = match doc.get("phase").and_then(|v| v.as_str()) {
+            Some("start") => ExplorerPhase::Start,
+            Some("step") => ExplorerPhase::Step,
+            other => crate::bail!(
+                "explorer state: invalid \"phase\" {other:?} (want \"start\" or \"step\")"
+            ),
+        };
+        let rng = match doc.get("rng") {
+            None | Some(Json::Null) => None,
+            Some(r) => Some(Pcg::from_parts(
+                parse_hex_u64(r.get("state"), "explorer state: rng.state")?,
+                parse_hex_u64(r.get("inc"), "explorer state: rng.inc")?,
+            )),
+        };
+        let current = match doc.get("current") {
+            None | Some(Json::Null) => None,
+            Some(c) => {
+                let arr = c
+                    .as_arr()
+                    .ok_or_else(|| crate::format_err!("explorer state: \"current\" must be an array"))?;
+                let mut digits = Vec::with_capacity(arr.len());
+                for d in arr {
+                    digits.push(d.as_u64().ok_or_else(|| {
+                        crate::format_err!("explorer state: non-integer candidate digit")
+                    })? as u32);
+                }
+                Some(Candidate(digits))
+            }
+        };
+        Ok(ExplorerState {
+            explorer,
+            phase,
+            cursor: parse_hex_u64(doc.get("cursor"), "explorer state: cursor")?,
+            moves: parse_hex_u64(doc.get("moves"), "explorer state: moves")?,
+            pending: parse_hex_u64(doc.get("pending"), "explorer state: pending")?,
+            rng,
+            current,
+            current_score: parse_hex_f64(doc.get("current_score"), "explorer state: current_score")?,
+            first: doc.get("first").and_then(|v| v.as_bool()).unwrap_or(true),
+            done: doc.get("done").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// A search strategy, externalized as a step protocol: `fresh` state →
+/// repeated `propose`/`observe` rounds driven by an
+/// [`ExplorationSession`](super::ExplorationSession) until the budget is
+/// exhausted or `propose` returns an empty batch.
 pub trait Explorer {
     fn name(&self) -> &str;
 
-    fn run(&self, engine: &mut Engine) -> Result<()>;
+    /// A fresh state for a new exploration of `space`.
+    fn fresh(&self, space: &dyn DesignSpace) -> ExplorerState;
+
+    /// Propose the next candidate batch. An empty batch means the
+    /// strategy is finished (`state.done` is set).
+    fn propose(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        limits: &StepLimits,
+    ) -> Vec<Candidate>;
+
+    /// Observe the evaluated prefix of the last proposal (the engine may
+    /// truncate a batch to the remaining budget) and its scores; returns
+    /// the number of accepted moves. `limits.remaining` reflects the
+    /// budget *after* the batch was logged.
+    fn observe(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        batch: &[Candidate],
+        scores: &[Vec<f64>],
+        limits: &StepLimits,
+    ) -> usize;
 }
 
 /// Exhaustive enumeration in lexicographic candidate order.
@@ -36,20 +233,38 @@ impl Explorer for GridExplorer {
         "grid"
     }
 
-    fn run(&self, engine: &mut Engine) -> Result<()> {
-        let space = engine.space();
+    fn fresh(&self, _space: &dyn DesignSpace) -> ExplorerState {
+        ExplorerState::blank(self.name())
+    }
+
+    fn propose(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        limits: &StepLimits,
+    ) -> Vec<Candidate> {
         let size = space.size();
-        let chunk = engine.opts().batch.max(1);
-        let mut i = 0u64;
-        while i < size && engine.remaining() > 0 {
-            let mut batch = Vec::with_capacity(chunk);
-            while i < size && batch.len() < chunk {
-                batch.push(space.nth(i));
-                i += 1;
-            }
-            engine.eval_batch(&batch);
+        let chunk = limits.batch.max(1);
+        let mut batch = Vec::with_capacity(chunk.min(size as usize));
+        while st.cursor < size && batch.len() < chunk {
+            batch.push(space.nth(st.cursor));
+            st.cursor += 1;
         }
-        Ok(())
+        if batch.is_empty() {
+            st.done = true;
+        }
+        batch
+    }
+
+    fn observe(
+        &self,
+        _st: &mut ExplorerState,
+        _space: &dyn DesignSpace,
+        _batch: &[Candidate],
+        _scores: &[Vec<f64>],
+        _limits: &StepLimits,
+    ) -> usize {
+        0
     }
 }
 
@@ -64,20 +279,37 @@ impl Explorer for RandomExplorer {
         "random"
     }
 
-    fn run(&self, engine: &mut Engine) -> Result<()> {
-        let space = engine.space();
+    fn fresh(&self, space: &dyn DesignSpace) -> ExplorerState {
+        let mut st = ExplorerState::blank(self.name());
+        st.rng = Some(Pcg::new(self.seed));
+        st.done = space.size() == 0;
+        st
+    }
+
+    fn propose(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        limits: &StepLimits,
+    ) -> Vec<Candidate> {
+        if st.done {
+            return Vec::new();
+        }
         let size = space.size();
-        if size == 0 {
-            return Ok(());
-        }
-        let chunk = engine.opts().batch.max(1);
-        let mut rng = Pcg::new(self.seed);
-        while engine.remaining() > 0 {
-            let k = engine.remaining().min(chunk);
-            let batch: Vec<_> = (0..k).map(|_| space.nth(rng.below(size))).collect();
-            engine.eval_batch(&batch);
-        }
-        Ok(())
+        let k = limits.remaining.min(limits.batch.max(1));
+        let rng = st.rng.as_mut().expect("random explorer state carries an RNG");
+        (0..k).map(|_| space.nth(rng.below(size))).collect()
+    }
+
+    fn observe(
+        &self,
+        _st: &mut ExplorerState,
+        _space: &dyn DesignSpace,
+        _batch: &[Candidate],
+        _scores: &[Vec<f64>],
+        _limits: &StepLimits,
+    ) -> usize {
+        0
     }
 }
 
@@ -110,37 +342,65 @@ impl Explorer for HillClimbExplorer {
         "hill"
     }
 
-    fn run(&self, engine: &mut Engine) -> Result<()> {
-        let space = engine.space();
-        let size = space.size();
-        if size == 0 {
-            return Ok(());
+    fn fresh(&self, space: &dyn DesignSpace) -> ExplorerState {
+        let mut st = ExplorerState::blank(self.name());
+        st.rng = Some(Pcg::new(self.seed));
+        st.phase = ExplorerPhase::Start;
+        st.done = space.size() == 0;
+        st
+    }
+
+    fn propose(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        limits: &StepLimits,
+    ) -> Vec<Candidate> {
+        if st.done {
+            return Vec::new();
         }
-        let mut rng = Pcg::new(self.seed);
-        let mut first = true;
-        while engine.remaining() > 0 {
-            let start = if first && self.from_initial {
+        if st.phase == ExplorerPhase::Start {
+            let start = if st.first && self.from_initial {
                 space.initial()
             } else {
-                space.nth(rng.below(size))
+                let rng = st.rng.as_mut().expect("hill explorer state carries an RNG");
+                space.nth(rng.below(space.size()))
             };
-            first = false;
-            let Some(scores) = engine.eval_one(&start) else {
-                break;
-            };
-            let mut current = start;
-            let mut current_score = scores[0];
-            loop {
-                if engine.remaining() == 0 {
-                    break;
-                }
-                let neighbors = space.neighbors(&current);
-                if neighbors.is_empty() {
-                    break;
-                }
-                let scores = engine.eval_batch(&neighbors);
+            st.first = false;
+            return vec![start];
+        }
+        let current = st.current.as_ref().expect("climb phase has a current point");
+        let neighbors = space.neighbors(current);
+        if neighbors.is_empty() {
+            if self.restarts {
+                // exhausted neighborhood: restart in the same step
+                st.phase = ExplorerPhase::Start;
+                return self.propose(st, space, limits);
+            }
+            st.done = true;
+            return Vec::new();
+        }
+        neighbors
+    }
+
+    fn observe(
+        &self,
+        st: &mut ExplorerState,
+        _space: &dyn DesignSpace,
+        batch: &[Candidate],
+        scores: &[Vec<f64>],
+        _limits: &StepLimits,
+    ) -> usize {
+        match st.phase {
+            ExplorerPhase::Start => {
+                st.current = Some(batch[0].clone());
+                st.current_score = scores[0][0];
+                st.phase = ExplorerPhase::Step;
+                0
+            }
+            ExplorerPhase::Step => {
                 let mut best: Option<usize> = None;
-                let mut best_score = current_score;
+                let mut best_score = st.current_score;
                 for (i, s) in scores.iter().enumerate() {
                     if s[0] < best_score {
                         best_score = s[0];
@@ -149,18 +409,22 @@ impl Explorer for HillClimbExplorer {
                 }
                 match best {
                     Some(i) => {
-                        current = neighbors[i].clone();
-                        current_score = best_score;
-                        engine.moves_accepted += 1;
+                        st.current = Some(batch[i].clone());
+                        st.current_score = best_score;
+                        1
                     }
-                    None => break,
+                    None => {
+                        // local optimum
+                        if self.restarts {
+                            st.phase = ExplorerPhase::Start;
+                        } else {
+                            st.done = true;
+                        }
+                        0
+                    }
                 }
             }
-            if !self.restarts {
-                break;
-            }
         }
-        Ok(())
     }
 }
 
@@ -197,34 +461,40 @@ impl Explorer for AnnealExplorer {
         }
     }
 
-    fn run(&self, engine: &mut Engine) -> Result<()> {
-        let space = engine.space();
-        if space.size() == 0 {
-            return Ok(());
+    fn fresh(&self, space: &dyn DesignSpace) -> ExplorerState {
+        let mut st = ExplorerState::blank(self.name());
+        st.rng = Some(Pcg::new(self.seed));
+        st.phase = ExplorerPhase::Start;
+        st.done = space.size() == 0;
+        st
+    }
+
+    fn propose(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        _limits: &StepLimits,
+    ) -> Vec<Candidate> {
+        if st.done {
+            return Vec::new();
         }
-        let mut rng = Pcg::new(self.seed);
-        // Always score the starting point, even in degenerate spaces with
-        // no axes — callers driving PlacementSpace directly rely on the
-        // baseline appearing in the log.
-        let Some(scores) = engine.eval_one(&space.initial()) else {
-            return Ok(());
-        };
+        if st.phase == ExplorerPhase::Start {
+            // Always score the starting point, even in degenerate spaces
+            // with no axes — callers driving PlacementSpace directly rely
+            // on the baseline appearing in the log.
+            return vec![space.initial()];
+        }
         let cards: Vec<usize> = space.axes().iter().map(|a| a.len()).collect();
         let kinds: Vec<AxisKind> = space.axes().iter().map(|a| a.kind).collect();
-        if cards.is_empty() {
-            return Ok(());
-        }
-        let mut current = space.initial();
-        let mut current_score = scores[0];
-        let moves = engine.remaining();
-        if moves == 0 {
-            return Ok(());
-        }
-        for i in 0..moves {
-            if engine.remaining() == 0 {
-                break;
-            }
-            let temp = self.init_temp * current_score * (1.0 - i as f64 / moves as f64) + 1e-9;
+        // Iterate the move schedule until a proposal materializes: a
+        // skipped iteration (degenerate axis, no-op value) advances the
+        // cursor and the RNG stream exactly like the original loop, but
+        // evaluates nothing.
+        while st.cursor < st.moves {
+            let i = st.cursor;
+            st.cursor += 1;
+            let rng = st.rng.as_mut().expect("anneal explorer state carries an RNG");
+            let current = st.current.as_ref().expect("step phase has a current point");
             let axis = rng.index(cards.len());
             if cards[axis] <= 1 {
                 continue;
@@ -245,17 +515,59 @@ impl Explorer for AnnealExplorer {
                     }
                 }
             }
-            let Some(scores) = engine.eval_one(&cand) else {
-                break;
-            };
-            let m = scores[0];
-            if m <= current_score || rng.chance(((current_score - m) / temp).exp()) {
-                current = cand;
-                current_score = m;
-                engine.moves_accepted += 1;
+            st.pending = i;
+            return vec![cand];
+        }
+        st.done = true;
+        Vec::new()
+    }
+
+    fn observe(
+        &self,
+        st: &mut ExplorerState,
+        space: &dyn DesignSpace,
+        batch: &[Candidate],
+        scores: &[Vec<f64>],
+        limits: &StepLimits,
+    ) -> usize {
+        match st.phase {
+            ExplorerPhase::Start => {
+                st.current = Some(batch[0].clone());
+                st.current_score = scores[0][0];
+                if space.axes().is_empty() {
+                    st.done = true;
+                    return 0;
+                }
+                // The move schedule spans whatever budget remains after
+                // the baseline evaluation.
+                st.moves = limits.remaining as u64;
+                if st.moves == 0 {
+                    st.done = true;
+                    return 0;
+                }
+                st.cursor = 0;
+                st.phase = ExplorerPhase::Step;
+                0
+            }
+            ExplorerPhase::Step => {
+                let m = scores[0][0];
+                let temp = self.init_temp
+                    * st.current_score
+                    * (1.0 - st.pending as f64 / st.moves as f64)
+                    + 1e-9;
+                let accept = m <= st.current_score || {
+                    let rng = st.rng.as_mut().expect("anneal explorer state carries an RNG");
+                    rng.chance(((st.current_score - m) / temp).exp())
+                };
+                if accept {
+                    st.current = Some(batch[0].clone());
+                    st.current_score = m;
+                    1
+                } else {
+                    0
+                }
             }
         }
-        Ok(())
     }
 }
 
@@ -280,5 +592,128 @@ pub fn explorer_by_name(name: &str, seed: u64) -> Result<Box<dyn Explorer>> {
         other => crate::bail!(
             "unknown explorer '{other}' (valid: grid, random, hill, anneal, anneal-tiered)"
         ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::explore::space::{Axis, AxisKind};
+
+    struct TinySpace {
+        axes: Vec<Axis>,
+    }
+
+    impl DesignSpace for TinySpace {
+        fn name(&self) -> &str {
+            "tiny"
+        }
+        fn axes(&self) -> &[Axis] {
+            &self.axes
+        }
+        fn materialize(
+            &self,
+            _c: &Candidate,
+        ) -> crate::util::error::Result<super::super::space::Design> {
+            crate::bail!("state tests never materialize")
+        }
+    }
+
+    fn tiny() -> TinySpace {
+        TinySpace {
+            axes: vec![
+                Axis::count("a", AxisKind::HwParam, 3),
+                Axis::count("b", AxisKind::Mapping, 4),
+            ],
+        }
+    }
+
+    #[test]
+    fn state_json_roundtrips_bit_exactly() {
+        let space = tiny();
+        let annealer = AnnealExplorer {
+            seed: 99,
+            ..Default::default()
+        };
+        let mut st = annealer.fresh(&space);
+        // advance the RNG and fill every field with non-defaults
+        st.rng.as_mut().unwrap().next_u64();
+        st.phase = ExplorerPhase::Step;
+        st.cursor = u64::MAX - 3; // above 2^53: must survive the JSON layer
+        st.moves = u64::MAX;
+        st.pending = 41;
+        st.current = Some(Candidate(vec![2, 3]));
+        st.current_score = f64::INFINITY; // failed-candidate score: must survive too
+        st.first = false;
+        let text = st.to_json().to_string();
+        let back = ExplorerState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.explorer, "anneal");
+        assert_eq!(back.phase, ExplorerPhase::Step);
+        assert_eq!(back.cursor, u64::MAX - 3);
+        assert_eq!(back.moves, u64::MAX);
+        assert_eq!(back.pending, 41);
+        assert_eq!(back.current.as_ref().unwrap().0, vec![2, 3]);
+        assert_eq!(back.current_score.to_bits(), f64::INFINITY.to_bits());
+        assert!(!back.first);
+        assert!(!back.done);
+        // the restored RNG continues the original stream
+        let mut a = st.rng.clone().unwrap();
+        let mut b = back.rng.unwrap();
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_json_rejects_garbage() {
+        assert!(ExplorerState::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad_phase = r#"{"explorer": "grid", "phase": "sideways", "cursor": "0",
+                            "moves": "0", "pending": "0", "current_score": "0"}"#;
+        assert!(ExplorerState::from_json(&Json::parse(bad_phase).unwrap()).is_err());
+        let bad_hex = r#"{"explorer": "grid", "phase": "step", "cursor": "xyz",
+                          "moves": "0", "pending": "0", "current_score": "0"}"#;
+        let err = ExplorerState::from_json(&Json::parse(bad_hex).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("cursor"), "{err:#}");
+    }
+
+    #[test]
+    fn grid_proposes_lexicographic_chunks() {
+        let space = tiny();
+        let g = GridExplorer;
+        let mut st = g.fresh(&space);
+        let limits = StepLimits {
+            remaining: 100,
+            batch: 5,
+        };
+        let b1 = g.propose(&mut st, &space, &limits);
+        assert_eq!(b1.len(), 5);
+        assert_eq!(b1[0].0, vec![0, 0]);
+        assert_eq!(b1[4].0, vec![1, 0]);
+        let b2 = g.propose(&mut st, &space, &limits);
+        assert_eq!(b2.len(), 5);
+        let b3 = g.propose(&mut st, &space, &limits);
+        assert_eq!(b3.len(), 2); // 12 total
+        let b4 = g.propose(&mut st, &space, &limits);
+        assert!(b4.is_empty());
+        assert!(st.done);
+    }
+
+    #[test]
+    fn random_respects_remaining_budget() {
+        let space = tiny();
+        let r = RandomExplorer { seed: 7 };
+        let mut st = r.fresh(&space);
+        let b = r.propose(
+            &mut st,
+            &space,
+            &StepLimits {
+                remaining: 3,
+                batch: 64,
+            },
+        );
+        assert_eq!(b.len(), 3);
+        for c in &b {
+            assert!(space.in_bounds(c));
+        }
     }
 }

@@ -17,9 +17,20 @@
 //!   EDP, area-constrained makespan, manufacturing cost) evaluated from
 //!   one simulation per candidate.
 //! * [`explorers`] — [`Explorer`]: exhaustive grid, seeded random,
-//!   hill-climbing and simulated annealing (optionally tier-aware).
+//!   hill-climbing and simulated annealing (optionally tier-aware), all
+//!   externalized as a step protocol (`fresh`/`propose`/`observe`) over a
+//!   serializable [`ExplorerState`].
+//! * [`session`] — [`ExplorationSession`]: the resumable state machine
+//!   driving one explorer step at a time, checkpointable between steps
+//!   ([`Checkpoint`], schema-versioned JSON); resumed runs are
+//!   bit-identical to uninterrupted ones.
 //! * [`report`] — [`ExplorationReport`]: best candidate, Pareto front,
 //!   full evaluation log and throughput counters, as tables or JSON.
+//!
+//! Concurrent sessions (the [`crate::serve`] daemon's jobs) can join a
+//! process-wide [`SharedCaches`] store so structurally identical spaces
+//! build each topology's [`EvalPlan`] once and share memoized scores —
+//! per-job reports stay deterministic regardless of cross-job timing.
 //!
 //! ## Evaluation pipeline
 //!
@@ -45,6 +56,7 @@ pub mod explorers;
 pub mod objective;
 pub mod program;
 pub mod report;
+pub mod session;
 pub mod space;
 
 pub use compose::{
@@ -52,11 +64,13 @@ pub use compose::{
     InnerFactory, NestedSpace, ProductSpace,
 };
 pub use explorers::{
-    explorer_by_name, AnnealExplorer, Explorer, GridExplorer, HillClimbExplorer, RandomExplorer,
+    explorer_by_name, AnnealExplorer, Explorer, ExplorerPhase, ExplorerState, GridExplorer,
+    HillClimbExplorer, RandomExplorer, StepLimits,
 };
 pub use objective::{AreaConstrainedMakespan, CostUsd, Edp, Makespan, Objective};
 pub use program::ProgramSpace;
-pub use report::{Evaluation, ExplorationReport};
+pub use report::{Evaluation, ExplorationReport, REPORT_SCHEMA_VERSION};
+pub use session::{Checkpoint, ExplorationSession, CHECKPOINT_SCHEMA_VERSION};
 pub use space::{
     placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Binding, Candidate, Design,
     DesignSpace, DesignView, PackagingSpace, ParamSpace, PlacementSpace,
@@ -131,24 +145,100 @@ pub struct EvalPlan {
 
 type PlanResult = std::result::Result<Arc<EvalPlan>, String>;
 
-/// Exactly-once, topology-keyed plan cache shared by all workers. Each
-/// key's plan is built by the first worker to observe it (others block on
-/// the cell), so the build counter is deterministic: one build per
-/// distinct key, at any worker count.
+/// Shared-memo entry: the objective vector (INFINITY-filled on failure),
+/// the raw error message, and whether a usable plan backed the
+/// evaluation — everything a consuming job needs to replicate the exact
+/// counters a standalone run would have produced.
+#[derive(Clone)]
+struct MemoEntry {
+    values: Vec<f64>,
+    error: Option<String>,
+    plan_ok: bool,
+}
+
+/// Process-wide caches shared by concurrent exploration sessions (the
+/// [`crate::serve`] daemon's jobs): topology-keyed [`EvalPlan`]s and
+/// memoized objective vectors, both namespaced by the owning space's
+/// [`DesignSpace::fingerprint`] (and, for the memo, the objective set),
+/// so only structurally identical explorations share.
+///
+/// Sharing never changes results or per-job counters — scores are
+/// deterministic and served entries are accounted exactly as if the job
+/// had simulated them — it only removes duplicated physical work, which
+/// the [`SharedCaches::plan_builds`]/[`SharedCaches::plan_hits`]
+/// counters expose.
+pub struct SharedCaches {
+    plans: Mutex<HashMap<(u64, Vec<u32>), Arc<OnceLock<PlanResult>>>>,
+    physical_builds: AtomicUsize,
+    physical_hits: AtomicUsize,
+    next_plan_id: AtomicU64,
+    memo: Mutex<HashMap<(u64, String, Vec<u32>), MemoEntry>>,
+}
+
+impl SharedCaches {
+    pub fn new() -> SharedCaches {
+        SharedCaches {
+            plans: Mutex::new(HashMap::new()),
+            physical_builds: AtomicUsize::new(0),
+            physical_hits: AtomicUsize::new(0),
+            next_plan_id: AtomicU64::new(0),
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Evaluation plans physically built across all joined sessions.
+    pub fn plan_builds(&self) -> usize {
+        self.physical_builds.load(Ordering::Relaxed)
+    }
+
+    /// Plan acquisitions served without building, across all sessions.
+    pub fn plan_hits(&self) -> usize {
+        self.physical_hits.load(Ordering::Relaxed)
+    }
+
+    /// Memoized objective vectors currently stored.
+    pub fn memo_len(&self) -> usize {
+        self.memo.lock().expect("shared memo poisoned").len()
+    }
+}
+
+impl Default for SharedCaches {
+    fn default() -> Self {
+        SharedCaches::new()
+    }
+}
+
+/// Exactly-once, topology-keyed plan cache shared by all workers of one
+/// session. Each key's plan is built by the first worker to observe it
+/// (others block on the cell). The `builds`/`hits` counters are
+/// *logical* — deterministic per job at any worker count, with or
+/// without a [`SharedCaches`] store, and across checkpoint/resume: a
+/// job's first acquisition of a key counts as its build (even when the
+/// plan physically came from another job or predates a resume), every
+/// later successful acquisition as a hit.
 struct SetupCache {
     cells: Mutex<HashMap<Vec<u32>, Arc<OnceLock<PlanResult>>>>,
+    /// Keys this session has already accounted (logical builds/hits).
+    seen: Mutex<HashSet<Vec<u32>>>,
+    /// Keys a resumed checkpoint had accounted before the snapshot:
+    /// their first re-acquisition this run rebuilds physically but
+    /// re-counts as a hit, matching the uninterrupted run it replays.
+    prebuilt: Mutex<HashSet<Vec<u32>>>,
+    /// Process-wide plan store + this space's fingerprint, when the
+    /// session joined a [`SharedCaches`].
+    shared: Option<(Arc<SharedCaches>, u64)>,
     builds: AtomicUsize,
-    /// Successful acquisitions of an already-built plan. Which worker
-    /// performs a build may race, but the totals are deterministic:
-    /// `hits = successful acquisitions - successful builds`.
     hits: AtomicUsize,
     next_id: AtomicU64,
 }
 
 impl SetupCache {
-    fn new() -> SetupCache {
+    fn new(shared: Option<(Arc<SharedCaches>, u64)>) -> SetupCache {
         SetupCache {
             cells: Mutex::new(HashMap::new()),
+            seen: Mutex::new(HashSet::new()),
+            prebuilt: Mutex::new(HashSet::new()),
+            shared,
             builds: AtomicUsize::new(0),
             hits: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
@@ -156,12 +246,14 @@ impl SetupCache {
     }
 
     /// Materialize `c` and split it into a shareable plan + its binding.
+    /// Does *not* touch the logical counters — accounting lives in
+    /// [`SetupCache::account`] (keyed path) or with the caller
+    /// (ephemeral path).
     fn build(
         &self,
         space: &dyn DesignSpace,
         c: &Candidate,
     ) -> std::result::Result<(Arc<EvalPlan>, Binding), String> {
-        self.builds.fetch_add(1, Ordering::Relaxed);
         let d = space.materialize(c).map_err(|e| format!("{e:#}"))?;
         let routes = Arc::new(RouteTable::from_mapping(
             &d.workload.hw,
@@ -173,7 +265,13 @@ impl SetupCache {
             area_mm2,
             cost_usd,
         } = d;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        // Plan ids key the simulator sessions' cross-candidate demand
+        // caches, so they must be unique across every plan a session
+        // might see — allocate from the process-wide store when shared.
+        let id = match &self.shared {
+            Some((store, _)) => store.next_plan_id.fetch_add(1, Ordering::Relaxed) + 1,
+            None => self.next_id.fetch_add(1, Ordering::Relaxed) + 1,
+        };
         let plan = Arc::new(EvalPlan {
             hw: Arc::new(workload.hw),
             graph: Arc::new(workload.graph),
@@ -191,29 +289,92 @@ impl SetupCache {
     }
 
     /// The cached plan for `key`, built exactly once from `c` (the first
-    /// candidate observed with that key). Returns the representative's
-    /// binding when this call did the build, `None` on a cache hit.
+    /// candidate observed with that key — process-wide when shared).
+    /// Returns the representative's binding when this call did the
+    /// build, `None` on a cache hit. Logical accounting happens here.
     fn plan_for(
         &self,
         space: &dyn DesignSpace,
         key: Vec<u32>,
         c: &Candidate,
     ) -> (PlanResult, Option<Binding>) {
-        let cell = {
-            let mut cells = self.cells.lock().expect("setup cache poisoned");
-            Arc::clone(cells.entry(key).or_default())
+        let cell = match &self.shared {
+            Some((store, fp)) => {
+                let mut cells = store.plans.lock().expect("shared plan store poisoned");
+                Arc::clone(cells.entry((*fp, key.clone())).or_default())
+            }
+            None => {
+                let mut cells = self.cells.lock().expect("setup cache poisoned");
+                Arc::clone(cells.entry(key.clone()).or_default())
+            }
         };
         let mut rep: Option<Binding> = None;
+        let mut built_here = false;
         let res = cell
-            .get_or_init(|| match self.build(space, c) {
-                Ok((plan, binding)) => {
-                    rep = Some(binding);
-                    Ok(plan)
+            .get_or_init(|| {
+                built_here = true;
+                match self.build(space, c) {
+                    Ok((plan, binding)) => {
+                        rep = Some(binding);
+                        Ok(plan)
+                    }
+                    Err(e) => Err(e),
                 }
-                Err(e) => Err(e),
             })
             .clone();
+        if let Some((store, _)) = &self.shared {
+            if built_here {
+                store.physical_builds.fetch_add(1, Ordering::Relaxed);
+            } else if res.is_ok() {
+                store.physical_hits.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.account(&key, res.is_ok());
         (res, rep)
+    }
+
+    /// Logical accounting for one plan acquisition of `key`: the
+    /// session's first acquisition counts as its build — unless a
+    /// resumed checkpoint already accounted the key, in which case it
+    /// re-counts as a hit — and every later acquisition of a usable plan
+    /// counts as a hit (failed plans propagate their error uncounted).
+    fn account(&self, key: &[u32], plan_ok: bool) {
+        let job_first = self
+            .seen
+            .lock()
+            .expect("setup cache poisoned")
+            .insert(key.to_vec());
+        let was_prebuilt = job_first
+            && self
+                .prebuilt
+                .lock()
+                .expect("setup cache poisoned")
+                .remove(key);
+        if job_first && !was_prebuilt {
+            self.builds.fetch_add(1, Ordering::Relaxed);
+        } else if plan_ok {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether `key`'s plan exists and built successfully (for memo
+    /// entries consumed by other sessions).
+    fn plan_ok_for_key(&self, key: &[u32]) -> bool {
+        let cell = match &self.shared {
+            Some((store, fp)) => store
+                .plans
+                .lock()
+                .expect("shared plan store poisoned")
+                .get(&(*fp, key.to_vec()))
+                .cloned(),
+            None => self
+                .cells
+                .lock()
+                .expect("setup cache poisoned")
+                .get(key)
+                .cloned(),
+        };
+        matches!(cell.as_deref().and_then(|c| c.get()), Some(Ok(_)))
     }
 }
 
@@ -237,17 +398,18 @@ fn evaluate_shared(
         // topology and exact repeats are already served by the value
         // memo — build ephemerally and let the plan drop with this
         // evaluation instead of retaining every topology for the run.
-        None => setups.build(space, c)?,
+        None => {
+            setups.builds.fetch_add(1, Ordering::Relaxed);
+            setups.build(space, c)?
+        }
         Some(key) => {
             let (plan, rep) = setups.plan_for(space, key, c);
             let plan = plan?;
             let binding = match rep {
                 Some(b) => b,
-                None => {
-                    // reused a previously built plan
-                    setups.hits.fetch_add(1, Ordering::Relaxed);
-                    space.bind(c).map_err(|e| format!("{e:#}"))?
-                }
+                // reused a previously built plan (already accounted as a
+                // hit by `plan_for`)
+                None => space.bind(c).map_err(|e| format!("{e:#}"))?,
             };
             (plan, binding)
         }
@@ -313,8 +475,14 @@ pub struct Engine<'a, 'scope> {
     space: &'a dyn DesignSpace,
     objectives: &'a [Box<dyn Objective>],
     evals: &'a Registry,
-    opts: &'a ExploreOpts,
+    opts: ExploreOpts,
     setups: Arc<SetupCache>,
+    /// Process-wide memo store, joined via [`Engine::new_in_with`].
+    shared: Option<Arc<SharedCaches>>,
+    /// This space's structural fingerprint (namespaces shared entries).
+    space_fp: u64,
+    /// Objective-set signature (namespaces shared memo entries).
+    memo_sig: String,
     pool: Option<WorkerPool<'scope, Candidate, EvalResult>>,
     /// Session for inline evaluation (serial runs and single-miss
     /// batches); its arenas persist across the whole exploration.
@@ -324,7 +492,7 @@ pub struct Engine<'a, 'scope> {
     sim_calls: usize,
     cache_hits: usize,
     failures: usize,
-    /// Incremented by the local searchers on accepted moves.
+    /// Incremented by the session loop on explorer-accepted moves.
     pub moves_accepted: usize,
 }
 
@@ -336,9 +504,19 @@ impl<'a> Engine<'a, 'static> {
         space: &'a dyn DesignSpace,
         objectives: &'a [Box<dyn Objective>],
         evals: &'a Registry,
-        opts: &'a ExploreOpts,
+        opts: &ExploreOpts,
     ) -> Engine<'a, 'static> {
-        Engine::assemble(space, objectives, evals, opts, Arc::new(SetupCache::new()), None)
+        let fp = space.fingerprint();
+        Engine::assemble(
+            space,
+            objectives,
+            evals,
+            opts,
+            Arc::new(SetupCache::new(None)),
+            None,
+            None,
+            fp,
+        )
     }
 }
 
@@ -351,12 +529,32 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         space: &'a dyn DesignSpace,
         objectives: &'a [Box<dyn Objective>],
         evals: &'a Registry,
-        opts: &'a ExploreOpts,
+        opts: &ExploreOpts,
     ) -> Engine<'a, 'scope>
     where
         'a: 'scope,
     {
-        let setups = Arc::new(SetupCache::new());
+        Engine::new_in_with(scope, space, objectives, evals, opts, None)
+    }
+
+    /// [`Engine::new_in`], optionally joined to a process-wide
+    /// [`SharedCaches`] store (plans + memo shared across concurrent
+    /// sessions over structurally identical spaces).
+    pub fn new_in_with<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        evals: &'a Registry,
+        opts: &ExploreOpts,
+        shared: Option<Arc<SharedCaches>>,
+    ) -> Engine<'a, 'scope>
+    where
+        'a: 'scope,
+    {
+        let fp = space.fingerprint();
+        let setups = Arc::new(SetupCache::new(
+            shared.as_ref().map(|s| (Arc::clone(s), fp)),
+        ));
         let pool = if opts.streaming && opts.workers > 1 {
             let sim = opts.sim.clone();
             let setup_reuse = opts.setup_reuse;
@@ -376,23 +574,34 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         } else {
             None
         };
-        Engine::assemble(space, objectives, evals, opts, setups, pool)
+        Engine::assemble(space, objectives, evals, opts, setups, pool, shared, fp)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn assemble(
         space: &'a dyn DesignSpace,
         objectives: &'a [Box<dyn Objective>],
         evals: &'a Registry,
-        opts: &'a ExploreOpts,
+        opts: &ExploreOpts,
         setups: Arc<SetupCache>,
         pool: Option<WorkerPool<'scope, Candidate, EvalResult>>,
+        shared: Option<Arc<SharedCaches>>,
+        space_fp: u64,
     ) -> Engine<'a, 'scope> {
+        let memo_sig = objectives
+            .iter()
+            .map(|o| o.name())
+            .collect::<Vec<_>>()
+            .join("\u{1f}");
         Engine {
             space,
             objectives,
             evals,
-            opts,
+            opts: opts.clone(),
             setups,
+            shared,
+            space_fp,
+            memo_sig,
             pool,
             session: SimSession::new(),
             cache: HashMap::new(),
@@ -404,12 +613,76 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         }
     }
 
+    /// Restore run state from a checkpoint: the eval log (which also
+    /// rebuilds the memo cache when caching is on), every counter, and
+    /// the set of topology keys the interrupted run had accounted.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn restore(
+        &mut self,
+        log: Vec<Evaluation>,
+        sim_calls: usize,
+        cache_hits: usize,
+        failures: usize,
+        moves_accepted: usize,
+        setup_builds: usize,
+        setup_hits: usize,
+        built_keys: Vec<Vec<u32>>,
+    ) {
+        if self.opts.cache {
+            for e in &log {
+                self.cache.insert(e.candidate.0.clone(), e.objectives.clone());
+            }
+        }
+        self.log = log;
+        self.sim_calls = sim_calls;
+        self.cache_hits = cache_hits;
+        self.failures = failures;
+        self.moves_accepted = moves_accepted;
+        self.setups.builds.store(setup_builds, Ordering::Relaxed);
+        self.setups.hits.store(setup_hits, Ordering::Relaxed);
+        let mut prebuilt = self.setups.prebuilt.lock().expect("setup cache poisoned");
+        for k in built_keys {
+            prebuilt.insert(k);
+        }
+    }
+
     pub fn space(&self) -> &'a dyn DesignSpace {
         self.space
     }
 
-    pub fn opts(&self) -> &'a ExploreOpts {
-        self.opts
+    pub fn opts(&self) -> &ExploreOpts {
+        &self.opts
+    }
+
+    pub(crate) fn objective_names(&self) -> Vec<String> {
+        self.objectives.iter().map(|o| o.name().to_string()).collect()
+    }
+
+    pub(crate) fn cache_hits(&self) -> usize {
+        self.cache_hits
+    }
+
+    pub(crate) fn failures(&self) -> usize {
+        self.failures
+    }
+
+    pub(crate) fn setup_builds(&self) -> usize {
+        self.setups.builds.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn setup_hits(&self) -> usize {
+        self.setups.hits.load(Ordering::Relaxed)
+    }
+
+    /// Topology keys accounted so far this run (sorted), including keys
+    /// carried over from a resumed checkpoint and not yet re-acquired.
+    pub(crate) fn built_keys(&self) -> Vec<Vec<u32>> {
+        let seen = self.setups.seen.lock().expect("setup cache poisoned");
+        let prebuilt = self.setups.prebuilt.lock().expect("setup cache poisoned");
+        let mut keys: Vec<Vec<u32>> =
+            seen.iter().cloned().chain(prebuilt.iter().cloned()).collect();
+        keys.sort();
+        keys
     }
 
     /// Evaluations still allowed by the budget.
@@ -525,7 +798,27 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             }
         }
 
-        let outcomes = self.eval_misses(batch, &miss_idx);
+        // Shared-memo pass: misses another session already evaluated are
+        // served from the process-wide store — counted exactly as if this
+        // session had simulated them (scores are deterministic), so
+        // per-job reports stay independent of cross-job timing.
+        let mut served: Vec<(usize, MemoEntry)> = Vec::new();
+        let mut real_miss: Vec<usize> = Vec::new();
+        match (&self.shared, self.opts.cache) {
+            (Some(store), true) => {
+                let memo = store.memo.lock().expect("shared memo poisoned");
+                for &i in &miss_idx {
+                    let key = (self.space_fp, self.memo_sig.clone(), batch[i].0.clone());
+                    match memo.get(&key) {
+                        Some(entry) => served.push((i, entry.clone())),
+                        None => real_miss.push(i),
+                    }
+                }
+            }
+            _ => real_miss.clone_from(&miss_idx),
+        }
+
+        let outcomes = self.eval_misses(batch, &real_miss);
         self.sim_calls += miss_idx.len();
 
         // Store miss results (one owned key per miss — the entry the memo
@@ -533,20 +826,49 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         let n_obj = self.objectives.len();
         let mut local: Vec<Option<Vec<f64>>> = vec![None; batch.len()];
         let mut errors: Vec<Option<String>> = vec![None; batch.len()];
-        for (&i, outcome) in miss_idx.iter().zip(outcomes) {
-            let values = match outcome {
-                Ok(v) => v,
+        for (&i, outcome) in real_miss.iter().zip(outcomes) {
+            let (values, error) = match outcome {
+                Ok(v) => (v, None),
                 Err(msg) => {
                     self.failures += 1;
-                    errors[i] = Some(msg);
-                    vec![f64::INFINITY; n_obj]
+                    (vec![f64::INFINITY; n_obj], Some(msg))
                 }
             };
+            if self.opts.cache {
+                if let Some(store) = &self.shared {
+                    let plan_ok = if !self.opts.setup_reuse {
+                        true
+                    } else {
+                        match self.space.topology_key(&batch[i]) {
+                            None => true,
+                            Some(key) => self.setups.plan_ok_for_key(&key),
+                        }
+                    };
+                    store.memo.lock().expect("shared memo poisoned").insert(
+                        (self.space_fp, self.memo_sig.clone(), batch[i].0.clone()),
+                        MemoEntry {
+                            values: values.clone(),
+                            error: error.clone(),
+                            plan_ok,
+                        },
+                    );
+                }
+            }
+            errors[i] = error;
             if self.opts.cache {
                 self.cache.insert(batch[i].0.clone(), values);
             } else {
                 local[i] = Some(values);
             }
+        }
+        for (i, entry) in served {
+            self.account_shared_hit(&batch[i], entry.plan_ok);
+            if entry.error.is_some() {
+                self.failures += 1;
+            }
+            errors[i] = entry.error;
+            // the shared pass only runs with caching on
+            self.cache.insert(batch[i].0.clone(), entry.values);
         }
 
         // Log every requested candidate in proposal order.
@@ -577,8 +899,25 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         out
     }
 
-    fn into_report(self, explorer: &str, elapsed_secs: f64) -> ExplorationReport {
+    /// Replicate the setup accounting a standalone run would have done
+    /// for one simulated candidate whose evaluation was instead served
+    /// from the shared memo.
+    fn account_shared_hit(&self, c: &Candidate, plan_ok: bool) {
+        if !self.opts.setup_reuse {
+            self.setups.builds.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match self.space.topology_key(c) {
+            None => {
+                self.setups.builds.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(key) => self.setups.account(&key, plan_ok),
+        }
+    }
+
+    pub(crate) fn into_report(self, explorer: &str, elapsed_secs: f64) -> ExplorationReport {
         ExplorationReport {
+            schema_version: report::REPORT_SCHEMA_VERSION,
             space: self.space.name().to_string(),
             explorer: explorer.to_string(),
             objective_names: self.objectives.iter().map(|o| o.name().to_string()).collect(),
@@ -595,8 +934,9 @@ impl<'a, 'scope> Engine<'a, 'scope> {
     }
 }
 
-/// Run one exploration: drive `explorer` over `space`, scoring candidates
-/// with `objectives`, and return the structured report. The engine's
+/// Run one exploration end to end: drive `explorer` over `space` through
+/// an [`ExplorationSession`] until the budget is exhausted or the
+/// strategy finishes, and return the structured report. The session's
 /// persistent worker pool lives for exactly this call.
 pub fn explore(
     space: &dyn DesignSpace,
@@ -605,16 +945,12 @@ pub fn explore(
     evals: &Registry,
     opts: &ExploreOpts,
 ) -> Result<ExplorationReport> {
-    crate::ensure!(
-        !objectives.is_empty(),
-        "explore: at least one objective required"
-    );
     let start = std::time::Instant::now();
     std::thread::scope(|scope| {
-        let mut engine = Engine::new_in(scope, space, objectives, evals, opts);
-        explorer.run(&mut engine)?;
-        let elapsed = start.elapsed().as_secs_f64();
-        Ok(engine.into_report(explorer.name(), elapsed))
+        let mut session =
+            ExplorationSession::new_in(scope, space, objectives, explorer, evals, opts, None)?;
+        while session.step() {}
+        Ok(session.into_report(start.elapsed().as_secs_f64()))
     })
 }
 

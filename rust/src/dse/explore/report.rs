@@ -23,9 +23,17 @@ pub struct Evaluation {
     pub error: Option<String>,
 }
 
+/// Version of the report JSON layout. Bumped whenever a field is added,
+/// removed or re-encoded, so downstream consumers (the serve API, CI
+/// diffs, learned-DSE ingestion) can detect a layout they don't know.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
 /// The result of one exploration run.
 #[derive(Debug)]
 pub struct ExplorationReport {
+    /// Always [`REPORT_SCHEMA_VERSION`] for reports produced by this
+    /// build.
+    pub schema_version: u64,
     pub space: String,
     pub explorer: String,
     pub objective_names: Vec<String>,
@@ -219,6 +227,7 @@ impl ExplorationReport {
 
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
+        o.insert("schema_version", self.schema_version.into());
         o.insert("space", self.space.as_str().into());
         o.insert("explorer", self.explorer.as_str().into());
         o.insert("space_size", self.space_size.into());
@@ -273,6 +282,7 @@ mod tests {
 
     fn report(evals: Vec<Evaluation>) -> ExplorationReport {
         ExplorationReport {
+            schema_version: REPORT_SCHEMA_VERSION,
             space: "synthetic".into(),
             explorer: "none".into(),
             objective_names: vec!["a".into(), "b".into()],
@@ -335,6 +345,10 @@ mod tests {
         assert_eq!(r.top_table(1).rows.len(), 1);
         let j = r.to_json().to_string();
         let parsed = Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("schema_version").unwrap().as_u64(),
+            Some(REPORT_SCHEMA_VERSION)
+        );
         assert_eq!(parsed.get("space").unwrap().as_str(), Some("synthetic"));
         assert_eq!(parsed.get("evals").unwrap().as_f64(), Some(2.0));
         assert!(parsed.get("best").unwrap().get("objectives").is_some());

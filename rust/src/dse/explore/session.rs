@@ -1,0 +1,501 @@
+//! Resumable exploration: the [`ExplorationSession`] state machine and
+//! its serialized [`Checkpoint`].
+//!
+//! A session drives one [`Explorer`] over one space in discrete steps
+//! (`propose` → evaluate → `observe`). Between steps the session is
+//! quiescent — no batch in flight, the worker pool drained — so its
+//! entire run state is the explorer's [`ExplorerState`], the evaluation
+//! log, and a handful of counters. [`ExplorationSession::checkpoint`]
+//! serializes exactly that; [`ExplorationSession::resume_in`] rebuilds a
+//! session from it whose remaining evaluations, final report JSON and
+//! counters are **bit-identical** to the uninterrupted run (the
+//! determinism suite in `tests/explore_stream.rs` proves it per explorer
+//! and worker count).
+//!
+//! ## Wire encoding
+//!
+//! The JSON layer stores every number as `f64`, which would corrupt two
+//! things a checkpoint must carry losslessly: 64-bit integers (RNG
+//! streams, cursors — silently rounded above 2^53) and non-finite scores
+//! (`INFINITY` marks failed candidates; it serializes as `null`). Both
+//! are therefore encoded as fixed-width lowercase hex strings — raw bits
+//! for `f64`s — and decoded with [`parse_hex_u64`]/[`parse_hex_f64`].
+
+use std::sync::Arc;
+use std::thread::Scope;
+
+use crate::eval::Registry;
+use crate::util::error::{Context, Result};
+use crate::util::json::{Json, JsonObj};
+
+use super::explorers::{Explorer, ExplorerState, StepLimits};
+use super::report::{Evaluation, ExplorationReport};
+use super::space::{Candidate, DesignSpace};
+use super::{Engine, ExploreOpts, Objective, SharedCaches};
+
+/// Version of the checkpoint JSON layout. Resuming from a checkpoint
+/// with a different version is an error — the engine's counters and the
+/// explorer state encoding are only meaningful under the layout they
+/// were written with.
+pub const CHECKPOINT_SCHEMA_VERSION: u64 = 1;
+
+// ----------------------------------------------------------------------
+// Hex wire helpers (shared with the explorer-state encoding)
+// ----------------------------------------------------------------------
+
+pub(crate) fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+pub(crate) fn parse_hex_u64(j: Option<&Json>, what: &str) -> Result<u64> {
+    let s = j
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| crate::format_err!("{what}: expected a hex string"))?;
+    u64::from_str_radix(s, 16).map_err(|_| crate::format_err!("{what}: invalid hex value '{s}'"))
+}
+
+pub(crate) fn hex_f64(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+pub(crate) fn parse_hex_f64(j: Option<&Json>, what: &str) -> Result<f64> {
+    parse_hex_u64(j, what).map(f64::from_bits)
+}
+
+// ----------------------------------------------------------------------
+// Checkpoint
+// ----------------------------------------------------------------------
+
+/// A serialized, self-describing snapshot of one exploration between
+/// steps: explorer state (cursor, RNG streams, current-best), the full
+/// evaluation log, every throughput counter, and the identity of the
+/// space it belongs to.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// [`CHECKPOINT_SCHEMA_VERSION`] at write time.
+    pub schema_version: u64,
+    /// Space name (informational; identity is the fingerprint).
+    pub space: String,
+    /// [`DesignSpace::fingerprint`] of the space the run was started on.
+    pub space_fingerprint: u64,
+    /// Explorer CLI name; resume requires the same explorer.
+    pub explorer: String,
+    /// Objective names, in order; resume requires the same objectives.
+    pub objective_names: Vec<String>,
+    pub budget: usize,
+    pub batch: usize,
+    pub cache: bool,
+    pub setup_reuse: bool,
+    /// Steps completed so far.
+    pub batches_done: u64,
+    /// The explorer's externalized state.
+    pub state: ExplorerState,
+    pub sim_calls: usize,
+    pub cache_hits: usize,
+    pub failures: usize,
+    pub moves_accepted: usize,
+    pub setup_builds: usize,
+    pub setup_hits: usize,
+    /// Topology keys whose evaluation setups were accounted before the
+    /// checkpoint (sorted). On resume these keys rebuild physically but
+    /// re-count as *hits*, keeping the counters identical to an
+    /// uninterrupted run.
+    pub built_keys: Vec<Vec<u32>>,
+    /// The evaluation log, in exploration order (scores bit-exact).
+    pub log: Vec<Evaluation>,
+}
+
+fn digits_json(digits: &[u32]) -> Json {
+    Json::Arr(digits.iter().map(|d| (*d as u64).into()).collect())
+}
+
+fn parse_digits(j: &Json, what: &str) -> Result<Vec<u32>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| crate::format_err!("{what}: expected an array of digits"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for d in arr {
+        out.push(
+            d.as_u64()
+                .ok_or_else(|| crate::format_err!("{what}: non-integer digit"))? as u32,
+        );
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("schema_version", self.schema_version.into());
+        o.insert("space", self.space.as_str().into());
+        o.insert("space_fingerprint", hex_u64(self.space_fingerprint));
+        o.insert("explorer", self.explorer.as_str().into());
+        o.insert(
+            "objectives",
+            Json::Arr(
+                self.objective_names
+                    .iter()
+                    .map(|n| n.as_str().into())
+                    .collect(),
+            ),
+        );
+        o.insert("budget", self.budget.into());
+        o.insert("batch", self.batch.into());
+        o.insert("cache", self.cache.into());
+        o.insert("setup_reuse", self.setup_reuse.into());
+        o.insert("batches_done", self.batches_done.into());
+        o.insert("state", self.state.to_json());
+        o.insert("sim_calls", self.sim_calls.into());
+        o.insert("cache_hits", self.cache_hits.into());
+        o.insert("failures", self.failures.into());
+        o.insert("moves_accepted", self.moves_accepted.into());
+        o.insert("setup_builds", self.setup_builds.into());
+        o.insert("setup_hits", self.setup_hits.into());
+        o.insert(
+            "built_keys",
+            Json::Arr(self.built_keys.iter().map(|k| digits_json(k)).collect()),
+        );
+        let mut log = Vec::with_capacity(self.log.len());
+        for e in &self.log {
+            let mut ev = JsonObj::new();
+            ev.insert("candidate", digits_json(&e.candidate.0));
+            ev.insert("label", e.label.as_str().into());
+            ev.insert(
+                "objectives",
+                Json::Arr(e.objectives.iter().map(|v| hex_f64(*v)).collect()),
+            );
+            ev.insert("cached", e.cached.into());
+            if let Some(err) = &e.error {
+                ev.insert("error", err.as_str().into());
+            }
+            log.push(Json::Obj(ev));
+        }
+        o.insert("log", Json::Arr(log));
+        Json::Obj(o)
+    }
+
+    /// Parse a checkpoint document. A schema version other than
+    /// [`CHECKPOINT_SCHEMA_VERSION`] is an error (with context), not a
+    /// best-effort read.
+    pub fn from_json(doc: &Json) -> Result<Checkpoint> {
+        let version = doc
+            .get("schema_version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| crate::format_err!("checkpoint: missing \"schema_version\""))?;
+        crate::ensure!(
+            version == CHECKPOINT_SCHEMA_VERSION,
+            "checkpoint: schema version {version} is not supported by this build \
+             (expected {CHECKPOINT_SCHEMA_VERSION})"
+        );
+        let str_field = |key: &str| -> Result<String> {
+            doc.get(key)
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+                .ok_or_else(|| crate::format_err!("checkpoint: missing \"{key}\""))
+        };
+        let usize_field = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| crate::format_err!("checkpoint: missing or invalid \"{key}\""))
+        };
+        let objective_names = doc
+            .get("objectives")
+            .and_then(|v| v.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .map(|n| n.as_str().unwrap_or_default().to_string())
+                    .collect::<Vec<_>>()
+            })
+            .ok_or_else(|| crate::format_err!("checkpoint: missing \"objectives\""))?;
+        let state = ExplorerState::from_json(
+            doc.get("state")
+                .ok_or_else(|| crate::format_err!("checkpoint: missing \"state\""))?,
+        )
+        .context("checkpoint: explorer state")?;
+        let mut built_keys = Vec::new();
+        if let Some(arr) = doc.get("built_keys").and_then(|v| v.as_arr()) {
+            for k in arr {
+                built_keys.push(parse_digits(k, "checkpoint: built_keys entry")?);
+            }
+        }
+        let mut log = Vec::new();
+        if let Some(arr) = doc.get("log").and_then(|v| v.as_arr()) {
+            for (i, ev) in arr.iter().enumerate() {
+                let candidate = parse_digits(
+                    ev.get("candidate")
+                        .ok_or_else(|| crate::format_err!("checkpoint: log[{i}]: missing candidate"))?,
+                    "checkpoint: log candidate",
+                )?;
+                let objs = ev
+                    .get("objectives")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| crate::format_err!("checkpoint: log[{i}]: missing objectives"))?;
+                let mut objectives = Vec::with_capacity(objs.len());
+                for o in objs {
+                    objectives
+                        .push(parse_hex_f64(Some(o), "checkpoint: log objective score")?);
+                }
+                log.push(Evaluation {
+                    candidate: Candidate(candidate),
+                    label: ev
+                        .get("label")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    objectives,
+                    cached: ev.get("cached").and_then(|v| v.as_bool()).unwrap_or(false),
+                    error: ev
+                        .get("error")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
+                });
+            }
+        }
+        Ok(Checkpoint {
+            schema_version: version,
+            space: str_field("space")?,
+            space_fingerprint: parse_hex_u64(
+                doc.get("space_fingerprint"),
+                "checkpoint: space_fingerprint",
+            )?,
+            explorer: str_field("explorer")?,
+            objective_names,
+            budget: usize_field("budget")?,
+            batch: usize_field("batch")?,
+            cache: doc.get("cache").and_then(|v| v.as_bool()).unwrap_or(true),
+            setup_reuse: doc
+                .get("setup_reuse")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(true),
+            batches_done: doc
+                .get("batches_done")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            state,
+            sim_calls: usize_field("sim_calls")?,
+            cache_hits: usize_field("cache_hits")?,
+            failures: usize_field("failures")?,
+            moves_accepted: usize_field("moves_accepted")?,
+            setup_builds: usize_field("setup_builds")?,
+            setup_hits: usize_field("setup_hits")?,
+            built_keys,
+            log,
+        })
+    }
+}
+
+// ----------------------------------------------------------------------
+// ExplorationSession
+// ----------------------------------------------------------------------
+
+/// One exploration as a resumable state machine: an [`Engine`] (memo
+/// cache, eval log, budget, worker pool) plus an explorer and its
+/// externalized state, advanced one `propose`/evaluate/`observe` step at
+/// a time. Quiescent between steps — checkpoint there.
+pub struct ExplorationSession<'a, 'scope> {
+    engine: Engine<'a, 'scope>,
+    explorer: &'a dyn Explorer,
+    state: ExplorerState,
+    batches_done: u64,
+}
+
+impl<'a, 'scope> ExplorationSession<'a, 'scope> {
+    /// Start a fresh session whose worker pool lives on `scope`. Pass
+    /// `shared` to join a process-wide plan/memo store (the serve
+    /// daemon's cross-job cache); `None` keeps every cache private.
+    pub fn new_in<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        explorer: &'a dyn Explorer,
+        evals: &'a Registry,
+        opts: &ExploreOpts,
+        shared: Option<Arc<SharedCaches>>,
+    ) -> Result<ExplorationSession<'a, 'scope>>
+    where
+        'a: 'scope,
+    {
+        crate::ensure!(
+            !objectives.is_empty(),
+            "explore: at least one objective required"
+        );
+        let engine = Engine::new_in_with(scope, space, objectives, evals, opts, shared);
+        let state = explorer.fresh(space);
+        Ok(ExplorationSession {
+            engine,
+            explorer,
+            state,
+            batches_done: 0,
+        })
+    }
+
+    /// Rebuild a session from a checkpoint. Validates the schema version
+    /// (already enforced by [`Checkpoint::from_json`]), the space
+    /// fingerprint, the explorer and the objectives; budget, batch size
+    /// and cache switches come from the checkpoint, while `opts` supplies
+    /// the machine-local knobs (workers, streaming, sim config). The
+    /// resumed run's remaining evaluations and final report are
+    /// bit-identical to an uninterrupted one.
+    pub fn resume_in<'env>(
+        scope: &'scope Scope<'scope, 'env>,
+        space: &'a dyn DesignSpace,
+        objectives: &'a [Box<dyn Objective>],
+        explorer: &'a dyn Explorer,
+        evals: &'a Registry,
+        opts: &ExploreOpts,
+        ckpt: Checkpoint,
+        shared: Option<Arc<SharedCaches>>,
+    ) -> Result<ExplorationSession<'a, 'scope>>
+    where
+        'a: 'scope,
+    {
+        crate::ensure!(
+            ckpt.schema_version == CHECKPOINT_SCHEMA_VERSION,
+            "resume: checkpoint schema version {} is not supported by this build \
+             (expected {CHECKPOINT_SCHEMA_VERSION})",
+            ckpt.schema_version
+        );
+        let fp = space.fingerprint();
+        crate::ensure!(
+            fp == ckpt.space_fingerprint,
+            "resume: checkpoint was taken on space '{}' (fingerprint {:016x}) but \
+             the supplied space '{}' has fingerprint {fp:016x}",
+            ckpt.space,
+            ckpt.space_fingerprint,
+            space.name()
+        );
+        crate::ensure!(
+            explorer.name() == ckpt.explorer && ckpt.state.explorer == ckpt.explorer,
+            "resume: checkpoint was written by explorer '{}' but '{}' was supplied",
+            ckpt.explorer,
+            explorer.name()
+        );
+        let names: Vec<String> = objectives.iter().map(|o| o.name().to_string()).collect();
+        crate::ensure!(
+            names == ckpt.objective_names,
+            "resume: checkpoint objectives [{}] do not match the supplied [{}]",
+            ckpt.objective_names.join(", "),
+            names.join(", ")
+        );
+        crate::ensure!(
+            !objectives.is_empty(),
+            "explore: at least one objective required"
+        );
+        // The run's own parameters are authoritative from the checkpoint;
+        // only machine-local execution knobs carry over from the caller.
+        let run_opts = ExploreOpts {
+            budget: ckpt.budget,
+            batch: ckpt.batch,
+            cache: ckpt.cache,
+            setup_reuse: ckpt.setup_reuse,
+            workers: opts.workers,
+            streaming: opts.streaming,
+            sim: opts.sim.clone(),
+        };
+        let mut engine = Engine::new_in_with(scope, space, objectives, evals, &run_opts, shared);
+        engine.restore(
+            ckpt.log,
+            ckpt.sim_calls,
+            ckpt.cache_hits,
+            ckpt.failures,
+            ckpt.moves_accepted,
+            ckpt.setup_builds,
+            ckpt.setup_hits,
+            ckpt.built_keys,
+        );
+        Ok(ExplorationSession {
+            engine,
+            explorer,
+            state: ckpt.state,
+            batches_done: ckpt.batches_done,
+        })
+    }
+
+    /// Advance one step: propose a batch, evaluate it, observe the
+    /// scores. Returns `false` when the run is over (budget exhausted or
+    /// the explorer finished).
+    pub fn step(&mut self) -> bool {
+        if self.state.done || self.engine.remaining() == 0 {
+            return false;
+        }
+        let batch_limit = self.engine.opts().batch.max(1);
+        let limits = StepLimits {
+            remaining: self.engine.remaining(),
+            batch: batch_limit,
+        };
+        let batch = self
+            .explorer
+            .propose(&mut self.state, self.engine.space(), &limits);
+        if batch.is_empty() {
+            self.state.done = true;
+            return false;
+        }
+        let scores = self.engine.eval_batch(&batch);
+        if scores.is_empty() {
+            return false;
+        }
+        let evaluated = &batch[..scores.len()];
+        let post = StepLimits {
+            remaining: self.engine.remaining(),
+            batch: batch_limit,
+        };
+        let accepted =
+            self.explorer
+                .observe(&mut self.state, self.engine.space(), evaluated, &scores, &post);
+        self.engine.moves_accepted += accepted;
+        self.batches_done += 1;
+        true
+    }
+
+    /// Steps completed so far.
+    pub fn batches_done(&self) -> u64 {
+        self.batches_done
+    }
+
+    /// Evaluations logged so far.
+    pub fn evals_done(&self) -> usize {
+        self.engine.log().len()
+    }
+
+    /// The evaluation log so far.
+    pub fn log(&self) -> &[Evaluation] {
+        self.engine.log()
+    }
+
+    /// True when the run is over (budget exhausted or explorer finished).
+    pub fn finished(&self) -> bool {
+        self.state.done || self.engine.remaining() == 0
+    }
+
+    /// Snapshot the full run state. Only meaningful between steps (which
+    /// is the only time callers can reach the session).
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            schema_version: CHECKPOINT_SCHEMA_VERSION,
+            space: self.engine.space().name().to_string(),
+            space_fingerprint: self.engine.space().fingerprint(),
+            explorer: self.explorer.name().to_string(),
+            objective_names: self.engine.objective_names(),
+            budget: self.engine.opts().budget,
+            batch: self.engine.opts().batch,
+            cache: self.engine.opts().cache,
+            setup_reuse: self.engine.opts().setup_reuse,
+            batches_done: self.batches_done,
+            state: self.state.clone(),
+            sim_calls: self.engine.sim_calls(),
+            cache_hits: self.engine.cache_hits(),
+            failures: self.engine.failures(),
+            moves_accepted: self.engine.moves_accepted,
+            setup_builds: self.engine.setup_builds(),
+            setup_hits: self.engine.setup_hits(),
+            built_keys: self.engine.built_keys(),
+            log: self.engine.log().to_vec(),
+        }
+    }
+
+    /// Finish the run and produce the report.
+    pub fn into_report(self, elapsed_secs: f64) -> ExplorationReport {
+        let name = self.explorer.name().to_string();
+        self.engine.into_report(&name, elapsed_secs)
+    }
+}

@@ -357,6 +357,36 @@ pub trait DesignSpace: Sync {
             self.name()
         )
     }
+
+    /// Structural fingerprint of the space: FNV-1a over the name and
+    /// every axis's name, tier and value labels. Stable across runs and
+    /// processes (no addresses, no hash-map iteration), so it identifies
+    /// a space in serialized artifacts — exploration checkpoints refuse
+    /// to resume against a space with a different fingerprint, and the
+    /// serve daemon keys its process-wide plan/memo stores on it.
+    ///
+    /// Composed spaces inherit it: their axes *are* their structure.
+    fn fingerprint(&self) -> u64 {
+        fn eat(h: &mut u64, bytes: &[u8]) {
+            for b in bytes {
+                *h ^= *b as u64;
+                *h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        let mut h: u64 = 0xcbf29ce484222325;
+        eat(&mut h, self.name().as_bytes());
+        for a in self.axes() {
+            eat(&mut h, &[0x1f]);
+            eat(&mut h, a.name.as_bytes());
+            eat(&mut h, a.kind.name().as_bytes());
+            eat(&mut h, &(a.len() as u64).to_le_bytes());
+            for i in 0..a.len() {
+                eat(&mut h, &[0x1e]);
+                eat(&mut h, a.values.label(i).as_bytes());
+            }
+        }
+        h
+    }
 }
 
 // ======================================================================

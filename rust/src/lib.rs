@@ -22,7 +22,8 @@
 //!
 //! On top sit the architecture templates ([`arch`]), cost models ([`cost`]),
 //! LLM workload generators ([`workloads`]) and the three-tier DSE engine
-//! ([`dse`]) orchestrated by the [`coordinator`].
+//! ([`dse`]) orchestrated by the [`coordinator`], with the exploration
+//! stack exposed as a resumable job daemon by [`serve`].
 
 pub mod util;
 pub mod hwir;
@@ -36,3 +37,4 @@ pub mod workloads;
 pub mod dse;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;

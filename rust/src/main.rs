@@ -8,6 +8,8 @@
 //! mldse explore --space FILE.json|--preset NAME
 //!               [--explorer grid|random|hill|anneal|anneal-tiered]
 //!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
+//!               [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
+//! mldse serve [--port P] [--workers N]         exploration-as-a-service daemon
 //! mldse hardware --spec FILE                   build + describe a spec
 //! ```
 //!
@@ -19,8 +21,9 @@ use mldse::arch::{DmcParams, GsmParams, MpmcParams};
 use mldse::coordinator::{Coordinator, EXPERIMENTS};
 use mldse::cost::Packaging;
 use mldse::dse::explore::{
-    explore, explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
-    DesignSpace, Edp, ExploreOpts, Makespan, Objective,
+    explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
+    Checkpoint, DesignSpace, Edp, ExplorationReport, ExplorationSession, ExploreOpts, Makespan,
+    Objective,
 };
 use mldse::dse::parallel::resolve_workers;
 use mldse::sim::SimConfig;
@@ -124,6 +127,7 @@ fn main() -> ExitCode {
         "decode" => cmd_decode(&args),
         "experiment" => cmd_experiment(&args),
         "explore" => cmd_explore(&args),
+        "serve" => cmd_serve(&args),
         "hardware" => cmd_hardware(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -156,10 +160,17 @@ fn print_usage() {
            explore --space FILE.json|--preset NAME\n\
                    [--explorer grid|random|hill|anneal|anneal-tiered]\n\
                    [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
+                   [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]\n\
                    (presets: {presets}; --workers 0 = auto-detect,\n\
                     honoring the MLDSE_WORKERS environment override; space\n\
                     files compose param/packaging/product/nested spaces —\n\
-                    see README \"Composable design spaces\")\n\
+                    see README \"Composable design spaces\"; --checkpoint\n\
+                    writes a resumable snapshot every N steps, --resume\n\
+                    restores one bit-identically)\n\
+           serve [--port P] [--workers N]        exploration-as-a-service HTTP\n\
+                   daemon on 127.0.0.1 (job queue, JSONL event streams,\n\
+                    pause/checkpoint/resume — see README \"Exploration as a\n\
+                    service\")\n\
            hardware --spec FILE.json\n",
         experiments = EXPERIMENTS.join("|"),
         presets = preset_names().join(", ")
@@ -325,6 +336,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         "explore",
         &[
             "space", "preset", "explorer", "budget", "workers", "seed", "json", "no-cache", "top",
+            "checkpoint", "checkpoint-every", "resume",
         ],
     )?;
     let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
@@ -352,9 +364,46 @@ fn cmd_explore(args: &Args) -> Result<()> {
                 preset_names().join(", ")
             ),
         };
-    let explorer_name = args.flag("explorer").unwrap_or("grid");
+    // checkpoint/resume flags, validated with errors naming the flag
+    let checkpoint_path = args.flag("checkpoint");
+    if args.flag("checkpoint-every").is_some() && checkpoint_path.is_none() {
+        mldse::bail!("--checkpoint-every requires --checkpoint FILE");
+    }
+    let checkpoint_every: u64 = args.num("checkpoint-every", 1u64)?;
+    if checkpoint_every == 0 {
+        mldse::bail!("--checkpoint-every: invalid value '0' (must be at least 1)");
+    }
+    let resume_path = args.flag("resume");
+    if resume_path.is_some() {
+        // these are baked into the checkpoint; supplying them again would
+        // silently disagree with what actually resumes
+        for flag in ["explorer", "budget", "seed", "no-cache"] {
+            if args.flag(flag).is_some() {
+                mldse::bail!(
+                    "--{flag} conflicts with --resume (the checkpoint fixes it; drop --{flag})"
+                );
+            }
+        }
+    }
+    let ckpt = match resume_path {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading checkpoint '{path}'"))?;
+            let doc = Json::parse(&text)
+                .with_context(|| format!("parsing checkpoint '{path}'"))?;
+            Some(
+                Checkpoint::from_json(&doc)
+                    .with_context(|| format!("parsing checkpoint '{path}'"))?,
+            )
+        }
+        None => None,
+    };
+    let explorer_name = match &ckpt {
+        Some(c) => c.explorer.clone(),
+        None => args.flag("explorer").unwrap_or("grid").to_string(),
+    };
     let seed = args.num("seed", 0xD5Eu64)?;
-    let explorer = explorer_by_name(explorer_name, seed)?;
+    let explorer = explorer_by_name(&explorer_name, seed)?;
     let default_budget = if explorer_name == "grid" {
         space.size().min(1024) as usize
     } else {
@@ -371,13 +420,45 @@ fn cmd_explore(args: &Args) -> Result<()> {
     };
     let top = args.num("top", 10usize)?;
     let registry = mldse::eval::Registry::standard();
-    let report = explore(
-        space.as_ref(),
-        &objectives,
-        explorer.as_ref(),
-        &registry,
-        &opts,
-    )?;
+    let start = std::time::Instant::now();
+    let report = std::thread::scope(|scope| -> Result<ExplorationReport> {
+        let mut session = match ckpt {
+            Some(c) => ExplorationSession::resume_in(
+                scope,
+                space.as_ref(),
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                c,
+                None,
+            )?,
+            None => ExplorationSession::new_in(
+                scope,
+                space.as_ref(),
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                None,
+            )?,
+        };
+        let mut last_saved = session.batches_done();
+        while session.step() {
+            if let Some(path) = checkpoint_path {
+                if session.batches_done() - last_saved >= checkpoint_every {
+                    write_checkpoint(path, &session)?;
+                    last_saved = session.batches_done();
+                }
+            }
+        }
+        // always leave a final snapshot so a completed run resumes to an
+        // identical report
+        if let Some(path) = checkpoint_path {
+            write_checkpoint(path, &session)?;
+        }
+        Ok(session.into_report(start.elapsed().as_secs_f64()))
+    })?;
     if args.bool_flag("json") {
         println!("{}", report.to_json().to_pretty());
     } else {
@@ -388,6 +469,30 @@ fn cmd_explore(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Serialize the session's current state to `path` (pretty JSON).
+fn write_checkpoint(path: &str, session: &ExplorationSession<'_, '_>) -> Result<()> {
+    std::fs::write(
+        path,
+        format!("{}\n", session.checkpoint().to_json().to_pretty()),
+    )
+    .with_context(|| format!("writing checkpoint '{path}'"))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.allow("serve", &["port", "workers"])?;
+    let port = args.num("port", 8463u16)?;
+    // per-job evaluation workers for jobs that do not request their own
+    let workers = resolve_workers(args.num("workers", 0usize)?)?;
+    let server = mldse::serve::Server::bind(port, workers)?;
+    println!(
+        "mldse serve: listening on http://127.0.0.1:{} ({workers} evaluation workers per job)",
+        server.port()
+    );
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    server.run()
 }
 
 fn cmd_hardware(args: &Args) -> Result<()> {

@@ -1,0 +1,205 @@
+//! Minimal HTTP/1.1 plumbing for the serve daemon.
+//!
+//! The crate is zero-dependency, so this is a hand-rolled subset of the
+//! protocol — exactly what the job API needs and nothing more: one
+//! request per connection (`Connection: close`), `Content-Length` bodies
+//! on the way in, and either fixed-length JSON or chunked NDJSON on the
+//! way out. Parsing is strict about the request line and tolerant about
+//! headers it does not understand.
+
+use std::io::{BufRead, Read, Write};
+
+use crate::util::error::Result;
+
+/// Largest request body the daemon will read (space documents are small;
+/// anything bigger is a client error, not a reason to balloon memory).
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// One parsed request: method, raw path (query string included) and the
+/// decoded UTF-8 body (empty when the request had none).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one request from `r`. Headers other than `Content-Length` are
+/// skipped; the body is read to exactly the declared length.
+pub fn parse_request<R: BufRead>(r: &mut R) -> Result<Request> {
+    let mut start = String::new();
+    let n = r.read_line(&mut start)?;
+    crate::ensure!(n > 0, "http: connection closed before a request line");
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    crate::ensure!(
+        !method.is_empty() && path.starts_with('/'),
+        "http: malformed request line '{}'",
+        start.trim_end()
+    );
+    let mut content_len = 0usize;
+    loop {
+        let mut line = String::new();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((key, value)) = line.split_once(':') {
+            if key.trim().eq_ignore_ascii_case("content-length") {
+                let value = value.trim();
+                content_len = value.parse().map_err(|_| {
+                    crate::format_err!("http: invalid Content-Length '{value}'")
+                })?;
+            }
+        }
+    }
+    crate::ensure!(
+        content_len <= MAX_BODY_BYTES,
+        "http: request body too large ({content_len} bytes, limit {MAX_BODY_BYTES})"
+    );
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body)?;
+    let body = String::from_utf8(body)
+        .map_err(|_| crate::format_err!("http: request body is not valid UTF-8"))?;
+    Ok(Request { method, path, body })
+}
+
+/// Canonical reason phrase for the status codes the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response and flush it.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Write a JSON response (pretty-printed, newline-terminated).
+pub fn write_json(
+    w: &mut impl Write,
+    status: u16,
+    doc: &crate::util::json::Json,
+) -> std::io::Result<()> {
+    let body = format!("{}\n", doc.to_pretty());
+    write_response(w, status, "application/json", &body)
+}
+
+/// Start a chunked 200 response; follow with [`write_chunk`] and close
+/// with [`finish_chunked`].
+pub fn start_chunked(w: &mut impl Write, content_type: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+/// Write one chunk. Empty data is skipped — a zero-length chunk would
+/// terminate the stream.
+pub fn write_chunk(w: &mut impl Write, data: &str) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data.as_bytes())?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn finish_chunked(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = "POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/jobs");
+        assert_eq!(req.body, "abcd");
+    }
+
+    #[test]
+    fn parses_bodyless_request_and_case_insensitive_header() {
+        let raw = "GET /jobs/1 HTTP/1.1\r\ncontent-LENGTH: 0\r\n\r\n";
+        let req = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/jobs/1");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_request_line() {
+        let err = parse_request(&mut Cursor::new(b"nonsense\r\n\r\n".as_slice()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("malformed request line"), "{err}");
+    }
+
+    #[test]
+    fn rejects_invalid_content_length() {
+        let raw = "POST /jobs HTTP/1.1\r\nContent-Length: lots\r\n\r\n";
+        let err = parse_request(&mut Cursor::new(raw.as_bytes()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("invalid Content-Length 'lots'"), "{err}");
+    }
+
+    #[test]
+    fn chunked_framing_round_trips() {
+        let mut out: Vec<u8> = Vec::new();
+        start_chunked(&mut out, "application/x-ndjson").unwrap();
+        write_chunk(&mut out, "hello\n").unwrap();
+        write_chunk(&mut out, "").unwrap(); // skipped, not a terminator
+        write_chunk(&mut out, "world\n").unwrap();
+        finish_chunked(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Transfer-Encoding: chunked"), "{text}");
+        assert!(text.contains("6\r\nhello\n\r\n"), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn fixed_response_has_content_length() {
+        let mut out: Vec<u8> = Vec::new();
+        write_response(&mut out, 404, "application/json", "{}\n").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 3\r\n"), "{text}");
+        assert!(text.ends_with("{}\n"), "{text}");
+    }
+}

@@ -1,0 +1,670 @@
+//! Exploration jobs: the daemon's unit of work.
+//!
+//! A [`Job`] wraps one [`ExplorationSession`] running on its own thread.
+//! The HTTP layer never touches the session directly — it talks to the
+//! job through a control word ([`Control`]) and a monotone event log,
+//! both under one mutex/condvar pair:
+//!
+//! * **pause** flips the control word; the runner notices between steps,
+//!   serializes a [`Checkpoint`] and parks on the condvar.
+//! * **resume** flips it back; the runner re-parses the serialized
+//!   checkpoint and rebuilds the session through
+//!   [`ExplorationSession::resume_in`] — the same code path an
+//!   out-of-process client exercises, so the resumed run is bit-identical
+//!   to an uninterrupted one.
+//! * **cancel** ends the run at the next step boundary (or immediately
+//!   while parked).
+//!
+//! Every evaluation is appended to the event log as one JSON line;
+//! `GET /jobs/:id/events` streams that log. Jobs joined to the server's
+//! [`SharedCaches`] build each topology's evaluation plan once across
+//! the whole process while their per-job reports stay deterministic.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::dse::explore::{
+    explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
+    Checkpoint, DesignSpace, Edp, Evaluation, ExplorationReport, ExplorationSession, ExploreOpts,
+    Makespan, Objective, SharedCaches,
+};
+use crate::eval::Registry;
+use crate::util::error::{Context, Result};
+use crate::util::json::{Json, JsonObj};
+
+/// Lifecycle of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Paused,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Paused => "paused",
+            JobStatus::Done => "done",
+            JobStatus::Failed => "failed",
+            JobStatus::Cancelled => "cancelled",
+        }
+    }
+
+    /// True once the job can no longer make progress.
+    pub fn terminal(&self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+    }
+}
+
+/// What the runner should do at the next step boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Control {
+    Run,
+    Pause,
+    Cancel,
+}
+
+/// A validated job request: either an inline space document (the same
+/// schema as `mldse explore --space` files) or a preset name, plus the
+/// run parameters.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub space_doc: Option<Json>,
+    pub preset: Option<String>,
+    pub explorer: String,
+    pub seed: u64,
+    pub budget: Option<usize>,
+    pub batch: Option<usize>,
+    /// Effective evaluation worker count (the server default unless the
+    /// request set a nonzero `workers`).
+    pub workers: usize,
+    pub cache: bool,
+}
+
+fn opt_usize(doc: &Json, key: &str) -> Result<Option<usize>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => Ok(Some(v.as_usize().ok_or_else(|| {
+            crate::format_err!("jobs: \"{key}\" must be a non-negative integer")
+        })?)),
+    }
+}
+
+impl JobSpec {
+    /// Parse and validate a `POST /jobs` body. Errors here surface as
+    /// HTTP 400 — everything cheap to check is checked (flag shapes, the
+    /// explorer name, the preset name); space documents are only fully
+    /// built by the runner.
+    pub fn from_json(doc: &Json, default_workers: usize) -> Result<JobSpec> {
+        let space_doc = match doc.get("space") {
+            None => None,
+            Some(v @ Json::Obj(_)) => Some(v.clone()),
+            Some(_) => crate::bail!("jobs: \"space\" must be a JSON object (a space document)"),
+        };
+        let preset_name = match doc.get("preset") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| crate::format_err!("jobs: \"preset\" must be a string"))?
+                    .to_string(),
+            ),
+        };
+        match (&space_doc, &preset_name) {
+            (Some(_), Some(_)) => {
+                crate::bail!("jobs: \"space\" and \"preset\" are mutually exclusive")
+            }
+            (None, None) => {
+                crate::bail!(
+                    "jobs: either \"space\" (inline document) or \"preset\" required (presets: {})",
+                    preset_names().join(", ")
+                )
+            }
+            _ => {}
+        }
+        if let Some(name) = &preset_name {
+            crate::ensure!(
+                preset_names().contains(&name.as_str()),
+                "jobs: unknown preset '{name}' (valid: {})",
+                preset_names().join(", ")
+            );
+        }
+        let explorer = doc
+            .get("explorer")
+            .map(|v| {
+                v.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| crate::format_err!("jobs: \"explorer\" must be a string"))
+            })
+            .transpose()?
+            .unwrap_or_else(|| "grid".to_string());
+        // validate the name eagerly so bad requests fail at submit time
+        explorer_by_name(&explorer, 0)?;
+        let seed = match doc.get("seed") {
+            None => 0xD5E,
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| crate::format_err!("jobs: \"seed\" must be a non-negative integer"))?,
+        };
+        let workers = match opt_usize(doc, "workers")? {
+            Some(w) if w > 0 => w,
+            _ => default_workers,
+        };
+        let cache = match doc.get("cache") {
+            None => true,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| crate::format_err!("jobs: \"cache\" must be a boolean"))?,
+        };
+        Ok(JobSpec {
+            space_doc,
+            preset: preset_name,
+            explorer,
+            seed,
+            budget: opt_usize(doc, "budget")?,
+            batch: opt_usize(doc, "batch")?,
+            workers,
+            cache,
+        })
+    }
+}
+
+struct JobInner {
+    status: JobStatus,
+    control: Control,
+    space: String,
+    explorer: String,
+    budget: usize,
+    evals: usize,
+    batches: u64,
+    /// Serialized checkpoint JSON, written at every pause (kept after
+    /// resume — it is the latest snapshot a client can download).
+    checkpoint: Option<String>,
+    /// Final report JSON, present once the job is done.
+    report: Option<String>,
+    error: Option<String>,
+    /// Monotone JSONL event log (never truncated; streamed by cursor).
+    events: Vec<String>,
+}
+
+/// One exploration job. All mutable state lives behind one mutex; the
+/// condvar signals both control-word changes (runner side) and event
+/// appends (streaming side).
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    inner: Mutex<JobInner>,
+    cond: Condvar,
+}
+
+impl Job {
+    pub fn new(id: u64, spec: JobSpec) -> Arc<Job> {
+        let space = spec
+            .preset
+            .clone()
+            .or_else(|| {
+                spec.space_doc
+                    .as_ref()
+                    .and_then(|d| d.get("name"))
+                    .and_then(|n| n.as_str())
+                    .map(|s| s.to_string())
+            })
+            .unwrap_or_else(|| "inline".to_string());
+        let inner = JobInner {
+            status: JobStatus::Queued,
+            control: Control::Run,
+            space,
+            explorer: spec.explorer.clone(),
+            budget: spec.budget.unwrap_or(0),
+            evals: 0,
+            batches: 0,
+            checkpoint: None,
+            report: None,
+            error: None,
+            events: Vec::new(),
+        };
+        Arc::new(Job {
+            id,
+            spec,
+            inner: Mutex::new(inner),
+            cond: Condvar::new(),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, JobInner> {
+        self.inner.lock().expect("job state poisoned")
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.lock().status
+    }
+
+    /// Progress snapshot for `GET /jobs/:id`.
+    pub fn status_json(&self) -> Json {
+        let g = self.lock();
+        let mut o = JsonObj::new();
+        o.insert("id", self.id.into());
+        o.insert("status", g.status.as_str().into());
+        o.insert("space", g.space.as_str().into());
+        o.insert("explorer", g.explorer.as_str().into());
+        o.insert("budget", g.budget.into());
+        o.insert("evals", g.evals.into());
+        o.insert("batches", g.batches.into());
+        o.insert("events", (g.events.len() as u64).into());
+        o.insert("checkpoint_available", g.checkpoint.is_some().into());
+        if let Some(e) = &g.error {
+            o.insert("error", e.as_str().into());
+        }
+        Json::Obj(o)
+    }
+
+    /// Ask the runner to pause at the next step boundary. Idempotent on
+    /// an already-paused job; an error on a finished one.
+    pub fn request_pause(&self) -> Result<&'static str> {
+        let mut g = self.lock();
+        if g.status.terminal() {
+            crate::bail!("job {} is already {}", self.id, g.status.as_str());
+        }
+        if g.status == JobStatus::Paused {
+            return Ok("paused");
+        }
+        if g.control == Control::Cancel {
+            crate::bail!("job {} is being cancelled", self.id);
+        }
+        g.control = Control::Pause;
+        self.cond.notify_all();
+        Ok("pausing")
+    }
+
+    /// Ask a paused (or pausing) runner to continue from its checkpoint.
+    pub fn request_resume(&self) -> Result<&'static str> {
+        let mut g = self.lock();
+        if g.status.terminal() {
+            crate::bail!("job {} is already {}", self.id, g.status.as_str());
+        }
+        if g.control == Control::Cancel {
+            crate::bail!("job {} is being cancelled", self.id);
+        }
+        let was_paused = g.status == JobStatus::Paused;
+        g.control = Control::Run;
+        self.cond.notify_all();
+        Ok(if was_paused { "resuming" } else { "running" })
+    }
+
+    /// End the job at the next step boundary (or immediately if parked).
+    pub fn request_cancel(&self) -> Result<&'static str> {
+        let mut g = self.lock();
+        if g.status.terminal() {
+            crate::bail!("job {} is already {}", self.id, g.status.as_str());
+        }
+        g.control = Control::Cancel;
+        self.cond.notify_all();
+        Ok("cancelling")
+    }
+
+    /// The latest serialized checkpoint, if any pause has happened.
+    pub fn checkpoint_text(&self) -> Option<String> {
+        self.lock().checkpoint.clone()
+    }
+
+    /// The final report JSON, once the job is done.
+    pub fn report_text(&self) -> Option<String> {
+        self.lock().report.clone()
+    }
+
+    /// Events from `cursor` on. Blocks up to `wait` for news when the log
+    /// has no unread lines and the job is still live. The `bool` is true
+    /// when the log is complete (job terminal **and** the returned slice
+    /// reaches its end — terminal events are appended under the same lock
+    /// that flips the status, so a `true` here means nothing more will
+    /// ever arrive).
+    pub fn events_since(&self, cursor: usize, wait: Duration) -> (Vec<String>, bool) {
+        let mut g = self.lock();
+        if g.events.len() <= cursor && !g.status.terminal() && !wait.is_zero() {
+            let (g2, _) = self
+                .cond
+                .wait_timeout(g, wait)
+                .expect("job state poisoned");
+            g = g2;
+        }
+        let lines: Vec<String> = g.events.get(cursor..).unwrap_or_default().to_vec();
+        (lines, g.status.terminal())
+    }
+
+    // ----- runner side -------------------------------------------------
+
+    fn push_event_locked(g: &mut JobInner, obj: JsonObj) {
+        g.events.push(Json::Obj(obj).to_string());
+    }
+
+    fn mark_running(&self, space: &str, budget: usize, workers: usize) {
+        let mut g = self.lock();
+        g.status = JobStatus::Running;
+        g.space = space.to_string();
+        g.budget = budget;
+        let mut o = JsonObj::new();
+        o.insert("type", "start".into());
+        o.insert("space", space.into());
+        o.insert("explorer", g.explorer.as_str().into());
+        o.insert("budget", budget.into());
+        o.insert("workers", workers.into());
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+    }
+
+    /// Read the control word (runner, between steps).
+    fn control(&self) -> Control {
+        self.lock().control
+    }
+
+    /// Store the checkpoint, flip to `Paused`, and block until the
+    /// control word leaves `Pause`. Returns the word that ended the park.
+    fn park_paused(&self, checkpoint: String) -> Control {
+        let mut g = self.lock();
+        g.checkpoint = Some(checkpoint);
+        g.status = JobStatus::Paused;
+        let mut o = JsonObj::new();
+        o.insert("type", "paused".into());
+        o.insert("evals", g.evals.into());
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+        loop {
+            match g.control {
+                Control::Pause => g = self.cond.wait(g).expect("job state poisoned"),
+                Control::Run => {
+                    g.status = JobStatus::Running;
+                    self.cond.notify_all();
+                    return Control::Run;
+                }
+                Control::Cancel => return Control::Cancel,
+            }
+        }
+    }
+
+    fn emit_resumed(&self, evals: usize) {
+        let mut g = self.lock();
+        let mut o = JsonObj::new();
+        o.insert("type", "resumed".into());
+        o.insert("evals", evals.into());
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+    }
+
+    /// Append one event per evaluation past `emitted` and refresh the
+    /// progress counters. Returns the new cursor.
+    fn emit_progress(&self, log: &[Evaluation], emitted: usize, batches: u64) -> usize {
+        let mut g = self.lock();
+        for (i, e) in log.iter().enumerate().skip(emitted) {
+            let mut o = JsonObj::new();
+            o.insert("type", "eval".into());
+            o.insert("i", (i as u64).into());
+            o.insert("label", e.label.as_str().into());
+            o.insert(
+                "objectives",
+                Json::Arr(e.objectives.iter().map(|v| (*v).into()).collect()),
+            );
+            o.insert("cached", e.cached.into());
+            if let Some(err) = &e.error {
+                o.insert("error", err.as_str().into());
+            }
+            Self::push_event_locked(&mut g, o);
+        }
+        g.evals = log.len();
+        g.batches = batches;
+        self.cond.notify_all();
+        log.len()
+    }
+
+    fn finish_done(&self, report: &ExplorationReport) {
+        let mut g = self.lock();
+        g.evals = report.evals.len();
+        g.report = Some(format!("{}\n", report.to_json().to_pretty()));
+        g.status = JobStatus::Done;
+        let mut o = JsonObj::new();
+        o.insert("type", "done".into());
+        o.insert("evals", report.evals.len().into());
+        match report.best() {
+            Some(b) => o.insert("best", b.label.as_str().into()),
+            None => o.insert("best", Json::Null),
+        }
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+    }
+
+    fn finish_cancelled(&self) {
+        let mut g = self.lock();
+        g.status = JobStatus::Cancelled;
+        let mut o = JsonObj::new();
+        o.insert("type", "cancelled".into());
+        o.insert("evals", g.evals.into());
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+    }
+
+    fn finish_failed(&self, message: String) {
+        let mut g = self.lock();
+        g.status = JobStatus::Failed;
+        let mut o = JsonObj::new();
+        o.insert("type", "failed".into());
+        o.insert("error", message.as_str().into());
+        Self::push_event_locked(&mut g, o);
+        g.error = Some(message);
+        self.cond.notify_all();
+    }
+}
+
+enum Outcome {
+    Done(ExplorationReport),
+    Cancelled,
+}
+
+/// Run one job to completion on the current thread (the server spawns
+/// one thread per job). Never panics out — failures and caught panics
+/// land in the job's `failed` state.
+pub fn run(job: Arc<Job>, shared: Arc<SharedCaches>) {
+    let started = Instant::now();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        drive(&job, &shared, started)
+    }));
+    match outcome {
+        Ok(Ok(Outcome::Done(report))) => job.finish_done(&report),
+        Ok(Ok(Outcome::Cancelled)) => job.finish_cancelled(),
+        Ok(Err(e)) => job.finish_failed(format!("{e:#}")),
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                format!("job panicked: {s}")
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                format!("job panicked: {s}")
+            } else {
+                "job panicked".to_string()
+            };
+            job.finish_failed(msg);
+        }
+    }
+}
+
+fn drive(job: &Job, shared: &Arc<SharedCaches>, started: Instant) -> Result<Outcome> {
+    let spec = &job.spec;
+    let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
+        match (&spec.space_doc, &spec.preset) {
+            (Some(doc), None) => {
+                let s = space_from_json_value(doc).context("jobs: parsing \"space\"")?;
+                let objs = objectives_from_json(doc)
+                    .context("jobs: parsing \"space\" objectives")?
+                    .unwrap_or_else(|| vec![Box::new(Makespan), Box::new(Edp)]);
+                (s, objs)
+            }
+            (None, Some(name)) => preset(name)?,
+            _ => crate::bail!("jobs: exactly one of \"space\" or \"preset\" required"),
+        };
+    let explorer = explorer_by_name(&spec.explorer, spec.seed)?;
+    let budget = spec.budget.unwrap_or_else(|| {
+        if spec.explorer == "grid" {
+            space.size().min(1024) as usize
+        } else {
+            64
+        }
+    });
+    let defaults = ExploreOpts::default();
+    let batch = spec.batch.unwrap_or(defaults.batch);
+    let opts = ExploreOpts {
+        budget,
+        workers: spec.workers,
+        cache: spec.cache,
+        batch,
+        ..defaults
+    };
+    let registry = Registry::standard();
+    job.mark_running(space.name(), budget, opts.workers);
+    std::thread::scope(|scope| -> Result<Outcome> {
+        let mut session = ExplorationSession::new_in(
+            scope,
+            space.as_ref(),
+            &objectives,
+            explorer.as_ref(),
+            &registry,
+            &opts,
+            Some(Arc::clone(shared)),
+        )?;
+        let mut emitted = 0usize;
+        loop {
+            match job.control() {
+                Control::Cancel => return Ok(Outcome::Cancelled),
+                Control::Pause => {
+                    let text = session.checkpoint().to_json().to_pretty();
+                    drop(session);
+                    if job.park_paused(text) == Control::Cancel {
+                        return Ok(Outcome::Cancelled);
+                    }
+                    // Round-trip through the serialized form: resuming in
+                    // process takes the same path as an external client.
+                    let text = job
+                        .checkpoint_text()
+                        .ok_or_else(|| crate::format_err!("jobs: checkpoint vanished"))?;
+                    let doc = Json::parse(&text).context("jobs: reparsing checkpoint")?;
+                    let ckpt = Checkpoint::from_json(&doc)?;
+                    session = ExplorationSession::resume_in(
+                        scope,
+                        space.as_ref(),
+                        &objectives,
+                        explorer.as_ref(),
+                        &registry,
+                        &opts,
+                        ckpt,
+                        Some(Arc::clone(shared)),
+                    )?;
+                    job.emit_resumed(session.evals_done());
+                }
+                Control::Run => {}
+            }
+            if !session.step() {
+                break;
+            }
+            emitted = job.emit_progress(session.log(), emitted, session.batches_done());
+        }
+        Ok(Outcome::Done(
+            session.into_report(started.elapsed().as_secs_f64()),
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_requires_space_or_preset() {
+        let doc = Json::parse("{}").unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("\"space\""), "{err}");
+        assert!(err.contains("\"preset\""), "{err}");
+    }
+
+    #[test]
+    fn spec_rejects_both_space_and_preset() {
+        let doc = Json::parse(r#"{"space": {}, "preset": "mapping"}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn spec_rejects_unknown_preset_and_explorer() {
+        let doc = Json::parse(r#"{"preset": "no-such-space"}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("unknown preset 'no-such-space'"), "{err}");
+        let doc = Json::parse(r#"{"preset": "mapping", "explorer": "psychic"}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("psychic"), "{err}");
+    }
+
+    #[test]
+    fn spec_defaults_and_overrides() {
+        let doc = Json::parse(r#"{"preset": "mapping"}"#).unwrap();
+        let spec = JobSpec::from_json(&doc, 3).unwrap();
+        assert_eq!(spec.explorer, "grid");
+        assert_eq!(spec.seed, 0xD5E);
+        assert_eq!(spec.workers, 3);
+        assert!(spec.cache);
+        assert!(spec.budget.is_none());
+        let doc = Json::parse(
+            r#"{"preset": "mapping", "explorer": "anneal", "seed": 9,
+                "budget": 12, "workers": 5, "cache": false}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&doc, 3).unwrap();
+        assert_eq!(spec.explorer, "anneal");
+        assert_eq!(spec.seed, 9);
+        assert_eq!(spec.budget, Some(12));
+        assert_eq!(spec.workers, 5);
+        assert!(!spec.cache);
+    }
+
+    #[test]
+    fn spec_rejects_bad_field_types() {
+        let doc = Json::parse(r#"{"preset": "mapping", "budget": "lots"}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("\"budget\""), "{err}");
+        let doc = Json::parse(r#"{"space": "not-an-object"}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("JSON object"), "{err}");
+    }
+
+    #[test]
+    fn queued_job_reports_spec_shape() {
+        let doc = Json::parse(r#"{"preset": "mapping", "explorer": "anneal", "budget": 4}"#)
+            .unwrap();
+        let job = Job::new(7, JobSpec::from_json(&doc, 2).unwrap());
+        let s = job.status_json();
+        assert_eq!(s.get("id").and_then(|v| v.as_u64()), Some(7));
+        assert_eq!(s.get("status").and_then(|v| v.as_str()), Some("queued"));
+        assert_eq!(s.get("space").and_then(|v| v.as_str()), Some("mapping"));
+        assert_eq!(s.get("explorer").and_then(|v| v.as_str()), Some("anneal"));
+        assert_eq!(s.get("budget").and_then(|v| v.as_u64()), Some(4));
+    }
+
+    #[test]
+    fn control_transitions_are_validated() {
+        let doc = Json::parse(r#"{"preset": "mapping"}"#).unwrap();
+        let job = Job::new(1, JobSpec::from_json(&doc, 2).unwrap());
+        assert_eq!(job.request_pause().unwrap(), "pausing");
+        assert_eq!(job.request_resume().unwrap(), "running");
+        assert_eq!(job.request_cancel().unwrap(), "cancelling");
+        // cancel wins over later pause/resume requests
+        let err = job.request_pause().unwrap_err().to_string();
+        assert!(err.contains("cancelled"), "{err}");
+        // a finished job rejects everything
+        job.finish_failed("synthetic".to_string());
+        for r in [job.request_pause(), job.request_resume(), job.request_cancel()] {
+            let err = r.unwrap_err().to_string();
+            assert!(err.contains("already failed"), "{err}");
+        }
+        let (events, closed) = job.events_since(0, Duration::ZERO);
+        assert!(closed);
+        assert_eq!(events.len(), 1);
+        assert!(events[0].contains("failed"), "{}", events[0]);
+    }
+}

@@ -1,0 +1,332 @@
+//! Exploration as a service: a zero-dependency HTTP daemon over
+//! [`std::net::TcpListener`] exposing the resumable exploration stack
+//! ([`ExplorationSession`](crate::dse::explore::ExplorationSession)) as a
+//! job queue.
+//!
+//! | Endpoint | Effect |
+//! |---|---|
+//! | `POST /jobs` | submit a job (body: `{"preset": ...}` or `{"space": {...}}` plus `explorer`/`budget`/`seed`/`workers`/`batch`/`cache`) → `{"id", "status"}` |
+//! | `GET /jobs` | all jobs, sorted by id |
+//! | `GET /jobs/:id` | status + progress snapshot |
+//! | `GET /jobs/:id/events` | chunked JSONL stream of evaluations as they land |
+//! | `POST /jobs/:id/pause` | checkpoint at the next step boundary and park |
+//! | `POST /jobs/:id/resume` | rebuild the session from the checkpoint and continue |
+//! | `POST /jobs/:id/cancel` | stop at the next step boundary |
+//! | `GET /jobs/:id/checkpoint` | the latest serialized [`Checkpoint`](crate::dse::explore::Checkpoint) |
+//! | `GET /jobs/:id/report` | the final report (409 until done) |
+//! | `GET /stats` | process-wide cache counters ([`SharedCaches`]) |
+//! | `GET /healthz` | liveness probe |
+//! | `POST /shutdown` | stop accepting connections |
+//!
+//! Concurrency model: one thread per connection, one thread per job.
+//! Every job joins the server's [`SharedCaches`], so concurrent jobs over
+//! the same topology build each evaluation plan **once** process-wide and
+//! share memoized scores — while each job's report stays bit-identical to
+//! what a standalone `mldse explore` run would print (modulo wall-clock
+//! fields). Requests are logged through [`crate::util::logger`] with
+//! monotonic timestamps.
+
+pub mod http;
+pub mod jobs;
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dse::explore::SharedCaches;
+use crate::util::error::{Context, Result};
+use crate::util::json::{Json, JsonObj};
+use crate::util::logger;
+
+use http::Request;
+use jobs::{Job, JobSpec};
+
+/// Shared server state: the job table and the process-wide caches every
+/// job joins.
+pub struct ServerState {
+    shared: Arc<SharedCaches>,
+    jobs: Mutex<HashMap<u64, Arc<Job>>>,
+    next_job: AtomicU64,
+    shutdown: AtomicBool,
+    default_workers: usize,
+    port: u16,
+}
+
+/// The daemon: a bound listener plus its [`ServerState`].
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+impl Server {
+    /// Bind on `127.0.0.1:port` (`0` picks an ephemeral port — read it
+    /// back with [`Server::port`]). `default_workers` is the evaluation
+    /// worker count for jobs that do not set their own.
+    pub fn bind(port: u16, default_workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("serve: binding 127.0.0.1:{port}"))?;
+        let port = listener.local_addr().context("serve: local address")?.port();
+        Ok(Server {
+            listener,
+            state: Arc::new(ServerState {
+                shared: Arc::new(SharedCaches::new()),
+                jobs: Mutex::new(HashMap::new()),
+                next_job: AtomicU64::new(1),
+                shutdown: AtomicBool::new(false),
+                default_workers,
+                port,
+            }),
+        })
+    }
+
+    /// The bound port.
+    pub fn port(&self) -> u16 {
+        self.state.port
+    }
+
+    /// Accept connections until `POST /shutdown`. One thread per
+    /// connection; job threads outlive their submitting connection.
+    pub fn run(self) -> Result<()> {
+        for conn in self.listener.incoming() {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || handle_connection(stream, &state));
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
+    let started = Instant::now();
+    let mut reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    let req = match http::parse_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = respond_error(&mut stream, 400, &format!("{e:#}"));
+            logger::request("-", "-", 400, started.elapsed());
+            return;
+        }
+    };
+    let status = match route(&mut stream, state, &req) {
+        Ok(code) => code,
+        Err(e) => {
+            // routing errors are I/O failures (client gone mid-response)
+            let _ = respond_error(&mut stream, 500, &format!("{e:#}"));
+            500
+        }
+    };
+    logger::request(&req.method, &req.path, status, started.elapsed());
+}
+
+fn respond_error(stream: &mut TcpStream, status: u16, message: &str) -> std::io::Result<()> {
+    let mut o = JsonObj::new();
+    o.insert("error", message.into());
+    http::write_json(stream, status, &Json::Obj(o))
+}
+
+fn respond_message(
+    stream: &mut TcpStream,
+    status: u16,
+    key: &str,
+    value: &str,
+) -> std::io::Result<()> {
+    let mut o = JsonObj::new();
+    o.insert(key, value.into());
+    http::write_json(stream, status, &Json::Obj(o))
+}
+
+fn find_job(state: &ServerState, id: &str) -> Option<Arc<Job>> {
+    let id: u64 = id.parse().ok()?;
+    state
+        .jobs
+        .lock()
+        .expect("job table poisoned")
+        .get(&id)
+        .map(Arc::clone)
+}
+
+/// Dispatch one request. The returned status is what actually went over
+/// the wire (for the request log); `Err` means the response itself could
+/// not be written.
+fn route(stream: &mut TcpStream, state: &Arc<ServerState>, req: &Request) -> Result<u16> {
+    let path = req.path.split('?').next().unwrap_or("");
+    let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => {
+            let mut o = JsonObj::new();
+            o.insert("ok", true.into());
+            http::write_json(stream, 200, &Json::Obj(o))?;
+            Ok(200)
+        }
+        ("GET", ["stats"]) => {
+            let jobs = state.jobs.lock().expect("job table poisoned").len();
+            let mut o = JsonObj::new();
+            o.insert("jobs", jobs.into());
+            o.insert("plan_builds", state.shared.plan_builds().into());
+            o.insert("plan_hits", state.shared.plan_hits().into());
+            o.insert("memo_entries", state.shared.memo_len().into());
+            http::write_json(stream, 200, &Json::Obj(o))?;
+            Ok(200)
+        }
+        ("POST", ["shutdown"]) => {
+            respond_message(stream, 200, "status", "shutting down")?;
+            state.shutdown.store(true, Ordering::SeqCst);
+            // unblock the accept loop so it observes the flag
+            let _ = TcpStream::connect(("127.0.0.1", state.port));
+            Ok(200)
+        }
+        ("POST", ["jobs"]) => post_job(stream, state, req),
+        ("GET", ["jobs"]) => {
+            let table = state.jobs.lock().expect("job table poisoned");
+            let mut entries: Vec<(u64, Arc<Job>)> =
+                table.iter().map(|(id, j)| (*id, Arc::clone(j))).collect();
+            drop(table);
+            entries.sort_by_key(|(id, _)| *id);
+            let list: Vec<Json> = entries.iter().map(|(_, j)| j.status_json()).collect();
+            let mut o = JsonObj::new();
+            o.insert("jobs", Json::Arr(list));
+            http::write_json(stream, 200, &Json::Obj(o))?;
+            Ok(200)
+        }
+        (method, ["jobs", id]) => {
+            let Some(job) = find_job(state, id) else {
+                respond_error(stream, 404, &format!("no job '{id}'"))?;
+                return Ok(404);
+            };
+            if method != "GET" {
+                respond_error(stream, 405, "use GET for job status")?;
+                return Ok(405);
+            }
+            http::write_json(stream, 200, &job.status_json())?;
+            Ok(200)
+        }
+        (method, ["jobs", id, action]) => {
+            let Some(job) = find_job(state, id) else {
+                respond_error(stream, 404, &format!("no job '{id}'"))?;
+                return Ok(404);
+            };
+            job_action(stream, &job, method, action)
+        }
+        _ => {
+            respond_error(stream, 404, &format!("no route for {} {path}", req.method))?;
+            Ok(404)
+        }
+    }
+}
+
+fn post_job(stream: &mut TcpStream, state: &Arc<ServerState>, req: &Request) -> Result<u16> {
+    let parsed = Json::parse(&req.body)
+        .map_err(|e| crate::format_err!("jobs: parsing request body: {e}"))
+        .and_then(|doc| JobSpec::from_json(&doc, state.default_workers));
+    let spec = match parsed {
+        Ok(spec) => spec,
+        Err(e) => {
+            respond_error(stream, 400, &format!("{e:#}"))?;
+            return Ok(400);
+        }
+    };
+    let id = state.next_job.fetch_add(1, Ordering::SeqCst);
+    let job = Job::new(id, spec);
+    state
+        .jobs
+        .lock()
+        .expect("job table poisoned")
+        .insert(id, Arc::clone(&job));
+    let shared = Arc::clone(&state.shared);
+    let runner = Arc::clone(&job);
+    std::thread::spawn(move || jobs::run(runner, shared));
+    let mut o = JsonObj::new();
+    o.insert("id", id.into());
+    o.insert("status", job.status().as_str().into());
+    http::write_json(stream, 201, &Json::Obj(o))?;
+    Ok(201)
+}
+
+fn job_action(stream: &mut TcpStream, job: &Arc<Job>, method: &str, action: &str) -> Result<u16> {
+    let control = |stream: &mut TcpStream, result: Result<&'static str>| -> Result<u16> {
+        match result {
+            Ok(status) => {
+                respond_message(stream, 202, "status", status)?;
+                Ok(202)
+            }
+            Err(e) => {
+                respond_error(stream, 409, &format!("{e:#}"))?;
+                Ok(409)
+            }
+        }
+    };
+    match (method, action) {
+        ("POST", "pause") => control(stream, job.request_pause()),
+        ("POST", "resume") => control(stream, job.request_resume()),
+        ("POST", "cancel") => control(stream, job.request_cancel()),
+        ("GET", "report") => match job.report_text() {
+            Some(text) => {
+                http::write_response(stream, 200, "application/json", &text)?;
+                Ok(200)
+            }
+            None => {
+                respond_error(
+                    stream,
+                    409,
+                    &format!(
+                        "job {} has no report yet (status {})",
+                        job.id,
+                        job.status().as_str()
+                    ),
+                )?;
+                Ok(409)
+            }
+        },
+        ("GET", "checkpoint") => match job.checkpoint_text() {
+            Some(text) => {
+                http::write_response(stream, 200, "application/json", &text)?;
+                Ok(200)
+            }
+            None => {
+                respond_error(
+                    stream,
+                    409,
+                    &format!("job {} has not written a checkpoint (pause it first)", job.id),
+                )?;
+                Ok(409)
+            }
+        },
+        ("GET", "events") => stream_events(stream, job),
+        _ => {
+            respond_error(stream, 404, &format!("no route for {method} .../{action}"))?;
+            Ok(404)
+        }
+    }
+}
+
+/// Stream the job's event log as chunked NDJSON, following it live until
+/// the job reaches a terminal state.
+fn stream_events(stream: &mut TcpStream, job: &Arc<Job>) -> Result<u16> {
+    http::start_chunked(stream, "application/x-ndjson")?;
+    let mut cursor = 0usize;
+    loop {
+        let (lines, closed) = job.events_since(cursor, Duration::from_millis(200));
+        cursor += lines.len();
+        for line in &lines {
+            http::write_chunk(stream, &format!("{line}\n"))?;
+        }
+        if closed {
+            break;
+        }
+    }
+    http::finish_chunked(stream)?;
+    Ok(200)
+}

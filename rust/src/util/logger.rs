@@ -1,8 +1,11 @@
 //! Leveled stderr logging controlled by the `MLDSE_LOG` environment variable
-//! (`error`, `warn`, `info` (default), `debug`, `trace`).
+//! (`error`, `warn`, `info` (default), `debug`, `trace`), plus monotonic
+//! elapsed-time request logging for the exploration service
+//! ([`crate::serve`]).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -66,6 +69,39 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+// ----------------------------------------------------------------------
+// Monotonic elapsed clock + request logging
+// ----------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic time since the process first asked for it. The first call
+/// pins the epoch; all later calls measure against it, so timestamps in
+/// request logs are comparable within one process and never go backwards
+/// (wall-clock adjustments don't affect them).
+pub fn elapsed() -> Duration {
+    EPOCH.get_or_init(Instant::now).elapsed()
+}
+
+/// Render one served request as a log line body:
+/// `GET /jobs/3 -> 200 (1.8ms) [+12.345s]`.
+pub fn format_request(method: &str, path: &str, status: u16, duration: Duration) -> String {
+    format!(
+        "{method} {path} -> {status} ({:.1}ms) [+{:.3}s]",
+        duration.as_secs_f64() * 1e3,
+        elapsed().as_secs_f64(),
+    )
+}
+
+/// Log one served request (method, path, status, handler duration) at
+/// info level with the monotonic elapsed timestamp.
+pub fn request(method: &str, path: &str, status: u16, duration: Duration) {
+    log(
+        Level::Info,
+        format_args!("{}", format_request(method, path, status, duration)),
+    );
+}
+
 #[macro_export]
 macro_rules! log_error { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, format_args!($($t)*)) } }
 #[macro_export]
@@ -94,5 +130,21 @@ mod tests {
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Error));
         set_level(prev);
+    }
+
+    #[test]
+    fn elapsed_is_monotonic() {
+        let a = elapsed();
+        let b = elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn request_line_has_method_path_status_duration() {
+        let line = format_request("GET", "/jobs/3", 200, Duration::from_micros(1800));
+        assert!(line.starts_with("GET /jobs/3 -> 200"), "{line}");
+        assert!(line.contains("(1.8ms)"), "{line}");
+        assert!(line.contains("[+"), "{line}");
+        assert!(line.ends_with("s]"), "{line}");
     }
 }

@@ -5,6 +5,11 @@
 //! Also the three-tier acceptance check: the composed space explored from
 //! the CLI preset and from the shipped JSON space file produce
 //! bit-identical reports at every worker count.
+//!
+//! Checkpoint/resume coverage: the `--checkpoint`/`--checkpoint-every`/
+//! `--resume` flags validate with errors naming the flag, and a run that
+//! checkpoints every step then resumes from its final snapshot prints a
+//! report bit-identical to an uninterrupted run.
 
 use std::process::Command;
 
@@ -123,8 +128,12 @@ fn three_tier_report(source: &[&str], workers: &str) -> String {
         String::from_utf8_lossy(&out.stderr)
     );
     let stdout = String::from_utf8(out.stdout).expect("utf8 report");
-    // zero the timing fields line-by-line (the report is pretty-printed,
-    // one key per line)
+    zeroed_timing(&stdout)
+}
+
+/// Zero the wall-clock-derived report fields line-by-line (the report is
+/// pretty-printed, one key per line).
+fn zeroed_timing(stdout: &str) -> String {
     stdout
         .lines()
         .map(|l| {
@@ -175,4 +184,145 @@ fn zero_env_override_is_rejected() {
     assert!(!out.status.success());
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(stderr.contains("MLDSE_WORKERS"), "{stderr}");
+}
+
+#[test]
+fn checkpoint_every_requires_checkpoint_flag() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--checkpoint-every", "4"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--checkpoint-every requires --checkpoint FILE"),
+        "{stderr}"
+    );
+}
+
+#[test]
+fn checkpoint_every_zero_is_a_named_error() {
+    let out = mldse()
+        .args(EXPLORE)
+        .args(["--checkpoint", "unused.json", "--checkpoint-every", "0"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--checkpoint-every: invalid value '0'"),
+        "{stderr}"
+    );
+}
+
+#[test]
+fn resume_conflicts_with_run_shaping_flags() {
+    // --budget (like --explorer, --seed, --no-cache) is baked into the
+    // checkpoint; supplying it alongside --resume is a named error
+    let out = mldse()
+        .args([
+            "explore",
+            "--preset",
+            "mapping",
+            "--budget",
+            "6",
+            "--resume",
+            "nonexistent.json",
+        ])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("--budget conflicts with --resume"),
+        "{stderr}"
+    );
+}
+
+#[test]
+fn serve_flags_are_validated_before_binding() {
+    let out = mldse()
+        .args(["serve", "--port", "lots"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--port: invalid value 'lots'"), "{stderr}");
+
+    let out = mldse()
+        .args(["serve", "--bogus"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown flag --bogus"), "{stderr}");
+}
+
+#[test]
+fn checkpoint_resume_round_trip_matches_uninterrupted_run() {
+    let ckpt_path = std::env::temp_dir().join(format!(
+        "mldse-cli-ckpt-{}.json",
+        std::process::id()
+    ));
+    let ckpt = ckpt_path.to_str().expect("utf8 temp path");
+
+    // golden: uninterrupted three-tier run (same shape as the
+    // determinism suite above)
+    let golden = three_tier_report(&["--preset", "three-tier-quick"], "2");
+
+    // the same run, checkpointing every step: the snapshots must not
+    // perturb the report
+    let out = mldse()
+        .args([
+            "explore",
+            "--preset",
+            "three-tier-quick",
+            "--explorer",
+            "anneal-tiered",
+            "--budget",
+            "6",
+            "--json",
+            "--workers",
+            "2",
+            "--checkpoint",
+            ckpt,
+            "--checkpoint-every",
+            "1",
+        ])
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let with_ckpt = zeroed_timing(&String::from_utf8(out.stdout).expect("utf8 report"));
+    assert_eq!(golden, with_ckpt, "checkpointing perturbed the run");
+
+    // resume from the final snapshot: the run is already complete, so the
+    // resumed report must be bit-identical (explorer and budget come from
+    // the checkpoint, not flags)
+    let out = mldse()
+        .args([
+            "explore",
+            "--preset",
+            "three-tier-quick",
+            "--json",
+            "--workers",
+            "2",
+            "--resume",
+            ckpt,
+        ])
+        .output()
+        .expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let resumed = zeroed_timing(&String::from_utf8(out.stdout).expect("utf8 report"));
+    assert_eq!(golden, resumed, "resumed report diverged");
+
+    let _ = std::fs::remove_file(&ckpt_path);
 }

@@ -13,11 +13,24 @@
 //! * **Panic hardening** — a deliberately panicking objective surfaces as
 //!   a counted failure carrying the candidate label, instead of aborting
 //!   the sweep.
+//! * **Checkpoint/resume determinism** — interrupting a session mid-run,
+//!   serializing its `Checkpoint` through the JSON wire format, and
+//!   resuming produces a report bit-identical to an uninterrupted run,
+//!   across {grid, anneal, anneal-tiered} and worker counts {1, 2, 8};
+//!   schema-version and space-fingerprint mismatches are rejected as
+//!   errors, not panics.
+//! * **Cross-session cache sharing** — two sessions joined to one
+//!   `SharedCaches` build the placement `EvalPlan` once process-wide,
+//!   without perturbing either session's own report.
+
+use std::sync::Arc;
 
 use mldse::dse::explore::{
-    explore, explorer_by_name, placement_demo, three_tier, Axis, AxisKind, Candidate, Design,
-    DesignSpace, DesignView, ExplorationReport, ExploreOpts, GridExplorer, Makespan, Objective,
+    explore, explorer_by_name, placement_demo, three_tier, Axis, AxisKind, Candidate, Checkpoint,
+    Design, DesignSpace, DesignView, ExplorationReport, ExplorationSession, ExploreOpts,
+    GridExplorer, Makespan, Objective, SharedCaches, CHECKPOINT_SCHEMA_VERSION,
 };
+use mldse::util::json::Json;
 use mldse::eval::Registry;
 use mldse::hwir::{ComputeAttrs, Coord, Element, Hardware, MemoryAttrs, SpaceMatrix, SpacePoint};
 use mldse::mapping::Mapping;
@@ -297,4 +310,259 @@ fn panicking_objective_is_a_counted_failure_not_an_abort() {
         // and the best ignores the exploded candidate
         assert_eq!(r.best().unwrap().candidate.0, vec![0]);
     }
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_across_workers() {
+    // Acceptance: interrupt a session mid-run, push its checkpoint
+    // through the JSON wire format, resume, and the final report must be
+    // byte-for-byte identical to an uninterrupted run — for a batched
+    // explorer (grid) and a sequential one (anneal), at every worker
+    // count.
+    let space = placement_demo("ckpt-suite", (2, 2), 6);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    for explorer_name in ["grid", "anneal"] {
+        let explorer = explorer_by_name(explorer_name, 7).unwrap();
+        for workers in [1usize, 2, 8] {
+            let opts = ExploreOpts {
+                budget: 24,
+                batch: 4,
+                workers,
+                ..Default::default()
+            };
+            let golden = report_json(
+                explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                    .unwrap_or_else(|e| panic!("{explorer_name}/workers {workers}: {e:#}")),
+            );
+            let resumed = std::thread::scope(|scope| {
+                let mut session = ExplorationSession::new_in(
+                    scope,
+                    &space,
+                    &objectives,
+                    explorer.as_ref(),
+                    &registry,
+                    &opts,
+                    None,
+                )
+                .unwrap();
+                for i in 0..2 {
+                    assert!(session.step(), "{explorer_name}: step {i} should advance");
+                }
+                // full wire round trip: serialize, re-parse, resume
+                let text = session.checkpoint().to_json().to_pretty();
+                drop(session);
+                let ckpt = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+                let mut session = ExplorationSession::resume_in(
+                    scope,
+                    &space,
+                    &objectives,
+                    explorer.as_ref(),
+                    &registry,
+                    &opts,
+                    ckpt,
+                    None,
+                )
+                .unwrap();
+                while session.step() {}
+                session.into_report(0.0)
+            });
+            assert_eq!(
+                golden,
+                report_json(resumed),
+                "{explorer_name}: workers={workers} resume diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn nested_checkpoint_resume_is_bit_identical() {
+    // The same wire round trip over the composed three-tier space with
+    // the tier-aware annealer, whose state carries a nested-resample RNG.
+    let space = three_tier("ckpt-three-tier", true).unwrap();
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    let explorer = explorer_by_name("anneal-tiered", 17).unwrap();
+    for workers in [1usize, 2, 8] {
+        let opts = ExploreOpts {
+            budget: 8,
+            workers,
+            ..Default::default()
+        };
+        let golden = report_json(
+            explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                .unwrap_or_else(|e| panic!("workers {workers}: {e:#}")),
+        );
+        let resumed = std::thread::scope(|scope| {
+            let mut session = ExplorationSession::new_in(
+                scope,
+                &space,
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                None,
+            )
+            .unwrap();
+            for i in 0..2 {
+                assert!(session.step(), "step {i} should advance");
+            }
+            let text = session.checkpoint().to_json().to_pretty();
+            drop(session);
+            let ckpt = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+            let mut session = ExplorationSession::resume_in(
+                scope,
+                &space,
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                ckpt,
+                None,
+            )
+            .unwrap();
+            while session.step() {}
+            session.into_report(0.0)
+        });
+        assert_eq!(
+            golden,
+            report_json(resumed),
+            "anneal-tiered: workers={workers} resume diverged on the nested space"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_schema_version_mismatch_is_an_error() {
+    assert_eq!(CHECKPOINT_SCHEMA_VERSION, 1);
+    let err = Checkpoint::from_json(&Json::parse(r#"{"schema_version": 999}"#).unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("schema version 999"), "{err}");
+    assert!(err.contains("expected 1"), "{err}");
+
+    let err = Checkpoint::from_json(&Json::parse("{}").unwrap())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("missing \"schema_version\""), "{err}");
+}
+
+#[test]
+fn resume_rejects_wrong_space_and_wrong_explorer() {
+    let space_a = placement_demo("ckpt-space-a", (2, 2), 4);
+    let space_b = placement_demo("ckpt-space-b", (2, 2), 6);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    let explorer = explorer_by_name("grid", 1).unwrap();
+    let opts = ExploreOpts {
+        budget: 4,
+        workers: 1,
+        ..Default::default()
+    };
+    std::thread::scope(|scope| {
+        let mut session = ExplorationSession::new_in(
+            scope,
+            &space_a,
+            &objectives,
+            explorer.as_ref(),
+            &registry,
+            &opts,
+            None,
+        )
+        .unwrap();
+        assert!(session.step());
+        let ckpt = session.checkpoint();
+        drop(session);
+
+        // wrong space: fingerprint mismatch names both spaces
+        let err = match ExplorationSession::resume_in(
+            scope,
+            &space_b,
+            &objectives,
+            explorer.as_ref(),
+            &registry,
+            &opts,
+            ckpt.clone(),
+            None,
+        ) {
+            Ok(_) => panic!("resume on a different space must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("fingerprint"), "{err}");
+        assert!(err.contains("ckpt-space-a"), "{err}");
+        assert!(err.contains("ckpt-space-b"), "{err}");
+
+        // wrong explorer: rejected by name
+        let wrong = explorer_by_name("random", 1).unwrap();
+        let err = match ExplorationSession::resume_in(
+            scope,
+            &space_a,
+            &objectives,
+            wrong.as_ref(),
+            &registry,
+            &opts,
+            ckpt,
+            None,
+        ) {
+            Ok(_) => panic!("resume with a different explorer must be rejected"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("explorer 'grid'"), "{err}");
+        assert!(err.contains("'random'"), "{err}");
+    });
+}
+
+#[test]
+fn shared_caches_build_the_eval_plan_once_across_sessions() {
+    // Two sessions joined to one SharedCaches: the placement EvalPlan is
+    // physically built once process-wide, each session still reports its
+    // own logical setup build, and sharing never perturbs a session's
+    // report relative to a solo run.
+    let space = placement_demo("ckpt-shared", (2, 2), 4);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    let shared = Arc::new(SharedCaches::new());
+    let opts = ExploreOpts {
+        budget: 6,
+        workers: 1,
+        ..Default::default()
+    };
+    let mut reports = Vec::new();
+    for explorer_name in ["random", "grid"] {
+        let explorer = explorer_by_name(explorer_name, 1).unwrap();
+        let report = std::thread::scope(|scope| {
+            let mut session = ExplorationSession::new_in(
+                scope,
+                &space,
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                Some(Arc::clone(&shared)),
+            )
+            .unwrap();
+            while session.step() {}
+            session.into_report(0.0)
+        });
+        reports.push(report);
+    }
+    assert_eq!(
+        shared.plan_builds(),
+        1,
+        "one physical EvalPlan across both sessions"
+    );
+    assert!(
+        shared.plan_hits() > 0,
+        "the second session reused the shared plan"
+    );
+    assert!(shared.memo_len() > 0, "scores are memoized process-wide");
+    for r in &reports {
+        assert_eq!(r.setup_builds, 1, "each job accounts its own logical build");
+    }
+    // the grid session's report matches a solo (unshared) grid run byte
+    // for byte, even where its scores were served from the shared memo
+    let explorer = explorer_by_name("grid", 1).unwrap();
+    let solo = explore(&space, &objectives, explorer.as_ref(), &registry, &opts).unwrap();
+    assert_eq!(report_json(solo), report_json(reports.pop().unwrap()));
 }

@@ -1,0 +1,328 @@
+//! End-to-end tests for the `mldse serve` daemon, driven over real TCP
+//! sockets against an in-process [`Server`] on an ephemeral port:
+//!
+//! * liveness, stats and routing basics;
+//! * submit → run → done, with the final report and the JSONL event
+//!   stream both matching the run;
+//! * the acceptance criterion that two concurrent jobs over the same
+//!   topology build the evaluation plan exactly once process-wide;
+//! * pause → checkpoint → resume over HTTP, bit-identical (modulo
+//!   wall-clock fields) to an uninterrupted job;
+//! * malformed submissions and control requests fail with 4xx statuses,
+//!   never a wedged job.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use mldse::serve::Server;
+use mldse::util::json::Json;
+
+fn start_server() -> u16 {
+    let server = Server::bind(0, 2).expect("bind ephemeral port");
+    let port = server.port();
+    thread::spawn(move || server.run().expect("server run"));
+    port
+}
+
+/// One HTTP/1.1 exchange (the daemon closes after each response);
+/// returns the status code and the decoded body.
+fn request(port: u16, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send request");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {head:?}"));
+    let body = if head
+        .to_ascii_lowercase()
+        .contains("transfer-encoding: chunked")
+    {
+        dechunk(body)
+    } else {
+        body.to_string()
+    };
+    (status, body)
+}
+
+/// Undo chunked transfer framing (`<hex len>\r\n<data>\r\n` ... `0\r\n\r\n`).
+fn dechunk(mut body: &str) -> String {
+    let mut out = String::new();
+    while let Some((len_line, rest)) = body.split_once("\r\n") {
+        let len = usize::from_str_radix(len_line.trim(), 16).expect("chunk length");
+        if len == 0 {
+            break;
+        }
+        out.push_str(&rest[..len]);
+        body = &rest[len + 2..];
+    }
+    out
+}
+
+fn parse_json(body: &str) -> Json {
+    Json::parse(body).unwrap_or_else(|e| panic!("bad JSON ({e}): {body}"))
+}
+
+fn submit(port: u16, spec: &str) -> u64 {
+    let (code, body) = request(port, "POST", "/jobs", spec);
+    assert_eq!(code, 201, "{body}");
+    parse_json(&body)
+        .get("id")
+        .and_then(|v| v.as_u64())
+        .expect("job id")
+}
+
+/// Poll `GET /jobs/:id` until it reports `want`; panics if the job hits
+/// a different terminal state first. Returns the final status body.
+fn wait_for_status(port: u16, id: u64, want: &str) -> String {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (code, body) = request(port, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(code, 200, "{body}");
+        let status = parse_json(&body)
+            .get("status")
+            .and_then(|v| v.as_str())
+            .expect("status field")
+            .to_string();
+        if status == want {
+            return body;
+        }
+        assert!(
+            !["done", "failed", "cancelled"].contains(&status.as_str()),
+            "job {id} reached terminal '{status}' while waiting for '{want}': {body}"
+        );
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for job {id} to be '{want}' (last: {body})"
+        );
+        thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn report_body(port: u16, id: u64) -> String {
+    let (code, body) = request(port, "GET", &format!("/jobs/{id}/report"), "");
+    assert_eq!(code, 200, "{body}");
+    body
+}
+
+/// Drop the wall-clock-derived lines from a pretty-printed report (the
+/// only legitimately nondeterministic entries).
+fn strip_timing(report: &str) -> String {
+    report
+        .lines()
+        .filter(|l| {
+            let t = l.trim_start();
+            !t.starts_with("\"elapsed_secs\"") && !t.starts_with("\"evals_per_sec\"")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn healthz_stats_and_unknown_routes() {
+    let port = start_server();
+    let (code, body) = request(port, "GET", "/healthz", "");
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(parse_json(&body).get("ok").and_then(|v| v.as_bool()), Some(true));
+
+    let (code, body) = request(port, "GET", "/stats", "");
+    assert_eq!(code, 200, "{body}");
+    let stats = parse_json(&body);
+    assert_eq!(stats.get("jobs").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(stats.get("plan_builds").and_then(|v| v.as_u64()), Some(0));
+
+    let (code, _) = request(port, "GET", "/nope", "");
+    assert_eq!(code, 404);
+    let (code, _) = request(port, "GET", "/jobs/999", "");
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn job_runs_to_done_with_report_and_event_stream() {
+    let port = start_server();
+    let id = submit(
+        port,
+        r#"{"preset": "mapping", "explorer": "anneal", "budget": 6, "seed": 7, "workers": 2}"#,
+    );
+    let status = wait_for_status(port, id, "done");
+    let snapshot = parse_json(&status);
+    assert_eq!(snapshot.get("evals").and_then(|v| v.as_u64()), Some(6));
+    assert_eq!(snapshot.get("explorer").and_then(|v| v.as_str()), Some("anneal"));
+
+    // report: schema-versioned JSON, 409 never applies once done
+    let report = parse_json(&report_body(port, id));
+    assert_eq!(report.get("schema_version").and_then(|v| v.as_u64()), Some(1));
+    assert_eq!(report.get("evals").and_then(|v| v.as_u64()), Some(6));
+    assert_eq!(report.get("explorer").and_then(|v| v.as_str()), Some("anneal"));
+    assert_eq!(report.get("space").and_then(|v| v.as_str()), Some("mapping"));
+
+    // event stream: a terminal job's stream drains and closes; one line
+    // per event, first "start", six "eval"s, last "done"
+    let (code, events) = request(port, "GET", &format!("/jobs/{id}/events"), "");
+    assert_eq!(code, 200);
+    let lines: Vec<Json> = events.lines().map(parse_json).collect();
+    let types: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            l.get("type")
+                .and_then(|v| v.as_str())
+                .expect("event type")
+                .to_string()
+        })
+        .collect();
+    assert_eq!(types.first().map(String::as_str), Some("start"), "{types:?}");
+    assert_eq!(types.last().map(String::as_str), Some("done"), "{types:?}");
+    assert_eq!(types.iter().filter(|t| *t == "eval").count(), 6, "{types:?}");
+    // eval events carry the objective vector and label
+    let eval = lines
+        .iter()
+        .find(|l| l.get("type").and_then(|v| v.as_str()) == Some("eval"))
+        .expect("an eval event");
+    assert!(eval.get("label").and_then(|v| v.as_str()).is_some());
+    assert!(eval.get("objectives").and_then(|v| v.as_arr()).is_some());
+}
+
+#[test]
+fn concurrent_jobs_build_the_eval_plan_exactly_once() {
+    // Acceptance: two concurrent jobs over the same placement topology
+    // share the process-wide caches — the EvalPlan is physically built
+    // once, every other acquisition is a hit.
+    let port = start_server();
+    let spec = r#"{"preset": "mapping", "budget": 8, "workers": 2}"#;
+    let a = submit(port, spec);
+    let b = submit(port, spec);
+    wait_for_status(port, a, "done");
+    wait_for_status(port, b, "done");
+
+    let (code, body) = request(port, "GET", "/stats", "");
+    assert_eq!(code, 200, "{body}");
+    let stats = parse_json(&body);
+    assert_eq!(stats.get("jobs").and_then(|v| v.as_u64()), Some(2), "{body}");
+    assert_eq!(
+        stats.get("plan_builds").and_then(|v| v.as_u64()),
+        Some(1),
+        "plan built more than once across concurrent jobs: {body}"
+    );
+    assert!(
+        stats.get("plan_hits").and_then(|v| v.as_u64()).unwrap_or(0) >= 1,
+        "{body}"
+    );
+    assert!(
+        stats.get("memo_entries").and_then(|v| v.as_u64()).unwrap_or(0) >= 1,
+        "{body}"
+    );
+
+    // sharing never leaks into per-job results: identical specs produce
+    // identical reports
+    assert_eq!(
+        strip_timing(&report_body(port, a)),
+        strip_timing(&report_body(port, b))
+    );
+}
+
+#[test]
+fn pause_checkpoint_resume_over_http_is_bit_identical() {
+    let port = start_server();
+    let spec = r#"{"preset": "mapping", "explorer": "anneal", "budget": 300, "seed": 41, "workers": 2}"#;
+
+    // interrupted job: pause as soon as possible, download the
+    // checkpoint, resume, run out
+    let id = submit(port, spec);
+    let (code, body) = request(port, "POST", &format!("/jobs/{id}/pause"), "");
+    assert_eq!(code, 202, "{body}");
+    wait_for_status(port, id, "paused");
+
+    let (code, ckpt) = request(port, "GET", &format!("/jobs/{id}/checkpoint"), "");
+    assert_eq!(code, 200, "{ckpt}");
+    let ckpt = parse_json(&ckpt);
+    assert_eq!(ckpt.get("schema_version").and_then(|v| v.as_u64()), Some(1));
+    assert_eq!(ckpt.get("explorer").and_then(|v| v.as_str()), Some("anneal"));
+
+    let (code, body) = request(port, "POST", &format!("/jobs/{id}/resume"), "");
+    assert_eq!(code, 202, "{body}");
+    wait_for_status(port, id, "done");
+
+    // the event stream recorded the pause/resume cycle
+    let (_, events) = request(port, "GET", &format!("/jobs/{id}/events"), "");
+    let types: Vec<String> = events
+        .lines()
+        .map(|l| {
+            parse_json(l)
+                .get("type")
+                .and_then(|v| v.as_str())
+                .expect("event type")
+                .to_string()
+        })
+        .collect();
+    assert!(types.iter().any(|t| t == "paused"), "{types:?}");
+    assert!(types.iter().any(|t| t == "resumed"), "{types:?}");
+
+    // control job: the identical spec, uninterrupted
+    let control = submit(port, spec);
+    wait_for_status(port, control, "done");
+    assert_eq!(
+        strip_timing(&report_body(port, id)),
+        strip_timing(&report_body(port, control)),
+        "pause/resume over HTTP perturbed the run"
+    );
+}
+
+#[test]
+fn bad_requests_fail_with_4xx() {
+    let port = start_server();
+
+    let (code, body) = request(port, "POST", "/jobs", "{nope");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("parsing request body"), "{body}");
+
+    let (code, body) = request(port, "POST", "/jobs", r#"{"preset": "nope"}"#);
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("unknown preset 'nope'"), "{body}");
+
+    let (code, body) = request(
+        port,
+        "POST",
+        "/jobs",
+        r#"{"preset": "mapping", "explorer": "psychic"}"#,
+    );
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("psychic"), "{body}");
+
+    let (code, body) = request(
+        port,
+        "POST",
+        "/jobs",
+        r#"{"preset": "mapping", "space": {"kind": "param"}}"#,
+    );
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("mutually exclusive"), "{body}");
+
+    let (code, body) = request(port, "POST", "/jobs", "{}");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("required"), "{body}");
+
+    // control endpoints on finished / missing jobs
+    let id = submit(port, r#"{"preset": "mapping", "budget": 4, "workers": 1}"#);
+    wait_for_status(port, id, "done");
+    let (code, body) = request(port, "POST", &format!("/jobs/{id}/pause"), "");
+    assert_eq!(code, 409, "{body}");
+    assert!(body.contains("already done"), "{body}");
+    let (code, _) = request(port, "POST", &format!("/jobs/{id}"), "");
+    assert_eq!(code, 405);
+    let (code, _) = request(port, "POST", "/jobs/12345/pause", "");
+    assert_eq!(code, 404);
+    // a finished job without a pause has no checkpoint
+    let (code, body) = request(port, "GET", &format!("/jobs/{id}/checkpoint"), "");
+    assert_eq!(code, 409, "{body}");
+}
