@@ -1,0 +1,433 @@
+//! The bench regression gate: diff two summary files.
+//!
+//! Scenarios are matched by name. Per scenario, in order of authority:
+//!
+//! 1. **Configuration drift** — budget, seed set or explorer changed
+//!    between the summaries. The comparison is meaningless; fail with a
+//!    baseline-refresh notice.
+//! 2. **Result fingerprints** — any break fails, regardless of how the
+//!    timing looks: bit-determinism is the engine's core contract, so a
+//!    fingerprint mismatch always wins over a throughput pass.
+//! 3. **Throughput** — `evals_per_sec` dropping more than the allowed
+//!    fraction below the baseline fails. Baselines with NaN/zero
+//!    throughput skip this check (with a note) instead of dividing by
+//!    zero; a NaN/zero *current* against a healthy baseline fails.
+//!
+//! A scenario present only in the current summary passes with a "new"
+//! note; one present only in the baseline fails (silently dropping a
+//! gated scenario would defeat the gate). A `bootstrap: true` baseline
+//! (placeholder committed before real numbers exist) passes wholesale
+//! with instructions to refresh it.
+
+use super::summary::{ScenarioRecord, Summary};
+use super::DEFAULT_MAX_LOSS;
+use crate::util::error::Result;
+
+/// Gate options.
+#[derive(Debug, Clone)]
+pub struct CompareOpts {
+    /// Maximum tolerated fractional throughput loss (0.10 = 10%).
+    pub max_loss: f64,
+}
+
+impl Default for CompareOpts {
+    fn default() -> Self {
+        CompareOpts {
+            max_loss: DEFAULT_MAX_LOSS,
+        }
+    }
+}
+
+/// Overall gate outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    Fail,
+}
+
+/// One scenario's diagnosis.
+#[derive(Debug, Clone)]
+pub struct ScenarioVerdict {
+    pub name: String,
+    pub passed: bool,
+    /// Human-readable diagnosis (always set, also on pass).
+    pub detail: String,
+}
+
+/// The full gate report.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    /// True when the baseline was a bootstrap placeholder (auto-pass).
+    pub bootstrap: bool,
+    pub scenarios: Vec<ScenarioVerdict>,
+}
+
+impl CompareReport {
+    pub fn verdict(&self) -> Verdict {
+        if self.scenarios.iter().all(|s| s.passed) {
+            Verdict::Pass
+        } else {
+            Verdict::Fail
+        }
+    }
+
+    /// Render the per-scenario diagnosis, one line each, then the verdict.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.bootstrap {
+            out.push_str(
+                "bench compare: baseline is a bootstrap placeholder - PASS\n\
+                 refresh it with real numbers:\n  \
+                 cargo run --release -- bench run --quick --out benches/baselines/quick.jsonl\n",
+            );
+            return out;
+        }
+        for s in &self.scenarios {
+            let tag = if s.passed { "PASS" } else { "FAIL" };
+            out.push_str(&format!("{tag} {}: {}\n", s.name, s.detail));
+        }
+        let failed = self.scenarios.iter().filter(|s| !s.passed).count();
+        if failed == 0 {
+            out.push_str(&format!(
+                "bench compare: PASS ({} scenario(s))\n",
+                self.scenarios.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "bench compare: FAIL ({failed} of {} scenario(s))\n\
+                 if the change is intended, refresh the baseline:\n  \
+                 cargo run --release -- bench run --quick --out benches/baselines/quick.jsonl\n",
+                self.scenarios.len()
+            ));
+        }
+        out
+    }
+}
+
+fn diff_scenario(base: &ScenarioRecord, cur: &ScenarioRecord, opts: &CompareOpts) -> ScenarioVerdict {
+    let name = base.name.clone();
+
+    // 1. configuration drift: comparing different runs is meaningless
+    let mut drift = Vec::new();
+    if base.budget != cur.budget {
+        drift.push(format!("budget {} -> {}", base.budget, cur.budget));
+    }
+    if base.seeds != cur.seeds {
+        drift.push(format!("seeds {:?} -> {:?}", base.seeds, cur.seeds));
+    }
+    if base.explorer != cur.explorer {
+        drift.push(format!("explorer '{}' -> '{}'", base.explorer, cur.explorer));
+    }
+    if !drift.is_empty() {
+        return ScenarioVerdict {
+            name,
+            passed: false,
+            detail: format!(
+                "scenario configuration drifted ({}); refresh the baseline",
+                drift.join(", ")
+            ),
+        };
+    }
+
+    // 2. result fingerprints: a break always fails, whatever the timing
+    if base.fingerprint != cur.fingerprint {
+        let seat = base
+            .run_fingerprints
+            .iter()
+            .zip(&cur.run_fingerprints)
+            .position(|(b, c)| b != c)
+            .and_then(|i| base.seeds.get(i).copied());
+        let at = match seat {
+            Some(seed) => format!(" (first divergence at seed {seed})"),
+            None => String::new(),
+        };
+        return ScenarioVerdict {
+            name,
+            passed: false,
+            detail: format!(
+                "result fingerprint broke: {:016x} -> {:016x}{at} - results are no longer bit-identical",
+                base.fingerprint, cur.fingerprint
+            ),
+        };
+    }
+
+    // 3. throughput
+    let b = base.timing.evals_per_sec;
+    let c = cur.timing.evals_per_sec;
+    if !b.is_finite() || b <= 0.0 {
+        return ScenarioVerdict {
+            name,
+            passed: true,
+            detail: format!(
+                "fingerprint ok; baseline throughput unusable ({b}) - throughput check skipped"
+            ),
+        };
+    }
+    if !c.is_finite() || c <= 0.0 {
+        return ScenarioVerdict {
+            name,
+            passed: false,
+            detail: format!("throughput collapsed: {b:.1} -> {c} evals/sec"),
+        };
+    }
+    let loss = (b - c) / b;
+    if loss > opts.max_loss {
+        ScenarioVerdict {
+            name,
+            passed: false,
+            detail: format!(
+                "throughput regressed {:.1}% ({b:.1} -> {c:.1} evals/sec, allowed {:.1}%)",
+                loss * 100.0,
+                opts.max_loss * 100.0
+            ),
+        }
+    } else {
+        ScenarioVerdict {
+            name,
+            passed: true,
+            detail: format!(
+                "fingerprint ok; throughput {b:.1} -> {c:.1} evals/sec ({:+.1}%)",
+                -loss * 100.0
+            ),
+        }
+    }
+}
+
+/// Diff `current` against `baseline`. Errs on structurally unusable
+/// input (a non-bootstrap baseline with no scenarios, or an empty current
+/// summary); regressions are reported through the returned
+/// [`CompareReport`], not as errors.
+pub fn compare_summaries(
+    baseline: &Summary,
+    current: &Summary,
+    opts: &CompareOpts,
+) -> Result<CompareReport> {
+    if baseline.env.bootstrap {
+        return Ok(CompareReport {
+            bootstrap: true,
+            scenarios: Vec::new(),
+        });
+    }
+    crate::ensure!(
+        !baseline.scenarios.is_empty(),
+        "bench compare: baseline summary contains no scenarios (and is not a bootstrap placeholder)"
+    );
+    crate::ensure!(
+        !current.scenarios.is_empty(),
+        "bench compare: current summary contains no scenarios"
+    );
+    let mut out = Vec::new();
+    for base in &baseline.scenarios {
+        match current.scenarios.iter().find(|c| c.name == base.name) {
+            Some(cur) => out.push(diff_scenario(base, cur, opts)),
+            None => out.push(ScenarioVerdict {
+                name: base.name.clone(),
+                passed: false,
+                detail: "missing from current summary (present in baseline)".to_string(),
+            }),
+        }
+    }
+    for cur in &current.scenarios {
+        if !baseline.scenarios.iter().any(|b| b.name == cur.name) {
+            out.push(ScenarioVerdict {
+                name: cur.name.clone(),
+                passed: true,
+                detail: "new scenario (no baseline yet); baseline refresh will start gating it"
+                    .to_string(),
+            });
+        }
+    }
+    Ok(CompareReport {
+        bootstrap: false,
+        scenarios: out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::summary::{EnvStamp, Timing};
+
+    fn record(name: &str, fingerprint: u64, evals_per_sec: f64) -> ScenarioRecord {
+        ScenarioRecord {
+            name: name.to_string(),
+            family: "mapping".into(),
+            explorer: "anneal".into(),
+            budget: 6,
+            workers: 2,
+            seeds: vec![1, 2],
+            space_size: 64,
+            evals: 12,
+            sim_calls: 10,
+            cache_hits: 2,
+            failures: 0,
+            setup_builds: 1,
+            setup_hits: 9,
+            fingerprint,
+            run_fingerprints: vec![fingerprint ^ 1, fingerprint ^ 2],
+            best_scores: vec![1.0, 2.0],
+            timing: Timing {
+                wall_secs: 1.0,
+                evals_per_sec,
+                setup_ms: 10.0,
+                batch_ms_p50: 1.0,
+                batch_ms_p95: 2.0,
+                batch_ms_max: 3.0,
+            },
+        }
+    }
+
+    fn summary(records: Vec<ScenarioRecord>) -> Summary {
+        Summary {
+            env: EnvStamp::current(true),
+            scenarios: records,
+        }
+    }
+
+    fn gate(base: Vec<ScenarioRecord>, cur: Vec<ScenarioRecord>) -> CompareReport {
+        compare_summaries(&summary(base), &summary(cur), &CompareOpts::default()).unwrap()
+    }
+
+    #[test]
+    fn identical_summaries_pass() {
+        let r = gate(
+            vec![record("a", 7, 100.0)],
+            vec![record("a", 7, 100.0)],
+        );
+        assert_eq!(r.verdict(), Verdict::Pass);
+        assert!(r.scenarios[0].passed);
+        assert!(r.render().contains("PASS a"), "{}", r.render());
+    }
+
+    #[test]
+    fn throughput_loss_beyond_threshold_fails() {
+        // 15% loss > 10% default
+        let r = gate(vec![record("a", 7, 100.0)], vec![record("a", 7, 85.0)]);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        assert!(r.scenarios[0].detail.contains("throughput regressed"), "{}", r.scenarios[0].detail);
+        assert!(r.scenarios[0].detail.contains("15.0%"), "{}", r.scenarios[0].detail);
+
+        // exactly at the threshold passes (strict inequality)
+        let r = gate(vec![record("a", 7, 100.0)], vec![record("a", 7, 90.0)]);
+        assert_eq!(r.verdict(), Verdict::Pass);
+
+        // a custom threshold is honored
+        let r = compare_summaries(
+            &summary(vec![record("a", 7, 100.0)]),
+            &summary(vec![record("a", 7, 85.0)]),
+            &CompareOpts { max_loss: 0.20 },
+        )
+        .unwrap();
+        assert_eq!(r.verdict(), Verdict::Pass);
+    }
+
+    #[test]
+    fn fingerprint_break_wins_over_throughput_pass() {
+        // throughput doubled, but the results changed: still a failure
+        let r = gate(vec![record("a", 7, 100.0)], vec![record("a", 8, 200.0)]);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        let d = &r.scenarios[0].detail;
+        assert!(d.contains("fingerprint broke"), "{d}");
+        assert!(d.contains("bit-identical"), "{d}");
+        // the per-seed prints localize the first divergence
+        assert!(d.contains("seed 1"), "{d}");
+    }
+
+    #[test]
+    fn missing_scenario_on_either_side() {
+        // dropped from current: fail
+        let r = gate(
+            vec![record("a", 7, 100.0), record("b", 9, 50.0)],
+            vec![record("a", 7, 100.0)],
+        );
+        assert_eq!(r.verdict(), Verdict::Fail);
+        let b = r.scenarios.iter().find(|s| s.name == "b").unwrap();
+        assert!(!b.passed);
+        assert!(b.detail.contains("missing from current"), "{}", b.detail);
+
+        // new in current: pass with a note
+        let r = gate(
+            vec![record("a", 7, 100.0)],
+            vec![record("a", 7, 100.0), record("c", 3, 10.0)],
+        );
+        assert_eq!(r.verdict(), Verdict::Pass);
+        let c = r.scenarios.iter().find(|s| s.name == "c").unwrap();
+        assert!(c.passed);
+        assert!(c.detail.contains("new scenario"), "{}", c.detail);
+    }
+
+    #[test]
+    fn nan_and_zero_throughput_guards() {
+        // unusable baseline: check skipped, pass with a note
+        for bad in [f64::NAN, 0.0, -1.0] {
+            let r = gate(vec![record("a", 7, bad)], vec![record("a", 7, 100.0)]);
+            assert_eq!(r.verdict(), Verdict::Pass, "baseline {bad}");
+            assert!(r.scenarios[0].detail.contains("skipped"), "{}", r.scenarios[0].detail);
+        }
+        // collapsed current against a healthy baseline: fail
+        for bad in [f64::NAN, 0.0] {
+            let r = gate(vec![record("a", 7, 100.0)], vec![record("a", 7, bad)]);
+            assert_eq!(r.verdict(), Verdict::Fail, "current {bad}");
+            assert!(r.scenarios[0].detail.contains("collapsed"), "{}", r.scenarios[0].detail);
+        }
+    }
+
+    #[test]
+    fn configuration_drift_fails_with_refresh_notice() {
+        let mut cur = record("a", 7, 100.0);
+        cur.budget = 12;
+        let r = gate(vec![record("a", 7, 100.0)], vec![cur]);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        let d = &r.scenarios[0].detail;
+        assert!(d.contains("configuration drifted"), "{d}");
+        assert!(d.contains("budget 6 -> 12"), "{d}");
+        assert!(d.contains("refresh the baseline"), "{d}");
+    }
+
+    #[test]
+    fn empty_summaries_are_errors() {
+        let err = compare_summaries(
+            &summary(vec![]),
+            &summary(vec![record("a", 7, 1.0)]),
+            &CompareOpts::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("baseline"), "{err}");
+        assert!(err.contains("no scenarios"), "{err}");
+
+        let err = compare_summaries(
+            &summary(vec![record("a", 7, 1.0)]),
+            &summary(vec![]),
+            &CompareOpts::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("current"), "{err}");
+    }
+
+    #[test]
+    fn bootstrap_baseline_passes_with_refresh_notice() {
+        let mut base = summary(vec![]);
+        base.env.bootstrap = true;
+        let r = compare_summaries(
+            &base,
+            &summary(vec![record("a", 7, 1.0)]),
+            &CompareOpts::default(),
+        )
+        .unwrap();
+        assert!(r.bootstrap);
+        assert_eq!(r.verdict(), Verdict::Pass);
+        assert!(r.render().contains("bootstrap placeholder"), "{}", r.render());
+        assert!(r.render().contains("bench run --quick"), "{}", r.render());
+    }
+
+    #[test]
+    fn render_lists_failures_and_refresh_path() {
+        let r = gate(vec![record("a", 7, 100.0)], vec![record("a", 8, 100.0)]);
+        let text = r.render();
+        assert!(text.contains("FAIL a"), "{text}");
+        assert!(text.contains("refresh the baseline"), "{text}");
+        assert!(text.contains("bench run --quick"), "{text}");
+    }
+}

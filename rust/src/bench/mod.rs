@@ -1,0 +1,41 @@
+//! `mldse bench` — the declarative benchmark runner and perf-regression
+//! gate.
+//!
+//! MLDSE's claims are quantitative: the three-tier DSE only matters if
+//! the simulator and explorer stay fast *and* bit-deterministic. This
+//! subsystem turns both properties into a checked-in trajectory instead
+//! of transient CI artifacts:
+//!
+//! * [`scenario`] — declarative scenario files (`benches/scenarios/*.json`):
+//!   name, workload family, seed list or range, explorer, budget,
+//!   exploration-option overrides and metrics cadence, validated with
+//!   errors that name the offending field and file.
+//! * [`runner`] — expands each scenario's seeds and drives the runs
+//!   through the standard [`ExplorationSession`](crate::dse::explore::ExplorationSession)
+//!   engine (persistent worker pool, topology-keyed setup reuse),
+//!   collecting wall time, per-batch latencies, memo/setup hit rates and
+//!   a **result fingerprint** over the full evaluation log.
+//! * [`summary`] — per-scenario JSONL summaries: deterministic fields in
+//!   the open, every timing metric hex-f64-encoded (lossless) under a
+//!   `"timing"` key, and an environment stamp as the first line.
+//! * [`compare`] — diffs two summary files: any result-fingerprint break
+//!   fails (bit-identity is non-negotiable), and a throughput loss beyond
+//!   the threshold on any scenario fails with a per-scenario diagnosis.
+//!
+//! The CLI surface is `mldse bench run|compare|list`; CI runs the quick
+//! scenario set and gates merges against the baseline summary checked in
+//! under `benches/baselines/`.
+
+pub mod compare;
+pub mod runner;
+pub mod scenario;
+pub mod summary;
+
+pub use compare::{compare_summaries, CompareOpts, CompareReport, Verdict};
+pub use runner::{log_fingerprint, run_scenario, ScenarioResult, SeedRun};
+pub use scenario::{load_scenarios, Family, Scenario, SeedSpec};
+pub use summary::{EnvStamp, ScenarioRecord, Summary, BENCH_SCHEMA_VERSION};
+
+/// Default throughput-loss gate: a scenario regresses when its current
+/// evals/sec falls more than this fraction below the baseline.
+pub const DEFAULT_MAX_LOSS: f64 = 0.10;

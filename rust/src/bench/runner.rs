@@ -1,0 +1,329 @@
+//! Drives bench scenarios through the standard exploration engine.
+//!
+//! Each scenario expands its seed spec and runs one
+//! [`ExplorationSession`] per seed — the same persistent worker pool,
+//! memo cache and topology-keyed setup reuse every other entry point
+//! uses, so bench numbers measure the real engine. Per run the runner
+//! collects:
+//!
+//! * wall time, plan-build (`setup_ms`) time and sampled per-batch
+//!   latencies (one sample every `metrics_every` explorer steps);
+//! * the engine's deterministic counters (evals, sim calls, memo hits,
+//!   setup builds/hits, failures);
+//! * a **result fingerprint**: FNV-1a over the full evaluation log
+//!   (candidate digits, objective bit patterns, cache flags). Two builds
+//!   disagreeing on any logged evaluation disagree on the fingerprint —
+//!   this is what the compare gate holds bit-identical.
+
+use std::time::Instant;
+
+use crate::dse::explore::{
+    explorer_by_name, Evaluation, ExplorationSession, ExploreOpts,
+};
+use crate::dse::parallel::resolve_workers;
+use crate::eval::Registry;
+use crate::util::error::{Context, Result};
+
+use super::scenario::Scenario;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a fingerprint of an evaluation log: candidate digits, objective
+/// bit patterns, cache flags and failure flags, in exploration order.
+/// Deterministic across worker counts and dispatch paths because the log
+/// itself is; any bit-level result divergence changes the value.
+pub fn log_fingerprint(log: &[Evaluation]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for e in log {
+        for d in &e.candidate.0 {
+            h = fnv1a(h, &d.to_le_bytes());
+        }
+        for v in &e.objectives {
+            h = fnv1a(h, &v.to_bits().to_le_bytes());
+        }
+        h = fnv1a(h, &[e.cached as u8, e.error.is_some() as u8]);
+    }
+    h
+}
+
+/// Metrics of one seed's exploration run. Everything except the `wall_*`
+/// / `setup_ms` / `batch_ms` timing fields is bit-deterministic.
+#[derive(Debug, Clone)]
+pub struct SeedRun {
+    pub seed: u64,
+    pub evals: usize,
+    pub sim_calls: usize,
+    pub cache_hits: usize,
+    pub failures: usize,
+    pub setup_builds: usize,
+    pub setup_hits: usize,
+    /// Best first-objective score (`f64::INFINITY` when every evaluation
+    /// failed; absent runs are impossible — budget ≥ 1 is validated).
+    pub best_score: f64,
+    pub best_label: String,
+    /// [`log_fingerprint`] of this run's evaluation log.
+    pub fingerprint: u64,
+    // -- timing (nondeterministic) --
+    pub wall_secs: f64,
+    pub setup_ms: f64,
+    /// Sampled batch latencies in ms, one every `metrics_every` steps.
+    pub batch_ms: Vec<f64>,
+}
+
+impl SeedRun {
+    pub fn evals_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.evals as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// All runs of one scenario plus scenario-level aggregates.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub name: String,
+    pub family: String,
+    pub explorer: String,
+    /// The budget actually run (`quick_budget` in quick mode).
+    pub budget: usize,
+    pub workers: usize,
+    pub space_size: u64,
+    pub runs: Vec<SeedRun>,
+    /// Per-seed fingerprints folded (with the seeds) into one value: the
+    /// scenario regresses determinism iff this differs.
+    pub fingerprint: u64,
+    pub wall_secs: f64,
+}
+
+impl ScenarioResult {
+    pub fn evals_total(&self) -> usize {
+        self.runs.iter().map(|r| r.evals).sum()
+    }
+
+    /// Aggregate throughput over the scenario's whole wall time.
+    pub fn evals_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.evals_total() as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of evaluations served from the memo cache.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let evals = self.evals_total();
+        if evals == 0 {
+            return 0.0;
+        }
+        self.runs.iter().map(|r| r.cache_hits).sum::<usize>() as f64 / evals as f64
+    }
+
+    /// Fraction of simulations that reused an already-built setup.
+    pub fn setup_hit_rate(&self) -> f64 {
+        let sims: usize = self.runs.iter().map(|r| r.sim_calls).sum();
+        if sims == 0 {
+            return 0.0;
+        }
+        self.runs.iter().map(|r| r.setup_hits).sum::<usize>() as f64 / sims as f64
+    }
+}
+
+/// Run every seed of one scenario. `quick` substitutes `quick_budget` and
+/// the family's quick preset; `workers_override` (the CLI `--workers`
+/// flag) takes precedence over the scenario's own worker count; both go
+/// through the standard auto-detect when 0.
+pub fn run_scenario(
+    scenario: &Scenario,
+    quick: bool,
+    workers_override: Option<usize>,
+) -> Result<ScenarioResult> {
+    let (space, objectives) = scenario.resolve(quick)?;
+    let workers = resolve_workers(workers_override.unwrap_or(scenario.workers))
+        .with_context(|| format!("bench scenario '{}'", scenario.name))?;
+    let defaults = ExploreOpts::default();
+    let opts = ExploreOpts {
+        budget: scenario.effective_budget(quick),
+        workers,
+        cache: scenario.overrides.cache.unwrap_or(defaults.cache),
+        batch: scenario.overrides.batch.unwrap_or(defaults.batch),
+        streaming: scenario.overrides.streaming.unwrap_or(defaults.streaming),
+        setup_reuse: scenario
+            .overrides
+            .setup_reuse
+            .unwrap_or(defaults.setup_reuse),
+        sim: defaults.sim,
+    };
+    let registry = Registry::standard();
+
+    let scenario_start = Instant::now();
+    let mut runs = Vec::with_capacity(scenario.seeds.len());
+    for seed in scenario.seeds.expand() {
+        let explorer = explorer_by_name(&scenario.explorer, seed)
+            .with_context(|| format!("bench scenario '{}'", scenario.name))?;
+        let start = Instant::now();
+        let (report, batch_ms) = std::thread::scope(|scope| -> Result<_> {
+            let mut session = ExplorationSession::new_in(
+                scope,
+                space.as_ref(),
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                None,
+            )
+            .with_context(|| {
+                format!("bench scenario '{}' (seed {seed})", scenario.name)
+            })?;
+            let mut batch_ms = Vec::new();
+            let mut steps = 0usize;
+            loop {
+                let t0 = Instant::now();
+                if !session.step() {
+                    break;
+                }
+                if steps % scenario.metrics_every == 0 {
+                    batch_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                }
+                steps += 1;
+            }
+            Ok((
+                session.into_report(start.elapsed().as_secs_f64()),
+                batch_ms,
+            ))
+        })?;
+        let best = report.best();
+        runs.push(SeedRun {
+            seed,
+            evals: report.evals.len(),
+            sim_calls: report.sim_calls,
+            cache_hits: report.cache_hits,
+            failures: report.failures,
+            setup_builds: report.setup_builds,
+            setup_hits: report.setup_hits,
+            best_score: best.map(|e| e.objectives[0]).unwrap_or(f64::INFINITY),
+            best_label: best.map(|e| e.label.clone()).unwrap_or_default(),
+            fingerprint: log_fingerprint(&report.evals),
+            wall_secs: report.elapsed_secs,
+            setup_ms: report.setup_ms,
+            batch_ms,
+        });
+    }
+
+    let mut combined = FNV_OFFSET;
+    for run in &runs {
+        combined = fnv1a(combined, &run.seed.to_le_bytes());
+        combined = fnv1a(combined, &run.fingerprint.to_le_bytes());
+    }
+
+    Ok(ScenarioResult {
+        name: scenario.name.clone(),
+        family: scenario.family.name().to_string(),
+        explorer: scenario.explorer.clone(),
+        budget: opts.budget,
+        workers,
+        space_size: space.size(),
+        runs,
+        fingerprint: combined,
+        wall_secs: scenario_start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::explore::Candidate;
+    use crate::util::json::Json;
+
+    fn ev(digits: Vec<u32>, objectives: Vec<f64>, cached: bool) -> Evaluation {
+        Evaluation {
+            candidate: Candidate(digits),
+            label: "t".into(),
+            objectives,
+            cached,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn log_fingerprint_is_stable_and_sensitive() {
+        let log = vec![
+            ev(vec![1, 2], vec![10.0, 3.5], false),
+            ev(vec![1, 3], vec![11.0, 2.5], true),
+        ];
+        let fp = log_fingerprint(&log);
+        assert_eq!(fp, log_fingerprint(&log.clone()), "same log, same print");
+        assert_ne!(fp, log_fingerprint(&log[..1]), "shorter log differs");
+
+        // any objective bit flips the print
+        let mut bits = log.clone();
+        bits[0].objectives[0] = f64::from_bits(10.0f64.to_bits() ^ 1);
+        assert_ne!(fp, log_fingerprint(&bits));
+
+        // cache flags are results too
+        let mut flags = log.clone();
+        flags[1].cached = false;
+        assert_ne!(fp, log_fingerprint(&flags));
+
+        // order matters (the log is exploration-ordered)
+        let swapped = vec![log[1].clone(), log[0].clone()];
+        assert_ne!(fp, log_fingerprint(&swapped));
+    }
+
+    #[test]
+    fn empty_log_fingerprint_is_the_offset_basis() {
+        assert_eq!(log_fingerprint(&[]), FNV_OFFSET);
+    }
+
+    fn mapping_scenario(metrics_every: usize) -> Scenario {
+        let doc = Json::parse(
+            "{\"name\": \"t\", \"family\": \"mapping\", \"explorer\": \"anneal\", \
+             \"budget\": 6, \"seeds\": [3, 4], \"metrics_every\": 2}",
+        )
+        .unwrap();
+        let mut s = Scenario::from_json(&doc, "inline").unwrap();
+        s.metrics_every = metrics_every;
+        s
+    }
+
+    #[test]
+    fn run_scenario_is_deterministic_modulo_timing() {
+        let scenario = mapping_scenario(2);
+        let a = run_scenario(&scenario, true, None).unwrap();
+        let b = run_scenario(&scenario, true, Some(2)).unwrap();
+        assert_eq!(a.runs.len(), 2);
+        assert_eq!(a.fingerprint, b.fingerprint, "fingerprints must not depend on workers");
+        assert_eq!(a.evals_total(), b.evals_total());
+        for (ra, rb) in a.runs.iter().zip(&b.runs) {
+            assert_eq!(ra.seed, rb.seed);
+            assert_eq!(ra.fingerprint, rb.fingerprint);
+            assert_eq!(ra.evals, rb.evals);
+            assert_eq!(ra.sim_calls, rb.sim_calls);
+            assert_eq!(ra.cache_hits, rb.cache_hits);
+            assert_eq!(ra.best_score.to_bits(), rb.best_score.to_bits());
+            assert_eq!(ra.best_label, rb.best_label);
+            assert!(ra.wall_secs > 0.0);
+        }
+        // different seeds explore differently — the per-seed prints differ
+        assert_ne!(a.runs[0].fingerprint, a.runs[1].fingerprint);
+    }
+
+    #[test]
+    fn metrics_cadence_bounds_samples() {
+        let scenario = mapping_scenario(1000);
+        let r = run_scenario(&scenario, true, None).unwrap();
+        for run in &r.runs {
+            assert_eq!(run.batch_ms.len(), 1, "cadence 1000 samples only step 0");
+        }
+    }
+}

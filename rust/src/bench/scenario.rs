@@ -1,0 +1,704 @@
+//! Declarative bench scenarios (`benches/scenarios/*.json`).
+//!
+//! A scenario names a workload family, an explorer, a budget and a seed
+//! set; the runner expands the seeds and drives each run through the
+//! standard exploration engine. Validation is strict and diagnostic:
+//! every error names the offending **field** and the **file** it came
+//! from, so a typo in a scenario file fails with
+//! `scenario 'benches/scenarios/x.json': field "family": unknown
+//! workload family 'dcm-prefill' (...)` instead of a generic parse error.
+//!
+//! ```json
+//! {
+//!   "name": "mapping-anneal",
+//!   "description": "SA placement search on the 4-core demo chip",
+//!   "family": "mapping",
+//!   "explorer": "anneal",
+//!   "budget": 400,
+//!   "quick_budget": 48,
+//!   "seeds": {"start": 11, "count": 2},
+//!   "workers": 2,
+//!   "metrics_every": 4,
+//!   "overrides": {"batch": 16}
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::dse::explore::{
+    explorer_by_name, objectives_from_json, preset, space_from_json_value, DesignSpace, Edp,
+    Makespan, Objective,
+};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// The workload families scenarios may reference. Each non-custom family
+/// maps to a (full, quick) preset pair of the exploration API, so a
+/// scenario exercises exactly the workload generators the paper's
+/// experiments use (prefill sweeps, spatial decode packaging, mapping
+/// placement, the composed three-tier space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// DMC hardware-parameter space over the GPT-3 prefill workload.
+    DmcPrefill,
+    /// GSM hardware-parameter space over the GPT-3 prefill workload.
+    GsmPrefill,
+    /// MPMC packaging space over the spatial decode workload.
+    PackagingDecode,
+    /// Mapping-tier placement search on a fixed chip.
+    Mapping,
+    /// The composed arch × hw-param × mapping three-tier space.
+    ThreeTier,
+    /// A space file supplied by the scenario (`"space"` field).
+    Custom,
+}
+
+/// Family names accepted in scenario files.
+pub const FAMILY_NAMES: &[&str] = &[
+    "dmc-prefill",
+    "gsm-prefill",
+    "packaging-decode",
+    "mapping",
+    "three-tier",
+    "custom",
+];
+
+impl Family {
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "dmc-prefill" => Some(Family::DmcPrefill),
+            "gsm-prefill" => Some(Family::GsmPrefill),
+            "packaging-decode" => Some(Family::PackagingDecode),
+            "mapping" => Some(Family::Mapping),
+            "three-tier" => Some(Family::ThreeTier),
+            "custom" => Some(Family::Custom),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::DmcPrefill => "dmc-prefill",
+            Family::GsmPrefill => "gsm-prefill",
+            Family::PackagingDecode => "packaging-decode",
+            Family::Mapping => "mapping",
+            Family::ThreeTier => "three-tier",
+            Family::Custom => "custom",
+        }
+    }
+
+    /// The exploration preset backing this family (`None` for custom).
+    pub fn preset_name(&self, quick: bool) -> Option<&'static str> {
+        match (self, quick) {
+            (Family::DmcPrefill, false) => Some("dmc"),
+            (Family::DmcPrefill, true) => Some("dmc-quick"),
+            (Family::GsmPrefill, false) => Some("gsm"),
+            (Family::GsmPrefill, true) => Some("gsm-quick"),
+            (Family::PackagingDecode, false) => Some("packaging"),
+            (Family::PackagingDecode, true) => Some("packaging-quick"),
+            (Family::Mapping, _) => Some("mapping"),
+            (Family::ThreeTier, false) => Some("three-tier"),
+            (Family::ThreeTier, true) => Some("three-tier-quick"),
+            (Family::Custom, _) => None,
+        }
+    }
+}
+
+/// The seed set of a scenario: an explicit list or a contiguous range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SeedSpec {
+    List(Vec<u64>),
+    Range { start: u64, count: u64 },
+}
+
+impl SeedSpec {
+    /// The expanded seed list, in scenario order.
+    pub fn expand(&self) -> Vec<u64> {
+        match self {
+            SeedSpec::List(seeds) => seeds.clone(),
+            SeedSpec::Range { start, count } => (0..*count).map(|i| start + i).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            SeedSpec::List(seeds) => seeds.len(),
+            SeedSpec::Range { count, .. } => *count as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Optional [`crate::dse::explore::ExploreOpts`] overrides a scenario may
+/// set; anything left `None` keeps the engine default.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Overrides {
+    pub batch: Option<usize>,
+    pub cache: Option<bool>,
+    pub streaming: Option<bool>,
+    pub setup_reuse: Option<bool>,
+}
+
+/// One parsed, validated bench scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub description: Option<String>,
+    pub family: Family,
+    /// Absolute path of the space file (custom family only).
+    pub space_file: Option<PathBuf>,
+    pub explorer: String,
+    pub budget: usize,
+    /// Budget substituted in quick mode (CI smoke); defaults to `budget`.
+    pub quick_budget: Option<usize>,
+    pub seeds: SeedSpec,
+    /// Evaluation workers per run; 0 = auto-detect at run time.
+    pub workers: usize,
+    /// Sample one batch latency every N explorer steps.
+    pub metrics_every: usize,
+    pub overrides: Overrides,
+    /// The file this scenario was parsed from (diagnostics).
+    pub origin: String,
+}
+
+/// Scenario-file keys; anything else is rejected by name.
+const SCENARIO_KEYS: &[&str] = &[
+    "name",
+    "description",
+    "family",
+    "space",
+    "explorer",
+    "budget",
+    "quick_budget",
+    "seeds",
+    "workers",
+    "metrics_every",
+    "overrides",
+];
+
+const OVERRIDE_KEYS: &[&str] = &["batch", "cache", "streaming", "setup_reuse"];
+
+macro_rules! field_err {
+    ($origin:expr, $field:expr, $($arg:tt)*) => {
+        crate::format_err!(
+            "scenario '{}': field \"{}\": {}",
+            $origin,
+            $field,
+            format!($($arg)*)
+        )
+    };
+}
+
+impl Scenario {
+    /// Parse and validate one scenario document. `origin` is the file (or
+    /// synthetic source) the document came from — every validation error
+    /// cites it together with the offending field.
+    pub fn from_json(doc: &Json, origin: &str) -> Result<Scenario> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| crate::format_err!("scenario '{origin}': expected a JSON object"))?;
+        for (key, _) in obj.iter() {
+            if !SCENARIO_KEYS.contains(&key.as_str()) {
+                return Err(field_err!(
+                    origin,
+                    key,
+                    "unknown scenario field (valid: {})",
+                    SCENARIO_KEYS.join(", ")
+                ));
+            }
+        }
+
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| field_err!(origin, "name", "required (a non-empty string)"))?
+            .to_string();
+        if name.trim().is_empty() {
+            return Err(field_err!(origin, "name", "must not be empty"));
+        }
+
+        let family_str = doc
+            .get("family")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| {
+                field_err!(
+                    origin,
+                    "family",
+                    "required (one of: {})",
+                    FAMILY_NAMES.join(", ")
+                )
+            })?;
+        let family = Family::parse(family_str).ok_or_else(|| {
+            field_err!(
+                origin,
+                "family",
+                "unknown workload family '{family_str}' (valid: {})",
+                FAMILY_NAMES.join(", ")
+            )
+        })?;
+
+        let space_file = match doc.get("space") {
+            None => None,
+            Some(v) => {
+                let rel = v
+                    .as_str()
+                    .ok_or_else(|| field_err!(origin, "space", "expected a file path string"))?;
+                // relative to the scenario file's own directory
+                let base = Path::new(origin).parent().unwrap_or_else(|| Path::new("."));
+                Some(base.join(rel))
+            }
+        };
+        match (family, &space_file) {
+            (Family::Custom, None) => {
+                return Err(field_err!(
+                    origin,
+                    "space",
+                    "required for the 'custom' family (path to a space JSON file)"
+                ))
+            }
+            (Family::Custom, Some(_)) => {}
+            (_, Some(_)) => {
+                return Err(field_err!(
+                    origin,
+                    "space",
+                    "only valid with \"family\": \"custom\" (family '{}' resolves its own preset)",
+                    family.name()
+                ))
+            }
+            (_, None) => {}
+        }
+
+        let explorer = doc
+            .get("explorer")
+            .map(|v| {
+                v.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| field_err!(origin, "explorer", "expected a string"))
+            })
+            .transpose()?
+            .unwrap_or_else(|| "grid".to_string());
+        // validate eagerly so a typo fails at load time, citing the file
+        explorer_by_name(&explorer, 0)
+            .map_err(|e| field_err!(origin, "explorer", "{e:#}"))?;
+
+        let budget = parse_usize(doc, "budget", origin)?
+            .ok_or_else(|| field_err!(origin, "budget", "required (a positive integer)"))?;
+        if budget == 0 {
+            return Err(field_err!(origin, "budget", "zero budget (must be at least 1)"));
+        }
+        let quick_budget = parse_usize(doc, "quick_budget", origin)?;
+        if quick_budget == Some(0) {
+            return Err(field_err!(
+                origin,
+                "quick_budget",
+                "zero budget (must be at least 1)"
+            ));
+        }
+
+        let seeds = match doc.get("seeds") {
+            None => SeedSpec::List(vec![0xD5E]),
+            Some(Json::Arr(arr)) => {
+                if arr.is_empty() {
+                    return Err(field_err!(
+                        origin,
+                        "seeds",
+                        "empty seed list (at least one seed required)"
+                    ));
+                }
+                let mut seeds = Vec::with_capacity(arr.len());
+                for s in arr {
+                    seeds.push(s.as_u64().ok_or_else(|| {
+                        field_err!(origin, "seeds", "expected unsigned-integer seeds")
+                    })?);
+                }
+                SeedSpec::List(seeds)
+            }
+            Some(obj @ Json::Obj(_)) => {
+                let start = obj.get("start").and_then(|v| v.as_u64()).ok_or_else(|| {
+                    field_err!(origin, "seeds", "range needs an unsigned \"start\"")
+                })?;
+                let count = obj.get("count").and_then(|v| v.as_u64()).ok_or_else(|| {
+                    field_err!(origin, "seeds", "range needs an unsigned \"count\"")
+                })?;
+                if count == 0 {
+                    return Err(field_err!(
+                        origin,
+                        "seeds",
+                        "empty seed range (\"count\" must be at least 1)"
+                    ));
+                }
+                SeedSpec::Range { start, count }
+            }
+            Some(_) => {
+                return Err(field_err!(
+                    origin,
+                    "seeds",
+                    "expected a seed list [1, 2, ...] or a range {{\"start\": N, \"count\": M}}"
+                ))
+            }
+        };
+
+        let workers = parse_usize(doc, "workers", origin)?.unwrap_or(1);
+        let metrics_every = parse_usize(doc, "metrics_every", origin)?.unwrap_or(1);
+        if metrics_every == 0 {
+            return Err(field_err!(
+                origin,
+                "metrics_every",
+                "cadence of 0 (must be at least 1; 1 samples every batch)"
+            ));
+        }
+
+        let mut overrides = Overrides::default();
+        if let Some(ov) = doc.get("overrides") {
+            let ov_obj = ov
+                .as_obj()
+                .ok_or_else(|| field_err!(origin, "overrides", "expected an object"))?;
+            for (key, value) in ov_obj.iter() {
+                match key.as_str() {
+                    "batch" => {
+                        let b = value.as_usize().ok_or_else(|| {
+                            field_err!(origin, "overrides.batch", "expected an unsigned integer")
+                        })?;
+                        if b == 0 {
+                            return Err(field_err!(
+                                origin,
+                                "overrides.batch",
+                                "batch of 0 (must be at least 1)"
+                            ));
+                        }
+                        overrides.batch = Some(b);
+                    }
+                    "cache" => {
+                        overrides.cache = Some(value.as_bool().ok_or_else(|| {
+                            field_err!(origin, "overrides.cache", "expected a boolean")
+                        })?)
+                    }
+                    "streaming" => {
+                        overrides.streaming = Some(value.as_bool().ok_or_else(|| {
+                            field_err!(origin, "overrides.streaming", "expected a boolean")
+                        })?)
+                    }
+                    "setup_reuse" => {
+                        overrides.setup_reuse = Some(value.as_bool().ok_or_else(|| {
+                            field_err!(origin, "overrides.setup_reuse", "expected a boolean")
+                        })?)
+                    }
+                    other => {
+                        return Err(field_err!(
+                            origin,
+                            format!("overrides.{other}"),
+                            "unknown override (valid: {})",
+                            OVERRIDE_KEYS.join(", ")
+                        ))
+                    }
+                }
+            }
+        }
+
+        Ok(Scenario {
+            name,
+            description: doc
+                .get("description")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string()),
+            family,
+            space_file,
+            explorer,
+            budget,
+            quick_budget,
+            seeds,
+            workers,
+            metrics_every,
+            overrides,
+            origin: origin.to_string(),
+        })
+    }
+
+    /// The budget actually run: `quick_budget` in quick mode when set.
+    pub fn effective_budget(&self, quick: bool) -> usize {
+        if quick {
+            self.quick_budget.unwrap_or(self.budget)
+        } else {
+            self.budget
+        }
+    }
+
+    /// Resolve the scenario's design space and objectives: the family's
+    /// preset, or the referenced space file for the custom family (with
+    /// the file's own objectives when it declares them, else the default
+    /// makespan/EDP pair).
+    pub fn resolve(&self, quick: bool) -> Result<(Box<dyn DesignSpace>, Vec<Box<dyn Objective>>)> {
+        match self.family.preset_name(quick) {
+            Some(name) => preset(name),
+            None => {
+                let path = self
+                    .space_file
+                    .as_ref()
+                    .expect("custom family validated to carry a space file");
+                let text = std::fs::read_to_string(path).with_context(|| {
+                    format!(
+                        "scenario '{}': reading space file '{}'",
+                        self.origin,
+                        path.display()
+                    )
+                })?;
+                let doc = Json::parse(&text).with_context(|| {
+                    format!(
+                        "scenario '{}': parsing space file '{}'",
+                        self.origin,
+                        path.display()
+                    )
+                })?;
+                let space = space_from_json_value(&doc).with_context(|| {
+                    format!(
+                        "scenario '{}': parsing space file '{}'",
+                        self.origin,
+                        path.display()
+                    )
+                })?;
+                let objectives = objectives_from_json(&doc)
+                    .with_context(|| {
+                        format!(
+                            "scenario '{}': parsing space file '{}'",
+                            self.origin,
+                            path.display()
+                        )
+                    })?
+                    .unwrap_or_else(|| vec![Box::new(Makespan), Box::new(Edp)]);
+                Ok((space as Box<dyn DesignSpace>, objectives))
+            }
+        }
+    }
+}
+
+fn parse_usize(doc: &Json, field: &str, origin: &str) -> Result<Option<usize>> {
+    match doc.get(field) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| field_err!(origin, field, "expected an unsigned integer")),
+    }
+}
+
+/// Load scenarios from `path`: a single `.json` file or a directory whose
+/// `*.json` files are loaded in sorted name order (deterministic run
+/// order). Duplicate scenario names across files are an error — the
+/// summary format and the compare gate key on the name.
+pub fn load_scenarios(path: &Path) -> Result<Vec<Scenario>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("bench: reading scenarios from '{}'", path.display()))?;
+    if meta.is_dir() {
+        for entry in std::fs::read_dir(path)
+            .with_context(|| format!("bench: listing scenario dir '{}'", path.display()))?
+        {
+            let p = entry
+                .with_context(|| format!("bench: listing scenario dir '{}'", path.display()))?
+                .path();
+            if p.extension().and_then(|e| e.to_str()) == Some("json") {
+                files.push(p);
+            }
+        }
+        files.sort();
+        crate::ensure!(
+            !files.is_empty(),
+            "bench: scenario dir '{}' contains no .json files",
+            path.display()
+        );
+    } else {
+        files.push(path.to_path_buf());
+    }
+    let mut scenarios = Vec::with_capacity(files.len());
+    for file in files {
+        let origin = file.display().to_string();
+        let text = std::fs::read_to_string(&file)
+            .with_context(|| format!("bench: reading scenario file '{origin}'"))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("bench: parsing scenario file '{origin}'"))?;
+        scenarios.push(Scenario::from_json(&doc, &origin)?);
+    }
+    let mut seen = std::collections::HashSet::new();
+    for s in &scenarios {
+        if !seen.insert(s.name.as_str()) {
+            crate::bail!(
+                "bench: duplicate scenario name '{}' (second definition in '{}')",
+                s.name,
+                s.origin
+            );
+        }
+    }
+    Ok(scenarios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<Scenario> {
+        Scenario::from_json(&Json::parse(text).unwrap(), "test.json")
+    }
+
+    fn base(extra: &str) -> String {
+        format!(
+            "{{\"name\": \"s\", \"family\": \"mapping\", \"budget\": 8{}{extra}}}",
+            if extra.is_empty() { "" } else { ", " }
+        )
+    }
+
+    #[test]
+    fn minimal_scenario_defaults() {
+        let s = parse(&base("")).unwrap();
+        assert_eq!(s.name, "s");
+        assert_eq!(s.family, Family::Mapping);
+        assert_eq!(s.explorer, "grid");
+        assert_eq!(s.budget, 8);
+        assert_eq!(s.effective_budget(true), 8);
+        assert_eq!(s.seeds.expand(), vec![0xD5E]);
+        assert_eq!(s.workers, 1);
+        assert_eq!(s.metrics_every, 1);
+        assert_eq!(s.overrides, Overrides::default());
+    }
+
+    #[test]
+    fn seed_range_expands() {
+        let s = parse(&base("\"seeds\": {\"start\": 10, \"count\": 3}")).unwrap();
+        assert_eq!(s.seeds.expand(), vec![10, 11, 12]);
+        let s = parse(&base("\"seeds\": [7, 5]")).unwrap();
+        assert_eq!(s.seeds.expand(), vec![7, 5]);
+    }
+
+    #[test]
+    fn quick_budget_substitutes_in_quick_mode() {
+        let s = parse(&base("\"quick_budget\": 2")).unwrap();
+        assert_eq!(s.effective_budget(false), 8);
+        assert_eq!(s.effective_budget(true), 2);
+    }
+
+    #[test]
+    fn unknown_family_names_field_and_file() {
+        let err = parse("{\"name\": \"s\", \"family\": \"dcm-prefill\", \"budget\": 8}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("test.json"), "{err}");
+        assert!(err.contains("\"family\""), "{err}");
+        assert!(err.contains("unknown workload family 'dcm-prefill'"), "{err}");
+        assert!(err.contains("dmc-prefill"), "{err}");
+    }
+
+    #[test]
+    fn empty_seed_list_and_range_are_named_errors() {
+        let err = parse(&base("\"seeds\": []")).unwrap_err().to_string();
+        assert!(err.contains("test.json"), "{err}");
+        assert!(err.contains("\"seeds\""), "{err}");
+        assert!(err.contains("empty seed list"), "{err}");
+
+        let err = parse(&base("\"seeds\": {\"start\": 4, \"count\": 0}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"seeds\""), "{err}");
+        assert!(err.contains("empty seed range"), "{err}");
+    }
+
+    #[test]
+    fn zero_budget_is_a_named_error() {
+        let err = parse("{\"name\": \"s\", \"family\": \"mapping\", \"budget\": 0}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("test.json"), "{err}");
+        assert!(err.contains("\"budget\""), "{err}");
+        assert!(err.contains("zero budget"), "{err}");
+        let err = parse(&base("\"quick_budget\": 0")).unwrap_err().to_string();
+        assert!(err.contains("\"quick_budget\""), "{err}");
+    }
+
+    #[test]
+    fn missing_budget_is_a_named_error() {
+        let err = parse("{\"name\": \"s\", \"family\": \"mapping\"}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"budget\""), "{err}");
+        assert!(err.contains("required"), "{err}");
+    }
+
+    #[test]
+    fn unknown_explorer_cites_the_field() {
+        let err = parse(&base("\"explorer\": \"bogo\"")).unwrap_err().to_string();
+        assert!(err.contains("\"explorer\""), "{err}");
+        assert!(err.contains("bogo"), "{err}");
+    }
+
+    #[test]
+    fn zero_metrics_cadence_is_a_named_error() {
+        let err = parse(&base("\"metrics_every\": 0")).unwrap_err().to_string();
+        assert!(err.contains("\"metrics_every\""), "{err}");
+        assert!(err.contains("cadence of 0"), "{err}");
+    }
+
+    #[test]
+    fn unknown_top_level_and_override_keys_are_named() {
+        let err = parse(&base("\"budgt\": 9")).unwrap_err().to_string();
+        assert!(err.contains("\"budgt\""), "{err}");
+        assert!(err.contains("unknown scenario field"), "{err}");
+
+        let err = parse(&base("\"overrides\": {\"cach\": true}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overrides.cach"), "{err}");
+        assert!(err.contains("unknown override"), "{err}");
+    }
+
+    #[test]
+    fn custom_family_requires_space_and_vice_versa() {
+        let err = parse("{\"name\": \"s\", \"family\": \"custom\", \"budget\": 4}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"space\""), "{err}");
+        assert!(err.contains("custom"), "{err}");
+
+        let err = parse(&base("\"space\": \"foo.json\"")).unwrap_err().to_string();
+        assert!(err.contains("\"space\""), "{err}");
+        assert!(err.contains("only valid"), "{err}");
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let s = parse(&base(
+            "\"overrides\": {\"batch\": 4, \"cache\": false, \"streaming\": false, \
+             \"setup_reuse\": true}",
+        ))
+        .unwrap();
+        assert_eq!(s.overrides.batch, Some(4));
+        assert_eq!(s.overrides.cache, Some(false));
+        assert_eq!(s.overrides.streaming, Some(false));
+        assert_eq!(s.overrides.setup_reuse, Some(true));
+        let err = parse(&base("\"overrides\": {\"batch\": 0}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overrides.batch"), "{err}");
+    }
+
+    #[test]
+    fn family_presets_resolve() {
+        for f in [
+            Family::DmcPrefill,
+            Family::GsmPrefill,
+            Family::PackagingDecode,
+            Family::Mapping,
+            Family::ThreeTier,
+        ] {
+            for quick in [false, true] {
+                let name = f.preset_name(quick).unwrap();
+                assert!(
+                    crate::dse::explore::preset_names().contains(&name),
+                    "family {} maps to unknown preset '{name}'",
+                    f.name()
+                );
+            }
+        }
+        assert_eq!(Family::Custom.preset_name(true), None);
+    }
+}

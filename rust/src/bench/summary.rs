@@ -1,0 +1,453 @@
+//! Bench summary files: one JSONL document per `mldse bench run`.
+//!
+//! Line 1 is an [`EnvStamp`] header; every following line is one
+//! [`ScenarioRecord`]. The layout separates determinism classes:
+//!
+//! * **Deterministic fields** (counters, fingerprints, best scores) sit
+//!   in the open — two runs of the same build must produce byte-identical
+//!   values, and the compare gate fails when they don't.
+//! * **Timing metrics** (wall time, throughput, batch latencies) are
+//!   grouped under each record's `"timing"` key so tooling can strip the
+//!   legitimately nondeterministic part in one move.
+//!
+//! Every `f64` crossing the wire — timing included — uses the same
+//! lossless hex-bits encoding as checkpoints (`hex_f64`), so a summary
+//! re-read from disk compares bit-for-bit with the run that wrote it;
+//! seeds and fingerprints ride as 16-digit hex strings for the same
+//! reason (JSON numbers are doubles and would round u64s).
+//!
+//! A checked-in baseline may instead carry `"bootstrap": true` in its
+//! header: a placeholder committed before any real numbers exist. The
+//! compare gate recognizes it and passes with a refresh notice instead of
+//! failing every PR until someone regenerates the file.
+
+use std::path::Path;
+
+use crate::dse::explore::session::{hex_f64, hex_u64, parse_hex_f64, parse_hex_u64};
+use crate::util::error::{Context, Result};
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+
+use super::runner::ScenarioResult;
+
+/// Version of the summary JSONL layout.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// The header line of a summary file. Fully deterministic (no
+/// timestamps): two runs on the same build and mode produce identical
+/// stamps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EnvStamp {
+    pub schema_version: u64,
+    /// `CARGO_PKG_VERSION` of the `mldse` build that wrote the file.
+    pub crate_version: String,
+    pub os: String,
+    pub arch: String,
+    /// Whether the run used quick budgets (`MLDSE_BENCH_QUICK` / CI mode).
+    pub quick: bool,
+    /// Placeholder baseline committed before real numbers exist; the
+    /// compare gate passes it with a refresh notice.
+    pub bootstrap: bool,
+}
+
+impl EnvStamp {
+    pub fn current(quick: bool) -> EnvStamp {
+        EnvStamp {
+            schema_version: BENCH_SCHEMA_VERSION,
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            quick,
+            bootstrap: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("kind", "env".into());
+        o.insert("schema_version", self.schema_version.into());
+        o.insert("crate_version", self.crate_version.as_str().into());
+        o.insert("os", self.os.as_str().into());
+        o.insert("arch", self.arch.as_str().into());
+        o.insert("quick", self.quick.into());
+        if self.bootstrap {
+            o.insert("bootstrap", true.into());
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<EnvStamp> {
+        crate::ensure!(
+            doc.get("kind").and_then(|v| v.as_str()) == Some("env"),
+            "bench summary: first line must be the env stamp (\"kind\": \"env\")"
+        );
+        let version = doc
+            .get("schema_version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| crate::format_err!("bench summary: env stamp missing \"schema_version\""))?;
+        crate::ensure!(
+            version == BENCH_SCHEMA_VERSION,
+            "bench summary: unsupported schema version {version} (this build reads {BENCH_SCHEMA_VERSION})"
+        );
+        Ok(EnvStamp {
+            schema_version: version,
+            crate_version: doc
+                .get("crate_version")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            os: doc.get("os").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            arch: doc.get("arch").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            quick: doc.get("quick").and_then(|v| v.as_bool()).unwrap_or(false),
+            bootstrap: doc
+                .get("bootstrap")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// Timing metrics of one scenario (all nondeterministic; all hex-f64 on
+/// the wire).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Timing {
+    pub wall_secs: f64,
+    pub evals_per_sec: f64,
+    /// Cumulative plan-build ms summed over seeds (and workers).
+    pub setup_ms: f64,
+    pub batch_ms_p50: f64,
+    pub batch_ms_p95: f64,
+    pub batch_ms_max: f64,
+}
+
+impl Timing {
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("wall_secs", hex_f64(self.wall_secs));
+        o.insert("evals_per_sec", hex_f64(self.evals_per_sec));
+        o.insert("setup_ms", hex_f64(self.setup_ms));
+        o.insert("batch_ms_p50", hex_f64(self.batch_ms_p50));
+        o.insert("batch_ms_p95", hex_f64(self.batch_ms_p95));
+        o.insert("batch_ms_max", hex_f64(self.batch_ms_max));
+        Json::Obj(o)
+    }
+
+    fn from_json(doc: &Json, what: &str) -> Result<Timing> {
+        let f = |key: &str| parse_hex_f64(doc.get(key), &format!("{what}: timing \"{key}\""));
+        Ok(Timing {
+            wall_secs: f("wall_secs")?,
+            evals_per_sec: f("evals_per_sec")?,
+            setup_ms: f("setup_ms")?,
+            batch_ms_p50: f("batch_ms_p50")?,
+            batch_ms_p95: f("batch_ms_p95")?,
+            batch_ms_max: f("batch_ms_max")?,
+        })
+    }
+}
+
+/// One scenario's summary line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioRecord {
+    pub name: String,
+    pub family: String,
+    pub explorer: String,
+    pub budget: usize,
+    pub workers: usize,
+    pub seeds: Vec<u64>,
+    pub space_size: u64,
+    pub evals: usize,
+    pub sim_calls: usize,
+    pub cache_hits: usize,
+    pub failures: usize,
+    pub setup_builds: usize,
+    pub setup_hits: usize,
+    /// Combined result fingerprint (see
+    /// [`log_fingerprint`](super::runner::log_fingerprint)).
+    pub fingerprint: u64,
+    /// Per-seed result fingerprints, in seed order.
+    pub run_fingerprints: Vec<u64>,
+    /// Per-seed best first-objective scores (bit-exact).
+    pub best_scores: Vec<f64>,
+    pub timing: Timing,
+}
+
+impl ScenarioRecord {
+    /// Flatten a runner result into its summary record.
+    pub fn from_result(r: &ScenarioResult) -> ScenarioRecord {
+        let batch_ms: Vec<f64> = r.runs.iter().flat_map(|run| run.batch_ms.iter().copied()).collect();
+        ScenarioRecord {
+            name: r.name.clone(),
+            family: r.family.clone(),
+            explorer: r.explorer.clone(),
+            budget: r.budget,
+            workers: r.workers,
+            seeds: r.runs.iter().map(|run| run.seed).collect(),
+            space_size: r.space_size,
+            evals: r.evals_total(),
+            sim_calls: r.runs.iter().map(|run| run.sim_calls).sum(),
+            cache_hits: r.runs.iter().map(|run| run.cache_hits).sum(),
+            failures: r.runs.iter().map(|run| run.failures).sum(),
+            setup_builds: r.runs.iter().map(|run| run.setup_builds).sum(),
+            setup_hits: r.runs.iter().map(|run| run.setup_hits).sum(),
+            fingerprint: r.fingerprint,
+            run_fingerprints: r.runs.iter().map(|run| run.fingerprint).collect(),
+            best_scores: r.runs.iter().map(|run| run.best_score).collect(),
+            timing: Timing {
+                wall_secs: r.wall_secs,
+                evals_per_sec: r.evals_per_sec(),
+                setup_ms: r.runs.iter().map(|run| run.setup_ms).sum(),
+                batch_ms_p50: stats::p50(&batch_ms),
+                batch_ms_p95: stats::p95(&batch_ms),
+                batch_ms_max: stats::max(&batch_ms),
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("kind", "scenario".into());
+        o.insert("name", self.name.as_str().into());
+        o.insert("family", self.family.as_str().into());
+        o.insert("explorer", self.explorer.as_str().into());
+        o.insert("budget", self.budget.into());
+        o.insert("workers", self.workers.into());
+        o.insert(
+            "seeds",
+            Json::Arr(self.seeds.iter().map(|s| hex_u64(*s)).collect()),
+        );
+        o.insert("space_size", hex_u64(self.space_size));
+        o.insert("evals", self.evals.into());
+        o.insert("sim_calls", self.sim_calls.into());
+        o.insert("cache_hits", self.cache_hits.into());
+        o.insert("failures", self.failures.into());
+        o.insert("setup_builds", self.setup_builds.into());
+        o.insert("setup_hits", self.setup_hits.into());
+        o.insert("fingerprint", hex_u64(self.fingerprint));
+        o.insert(
+            "run_fingerprints",
+            Json::Arr(self.run_fingerprints.iter().map(|f| hex_u64(*f)).collect()),
+        );
+        o.insert(
+            "best_scores",
+            Json::Arr(self.best_scores.iter().map(|s| hex_f64(*s)).collect()),
+        );
+        o.insert("timing", self.timing.to_json());
+        Json::Obj(o)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ScenarioRecord> {
+        let name = doc
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| crate::format_err!("bench summary: scenario line missing \"name\""))?
+            .to_string();
+        let what = format!("bench summary scenario '{name}'");
+        let int = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| crate::format_err!("{what}: missing integer \"{key}\""))
+        };
+        let string = |key: &str| -> String {
+            doc.get(key).and_then(|v| v.as_str()).unwrap_or("").to_string()
+        };
+        let hex_list = |key: &str| -> Result<Vec<u64>> {
+            match doc.get(key) {
+                Some(Json::Arr(arr)) => arr
+                    .iter()
+                    .map(|v| parse_hex_u64(Some(v), &format!("{what}: \"{key}\"")))
+                    .collect(),
+                _ => crate::bail!("{what}: missing list \"{key}\""),
+            }
+        };
+        let best_scores = match doc.get("best_scores") {
+            Some(Json::Arr(arr)) => arr
+                .iter()
+                .map(|v| parse_hex_f64(Some(v), &format!("{what}: \"best_scores\"")))
+                .collect::<Result<Vec<f64>>>()?,
+            _ => crate::bail!("{what}: missing list \"best_scores\""),
+        };
+        Ok(ScenarioRecord {
+            family: string("family"),
+            explorer: string("explorer"),
+            budget: int("budget")?,
+            workers: int("workers")?,
+            seeds: hex_list("seeds")?,
+            space_size: parse_hex_u64(doc.get("space_size"), &format!("{what}: \"space_size\""))?,
+            evals: int("evals")?,
+            sim_calls: int("sim_calls")?,
+            cache_hits: int("cache_hits")?,
+            failures: int("failures")?,
+            setup_builds: int("setup_builds")?,
+            setup_hits: int("setup_hits")?,
+            fingerprint: parse_hex_u64(doc.get("fingerprint"), &format!("{what}: \"fingerprint\""))?,
+            run_fingerprints: hex_list("run_fingerprints")?,
+            best_scores,
+            timing: Timing::from_json(
+                doc.get("timing")
+                    .ok_or_else(|| crate::format_err!("{what}: missing \"timing\""))?,
+                &what,
+            )?,
+            name,
+        })
+    }
+}
+
+/// A whole summary file: env stamp plus scenario records in run order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub env: EnvStamp,
+    pub scenarios: Vec<ScenarioRecord>,
+}
+
+impl Summary {
+    pub fn new(quick: bool, results: &[ScenarioResult]) -> Summary {
+        Summary {
+            env: EnvStamp::current(quick),
+            scenarios: results.iter().map(ScenarioRecord::from_result).collect(),
+        }
+    }
+
+    /// Serialize as JSONL: env stamp first, one compact line per scenario.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.env.to_json().to_string());
+        out.push('\n');
+        for s in &self.scenarios {
+            out.push_str(&s.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a summary document; `origin` names the source in errors.
+    pub fn parse(text: &str, origin: &str) -> Result<Summary> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let head = lines
+            .next()
+            .ok_or_else(|| crate::format_err!("bench summary '{origin}': empty file"))?;
+        let head = Json::parse(head)
+            .with_context(|| format!("bench summary '{origin}': parsing env stamp"))?;
+        let env = EnvStamp::from_json(&head)
+            .with_context(|| format!("bench summary '{origin}'"))?;
+        let mut scenarios = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let doc = Json::parse(line).with_context(|| {
+                format!("bench summary '{origin}': parsing scenario line {}", i + 2)
+            })?;
+            scenarios.push(
+                ScenarioRecord::from_json(&doc)
+                    .with_context(|| format!("bench summary '{origin}'"))?,
+            );
+        }
+        Ok(Summary { env, scenarios })
+    }
+
+    pub fn read(path: &Path) -> Result<Summary> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("bench: reading summary '{}'", path.display()))?;
+        Summary::parse(&text, &path.display().to_string())
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("bench: creating '{}'", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_jsonl())
+            .with_context(|| format!("bench: writing summary '{}'", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(name: &str) -> ScenarioRecord {
+        ScenarioRecord {
+            name: name.to_string(),
+            family: "mapping".into(),
+            explorer: "anneal".into(),
+            budget: 6,
+            workers: 2,
+            seeds: vec![3, u64::MAX],
+            space_size: 1 << 40,
+            evals: 12,
+            sim_calls: 9,
+            cache_hits: 3,
+            failures: 0,
+            setup_builds: 1,
+            setup_hits: 8,
+            fingerprint: 0xdead_beef_cafe_f00d,
+            run_fingerprints: vec![1, 2],
+            best_scores: vec![0.1, f64::INFINITY],
+            timing: Timing {
+                wall_secs: 0.1,
+                evals_per_sec: 120.0,
+                setup_ms: 33.3,
+                batch_ms_p50: 1.25,
+                batch_ms_p95: 2.5,
+                batch_ms_max: 3.0,
+            },
+        }
+    }
+
+    #[test]
+    fn summary_round_trips_bit_exactly() {
+        let summary = Summary {
+            env: EnvStamp::current(true),
+            scenarios: vec![record("a"), record("b")],
+        };
+        let text = summary.to_jsonl();
+        let back = Summary::parse(&text, "test").unwrap();
+        assert_eq!(summary, back);
+        // 0.1 and u64::MAX survive exactly (hex wire encoding)
+        assert_eq!(back.scenarios[0].timing.wall_secs.to_bits(), 0.1f64.to_bits());
+        assert_eq!(back.scenarios[0].seeds[1], u64::MAX);
+        assert!(back.scenarios[0].best_scores[1].is_infinite());
+        // and serialization is deterministic
+        assert_eq!(text, back.to_jsonl());
+    }
+
+    #[test]
+    fn empty_file_is_an_error() {
+        let err = Summary::parse("", "empty.jsonl").unwrap_err().to_string();
+        assert!(err.contains("empty.jsonl"), "{err}");
+        assert!(err.contains("empty file"), "{err}");
+        assert!(Summary::parse("\n  \n", "ws.jsonl").is_err());
+    }
+
+    #[test]
+    fn missing_env_stamp_is_an_error() {
+        let line = record("a").to_json().to_string();
+        let err = Summary::parse(&line, "headless.jsonl")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("headless.jsonl"), "{err}");
+    }
+
+    #[test]
+    fn bootstrap_header_round_trips() {
+        let mut env = EnvStamp::current(true);
+        env.bootstrap = true;
+        let text = format!("{}\n", env.to_json());
+        let s = Summary::parse(&text, "boot").unwrap();
+        assert!(s.env.bootstrap);
+        assert!(s.scenarios.is_empty());
+        // a normal stamp parses as non-bootstrap
+        assert!(!Summary::parse(&EnvStamp::current(false).to_json().to_string(), "n")
+            .unwrap()
+            .env
+            .bootstrap);
+    }
+
+    #[test]
+    fn unsupported_schema_version_is_an_error() {
+        let mut o = JsonObj::new();
+        o.insert("kind", "env".into());
+        o.insert("schema_version", 999u64.into());
+        let err = format!("{:#}", Summary::parse(&Json::Obj(o).to_string(), "v999").unwrap_err());
+        assert!(err.contains("schema version 999"), "{err}");
+    }
+}

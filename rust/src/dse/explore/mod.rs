@@ -230,6 +230,11 @@ struct SetupCache {
     builds: AtomicUsize,
     hits: AtomicUsize,
     next_id: AtomicU64,
+    /// Cumulative nanoseconds spent physically building setups (plan
+    /// materialization + route-table interning; with setup reuse off,
+    /// per-candidate materialization). Summed across workers — a timing
+    /// figure, deliberately excluded from the deterministic counters.
+    build_nanos: AtomicU64,
 }
 
 impl SetupCache {
@@ -242,6 +247,7 @@ impl SetupCache {
             builds: AtomicUsize::new(0),
             hits: AtomicUsize::new(0),
             next_id: AtomicU64::new(0),
+            build_nanos: AtomicU64::new(0),
         }
     }
 
@@ -250,6 +256,18 @@ impl SetupCache {
     /// [`SetupCache::account`] (keyed path) or with the caller
     /// (ephemeral path).
     fn build(
+        &self,
+        space: &dyn DesignSpace,
+        c: &Candidate,
+    ) -> std::result::Result<(Arc<EvalPlan>, Binding), String> {
+        let t0 = std::time::Instant::now();
+        let out = self.build_untimed(space, c);
+        self.build_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn build_untimed(
         &self,
         space: &dyn DesignSpace,
         c: &Candidate,
@@ -449,7 +467,11 @@ fn evaluate_fresh(
         return Err(format!("candidate out of bounds for '{}'", space.name()));
     }
     setups.builds.fetch_add(1, Ordering::Relaxed);
+    let t0 = std::time::Instant::now();
     let design = space.materialize(c).map_err(|e| format!("{e:#}"))?;
+    setups
+        .build_nanos
+        .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     let w = &design.workload;
     let r = simulate(&w.hw, &w.graph, &w.mapping, evals, sim).map_err(|e| e.to_string())?;
     Ok(objectives
@@ -672,6 +694,12 @@ impl<'a, 'scope> Engine<'a, 'scope> {
 
     pub(crate) fn setup_hits(&self) -> usize {
         self.setups.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative milliseconds spent physically building evaluation
+    /// setups so far (summed across workers).
+    pub fn setup_ms(&self) -> f64 {
+        self.setups.build_nanos.load(Ordering::Relaxed) as f64 * 1e-6
     }
 
     /// Topology keys accounted so far this run (sorted), including keys
@@ -929,6 +957,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             setup_hits: self.setups.hits.load(Ordering::Relaxed),
             moves_accepted: self.moves_accepted,
             elapsed_secs,
+            setup_ms: self.setups.build_nanos.load(Ordering::Relaxed) as f64 * 1e-6,
             space_size: self.space.size(),
         }
     }
@@ -1193,6 +1222,10 @@ mod tests {
         assert_eq!(r.sim_calls, 9);
         assert_eq!(r.setup_builds, 9);
         assert_eq!(r.setup_hit_rate(), 0.0);
+        // nine physical builds must have accumulated measurable time, and
+        // the steady-state remainder can never be negative
+        assert!(r.setup_ms > 0.0, "setup_ms = {}", r.setup_ms);
+        assert!(r.steady_ms() >= 0.0);
     }
 
     #[test]

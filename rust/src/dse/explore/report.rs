@@ -55,7 +55,16 @@ pub struct ExplorationReport {
     pub setup_hits: usize,
     /// Moves accepted by the local searchers (0 for grid/random).
     pub moves_accepted: usize,
+    /// Total wall-clock for the run. Kept as the aggregate timing field;
+    /// [`ExplorationReport::setup_ms`] splits out the plan-build share.
     pub elapsed_secs: f64,
+    /// Cumulative milliseconds spent building evaluation setups —
+    /// [`EvalPlan`](super::EvalPlan) materialization + route-table
+    /// interning (and, with setup reuse off, per-candidate
+    /// materialization). Summed across workers, so concurrent builds can
+    /// exceed `elapsed_secs * 1000`; use it to see how much of a run is
+    /// plan-build amortization versus steady-state evaluation.
+    pub setup_ms: f64,
     /// Total size of the explored space.
     pub space_size: u64,
 }
@@ -112,6 +121,26 @@ impl ExplorationReport {
     pub fn evals_per_sec(&self) -> f64 {
         if self.elapsed_secs > 0.0 {
             self.evals.len() as f64 / self.elapsed_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Wall-clock milliseconds of steady-state evaluation: the aggregate
+    /// elapsed time minus the cumulative setup (plan-build) time, clamped
+    /// at zero (concurrent builds on many workers can make `setup_ms`
+    /// exceed the wall clock).
+    pub fn steady_ms(&self) -> f64 {
+        (self.elapsed_secs * 1e3 - self.setup_ms).max(0.0)
+    }
+
+    /// Evaluations per second of steady-state time only — throughput with
+    /// plan-build amortization factored out. 0 when no steady-state time
+    /// was measured.
+    pub fn evals_per_sec_steady(&self) -> f64 {
+        let steady = self.steady_ms();
+        if steady > 0.0 {
+            self.evals.len() as f64 / (steady * 1e-3)
         } else {
             0.0
         }
@@ -243,7 +272,10 @@ impl ExplorationReport {
         o.insert("setup_hits", (self.setup_hits as u64).into());
         o.insert("moves_accepted", (self.moves_accepted as u64).into());
         o.insert("elapsed_secs", self.elapsed_secs.into());
+        o.insert("setup_ms", self.setup_ms.into());
+        o.insert("steady_ms", self.steady_ms().into());
         o.insert("evals_per_sec", self.evals_per_sec().into());
+        o.insert("evals_per_sec_steady", self.evals_per_sec_steady().into());
         match self.best() {
             Some(e) => o.insert("best", self.eval_json(e)),
             None => o.insert("best", Json::Null),
@@ -294,6 +326,7 @@ mod tests {
             setup_hits: 0,
             moves_accepted: 0,
             elapsed_secs: 1.0,
+            setup_ms: 0.0,
             space_size: 10,
         }
     }
@@ -352,6 +385,27 @@ mod tests {
         assert_eq!(parsed.get("space").unwrap().as_str(), Some("synthetic"));
         assert_eq!(parsed.get("evals").unwrap().as_f64(), Some(2.0));
         assert!(parsed.get("best").unwrap().get("objectives").is_some());
+    }
+
+    #[test]
+    fn timing_split_setup_vs_steady() {
+        let mut r = report(vec![
+            ev(vec![0], vec![1.0, 5.0]),
+            ev(vec![1], vec![2.0, 1.0]),
+        ]);
+        // 1.0s elapsed, 250ms of it plan builds → 750ms steady state
+        r.setup_ms = 250.0;
+        assert!((r.steady_ms() - 750.0).abs() < 1e-9);
+        assert!((r.evals_per_sec() - 2.0).abs() < 1e-12);
+        assert!((r.evals_per_sec_steady() - 2.0 / 0.75).abs() < 1e-9);
+        // concurrent builds can exceed the wall clock: steady clamps at 0
+        r.setup_ms = 5_000.0;
+        assert_eq!(r.steady_ms(), 0.0);
+        assert_eq!(r.evals_per_sec_steady(), 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("setup_ms").unwrap().as_f64(), Some(5_000.0));
+        assert_eq!(j.get("steady_ms").unwrap().as_f64(), Some(0.0));
+        assert!(j.get("evals_per_sec_steady").is_some());
     }
 
     #[test]

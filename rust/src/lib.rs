@@ -23,7 +23,9 @@
 //! On top sit the architecture templates ([`arch`]), cost models ([`cost`]),
 //! LLM workload generators ([`workloads`]) and the three-tier DSE engine
 //! ([`dse`]) orchestrated by the [`coordinator`], with the exploration
-//! stack exposed as a resumable job daemon by [`serve`].
+//! stack exposed as a resumable job daemon by [`serve`] and held to its
+//! throughput and bit-determinism claims by the [`bench`] scenario runner
+//! and regression gate.
 
 pub mod util;
 pub mod hwir;
@@ -35,6 +37,7 @@ pub mod arch;
 pub mod cost;
 pub mod workloads;
 pub mod dse;
+pub mod bench;
 pub mod runtime;
 pub mod coordinator;
 pub mod serve;

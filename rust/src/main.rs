@@ -10,6 +10,9 @@
 //!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
 //!               [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
 //! mldse serve [--port P] [--workers N]         exploration-as-a-service daemon
+//! mldse bench run [--scenarios PATH] [--out FILE] [--quick] [--workers N]
+//! mldse bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]
+//! mldse bench list [--scenarios PATH]          declarative perf scenarios + gate
 //! mldse hardware --spec FILE                   build + describe a spec
 //! ```
 //!
@@ -18,6 +21,10 @@
 use std::process::ExitCode;
 
 use mldse::arch::{DmcParams, GsmParams, MpmcParams};
+use mldse::bench::{
+    compare_summaries, load_scenarios, run_scenario, CompareOpts, Summary, Verdict,
+    DEFAULT_MAX_LOSS,
+};
 use mldse::coordinator::{Coordinator, EXPERIMENTS};
 use mldse::cost::Packaging;
 use mldse::dse::explore::{
@@ -128,6 +135,7 @@ fn main() -> ExitCode {
         "experiment" => cmd_experiment(&args),
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "hardware" => cmd_hardware(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -171,6 +179,14 @@ fn print_usage() {
                    daemon on 127.0.0.1 (job queue, JSONL event streams,\n\
                     pause/checkpoint/resume — see README \"Exploration as a\n\
                     service\")\n\
+           bench run [--scenarios PATH] [--out FILE] [--quick] [--workers N]\n\
+           bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]\n\
+           bench list [--scenarios PATH]\n\
+                   (declarative perf scenarios under benches/scenarios/;\n\
+                    run emits a JSONL summary with bit-exact result\n\
+                    fingerprints, compare gates throughput and\n\
+                    determinism against a checked-in baseline — see README\n\
+                    \"Benchmarks & regression gate\")\n\
            hardware --spec FILE.json\n",
         experiments = EXPERIMENTS.join("|"),
         presets = preset_names().join(", ")
@@ -493,6 +509,130 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use std::io::Write;
     std::io::stdout().flush().ok();
     server.run()
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => bench_run(args),
+        Some("compare") => bench_compare(args),
+        Some("list") => bench_list(args),
+        Some(other) => mldse::bail!(
+            "bench: unknown subcommand '{other}' (valid: run, compare, list)"
+        ),
+        None => mldse::bail!("bench: a subcommand is required (run, compare, list)"),
+    }
+}
+
+/// The scenario source: `--scenarios PATH` when given, else
+/// `benches/scenarios` relative to the working directory, else the
+/// crate's own scenario set (so the binary works from any directory).
+fn bench_scenarios_path(args: &Args) -> std::path::PathBuf {
+    if let Some(p) = args.flag("scenarios") {
+        return std::path::PathBuf::from(p);
+    }
+    let local = std::path::Path::new("benches/scenarios");
+    if local.exists() {
+        return local.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/scenarios")
+}
+
+/// Quick mode: `--quick`, or `MLDSE_BENCH_QUICK=1` in the environment
+/// (how CI shrinks the gate to smoke-test budgets).
+fn bench_quick(args: &Args) -> bool {
+    args.bool_flag("quick")
+        || std::env::var("MLDSE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+fn bench_run(args: &Args) -> Result<()> {
+    args.allow("bench run", &["scenarios", "out", "quick", "workers"])?;
+    let quick = bench_quick(args);
+    // --workers overrides every scenario's own worker count (0 = auto)
+    let workers_override = match args.flag("workers") {
+        Some(_) => Some(args.num("workers", 0usize)?),
+        None => None,
+    };
+    let scenarios = load_scenarios(&bench_scenarios_path(args))?;
+    let mut results = Vec::with_capacity(scenarios.len());
+    for s in &scenarios {
+        eprintln!(
+            "bench: {} ({}, explorer {}, budget {}, {} seed(s)){}",
+            s.name,
+            s.family.name(),
+            s.explorer,
+            s.effective_budget(quick),
+            s.seeds.len(),
+            if quick { " [quick]" } else { "" }
+        );
+        let r = run_scenario(s, quick, workers_override)?;
+        eprintln!(
+            "bench:   {} evals in {:.2}s ({:.1} evals/sec), fingerprint {:016x}",
+            r.evals_total(),
+            r.wall_secs,
+            r.evals_per_sec(),
+            r.fingerprint
+        );
+        results.push(r);
+    }
+    let summary = Summary::new(quick, &results);
+    match args.flag("out") {
+        Some(path) => {
+            summary.write(std::path::Path::new(path))?;
+            eprintln!("bench: wrote summary to {path}");
+        }
+        None => print!("{}", summary.to_jsonl()),
+    }
+    Ok(())
+}
+
+fn bench_compare(args: &Args) -> Result<()> {
+    args.allow("bench compare", &["threshold"])?;
+    let (base_path, cur_path) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(b), Some(c)) => (b.as_str(), c.as_str()),
+        _ => mldse::bail!("bench compare: usage: bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]"),
+    };
+    let threshold_pct: f64 = args.num("threshold", DEFAULT_MAX_LOSS * 100.0)?;
+    if !threshold_pct.is_finite() || threshold_pct < 0.0 {
+        mldse::bail!("--threshold: invalid value '{threshold_pct}' (want a percentage >= 0)");
+    }
+    let baseline = Summary::read(std::path::Path::new(base_path))?;
+    let current = Summary::read(std::path::Path::new(cur_path))?;
+    let report = compare_summaries(
+        &baseline,
+        &current,
+        &CompareOpts {
+            max_loss: threshold_pct / 100.0,
+        },
+    )?;
+    print!("{}", report.render());
+    if report.verdict() == Verdict::Fail {
+        mldse::bail!("bench compare: regression detected (per-scenario diagnosis above)");
+    }
+    Ok(())
+}
+
+fn bench_list(args: &Args) -> Result<()> {
+    args.allow("bench list", &["scenarios", "quick"])?;
+    let quick = bench_quick(args);
+    let path = bench_scenarios_path(args);
+    let scenarios = load_scenarios(&path)?;
+    let mut t = mldse::dse::report::Table::new(
+        format!("Bench scenarios ({})", path.display()),
+        &["name", "family", "explorer", "budget", "seeds", "workers", "file"],
+    );
+    for s in &scenarios {
+        t.row(vec![
+            s.name.clone(),
+            s.family.name().to_string(),
+            s.explorer.clone(),
+            s.effective_budget(quick).to_string(),
+            s.seeds.len().to_string(),
+            s.workers.to_string(),
+            s.origin.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
 }
 
 fn cmd_hardware(args: &Args) -> Result<()> {

@@ -49,6 +49,25 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// 50th percentile — alias of [`median`], named for latency summaries.
+pub fn p50(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// 95th percentile by linear interpolation (tail latency).
+pub fn p95(xs: &[f64]) -> f64 {
+    percentile(xs, 95.0)
+}
+
+/// Largest sample; 0.0 for an empty slice (consistent with the other
+/// helpers, which also return 0.0 on empty input).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(
+        if xs.is_empty() { 0.0 } else { f64::NEG_INFINITY },
+        f64::max,
+    )
+}
+
 /// Relative error `|a - b| / |b|`; infinity when `b == 0` and `a != 0`.
 pub fn rel_err(a: f64, b: f64) -> f64 {
     if b == 0.0 {
@@ -114,6 +133,37 @@ mod tests {
     fn mape_pairs() {
         let err = mape(&[110.0, 90.0], &[100.0, 100.0]);
         assert!((err - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p50_p95_max_odd_sample() {
+        // odd-length: p50 is the exact middle element
+        let xs = [30.0, 10.0, 20.0];
+        assert_eq!(p50(&xs), 20.0);
+        // rank = 0.95 * 2 = 1.9 → between 20 and 30
+        assert!((p95(&xs) - 29.0).abs() < 1e-12);
+        assert_eq!(max(&xs), 30.0);
+    }
+
+    #[test]
+    fn p50_p95_max_even_sample() {
+        // even-length: p50 interpolates between the two middle elements
+        let xs = [40.0, 10.0, 30.0, 20.0];
+        assert!((p50(&xs) - 25.0).abs() < 1e-12);
+        // rank = 0.95 * 3 = 2.85 → between 30 and 40
+        assert!((p95(&xs) - 38.5).abs() < 1e-12);
+        assert_eq!(max(&xs), 40.0);
+    }
+
+    #[test]
+    fn p50_p95_max_singleton_and_empty() {
+        let xs = [7.5];
+        assert_eq!(p50(&xs), 7.5);
+        assert_eq!(p95(&xs), 7.5);
+        assert_eq!(max(&xs), 7.5);
+        assert_eq!(p50(&[]), 0.0);
+        assert_eq!(p95(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! End-to-end tests of `mldse bench run|compare|list` against the real
+//! binary (`CARGO_BIN_EXE_mldse`), proving the ISSUE-level acceptance
+//! criteria:
+//!
+//! * two `bench run`s over the same scenarios produce identical summaries
+//!   modulo the `"timing"` blocks — fingerprints byte-equal;
+//! * injecting a synthetic >10% throughput loss makes `bench compare`
+//!   exit non-zero with a per-scenario diagnosis;
+//! * mutating a single result fingerprint makes `bench compare` exit
+//!   non-zero even when throughput *improves*;
+//! * a self-compare passes, the shipped bootstrap baseline passes with a
+//!   refresh notice, and scenario validation errors surface through the
+//!   CLI naming the offending field and file.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use mldse::bench::summary::Timing;
+use mldse::bench::Summary;
+
+fn mldse() -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mldse"));
+    cmd.env_remove("MLDSE_WORKERS");
+    cmd.env_remove("MLDSE_BENCH_QUICK");
+    cmd
+}
+
+/// Per-test scratch directory (the test binary may run tests in
+/// parallel, so names carry the test's own tag).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mldse-bench-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// A tiny scenario set: the 4-core mapping placement demo, cheap enough
+/// for debug-build end-to-end runs.
+fn write_scenarios(dir: &Path) -> PathBuf {
+    let scenarios = dir.join("scenarios");
+    std::fs::create_dir_all(&scenarios).expect("create scenario dir");
+    std::fs::write(
+        scenarios.join("mapping_small.json"),
+        r#"{
+  "name": "mapping-small",
+  "family": "mapping",
+  "explorer": "anneal",
+  "budget": 6,
+  "quick_budget": 3,
+  "seeds": [3, 4],
+  "workers": 2,
+  "metrics_every": 2
+}
+"#,
+    )
+    .expect("write scenario");
+    scenarios
+}
+
+fn run_ok(cmd: &mut Command) -> Output {
+    let out = cmd.output().expect("run mldse");
+    assert!(
+        out.status.success(),
+        "expected success\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+fn run_fail(cmd: &mut Command) -> Output {
+    let out = cmd.output().expect("run mldse");
+    assert!(
+        !out.status.success(),
+        "expected failure\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    out
+}
+
+fn bench_run(scenarios: &Path, out_file: &Path) {
+    run_ok(mldse().args([
+        "bench",
+        "run",
+        "--scenarios",
+        scenarios.to_str().unwrap(),
+        "--out",
+        out_file.to_str().unwrap(),
+    ]));
+}
+
+/// The summary with every timing block replaced by a fixed value — what
+/// "identical modulo timing" means, byte-for-byte: serializing the
+/// normalized summaries yields equal JSONL documents, fingerprints
+/// included.
+fn normalized(path: &Path) -> String {
+    let mut s = Summary::read(path).expect("read summary");
+    for rec in &mut s.scenarios {
+        rec.timing = Timing {
+            wall_secs: 0.0,
+            evals_per_sec: 0.0,
+            setup_ms: 0.0,
+            batch_ms_p50: 0.0,
+            batch_ms_p95: 0.0,
+            batch_ms_max: 0.0,
+        };
+    }
+    s.to_jsonl()
+}
+
+#[test]
+fn run_twice_is_identical_modulo_timing() {
+    let dir = scratch("determinism");
+    let scenarios = write_scenarios(&dir);
+    let a = dir.join("a.jsonl");
+    let b = dir.join("b.jsonl");
+    bench_run(&scenarios, &a);
+    bench_run(&scenarios, &b);
+
+    assert_eq!(
+        normalized(&a),
+        normalized(&b),
+        "two bench runs diverged outside the timing fields"
+    );
+    // fingerprints byte-equal in the raw files too
+    let fp_line = |p: &Path| {
+        let text = std::fs::read_to_string(p).unwrap();
+        let s = Summary::parse(&text, "t").unwrap();
+        (s.scenarios[0].fingerprint, s.scenarios[0].run_fingerprints.clone())
+    };
+    assert_eq!(fp_line(&a), fp_line(&b));
+
+    // and the timing fields are real measurements, not zeros
+    let s = Summary::read(&a).unwrap();
+    assert!(s.scenarios[0].timing.wall_secs > 0.0);
+    assert!(s.scenarios[0].timing.evals_per_sec > 0.0);
+    assert_eq!(s.scenarios[0].seeds, vec![3, 4]);
+    assert_eq!(s.scenarios[0].budget, 6, "non-quick run uses the full budget");
+}
+
+#[test]
+fn self_compare_passes() {
+    let dir = scratch("selfcmp");
+    let scenarios = write_scenarios(&dir);
+    let a = dir.join("a.jsonl");
+    bench_run(&scenarios, &a);
+    let out = run_ok(mldse().args([
+        "bench",
+        "compare",
+        a.to_str().unwrap(),
+        a.to_str().unwrap(),
+    ]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("PASS mapping-small"), "{stdout}");
+    assert!(stdout.contains("bench compare: PASS"), "{stdout}");
+}
+
+#[test]
+fn synthetic_throughput_loss_fails_the_gate() {
+    let dir = scratch("tput");
+    let scenarios = write_scenarios(&dir);
+    let base = dir.join("base.jsonl");
+    bench_run(&scenarios, &base);
+
+    // inject a 20% throughput loss (> the 10% default threshold)
+    let mut cur = Summary::read(&base).unwrap();
+    cur.scenarios[0].timing.evals_per_sec *= 0.8;
+    let cur_path = dir.join("cur.jsonl");
+    cur.write(&cur_path).unwrap();
+
+    let out = run_fail(mldse().args([
+        "bench",
+        "compare",
+        base.to_str().unwrap(),
+        cur_path.to_str().unwrap(),
+    ]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FAIL mapping-small"), "{stdout}");
+    assert!(stdout.contains("throughput regressed 20.0%"), "{stdout}");
+
+    // a looser threshold lets the same loss through
+    run_ok(mldse().args([
+        "bench",
+        "compare",
+        base.to_str().unwrap(),
+        cur_path.to_str().unwrap(),
+        "--threshold",
+        "25",
+    ]));
+}
+
+#[test]
+fn fingerprint_break_fails_even_with_faster_run() {
+    let dir = scratch("fp");
+    let scenarios = write_scenarios(&dir);
+    let base = dir.join("base.jsonl");
+    bench_run(&scenarios, &base);
+
+    let mut cur = Summary::read(&base).unwrap();
+    cur.scenarios[0].fingerprint ^= 1;
+    cur.scenarios[0].run_fingerprints[1] ^= 1;
+    // throughput *improves*: the fingerprint check must still win
+    cur.scenarios[0].timing.evals_per_sec *= 2.0;
+    let cur_path = dir.join("cur.jsonl");
+    cur.write(&cur_path).unwrap();
+
+    let out = run_fail(mldse().args([
+        "bench",
+        "compare",
+        base.to_str().unwrap(),
+        cur_path.to_str().unwrap(),
+    ]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FAIL mapping-small"), "{stdout}");
+    assert!(stdout.contains("result fingerprint broke"), "{stdout}");
+    assert!(stdout.contains("seed 4"), "diagnosis localizes the seed: {stdout}");
+}
+
+#[test]
+fn quick_env_var_shrinks_budgets() {
+    let dir = scratch("quick");
+    let scenarios = write_scenarios(&dir);
+    let out_file = dir.join("quick.jsonl");
+    run_ok(
+        mldse()
+            .args([
+                "bench",
+                "run",
+                "--scenarios",
+                scenarios.to_str().unwrap(),
+                "--out",
+                out_file.to_str().unwrap(),
+            ])
+            .env("MLDSE_BENCH_QUICK", "1"),
+    );
+    let s = Summary::read(&out_file).unwrap();
+    assert!(s.env.quick);
+    assert_eq!(s.scenarios[0].budget, 3, "quick_budget substituted");
+}
+
+#[test]
+fn bootstrap_baseline_passes_with_refresh_notice() {
+    let dir = scratch("bootstrap");
+    let scenarios = write_scenarios(&dir);
+    let cur = dir.join("cur.jsonl");
+    bench_run(&scenarios, &cur);
+    let baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/baselines/quick.jsonl");
+    let out = run_ok(mldse().args(["bench", "compare", baseline, cur.to_str().unwrap()]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bootstrap placeholder"), "{stdout}");
+    assert!(stdout.contains("bench run --quick"), "{stdout}");
+}
+
+#[test]
+fn shipped_scenarios_parse_and_list() {
+    let scenarios = concat!(env!("CARGO_MANIFEST_DIR"), "/benches/scenarios");
+    let out = run_ok(mldse().args(["bench", "list", "--scenarios", scenarios]));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in [
+        "dmc-prefill-anneal",
+        "gsm-prefill-random",
+        "packaging-grid-batched",
+        "mapping-hill-setup-reuse",
+        "three-tier-anneal-tiered",
+    ] {
+        assert!(stdout.contains(name), "missing scenario '{name}':\n{stdout}");
+    }
+}
+
+#[test]
+fn scenario_validation_errors_surface_through_the_cli() {
+    let dir = scratch("badscenario");
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        r#"{"name": "x", "family": "dcm-prefill", "budget": 8}"#,
+    )
+    .unwrap();
+    let out = run_fail(mldse().args(["bench", "run", "--scenarios", bad.to_str().unwrap()]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("bad.json"), "{stderr}");
+    assert!(stderr.contains("\"family\""), "{stderr}");
+    assert!(stderr.contains("unknown workload family 'dcm-prefill'"), "{stderr}");
+}
+
+#[test]
+fn compare_usage_and_unknown_subcommand_are_errors() {
+    let out = run_fail(mldse().args(["bench", "compare", "only-one.jsonl"]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage"), "{stderr}");
+
+    let out = run_fail(mldse().args(["bench", "frobnicate"]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown subcommand 'frobnicate'"), "{stderr}");
+
+    let out = run_fail(mldse().args(["bench"]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("subcommand is required"), "{stderr}");
+}

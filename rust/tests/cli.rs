@@ -138,7 +138,11 @@ fn zeroed_timing(stdout: &str) -> String {
         .lines()
         .map(|l| {
             let t = l.trim_start();
-            if t.starts_with("\"elapsed_secs\"") || t.starts_with("\"evals_per_sec\"") {
+            if t.starts_with("\"elapsed_secs\"")
+                || t.starts_with("\"setup_ms\"")
+                || t.starts_with("\"steady_ms\"")
+                || t.starts_with("\"evals_per_sec")
+            {
                 let indent = &l[..l.len() - t.len()];
                 let comma = if t.ends_with(',') { "," } else { "" };
                 let key = t.split(':').next().unwrap();

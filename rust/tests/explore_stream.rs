@@ -39,10 +39,11 @@ use mldse::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskKind};
 use mldse::workloads::Workload;
 
 fn report_json(mut r: ExplorationReport) -> String {
-    // elapsed wall-clock (and the derived evals/sec) is the only
-    // legitimately nondeterministic part of a report — zero it so the
-    // rest must match byte for byte.
+    // wall-clock timing (elapsed, the plan-build split, and the derived
+    // evals/sec figures) is the only legitimately nondeterministic part
+    // of a report — zero it so the rest must match byte for byte.
     r.elapsed_secs = 0.0;
+    r.setup_ms = 0.0;
     r.to_json().to_string()
 }
 

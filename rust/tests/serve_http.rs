@@ -123,7 +123,10 @@ fn strip_timing(report: &str) -> String {
         .lines()
         .filter(|l| {
             let t = l.trim_start();
-            !t.starts_with("\"elapsed_secs\"") && !t.starts_with("\"evals_per_sec\"")
+            !t.starts_with("\"elapsed_secs\"")
+                && !t.starts_with("\"setup_ms\"")
+                && !t.starts_with("\"steady_ms\"")
+                && !t.starts_with("\"evals_per_sec")
         })
         .collect::<Vec<_>>()
         .join("\n")
