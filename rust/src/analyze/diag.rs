@@ -1,0 +1,298 @@
+//! The diagnostic type and its renderings.
+//!
+//! Every static check in [`crate::analyze`] reports through [`Diagnostic`]:
+//! a **stable code** (`MLDSE-E010`), a [`Severity`], a human message, and a
+//! source path locating the finding inside the offending document (a JSON
+//! path like `matrix.cells[2]`, an instruction index like `program[3]`, or
+//! a point address like `[0,0]/[1,1]`). Codes are append-only — tests and
+//! tooling match on them, never on message substrings.
+
+use crate::util::json::{Json, JsonObj};
+
+/// How bad a finding is. `Error` means the artifact cannot work (a parse
+/// failure, a deadlock cycle, an unmapped task); `Warning` means it is
+/// suspicious or wasteful but may still run (a dead axis, an over-capacity
+/// tile, a link-bound mapping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One static-analysis finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Stable code (`MLDSE-Exxx` / `MLDSE-Wxxx`); see [`CODE_TABLE`].
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Source path inside the checked document (empty when the finding is
+    /// about the document as a whole).
+    pub at: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, at: impl Into<String>, message: impl Into<String>) -> Self {
+        debug_assert!(lookup(code).is_some(), "unregistered diagnostic code {code}");
+        Diagnostic {
+            code,
+            severity: Severity::Error,
+            at: at.into(),
+            message: message.into(),
+        }
+    }
+
+    pub fn warning(code: &'static str, at: impl Into<String>, message: impl Into<String>) -> Self {
+        debug_assert!(lookup(code).is_some(), "unregistered diagnostic code {code}");
+        Diagnostic {
+            code,
+            severity: Severity::Warning,
+            at: at.into(),
+            message: message.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("code", self.code.into());
+        o.insert("severity", self.severity.name().into());
+        o.insert("at", self.at.as_str().into());
+        o.insert("message", self.message.as_str().into());
+        Json::Obj(o)
+    }
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.at.is_empty() {
+            write!(f, "{} [{}]: {}", self.severity, self.code, self.message)
+        } else {
+            write!(
+                f,
+                "{} [{}] at {}: {}",
+                self.severity, self.code, self.at, self.message
+            )
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Stable codes
+// ----------------------------------------------------------------------
+
+/// Input is not valid JSON.
+pub const E001_NOT_JSON: &str = "MLDSE-E001";
+/// Hardware spec fails to parse or instantiate.
+pub const E010_SPEC_INVALID: &str = "MLDSE-E010";
+/// The same point name is used for differing point definitions.
+pub const W011_SHADOWED_NAME: &str = "MLDSE-W011";
+/// A multi-cell matrix level has no communication point, so its cells
+/// cannot reach each other.
+pub const W012_UNREACHABLE: &str = "MLDSE-W012";
+/// A memory (or lmem, or comm link) declares zero capacity or bandwidth.
+pub const W013_ZERO_RESOURCE: &str = "MLDSE-W013";
+/// A sync group resolves to zero points.
+pub const W014_EMPTY_SYNC_GROUP: &str = "MLDSE-W014";
+/// Mapping program (or its base document) fails to parse or validate —
+/// includes empty hole domains and inconsistent hole reuse.
+pub const E020_PROGRAM_INVALID: &str = "MLDSE-E020";
+/// The replayed task graph deadlocks: a dependency cycle through the
+/// sync-edge closure (barriers treated as all-to-all).
+pub const E021_DEADLOCK_CYCLE: &str = "MLDSE-E021";
+/// An enabled task is left unmapped after replay.
+pub const E022_UNMAPPED_TASK: &str = "MLDSE-E022";
+/// A task is mapped to a point of an incompatible kind.
+pub const E023_KIND_MISMATCH: &str = "MLDSE-E023";
+/// Replaying the program failed (bad selector, out-of-domain hole value,
+/// unanchored barrier, ...).
+pub const E024_REPLAY_FAILED: &str = "MLDSE-E024";
+/// A disabled task still has enabled consumers.
+pub const W025_DISABLED_LIVE_CONSUMERS: &str = "MLDSE-W025";
+/// Lower-bound memory footprint exceeds the point's capacity.
+pub const W030_OVER_CAPACITY: &str = "MLDSE-W030";
+/// Flow demand on a link exceeds the compute lower bound (link-bound).
+pub const W031_LINK_BOUND: &str = "MLDSE-W031";
+/// Space document fails to parse or compose.
+pub const E040_SPACE_INVALID: &str = "MLDSE-E040";
+/// An axis has cardinality 1 (dead axis).
+pub const W041_DEAD_AXIS: &str = "MLDSE-W041";
+/// Composed space cardinality overflows tractable budget math.
+pub const W042_CARDINALITY_OVERFLOW: &str = "MLDSE-W042";
+/// Scenario fails to validate (unknown family/preset, unknown explorer,
+/// bad field, ...).
+pub const E050_SCENARIO_INVALID: &str = "MLDSE-E050";
+/// Grid budget below the space size (partial sweep).
+pub const W051_PARTIAL_GRID: &str = "MLDSE-W051";
+/// A custom scenario's space file is missing or unparseable.
+pub const E052_SCENARIO_SPACE_FILE: &str = "MLDSE-E052";
+/// Task-graph integrity: a tombstone slot still has incident edges.
+pub const E060_TOMBSTONE_EDGES: &str = "MLDSE-E060";
+/// Task-graph integrity: an edge references a deleted task.
+pub const E061_DANGLING_EDGE: &str = "MLDSE-E061";
+/// Task-graph integrity: forward/reverse adjacency lists disagree.
+pub const E062_ASYMMETRIC_EDGE: &str = "MLDSE-E062";
+
+/// Every registered code with its severity and one-line meaning (the
+/// README's diagnostic table is generated from the same data by hand —
+/// keep them in sync).
+pub const CODE_TABLE: &[(&str, Severity, &str)] = &[
+    (E001_NOT_JSON, Severity::Error, "input is not valid JSON"),
+    (E010_SPEC_INVALID, Severity::Error, "hardware spec fails to parse"),
+    (W011_SHADOWED_NAME, Severity::Warning, "point name reused with a different definition"),
+    (W012_UNREACHABLE, Severity::Warning, "multi-cell level without a communication point"),
+    (W013_ZERO_RESOURCE, Severity::Warning, "zero-capacity or zero-bandwidth resource"),
+    (W014_EMPTY_SYNC_GROUP, Severity::Warning, "sync group resolves to zero points"),
+    (E020_PROGRAM_INVALID, Severity::Error, "mapping program/base fails to parse or validate"),
+    (E021_DEADLOCK_CYCLE, Severity::Error, "dependency cycle through the sync-edge closure"),
+    (E022_UNMAPPED_TASK, Severity::Error, "enabled task left unmapped after replay"),
+    (E023_KIND_MISMATCH, Severity::Error, "task mapped to an incompatible point kind"),
+    (E024_REPLAY_FAILED, Severity::Error, "program replay failed"),
+    (W025_DISABLED_LIVE_CONSUMERS, Severity::Warning, "disabled task with enabled consumers"),
+    (W030_OVER_CAPACITY, Severity::Warning, "memory footprint exceeds point capacity"),
+    (W031_LINK_BOUND, Severity::Warning, "link flow demand exceeds the compute lower bound"),
+    (E040_SPACE_INVALID, Severity::Error, "space document fails to parse or compose"),
+    (W041_DEAD_AXIS, Severity::Warning, "axis with cardinality 1"),
+    (W042_CARDINALITY_OVERFLOW, Severity::Warning, "space cardinality overflows budget math"),
+    (E050_SCENARIO_INVALID, Severity::Error, "scenario fails to validate"),
+    (W051_PARTIAL_GRID, Severity::Warning, "grid budget below the space size (partial sweep)"),
+    (E052_SCENARIO_SPACE_FILE, Severity::Error, "scenario space file missing or unparseable"),
+    (E060_TOMBSTONE_EDGES, Severity::Error, "task-graph tombstone has incident edges"),
+    (E061_DANGLING_EDGE, Severity::Error, "task-graph edge references a deleted task"),
+    (E062_ASYMMETRIC_EDGE, Severity::Error, "task-graph adjacency lists disagree"),
+];
+
+/// Look a code up in [`CODE_TABLE`].
+pub fn lookup(code: &str) -> Option<&'static (&'static str, Severity, &'static str)> {
+    CODE_TABLE.iter().find(|(c, _, _)| *c == code)
+}
+
+/// Deterministic report order: errors first, then by code, source path,
+/// message.
+pub fn sort(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (a.severity, a.code, &a.at, &a.message).cmp(&(b.severity, b.code, &b.at, &b.message))
+    });
+}
+
+/// True when any finding is severity [`Severity::Error`].
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+/// `(errors, warnings)` counts.
+pub fn counts(diags: &[Diagnostic]) -> (usize, usize) {
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    (errors, diags.len() - errors)
+}
+
+/// Aligned console rendering of a (sorted) diagnostic list.
+pub fn render_table(origin: &str, diags: &[Diagnostic]) -> String {
+    let (errors, warnings) = counts(diags);
+    if diags.is_empty() {
+        return format!("check {origin}: ok (no diagnostics)\n");
+    }
+    let mut t = crate::dse::report::Table::new(
+        format!("check {origin}: {errors} error(s), {warnings} warning(s)"),
+        &["code", "severity", "at", "message"],
+    );
+    for d in diags {
+        t.row(vec![
+            d.code.to_string(),
+            d.severity.name().to_string(),
+            d.at.clone(),
+            d.message.clone(),
+        ]);
+    }
+    t.render()
+}
+
+/// The JSON payload shape shared by `mldse check --json` and the daemon's
+/// HTTP 422 response: origin, counts, and the sorted diagnostic list.
+pub fn to_json(origin: &str, diags: &[Diagnostic]) -> Json {
+    let (errors, warnings) = counts(diags);
+    let mut o = JsonObj::new();
+    o.insert("origin", origin.into());
+    o.insert("errors", errors.into());
+    o.insert("warnings", warnings.into());
+    o.insert(
+        "diagnostics",
+        Json::Arr(diags.iter().map(Diagnostic::to_json).collect()),
+    );
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_unique_and_well_formed() {
+        for (i, (code, sev, _)) in CODE_TABLE.iter().enumerate() {
+            assert!(code.starts_with("MLDSE-"), "{code}");
+            let class = &code["MLDSE-".len()..];
+            match sev {
+                Severity::Error => assert!(class.starts_with('E'), "{code}"),
+                Severity::Warning => assert!(class.starts_with('W'), "{code}"),
+            }
+            assert!(class[1..].chars().all(|c| c.is_ascii_digit()), "{code}");
+            for (other, _, _) in &CODE_TABLE[i + 1..] {
+                assert_ne!(code, other, "duplicate code");
+            }
+        }
+    }
+
+    #[test]
+    fn sort_is_deterministic_errors_first() {
+        let mut d = vec![
+            Diagnostic::warning(W041_DEAD_AXIS, "axes.b", "dead"),
+            Diagnostic::error(E040_SPACE_INVALID, "", "bad"),
+            Diagnostic::warning(W041_DEAD_AXIS, "axes.a", "dead"),
+        ];
+        sort(&mut d);
+        assert_eq!(d[0].code, E040_SPACE_INVALID);
+        assert_eq!(d[1].at, "axes.a");
+        assert_eq!(d[2].at, "axes.b");
+        assert!(has_errors(&d));
+        assert_eq!(counts(&d), (1, 2));
+    }
+
+    #[test]
+    fn render_and_json_shapes() {
+        let d = vec![Diagnostic::error(E001_NOT_JSON, "", "oops")];
+        let s = render_table("x.json", &d);
+        assert!(s.contains("MLDSE-E001"), "{s}");
+        assert!(s.contains("1 error(s), 0 warning(s)"), "{s}");
+        let j = to_json("x.json", &d);
+        assert_eq!(j.get("errors").and_then(|v| v.as_u64()), Some(1));
+        let arr = j.get("diagnostics").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(arr[0].get("code").and_then(|v| v.as_str()), Some("MLDSE-E001"));
+        assert_eq!(
+            arr[0].get("severity").and_then(|v| v.as_str()),
+            Some("error")
+        );
+        assert_eq!(render_table("y.json", &[]), "check y.json: ok (no diagnostics)\n");
+    }
+
+    #[test]
+    fn display_includes_code_and_path() {
+        let d = Diagnostic::warning(W013_ZERO_RESOURCE, "[0,0]", "zero bandwidth");
+        let s = d.to_string();
+        assert!(s.contains("MLDSE-W013"), "{s}");
+        assert!(s.contains("[0,0]"), "{s}");
+    }
+}

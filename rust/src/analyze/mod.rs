@@ -1,0 +1,126 @@
+//! Static diagnostics over MLDSE's declarative artifacts (`mldse check`).
+//!
+//! The infrastructure is driven by four kinds of JSON document — hardware
+//! specs (§4), mapping programs (§5), design-space documents (§7), and
+//! bench scenarios — and a malformed or semantically doomed artifact
+//! should be rejected in microseconds with a named diagnostic, not
+//! discovered mid-simulation or after an exploration batch is spent.
+//! This module is that pass: structural parsing plus semantic lints that
+//! run **without simulating** (deadlock cycles, unmapped tasks,
+//! capacity/bandwidth lower bounds, dead axes, budget overflow).
+//!
+//! Every finding is a [`Diagnostic`] with a stable code (see
+//! [`diag::CODE_TABLE`]); output is deterministic (errors first, then
+//! code / source path / message). The same checks back the `mldse check`
+//! CLI, the `explore`/`bench run` pre-flights, and the daemon's
+//! HTTP 422 rejection of bad `POST /jobs` spaces.
+//!
+//! Input kind is sniffed from the document shape:
+//!
+//! | shape                     | treated as      |
+//! |---------------------------|-----------------|
+//! | JSON array                | mapping program (replayed on the demo base) |
+//! | object with `"matrix"`    | hardware spec   |
+//! | object with `"base"`      | mapping program with an explicit base |
+//! | object with `"family"`    | bench scenario  |
+//! | anything else             | design space    |
+
+pub mod diag;
+pub mod program;
+pub mod scenario;
+pub mod space;
+pub mod spec;
+
+pub use diag::{Diagnostic, Severity};
+pub use program::{check_program_doc, demo_base, ProgramBase};
+pub use scenario::{check_scenario, check_scenario_doc};
+pub use space::{check_space_doc, lint_space};
+pub use spec::check_spec_doc;
+
+use crate::util::json::Json;
+
+/// What [`check_document`] decided a document is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    Spec,
+    Program,
+    Space,
+    Scenario,
+}
+
+impl InputKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InputKind::Spec => "hardware spec",
+            InputKind::Program => "mapping program",
+            InputKind::Space => "design space",
+            InputKind::Scenario => "bench scenario",
+        }
+    }
+}
+
+/// Check raw text: parse failures are `MLDSE-E001`, everything else
+/// dispatches through [`check_document`]. `origin` is the source path
+/// (used for diagnostics and for resolving a scenario's relative
+/// `"space"` reference).
+pub fn check_text(text: &str, origin: &str) -> (Option<InputKind>, Vec<Diagnostic>) {
+    match Json::parse(text) {
+        Ok(doc) => {
+            let (kind, diags) = check_document(&doc, origin);
+            (Some(kind), diags)
+        }
+        Err(e) => (
+            None,
+            vec![Diagnostic::error(
+                diag::E001_NOT_JSON,
+                "",
+                format!("not valid JSON: {e}"),
+            )],
+        ),
+    }
+}
+
+/// Sniff the document kind from its shape and run the matching checks.
+pub fn check_document(doc: &Json, origin: &str) -> (InputKind, Vec<Diagnostic>) {
+    if doc.as_arr().is_some() {
+        return (InputKind::Program, check_program_doc(doc));
+    }
+    if doc.get("matrix").is_some() {
+        return (InputKind::Spec, check_spec_doc(doc));
+    }
+    if doc.get("base").is_some() {
+        return (InputKind::Program, check_program_doc(doc));
+    }
+    if doc.get("family").is_some() {
+        return (InputKind::Scenario, check_scenario_doc(doc, origin));
+    }
+    (InputKind::Space, check_space_doc(doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_json_is_e001() {
+        let (kind, d) = check_text("not json at all {", "x.json");
+        assert_eq!(kind, None);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, diag::E001_NOT_JSON);
+    }
+
+    #[test]
+    fn dispatch_sniffs_document_shape() {
+        let (k, _) = check_text("[]", "x.json");
+        assert_eq!(k, Some(InputKind::Program));
+        let (k, _) = check_text(r#"{"matrix": {}}"#, "x.json");
+        assert_eq!(k, Some(InputKind::Spec));
+        let (k, _) = check_text(r#"{"base": {}, "program": []}"#, "x.json");
+        assert_eq!(k, Some(InputKind::Program));
+        let (k, _) = check_text(r#"{"family": "mapping"}"#, "x.json");
+        assert_eq!(k, Some(InputKind::Scenario));
+        let (k, _) = check_text(r#"{"type": "param"}"#, "x.json");
+        assert_eq!(k, Some(InputKind::Space));
+        assert_eq!(InputKind::Space.name(), "design space");
+    }
+}

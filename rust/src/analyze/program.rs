@@ -1,0 +1,596 @@
+//! Static lints over mapping programs (§5 primitive sequences).
+//!
+//! A program is checked by **replaying it once** against a base
+//! (hardware, task graph, base mapping) at the all-zeros hole binding —
+//! replay runs graph-transformation primitives only, no simulation — and
+//! then linting the transformed graph + mapping:
+//!
+//! * deadlock cycles through the sync-edge closure (barrier sync tasks
+//!   sharing a `sync_id` complete together, so they are contracted into
+//!   one node before cycle detection),
+//! * enabled tasks left unmapped, kind-incompatible placements,
+//!   disabled tasks whose consumers still run,
+//! * lower-bound capacity/bandwidth feasibility: per-task footprint vs.
+//!   lmem capacity, per-point storage residency vs. memory capacity, and
+//!   total link flow vs. the compute lower bound.
+//!
+//! Two input shapes are accepted: a bare JSON array (the `"program"`
+//! field of nested spaces) replayed on a demo base — a 2×2 DMC grid with
+//! eight elementwise tasks, the same base `mldse explore --preset
+//! mapping` uses — or `{"base": {...}, "program": [...]}` with an
+//! explicit spec, task list, and edge list.
+
+use std::collections::HashMap;
+
+use crate::eval::Registry;
+use crate::hwir::{parse_spec_value, Hardware, PointKind};
+use crate::mapping::{Mapping, MappingProgram, MappingState};
+use crate::taskgraph::{ComputeCost, OpClass, TaskGraph, TaskId, TaskKind};
+use crate::util::json::Json;
+
+use super::diag::{self, Diagnostic};
+
+/// The instantiation context a program is replayed against.
+pub struct ProgramBase {
+    pub hw: Hardware,
+    pub graph: TaskGraph,
+    pub mapping: Mapping,
+}
+
+/// The base used for bare-array programs: the same 2×2 DMC grid with
+/// eight pre-placed elementwise tasks that backs the `mapping` preset.
+pub fn demo_base() -> ProgramBase {
+    let params = crate::arch::DmcParams {
+        grid: (2, 2),
+        with_dram: false,
+        ..crate::arch::DmcParams::default()
+    };
+    let hw = params.build();
+    let core0 = hw.points_of_kind("compute")[0];
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    for i in 0..8 {
+        let mut c = ComputeCost::zero(OpClass::Elementwise);
+        c.vec_flops = 40_000.0 * (1 + i % 4) as f64;
+        let t = graph.add(format!("t{i}"), TaskKind::Compute(c));
+        mapping.map(t, core0);
+    }
+    ProgramBase { hw, graph, mapping }
+}
+
+/// Parse the `"base"` object of a program document: a hardware `"spec"`,
+/// a `"tasks"` array, and an optional `"edges"` array of `[src, dst]`
+/// task-name pairs. Tasks may pre-place themselves with `"on": "<point
+/// name>"` (the name must resolve to exactly one point).
+pub fn base_from_json(v: &Json) -> crate::util::error::Result<ProgramBase> {
+    let spec = v
+        .get("spec")
+        .ok_or_else(|| crate::format_err!("base missing \"spec\""))?;
+    let hw = Hardware::build(parse_spec_value(spec).map_err(|e| crate::format_err!("{e}"))?);
+
+    let mut graph = TaskGraph::new();
+    let mut mapping = Mapping::new();
+    let mut by_name: HashMap<String, TaskId> = HashMap::new();
+    let tasks = v
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| crate::format_err!("base missing \"tasks\" array"))?;
+    for (i, t) in tasks.iter().enumerate() {
+        let name = t
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| crate::format_err!("base task {i} missing \"name\""))?
+            .to_string();
+        crate::ensure!(
+            !by_name.contains_key(&name),
+            "base task name '{name}' is duplicated"
+        );
+        let kind = match t.get("kind").and_then(Json::as_str) {
+            Some("compute") | None => {
+                let mut c = ComputeCost::zero(OpClass::Elementwise);
+                let f = |key: &str| t.get(key).and_then(Json::as_f64);
+                let u = |key: &str| t.get(key).and_then(Json::as_u64);
+                c.mac_flops = f("mac_flops").unwrap_or(0.0);
+                c.vec_flops = f("vec_flops").unwrap_or(0.0);
+                c.in_bytes = u("in_bytes").unwrap_or(0);
+                c.out_bytes = u("out_bytes").unwrap_or(0);
+                c.dram_bytes = u("dram_bytes").unwrap_or(0);
+                TaskKind::Compute(c)
+            }
+            Some("storage") => TaskKind::Storage {
+                bytes: t
+                    .get("bytes")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::format_err!("storage task '{name}' missing bytes"))?,
+            },
+            Some("comm") => TaskKind::Comm {
+                bytes: t
+                    .get("bytes")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| crate::format_err!("comm task '{name}' missing bytes"))?,
+                hops: t.get("hops").and_then(Json::as_u64).unwrap_or(0),
+                route: None,
+            },
+            Some(other) => crate::bail!(
+                "base task '{name}': unknown kind '{other}' (valid: compute, storage, comm)"
+            ),
+        };
+        let id = graph.add(name.clone(), kind);
+        if let Some(on) = t.get("on").and_then(Json::as_str) {
+            let points = hw.points_named(on);
+            crate::ensure!(
+                points.len() == 1,
+                "base task '{name}': \"on\" point '{on}' resolves to {} points \
+                 (must be exactly 1)",
+                points.len()
+            );
+            mapping.map(id, points[0]);
+        }
+        by_name.insert(name, id);
+    }
+    if let Some(edges) = v.get("edges").and_then(Json::as_arr) {
+        for (i, e) in edges.iter().enumerate() {
+            let pair = e.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                crate::format_err!("base edge {i} must be a [src, dst] name pair")
+            })?;
+            let mut ends = [TaskId(0); 2];
+            for (slot, side) in pair.iter().zip(ends.iter_mut()) {
+                let n = slot
+                    .as_str()
+                    .ok_or_else(|| crate::format_err!("base edge {i}: endpoints are names"))?;
+                *side = *by_name
+                    .get(n)
+                    .ok_or_else(|| crate::format_err!("base edge {i}: unknown task '{n}'"))?;
+            }
+            graph.connect(ends[0], ends[1]);
+        }
+    }
+    Ok(ProgramBase { hw, graph, mapping })
+}
+
+/// Run every mapping-program check on an already-parsed JSON document
+/// (bare array or `{"base", "program"}`). Returns a sorted diagnostic
+/// list (empty = clean).
+pub fn check_program_doc(doc: &Json) -> Vec<Diagnostic> {
+    let e020 = |msg: String| vec![Diagnostic::error(diag::E020_PROGRAM_INVALID, "", msg)];
+    let (program, base) = if doc.as_arr().is_some() {
+        match MappingProgram::from_json_value(doc) {
+            Ok(p) => (p, demo_base()),
+            Err(e) => return e020(format!("{e:#}")),
+        }
+    } else {
+        let Some(base_v) = doc.get("base") else {
+            return e020("program document must be a JSON array or {\"base\", \"program\"}".into());
+        };
+        let base = match base_from_json(base_v) {
+            Ok(b) => b,
+            Err(e) => return e020(format!("base: {e:#}")),
+        };
+        let Some(prog_v) = doc.get("program") else {
+            return e020("program document missing \"program\" array".into());
+        };
+        match MappingProgram::from_json_value(prog_v) {
+            Ok(p) => (p, base),
+            Err(e) => return e020(format!("{e:#}")),
+        }
+    };
+
+    let n_compute = base.hw.points_of_kind("compute").len();
+    let holes = match program.resolved_holes(Some(n_compute)) {
+        Ok(h) => h,
+        Err(e) => return e020(format!("{e:#}")),
+    };
+
+    // Replay at the all-zeros binding: valid whenever every hole domain is
+    // non-empty (which `resolved_holes` already guarantees).
+    let binding = vec![0u32; holes.len()];
+    let mut state = MappingState::new(base.graph.clone());
+    state.mapping = base.mapping.clone();
+    let evals = Registry::standard();
+    if let Err(e) = program.replay(&mut state, &base.hw, &evals, &binding) {
+        let mut d = vec![Diagnostic::error(
+            diag::E024_REPLAY_FAILED,
+            "",
+            format!("{e:#}"),
+        )];
+        diag::sort(&mut d);
+        return d;
+    }
+
+    let mut diags = Vec::new();
+    lint_deadlock(&state.graph, &mut diags);
+    lint_mapping(&state, &base.hw, &mut diags);
+    lint_disabled(&state.graph, &mut diags);
+    lint_feasibility(&state, &base.hw, &evals, &mut diags);
+    diag::sort(&mut diags);
+    diags
+}
+
+/// E021: cycle detection over the sync-edge closure. All sync tasks
+/// sharing a `sync_id` complete together, so they are contracted into a
+/// single node; any remaining cycle over the enabled tasks deadlocks the
+/// simulator.
+fn lint_deadlock(graph: &TaskGraph, diags: &mut Vec<Diagnostic>) {
+    // Node index per enabled task, contracting same-sync_id tasks.
+    let mut node_of: HashMap<TaskId, usize> = HashMap::new();
+    let mut sync_node: HashMap<u32, usize> = HashMap::new();
+    let mut members: Vec<Vec<TaskId>> = Vec::new();
+    for t in graph.iter().filter(|t| t.enabled) {
+        let node = match &t.kind {
+            TaskKind::Sync { sync_id } => *sync_node.entry(*sync_id).or_insert_with(|| {
+                members.push(Vec::new());
+                members.len() - 1
+            }),
+            _ => {
+                members.push(Vec::new());
+                members.len() - 1
+            }
+        };
+        members[node].push(t.id);
+        node_of.insert(t.id, node);
+    }
+    let n = members.len();
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut indeg = vec![0usize; n];
+    for t in graph.iter().filter(|t| t.enabled) {
+        let a = node_of[&t.id];
+        for s in graph.successors(t.id) {
+            if let Some(&b) = node_of.get(s) {
+                if a != b && !succs[a].contains(&b) {
+                    succs[a].push(b);
+                    indeg[b] += 1;
+                }
+            }
+        }
+    }
+    // Kahn over the contracted graph; leftovers contain every cycle.
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut removed = vec![false; n];
+    while let Some(i) = queue.pop() {
+        removed[i] = true;
+        for &s in &succs[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                queue.push(s);
+            }
+        }
+    }
+    if removed.iter().all(|r| *r) {
+        return;
+    }
+    let mut witness: Vec<&str> = (0..n)
+        .filter(|&i| !removed[i])
+        .flat_map(|i| members[i].iter().map(|t| graph.task(*t).name.as_str()))
+        .collect();
+    witness.sort_unstable();
+    let shown = witness.len().min(8);
+    let mut list = witness[..shown].join(", ");
+    if witness.len() > shown {
+        list.push_str(&format!(", … ({} more)", witness.len() - shown));
+    }
+    diags.push(Diagnostic::error(
+        diag::E021_DEADLOCK_CYCLE,
+        "",
+        format!(
+            "dependency cycle through the sync-edge closure involving tasks: {list}; \
+             the simulator would deadlock"
+        ),
+    ));
+}
+
+/// E022 (enabled task unmapped) and E023 (kind-incompatible placement) —
+/// the same rules as `Mapping::validate`, but reported per task with
+/// stable codes.
+fn lint_mapping(state: &MappingState, hw: &Hardware, diags: &mut Vec<Diagnostic>) {
+    for task in state.graph.iter().filter(|t| t.enabled) {
+        // Originals of decomposed comm edges are exempt: their subs carry
+        // the placement.
+        if state.mapping.edge_decomposition(task.id).is_some() {
+            continue;
+        }
+        match state.mapping.point_of(task.id) {
+            None => diags.push(Diagnostic::error(
+                diag::E022_UNMAPPED_TASK,
+                task.name.clone(),
+                format!("enabled task {} ({}) is unmapped", task.id, task.name),
+            )),
+            Some(p) => {
+                let kind = &hw.entry(p).point.kind;
+                let ok = match &task.kind {
+                    TaskKind::Compute(_) => kind.is_compute(),
+                    TaskKind::Storage { .. } => kind.is_memory(),
+                    TaskKind::Comm { .. } => kind.is_comm() || kind.is_memory(),
+                    TaskKind::Sync { .. } => true,
+                };
+                if !ok {
+                    diags.push(Diagnostic::error(
+                        diag::E023_KIND_MISMATCH,
+                        task.name.clone(),
+                        format!(
+                            "{} task {} ({}) mapped to {} point {}",
+                            task.kind.kind_name(),
+                            task.id,
+                            task.name,
+                            kind.kind_name(),
+                            hw.entry(p).addr,
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// W025: a disabled task whose consumers still run. The simulator treats
+/// the dependency as satisfied, so the consumer reads data that was never
+/// produced.
+fn lint_disabled(graph: &TaskGraph, diags: &mut Vec<Diagnostic>) {
+    for task in graph.iter().filter(|t| !t.enabled) {
+        let live: Vec<&str> = graph
+            .successors(task.id)
+            .iter()
+            .filter(|s| graph.task(**s).enabled)
+            .map(|s| graph.task(*s).name.as_str())
+            .collect();
+        if !live.is_empty() {
+            diags.push(Diagnostic::warning(
+                diag::W025_DISABLED_LIVE_CONSUMERS,
+                task.name.clone(),
+                format!(
+                    "disabled task {} ({}) still has enabled consumers: {}",
+                    task.id,
+                    task.name,
+                    live.join(", ")
+                ),
+            ));
+        }
+    }
+}
+
+/// W030 (footprint vs. capacity) and W031 (link-bound flow) — lower-bound
+/// feasibility from static costs, no simulation.
+fn lint_feasibility(
+    state: &MappingState,
+    hw: &Hardware,
+    evals: &Registry,
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Per-point aggregates over enabled mapped tasks.
+    let mut storage_bytes: HashMap<crate::hwir::PointId, u64> = HashMap::new();
+    let mut comm_bytes: HashMap<crate::hwir::PointId, u64> = HashMap::new();
+    let mut compute_cycles: HashMap<crate::hwir::PointId, f64> = HashMap::new();
+    for (t, p) in state.mapping.mapped_tasks() {
+        let Some(task) = state.graph.get(t).filter(|t| t.enabled) else {
+            continue;
+        };
+        let entry = hw.entry(p);
+        match &task.kind {
+            TaskKind::Compute(c) => {
+                if let Some(lmem) = entry.point.kind.as_compute().and_then(|a| a.lmem.as_ref()) {
+                    if lmem.capacity > 0 && c.local_bytes() > lmem.capacity {
+                        diags.push(Diagnostic::warning(
+                            diag::W030_OVER_CAPACITY,
+                            task.name.clone(),
+                            format!(
+                                "task {} ({}) needs {} bytes of local memory but point {} \
+                                 ({}) has lmem capacity {}",
+                                task.id,
+                                task.name,
+                                c.local_bytes(),
+                                entry.addr,
+                                entry.point.name,
+                                lmem.capacity,
+                            ),
+                        ));
+                    }
+                }
+                *compute_cycles.entry(p).or_insert(0.0) += evals.demand(task, entry).total();
+            }
+            TaskKind::Storage { bytes } => {
+                *storage_bytes.entry(p).or_insert(0) += bytes;
+            }
+            TaskKind::Comm { bytes, .. } => {
+                if entry.point.kind.is_comm() {
+                    *comm_bytes.entry(p).or_insert(0) += bytes;
+                }
+            }
+            TaskKind::Sync { .. } => {}
+        }
+    }
+
+    for (p, bytes) in &storage_bytes {
+        let entry = hw.entry(*p);
+        if let Some(mem) = entry.point.kind.as_memory() {
+            if mem.capacity > 0 && *bytes > mem.capacity {
+                diags.push(Diagnostic::warning(
+                    diag::W030_OVER_CAPACITY,
+                    format!("{}", entry.addr),
+                    format!(
+                        "storage residency on point {} ({}) is {} bytes but capacity is {}",
+                        entry.addr, entry.point.name, bytes, mem.capacity,
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Link-bound: total flow cycles through a comm point exceed the busiest
+    // compute point's cycle lower bound — the link, not compute, sets the
+    // makespan floor.
+    let compute_floor = compute_cycles.values().fold(0.0f64, |a, b| a.max(*b));
+    if compute_floor > 0.0 {
+        for (p, bytes) in &comm_bytes {
+            let entry = hw.entry(*p);
+            let Some(comm) = entry.point.kind.as_comm() else {
+                continue;
+            };
+            if comm.link_bandwidth <= 0.0 {
+                continue;
+            }
+            let flow_cycles = *bytes as f64 / comm.link_bandwidth;
+            if flow_cycles > compute_floor {
+                diags.push(Diagnostic::warning(
+                    diag::W031_LINK_BOUND,
+                    format!("{}", entry.addr),
+                    format!(
+                        "flow of {} bytes on comm point {} ({}) needs {:.0} cycles at \
+                         {} B/cycle, exceeding the busiest compute point's {:.0}-cycle \
+                         lower bound (link-bound mapping)",
+                        bytes,
+                        entry.addr,
+                        entry.point.name,
+                        flow_cycles,
+                        comm.link_bandwidth,
+                        compute_floor,
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::diag::Severity;
+
+    fn check(text: &str) -> Vec<Diagnostic> {
+        check_program_doc(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn clean_demo_program_is_clean() {
+        let d = check(
+            r#"[{"op": "map_node", "task": "heaviest",
+                 "point": {"hole": "p0", "points": "compute"}}]"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn bad_program_is_e020() {
+        let d = check(r#"[{"op": "map_node", "task": "heaviest", "point": {"hole": "h", "choices": []}}]"#);
+        assert_eq!(d[0].code, diag::E020_PROGRAM_INVALID, "{d:?}");
+        assert_eq!(d[0].severity, Severity::Error);
+        let d = check(r#"{"program": []}"#);
+        assert_eq!(d[0].code, diag::E020_PROGRAM_INVALID, "{d:?}");
+    }
+
+    #[test]
+    fn barrier_cycle_is_e021() {
+        // a -> b, then a barrier ordering "b completes before a runs":
+        // a -> b -> sync -> a is a deadlock.
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [2],
+                    "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                                       "systolic": [4, 4], "vector_lanes": 8}}}},
+                  "tasks": [
+                    {"name": "a", "kind": "compute", "vec_flops": 1000, "on": "core"},
+                    {"name": "b", "kind": "compute", "vec_flops": 1000, "on": "core"}],
+                  "edges": [["a", "b"]]},
+                "program": [{"op": "barrier", "after": "b", "before": "a"}]}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::E021_DEADLOCK_CYCLE), "{d:?}");
+    }
+
+    #[test]
+    fn unmapped_task_is_e022() {
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [1],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                                       "systolic": [4, 4]}}}},
+                  "tasks": [{"name": "a", "kind": "compute", "vec_flops": 1000}]},
+                "program": []}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::E022_UNMAPPED_TASK), "{d:?}");
+    }
+
+    #[test]
+    fn kind_mismatch_is_e023() {
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [1],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                                       "systolic": [4, 4]}}}},
+                  "tasks": [{"name": "w", "kind": "storage", "bytes": 64, "on": "core"}]},
+                "program": []}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::E023_KIND_MISMATCH), "{d:?}");
+    }
+
+    #[test]
+    fn replay_failure_is_e024() {
+        let d = check(r#"[{"op": "map_node", "task": "heaviest", "point": 99}]"#);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].code, diag::E024_REPLAY_FAILED);
+        assert!(d[0].message.contains("out of range"), "{}", d[0].message);
+    }
+
+    #[test]
+    fn disabled_with_live_consumers_is_w025() {
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [2],
+                    "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                                       "systolic": [4, 4], "vector_lanes": 8}}}},
+                  "tasks": [
+                    {"name": "a", "kind": "compute", "vec_flops": 1000, "on": "core"},
+                    {"name": "b", "kind": "compute", "vec_flops": 1000, "on": "core"}],
+                  "edges": [["a", "b"]]},
+                "program": [{"op": "disable", "task": "a"}]}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W025_DISABLED_LIVE_CONSUMERS), "{d:?}");
+        // The disabled task is exempt from the unmapped check... but here it
+        // IS mapped, so just confirm no spurious errors.
+        assert!(!diag::has_errors(&d), "{d:?}");
+    }
+
+    #[test]
+    fn over_capacity_tile_is_w030() {
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [1],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                      "systolic": [4, 4], "vector_lanes": 8,
+                      "lmem": {"capacity": 64, "bandwidth": 16}}}}},
+                  "tasks": [{"name": "big", "kind": "compute", "vec_flops": 1000,
+                             "in_bytes": 4096, "out_bytes": 4096, "on": "core"}]},
+                "program": []}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W030_OVER_CAPACITY), "{d:?}");
+    }
+
+    #[test]
+    fn link_bound_flow_is_w031() {
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "chip", "dims": [2],
+                    "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 1}],
+                    "fill": {"point": {"name": "core", "kind": "compute",
+                                       "systolic": [4, 4], "vector_lanes": 8}}}},
+                  "tasks": [
+                    {"name": "a", "kind": "compute", "vec_flops": 100, "on": "core"},
+                    {"name": "xfer", "kind": "comm", "bytes": 1000000000, "on": "noc"}]},
+                "program": []}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W031_LINK_BOUND), "{d:?}");
+    }
+
+    #[test]
+    fn base_errors_are_e020() {
+        let d = check(r#"{"base": {"tasks": []}, "program": []}"#);
+        assert_eq!(d[0].code, diag::E020_PROGRAM_INVALID);
+        let d = check(
+            r#"{"base": {
+                  "spec": {"matrix": {"name": "c", "dims": [1],
+                    "fill": {"point": {"name": "core", "kind": "compute"}}}},
+                  "tasks": [{"name": "a", "on": "nope"}]},
+                "program": []}"#,
+        );
+        assert_eq!(d[0].code, diag::E020_PROGRAM_INVALID, "{d:?}");
+    }
+}

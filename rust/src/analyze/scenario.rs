@@ -1,0 +1,156 @@
+//! Static lints over bench scenario documents (`mldse bench run`).
+//!
+//! [`crate::bench::Scenario::from_json`] already rejects unknown
+//! families, unknown explorers, and malformed fields — those surface
+//! here as `MLDSE-E050`. On top of that: a custom scenario's space file
+//! is read and run through the full space check (its findings keep their
+//! own codes, with the source path prefixed by the file), and grid
+//! explorations whose budget falls short of the space size are flagged —
+//! a grid enumerates candidates in order, so a short budget silently
+//! truncates the sweep to a fixed prefix of the space, which is almost
+//! never what "exhaustive grid" was chosen for. (Budget *beyond* the
+//! size is fine: the grid simply stops when the space is exhausted, and
+//! shipped scenarios use that to guarantee full coverage.)
+
+use crate::bench::Scenario;
+use crate::util::json::Json;
+
+use super::diag::{self, Diagnostic};
+use super::space::check_space_doc;
+
+/// Run every scenario check on an already-parsed JSON document. `origin`
+/// is the scenario's file path — relative `"space"` references resolve
+/// against its directory. Returns a sorted diagnostic list.
+pub fn check_scenario_doc(doc: &Json, origin: &str) -> Vec<Diagnostic> {
+    let scenario = match Scenario::from_json(doc, origin) {
+        Ok(s) => s,
+        Err(e) => {
+            return vec![Diagnostic::error(
+                diag::E050_SCENARIO_INVALID,
+                "",
+                format!("{e:#}"),
+            )];
+        }
+    };
+    check_scenario(&scenario)
+}
+
+/// Check an already-parsed [`Scenario`] (shared by the CLI and the
+/// `bench run` pre-flight).
+pub fn check_scenario(s: &Scenario) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+
+    if let Some(path) = &s.space_file {
+        let shown = path.display();
+        match std::fs::read_to_string(path) {
+            Err(e) => diags.push(Diagnostic::error(
+                diag::E052_SCENARIO_SPACE_FILE,
+                "space",
+                format!("reading space file '{shown}': {e}"),
+            )),
+            Ok(text) => match Json::parse(&text) {
+                Err(e) => diags.push(Diagnostic::error(
+                    diag::E052_SCENARIO_SPACE_FILE,
+                    "space",
+                    format!("parsing space file '{shown}': {e}"),
+                )),
+                Ok(doc) => {
+                    for mut d in check_space_doc(&doc) {
+                        d.at = if d.at.is_empty() {
+                            shown.to_string()
+                        } else {
+                            format!("{shown}: {}", d.at)
+                        };
+                        diags.push(d);
+                    }
+                }
+            },
+        }
+    }
+
+    if s.explorer == "grid" {
+        // A grid enumerates candidates in order and stops at the budget;
+        // a budget below the space size truncates the sweep to a fixed
+        // prefix. Check full and quick modes (their presets — and
+        // therefore sizes — may differ), deduplicating when they
+        // coincide.
+        let mut checked: Vec<(usize, u64)> = Vec::new();
+        for (quick, label) in [(false, "budget"), (true, "quick_budget")] {
+            let Ok((space, _)) = s.resolve(quick) else {
+                continue; // resolution failures already reported above
+            };
+            let size = space.size();
+            let budget = s.effective_budget(quick);
+            if (budget as u64) < size && !checked.contains(&(budget, size)) {
+                checked.push((budget, size));
+                diags.push(Diagnostic::warning(
+                    diag::W051_PARTIAL_GRID,
+                    label,
+                    format!(
+                        "grid {label} {budget} covers only a fixed prefix of the \
+                         {size}-candidate space; raise it to {size} for full \
+                         coverage or switch to a sampling explorer"
+                    ),
+                ));
+            }
+        }
+    }
+
+    diag::sort(&mut diags);
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::diag::Severity;
+
+    fn check(text: &str) -> Vec<Diagnostic> {
+        check_scenario_doc(&Json::parse(text).unwrap(), "test.json")
+    }
+
+    #[test]
+    fn invalid_scenario_is_e050() {
+        let d = check(r#"{"name": "s", "family": "warp-drive", "budget": 8}"#);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, diag::E050_SCENARIO_INVALID);
+        assert_eq!(d[0].severity, Severity::Error);
+        let d = check(r#"{"name": "s", "family": "mapping", "budget": 8, "explorer": "psychic"}"#);
+        assert_eq!(d[0].code, diag::E050_SCENARIO_INVALID, "{d:?}");
+    }
+
+    #[test]
+    fn missing_space_file_is_e052() {
+        let d = check(
+            r#"{"name": "s", "family": "custom", "budget": 8,
+                "space": "does/not/exist.json"}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::E052_SCENARIO_SPACE_FILE), "{d:?}");
+    }
+
+    #[test]
+    fn grid_budget_short_of_space_size_is_w051() {
+        // The mapping preset space has 4^8 = 65536 candidates; a grid
+        // budget of 128 silently sweeps a fixed prefix.
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "grid",
+                "budget": 128, "quick_budget": 24}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W051_PARTIAL_GRID), "{d:?}");
+        // Budget at (or beyond) the size is full coverage — clean. The
+        // packaging space has 10 full / 4 quick candidates, mirroring
+        // the shipped packaging-grid scenario's over-provisioned budget.
+        let d = check(
+            r#"{"name": "s", "family": "packaging-decode", "explorer": "grid",
+                "budget": 64, "quick_budget": 12}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+        // Non-grid explorers never warn: over- or under-sampling a space
+        // with anneal/random is a deliberate methodology choice.
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "anneal",
+                "budget": 128, "quick_budget": 24}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+}

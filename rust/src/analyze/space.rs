@@ -1,0 +1,145 @@
+//! Static lints over design-space documents (`mldse explore --space`).
+//!
+//! The document is composed via [`crate::dse::explore::space_from_json_value`]
+//! — which instantiates the outer hardware of nested spaces but evaluates
+//! nothing — and then linted: axes with a single value contribute nothing
+//! but still multiply bookkeeping (and mislead budget math), and product
+//! cardinalities that saturate `u64` (or exceed 2^53, the exact-integer
+//! range of the JSON numbers reports are written with) break any
+//! budget-vs-size reasoning downstream.
+
+use crate::dse::explore::{objectives_from_json, space_from_json_value, DesignSpace};
+use crate::util::json::Json;
+
+use super::diag::{self, Diagnostic};
+
+/// Cardinalities beyond 2^53 cannot be represented exactly by the JSON
+/// numbers used in reports and checkpoints.
+const MAX_EXACT_CARD: u64 = 1 << 53;
+
+/// Run every design-space check on an already-parsed JSON document.
+/// Returns a sorted diagnostic list (empty = clean).
+pub fn check_space_doc(doc: &Json) -> Vec<Diagnostic> {
+    let space = match space_from_json_value(doc) {
+        Ok(s) => s,
+        Err(e) => {
+            return vec![Diagnostic::error(
+                diag::E040_SPACE_INVALID,
+                "",
+                format!("{e:#}"),
+            )];
+        }
+    };
+    let mut diags = Vec::new();
+    if let Err(e) = objectives_from_json(doc) {
+        diags.push(Diagnostic::error(
+            diag::E040_SPACE_INVALID,
+            "objectives",
+            format!("{e:#}"),
+        ));
+    }
+    lint_space(space.as_ref(), &mut diags);
+    diag::sort(&mut diags);
+    diags
+}
+
+/// Axis- and cardinality-level lints over an already-composed space
+/// (shared with scenario checking, where presets resolve to spaces
+/// without going through JSON).
+pub fn lint_space(space: &dyn DesignSpace, diags: &mut Vec<Diagnostic>) {
+    for axis in space.axes() {
+        if axis.len() == 1 {
+            diags.push(Diagnostic::warning(
+                diag::W041_DEAD_AXIS,
+                format!("axes.{}", axis.name),
+                format!(
+                    "axis '{}' has a single value; it contributes nothing to the \
+                     exploration (inline the value or drop the axis)",
+                    axis.name
+                ),
+            ));
+        }
+    }
+    let size = space.size();
+    if size >= MAX_EXACT_CARD {
+        diags.push(Diagnostic::warning(
+            diag::W042_CARDINALITY_OVERFLOW,
+            "",
+            if size == u64::MAX {
+                "space cardinality overflows u64; budget math against this space \
+                 saturates and coverage accounting is meaningless"
+                    .to_string()
+            } else {
+                format!(
+                    "space cardinality {size} exceeds 2^53; JSON reports cannot \
+                     represent it exactly and budget math will drift"
+                )
+            },
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::diag::Severity;
+
+    fn check(text: &str) -> Vec<Diagnostic> {
+        check_space_doc(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn invalid_space_is_e040() {
+        let d = check(r#"{"type": "bogus"}"#);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, diag::E040_SPACE_INVALID);
+        assert_eq!(d[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn bad_objectives_are_e040() {
+        let d = check(
+            r#"{"type": "param", "arch": "dmc", "quick": true,
+                "axes": {"noc_bw": [16, 32]},
+                "objectives": ["nonsense"]}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::E040_SPACE_INVALID), "{d:?}");
+    }
+
+    #[test]
+    fn dead_axis_is_w041() {
+        let d = check(
+            r#"{"type": "param", "arch": "dmc", "quick": true,
+                "axes": {"noc_bw": [32], "lmem_bw": [76, 304]}}"#,
+        );
+        let dead: Vec<_> = d.iter().filter(|x| x.code == diag::W041_DEAD_AXIS).collect();
+        assert_eq!(dead.len(), 1, "{d:?}");
+        assert_eq!(dead[0].at, "axes.noc_bw");
+    }
+
+    #[test]
+    fn healthy_space_is_clean() {
+        let d = check(
+            r#"{"type": "param", "arch": "dmc", "quick": true,
+                "axes": {"noc_bw": [16, 32], "lmem_bw": [76, 304]}}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn cardinality_overflow_is_w042() {
+        // 12 two-value axes per sub-space, 5 subs => 2^24 per sub is too
+        // small; build overflow via product of many subs instead: each
+        // quick dmc param space with 2 axes of 2 has size 4... use enough
+        // subs that 4^n saturates 2^53: n = 27 -> 2^54.
+        let sub = r#"{"type": "param", "arch": "dmc", "quick": true,
+                      "axes": {"noc_bw": [16, 32], "lmem_bw": [76, 304]}}"#;
+        let subs: Vec<String> = (0..27).map(|_| sub.to_string()).collect();
+        let doc = format!(r#"{{"type": "product", "subs": [{}]}}"#, subs.join(","));
+        let d = check(&doc);
+        assert!(
+            d.iter().any(|x| x.code == diag::W042_CARDINALITY_OVERFLOW),
+            "{d:?}"
+        );
+    }
+}

@@ -1,0 +1,240 @@
+//! Static lints over hardware specs (the `{"matrix": …}` JSON form).
+//!
+//! These catch descriptions that parse fine but model hardware that cannot
+//! work — or silently models something other than what the author meant:
+//! reused point names with differing definitions (shadowing), levels whose
+//! cells have no communication domain to reach each other, zero-capacity
+//! or zero-bandwidth resources, and sync groups that resolve to nothing.
+
+use std::collections::HashMap;
+
+use crate::hwir::{parse_spec_value, Element, Hardware, PointKind, SpaceMatrix};
+use crate::util::json::Json;
+
+use super::diag::{self, Diagnostic};
+
+/// Run every hardware-spec check on an already-parsed JSON document.
+/// Returns a sorted diagnostic list (empty = clean).
+pub fn check_spec_doc(doc: &Json) -> Vec<Diagnostic> {
+    let matrix = match parse_spec_value(doc) {
+        Ok(m) => m,
+        Err(e) => {
+            return vec![Diagnostic::error(diag::E010_SPEC_INVALID, "", e.to_string())];
+        }
+    };
+    let mut diags = Vec::new();
+    lint_levels(&matrix, &matrix.name, &mut diags);
+    let hw = Hardware::build(matrix);
+    lint_points(&hw, &mut diags);
+    lint_sync_groups(&hw, &mut diags);
+    diag::sort(&mut diags);
+    diags
+}
+
+/// W012: a matrix level with more than one occupied cell but no
+/// communication point — its cells cannot exchange data within the level.
+fn lint_levels(m: &SpaceMatrix, path: &str, diags: &mut Vec<Diagnostic>) {
+    let occupied = m.iter_cells().count();
+    if occupied > 1 && m.comms.is_empty() {
+        diags.push(Diagnostic::warning(
+            diag::W012_UNREACHABLE,
+            path,
+            format!(
+                "matrix '{}' has {occupied} occupied cells but no communication \
+                 point; intra-level transfers are unroutable",
+                m.name
+            ),
+        ));
+    }
+    for (coord, element) in m.iter_cells() {
+        if let Element::Matrix(inner) = element {
+            lint_levels(inner, &format!("{path}/{coord}"), diags);
+        }
+    }
+}
+
+/// W011 (shadowed names) and W013 (zero-capacity/zero-bandwidth resources)
+/// over the built point registry.
+fn lint_points(hw: &Hardware, diags: &mut Vec<Diagnostic>) {
+    // Shadowing: the same point name bound to differing definitions. Names
+    // are how mapping programs and sync groups refer to hardware, so two
+    // different points sharing one name silently resolves to "both".
+    let mut by_name: HashMap<&str, &crate::hwir::PointEntry> = HashMap::new();
+    let mut warned: Vec<&str> = Vec::new();
+    for e in hw.entries() {
+        match by_name.get(e.point.name.as_str()) {
+            None => {
+                by_name.insert(&e.point.name, e);
+            }
+            Some(first) => {
+                if first.point != e.point && !warned.contains(&e.point.name.as_str()) {
+                    warned.push(&e.point.name);
+                    diags.push(Diagnostic::warning(
+                        diag::W011_SHADOWED_NAME,
+                        format!("{}", e.addr),
+                        format!(
+                            "point name '{}' is reused with a different definition \
+                             (first defined at {})",
+                            e.point.name, first.addr
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    for e in hw.entries() {
+        let at = format!("{}", e.addr);
+        let name = &e.point.name;
+        match &e.point.kind {
+            PointKind::Memory(a) | PointKind::Dram(a) => {
+                if a.capacity == 0 {
+                    diags.push(Diagnostic::warning(
+                        diag::W013_ZERO_RESOURCE,
+                        at.clone(),
+                        format!("memory '{name}' has zero capacity"),
+                    ));
+                }
+                if a.bandwidth <= 0.0 {
+                    diags.push(Diagnostic::warning(
+                        diag::W013_ZERO_RESOURCE,
+                        at,
+                        format!("memory '{name}' has zero bandwidth"),
+                    ));
+                }
+            }
+            PointKind::Compute(a) => {
+                if let Some(lm) = &a.lmem {
+                    if lm.capacity == 0 {
+                        diags.push(Diagnostic::warning(
+                            diag::W013_ZERO_RESOURCE,
+                            at.clone(),
+                            format!("lmem of compute point '{name}' has zero capacity"),
+                        ));
+                    }
+                    if lm.bandwidth <= 0.0 {
+                        diags.push(Diagnostic::warning(
+                            diag::W013_ZERO_RESOURCE,
+                            at,
+                            format!("lmem of compute point '{name}' has zero bandwidth"),
+                        ));
+                    }
+                }
+            }
+            PointKind::Comm(a) => {
+                if a.link_bandwidth <= 0.0 {
+                    diags.push(Diagnostic::warning(
+                        diag::W013_ZERO_RESOURCE,
+                        at,
+                        format!("comm '{name}' has zero link bandwidth"),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// W014: a sync group whose member cells are all holes (or recursively
+/// empty), so the group synchronizes nothing.
+fn lint_sync_groups(hw: &Hardware, diags: &mut Vec<Diagnostic>) {
+    for g in hw.sync_groups() {
+        if g.points.is_empty() {
+            diags.push(Diagnostic::warning(
+                diag::W014_EMPTY_SYNC_GROUP,
+                format!("sync_groups.{}", g.name),
+                format!("sync group '{}' resolves to zero points", g.name),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analyze::diag::Severity;
+
+    fn check(text: &str) -> Vec<Diagnostic> {
+        check_spec_doc(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn clean_spec_is_clean() {
+        let d = check(
+            r#"{"matrix": {"name": "chip", "dims": [2],
+                "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                "fill": {"point": {"name": "core", "kind": "compute",
+                                   "systolic": [4, 4]}}}}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn invalid_spec_is_e010() {
+        let d = check(r#"{"matrix": {"name": "x"}}"#);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].code, diag::E010_SPEC_INVALID);
+        assert_eq!(d[0].severity, Severity::Error);
+    }
+
+    #[test]
+    fn shadowed_name_is_w011() {
+        let d = check(
+            r#"{"matrix": {"name": "chip", "dims": [2],
+                "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                "cells": [
+                  {"at": [0], "point": {"name": "core", "kind": "compute",
+                                        "systolic": [4, 4]}},
+                  {"at": [1], "point": {"name": "core", "kind": "compute",
+                                        "systolic": [8, 8]}}]}}"#,
+        );
+        assert_eq!(d.iter().filter(|x| x.code == diag::W011_SHADOWED_NAME).count(), 1);
+        // Identical replicas (the `fill` idiom) must NOT warn.
+        let clean = check(
+            r#"{"matrix": {"name": "chip", "dims": [4],
+                "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                "fill": {"point": {"name": "core", "kind": "compute",
+                                   "systolic": [4, 4]}}}}"#,
+        );
+        assert!(clean.is_empty(), "{clean:?}");
+    }
+
+    #[test]
+    fn no_comm_multi_cell_is_w012() {
+        let d = check(
+            r#"{"matrix": {"name": "chip", "dims": [2],
+                "fill": {"point": {"name": "core", "kind": "compute",
+                                   "systolic": [4, 4]}}}}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W012_UNREACHABLE), "{d:?}");
+        // A single-cell matrix needs no comm point.
+        let solo = check(
+            r#"{"matrix": {"name": "chip", "dims": [1],
+                "fill": {"point": {"name": "core", "kind": "compute",
+                                   "systolic": [4, 4]}}}}"#,
+        );
+        assert!(solo.is_empty(), "{solo:?}");
+    }
+
+    #[test]
+    fn zero_resources_are_w013() {
+        let d = check(
+            r#"{"matrix": {"name": "chip", "dims": [1],
+                "fill": {"point": {"name": "sram", "kind": "memory",
+                                   "capacity": 0, "bandwidth": 0}}}}"#,
+        );
+        assert_eq!(d.iter().filter(|x| x.code == diag::W013_ZERO_RESOURCE).count(), 2);
+        assert!(d.iter().all(|x| x.severity == Severity::Warning));
+    }
+
+    #[test]
+    fn empty_sync_group_is_w014() {
+        let d = check(
+            r#"{"matrix": {"name": "chip", "dims": [2],
+                "comms": [{"name": "noc", "topology": "mesh", "link_bandwidth": 32}],
+                "cells": [{"at": [0], "point": {"name": "core", "kind": "compute",
+                                                "systolic": [4, 4]}}],
+                "sync_groups": [{"name": "ghost", "members": [[1]]}]}}"#,
+        );
+        assert!(d.iter().any(|x| x.code == diag::W014_EMPTY_SYNC_GROUP), "{d:?}");
+    }
+}

@@ -521,11 +521,12 @@ pub fn load_scenarios(path: &Path) -> Result<Vec<Scenario>> {
             .with_context(|| format!("bench: parsing scenario file '{origin}'"))?;
         scenarios.push(Scenario::from_json(&doc, &origin)?);
     }
-    let mut seen = std::collections::HashSet::new();
+    let mut seen: std::collections::HashMap<&str, &str> = std::collections::HashMap::new();
     for s in &scenarios {
-        if !seen.insert(s.name.as_str()) {
+        if let Some(first) = seen.insert(s.name.as_str(), s.origin.as_str()) {
             crate::bail!(
-                "bench: duplicate scenario name '{}' (second definition in '{}')",
+                "bench: duplicate scenario name '{}' (defined in both '{first}' and '{}'); \
+                 the summary format and the compare gate key on the name",
                 s.name,
                 s.origin
             );

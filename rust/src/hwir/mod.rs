@@ -20,5 +20,5 @@ pub use builder::{Addr, CommSegment, Hardware, PointEntry, PointId, ResolvedSync
 pub use coord::{mlc, Coord, MlCoord};
 pub use matrix::{Element, SpaceMatrix, SyncGroup};
 pub use point::{CommAttrs, ComputeAttrs, MemoryAttrs, PointKind, SpacePoint};
-pub use spec::{parse_spec, to_spec, SpecError};
+pub use spec::{parse_spec, parse_spec_value, to_spec, SpecError};
 pub use topology::Topology;

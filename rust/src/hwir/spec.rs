@@ -59,6 +59,12 @@ fn err<T>(msg: impl Into<String>) -> Result<T> {
 /// Parse a JSON hardware spec into a `SpaceMatrix` tree.
 pub fn parse_spec(text: &str) -> Result<SpaceMatrix> {
     let root = Json::parse(text)?;
+    parse_spec_value(&root)
+}
+
+/// Parse an already-parsed JSON document (the `{"matrix": …}` form) into a
+/// `SpaceMatrix` tree.
+pub fn parse_spec_value(root: &Json) -> Result<SpaceMatrix> {
     let m = root
         .get("matrix")
         .ok_or_else(|| SpecError("top level must contain \"matrix\"".into()))?;

@@ -25,12 +25,16 @@
 //! ([`dse`]) orchestrated by the [`coordinator`], with the exploration
 //! stack exposed as a resumable job daemon by [`serve`] and held to its
 //! throughput and bit-determinism claims by the [`bench`] scenario runner
-//! and regression gate.
+//! and regression gate. Every declarative artifact the stack consumes —
+//! specs, mapping programs, spaces, scenarios — is statically checkable
+//! via [`analyze`] (`mldse check`), which also backs the explore/serve/
+//! bench pre-flights.
 
 pub mod util;
 pub mod hwir;
 pub mod taskgraph;
 pub mod mapping;
+pub mod analyze;
 pub mod eval;
 pub mod sim;
 pub mod arch;

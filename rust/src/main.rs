@@ -13,6 +13,7 @@
 //! mldse bench run [--scenarios PATH] [--out FILE] [--quick] [--workers N]
 //! mldse bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]
 //! mldse bench list [--scenarios PATH]          declarative perf scenarios + gate
+//! mldse check FILE.json... [--json] [--deny-warnings]   static diagnostics
 //! mldse hardware --spec FILE                   build + describe a spec
 //! ```
 //!
@@ -136,6 +137,7 @@ fn main() -> ExitCode {
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "check" => cmd_check(&args),
         "hardware" => cmd_hardware(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -187,6 +189,11 @@ fn print_usage() {
                     fingerprints, compare gates throughput and\n\
                     determinism against a checked-in baseline — see README\n\
                     \"Benchmarks & regression gate\")\n\
+           check FILE.json... [--json] [--deny-warnings]\n\
+                   (static diagnostics over hardware specs, mapping\n\
+                    programs, space files, and bench scenarios — stable\n\
+                    MLDSE-Exxx/Wxxx codes, no simulation; --deny-warnings\n\
+                    fails on warnings too — see README \"Static checks\")\n\
            hardware --spec FILE.json\n",
         experiments = EXPERIMENTS.join("|"),
         presets = preset_names().join(", ")
@@ -365,6 +372,16 @@ fn cmd_explore(args: &Args) -> Result<()> {
                     .with_context(|| format!("reading space file '{path}'"))?;
                 let doc = mldse::util::json::Json::parse(&text)
                     .with_context(|| format!("parsing space file '{path}'"))?;
+                // Fail-fast static pre-flight: named diagnostics before any
+                // budget is spent; warnings surface but do not block.
+                let diags = mldse::analyze::check_space_doc(&doc);
+                if mldse::analyze::diag::has_errors(&diags) {
+                    eprint!("{}", mldse::analyze::diag::render_table(path, &diags));
+                    mldse::bail!("explore: space file '{path}' failed static checks");
+                }
+                for d in &diags {
+                    eprintln!("{d}");
+                }
                 let s = space_from_json_value(&doc)
                     .with_context(|| format!("parsing space file '{path}'"))?;
                 // the file may pick its own objectives; default (makespan,
@@ -553,6 +570,29 @@ fn bench_run(args: &Args) -> Result<()> {
         None => None,
     };
     let scenarios = load_scenarios(&bench_scenarios_path(args))?;
+    // Fail-fast static pre-flight over the whole set before any scenario
+    // runs: a bad scenario at position N must not waste the first N-1 runs.
+    let mut preflight = Vec::new();
+    for s in &scenarios {
+        for mut d in mldse::analyze::check_scenario(s) {
+            d.at = if d.at.is_empty() {
+                s.name.clone()
+            } else {
+                format!("{}: {}", s.name, d.at)
+            };
+            preflight.push(d);
+        }
+    }
+    if mldse::analyze::diag::has_errors(&preflight) {
+        eprint!(
+            "{}",
+            mldse::analyze::diag::render_table("bench scenarios", &preflight)
+        );
+        mldse::bail!("bench: scenario set failed static checks");
+    }
+    for d in &preflight {
+        eprintln!("{d}");
+    }
     let mut results = Vec::with_capacity(scenarios.len());
     for s in &scenarios {
         eprintln!(
@@ -632,6 +672,62 @@ fn bench_list(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    args.allow("check", &["json", "deny-warnings"])?;
+    if args.positional.is_empty() {
+        mldse::bail!(
+            "check: at least one FILE.json is required (a hardware spec, mapping \
+             program, space file, or bench scenario)"
+        );
+    }
+    let as_json = args.bool_flag("json");
+    let deny = args.bool_flag("deny-warnings");
+    let mut total_errors = 0usize;
+    let mut total_warnings = 0usize;
+    let mut payloads = Vec::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("check: reading '{path}'"))?;
+        let (kind, diags) = mldse::analyze::check_text(&text, path);
+        let (errors, warnings) = mldse::analyze::diag::counts(&diags);
+        total_errors += errors;
+        total_warnings += warnings;
+        if as_json {
+            // Same payload shape as the daemon's HTTP 422 body, plus the
+            // sniffed input kind.
+            let Json::Obj(mut o) = mldse::analyze::diag::to_json(path, &diags) else {
+                unreachable!("diagnostic payload is an object");
+            };
+            if let Some(k) = kind {
+                o.insert("kind", k.name().into());
+            }
+            payloads.push(Json::Obj(o));
+        } else {
+            match kind {
+                Some(k) if diags.is_empty() => println!("check {path}: ok ({})", k.name()),
+                _ => print!("{}", mldse::analyze::diag::render_table(path, &diags)),
+            }
+        }
+    }
+    if as_json {
+        match &payloads[..] {
+            [one] => println!("{}", one.to_pretty()),
+            many => println!("{}", Json::Arr(many.to_vec()).to_pretty()),
+        }
+    }
+    if total_errors > 0 || (deny && total_warnings > 0) {
+        mldse::bail!(
+            "check: {total_errors} error(s), {total_warnings} warning(s){}",
+            if total_errors == 0 {
+                " (failing because of --deny-warnings)"
+            } else {
+                ""
+            }
+        );
+    }
     Ok(())
 }
 

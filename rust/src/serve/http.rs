@@ -78,6 +78,7 @@ pub fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         409 => "Conflict",
+        422 => "Unprocessable Entity",
         500 => "Internal Server Error",
         _ => "Unknown",
     }

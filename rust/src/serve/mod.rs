@@ -238,6 +238,17 @@ fn post_job(stream: &mut TcpStream, state: &Arc<ServerState>, req: &Request) -> 
             return Ok(400);
         }
     };
+    // Static pre-flight on inline space documents: reject semantically
+    // doomed spaces with the same named diagnostics `mldse check` prints,
+    // before a job (and its exploration budget) is ever created. Warnings
+    // do not block.
+    if let Some(space_doc) = &spec.space_doc {
+        let diags = crate::analyze::check_space_doc(space_doc);
+        if crate::analyze::diag::has_errors(&diags) {
+            http::write_json(stream, 422, &crate::analyze::diag::to_json("space", &diags))?;
+            return Ok(422);
+        }
+    }
     let id = state.next_job.fetch_add(1, Ordering::SeqCst);
     let job = Job::new(id, spec);
     state

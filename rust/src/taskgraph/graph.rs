@@ -214,29 +214,54 @@ impl TaskGraph {
     }
 
     /// Structural sanity: edge symmetry and no edges touching tombstones.
-    /// Returns a list of problems (empty = valid).
-    pub fn validate(&self) -> Vec<String> {
+    /// Returns structured diagnostics (`MLDSE-E060..E062`, empty = valid)
+    /// so callers and tests can match on stable codes instead of message
+    /// substrings.
+    pub fn validate(&self) -> Vec<crate::analyze::Diagnostic> {
+        use crate::analyze::diag::{
+            Diagnostic, E060_TOMBSTONE_EDGES, E061_DANGLING_EDGE, E062_ASYMMETRIC_EDGE,
+        };
         let mut problems = Vec::new();
         for (i, slot) in self.tasks.iter().enumerate() {
             let id = TaskId(i as u32);
             if slot.is_none() {
                 if !self.out_edges[i].is_empty() || !self.in_edges[i].is_empty() {
-                    problems.push(format!("tombstone {id} has incident edges"));
+                    problems.push(Diagnostic::error(
+                        E060_TOMBSTONE_EDGES,
+                        id.to_string(),
+                        format!("tombstone {id} has incident edges"),
+                    ));
                 }
                 continue;
             }
             for &s in &self.out_edges[i] {
                 if !self.contains(s) {
-                    problems.push(format!("edge {id}->{s} targets a deleted task"));
+                    problems.push(Diagnostic::error(
+                        E061_DANGLING_EDGE,
+                        id.to_string(),
+                        format!("edge {id}->{s} targets a deleted task"),
+                    ));
                 } else if !self.in_edges[s.index()].contains(&id) {
-                    problems.push(format!("edge {id}->{s} missing reverse entry"));
+                    problems.push(Diagnostic::error(
+                        E062_ASYMMETRIC_EDGE,
+                        id.to_string(),
+                        format!("edge {id}->{s} missing reverse entry"),
+                    ));
                 }
             }
             for &p in &self.in_edges[i] {
                 if !self.contains(p) {
-                    problems.push(format!("edge {p}->{id} from a deleted task"));
+                    problems.push(Diagnostic::error(
+                        E061_DANGLING_EDGE,
+                        id.to_string(),
+                        format!("edge {p}->{id} from a deleted task"),
+                    ));
                 } else if !self.out_edges[p.index()].contains(&id) {
-                    problems.push(format!("edge {p}->{id} missing forward entry"));
+                    problems.push(Diagnostic::error(
+                        E062_ASYMMETRIC_EDGE,
+                        id.to_string(),
+                        format!("edge {p}->{id} missing forward entry"),
+                    ));
                 }
             }
         }
@@ -350,6 +375,25 @@ mod tests {
         assert!(g.depends_on(b, a));
         assert!(!g.depends_on(a, d));
         assert!(!g.depends_on(a, a));
+    }
+
+    #[test]
+    fn validate_reports_structured_codes() {
+        use crate::analyze::diag;
+        use crate::analyze::Severity;
+        // Tombstone a slot without cleaning its edges: E060 on the
+        // tombstone plus E061 on every live edge touching it.
+        let (mut g, [_a, b, _c, _d]) = diamond();
+        g.tasks[b.index()] = None;
+        let problems = g.validate();
+        assert!(problems.iter().any(|d| d.code == diag::E060_TOMBSTONE_EDGES), "{problems:?}");
+        assert!(problems.iter().any(|d| d.code == diag::E061_DANGLING_EDGE), "{problems:?}");
+        assert!(problems.iter().all(|d| d.severity == Severity::Error));
+        // Drop a reverse entry only: E062.
+        let (mut g2, [a2, b2, _c2, _d2]) = diamond();
+        g2.in_edges[b2.index()].retain(|t| *t != a2);
+        let problems = g2.validate();
+        assert!(problems.iter().any(|d| d.code == diag::E062_ASYMMETRIC_EDGE), "{problems:?}");
     }
 
     #[test]

@@ -284,6 +284,80 @@ fn scenario_validation_errors_surface_through_the_cli() {
 }
 
 #[test]
+fn duplicate_scenario_names_error_with_both_paths() {
+    // The summary format and the compare gate key on the scenario name, so
+    // two files claiming the same name must fail fast — citing both files,
+    // not just the second one.
+    let dir = scratch("dupname");
+    let scenarios = dir.join("scenarios");
+    std::fs::create_dir_all(&scenarios).unwrap();
+    let body = r#"{
+  "name": "mapping-small",
+  "family": "mapping",
+  "explorer": "anneal",
+  "budget": 6,
+  "quick_budget": 3,
+  "seeds": [3],
+  "workers": 2
+}
+"#;
+    std::fs::write(scenarios.join("first.json"), body).unwrap();
+    std::fs::write(scenarios.join("second.json"), body).unwrap();
+    let out = run_fail(mldse().args([
+        "bench",
+        "run",
+        "--scenarios",
+        scenarios.to_str().unwrap(),
+        "--out",
+        dir.join("out.jsonl").to_str().unwrap(),
+    ]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("duplicate scenario name 'mapping-small'"),
+        "{stderr}"
+    );
+    assert!(stderr.contains("first.json"), "{stderr}");
+    assert!(stderr.contains("second.json"), "{stderr}");
+}
+
+#[test]
+fn preflight_rejects_a_broken_scenario_set_before_any_run() {
+    // A scenario that parses but fails static checks (custom family whose
+    // space file is missing) aborts the whole set with a named diagnostic
+    // before the first scenario spends its budget.
+    let dir = scratch("preflight");
+    let scenarios = write_scenarios(&dir);
+    std::fs::write(
+        scenarios.join("broken.json"),
+        r#"{
+  "name": "broken-custom",
+  "family": "custom",
+  "space": "does/not/exist.json",
+  "explorer": "anneal",
+  "budget": 6,
+  "seeds": [1],
+  "workers": 2
+}
+"#,
+    )
+    .unwrap();
+    let out = run_fail(mldse().args([
+        "bench",
+        "run",
+        "--scenarios",
+        scenarios.to_str().unwrap(),
+        "--out",
+        dir.join("out.jsonl").to_str().unwrap(),
+    ]));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("MLDSE-E052"), "{stderr}");
+    assert!(stderr.contains("broken-custom"), "{stderr}");
+    assert!(stderr.contains("scenario set failed static checks"), "{stderr}");
+    // no summary written: the failure precedes the first run
+    assert!(!dir.join("out.jsonl").exists(), "summary must not be written");
+}
+
+#[test]
 fn compare_usage_and_unknown_subcommand_are_errors() {
     let out = run_fail(mldse().args(["bench", "compare", "only-one.jsonl"]));
     let stderr = String::from_utf8_lossy(&out.stderr);

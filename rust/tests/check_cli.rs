@@ -1,0 +1,289 @@
+//! End-to-end tests of `mldse check` against the real binary
+//! (`CARGO_BIN_EXE_mldse`): a table-driven sweep pinning every diagnostic
+//! code to a fixture under `rust/tests/fixtures/check/` (exact code +
+//! severity + sniffed input kind, via `--json`), `--deny-warnings`
+//! semantics, multi-file output shape, the `explore --space` pre-flight,
+//! and a clean-fixture pass proving every shipped space and scenario JSON
+//! produces zero diagnostics.
+
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+use mldse::analyze::diag::CODE_TABLE;
+use mldse::util::json::Json;
+
+fn mldse() -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_mldse"));
+    // isolate from the ambient environment
+    cmd.env_remove("MLDSE_WORKERS");
+    cmd
+}
+
+fn fixture(name: &str) -> String {
+    format!(
+        "{}/rust/tests/fixtures/check/{name}",
+        env!("CARGO_MANIFEST_DIR")
+    )
+}
+
+/// Every file-reachable diagnostic code with its fixture, expected
+/// severity, and the input kind `check` should sniff (`""` for the
+/// not-JSON case, where no kind exists). The three task-graph integrity
+/// codes (`MLDSE-E060`..`E062`) describe in-memory corruption that no
+/// parseable document can express; they are pinned by unit tests on
+/// `TaskGraph::validate` instead.
+const CASES: &[(&str, &str, &str, &str)] = &[
+    ("e001_not_json.json", "MLDSE-E001", "error", ""),
+    ("e010_spec_invalid.json", "MLDSE-E010", "error", "hardware spec"),
+    ("w011_shadowed_name.json", "MLDSE-W011", "warning", "hardware spec"),
+    ("w012_unreachable.json", "MLDSE-W012", "warning", "hardware spec"),
+    ("w013_zero_resource.json", "MLDSE-W013", "warning", "hardware spec"),
+    ("w014_empty_sync_group.json", "MLDSE-W014", "warning", "hardware spec"),
+    ("e020_program_invalid.json", "MLDSE-E020", "error", "mapping program"),
+    ("e021_deadlock_cycle.json", "MLDSE-E021", "error", "mapping program"),
+    ("e022_unmapped_task.json", "MLDSE-E022", "error", "mapping program"),
+    ("e023_kind_mismatch.json", "MLDSE-E023", "error", "mapping program"),
+    ("e024_replay_failed.json", "MLDSE-E024", "error", "mapping program"),
+    (
+        "w025_disabled_live_consumers.json",
+        "MLDSE-W025",
+        "warning",
+        "mapping program",
+    ),
+    ("w030_over_capacity.json", "MLDSE-W030", "warning", "mapping program"),
+    ("w031_link_bound.json", "MLDSE-W031", "warning", "mapping program"),
+    ("e040_space_invalid.json", "MLDSE-E040", "error", "design space"),
+    ("w041_dead_axis.json", "MLDSE-W041", "warning", "design space"),
+    (
+        "w042_cardinality_overflow.json",
+        "MLDSE-W042",
+        "warning",
+        "design space",
+    ),
+    ("e050_scenario_invalid.json", "MLDSE-E050", "error", "bench scenario"),
+    ("w051_partial_grid.json", "MLDSE-W051", "warning", "bench scenario"),
+    (
+        "e052_scenario_space_file.json",
+        "MLDSE-E052",
+        "error",
+        "bench scenario",
+    ),
+];
+
+fn check_json(path: &str, extra: &[&str]) -> (Output, Json) {
+    let out = mldse()
+        .args(["check", path, "--json"])
+        .args(extra)
+        .output()
+        .expect("run mldse");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let doc = Json::parse(&stdout)
+        .unwrap_or_else(|e| panic!("check --json output is not JSON ({e}):\n{stdout}"));
+    (out, doc)
+}
+
+fn diag_codes(doc: &Json) -> Vec<(String, String)> {
+    doc.get("diagnostics")
+        .and_then(Json::as_arr)
+        .expect("payload has a diagnostics array")
+        .iter()
+        .map(|d| {
+            (
+                d.get("code").and_then(Json::as_str).unwrap().to_string(),
+                d.get("severity").and_then(Json::as_str).unwrap().to_string(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn every_code_is_pinned_by_a_fixture() {
+    for (file, code, severity, kind) in CASES {
+        let path = fixture(file);
+        let (out, doc) = check_json(&path, &[]);
+        let found = diag_codes(&doc);
+        assert!(
+            found.iter().any(|(c, s)| c == code && s == severity),
+            "{file}: expected {code} ({severity}), got {found:?}"
+        );
+        // errors fail the process; warnings alone pass (without
+        // --deny-warnings)
+        let has_error = found.iter().any(|(_, s)| s == "error");
+        assert_eq!(
+            out.status.success(),
+            !has_error,
+            "{file}: exit status disagrees with {found:?}\nstderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let sniffed = doc.get("kind").and_then(Json::as_str);
+        if kind.is_empty() {
+            assert_eq!(sniffed, None, "{file}: unparseable input has no kind");
+        } else {
+            assert_eq!(sniffed, Some(*kind), "{file}");
+        }
+    }
+}
+
+#[test]
+fn fixture_table_covers_the_whole_code_table() {
+    // Every registered code is either pinned by a fixture above or is one
+    // of the graph-integrity codes pinned by TaskGraph::validate's unit
+    // test. A new code without a fixture fails here.
+    let unit_tested = ["MLDSE-E060", "MLDSE-E061", "MLDSE-E062"];
+    for (code, _, _) in CODE_TABLE {
+        let covered = CASES.iter().any(|(_, c, _, _)| c == code)
+            || unit_tested.contains(code);
+        assert!(covered, "registered code {code} has no fixture");
+    }
+    // and no fixture pins an unregistered code
+    for (file, code, _, _) in CASES {
+        assert!(
+            CODE_TABLE.iter().any(|(c, _, _)| c == code),
+            "{file} pins unregistered code {code}"
+        );
+    }
+}
+
+#[test]
+fn deny_warnings_turns_warnings_into_failure() {
+    let path = fixture("w041_dead_axis.json");
+    let (out, _) = check_json(&path, &[]);
+    assert!(out.status.success(), "warnings alone must pass");
+    let (out, _) = check_json(&path, &["--deny-warnings"]);
+    assert!(!out.status.success(), "--deny-warnings must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--deny-warnings"), "{stderr}");
+}
+
+#[test]
+fn barrier_cycle_and_over_capacity_are_rejected_statically() {
+    // The ISSUE-level acceptance pair: a deadlocked mapping program is an
+    // error outright, and an over-capacity tile blocks under
+    // --deny-warnings — both in milliseconds, with no simulation run.
+    let out = mldse()
+        .args(["check", &fixture("e021_deadlock_cycle.json")])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("MLDSE-E021"), "{stdout}");
+    assert!(stdout.contains("deadlock"), "{stdout}");
+
+    let out = mldse()
+        .args([
+            "check",
+            &fixture("w030_over_capacity.json"),
+            "--deny-warnings",
+        ])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("MLDSE-W030"), "{stdout}");
+}
+
+#[test]
+fn multiple_files_emit_a_json_array() {
+    let a = fixture("e040_space_invalid.json");
+    let b = fixture("w041_dead_axis.json");
+    let out = mldse()
+        .args(["check", &a, &b, "--json"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success(), "one file has errors");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let doc = Json::parse(&stdout).expect("array payload");
+    let arr = doc.as_arr().expect("multi-file output is an array");
+    assert_eq!(arr.len(), 2);
+    assert_eq!(arr[0].get("origin").and_then(Json::as_str), Some(a.as_str()));
+    assert_eq!(arr[1].get("origin").and_then(Json::as_str), Some(b.as_str()));
+}
+
+#[test]
+fn table_mode_prints_ok_line_for_clean_input() {
+    let path = format!(
+        "{}/examples/spaces/three_tier_quick.json",
+        env!("CARGO_MANIFEST_DIR")
+    );
+    let out = mldse().args(["check", &path]).output().expect("run mldse");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ok (design space)"), "{stdout}");
+}
+
+/// Every shipped declarative artifact is clean — zero diagnostics even
+/// under `--deny-warnings`. This is what the CI `check` job enforces in
+/// release mode.
+#[test]
+fn shipped_spaces_and_scenarios_are_clean() {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in ["examples/spaces", "benches/scenarios"] {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(dir);
+        for entry in std::fs::read_dir(&dir).expect("shipped dir exists") {
+            let path = entry.expect("dir entry").path();
+            if path.extension().is_some_and(|e| e == "json") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    assert!(files.len() >= 6, "expected the shipped set, got {files:?}");
+    let mut cmd = mldse();
+    cmd.args(["check", "--deny-warnings"]);
+    for f in &files {
+        cmd.arg(f);
+    }
+    let out = cmd.output().expect("run mldse");
+    assert!(
+        out.status.success(),
+        "shipped artifacts are not clean\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for f in &files {
+        assert!(
+            stdout.contains(&format!("check {}: ok", f.display())),
+            "no ok line for {}:\n{stdout}",
+            f.display()
+        );
+    }
+}
+
+#[test]
+fn explore_preflight_rejects_a_bad_space_file() {
+    let out = mldse()
+        .args([
+            "explore",
+            "--space",
+            &fixture("e040_space_invalid.json"),
+            "--budget",
+            "4",
+        ])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("MLDSE-E040"), "{stderr}");
+    assert!(stderr.contains("failed static checks"), "{stderr}");
+}
+
+#[test]
+fn usage_errors_are_named() {
+    let out = mldse().args(["check"]).output().expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("at least one FILE.json"), "{stderr}");
+
+    let out = mldse()
+        .args(["check", "no/such/file.json"])
+        .output()
+        .expect("run mldse");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("check: reading 'no/such/file.json'"), "{stderr}");
+}

@@ -315,6 +315,37 @@ fn bad_requests_fail_with_4xx() {
     assert_eq!(code, 400, "{body}");
     assert!(body.contains("required"), "{body}");
 
+    // a semantically doomed space is rejected with 422 and the same
+    // diagnostic payload `mldse check` emits (code + severity + message),
+    // before any job is created
+    let (code, body) = request(
+        port,
+        "POST",
+        "/jobs",
+        r#"{"space": {"type": "bogus"}, "budget": 4}"#,
+    );
+    assert_eq!(code, 422, "{body}");
+    let payload = parse_json(&body);
+    assert_eq!(payload.get("origin").and_then(|v| v.as_str()), Some("space"));
+    assert!(payload.get("errors").and_then(|v| v.as_u64()).unwrap_or(0) >= 1, "{body}");
+    let diags = payload
+        .get("diagnostics")
+        .and_then(|v| v.as_arr())
+        .expect("diagnostics array");
+    assert_eq!(
+        diags[0].get("code").and_then(|v| v.as_str()),
+        Some("MLDSE-E040"),
+        "{body}"
+    );
+    assert_eq!(
+        diags[0].get("severity").and_then(|v| v.as_str()),
+        Some("error"),
+        "{body}"
+    );
+    // no job was created for the rejected submission
+    let (code, _) = request(port, "GET", "/jobs/9999", "");
+    assert_eq!(code, 404);
+
     // control endpoints on finished / missing jobs
     let id = submit(port, r#"{"preset": "mapping", "budget": 4, "workers": 1}"#);
     wait_for_status(port, id, "done");
