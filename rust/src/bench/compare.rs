@@ -8,7 +8,11 @@
 //! 2. **Result fingerprints** — any break fails, regardless of how the
 //!    timing looks: bit-determinism is the engine's core contract, so a
 //!    fingerprint mismatch always wins over a throughput pass.
-//! 3. **Throughput** — `evals_per_sec` dropping more than the allowed
+//! 3. **Robustness counters** — more failed or retried evaluations than
+//!    the baseline fails even when the fingerprints agree: a run that
+//!    only stays bit-identical by retrying harder is quietly degrading,
+//!    and neither the fingerprint nor the timing gate would see it.
+//! 4. **Throughput** — `evals_per_sec` dropping more than the allowed
 //!    fraction below the baseline fails. Baselines with NaN/zero
 //!    throughput skip this check (with a note) instead of dividing by
 //!    zero; a NaN/zero *current* against a healthy baseline fails.
@@ -151,7 +155,21 @@ fn diff_scenario(base: &ScenarioRecord, cur: &ScenarioRecord, opts: &CompareOpts
         };
     }
 
-    // 3. throughput
+    // 3. robustness counters: retried evaluations are invisible to the
+    //    fingerprint (retry-then-recover reproduces the same log), so an
+    //    increase is a reliability regression the other checks miss
+    if cur.failures > base.failures || cur.retries > base.retries {
+        return ScenarioVerdict {
+            name,
+            passed: false,
+            detail: format!(
+                "robustness regressed: failures {} -> {}, retries {} -> {}",
+                base.failures, cur.failures, base.retries, cur.retries
+            ),
+        };
+    }
+
+    // 4. throughput
     let b = base.timing.evals_per_sec;
     let c = cur.timing.evals_per_sec;
     if !b.is_finite() || b <= 0.0 {
@@ -261,6 +279,7 @@ mod tests {
             sim_calls: 10,
             cache_hits: 2,
             failures: 0,
+            retries: 0,
             setup_builds: 1,
             setup_hits: 9,
             fingerprint,
@@ -370,6 +389,35 @@ mod tests {
             assert_eq!(r.verdict(), Verdict::Fail, "current {bad}");
             assert!(r.scenarios[0].detail.contains("collapsed"), "{}", r.scenarios[0].detail);
         }
+    }
+
+    #[test]
+    fn robustness_counter_increase_fails_despite_identical_fingerprints() {
+        // more retries, same fingerprint, better throughput: still a fail
+        let mut cur = record("a", 7, 200.0);
+        cur.retries = 3;
+        let r = gate(vec![record("a", 7, 100.0)], vec![cur]);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        let d = &r.scenarios[0].detail;
+        assert!(d.contains("robustness regressed"), "{d}");
+        assert!(d.contains("retries 0 -> 3"), "{d}");
+
+        // same for failures
+        let mut cur = record("a", 7, 100.0);
+        cur.failures = 1;
+        let r = gate(vec![record("a", 7, 100.0)], vec![cur]);
+        assert_eq!(r.verdict(), Verdict::Fail);
+        assert!(r.scenarios[0].detail.contains("failures 0 -> 1"), "{}", r.scenarios[0].detail);
+
+        // fewer incidents than the baseline is an improvement, not a fail
+        let mut base = record("a", 7, 100.0);
+        base.retries = 5;
+        base.failures = 2;
+        let mut cur = record("a", 7, 100.0);
+        cur.retries = 1;
+        cur.failures = 1;
+        let r = gate(vec![base], vec![cur]);
+        assert_eq!(r.verdict(), Verdict::Pass);
     }
 
     #[test]

@@ -64,6 +64,10 @@ pub struct SeedRun {
     pub sim_calls: usize,
     pub cache_hits: usize,
     pub failures: usize,
+    /// Transient evaluation failures that were retried and recovered
+    /// (an incident counter, excluded from the fingerprint like the
+    /// timing fields — a fault-free run and a retried run score equal).
+    pub retries: usize,
     pub setup_builds: usize,
     pub setup_hits: usize,
     /// Best first-objective score (`f64::INFINITY` when every evaluation
@@ -163,6 +167,9 @@ pub fn run_scenario(
             .setup_reuse
             .unwrap_or(defaults.setup_reuse),
         sim: defaults.sim,
+        retry_max: defaults.retry_max,
+        retry_backoff_ms: defaults.retry_backoff_ms,
+        retry_backoff_cap_ms: defaults.retry_backoff_cap_ms,
     };
     let registry = Registry::standard();
 
@@ -209,6 +216,7 @@ pub fn run_scenario(
             sim_calls: report.sim_calls,
             cache_hits: report.cache_hits,
             failures: report.failures,
+            retries: report.retries,
             setup_builds: report.setup_builds,
             setup_hits: report.setup_hits,
             best_score: best.map(|e| e.objectives[0]).unwrap_or(f64::INFINITY),

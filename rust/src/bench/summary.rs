@@ -159,6 +159,10 @@ pub struct ScenarioRecord {
     pub sim_calls: usize,
     pub cache_hits: usize,
     pub failures: usize,
+    /// Transient failures retried and recovered across all seeds (an
+    /// incident counter the robustness gate watches; parsed leniently
+    /// with default 0 so pre-supervision baselines still load).
+    pub retries: usize,
     pub setup_builds: usize,
     pub setup_hits: usize,
     /// Combined result fingerprint (see
@@ -187,6 +191,7 @@ impl ScenarioRecord {
             sim_calls: r.runs.iter().map(|run| run.sim_calls).sum(),
             cache_hits: r.runs.iter().map(|run| run.cache_hits).sum(),
             failures: r.runs.iter().map(|run| run.failures).sum(),
+            retries: r.runs.iter().map(|run| run.retries).sum(),
             setup_builds: r.runs.iter().map(|run| run.setup_builds).sum(),
             setup_hits: r.runs.iter().map(|run| run.setup_hits).sum(),
             fingerprint: r.fingerprint,
@@ -220,6 +225,7 @@ impl ScenarioRecord {
         o.insert("sim_calls", self.sim_calls.into());
         o.insert("cache_hits", self.cache_hits.into());
         o.insert("failures", self.failures.into());
+        o.insert("retries", self.retries.into());
         o.insert("setup_builds", self.setup_builds.into());
         o.insert("setup_hits", self.setup_hits.into());
         o.insert("fingerprint", hex_u64(self.fingerprint));
@@ -277,6 +283,8 @@ impl ScenarioRecord {
             sim_calls: int("sim_calls")?,
             cache_hits: int("cache_hits")?,
             failures: int("failures")?,
+            // lenient: baselines written before the retry counter existed
+            retries: doc.get("retries").and_then(|v| v.as_usize()).unwrap_or(0),
             setup_builds: int("setup_builds")?,
             setup_hits: int("setup_hits")?,
             fingerprint: parse_hex_u64(doc.get("fingerprint"), &format!("{what}: \"fingerprint\""))?,
@@ -355,7 +363,9 @@ impl Summary {
                     .with_context(|| format!("bench: creating '{}'", dir.display()))?;
             }
         }
-        std::fs::write(path, self.to_jsonl())
+        // atomic: a crash (or injected io.torn_write) mid-write must not
+        // leave a torn baseline for the compare gate to choke on
+        crate::util::atomic_write(path, self.to_jsonl().as_bytes())
             .with_context(|| format!("bench: writing summary '{}'", path.display()))
     }
 }
@@ -377,6 +387,7 @@ mod tests {
             sim_calls: 9,
             cache_hits: 3,
             failures: 0,
+            retries: 0,
             setup_builds: 1,
             setup_hits: 8,
             fingerprint: 0xdead_beef_cafe_f00d,

@@ -111,6 +111,20 @@ pub struct ExploreOpts {
     /// [`DesignSpace::topology_key`]s. `false` rebuilds everything per
     /// candidate (the pre-overhaul engine) — result-identical.
     pub setup_reuse: bool,
+    /// Maximum inline retries of a *transient* evaluation failure (an
+    /// evaluator panic or a rescued worker death — never a deterministic
+    /// `Err`, which would fail identically again). Retried evaluations
+    /// that succeed leave the report byte-identical to a fault-free run;
+    /// the attempts are only visible in the `retries` counter. `0`
+    /// disables retrying (the pre-supervision behavior: transient panics
+    /// score INFINITY immediately).
+    pub retry_max: usize,
+    /// Base backoff before a retry, in milliseconds (`0` = no backoff).
+    /// Grows exponentially per attempt with deterministic per-candidate
+    /// jitter, capped by [`ExploreOpts::retry_backoff_cap_ms`].
+    pub retry_backoff_ms: u64,
+    /// Upper bound on a single retry backoff, in milliseconds.
+    pub retry_backoff_cap_ms: u64,
     pub sim: SimConfig,
 }
 
@@ -123,6 +137,9 @@ impl Default for ExploreOpts {
             batch: 64,
             streaming: true,
             setup_reuse: true,
+            retry_max: 2,
+            retry_backoff_ms: 5,
+            retry_backoff_cap_ms: 100,
             sim: SimConfig::default(),
         }
     }
@@ -399,6 +416,18 @@ impl SetupCache {
 /// Evaluate one candidate against the shared setup cache, reusing the
 /// session's simulator arenas. Runs on pool workers and on the inline
 /// serial path alike.
+/// Chaos hooks shared by both evaluation paths: `eval.delay` stalls the
+/// evaluator (keeping a candidate in flight long enough for kill/restart
+/// tests), `eval.panic` dies with a *transient* panic the engine retries.
+fn eval_fault_hooks() {
+    if let Some(ms) = crate::util::faultpoint::fires("eval.delay") {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+    if crate::util::faultpoint::fires("eval.panic").is_some() {
+        panic!("injected fault: eval.panic");
+    }
+}
+
 fn evaluate_shared(
     space: &dyn DesignSpace,
     objectives: &[Box<dyn Objective>],
@@ -408,6 +437,7 @@ fn evaluate_shared(
     session: &mut SimSession,
     c: &Candidate,
 ) -> std::result::Result<Vec<f64>, String> {
+    eval_fault_hooks();
     if !space.in_bounds(c) {
         return Err(format!("candidate out of bounds for '{}'", space.name()));
     }
@@ -463,6 +493,7 @@ fn evaluate_fresh(
     setups: &SetupCache,
     c: &Candidate,
 ) -> std::result::Result<Vec<f64>, String> {
+    eval_fault_hooks();
     if !space.in_bounds(c) {
         return Err(format!("candidate out of bounds for '{}'", space.name()));
     }
@@ -514,6 +545,10 @@ pub struct Engine<'a, 'scope> {
     sim_calls: usize,
     cache_hits: usize,
     failures: usize,
+    /// Transient-failure retries performed (an incident counter — not
+    /// part of the deterministic result, since *when* faults strike is
+    /// environmental).
+    retries: usize,
     /// Incremented by the session loop on explorer-accepted moves.
     pub moves_accepted: usize,
 }
@@ -631,6 +666,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             sim_calls: 0,
             cache_hits: 0,
             failures: 0,
+            retries: 0,
             moves_accepted: 0,
         }
     }
@@ -645,6 +681,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         sim_calls: usize,
         cache_hits: usize,
         failures: usize,
+        retries: usize,
         moves_accepted: usize,
         setup_builds: usize,
         setup_hits: usize,
@@ -659,6 +696,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         self.sim_calls = sim_calls;
         self.cache_hits = cache_hits;
         self.failures = failures;
+        self.retries = retries;
         self.moves_accepted = moves_accepted;
         self.setups.builds.store(setup_builds, Ordering::Relaxed);
         self.setups.hits.store(setup_hits, Ordering::Relaxed);
@@ -686,6 +724,10 @@ impl<'a, 'scope> Engine<'a, 'scope> {
 
     pub(crate) fn failures(&self) -> usize {
         self.failures
+    }
+
+    pub(crate) fn retries(&self) -> usize {
+        self.retries
     }
 
     pub(crate) fn setup_builds(&self) -> usize {
@@ -735,7 +777,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
 
     /// Evaluate one candidate inline on the engine's own session, with
     /// the same panic capture as the pool workers.
-    fn eval_inline(&mut self, c: &Candidate) -> EvalResult {
+    fn eval_inline(&mut self, c: &Candidate) -> JobOutcome<EvalResult> {
         let space = self.space;
         let objectives = self.objectives;
         let evals = self.evals;
@@ -743,23 +785,24 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         let setup_reuse = self.opts.setup_reuse;
         let setups = &self.setups;
         let session = &mut self.session;
-        flatten_outcome(catch_job(move || {
+        catch_job(move || {
             if setup_reuse {
                 evaluate_shared(space, objectives, evals, sim, setups, session, c)
             } else {
                 evaluate_fresh(space, objectives, evals, sim, setups, c)
             }
-        }))
+        })
     }
 
-    /// Evaluate the deduplicated misses of a batch, in miss order: inline
-    /// when serial is cheaper (one worker or a single miss — the common
-    /// case for annealing), through the persistent pool when streaming,
-    /// or through a one-shot scoped pool on the batched path.
-    fn eval_misses(&mut self, batch: &[Candidate], miss_idx: &[usize]) -> Vec<EvalResult> {
-        if miss_idx.is_empty() {
-            return Vec::new();
-        }
+    /// One evaluation pass over the misses, without retrying: inline when
+    /// serial is cheaper (one worker or a single miss — the common case
+    /// for annealing), through the persistent pool when streaming, or
+    /// through a one-shot scoped pool on the batched path.
+    fn eval_misses_once(
+        &mut self,
+        batch: &[Candidate],
+        miss_idx: &[usize],
+    ) -> Vec<JobOutcome<EvalResult>> {
         if self.opts.workers <= 1 || miss_idx.len() == 1 {
             return miss_idx.iter().map(|&i| self.eval_inline(&batch[i])).collect();
         }
@@ -767,11 +810,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             for &i in miss_idx {
                 pool.submit(batch[i].clone());
             }
-            return pool
-                .drain()
-                .into_iter()
-                .map(|(_, o)| flatten_outcome(o))
-                .collect();
+            return pool.drain().into_iter().map(|(_, o)| o).collect();
         }
         // Batched compatibility path: one-shot pool per batch.
         let space = self.space;
@@ -789,9 +828,60 @@ impl<'a, 'scope> Engine<'a, 'scope> {
                 evaluate_fresh(space, objectives, evals, sim, setups, c)
             }
         })
-        .into_iter()
-        .map(flatten_outcome)
-        .collect()
+    }
+
+    /// Evaluate the deduplicated misses of a batch, in miss order,
+    /// retrying *transient* failures ([`JobOutcome::Panicked`]: evaluator
+    /// panics and rescued worker deaths) inline with capped, seeded
+    /// backoff. Deterministic `Err` results never retry — they would fail
+    /// identically again. The retry loop runs at the engine level so the
+    /// inline, streaming-pool and batched dispatch paths recover
+    /// identically, keeping results bit-identical across all of them.
+    fn eval_misses(&mut self, batch: &[Candidate], miss_idx: &[usize]) -> Vec<EvalResult> {
+        if miss_idx.is_empty() {
+            return Vec::new();
+        }
+        let mut outcomes = self.eval_misses_once(batch, miss_idx);
+        for attempt in 1..=self.opts.retry_max {
+            let failed: Vec<usize> = outcomes
+                .iter()
+                .enumerate()
+                .filter(|(_, o)| matches!(o, JobOutcome::Panicked(_)))
+                .map(|(j, _)| j)
+                .collect();
+            if failed.is_empty() {
+                break;
+            }
+            for j in failed {
+                let c = batch[miss_idx[j]].clone();
+                self.retries += 1;
+                self.retry_backoff(&c, attempt);
+                outcomes[j] = self.eval_inline(&c);
+            }
+        }
+        outcomes.into_iter().map(flatten_outcome).collect()
+    }
+
+    /// Sleep before retrying `c`: exponential in the attempt, seeded
+    /// per-candidate jitter (deterministic — no wall-clock or OS entropy),
+    /// capped by `retry_backoff_cap_ms`.
+    fn retry_backoff(&self, c: &Candidate, attempt: usize) {
+        let base = self.opts.retry_backoff_ms;
+        if base == 0 {
+            return;
+        }
+        let exp = base.saturating_mul(1u64 << (attempt - 1).min(10));
+        let seed = c
+            .0
+            .iter()
+            .fold(0xcbf29ce484222325u64, |h, d| {
+                (h ^ *d as u64).wrapping_mul(0x100000001b3)
+            });
+        let mut rng = crate::util::rng::Pcg::new(seed ^ attempt as u64);
+        let ms = exp
+            .saturating_add(rng.below(base.max(1)))
+            .min(self.opts.retry_backoff_cap_ms);
+        std::thread::sleep(std::time::Duration::from_millis(ms));
     }
 
     /// Evaluate a batch of candidates (truncated to the remaining budget),
@@ -953,6 +1043,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             sim_calls: self.sim_calls,
             cache_hits: self.cache_hits,
             failures: self.failures,
+            retries: self.retries,
             setup_builds: self.setups.builds.load(Ordering::Relaxed),
             setup_hits: self.setups.hits.load(Ordering::Relaxed),
             moves_accepted: self.moves_accepted,

@@ -45,6 +45,11 @@ pub struct ExplorationReport {
     /// Evaluations that failed to materialize or simulate (including
     /// caught evaluator panics).
     pub failures: usize,
+    /// Transient evaluation failures retried by the engine (evaluator
+    /// panics, rescued worker deaths). An *incident* counter: when faults
+    /// strike is environmental, so — like the wall-clock fields — it is
+    /// excluded from bit-identity comparisons between runs.
+    pub retries: usize,
     /// Topology-keyed evaluation setups built (hardware model + route
     /// table + arenas). Deterministic: keyed setups build exactly once
     /// per distinct key; key-less evaluations build ephemerally per sim.
@@ -268,6 +273,7 @@ impl ExplorationReport {
         o.insert("sim_calls", (self.sim_calls as u64).into());
         o.insert("cache_hits", (self.cache_hits as u64).into());
         o.insert("failures", (self.failures as u64).into());
+        o.insert("retries", (self.retries as u64).into());
         o.insert("setup_builds", (self.setup_builds as u64).into());
         o.insert("setup_hits", (self.setup_hits as u64).into());
         o.insert("moves_accepted", (self.moves_accepted as u64).into());
@@ -322,6 +328,7 @@ mod tests {
             sim_calls: 0,
             cache_hits: 0,
             failures: 0,
+            retries: 0,
             setup_builds: 0,
             setup_hits: 0,
             moves_accepted: 0,

@@ -93,6 +93,11 @@ pub struct Checkpoint {
     pub sim_calls: usize,
     pub cache_hits: usize,
     pub failures: usize,
+    /// Transient-failure retries before the snapshot (an incident
+    /// counter — carried so a recovered run's final report matches what
+    /// the interrupted process would have printed; parsed leniently with
+    /// default 0 so pre-supervision checkpoints still resume).
+    pub retries: usize,
     pub moves_accepted: usize,
     pub setup_builds: usize,
     pub setup_hits: usize,
@@ -148,6 +153,7 @@ impl Checkpoint {
         o.insert("sim_calls", self.sim_calls.into());
         o.insert("cache_hits", self.cache_hits.into());
         o.insert("failures", self.failures.into());
+        o.insert("retries", self.retries.into());
         o.insert("moves_accepted", self.moves_accepted.into());
         o.insert("setup_builds", self.setup_builds.into());
         o.insert("setup_hits", self.setup_hits.into());
@@ -275,6 +281,8 @@ impl Checkpoint {
             sim_calls: usize_field("sim_calls")?,
             cache_hits: usize_field("cache_hits")?,
             failures: usize_field("failures")?,
+            // lenient: pre-supervision checkpoints lack the field
+            retries: doc.get("retries").and_then(|v| v.as_usize()).unwrap_or(0),
             moves_accepted: usize_field("moves_accepted")?,
             setup_builds: usize_field("setup_builds")?,
             setup_hits: usize_field("setup_hits")?,
@@ -391,6 +399,9 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             workers: opts.workers,
             streaming: opts.streaming,
             sim: opts.sim.clone(),
+            retry_max: opts.retry_max,
+            retry_backoff_ms: opts.retry_backoff_ms,
+            retry_backoff_cap_ms: opts.retry_backoff_cap_ms,
         };
         let mut engine = Engine::new_in_with(scope, space, objectives, evals, &run_opts, shared);
         engine.restore(
@@ -398,6 +409,7 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             ckpt.sim_calls,
             ckpt.cache_hits,
             ckpt.failures,
+            ckpt.retries,
             ckpt.moves_accepted,
             ckpt.setup_builds,
             ckpt.setup_hits,
@@ -485,6 +497,7 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             sim_calls: self.engine.sim_calls(),
             cache_hits: self.engine.cache_hits(),
             failures: self.engine.failures(),
+            retries: self.engine.retries(),
             moves_accepted: self.engine.moves_accepted,
             setup_builds: self.engine.setup_builds(),
             setup_hits: self.engine.setup_hits(),

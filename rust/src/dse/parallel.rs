@@ -16,6 +16,14 @@
 //! evaluator surfaces as a per-job [`JobOutcome::Panicked`] instead of
 //! aborting the whole sweep.
 //!
+//! The pool is **self-healing**: a worker thread that dies outright —
+//! a panic escaping `catch_unwind` (e.g. panic-in-drop), or the
+//! `worker.die` fault point ([`crate::util::faultpoint`]) — has its
+//! claimed job *rescued* as a `Panicked` outcome by a drop guard, so
+//! `drain` never hangs, and a supervisor thread respawns a replacement
+//! worker so pool capacity survives the death. Rescued jobs look like any
+//! other transient panic to the caller; the DSE engine retries them.
+//!
 //! [`run_parallel`] remains as a thin compatibility wrapper over the
 //! one-shot scoped path, preserving its original signature, semantics and
 //! lock-free atomic-cursor work distribution (panics propagate after all
@@ -23,7 +31,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::{Scope, ScopedJoinHandle};
 
@@ -79,6 +87,103 @@ struct PoolShared<T, R> {
     /// Signals the submitter that results arrived.
     delivered: Condvar,
     shutdown: AtomicBool,
+    /// Worker deaths not yet handled by the supervisor.
+    deaths: Mutex<u64>,
+    /// Signals the supervisor that a worker died (or shutdown began).
+    death: Condvar,
+    /// Replacement workers spawned over the pool's lifetime.
+    respawned: AtomicU64,
+}
+
+/// Drop guard armed while a worker holds a claimed job: if the thread
+/// dies — unwinding panic or hard exit — before delivering the outcome,
+/// the guard delivers it as `Panicked`, so `drain` accounts every
+/// submitted job exactly once no matter how its worker ended.
+struct JobRescue<'a, T, R> {
+    shared: &'a PoolShared<T, R>,
+    id: Option<u64>,
+}
+
+impl<T, R> Drop for JobRescue<'_, T, R> {
+    fn drop(&mut self) {
+        if let Some(id) = self.id.take() {
+            let mut d = self.shared.done.lock().expect("pool results poisoned");
+            d.push((
+                id,
+                JobOutcome::Panicked("worker died while running job; rescued by pool supervisor".to_string()),
+            ));
+            self.shared.delivered.notify_all();
+        }
+    }
+}
+
+/// Drop guard held for a worker thread's whole life: dropping it outside
+/// an orderly shutdown means the thread died, which is reported to the
+/// supervisor for respawn.
+struct AliveToken<'a, T, R> {
+    shared: &'a PoolShared<T, R>,
+}
+
+impl<T, R> Drop for AliveToken<'_, T, R> {
+    fn drop(&mut self) {
+        if !self.shared.shutdown.load(Ordering::Acquire) {
+            let mut deaths = self.shared.deaths.lock().expect("pool deaths poisoned");
+            *deaths += 1;
+            self.shared.death.notify_all();
+        }
+    }
+}
+
+/// One worker thread's whole life: init once, then claim/evaluate/deliver
+/// until shutdown. Shared by the initial spawns and supervisor respawns.
+fn worker_body<T, R, S, I, F>(shared: &PoolShared<T, R>, ctx: &(I, F))
+where
+    I: Fn() -> S,
+    F: Fn(&mut S, &T) -> R,
+{
+    let _alive = AliveToken { shared };
+    let (init, f) = (&ctx.0, &ctx.1);
+    // A panicking `init` must not kill the worker: the job loop still
+    // runs, reporting the init failure per job, so `drain` never hangs
+    // on a dead worker.
+    let mut state = match catch_job(init) {
+        JobOutcome::Done(s) => Ok(s),
+        JobOutcome::Panicked(msg) => Err(msg),
+    };
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).expect("pool queue poisoned");
+            }
+        };
+        let Some((id, job)) = job else { return };
+        let mut rescue = JobRescue {
+            shared,
+            id: Some(id),
+        };
+        if crate::util::faultpoint::fires("worker.die").is_some() {
+            // Simulated hard death with a job claimed (the chaos stand-in
+            // for a panic escaping catch_unwind): returning here drops the
+            // rescue guard (delivering the job as Panicked) and the alive
+            // token (reporting the death for respawn).
+            return;
+        }
+        let outcome = match &mut state {
+            Ok(s) => catch_job(|| f(s, &job)),
+            Err(msg) => JobOutcome::Panicked(format!("worker init panicked: {msg}")),
+        };
+        rescue.id = None;
+        let mut d = shared.done.lock().expect("pool results poisoned");
+        d.push((id, outcome));
+        shared.delivered.notify_all();
+    }
 }
 
 /// A persistent, scope-bound worker pool with streaming `submit`/`drain`.
@@ -116,54 +221,64 @@ impl<'scope, T: Send + 'scope, R: Send + 'scope> WorkerPool<'scope, T, R> {
             done: Mutex::new(Vec::new()),
             delivered: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            deaths: Mutex::new(0),
+            death: Condvar::new(),
+            respawned: AtomicU64::new(0),
         });
         let ctx = Arc::new((init, f));
-        let handles = (0..workers.max(1))
+        let mut handles: Vec<ScopedJoinHandle<'scope, ()>> = (0..workers.max(1))
             .map(|_| {
                 let shared = Arc::clone(&shared);
                 let ctx = Arc::clone(&ctx);
-                scope.spawn(move || {
-                    let (init, f) = (&ctx.0, &ctx.1);
-                    // A panicking `init` must not kill the worker: the job
-                    // loop still runs, reporting the init failure per job,
-                    // so `drain` never hangs on a dead worker.
-                    let mut state = match catch_job(init) {
-                        JobOutcome::Done(s) => Ok(s),
-                        JobOutcome::Panicked(msg) => Err(msg),
-                    };
-                    loop {
-                        let job = {
-                            let mut q = shared.queue.lock().expect("pool queue poisoned");
-                            loop {
-                                if let Some(j) = q.pop_front() {
-                                    break Some(j);
-                                }
-                                if shared.shutdown.load(Ordering::Acquire) {
-                                    break None;
-                                }
-                                q = shared.available.wait(q).expect("pool queue poisoned");
-                            }
-                        };
-                        let Some((id, job)) = job else { return };
-                        let outcome = match &mut state {
-                            Ok(s) => catch_job(|| f(s, &job)),
-                            Err(msg) => {
-                                JobOutcome::Panicked(format!("worker init panicked: {msg}"))
-                            }
-                        };
-                        let mut d = shared.done.lock().expect("pool results poisoned");
-                        d.push((id, outcome));
-                        shared.delivered.notify_all();
-                    }
-                })
+                scope.spawn(move || worker_body(&shared, &ctx))
             })
             .collect();
+        // The supervisor: waits for death notices and respawns replacement
+        // workers onto the same scope (a `Scope` may be used from within
+        // its own threads), keeping pool capacity intact. It owns the
+        // replacements' handles and consumes their join results, so a
+        // replacement that itself panicked cannot re-panic the scope's
+        // implicit join at the end of the exploration.
+        let sup_shared = Arc::clone(&shared);
+        let sup_ctx = Arc::clone(&ctx);
+        handles.push(scope.spawn(move || {
+            let mut handled = 0u64;
+            let mut replacements: Vec<ScopedJoinHandle<'scope, ()>> = Vec::new();
+            loop {
+                let pending = {
+                    let mut deaths = sup_shared.deaths.lock().expect("pool deaths poisoned");
+                    while *deaths == handled && !sup_shared.shutdown.load(Ordering::Acquire) {
+                        deaths = sup_shared.death.wait(deaths).expect("pool deaths poisoned");
+                    }
+                    if sup_shared.shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let pending = *deaths - handled;
+                    handled = *deaths;
+                    pending
+                };
+                for _ in 0..pending {
+                    sup_shared.respawned.fetch_add(1, Ordering::Relaxed);
+                    let shared = Arc::clone(&sup_shared);
+                    let ctx = Arc::clone(&sup_ctx);
+                    replacements.push(scope.spawn(move || worker_body(&shared, &ctx)));
+                }
+            }
+            for h in replacements {
+                let _ = h.join();
+            }
+        }));
         WorkerPool {
             shared,
             handles,
             next_job: 0,
             in_flight: 0,
         }
+    }
+
+    /// Replacement workers the supervisor spawned after worker deaths.
+    pub fn respawned(&self) -> u64 {
+        self.shared.respawned.load(Ordering::Relaxed)
     }
 
     /// Enqueue one job; returns its id (submission order, starting at 0
@@ -216,6 +331,13 @@ impl<T: Send, R: Send> Drop for WorkerPool<'_, T, R> {
             self.shared.shutdown.store(true, Ordering::Release);
         }
         self.shared.available.notify_all();
+        {
+            // Same idiom for the supervisor: it re-checks the flag under
+            // the deaths lock before waiting, so taking the lock here
+            // orders this store before its next wait.
+            let _guard = self.shared.deaths.lock().expect("pool deaths poisoned");
+        }
+        self.shared.death.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

@@ -9,7 +9,10 @@
 //!               [--explorer grid|random|hill|anneal|anneal-tiered]
 //!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
 //!               [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
-//! mldse serve [--port P] [--workers N]         exploration-as-a-service daemon
+//!               [--deadline-events N] [--deadline-ms N]
+//! mldse serve [--port P] [--workers N] [--state-dir DIR] [--checkpoint-every N]
+//!             [--max-connections N] [--read-timeout-ms N]
+//!                                              exploration-as-a-service daemon
 //! mldse bench run [--scenarios PATH] [--out FILE] [--quick] [--workers N]
 //! mldse bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]
 //! mldse bench list [--scenarios PATH]          declarative perf scenarios + gate
@@ -171,16 +174,25 @@ fn print_usage() {
                    [--explorer grid|random|hill|anneal|anneal-tiered]\n\
                    [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
                    [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]\n\
+                   [--deadline-events N] [--deadline-ms N]\n\
                    (presets: {presets}; --workers 0 = auto-detect,\n\
                     honoring the MLDSE_WORKERS environment override; space\n\
                     files compose param/packaging/product/nested spaces —\n\
                     see README \"Composable design spaces\"; --checkpoint\n\
                     writes a resumable snapshot every N steps, --resume\n\
-                    restores one bit-identically)\n\
-           serve [--port P] [--workers N]        exploration-as-a-service HTTP\n\
-                   daemon on 127.0.0.1 (job queue, JSONL event streams,\n\
-                    pause/checkpoint/resume — see README \"Exploration as a\n\
-                    service\")\n\
+                    restores one bit-identically; --deadline-events fails\n\
+                    runaway candidates deterministically, --deadline-ms is\n\
+                    the wall-clock backstop — see README \"Robustness &\n\
+                    fault injection\")\n\
+           serve [--port P] [--workers N] [--state-dir DIR]\n\
+                 [--checkpoint-every N] [--max-connections N]\n\
+                 [--read-timeout-ms N]\n\
+                   (exploration-as-a-service HTTP daemon on 127.0.0.1: job\n\
+                    queue, JSONL event streams, pause/checkpoint/resume;\n\
+                    --state-dir journals specs + periodic checkpoints so a\n\
+                    killed daemon recovers its jobs bit-identically on\n\
+                    restart; SIGTERM or POST /shutdown drains gracefully —\n\
+                    see README \"Exploration as a service\")\n\
            bench run [--scenarios PATH] [--out FILE] [--quick] [--workers N]\n\
            bench compare BASELINE.jsonl CURRENT.jsonl [--threshold PCT]\n\
            bench list [--scenarios PATH]\n\
@@ -359,7 +371,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         "explore",
         &[
             "space", "preset", "explorer", "budget", "workers", "seed", "json", "no-cache", "top",
-            "checkpoint", "checkpoint-every", "resume",
+            "checkpoint", "checkpoint-every", "resume", "deadline-events", "deadline-ms",
         ],
     )?;
     let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
@@ -445,12 +457,19 @@ fn cmd_explore(args: &Args) -> Result<()> {
     // --workers 0 (or omitting the flag) auto-detects: the MLDSE_WORKERS
     // environment override when set (validated), else available cores.
     let workers = resolve_workers(args.num("workers", 0usize)?)?;
-    let opts = ExploreOpts {
+    let mut opts = ExploreOpts {
         budget: args.num("budget", default_budget)?,
         workers,
         cache: !args.bool_flag("no-cache"),
         ..Default::default()
     };
+    // Per-candidate evaluation deadlines: the event budget is
+    // deterministic (same verdict on every machine), the wall-clock cap
+    // is a backstop. Runaway candidates surface as evaluation errors,
+    // not hung runs. Mutate the defaulted `sim` rather than rebuilding
+    // it so explore's other simulator defaults stay untouched.
+    opts.sim.deadline_events = args.num("deadline-events", opts.sim.deadline_events)?;
+    opts.sim.deadline_ms = args.num("deadline-ms", opts.sim.deadline_ms)?;
     let top = args.num("top", 10usize)?;
     let registry = mldse::eval::Registry::standard();
     let start = std::time::Instant::now();
@@ -504,24 +523,53 @@ fn cmd_explore(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serialize the session's current state to `path` (pretty JSON).
+/// Serialize the session's current state to `path` (pretty JSON,
+/// written atomically — a crash mid-write leaves the previous snapshot
+/// intact instead of a torn file).
 fn write_checkpoint(path: &str, session: &ExplorationSession<'_, '_>) -> Result<()> {
-    std::fs::write(
-        path,
-        format!("{}\n", session.checkpoint().to_json().to_pretty()),
+    mldse::util::atomic_write(
+        std::path::Path::new(path),
+        format!("{}\n", session.checkpoint().to_json().to_pretty()).as_bytes(),
     )
     .with_context(|| format!("writing checkpoint '{path}'"))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.allow("serve", &["port", "workers"])?;
+    args.allow(
+        "serve",
+        &[
+            "port", "workers", "state-dir", "checkpoint-every", "max-connections",
+            "read-timeout-ms",
+        ],
+    )?;
     let port = args.num("port", 8463u16)?;
     // per-job evaluation workers for jobs that do not request their own
     let workers = resolve_workers(args.num("workers", 0usize)?)?;
-    let server = mldse::serve::Server::bind(port, workers)?;
+    let defaults = mldse::serve::ServeOpts::default();
+    let max_connections = args.num("max-connections", defaults.max_connections)?;
+    if max_connections == 0 {
+        mldse::bail!("--max-connections: invalid value '0' (must be at least 1)");
+    }
+    let read_timeout_ms: u64 = args.num(
+        "read-timeout-ms",
+        defaults.read_timeout.as_millis() as u64,
+    )?;
+    if read_timeout_ms == 0 {
+        mldse::bail!("--read-timeout-ms: invalid value '0' (must be at least 1)");
+    }
+    let opts = mldse::serve::ServeOpts {
+        state_dir: args.flag("state-dir").map(std::path::PathBuf::from),
+        checkpoint_every: args.num("checkpoint-every", defaults.checkpoint_every)?,
+        max_connections,
+        read_timeout: std::time::Duration::from_millis(read_timeout_ms),
+        ..defaults
+    };
+    let recovering = opts.state_dir.is_some();
+    let server = mldse::serve::Server::bind_with(port, workers, opts)?;
     println!(
-        "mldse serve: listening on http://127.0.0.1:{} ({workers} evaluation workers per job)",
-        server.port()
+        "mldse serve: listening on http://127.0.0.1:{} ({workers} evaluation workers per job{})",
+        server.port(),
+        if recovering { ", crash recovery on" } else { "" }
     );
     use std::io::Write;
     std::io::stdout().flush().ok();

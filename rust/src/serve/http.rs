@@ -9,7 +9,7 @@
 
 use std::io::{BufRead, Read, Write};
 
-use crate::util::error::Result;
+use crate::util::json::{Json, JsonObj};
 
 /// Largest request body the daemon will read (space documents are small;
 /// anything bigger is a client error, not a reason to balloon memory).
@@ -24,24 +24,92 @@ pub struct Request {
     pub body: String,
 }
 
+/// Why a request could not be read, carrying the HTTP status the daemon
+/// answers with: 408 for socket timeouts (slow-loris clients, stalled
+/// uploads), 413 for oversized bodies, 400 for everything else.
+#[derive(Debug)]
+pub enum ParseError {
+    /// Declared `Content-Length` above [`MAX_BODY_BYTES`].
+    TooLarge { declared: usize },
+    /// The socket read timed out before a complete request arrived.
+    Timeout,
+    /// Malformed bytes: bad request line, bad header, invalid UTF-8,
+    /// or the connection dropped mid-request.
+    Malformed(String),
+}
+
+impl ParseError {
+    /// The status code this error answers with.
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::TooLarge { .. } => 413,
+            ParseError::Timeout => 408,
+            ParseError::Malformed(_) => 400,
+        }
+    }
+
+    /// Diagnostic JSON for the error response. Oversized requests name
+    /// both the declared size and the limit so clients can fix
+    /// themselves without reading server code.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("error", self.to_string().as_str().into());
+        if let ParseError::TooLarge { declared } = self {
+            o.insert("declared_bytes", (*declared).into());
+            o.insert("limit_bytes", MAX_BODY_BYTES.into());
+        }
+        Json::Obj(o)
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::TooLarge { declared } => write!(
+                f,
+                "http: request body too large ({declared} bytes, limit {MAX_BODY_BYTES})"
+            ),
+            ParseError::Timeout => {
+                write!(f, "http: timed out reading the request (slow client)")
+            }
+            ParseError::Malformed(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// Classify an I/O failure mid-parse: an expired socket read timeout is
+/// the client's fault (408), anything else is a malformed/broken request.
+fn read_err(e: std::io::Error) -> ParseError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ParseError::Timeout,
+        _ => ParseError::Malformed(format!("http: reading request: {e}")),
+    }
+}
+
 /// Read one request from `r`. Headers other than `Content-Length` are
-/// skipped; the body is read to exactly the declared length.
-pub fn parse_request<R: BufRead>(r: &mut R) -> Result<Request> {
+/// skipped; the body is read to exactly the declared length, which is
+/// capped at [`MAX_BODY_BYTES`] **before** any allocation happens.
+pub fn parse_request<R: BufRead>(r: &mut R) -> std::result::Result<Request, ParseError> {
     let mut start = String::new();
-    let n = r.read_line(&mut start)?;
-    crate::ensure!(n > 0, "http: connection closed before a request line");
+    let n = r.read_line(&mut start).map_err(read_err)?;
+    if n == 0 {
+        return Err(ParseError::Malformed(
+            "http: connection closed before a request line".to_string(),
+        ));
+    }
     let mut parts = start.split_whitespace();
     let method = parts.next().unwrap_or_default().to_string();
     let path = parts.next().unwrap_or_default().to_string();
-    crate::ensure!(
-        !method.is_empty() && path.starts_with('/'),
-        "http: malformed request line '{}'",
-        start.trim_end()
-    );
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(ParseError::Malformed(format!(
+            "http: malformed request line '{}'",
+            start.trim_end()
+        )));
+    }
     let mut content_len = 0usize;
     loop {
         let mut line = String::new();
-        if r.read_line(&mut line)? == 0 {
+        if r.read_line(&mut line).map_err(read_err)? == 0 {
             break;
         }
         let line = line.trim_end();
@@ -52,19 +120,21 @@ pub fn parse_request<R: BufRead>(r: &mut R) -> Result<Request> {
             if key.trim().eq_ignore_ascii_case("content-length") {
                 let value = value.trim();
                 content_len = value.parse().map_err(|_| {
-                    crate::format_err!("http: invalid Content-Length '{value}'")
+                    ParseError::Malformed(format!("http: invalid Content-Length '{value}'"))
                 })?;
             }
         }
     }
-    crate::ensure!(
-        content_len <= MAX_BODY_BYTES,
-        "http: request body too large ({content_len} bytes, limit {MAX_BODY_BYTES})"
-    );
+    if content_len > MAX_BODY_BYTES {
+        return Err(ParseError::TooLarge {
+            declared: content_len,
+        });
+    }
     let mut body = vec![0u8; content_len];
-    r.read_exact(&mut body)?;
-    let body = String::from_utf8(body)
-        .map_err(|_| crate::format_err!("http: request body is not valid UTF-8"))?;
+    r.read_exact(&mut body).map_err(read_err)?;
+    let body = String::from_utf8(body).map_err(|_| {
+        ParseError::Malformed("http: request body is not valid UTF-8".to_string())
+    })?;
     Ok(Request { method, path, body })
 }
 
@@ -77,9 +147,12 @@ pub fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         409 => "Conflict",
+        413 => "Payload Too Large",
         422 => "Unprocessable Entity",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
@@ -177,6 +250,57 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("invalid Content-Length 'lots'"), "{err}");
+    }
+
+    #[test]
+    fn oversized_content_length_is_413_with_diagnostics() {
+        let declared = MAX_BODY_BYTES + 1;
+        let raw = format!("POST /jobs HTTP/1.1\r\nContent-Length: {declared}\r\n\r\n");
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert_eq!(err.status(), 413);
+        let doc = err.to_json();
+        assert_eq!(doc.get("declared_bytes").and_then(|v| v.as_usize()), Some(declared));
+        assert_eq!(
+            doc.get("limit_bytes").and_then(|v| v.as_usize()),
+            Some(MAX_BODY_BYTES)
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("request body too large"), "{msg}");
+    }
+
+    /// A reader that never produces data, like a socket whose read
+    /// timeout expired mid-request.
+    struct Stalled;
+
+    impl Read for Stalled {
+        fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::WouldBlock,
+                "stalled",
+            ))
+        }
+    }
+
+    #[test]
+    fn stalled_client_is_a_408_timeout() {
+        let err = parse_request(&mut std::io::BufReader::new(Stalled)).unwrap_err();
+        assert_eq!(err.status(), 408);
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn truncated_body_is_a_400_not_a_timeout() {
+        // Content-Length promises more bytes than the client sends.
+        let raw = "POST /jobs HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert_eq!(err.status(), 400);
+    }
+
+    #[test]
+    fn reason_phrases_cover_the_hardening_statuses() {
+        assert_eq!(reason(408), "Request Timeout");
+        assert_eq!(reason(413), "Payload Too Large");
+        assert_eq!(reason(503), "Service Unavailable");
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! [`SharedCaches`] build each topology's evaluation plan once across
 //! the whole process while their per-job reports stay deterministic.
 
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -59,6 +60,56 @@ impl JobStatus {
     pub fn terminal(&self) -> bool {
         matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
     }
+
+    /// Inverse of [`JobStatus::as_str`], for reading persisted job state.
+    pub fn parse(s: &str) -> Option<JobStatus> {
+        Some(match s {
+            "queued" => JobStatus::Queued,
+            "running" => JobStatus::Running,
+            "paused" => JobStatus::Paused,
+            "done" => JobStatus::Done,
+            "failed" => JobStatus::Failed,
+            "cancelled" => JobStatus::Cancelled,
+            _ => return None,
+        })
+    }
+}
+
+/// On-disk persistence for one job: where snapshots go, how often to
+/// take them, and — during crash recovery — the checkpoint to resume
+/// from. All writes go through [`crate::util::atomic_write`], so the
+/// state directory only ever holds complete artifacts: a daemon killed
+/// mid-write leaves the previous snapshot intact, never a torn file.
+#[derive(Debug, Clone)]
+pub struct Persist {
+    /// The daemon's `jobs/` state directory.
+    pub dir: PathBuf,
+    /// Checkpoint cadence in batches. `0` disables periodic snapshots;
+    /// pause and graceful shutdown still persist one.
+    pub every: u64,
+    /// Serialized checkpoint found on disk at recovery time, if any.
+    pub resume_from: Option<String>,
+}
+
+/// `<dir>/<id>.spec.json` — the submitted job body, journaled verbatim.
+pub fn spec_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id}.spec.json"))
+}
+
+/// `<dir>/<id>.ckpt.json` — the latest persisted [`Checkpoint`].
+pub fn ckpt_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id}.ckpt.json"))
+}
+
+/// `<dir>/<id>.report.json` — the final report of a completed job.
+pub fn report_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id}.report.json"))
+}
+
+/// `<dir>/<id>.final.json` — terminal status of a job that did not
+/// finish with a report (failed or cancelled).
+pub fn final_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id}.final.json"))
 }
 
 /// What the runner should do at the next step boundary.
@@ -202,6 +253,33 @@ pub struct Job {
 }
 
 impl Job {
+    /// Rebuild a job that had already reached a terminal state when the
+    /// daemon died, from its persisted artifacts. The job lands in the
+    /// table fully finished — no runner thread is spawned for it.
+    pub fn recovered_terminal(
+        id: u64,
+        spec: JobSpec,
+        status: JobStatus,
+        report: Option<String>,
+        error: Option<String>,
+    ) -> Arc<Job> {
+        let job = Job::new(id, spec);
+        {
+            let mut g = job.lock();
+            g.status = status;
+            g.report = report;
+            let mut o = JsonObj::new();
+            o.insert("type", "recovered".into());
+            o.insert("status", status.as_str().into());
+            if let Some(e) = &error {
+                o.insert("error", e.as_str().into());
+            }
+            Self::push_event_locked(&mut g, o);
+            g.error = error;
+        }
+        job
+    }
+
     pub fn new(id: u64, spec: JobSpec) -> Arc<Job> {
         let space = spec
             .preset
@@ -385,6 +463,18 @@ impl Job {
         }
     }
 
+    /// Record a failed state-dir write. The previous atomic snapshot is
+    /// still intact on disk, so persistence failures are logged
+    /// incidents, not job deaths.
+    fn emit_persist_error(&self, message: &str) {
+        let mut g = self.lock();
+        let mut o = JsonObj::new();
+        o.insert("type", "persist_error".into());
+        o.insert("error", message.into());
+        Self::push_event_locked(&mut g, o);
+        self.cond.notify_all();
+    }
+
     fn emit_resumed(&self, evals: usize) {
         let mut g = self.lock();
         let mut o = JsonObj::new();
@@ -464,11 +554,14 @@ enum Outcome {
 
 /// Run one job to completion on the current thread (the server spawns
 /// one thread per job). Never panics out — failures and caught panics
-/// land in the job's `failed` state.
-pub fn run(job: Arc<Job>, shared: Arc<SharedCaches>) {
+/// land in the job's `failed` state. With `persist`, the terminal
+/// artifact (`.report.json` for done jobs, `.final.json` otherwise) is
+/// written so a restarted daemon recovers the result instead of
+/// rerunning the work.
+pub fn run(job: Arc<Job>, shared: Arc<SharedCaches>, persist: Option<Persist>) {
     let started = Instant::now();
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        drive(&job, &shared, started)
+        drive(&job, &shared, started, persist.as_ref())
     }));
     match outcome {
         Ok(Ok(Outcome::Done(report))) => job.finish_done(&report),
@@ -485,9 +578,41 @@ pub fn run(job: Arc<Job>, shared: Arc<SharedCaches>) {
             job.finish_failed(msg);
         }
     }
+    if let Some(p) = &persist {
+        let result = match job.status() {
+            JobStatus::Done => match job.report_text() {
+                Some(text) => {
+                    crate::util::atomic_write(&report_path(&p.dir, job.id), text.as_bytes())
+                }
+                None => Ok(()),
+            },
+            _ => crate::util::atomic_write(
+                &final_path(&p.dir, job.id),
+                format!("{}\n", job.status_json().to_pretty()).as_bytes(),
+            ),
+        };
+        if let Err(e) = result {
+            job.emit_persist_error(&format!("{e:#}"));
+        }
+    }
 }
 
-fn drive(job: &Job, shared: &Arc<SharedCaches>, started: Instant) -> Result<Outcome> {
+/// Serialize the session's current checkpoint into the state dir. A
+/// failed write is reported on the event log and otherwise ignored —
+/// the previous atomic snapshot is still valid.
+fn persist_checkpoint(job: &Job, p: &Persist, text: &str) {
+    let path = ckpt_path(&p.dir, job.id);
+    if let Err(e) = crate::util::atomic_write(&path, format!("{text}\n").as_bytes()) {
+        job.emit_persist_error(&format!("{e:#}"));
+    }
+}
+
+fn drive(
+    job: &Job,
+    shared: &Arc<SharedCaches>,
+    started: Instant,
+    persist: Option<&Persist>,
+) -> Result<Outcome> {
     let spec = &job.spec;
     let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
         match (&spec.space_doc, &spec.preset) {
@@ -519,17 +644,44 @@ fn drive(job: &Job, shared: &Arc<SharedCaches>, started: Instant) -> Result<Outc
         ..defaults
     };
     let registry = Registry::standard();
+    // Crash recovery: a checkpoint journaled by the previous daemon
+    // process resumes through the same deserialization path a client
+    // download would exercise — the recovered run is bit-identical to
+    // what the interrupted process would have produced.
+    let recovered = persist
+        .and_then(|p| p.resume_from.as_deref())
+        .map(|text| -> Result<Checkpoint> {
+            let doc = Json::parse(text).context("jobs: parsing recovered checkpoint")?;
+            Checkpoint::from_json(&doc)
+        })
+        .transpose()?;
     job.mark_running(space.name(), budget, opts.workers);
     std::thread::scope(|scope| -> Result<Outcome> {
-        let mut session = ExplorationSession::new_in(
-            scope,
-            space.as_ref(),
-            &objectives,
-            explorer.as_ref(),
-            &registry,
-            &opts,
-            Some(Arc::clone(shared)),
-        )?;
+        let mut session = match recovered {
+            Some(ckpt) => {
+                let s = ExplorationSession::resume_in(
+                    scope,
+                    space.as_ref(),
+                    &objectives,
+                    explorer.as_ref(),
+                    &registry,
+                    &opts,
+                    ckpt,
+                    Some(Arc::clone(shared)),
+                )?;
+                job.emit_resumed(s.evals_done());
+                s
+            }
+            None => ExplorationSession::new_in(
+                scope,
+                space.as_ref(),
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                Some(Arc::clone(shared)),
+            )?,
+        };
         let mut emitted = 0usize;
         loop {
             match job.control() {
@@ -537,6 +689,12 @@ fn drive(job: &Job, shared: &Arc<SharedCaches>, started: Instant) -> Result<Outc
                 Control::Pause => {
                     let text = session.checkpoint().to_json().to_pretty();
                     drop(session);
+                    // Persist before parking: once a pause request sees
+                    // status `paused`, the checkpoint is durably on disk
+                    // (graceful shutdown relies on this ordering).
+                    if let Some(p) = persist {
+                        persist_checkpoint(job, p, &text);
+                    }
                     if job.park_paused(text) == Control::Cancel {
                         return Ok(Outcome::Cancelled);
                     }
@@ -565,6 +723,14 @@ fn drive(job: &Job, shared: &Arc<SharedCaches>, started: Instant) -> Result<Outc
                 break;
             }
             emitted = job.emit_progress(session.log(), emitted, session.batches_done());
+            // Periodic snapshot so a crashed daemon loses at most
+            // `every` batches of work, never the whole job.
+            if let Some(p) = persist {
+                if p.every > 0 && session.batches_done() % p.every == 0 {
+                    let text = session.checkpoint().to_json().to_pretty();
+                    persist_checkpoint(job, p, &text);
+                }
+            }
         }
         Ok(Outcome::Done(
             session.into_report(started.elapsed().as_secs_f64()),

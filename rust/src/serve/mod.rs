@@ -25,6 +25,18 @@
 //! what a standalone `mldse explore` run would print (modulo wall-clock
 //! fields). Requests are logged through [`crate::util::logger`] with
 //! monotonic timestamps.
+//!
+//! Robustness ([`ServeOpts`]): socket read/write timeouts turn stalled
+//! clients into fast 408s instead of pinned threads; oversized bodies
+//! get 413 with diagnostics; a connection cap answers overload with 503
+//! instead of unbounded thread growth. With `--state-dir` the daemon is
+//! **crash-recoverable**: job specs are journaled at submit, running
+//! jobs checkpoint periodically (all writes atomic tmp+rename), and a
+//! restarted daemon restores finished jobs from their artifacts and
+//! resumes interrupted ones bit-identically from their last snapshot.
+//! `POST /shutdown` and SIGTERM/SIGINT drain gracefully: every running
+//! job is paused (persisting a final checkpoint) before the process
+//! exits.
 
 pub mod http;
 pub mod jobs;
@@ -32,7 +44,8 @@ pub mod jobs;
 use std::collections::HashMap;
 use std::io::BufReader;
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -42,7 +55,37 @@ use crate::util::json::{Json, JsonObj};
 use crate::util::logger;
 
 use http::Request;
-use jobs::{Job, JobSpec};
+use jobs::{Job, JobSpec, JobStatus, Persist};
+
+/// Supervision and hardening tunables for the daemon.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Socket read timeout: a client that stalls longer than this
+    /// mid-request gets a 408 instead of pinning a thread forever.
+    pub read_timeout: Duration,
+    /// Socket write timeout for responses (guards against peers that
+    /// stop reading).
+    pub write_timeout: Duration,
+    /// Concurrent connection cap; connections beyond it get a fast 503.
+    pub max_connections: usize,
+    /// Crash-recovery state directory. `None` disables persistence.
+    pub state_dir: Option<PathBuf>,
+    /// Periodic checkpoint cadence in batches for persisted jobs
+    /// (`0`: only pause/shutdown persist a checkpoint).
+    pub checkpoint_every: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(30),
+            max_connections: 64,
+            state_dir: None,
+            checkpoint_every: 4,
+        }
+    }
+}
 
 /// Shared server state: the job table and the process-wide caches every
 /// job joins.
@@ -53,6 +96,18 @@ pub struct ServerState {
     shutdown: AtomicBool,
     default_workers: usize,
     port: u16,
+    opts: ServeOpts,
+    /// Live connection count, guarded by [`ConnSlot`] on each handler.
+    active: AtomicUsize,
+}
+
+/// Drop guard releasing one slot of the connection cap.
+struct ConnSlot<'a>(&'a AtomicUsize);
+
+impl Drop for ConnSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 /// The daemon: a bound listener plus its [`ServerState`].
@@ -62,24 +117,33 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind on `127.0.0.1:port` (`0` picks an ephemeral port — read it
-    /// back with [`Server::port`]). `default_workers` is the evaluation
-    /// worker count for jobs that do not set their own.
+    /// Bind on `127.0.0.1:port` with default [`ServeOpts`] (`0` picks an
+    /// ephemeral port — read it back with [`Server::port`]).
+    /// `default_workers` is the evaluation worker count for jobs that do
+    /// not set their own.
     pub fn bind(port: u16, default_workers: usize) -> Result<Server> {
+        Server::bind_with(port, default_workers, ServeOpts::default())
+    }
+
+    /// [`Server::bind`] with explicit supervision options. When
+    /// `opts.state_dir` is set, any jobs persisted by a previous daemon
+    /// process are recovered before the listener starts accepting.
+    pub fn bind_with(port: u16, default_workers: usize, opts: ServeOpts) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("serve: binding 127.0.0.1:{port}"))?;
         let port = listener.local_addr().context("serve: local address")?.port();
-        Ok(Server {
-            listener,
-            state: Arc::new(ServerState {
-                shared: Arc::new(SharedCaches::new()),
-                jobs: Mutex::new(HashMap::new()),
-                next_job: AtomicU64::new(1),
-                shutdown: AtomicBool::new(false),
-                default_workers,
-                port,
-            }),
-        })
+        let state = Arc::new(ServerState {
+            shared: Arc::new(SharedCaches::new()),
+            jobs: Mutex::new(HashMap::new()),
+            next_job: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            default_workers,
+            port,
+            opts,
+            active: AtomicUsize::new(0),
+        });
+        recover_jobs(&state)?;
+        Ok(Server { listener, state })
     }
 
     /// The bound port.
@@ -87,26 +151,216 @@ impl Server {
         self.state.port
     }
 
-    /// Accept connections until `POST /shutdown`. One thread per
-    /// connection; job threads outlive their submitting connection.
+    /// Accept connections until `POST /shutdown` or SIGTERM/SIGINT, then
+    /// drain: every running job is paused (persisting its checkpoint
+    /// when a state dir is configured) before this returns. One thread
+    /// per connection; job threads outlive their submitting connection.
     pub fn run(self) -> Result<()> {
-        for conn in self.listener.incoming() {
-            if self.state.shutdown.load(Ordering::SeqCst) {
+        term_signal::install();
+        // Nonblocking accepts so the loop observes the signal latch and
+        // the shutdown flag promptly instead of sleeping in accept(2).
+        self.listener
+            .set_nonblocking(true)
+            .context("serve: nonblocking listener")?;
+        loop {
+            if self.state.shutdown.load(Ordering::SeqCst) || term_signal::requested() {
                 break;
             }
-            let stream = match conn {
-                Ok(s) => s,
-                Err(_) => continue,
-            };
-            let state = Arc::clone(&self.state);
-            std::thread::spawn(move || handle_connection(stream, &state));
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    // accepted sockets must block again: handlers rely on
+                    // read/write *timeouts*, not EAGAIN
+                    let _ = stream.set_nonblocking(false);
+                    let prev = self.state.active.fetch_add(1, Ordering::SeqCst);
+                    if prev >= self.state.opts.max_connections {
+                        self.state.active.fetch_sub(1, Ordering::SeqCst);
+                        let mut stream = stream;
+                        let mut o = JsonObj::new();
+                        o.insert(
+                            "error",
+                            format!(
+                                "server at capacity ({} connections); retry",
+                                self.state.opts.max_connections
+                            )
+                            .as_str()
+                            .into(),
+                        );
+                        let _ = http::write_json(&mut stream, 503, &Json::Obj(o));
+                        logger::request("-", "-", 503, Duration::ZERO);
+                        continue;
+                    }
+                    let state = Arc::clone(&self.state);
+                    std::thread::spawn(move || {
+                        let _slot = ConnSlot(&state.active);
+                        handle_connection(stream, &state);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(15));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(15)),
+            }
         }
+        drain_jobs(&self.state);
         Ok(())
+    }
+}
+
+/// Graceful drain: ask every live job to pause — which persists a
+/// checkpoint when a state dir is configured — and wait for each to
+/// reach `paused` or a terminal state (bounded so a wedged job cannot
+/// block shutdown forever).
+fn drain_jobs(state: &Arc<ServerState>) {
+    let jobs: Vec<Arc<Job>> = state
+        .jobs
+        .lock()
+        .expect("job table poisoned")
+        .values()
+        .map(Arc::clone)
+        .collect();
+    for job in &jobs {
+        let _ = job.request_pause();
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for job in &jobs {
+        loop {
+            let s = job.status();
+            if s == JobStatus::Paused || s.terminal() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+}
+
+/// Rebuild the job table from a state directory left by a previous
+/// daemon process. Finished jobs are restored with their persisted
+/// artifacts; interrupted jobs restart from their last checkpoint (or
+/// from scratch when none was ever taken — the explorer is seeded, so
+/// either way the final report matches an uninterrupted run).
+fn recover_jobs(state: &Arc<ServerState>) -> Result<()> {
+    let Some(dir) = &state.opts.state_dir else {
+        return Ok(());
+    };
+    let jdir = dir.join("jobs");
+    std::fs::create_dir_all(&jdir)
+        .with_context(|| format!("serve: creating state dir {}", jdir.display()))?;
+    let mut ids: Vec<u64> = Vec::new();
+    for entry in std::fs::read_dir(&jdir)
+        .with_context(|| format!("serve: reading state dir {}", jdir.display()))?
+    {
+        let entry = entry.context("serve: reading state dir entry")?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(id) = name
+            .strip_suffix(".spec.json")
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            ids.push(id);
+        }
+    }
+    ids.sort_unstable();
+    let mut max_id = 0u64;
+    for id in ids {
+        max_id = max_id.max(id);
+        let spec_text = std::fs::read_to_string(jobs::spec_path(&jdir, id))
+            .with_context(|| format!("serve: reading job {id} spec"))?;
+        let doc = Json::parse(&spec_text)
+            .map_err(|e| crate::format_err!("serve: parsing job {id} spec: {e}"))?;
+        let spec = JobSpec::from_json(&doc, state.default_workers)
+            .with_context(|| format!("serve: validating job {id} spec"))?;
+        let job = if let Ok(report) = std::fs::read_to_string(jobs::report_path(&jdir, id)) {
+            Job::recovered_terminal(id, spec, JobStatus::Done, Some(report), None)
+        } else if let Ok(final_text) = std::fs::read_to_string(jobs::final_path(&jdir, id)) {
+            let (status, error) = match Json::parse(&final_text) {
+                Ok(doc) => (
+                    doc.get("status")
+                        .and_then(|v| v.as_str())
+                        .and_then(JobStatus::parse)
+                        .unwrap_or(JobStatus::Failed),
+                    doc.get("error")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
+                ),
+                Err(_) => (JobStatus::Failed, None),
+            };
+            Job::recovered_terminal(id, spec, status, None, error)
+        } else {
+            // interrupted mid-run: restart, resuming from the last
+            // persisted checkpoint if one exists
+            let job = Job::new(id, spec);
+            let shared = Arc::clone(&state.shared);
+            let runner = Arc::clone(&job);
+            let persist = Persist {
+                dir: jdir.clone(),
+                every: state.opts.checkpoint_every,
+                resume_from: std::fs::read_to_string(jobs::ckpt_path(&jdir, id)).ok(),
+            };
+            std::thread::spawn(move || jobs::run(runner, shared, Some(persist)));
+            job
+        };
+        state
+            .jobs
+            .lock()
+            .expect("job table poisoned")
+            .insert(id, job);
+    }
+    state.next_job.store(max_id + 1, Ordering::SeqCst);
+    Ok(())
+}
+
+/// SIGTERM/SIGINT latch. Going through the raw `signal(2)` entry point
+/// keeps the crate zero-dependency; the handler only stores to an
+/// atomic, which is async-signal-safe.
+#[cfg(unix)]
+mod term_signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn latch(_signum: i32) {
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the latch for SIGTERM (15) and SIGINT (2). Idempotent.
+    pub fn install() {
+        unsafe {
+            signal(15, latch as usize);
+            signal(2, latch as usize);
+        }
+    }
+
+    /// True once a termination signal has been received.
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod term_signal {
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
     }
 }
 
 fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
     let started = Instant::now();
+    let _ = stream.set_read_timeout(Some(state.opts.read_timeout));
+    let _ = stream.set_write_timeout(Some(state.opts.write_timeout));
+    // fault injection: hold the request back as a slow client would, so
+    // the chaos suite can exercise the 408 path deterministically
+    if let Some(ms) = crate::util::faultpoint::fires("http.slow_client") {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
     let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
@@ -115,8 +369,9 @@ fn handle_connection(stream: TcpStream, state: &Arc<ServerState>) {
     let req = match http::parse_request(&mut reader) {
         Ok(r) => r,
         Err(e) => {
-            let _ = respond_error(&mut stream, 400, &format!("{e:#}"));
-            logger::request("-", "-", 400, started.elapsed());
+            let status = e.status();
+            let _ = http::write_json(&mut stream, status, &e.to_json());
+            logger::request("-", "-", status, started.elapsed());
             return;
         }
     };
@@ -250,6 +505,25 @@ fn post_job(stream: &mut TcpStream, state: &Arc<ServerState>, req: &Request) -> 
         }
     }
     let id = state.next_job.fetch_add(1, Ordering::SeqCst);
+    let persist = state.opts.state_dir.as_ref().map(|dir| Persist {
+        dir: dir.join("jobs"),
+        every: state.opts.checkpoint_every,
+        resume_from: None,
+    });
+    if let Some(p) = &persist {
+        // Journal the raw body verbatim before acknowledging: recovery
+        // re-parses exactly the bytes the client submitted, so a
+        // recovered job is indistinguishable from a fresh one.
+        let body = if req.body.ends_with('\n') {
+            req.body.clone()
+        } else {
+            format!("{}\n", req.body)
+        };
+        if let Err(e) = crate::util::atomic_write(&jobs::spec_path(&p.dir, id), body.as_bytes()) {
+            respond_error(stream, 500, &format!("serve: journaling job spec: {e:#}"))?;
+            return Ok(500);
+        }
+    }
     let job = Job::new(id, spec);
     state
         .jobs
@@ -258,7 +532,7 @@ fn post_job(stream: &mut TcpStream, state: &Arc<ServerState>, req: &Request) -> 
         .insert(id, Arc::clone(&job));
     let shared = Arc::clone(&state.shared);
     let runner = Arc::clone(&job);
-    std::thread::spawn(move || jobs::run(runner, shared));
+    std::thread::spawn(move || jobs::run(runner, shared, persist));
     let mut o = JsonObj::new();
     o.insert("id", id.into());
     o.insert("status", job.status().as_str().into());

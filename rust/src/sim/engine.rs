@@ -89,6 +89,20 @@ pub struct SimConfig {
     pub dedup: bool,
     /// Safety cap on processed events.
     pub max_events: u64,
+    /// Deterministic per-simulation event budget (`0` = off). Unlike
+    /// [`SimConfig::max_events`] — a last-resort safety net sized far
+    /// beyond any legitimate run — this is the *deadline* knob exploration
+    /// sets to bound a single candidate: exceeding it fails the
+    /// simulation with a "deadline exceeded" error, which the DSE engine
+    /// records as the candidate's [`Evaluation::error`](crate::dse::explore::Evaluation)
+    /// instead of hanging a worker. Event counts are deterministic, so
+    /// the same config fails the same candidates on every machine.
+    pub deadline_events: u64,
+    /// Wall-clock backstop in milliseconds (`0` = off), checked every few
+    /// thousand events. Catches pathologies the event budget cannot see
+    /// (e.g. an evaluator stuck between events). Nondeterministic by
+    /// nature — use `deadline_events` where reproducibility matters.
+    pub deadline_ms: u64,
     /// Use the incremental contention tracker (±1 link-occupancy deltas;
     /// only flows whose bottleneck count changed are re-derived). `false`
     /// falls back to the full per-event recompute. Both paths produce
@@ -104,6 +118,8 @@ impl Default for SimConfig {
             collect_timeline: false,
             dedup: true,
             max_events: 500_000_000,
+            deadline_events: 0,
+            deadline_ms: 0,
             incremental: true,
         }
     }
@@ -861,6 +877,11 @@ impl<'a> Engine<'a> {
             }
         }
 
+        // Wall-clock deadline state: checked on a coarse event stride so
+        // the hot loop stays free of clock reads.
+        const CLOCK_STRIDE: u64 = 4096;
+        let started = (self.cfg.deadline_ms > 0).then(std::time::Instant::now);
+
         let mut processed = 0u64;
         while let Some(Reverse((OrdF64(now), _, idx))) = self.events.pop() {
             processed += 1;
@@ -869,6 +890,22 @@ impl<'a> Engine<'a> {
                     "event cap exceeded ({} events)",
                     self.cfg.max_events
                 )));
+            }
+            if self.cfg.deadline_events > 0 && processed > self.cfg.deadline_events {
+                return Err(SimError(format!(
+                    "deadline exceeded: event budget ({} events)",
+                    self.cfg.deadline_events
+                )));
+            }
+            if let Some(t0) = started {
+                if processed % CLOCK_STRIDE == 0
+                    && t0.elapsed().as_millis() as u64 > self.cfg.deadline_ms
+                {
+                    return Err(SimError(format!(
+                        "deadline exceeded: wall clock ({} ms)",
+                        self.cfg.deadline_ms
+                    )));
+                }
             }
             match std::mem::replace(&mut self.event_payload[idx as usize], Event::ExclDone(PointId(u32::MAX), u64::MAX)) {
                 Event::Arrival(task, iter) => self.on_arrival(task, iter, now, executor),
@@ -1681,6 +1718,43 @@ mod tests {
         let r = simulate(&hw, &g, &m, &Registry::standard(), &cfg).unwrap();
         assert_eq!(r.completed, 3);
         assert!(r.makespan >= (1u64 << 50) as f64);
+    }
+
+    #[test]
+    fn event_deadline_fails_runaway_candidates_deterministically() {
+        // Ten serial compute tasks need well over 3 events; the deadline
+        // error must say so (the DSE engine surfaces that exact phrase as
+        // the candidate's failure), and a roomy budget must not perturb
+        // the result at all.
+        let hw = tiny_hw(1.0);
+        let core = hw.points_of_kind("compute")[0];
+        let mut g = TaskGraph::new();
+        let mut m = Mapping::new();
+        let mut prev = None;
+        for i in 0..10 {
+            let t = g.add(format!("t{i}"), compute_task(10.0));
+            m.map(t, core);
+            if let Some(p) = prev {
+                g.connect(p, t);
+            }
+            prev = Some(t);
+        }
+        let tight = SimConfig {
+            deadline_events: 3,
+            ..Default::default()
+        };
+        let err = simulate(&hw, &g, &m, &Registry::standard(), &tight).unwrap_err();
+        assert!(err.to_string().contains("deadline exceeded"), "{err}");
+        assert!(err.to_string().contains("3 events"), "{err}");
+
+        let roomy = SimConfig {
+            deadline_events: 1_000_000,
+            deadline_ms: 600_000,
+            ..Default::default()
+        };
+        let bounded = simulate(&hw, &g, &m, &Registry::standard(), &roomy).unwrap();
+        let free = simulate(&hw, &g, &m, &Registry::standard(), &SimConfig::default()).unwrap();
+        assert_eq!(bounded, free, "a roomy deadline must not change results");
     }
 
     #[test]

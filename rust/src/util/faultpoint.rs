@@ -1,0 +1,261 @@
+//! Deterministic fault injection for the chaos test suite.
+//!
+//! A *fault point* is a named site in production code (`eval.panic`,
+//! `worker.die`, `io.torn_write`, …) that normally does nothing. When a
+//! fault spec is installed — from the `MLDSE_FAULTS` environment variable
+//! or programmatically in tests — matching sites fire deterministically,
+//! keyed on a global per-point hit counter rather than wall-clock or OS
+//! randomness, so a given spec reproduces the exact same failure schedule
+//! on every run.
+//!
+//! ## Spec grammar
+//!
+//! Comma-separated clauses, each `point=TRIGGER[:ARG]`:
+//!
+//! * `point=N` — fire exactly once, on the Nth hit of that point
+//!   (1-based).
+//! * `point=N+` — fire on every hit from the Nth on.
+//! * `:ARG` — an optional `u64` argument handed back to the site (e.g. a
+//!   delay in milliseconds for `eval.delay`).
+//!
+//! Example: `MLDSE_FAULTS="eval.panic=3,eval.delay=1+:25,worker.die=2"`
+//! panics the 3rd evaluation, delays every evaluation by 25 ms, and kills
+//! the worker thread that claims the 2nd pool job.
+//!
+//! ## Site API
+//!
+//! Production code calls [`fires`] with its point name; `None` means
+//! "carry on" (the overwhelmingly common case — a single relaxed atomic
+//! load when no spec is installed), `Some(arg)` means "inject now".
+//!
+//! The registered fault points are listed in [`POINTS`]; [`fires`] rejects
+//! unknown names in debug builds so specs and sites cannot drift apart.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+
+/// Every fault point wired into the codebase, with the site it interrupts.
+///
+/// | Point | Site | Effect when it fires |
+/// |---|---|---|
+/// | `eval.panic` | candidate evaluation | panics the evaluator (a transient fault the engine retries) |
+/// | `eval.delay` | candidate evaluation | sleeps `ARG` milliseconds before evaluating |
+/// | `worker.die` | pool worker loop | the worker thread dies with its claimed job un-finished |
+/// | `io.torn_write` | [`crate::util::fsio::atomic_write`] | tears the temp-file write and fails before the rename |
+/// | `http.slow_client` | daemon connection handling | sleeps `ARG` milliseconds before reading the request |
+pub const POINTS: &[&str] = &[
+    "eval.panic",
+    "eval.delay",
+    "worker.die",
+    "io.torn_write",
+    "http.slow_client",
+];
+
+/// When a clause fires, relative to the point's 1-based hit count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Exactly on hit `N` (one-shot).
+    At(u64),
+    /// On every hit `>= N`.
+    From(u64),
+}
+
+#[derive(Debug, Clone)]
+struct Clause {
+    trigger: Trigger,
+    arg: u64,
+    hits: u64,
+}
+
+/// Fast path: `false` whenever no spec is installed, so production sites
+/// pay one relaxed load and nothing else.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn state() -> &'static Mutex<HashMap<String, Clause>> {
+    static STATE: OnceLock<Mutex<HashMap<String, Clause>>> = OnceLock::new();
+    STATE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Parse a spec into clauses; `Err` names the offending clause.
+fn parse(spec: &str) -> Result<HashMap<String, Clause>, String> {
+    let mut out = HashMap::new();
+    for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        let (point, trigger) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("'{clause}': want point=TRIGGER[:ARG]"))?;
+        let point = point.trim();
+        if !POINTS.contains(&point) {
+            return Err(format!(
+                "'{clause}': unknown fault point '{point}' (known: {})",
+                POINTS.join(", ")
+            ));
+        }
+        let (trigger, arg) = match trigger.split_once(':') {
+            Some((t, a)) => {
+                let arg: u64 = a
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("'{clause}': ARG '{a}' is not a u64"))?;
+                (t.trim(), arg)
+            }
+            None => (trigger.trim(), 0),
+        };
+        let trigger = if let Some(n) = trigger.strip_suffix('+') {
+            Trigger::From(parse_hit(clause, n)?)
+        } else {
+            Trigger::At(parse_hit(clause, trigger)?)
+        };
+        out.insert(
+            point.to_string(),
+            Clause {
+                trigger,
+                arg,
+                hits: 0,
+            },
+        );
+    }
+    Ok(out)
+}
+
+fn parse_hit(clause: &str, n: &str) -> Result<u64, String> {
+    let n: u64 = n
+        .trim()
+        .parse()
+        .map_err(|_| format!("'{clause}': hit count '{n}' is not a u64"))?;
+    if n == 0 {
+        return Err(format!("'{clause}': hit counts are 1-based (want >= 1)"));
+    }
+    Ok(n)
+}
+
+/// Install a fault spec, replacing any active one and resetting every hit
+/// counter. An empty spec disarms all points.
+pub fn install(spec: &str) -> Result<(), String> {
+    let clauses = parse(spec)?;
+    let armed = !clauses.is_empty();
+    *state().lock().expect("fault state poisoned") = clauses;
+    ARMED.store(armed, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm every fault point.
+pub fn clear() {
+    ARMED.store(false, Ordering::Release);
+    state().lock().expect("fault state poisoned").clear();
+}
+
+/// Install the `MLDSE_FAULTS` spec, once per process, before the first
+/// site check. A malformed spec panics: silently ignoring it would turn a
+/// chaos run into a green no-op.
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("MLDSE_FAULTS") {
+            if let Err(e) = install(&spec) {
+                panic!("MLDSE_FAULTS: {e}");
+            }
+        }
+    });
+}
+
+/// Record one hit of fault point `name`; `Some(arg)` when the installed
+/// spec says this hit fires. The no-spec fast path is a single relaxed
+/// atomic load.
+pub fn fires(name: &str) -> Option<u64> {
+    debug_assert!(POINTS.contains(&name), "unregistered fault point '{name}'");
+    init_from_env();
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    let mut points = state().lock().expect("fault state poisoned");
+    let clause = points.get_mut(name)?;
+    clause.hits += 1;
+    let fire = match clause.trigger {
+        Trigger::At(n) => clause.hits == n,
+        Trigger::From(n) => clause.hits >= n,
+    };
+    fire.then_some(clause.arg)
+}
+
+/// Guard for in-process fault tests: holds a global lock so concurrently
+/// running tests cannot observe each other's faults, installs `spec`, and
+/// disarms everything on drop.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+/// Serialize in-process fault tests (the spec state is process-global).
+/// Recovers from a poisoned lock: the previous test already failed, and
+/// its panic must not cascade.
+pub fn test_guard(spec: &str) -> FaultGuard {
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    let lock = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    install(spec).expect("test fault spec");
+    FaultGuard { _lock: lock }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests install specs over `io.torn_write` and
+    // `http.slow_client` only — points no concurrently running lib test
+    // hits unguarded. Arming e.g. `eval.panic` here would let a parallel
+    // engine test consume (or trip over) our hits.
+
+    #[test]
+    fn one_shot_fires_exactly_once_at_the_nth_hit() {
+        let _g = test_guard("io.torn_write=3:7");
+        assert_eq!(fires("io.torn_write"), None);
+        assert_eq!(fires("io.torn_write"), None);
+        assert_eq!(fires("io.torn_write"), Some(7));
+        assert_eq!(fires("io.torn_write"), None);
+        // points absent from the spec never fire while another is armed
+        assert_eq!(fires("http.slow_client"), None);
+    }
+
+    #[test]
+    fn open_ended_trigger_fires_from_n_onward() {
+        let _g = test_guard("http.slow_client=2+:25");
+        assert_eq!(fires("http.slow_client"), None);
+        assert_eq!(fires("http.slow_client"), Some(25));
+        assert_eq!(fires("http.slow_client"), Some(25));
+    }
+
+    #[test]
+    fn install_replaces_and_resets_counters() {
+        let _g = test_guard("io.torn_write=1");
+        assert_eq!(fires("io.torn_write"), Some(0));
+        install("io.torn_write=1").unwrap();
+        assert_eq!(fires("io.torn_write"), Some(0), "counters reset on install");
+        install("").unwrap();
+        assert_eq!(fires("io.torn_write"), None, "empty spec disarms");
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_the_offending_clause() {
+        for bad in [
+            "eval.panic",
+            "nope.nope=1",
+            "eval.panic=x",
+            "eval.panic=0",
+            "eval.delay=1:y",
+        ] {
+            let err = parse(bad).unwrap_err();
+            assert!(err.contains(bad), "{err:?} should name '{bad}'");
+        }
+        // a valid multi-clause spec parses whole
+        let spec = parse("eval.panic=3, worker.die=1+, io.torn_write=2:9").unwrap();
+        assert_eq!(spec.len(), 3);
+        assert_eq!(spec["eval.panic"].trigger, Trigger::At(3));
+        assert_eq!(spec["worker.die"].trigger, Trigger::From(1));
+        assert_eq!(spec["io.torn_write"].arg, 9);
+    }
+}

@@ -1,0 +1,122 @@
+//! Crash-safe file persistence.
+//!
+//! Every durable artifact the toolchain writes — exploration checkpoints,
+//! the daemon's job journal, bench summaries — goes through
+//! [`atomic_write`]: readers observe either the complete previous content
+//! or the complete new content, never a torn prefix, even if the process
+//! dies mid-write. The `io.torn_write` fault point
+//! ([`crate::util::faultpoint`]) simulates exactly that death for the
+//! chaos suite.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::faultpoint;
+
+/// A process-unique temp sibling for `path` (same directory, so the final
+/// rename never crosses a filesystem boundary).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".tmp.{}.{n}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` atomically: write a temp sibling, fsync it,
+/// rename it over `path`, then fsync the directory so the rename itself
+/// survives a crash. A crash (or injected `io.torn_write` fault) at any
+/// step leaves `path` untouched.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = tmp_sibling(path);
+    let result = write_via_tmp(&tmp, path, bytes);
+    if result.is_err() {
+        // best effort: the temp file is garbage either way
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn write_via_tmp(tmp: &Path, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut f = OpenOptions::new().write(true).create_new(true).open(tmp)?;
+    if faultpoint::fires("io.torn_write").is_some() {
+        // simulate dying mid-write: a torn prefix lands in the TEMP file
+        // and the rename never happens — the destination keeps its old
+        // content, which is the whole point of this function
+        f.write_all(&bytes[..bytes.len() / 2])?;
+        f.sync_all()?;
+        return Err(io::Error::new(
+            io::ErrorKind::Interrupted,
+            "injected fault: io.torn_write",
+        ));
+    }
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(tmp, path)?;
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        // directory fsync durably records the rename; best effort on
+        // filesystems that refuse to fsync a directory handle
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mldse_fsio_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_replaces_content() {
+        // guard (with an empty spec) so a concurrently running torn-write
+        // test cannot tear THIS test's writes
+        let _g = faultpoint::test_guard("");
+        let dir = tmp_dir("basic");
+        let path = dir.join("out.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer content").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second, longer content");
+        // no temp droppings left behind
+        let names: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(names, vec![std::ffi::OsString::from("out.json")]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_write_fault_leaves_the_destination_intact() {
+        let dir = tmp_dir("torn");
+        let path = dir.join("ckpt.json");
+        atomic_write(&path, b"the good checkpoint").unwrap();
+
+        let _g = faultpoint::test_guard("io.torn_write=1");
+        let err = atomic_write(&path, b"half of this never lands").unwrap_err();
+        assert!(err.to_string().contains("io.torn_write"), "{err}");
+        // the destination still holds the previous complete content —
+        // a plain std::fs::write would now hold a torn prefix
+        assert_eq!(fs::read(&path).unwrap(), b"the good checkpoint");
+
+        // the fault was one-shot: the next write succeeds
+        atomic_write(&path, b"recovered").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"recovered");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

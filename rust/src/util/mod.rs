@@ -16,11 +16,19 @@
 //! * [`logger`] — leveled stderr logging with an env switch (`MLDSE_LOG`).
 //! * [`densemap`] — `Vec`-backed maps over dense id keys with stable
 //!   iteration order (the simulator result maps).
+//! * [`faultpoint`] — deterministic fault injection (`MLDSE_FAULTS`) for
+//!   the chaos test suite.
+//! * [`fsio`] — crash-safe persistence ([`atomic_write`]: tmp + fsync +
+//!   rename) for checkpoints, journals and summaries.
 
 pub mod densemap;
 pub mod error;
+pub mod faultpoint;
+pub mod fsio;
 pub mod json;
 pub mod logger;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+
+pub use fsio::atomic_write;

@@ -1,0 +1,431 @@
+//! Chaos suite: the supervised exploration runtime under deterministic
+//! fault injection ([`mldse::util::faultpoint`]).
+//!
+//! Three acceptance scenarios from the robustness work:
+//!
+//! 1. transient evaluator faults (`eval.panic`) are retried and the
+//!    final report is **byte-identical** (timing and the `retries`
+//!    incident counter stripped) to a fault-free run;
+//! 2. a worker killed mid-batch (`worker.die`) has its job rescued, a
+//!    replacement worker respawned, and the exploration completes with
+//!    an identical report;
+//! 3. a daemon SIGKILLed mid-job and restarted over the same
+//!    `--state-dir` recovers the job from its journaled spec and last
+//!    checkpoint, and the recovered report is identical to an
+//!    uninterrupted run.
+//!
+//! In-process tests serialize through [`faultpoint::test_guard`] — the
+//! fault state is process-global, and an unguarded engine run would
+//! consume another test's scheduled hits.
+
+use std::time::{Duration, Instant};
+
+use mldse::dse::explore::{explorer_by_name, preset, ExplorationSession, ExploreOpts};
+use mldse::dse::parallel::{JobOutcome, WorkerPool};
+use mldse::eval::Registry;
+use mldse::util::faultpoint;
+use mldse::util::json::Json;
+
+/// Run one exploration of the `mapping` preset to completion and return
+/// the pretty-printed report JSON.
+fn run_report(explorer_name: &str, seed: u64, opts: &ExploreOpts) -> String {
+    let (space, objectives) = preset("mapping").expect("mapping preset");
+    let explorer = explorer_by_name(explorer_name, seed).expect("explorer");
+    let registry = Registry::standard();
+    std::thread::scope(|scope| {
+        let mut session = ExplorationSession::new_in(
+            scope,
+            space.as_ref(),
+            &objectives,
+            explorer.as_ref(),
+            &registry,
+            opts,
+            None,
+        )
+        .expect("session");
+        while session.step() {}
+        format!("{}\n", session.into_report(0.0).to_json().to_pretty())
+    })
+}
+
+/// Drop the wall-clock lines and the `retries` incident counter from a
+/// pretty report — everything else must be bit-identical under faults.
+fn strip_nondeterministic(report: &str) -> String {
+    report
+        .lines()
+        .filter(|l| {
+            let t = l.trim_start();
+            !t.starts_with("\"elapsed_secs\"")
+                && !t.starts_with("\"setup_ms\"")
+                && !t.starts_with("\"steady_ms\"")
+                && !t.starts_with("\"evals_per_sec")
+                && !t.starts_with("\"retries\"")
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn counter(report: &str, key: &str) -> u64 {
+    Json::parse(report)
+        .expect("report JSON")
+        .get(key)
+        .and_then(|v| v.as_u64())
+        .unwrap_or_else(|| panic!("no '{key}' in report"))
+}
+
+#[test]
+fn retried_transient_eval_faults_leave_the_report_byte_identical() {
+    let _g = faultpoint::test_guard("");
+    let opts = ExploreOpts {
+        budget: 12,
+        workers: 2,
+        retry_backoff_ms: 0,
+        ..Default::default()
+    };
+    let clean = run_report("anneal", 17, &opts);
+    assert_eq!(counter(&clean, "retries"), 0, "fault-free run retried");
+
+    // the very first evaluator invocation panics; the engine retries it
+    faultpoint::install("eval.panic=1").expect("fault spec");
+    let faulted = run_report("anneal", 17, &opts);
+    faultpoint::install("").expect("disarm");
+
+    assert!(
+        counter(&faulted, "retries") >= 1,
+        "the injected panic was never retried:\n{faulted}"
+    );
+    assert_eq!(
+        counter(&faulted, "failures"),
+        counter(&clean, "failures"),
+        "a retried transient fault must not surface as a failure"
+    );
+    assert_eq!(
+        strip_nondeterministic(&clean),
+        strip_nondeterministic(&faulted),
+        "retried faults perturbed the report"
+    );
+}
+
+#[test]
+fn killed_worker_is_rescued_respawned_and_the_pool_keeps_working() {
+    let _g = faultpoint::test_guard("worker.die=1");
+    std::thread::scope(|scope| {
+        let mut pool: WorkerPool<'_, u64, u64> = WorkerPool::new(scope, 2, || (), |_, x| *x * 3);
+        for x in 0..12 {
+            pool.submit(x);
+        }
+        let results = pool.drain();
+        assert_eq!(results.len(), 12, "drain lost jobs after a worker death");
+        let mut rescued = 0;
+        for (slot, (id, outcome)) in results.iter().enumerate() {
+            assert_eq!(*id, slot as u64, "submission order broken");
+            match outcome {
+                JobOutcome::Done(v) => assert_eq!(*v, *id * 3),
+                JobOutcome::Panicked(msg) => {
+                    rescued += 1;
+                    assert!(msg.contains("rescued"), "{msg}");
+                }
+            }
+        }
+        assert_eq!(rescued, 1, "exactly the claimed job is rescued");
+
+        // the supervisor replaces the dead worker (asynchronously)
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while pool.respawned() < 1 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pool.respawned(), 1, "dead worker never respawned");
+
+        // full capacity survives: a second round completes clean
+        for x in 100..124u64 {
+            pool.submit(x);
+        }
+        for (_, outcome) in pool.drain() {
+            match outcome {
+                JobOutcome::Done(_) => {}
+                JobOutcome::Panicked(msg) => panic!("post-respawn job failed: {msg}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn worker_death_mid_exploration_is_retried_to_an_identical_report() {
+    let _g = faultpoint::test_guard("");
+    // grid + multi-candidate batches so the streaming pool (the path a
+    // worker death interrupts) actually carries the evaluations
+    let opts = ExploreOpts {
+        budget: 16,
+        workers: 3,
+        retry_backoff_ms: 0,
+        ..Default::default()
+    };
+    let clean = run_report("grid", 0, &opts);
+
+    faultpoint::install("worker.die=2").expect("fault spec");
+    let faulted = run_report("grid", 0, &opts);
+    faultpoint::install("").expect("disarm");
+
+    assert!(
+        counter(&faulted, "retries") >= 1,
+        "the rescued job was never retried:\n{faulted}"
+    );
+    assert_eq!(
+        strip_nondeterministic(&clean),
+        strip_nondeterministic(&faulted),
+        "a worker death perturbed the report"
+    );
+}
+
+#[test]
+fn deadline_bounded_evaluation_fails_runaways_deterministically() {
+    let _g = faultpoint::test_guard("");
+    let mut opts = ExploreOpts {
+        budget: 6,
+        workers: 1,
+        ..Default::default()
+    };
+    // far too few events for any real candidate: every evaluation is a
+    // "runaway" and must surface as an error, not a hang
+    opts.sim.deadline_events = 3;
+    let a = run_report("grid", 0, &opts);
+    let b = run_report("grid", 0, &opts);
+    assert_eq!(counter(&a, "failures"), 6, "{a}");
+    assert_eq!(counter(&a, "retries"), 0, "deadline errors are deterministic, never retried");
+    assert!(a.contains("deadline exceeded"), "{a}");
+    assert_eq!(
+        strip_nondeterministic(&a),
+        strip_nondeterministic(&b),
+        "the event-budget verdict must be machine-independent"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Scenario 3: daemon SIGKILL + restart recovery (subprocess, unix-only).
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod daemon {
+    use super::*;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use std::path::{Path, PathBuf};
+    use std::process::{Child, ChildStdout, Command, Stdio};
+
+    struct Daemon {
+        child: Child,
+        /// Kept open so the daemon's request log never hits a closed pipe.
+        _stdout: BufReader<ChildStdout>,
+        port: u16,
+    }
+
+    impl Drop for Daemon {
+        fn drop(&mut self) {
+            let _ = self.child.kill();
+            let _ = self.child.wait();
+        }
+    }
+
+    fn spawn_daemon(state_dir: Option<&Path>, faults: Option<&str>) -> Daemon {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_mldse"));
+        cmd.arg("serve")
+            .arg("--port")
+            .arg("0")
+            .arg("--workers")
+            .arg("2")
+            .arg("--checkpoint-every")
+            .arg("1")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .env_remove("MLDSE_FAULTS");
+        if let Some(dir) = state_dir {
+            cmd.arg("--state-dir").arg(dir);
+        }
+        if let Some(spec) = faults {
+            cmd.env("MLDSE_FAULTS", spec);
+        }
+        let mut child = cmd.spawn().expect("spawn mldse serve");
+        let mut stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+        let mut line = String::new();
+        stdout.read_line(&mut line).expect("daemon announce line");
+        let port: u16 = line
+            .split("127.0.0.1:")
+            .nth(1)
+            .and_then(|rest| {
+                let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+                digits.parse().ok()
+            })
+            .unwrap_or_else(|| panic!("no port in daemon announce line {line:?}"));
+        Daemon {
+            child,
+            _stdout: stdout,
+            port,
+        }
+    }
+
+    /// One HTTP exchange against the daemon; returns (status, body).
+    fn request(port: u16, method: &str, path: &str, body: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .expect("send request");
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("read response");
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        let status: u16 = head
+            .lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or_else(|| panic!("no status line in {head:?}"));
+        (status, body.to_string())
+    }
+
+    fn job_field(port: u16, id: u64, key: &str) -> u64 {
+        let (code, body) = request(port, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body)
+            .expect("status JSON")
+            .get(key)
+            .and_then(|v| v.as_u64())
+            .unwrap_or(0)
+    }
+
+    fn job_status(port: u16, id: u64) -> String {
+        let (code, body) = request(port, "GET", &format!("/jobs/{id}"), "");
+        assert_eq!(code, 200, "{body}");
+        Json::parse(&body)
+            .expect("status JSON")
+            .get("status")
+            .and_then(|v| v.as_str())
+            .expect("status field")
+            .to_string()
+    }
+
+    fn wait_done(port: u16, id: u64) {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            let status = job_status(port, id);
+            if status == "done" {
+                return;
+            }
+            assert!(
+                !["failed", "cancelled"].contains(&status.as_str()),
+                "job {id} ended '{status}'"
+            );
+            assert!(Instant::now() < deadline, "timed out waiting for job {id}");
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    fn report(port: u16, id: u64) -> String {
+        let (code, body) = request(port, "GET", &format!("/jobs/{id}/report"), "");
+        assert_eq!(code, 200, "{body}");
+        body
+    }
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mldse-chaos-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("create state dir");
+        dir
+    }
+
+    const SPEC: &str =
+        r#"{"preset": "mapping", "explorer": "anneal", "budget": 30, "seed": 17, "workers": 2}"#;
+
+    #[test]
+    fn sigkill_and_restart_recover_the_job_bit_identically() {
+        let state = fresh_dir("recovery");
+
+        // Daemon A: every evaluation slowed 40 ms so the kill lands
+        // mid-job, checkpoints persisted every batch.
+        let a = spawn_daemon(Some(&state), Some("eval.delay=1+:40"));
+        let (code, body) = request(a.port, "POST", "/jobs", SPEC);
+        assert_eq!(code, 201, "{body}");
+        let id = Json::parse(&body)
+            .expect("submit JSON")
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .expect("job id");
+
+        // wait for real progress AND a durable checkpoint, then SIGKILL
+        let ckpt = state.join("jobs").join(format!("{id}.ckpt.json"));
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            if job_field(a.port, id, "evals") >= 6 && ckpt.exists() {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "job never progressed to a persisted checkpoint"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        drop(a); // SIGKILL via Drop — no drain, no goodbye
+
+        // Daemon B over the same state dir, no faults: the job must be
+        // recovered from its journaled spec + checkpoint and finish.
+        let b = spawn_daemon(Some(&state), None);
+        wait_done(b.port, id);
+        let recovered = report(b.port, id);
+        let (code, _) = request(b.port, "POST", "/shutdown", "");
+        assert_eq!(code, 200);
+
+        // the terminal report was persisted for any future restart
+        assert!(
+            state.join("jobs").join(format!("{id}.report.json")).exists(),
+            "terminal report artifact missing"
+        );
+
+        // Control: the identical spec, uninterrupted, no persistence.
+        let c = spawn_daemon(None, None);
+        let (code, body) = request(c.port, "POST", "/jobs", SPEC);
+        assert_eq!(code, 201, "{body}");
+        let control_id = Json::parse(&body)
+            .expect("submit JSON")
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .expect("job id");
+        wait_done(c.port, control_id);
+        let control = report(c.port, control_id);
+
+        assert_eq!(
+            strip_nondeterministic(&recovered),
+            strip_nondeterministic(&control),
+            "kill + restart recovery perturbed the exploration"
+        );
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn restart_restores_finished_jobs_without_rerunning_them() {
+        let state = fresh_dir("terminal");
+
+        let a = spawn_daemon(Some(&state), None);
+        let (code, body) = request(a.port, "POST", "/jobs", SPEC);
+        assert_eq!(code, 201, "{body}");
+        let id = Json::parse(&body)
+            .expect("submit JSON")
+            .get("id")
+            .and_then(|v| v.as_u64())
+            .expect("job id");
+        wait_done(a.port, id);
+        let first = report(a.port, id);
+        drop(a); // SIGKILL — the report artifact is already on disk
+
+        let b = spawn_daemon(Some(&state), None);
+        assert_eq!(job_status(b.port, id), "done", "finished job not recovered");
+        let second = report(b.port, id);
+        assert_eq!(first, second, "recovered report differs from the original");
+        let (code, _) = request(b.port, "POST", "/shutdown", "");
+        assert_eq!(code, 200);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+}

@@ -9,18 +9,27 @@
 //! * pause → checkpoint → resume over HTTP, bit-identical (modulo
 //!   wall-clock fields) to an uninterrupted job;
 //! * malformed submissions and control requests fail with 4xx statuses,
-//!   never a wedged job.
+//!   never a wedged job;
+//! * hardening: slow-loris clients get 408, oversized bodies 413, and
+//!   connections beyond the cap are shed with 503.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use mldse::serve::Server;
+use mldse::serve::{ServeOpts, Server};
 use mldse::util::json::Json;
 
 fn start_server() -> u16 {
     let server = Server::bind(0, 2).expect("bind ephemeral port");
+    let port = server.port();
+    thread::spawn(move || server.run().expect("server run"));
+    port
+}
+
+fn start_server_with(opts: ServeOpts) -> u16 {
+    let server = Server::bind_with(0, 2, opts).expect("bind ephemeral port");
     let port = server.port();
     thread::spawn(move || server.run().expect("server run"));
     port
@@ -359,4 +368,80 @@ fn bad_requests_fail_with_4xx() {
     // a finished job without a pause has no checkpoint
     let (code, body) = request(port, "GET", &format!("/jobs/{id}/checkpoint"), "");
     assert_eq!(code, 409, "{body}");
+}
+
+#[test]
+fn slow_loris_requests_time_out_with_408() {
+    let opts = ServeOpts {
+        read_timeout: Duration::from_millis(150),
+        ..ServeOpts::default()
+    };
+    let port = start_server_with(opts);
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    // a request that trickles in and then stalls mid-header
+    stream
+        .write_all(b"POST /jobs HTTP/1.1\r\nContent-Le")
+        .expect("partial write");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    assert!(raw.starts_with("HTTP/1.1 408 "), "{raw}");
+    assert!(raw.contains("timed out reading the request"), "{raw}");
+}
+
+#[test]
+fn oversized_submissions_are_rejected_with_413() {
+    let port = start_server();
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    // the cap is enforced from the declared length, before any body
+    // bytes are read or buffered — no payload needs to be sent
+    write!(
+        stream,
+        "POST /jobs HTTP/1.1\r\nHost: x\r\nContent-Length: 999999999\r\n\r\n"
+    )
+    .expect("send headers");
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    assert!(raw.starts_with("HTTP/1.1 413 "), "{raw}");
+    let (_, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+    let doc = parse_json(body);
+    assert_eq!(
+        doc.get("declared_bytes").and_then(|v| v.as_u64()),
+        Some(999_999_999),
+        "{body}"
+    );
+    assert!(
+        doc.get("limit_bytes").and_then(|v| v.as_u64()).unwrap_or(0) > 0,
+        "{body}"
+    );
+}
+
+#[test]
+fn connection_cap_sheds_load_with_503() {
+    let opts = ServeOpts {
+        max_connections: 1,
+        ..ServeOpts::default()
+    };
+    let port = start_server_with(opts);
+    // occupy the single slot with an idle connection...
+    let hog = TcpStream::connect(("127.0.0.1", port)).expect("connect hog");
+    thread::sleep(Duration::from_millis(300)); // let the accept loop claim the slot
+    // ...so the next request is shed instead of queued behind it
+    let (code, body) = request(port, "GET", "/healthz", "");
+    assert_eq!(code, 503, "{body}");
+    assert!(body.contains("capacity"), "{body}");
+
+    // the slot frees as soon as the hog disconnects; service resumes
+    drop(hog);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (code, _) = request(port, "GET", "/healthz", "");
+        if code == 200 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "connection slot never freed after the client disconnected"
+        );
+        thread::sleep(Duration::from_millis(25));
+    }
 }
