@@ -140,6 +140,9 @@ pub const E050_SCENARIO_INVALID: &str = "MLDSE-E050";
 pub const W051_PARTIAL_GRID: &str = "MLDSE-W051";
 /// A custom scenario's space file is missing or unparseable.
 pub const E052_SCENARIO_SPACE_FILE: &str = "MLDSE-E052";
+/// Surrogate warmup meets or exceeds the run budget, so the gate would
+/// never skip a single simulation.
+pub const W053_SURROGATE_WARMUP: &str = "MLDSE-W053";
 /// Task-graph integrity: a tombstone slot still has incident edges.
 pub const E060_TOMBSTONE_EDGES: &str = "MLDSE-E060";
 /// Task-graph integrity: an edge references a deleted task.
@@ -171,6 +174,7 @@ pub const CODE_TABLE: &[(&str, Severity, &str)] = &[
     (E050_SCENARIO_INVALID, Severity::Error, "scenario fails to validate"),
     (W051_PARTIAL_GRID, Severity::Warning, "grid budget below the space size (partial sweep)"),
     (E052_SCENARIO_SPACE_FILE, Severity::Error, "scenario space file missing or unparseable"),
+    (W053_SURROGATE_WARMUP, Severity::Warning, "surrogate warmup meets or exceeds the budget (gate never skips)"),
     (E060_TOMBSTONE_EDGES, Severity::Error, "task-graph tombstone has incident edges"),
     (E061_DANGLING_EDGE, Severity::Error, "task-graph edge references a deleted task"),
     (E062_ASYMMETRIC_EDGE, Severity::Error, "task-graph adjacency lists disagree"),

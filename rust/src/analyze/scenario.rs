@@ -96,6 +96,32 @@ pub fn check_scenario(s: &Scenario) -> Vec<Diagnostic> {
         }
     }
 
+    if s.overrides.surrogate == Some(true) {
+        // Warmup forwards every proposal to the exact simulator; once it
+        // meets the budget the gate never makes a single decision, so the
+        // scenario pays the surrogate's training cost for zero skips.
+        let warmup = s
+            .overrides
+            .surrogate_warmup
+            .unwrap_or_else(|| crate::dse::explore::SurrogateCfg::with_seed(0).warmup);
+        let mut checked: Vec<usize> = Vec::new();
+        for (quick, label) in [(false, "budget"), (true, "quick_budget")] {
+            let budget = s.effective_budget(quick);
+            if warmup >= budget && !checked.contains(&budget) {
+                checked.push(budget);
+                diags.push(Diagnostic::warning(
+                    diag::W053_SURROGATE_WARMUP,
+                    label,
+                    format!(
+                        "surrogate warmup {warmup} meets or exceeds the {label} of \
+                         {budget}, so every candidate is simulated exactly and the \
+                         gate never skips; lower the warmup or disable the surrogate"
+                    ),
+                ));
+            }
+        }
+    }
+
     diag::sort(&mut diags);
     diags
 }
@@ -150,6 +176,47 @@ mod tests {
         let d = check(
             r#"{"name": "s", "family": "mapping", "explorer": "anneal",
                 "budget": 128, "quick_budget": 24}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn surrogate_warmup_at_or_over_budget_is_w053() {
+        // default warmup (12) >= quick_budget 8: only the quick mode warns
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "anneal",
+                "budget": 64, "quick_budget": 8,
+                "overrides": {"surrogate": true}}"#,
+        );
+        let w: Vec<_> = d.iter().filter(|x| x.code == diag::W053_SURROGATE_WARMUP).collect();
+        assert_eq!(w.len(), 1, "{d:?}");
+        assert_eq!(w[0].at, "quick_budget");
+        assert!(w[0].message.contains("warmup 12"), "{}", w[0].message);
+
+        // explicit warmup over both budgets warns once per distinct budget
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "anneal",
+                "budget": 16, "quick_budget": 8,
+                "overrides": {"surrogate": true, "surrogate_warmup": 20}}"#,
+        );
+        assert_eq!(
+            d.iter().filter(|x| x.code == diag::W053_SURROGATE_WARMUP).count(),
+            2,
+            "{d:?}"
+        );
+
+        // warmup safely under the budget: clean
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "anneal",
+                "budget": 64, "quick_budget": 24,
+                "overrides": {"surrogate": true, "surrogate_warmup": 6}}"#,
+        );
+        assert!(d.is_empty(), "{d:?}");
+
+        // surrogate off: no warning regardless of budget
+        let d = check(
+            r#"{"name": "s", "family": "mapping", "explorer": "anneal",
+                "budget": 4}"#,
         );
         assert!(d.is_empty(), "{d:?}");
     }

@@ -282,6 +282,7 @@ mod tests {
             retries: 0,
             setup_builds: 1,
             setup_hits: 9,
+            skipped: 0,
             fingerprint,
             run_fingerprints: vec![fingerprint ^ 1, fingerprint ^ 2],
             best_scores: vec![1.0, 2.0],

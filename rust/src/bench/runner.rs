@@ -38,7 +38,7 @@ fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
 }
 
 /// FNV-1a fingerprint of an evaluation log: candidate digits, objective
-/// bit patterns, cache flags and failure flags, in exploration order.
+/// bit patterns, cache/failure/skip flags, in exploration order.
 /// Deterministic across worker counts and dispatch paths because the log
 /// itself is; any bit-level result divergence changes the value.
 pub fn log_fingerprint(log: &[Evaluation]) -> u64 {
@@ -50,7 +50,7 @@ pub fn log_fingerprint(log: &[Evaluation]) -> u64 {
         for v in &e.objectives {
             h = fnv1a(h, &v.to_bits().to_le_bytes());
         }
-        h = fnv1a(h, &[e.cached as u8, e.error.is_some() as u8]);
+        h = fnv1a(h, &[e.cached as u8, e.error.is_some() as u8, e.skipped as u8]);
     }
     h
 }
@@ -70,6 +70,9 @@ pub struct SeedRun {
     pub retries: usize,
     pub setup_builds: usize,
     pub setup_hits: usize,
+    /// Proposals the surrogate gate skipped without exact simulation
+    /// (0 for surrogate-off scenarios).
+    pub skipped: usize,
     /// Best first-objective score (`f64::INFINITY` when every evaluation
     /// failed; absent runs are impossible — budget ≥ 1 is validated).
     pub best_score: f64,
@@ -133,6 +136,12 @@ impl ScenarioResult {
         self.runs.iter().map(|r| r.cache_hits).sum::<usize>() as f64 / evals as f64
     }
 
+    /// Proposals the surrogate gate skipped, summed over every seed
+    /// (0 for surrogate-off scenarios).
+    pub fn skipped_total(&self) -> usize {
+        self.runs.iter().map(|r| r.skipped).sum()
+    }
+
     /// Fraction of simulations that reused an already-built setup.
     pub fn setup_hit_rate(&self) -> f64 {
         let sims: usize = self.runs.iter().map(|r| r.sim_calls).sum();
@@ -156,7 +165,7 @@ pub fn run_scenario(
     let workers = resolve_workers(workers_override.unwrap_or(scenario.workers))
         .with_context(|| format!("bench scenario '{}'", scenario.name))?;
     let defaults = ExploreOpts::default();
-    let opts = ExploreOpts {
+    let base_opts = ExploreOpts {
         budget: scenario.effective_budget(quick),
         workers,
         cache: scenario.overrides.cache.unwrap_or(defaults.cache),
@@ -170,6 +179,7 @@ pub fn run_scenario(
         retry_max: defaults.retry_max,
         retry_backoff_ms: defaults.retry_backoff_ms,
         retry_backoff_cap_ms: defaults.retry_backoff_cap_ms,
+        surrogate: None, // seeded per run below
     };
     let registry = Registry::standard();
 
@@ -178,6 +188,12 @@ pub fn run_scenario(
     for seed in scenario.seeds.expand() {
         let explorer = explorer_by_name(&scenario.explorer, seed)
             .with_context(|| format!("bench scenario '{}'", scenario.name))?;
+        // the gate's training RNG derives from the run's own seed, so
+        // every seed gets a fresh, reproducible surrogate
+        let opts = ExploreOpts {
+            surrogate: scenario.overrides.surrogate_cfg(seed),
+            ..base_opts.clone()
+        };
         let start = Instant::now();
         let (report, batch_ms) = std::thread::scope(|scope| -> Result<_> {
             let mut session = ExplorationSession::new_in(
@@ -219,6 +235,7 @@ pub fn run_scenario(
             retries: report.retries,
             setup_builds: report.setup_builds,
             setup_hits: report.setup_hits,
+            skipped: report.skipped,
             best_score: best.map(|e| e.objectives[0]).unwrap_or(f64::INFINITY),
             best_label: best.map(|e| e.label.clone()).unwrap_or_default(),
             fingerprint: log_fingerprint(&report.evals),
@@ -238,7 +255,7 @@ pub fn run_scenario(
         name: scenario.name.clone(),
         family: scenario.family.name().to_string(),
         explorer: scenario.explorer.clone(),
-        budget: opts.budget,
+        budget: base_opts.budget,
         workers,
         space_size: space.size(),
         runs,
@@ -259,6 +276,7 @@ mod tests {
             label: "t".into(),
             objectives,
             cached,
+            skipped: false,
             error: None,
         }
     }
@@ -282,6 +300,11 @@ mod tests {
         let mut flags = log.clone();
         flags[1].cached = false;
         assert_ne!(fp, log_fingerprint(&flags));
+
+        // and so are surrogate skip flags
+        let mut skips = log.clone();
+        skips[0].skipped = true;
+        assert_ne!(fp, log_fingerprint(&skips));
 
         // order matters (the log is exploration-ordered)
         let swapped = vec![log[1].clone(), log[0].clone()];
@@ -324,6 +347,26 @@ mod tests {
         }
         // different seeds explore differently — the per-seed prints differ
         assert_ne!(a.runs[0].fingerprint, a.runs[1].fingerprint);
+    }
+
+    #[test]
+    fn surrogate_scenario_skips_and_stays_deterministic() {
+        let doc = Json::parse(
+            "{\"name\": \"t\", \"family\": \"mapping\", \"explorer\": \"anneal\", \
+             \"budget\": 32, \"seeds\": [5], \"overrides\": {\"batch\": 4, \
+             \"surrogate\": true, \"surrogate_warmup\": 6, \"surrogate_keep\": 0.5, \
+             \"surrogate_probe_every\": 4}}",
+        )
+        .unwrap();
+        let scenario = Scenario::from_json(&doc, "inline").unwrap();
+        let a = run_scenario(&scenario, true, None).unwrap();
+        let b = run_scenario(&scenario, true, Some(2)).unwrap();
+        assert!(a.runs[0].skipped > 0, "gate never skipped: {:?}", a.runs[0]);
+        assert_eq!(a.runs[0].skipped, b.runs[0].skipped);
+        assert_eq!(
+            a.fingerprint, b.fingerprint,
+            "surrogate gating must stay bit-identical across worker counts"
+        );
     }
 
     #[test]

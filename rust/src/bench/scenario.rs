@@ -27,7 +27,7 @@ use std::path::{Path, PathBuf};
 
 use crate::dse::explore::{
     explorer_by_name, objectives_from_json, preset, space_from_json_value, DesignSpace, Edp,
-    Makespan, Objective,
+    Makespan, Objective, SurrogateCfg,
 };
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
@@ -134,12 +134,42 @@ impl SeedSpec {
 
 /// Optional [`crate::dse::explore::ExploreOpts`] overrides a scenario may
 /// set; anything left `None` keeps the engine default.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Overrides {
     pub batch: Option<usize>,
     pub cache: Option<bool>,
     pub streaming: Option<bool>,
     pub setup_reuse: Option<bool>,
+    /// Gate proposals through the learned surrogate
+    /// ([`crate::dse::explore::SurrogateCfg`]); the sub-knobs below are
+    /// only valid when this is `true`.
+    pub surrogate: Option<bool>,
+    pub surrogate_warmup: Option<usize>,
+    /// Keep fraction in `(0, 1]` (the CLI flag takes a percentage; the
+    /// scenario file takes the fraction, matching the config struct).
+    pub surrogate_keep: Option<f64>,
+    pub surrogate_probe_every: Option<usize>,
+}
+
+impl Overrides {
+    /// The surrogate configuration for one run, seeded with that run's
+    /// exploration seed. `None` when the scenario leaves gating off.
+    pub fn surrogate_cfg(&self, seed: u64) -> Option<SurrogateCfg> {
+        if self.surrogate != Some(true) {
+            return None;
+        }
+        let mut cfg = SurrogateCfg::with_seed(seed);
+        if let Some(w) = self.surrogate_warmup {
+            cfg.warmup = w;
+        }
+        if let Some(k) = self.surrogate_keep {
+            cfg.keep = k;
+        }
+        if let Some(p) = self.surrogate_probe_every {
+            cfg.probe_every = p;
+        }
+        Some(cfg)
+    }
 }
 
 /// One parsed, validated bench scenario.
@@ -179,7 +209,16 @@ const SCENARIO_KEYS: &[&str] = &[
     "overrides",
 ];
 
-const OVERRIDE_KEYS: &[&str] = &["batch", "cache", "streaming", "setup_reuse"];
+const OVERRIDE_KEYS: &[&str] = &[
+    "batch",
+    "cache",
+    "streaming",
+    "setup_reuse",
+    "surrogate",
+    "surrogate_warmup",
+    "surrogate_keep",
+    "surrogate_probe_every",
+];
 
 macro_rules! field_err {
     ($origin:expr, $field:expr, $($arg:tt)*) => {
@@ -386,6 +425,58 @@ impl Scenario {
                             field_err!(origin, "overrides.setup_reuse", "expected a boolean")
                         })?)
                     }
+                    "surrogate" => {
+                        overrides.surrogate = Some(value.as_bool().ok_or_else(|| {
+                            field_err!(origin, "overrides.surrogate", "expected a boolean")
+                        })?)
+                    }
+                    "surrogate_warmup" => {
+                        let w = value.as_usize().ok_or_else(|| {
+                            field_err!(
+                                origin,
+                                "overrides.surrogate_warmup",
+                                "expected an unsigned integer"
+                            )
+                        })?;
+                        if w == 0 {
+                            return Err(field_err!(
+                                origin,
+                                "overrides.surrogate_warmup",
+                                "warmup of 0 (must be at least 1)"
+                            ));
+                        }
+                        overrides.surrogate_warmup = Some(w);
+                    }
+                    "surrogate_keep" => {
+                        let k = value.as_f64().ok_or_else(|| {
+                            field_err!(origin, "overrides.surrogate_keep", "expected a number")
+                        })?;
+                        if !(k > 0.0 && k <= 1.0) {
+                            return Err(field_err!(
+                                origin,
+                                "overrides.surrogate_keep",
+                                "keep fraction {k} out of range (must be in (0, 1])"
+                            ));
+                        }
+                        overrides.surrogate_keep = Some(k);
+                    }
+                    "surrogate_probe_every" => {
+                        let p = value.as_usize().ok_or_else(|| {
+                            field_err!(
+                                origin,
+                                "overrides.surrogate_probe_every",
+                                "expected an unsigned integer"
+                            )
+                        })?;
+                        if p == 0 {
+                            return Err(field_err!(
+                                origin,
+                                "overrides.surrogate_probe_every",
+                                "cadence of 0 (must be at least 1)"
+                            ));
+                        }
+                        overrides.surrogate_probe_every = Some(p);
+                    }
                     other => {
                         return Err(field_err!(
                             origin,
@@ -396,6 +487,18 @@ impl Scenario {
                     }
                 }
             }
+        }
+        if overrides.surrogate != Some(true)
+            && (overrides.surrogate_warmup.is_some()
+                || overrides.surrogate_keep.is_some()
+                || overrides.surrogate_probe_every.is_some())
+        {
+            return Err(field_err!(
+                origin,
+                "overrides",
+                "surrogate_warmup/surrogate_keep/surrogate_probe_every require \
+                 \"surrogate\": true"
+            ));
         }
 
         Ok(Scenario {
@@ -680,6 +783,59 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("overrides.batch"), "{err}");
+    }
+
+    #[test]
+    fn surrogate_overrides_parse_and_build_a_seeded_cfg() {
+        let s = parse(&base(
+            "\"overrides\": {\"surrogate\": true, \"surrogate_warmup\": 6, \
+             \"surrogate_keep\": 0.5, \"surrogate_probe_every\": 4}",
+        ))
+        .unwrap();
+        assert_eq!(s.overrides.surrogate, Some(true));
+        let cfg = s.overrides.surrogate_cfg(9).unwrap();
+        assert_eq!(cfg.warmup, 6);
+        assert_eq!(cfg.keep, 0.5);
+        assert_eq!(cfg.probe_every, 4);
+        assert_eq!(cfg.seed, 9);
+
+        // off (default or explicit false): no config, whatever the seed
+        assert_eq!(parse(&base("")).unwrap().overrides.surrogate_cfg(9), None);
+        let off = parse(&base("\"overrides\": {\"surrogate\": false}")).unwrap();
+        assert_eq!(off.overrides.surrogate_cfg(9), None);
+
+        // unset knobs keep the defaults
+        let s = parse(&base("\"overrides\": {\"surrogate\": true}")).unwrap();
+        let cfg = s.overrides.surrogate_cfg(3).unwrap();
+        assert_eq!(cfg, SurrogateCfg::with_seed(3));
+    }
+
+    #[test]
+    fn surrogate_knob_validation_is_field_named() {
+        let err = parse(&base("\"overrides\": {\"surrogate\": true, \"surrogate_keep\": 1.5}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overrides.surrogate_keep"), "{err}");
+        assert!(err.contains("out of range"), "{err}");
+
+        let err = parse(&base("\"overrides\": {\"surrogate\": true, \"surrogate_warmup\": 0}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overrides.surrogate_warmup"), "{err}");
+
+        let err = parse(&base(
+            "\"overrides\": {\"surrogate\": true, \"surrogate_probe_every\": 0}",
+        ))
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("overrides.surrogate_probe_every"), "{err}");
+
+        // sub-knobs without the master switch are rejected
+        let err = parse(&base("\"overrides\": {\"surrogate_warmup\": 4}"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("require"), "{err}");
+        assert!(err.contains("\"surrogate\": true"), "{err}");
     }
 
     #[test]

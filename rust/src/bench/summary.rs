@@ -165,6 +165,10 @@ pub struct ScenarioRecord {
     pub retries: usize,
     pub setup_builds: usize,
     pub setup_hits: usize,
+    /// Proposals the surrogate gate skipped without exact simulation
+    /// across all seeds (0 for surrogate-off scenarios; parsed leniently
+    /// with default 0 so pre-surrogate baselines still load).
+    pub skipped: usize,
     /// Combined result fingerprint (see
     /// [`log_fingerprint`](super::runner::log_fingerprint)).
     pub fingerprint: u64,
@@ -194,6 +198,7 @@ impl ScenarioRecord {
             retries: r.runs.iter().map(|run| run.retries).sum(),
             setup_builds: r.runs.iter().map(|run| run.setup_builds).sum(),
             setup_hits: r.runs.iter().map(|run| run.setup_hits).sum(),
+            skipped: r.runs.iter().map(|run| run.skipped).sum(),
             fingerprint: r.fingerprint,
             run_fingerprints: r.runs.iter().map(|run| run.fingerprint).collect(),
             best_scores: r.runs.iter().map(|run| run.best_score).collect(),
@@ -228,6 +233,7 @@ impl ScenarioRecord {
         o.insert("retries", self.retries.into());
         o.insert("setup_builds", self.setup_builds.into());
         o.insert("setup_hits", self.setup_hits.into());
+        o.insert("skipped", self.skipped.into());
         o.insert("fingerprint", hex_u64(self.fingerprint));
         o.insert(
             "run_fingerprints",
@@ -287,6 +293,8 @@ impl ScenarioRecord {
             retries: doc.get("retries").and_then(|v| v.as_usize()).unwrap_or(0),
             setup_builds: int("setup_builds")?,
             setup_hits: int("setup_hits")?,
+            // lenient: baselines written before the surrogate gate existed
+            skipped: doc.get("skipped").and_then(|v| v.as_usize()).unwrap_or(0),
             fingerprint: parse_hex_u64(doc.get("fingerprint"), &format!("{what}: \"fingerprint\""))?,
             run_fingerprints: hex_list("run_fingerprints")?,
             best_scores,
@@ -390,6 +398,7 @@ mod tests {
             retries: 0,
             setup_builds: 1,
             setup_hits: 8,
+            skipped: 4,
             fingerprint: 0xdead_beef_cafe_f00d,
             run_fingerprints: vec![1, 2],
             best_scores: vec![0.1, f64::INFINITY],

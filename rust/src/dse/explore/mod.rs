@@ -58,6 +58,7 @@ pub mod program;
 pub mod report;
 pub mod session;
 pub mod space;
+pub mod surrogate;
 
 pub use compose::{
     objectives_from_json, space_from_json, space_from_json_value, three_tier, BoxSpace,
@@ -75,6 +76,7 @@ pub use space::{
     placement_demo, preset, preset_names, Axis, AxisKind, AxisValues, Binding, Candidate, Design,
     DesignSpace, DesignView, PackagingSpace, ParamSpace, PlacementSpace,
 };
+pub use surrogate::{SurrogateCfg, SurrogateGate, SurrogateSummary};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -125,6 +127,13 @@ pub struct ExploreOpts {
     pub retry_backoff_ms: u64,
     /// Upper bound on a single retry backoff, in milliseconds.
     pub retry_backoff_cap_ms: u64,
+    /// Gate explorer proposals through a learned surrogate model
+    /// ([`SurrogateGate`]): after a warmup of exact evaluations, only
+    /// proposals the model considers promising (plus forced probes) are
+    /// simulated; the rest are logged as *skipped* without consuming
+    /// budget. `None` (the default) evaluates every proposal exactly.
+    /// A run parameter: checkpointed, and authoritative on resume.
+    pub surrogate: Option<SurrogateCfg>,
     pub sim: SimConfig,
 }
 
@@ -140,6 +149,7 @@ impl Default for ExploreOpts {
             retry_max: 2,
             retry_backoff_ms: 5,
             retry_backoff_cap_ms: 100,
+            surrogate: None,
             sim: SimConfig::default(),
         }
     }
@@ -545,6 +555,9 @@ pub struct Engine<'a, 'scope> {
     sim_calls: usize,
     cache_hits: usize,
     failures: usize,
+    /// Proposals rejected by the surrogate gate (logged as skipped;
+    /// never simulated, never counted against the budget).
+    skipped: usize,
     /// Transient-failure retries performed (an incident counter — not
     /// part of the deterministic result, since *when* faults strike is
     /// environmental).
@@ -666,6 +679,7 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             sim_calls: 0,
             cache_hits: 0,
             failures: 0,
+            skipped: 0,
             retries: 0,
             moves_accepted: 0,
         }
@@ -688,10 +702,13 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         built_keys: Vec<Vec<u32>>,
     ) {
         if self.opts.cache {
-            for e in &log {
+            // Skipped entries carry INFINITY filler, not scores — they
+            // must never seed the memo cache.
+            for e in log.iter().filter(|e| !e.skipped) {
                 self.cache.insert(e.candidate.0.clone(), e.objectives.clone());
             }
         }
+        self.skipped = log.iter().filter(|e| e.skipped).count();
         self.log = log;
         self.sim_calls = sim_calls;
         self.cache_hits = cache_hits;
@@ -755,9 +772,18 @@ impl<'a, 'scope> Engine<'a, 'scope> {
         keys
     }
 
-    /// Evaluations still allowed by the budget.
+    /// Evaluations still allowed by the budget. Surrogate-skipped log
+    /// entries are free: the budget counts exact evaluations only, so a
+    /// gated run spends its full budget on ground truth.
     pub fn remaining(&self) -> usize {
-        self.opts.budget.saturating_sub(self.log.len())
+        self.opts
+            .budget
+            .saturating_sub(self.log.len() - self.skipped)
+    }
+
+    /// Proposals the surrogate gate skipped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
     }
 
     /// The evaluation log so far.
@@ -890,25 +916,64 @@ impl<'a, 'scope> Engine<'a, 'scope> {
     /// requested candidate is logged. Lookups borrow the candidate digits;
     /// each miss allocates its memo key exactly once.
     pub fn eval_batch(&mut self, candidates: &[Candidate]) -> Vec<Vec<f64>> {
-        let take = candidates.len().min(self.remaining());
+        self.eval_batch_gated(candidates, None)
+            .into_iter()
+            .map(|r| r.expect("ungated evaluation present"))
+            .collect()
+    }
+
+    /// [`Engine::eval_batch`] with an optional surrogate skip mask
+    /// (`skip[i]` = do not simulate `candidates[i]`). Skipped candidates
+    /// are logged in proposal order as [`Evaluation::skipped`] entries —
+    /// `INFINITY` filler, never a prediction — without consuming budget,
+    /// touching the memo cache, or reaching the simulator; their slot in
+    /// the returned vector is `None`.
+    pub(crate) fn eval_batch_gated(
+        &mut self,
+        candidates: &[Candidate],
+        skip: Option<&[bool]>,
+    ) -> Vec<Option<Vec<f64>>> {
+        let is_skip = |i: usize| skip.is_some_and(|m| m[i]);
+        // Truncate to the remaining budget, counting kept candidates
+        // only; once the last budgeted evaluation is placed nothing more
+        // is logged (trailing skips included — the run is over).
+        let remaining = self.remaining();
+        let mut kept = 0usize;
+        let mut take = 0usize;
+        for i in 0..candidates.len() {
+            if !is_skip(i) {
+                if kept == remaining {
+                    break;
+                }
+                kept += 1;
+            } else if kept == remaining {
+                break;
+            }
+            take = i + 1;
+        }
         let batch = &candidates[..take];
         if batch.is_empty() {
             return Vec::new();
         }
 
         // Hits (previous batches AND duplicates within this batch) vs the
-        // unique misses in first-seen order.
+        // unique misses in first-seen order. Skipped candidates take no
+        // part in either.
         let mut hit: Vec<bool> = Vec::with_capacity(batch.len());
         let mut miss_idx: Vec<usize> = Vec::new();
         {
             let mut queued: HashSet<&[u32]> = HashSet::new();
-            for c in batch.iter() {
+            for (i, c) in batch.iter().enumerate() {
+                if is_skip(i) {
+                    hit.push(false);
+                    continue;
+                }
                 let dup = self.opts.cache
                     && (self.cache.contains_key(c.0.as_slice())
                         || queued.contains(c.0.as_slice()));
                 hit.push(dup);
                 if !dup {
-                    miss_idx.push(hit.len() - 1);
+                    miss_idx.push(i);
                     if self.opts.cache {
                         queued.insert(c.0.as_slice());
                     }
@@ -989,9 +1054,24 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             self.cache.insert(batch[i].0.clone(), entry.values);
         }
 
-        // Log every requested candidate in proposal order.
-        let mut out = Vec::with_capacity(batch.len());
+        // Log every requested candidate in proposal order (skipped ones
+        // interleaved exactly where they were proposed).
+        let mut out: Vec<Option<Vec<f64>>> = Vec::with_capacity(batch.len());
         for (i, c) in batch.iter().enumerate() {
+            let label = self.space.label(c);
+            if is_skip(i) {
+                self.skipped += 1;
+                self.log.push(Evaluation {
+                    candidate: c.clone(),
+                    label,
+                    objectives: vec![f64::INFINITY; n_obj],
+                    cached: false,
+                    skipped: true,
+                    error: None,
+                });
+                out.push(None);
+                continue;
+            }
             let values: Vec<f64> = if self.opts.cache {
                 self.cache
                     .get(c.0.as_slice())
@@ -1003,16 +1083,16 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             if hit[i] {
                 self.cache_hits += 1;
             }
-            let label = self.space.label(c);
             let error = errors[i].take().map(|msg| format!("{label}: {msg}"));
             self.log.push(Evaluation {
                 candidate: c.clone(),
                 label,
                 objectives: values.clone(),
                 cached: hit[i],
+                skipped: false,
                 error,
             });
-            out.push(values);
+            out.push(Some(values));
         }
         out
     }
@@ -1043,6 +1123,9 @@ impl<'a, 'scope> Engine<'a, 'scope> {
             sim_calls: self.sim_calls,
             cache_hits: self.cache_hits,
             failures: self.failures,
+            skipped: self.skipped,
+            // Attached by the session when a gate drove the run.
+            surrogate: None,
             retries: self.retries,
             setup_builds: self.setups.builds.load(Ordering::Relaxed),
             setup_hits: self.setups.hits.load(Ordering::Relaxed),

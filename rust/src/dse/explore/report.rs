@@ -6,6 +6,7 @@ use crate::util::json::{Json, JsonObj};
 
 use super::super::report::{fmt, Table};
 use super::space::Candidate;
+use super::surrogate::SurrogateSummary;
 
 /// One logged candidate evaluation, in exploration order.
 #[derive(Debug, Clone)]
@@ -17,6 +18,11 @@ pub struct Evaluation {
     pub objectives: Vec<f64>,
     /// True when served from the memo cache.
     pub cached: bool,
+    /// True when the surrogate gate skipped this proposal: no simulation
+    /// ran, `objectives` is all-`INFINITY` filler (a prediction is never
+    /// recorded as a score), and the entry is excluded from
+    /// best/Pareto/top selection and from the memo cache.
+    pub skipped: bool,
     /// Why the evaluation failed (materialization/simulation error or a
     /// caught evaluator panic), labeled with the candidate. `None` on
     /// success and on cache hits replaying an earlier failure.
@@ -45,6 +51,13 @@ pub struct ExplorationReport {
     /// Evaluations that failed to materialize or simulate (including
     /// caught evaluator panics).
     pub failures: usize,
+    /// Proposals the surrogate gate skipped instead of simulating
+    /// (0 when the surrogate is off). Skipped entries stay in the log —
+    /// in proposal order, marked [`Evaluation::skipped`] — but never
+    /// consume budget and never enter best/Pareto selection.
+    pub skipped: usize,
+    /// Surrogate gate counters, when the run gated proposals.
+    pub surrogate: Option<SurrogateSummary>,
     /// Transient evaluation failures retried by the engine (evaluator
     /// panics, rescued worker deaths). An *incident* counter: when faults
     /// strike is environmental, so — like the wall-clock fields — it is
@@ -76,10 +89,14 @@ pub struct ExplorationReport {
 
 impl ExplorationReport {
     /// Index of the best evaluation by the first objective (earliest wins
-    /// ties — deterministic).
+    /// ties — deterministic). Surrogate-skipped entries never qualify:
+    /// the best is always an exact simulation result.
     pub fn best_index(&self) -> Option<usize> {
         let mut best: Option<usize> = None;
         for (i, e) in self.evals.iter().enumerate() {
+            if e.skipped {
+                continue;
+            }
             let score = e.objectives[0];
             match best {
                 Some(b) if self.evals[b].objectives[0] <= score => {}
@@ -94,10 +111,14 @@ impl ExplorationReport {
     }
 
     /// Indices of the non-dominated evaluations (unique candidates, first
-    /// occurrence), sorted by the first objective.
+    /// occurrence), sorted by the first objective. Surrogate-skipped
+    /// entries are excluded — the front is 100% ground truth.
     pub fn pareto(&self) -> Vec<usize> {
         let mut unique: Vec<usize> = Vec::new();
         for (i, e) in self.evals.iter().enumerate() {
+            if e.skipped {
+                continue;
+            }
             if !unique.iter().any(|&j| self.evals[j].candidate == e.candidate) {
                 unique.push(i);
             }
@@ -161,6 +182,7 @@ impl ExplorationReport {
                 "sims",
                 "cache hits",
                 "failures",
+                "skipped",
                 "accepted",
                 "best",
                 "evals/s",
@@ -176,6 +198,7 @@ impl ExplorationReport {
             self.sim_calls.to_string(),
             self.cache_hits.to_string(),
             self.failures.to_string(),
+            self.skipped.to_string(),
             self.moves_accepted.to_string(),
             best,
             fmt(self.evals_per_sec()),
@@ -213,7 +236,9 @@ impl ExplorationReport {
         }
         headers.push("cached");
         let mut t = Table::new(format!("Top {n} evaluations"), &headers);
-        let mut order: Vec<usize> = (0..self.evals.len()).collect();
+        let mut order: Vec<usize> = (0..self.evals.len())
+            .filter(|&i| !self.evals[i].skipped)
+            .collect();
         order.sort_by(|&a, &b| {
             self.evals[a].objectives[0]
                 .total_cmp(&self.evals[b].objectives[0])
@@ -242,10 +267,21 @@ impl ExplorationReport {
             Json::Arr(e.objectives.iter().map(|v| (*v).into()).collect()),
         );
         o.insert("cached", e.cached.into());
+        o.insert("skipped", e.skipped.into());
         if let Some(err) = &e.error {
             o.insert("error", err.as_str().into());
         }
         Json::Obj(o)
+    }
+
+    /// Fraction of proposed candidates the surrogate gate skipped
+    /// (0 when nothing was proposed — never NaN).
+    pub fn skip_rate(&self) -> f64 {
+        if self.evals.is_empty() {
+            0.0
+        } else {
+            self.skipped as f64 / self.evals.len() as f64
+        }
     }
 
     /// Fraction of simulations that reused a cached evaluation setup
@@ -273,6 +309,24 @@ impl ExplorationReport {
         o.insert("sim_calls", (self.sim_calls as u64).into());
         o.insert("cache_hits", (self.cache_hits as u64).into());
         o.insert("failures", (self.failures as u64).into());
+        // Surrogate accounting: every logged entry was *proposed*;
+        // non-skipped entries were *simulated* (or served bit-exact from
+        // the memo cache); skipped ones were rejected by the gate.
+        o.insert("proposed", (self.evals.len() as u64).into());
+        o.insert(
+            "simulated",
+            ((self.evals.len() - self.skipped) as u64).into(),
+        );
+        o.insert("skipped", (self.skipped as u64).into());
+        o.insert("skip_rate", self.skip_rate().into());
+        if let Some(s) = &self.surrogate {
+            let mut so = JsonObj::new();
+            so.insert("decisions", s.decisions.into());
+            so.insert("skipped", s.skipped.into());
+            so.insert("probes", s.probes.into());
+            so.insert("warmup_evals", s.warmup_evals.into());
+            o.insert("surrogate", Json::Obj(so));
+        }
         o.insert("retries", (self.retries as u64).into());
         o.insert("setup_builds", (self.setup_builds as u64).into());
         o.insert("setup_hits", (self.setup_hits as u64).into());
@@ -314,11 +368,24 @@ mod tests {
             label,
             objectives,
             cached: false,
+            skipped: false,
+            error: None,
+        }
+    }
+
+    fn skipped_ev(digits: Vec<u32>, n_obj: usize) -> Evaluation {
+        Evaluation {
+            candidate: Candidate(digits),
+            label: "skipped".into(),
+            objectives: vec![f64::INFINITY; n_obj],
+            cached: false,
+            skipped: true,
             error: None,
         }
     }
 
     fn report(evals: Vec<Evaluation>) -> ExplorationReport {
+        let skipped = evals.iter().filter(|e| e.skipped).count();
         ExplorationReport {
             schema_version: REPORT_SCHEMA_VERSION,
             space: "synthetic".into(),
@@ -328,6 +395,8 @@ mod tests {
             sim_calls: 0,
             cache_hits: 0,
             failures: 0,
+            skipped,
+            surrogate: None,
             retries: 0,
             setup_builds: 0,
             setup_hits: 0,
@@ -421,5 +490,84 @@ mod tests {
         assert!(r.best().is_none());
         assert!(r.pareto().is_empty());
         assert_eq!(r.to_json().get("best"), Some(&Json::Null));
+        // the rate guards hold on the empty report too
+        assert_eq!(r.skip_rate(), 0.0);
+        assert_eq!(r.setup_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn skipped_entries_never_reach_best_pareto_or_top() {
+        // a skipped entry "better" than everything (it even carries a
+        // finite score here, which the engine never produces) must still
+        // lose to ground truth on every surface
+        let mut better_than_all = skipped_ev(vec![9], 2);
+        better_than_all.objectives = vec![0.0, 0.0];
+        let r = report(vec![
+            ev(vec![0], vec![2.0, 1.0]),
+            better_than_all,
+            skipped_ev(vec![8], 2),
+            ev(vec![1], vec![1.0, 2.0]),
+        ]);
+        assert_eq!(r.skipped, 2);
+        assert_eq!(r.best_index(), Some(3));
+        // sorted by first objective: [1] (1.0) before [0] (2.0)
+        assert_eq!(r.pareto(), vec![3, 0]);
+        let top = r.top_table(10);
+        assert_eq!(top.rows.len(), 2);
+        assert_eq!(r.skip_rate(), 0.5);
+        let j = r.to_json();
+        assert_eq!(j.get("proposed").unwrap().as_u64(), Some(4));
+        assert_eq!(j.get("simulated").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("skipped").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("skip_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(
+            j.get("best").unwrap().get("skipped").unwrap().as_bool(),
+            Some(false)
+        );
+        // every pareto entry is ground truth
+        for p in j.get("pareto").unwrap().as_arr().unwrap() {
+            assert_eq!(p.get("skipped").unwrap().as_bool(), Some(false));
+        }
+    }
+
+    #[test]
+    fn surrogate_summary_serializes_when_present() {
+        let mut r = report(vec![ev(vec![0], vec![1.0, 1.0])]);
+        r.surrogate = Some(SurrogateSummary {
+            decisions: 10,
+            skipped: 4,
+            probes: 2,
+            warmup_evals: 12,
+        });
+        let j = r.to_json();
+        let s = j.get("surrogate").unwrap();
+        assert_eq!(s.get("decisions").unwrap().as_u64(), Some(10));
+        assert_eq!(s.get("skipped").unwrap().as_u64(), Some(4));
+        assert_eq!(s.get("probes").unwrap().as_u64(), Some(2));
+        assert_eq!(s.get("warmup_evals").unwrap().as_u64(), Some(12));
+        // absent when the run never gated
+        let off = report(vec![ev(vec![0], vec![1.0, 1.0])]);
+        assert!(off.to_json().get("surrogate").is_none());
+    }
+
+    #[test]
+    fn zero_elapsed_throughput_is_zero_not_nan() {
+        // ultra-fast quick runs can measure ~0 elapsed and 0 setup time;
+        // every derived rate must collapse to 0 (never inf/NaN) so report
+        // JSON and bench comparisons stay well-formed
+        let mut r = report(vec![ev(vec![0], vec![1.0, 1.0])]);
+        r.elapsed_secs = 0.0;
+        r.setup_ms = 0.0;
+        assert_eq!(r.evals_per_sec(), 0.0);
+        assert_eq!(r.steady_ms(), 0.0);
+        assert_eq!(r.evals_per_sec_steady(), 0.0);
+        let j = r.to_json();
+        for key in ["evals_per_sec", "evals_per_sec_steady", "steady_ms", "skip_rate"] {
+            let v = j.get(key).unwrap().as_f64().unwrap();
+            assert!(v.is_finite(), "{key} = {v}");
+            assert_eq!(v, 0.0, "{key}");
+        }
+        // the serialized document parses back cleanly (no bare inf/nan)
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 }

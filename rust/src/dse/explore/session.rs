@@ -31,6 +31,7 @@ use crate::util::json::{Json, JsonObj};
 use super::explorers::{Explorer, ExplorerState, StepLimits};
 use super::report::{Evaluation, ExplorationReport};
 use super::space::{Candidate, DesignSpace};
+use super::surrogate::SurrogateGate;
 use super::{Engine, ExploreOpts, Objective, SharedCaches};
 
 /// Version of the checkpoint JSON layout. Resuming from a checkpoint
@@ -106,6 +107,12 @@ pub struct Checkpoint {
     /// re-count as *hits*, keeping the counters identical to an
     /// uninterrupted run.
     pub built_keys: Vec<Vec<u32>>,
+    /// The surrogate gate's full state (config, counters, model weights)
+    /// when the run gated proposals; `None` for surrogate-off runs and
+    /// pre-surrogate checkpoints (parsed leniently). A run parameter:
+    /// resume restores the gate from here, never from the caller's
+    /// options, so resumed runs replay identical gating decisions.
+    pub surrogate: Option<SurrogateGate>,
     /// The evaluation log, in exploration order (scores bit-exact).
     pub log: Vec<Evaluation>,
 }
@@ -161,6 +168,9 @@ impl Checkpoint {
             "built_keys",
             Json::Arr(self.built_keys.iter().map(|k| digits_json(k)).collect()),
         );
+        if let Some(gate) = &self.surrogate {
+            o.insert("surrogate", gate.to_json());
+        }
         let mut log = Vec::with_capacity(self.log.len());
         for e in &self.log {
             let mut ev = JsonObj::new();
@@ -171,6 +181,9 @@ impl Checkpoint {
                 Json::Arr(e.objectives.iter().map(|v| hex_f64(*v)).collect()),
             );
             ev.insert("cached", e.cached.into());
+            if e.skipped {
+                ev.insert("skipped", true.into());
+            }
             if let Some(err) = &e.error {
                 ev.insert("error", err.as_str().into());
             }
@@ -250,6 +263,11 @@ impl Checkpoint {
                         .to_string(),
                     objectives,
                     cached: ev.get("cached").and_then(|v| v.as_bool()).unwrap_or(false),
+                    // lenient: pre-surrogate checkpoints lack the flag
+                    skipped: ev
+                        .get("skipped")
+                        .and_then(|v| v.as_bool())
+                        .unwrap_or(false),
                     error: ev
                         .get("error")
                         .and_then(|v| v.as_str())
@@ -287,6 +305,13 @@ impl Checkpoint {
             setup_builds: usize_field("setup_builds")?,
             setup_hits: usize_field("setup_hits")?,
             built_keys,
+            // lenient: pre-surrogate checkpoints lack the key entirely
+            surrogate: match doc.get("surrogate") {
+                None | Some(Json::Null) => None,
+                Some(j) => Some(
+                    SurrogateGate::from_json(j).context("checkpoint: surrogate state")?,
+                ),
+            },
             log,
         })
     }
@@ -304,6 +329,8 @@ pub struct ExplorationSession<'a, 'scope> {
     engine: Engine<'a, 'scope>,
     explorer: &'a dyn Explorer,
     state: ExplorerState,
+    /// Surrogate gate between propose and evaluate, when enabled.
+    gate: Option<SurrogateGate>,
     batches_done: u64,
 }
 
@@ -327,12 +354,20 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             !objectives.is_empty(),
             "explore: at least one objective required"
         );
+        let gate = match &opts.surrogate {
+            Some(cfg) => {
+                cfg.validate()?;
+                Some(SurrogateGate::new(cfg.clone()))
+            }
+            None => None,
+        };
         let engine = Engine::new_in_with(scope, space, objectives, evals, opts, shared);
         let state = explorer.fresh(space);
         Ok(ExplorationSession {
             engine,
             explorer,
             state,
+            gate,
             batches_done: 0,
         })
     }
@@ -389,13 +424,16 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             !objectives.is_empty(),
             "explore: at least one objective required"
         );
-        // The run's own parameters are authoritative from the checkpoint;
+        // The run's own parameters are authoritative from the checkpoint
+        // (the surrogate gate included — its config and trained state
+        // resume from the snapshot, never from the caller's options);
         // only machine-local execution knobs carry over from the caller.
         let run_opts = ExploreOpts {
             budget: ckpt.budget,
             batch: ckpt.batch,
             cache: ckpt.cache,
             setup_reuse: ckpt.setup_reuse,
+            surrogate: ckpt.surrogate.as_ref().map(|g| g.cfg().clone()),
             workers: opts.workers,
             streaming: opts.streaming,
             sim: opts.sim.clone(),
@@ -404,6 +442,7 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             retry_backoff_cap_ms: opts.retry_backoff_cap_ms,
         };
         let mut engine = Engine::new_in_with(scope, space, objectives, evals, &run_opts, shared);
+        let gate = ckpt.surrogate;
         engine.restore(
             ckpt.log,
             ckpt.sim_calls,
@@ -419,13 +458,20 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             engine,
             explorer,
             state: ckpt.state,
+            gate,
             batches_done: ckpt.batches_done,
         })
     }
 
-    /// Advance one step: propose a batch, evaluate it, observe the
-    /// scores. Returns `false` when the run is over (budget exhausted or
-    /// the explorer finished).
+    /// Advance one step: propose a batch, gate it through the surrogate
+    /// (when enabled), evaluate the kept candidates, observe the scores.
+    /// Returns `false` when the run is over (budget exhausted or the
+    /// explorer finished).
+    ///
+    /// The explorer only ever observes exact simulation results — skipped
+    /// proposals are logged but invisible to `observe`, so a gated search
+    /// walks the same ground-truth landscape as an ungated one, just
+    /// sampled more selectively.
     pub fn step(&mut self) -> bool {
         if self.state.done || self.engine.remaining() == 0 {
             return false;
@@ -442,19 +488,36 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             self.state.done = true;
             return false;
         }
-        let scores = self.engine.eval_batch(&batch);
-        if scores.is_empty() {
+        let mask = match self.gate.as_mut() {
+            Some(gate) => Some(gate.decide(self.engine.space(), self.engine.log(), &batch)),
+            None => None,
+        };
+        let results = self.engine.eval_batch_gated(&batch, mask.as_deref());
+        if results.is_empty() {
             return false;
         }
-        let evaluated = &batch[..scores.len()];
+        let mut evaluated: Vec<Candidate> = Vec::new();
+        let mut scores: Vec<Vec<f64>> = Vec::new();
+        for (c, r) in batch.iter().zip(&results) {
+            if let Some(values) = r {
+                evaluated.push(c.clone());
+                scores.push(values.clone());
+            }
+        }
         let post = StepLimits {
             remaining: self.engine.remaining(),
             batch: batch_limit,
         };
-        let accepted =
-            self.explorer
-                .observe(&mut self.state, self.engine.space(), evaluated, &scores, &post);
-        self.engine.moves_accepted += accepted;
+        if !evaluated.is_empty() {
+            let accepted = self.explorer.observe(
+                &mut self.state,
+                self.engine.space(),
+                &evaluated,
+                &scores,
+                &post,
+            );
+            self.engine.moves_accepted += accepted;
+        }
         self.batches_done += 1;
         true
     }
@@ -502,6 +565,7 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
             setup_builds: self.engine.setup_builds(),
             setup_hits: self.engine.setup_hits(),
             built_keys: self.engine.built_keys(),
+            surrogate: self.gate.clone(),
             log: self.engine.log().to_vec(),
         }
     }
@@ -509,6 +573,9 @@ impl<'a, 'scope> ExplorationSession<'a, 'scope> {
     /// Finish the run and produce the report.
     pub fn into_report(self, elapsed_secs: f64) -> ExplorationReport {
         let name = self.explorer.name().to_string();
-        self.engine.into_report(&name, elapsed_secs)
+        let gate = self.gate;
+        let mut report = self.engine.into_report(&name, elapsed_secs);
+        report.surrogate = gate.map(|g| g.summary());
+        report
     }
 }

@@ -1,0 +1,580 @@
+//! Surrogate-guided exploration: a learned gate between explorer
+//! proposals and the exact simulator.
+//!
+//! A [`SurrogateGate`] owns a tiny [`Ensemble`] of MLP regressors
+//! (see [`crate::ml`]) trained online on the run's own evaluation log:
+//! candidate digit vectors (scaled per axis, with per-[`AxisKind`]
+//! aggregate features) map to the raw objective vectors the simulator
+//! produced. Each proposed batch is ranked before evaluation and only
+//! the promising tail is forwarded to the simulator; the rest are
+//! recorded as *skipped* — they never enter the Pareto front or the
+//! best-candidate selection, which stay 100% ground-truth.
+//!
+//! The gating rule combines three mechanisms:
+//!
+//! * **Warmup** — until `warmup` ground-truth evaluations exist, every
+//!   proposal is forwarded (the model would be guessing).
+//! * **Probes** — every `probe_every`-th post-warmup decision is
+//!   forwarded unconditionally. This feeds the model fresh off-policy
+//!   truth, keeps the run's budget provably draining (skips do not
+//!   consume budget, so a gate that skipped everything would
+//!   otherwise livelock), and bounds how wrong a stale model can be.
+//! * **Confidence-bounded keep with a rate cap** — a non-probe
+//!   proposal is forwarded when its lower confidence bound
+//!   (ensemble mean − spread) is at or below the `keep`-percentile of
+//!   the observed ground-truth scores *and* the current probe window
+//!   still has forwarding allowance (`keep × probe_every` keeps per
+//!   window). The cap makes the steady-state simulation rate at most
+//!   roughly `keep` of proposals, whatever the model predicts.
+//!
+//! Determinism: the gate is a pure function of `(evaluation log,
+//! SurrogateCfg)`. Training derives every RNG stream from the
+//! configured seed via [`Pcg::fork`] named streams, data is consumed in
+//! log order, and no wall clock or OS entropy is involved — so runs are
+//! bit-identical across worker counts and across checkpoint/resume
+//! (the full gate state, model weights included, serializes into the
+//! [`Checkpoint`](super::Checkpoint)).
+
+use crate::ml::mlp::FitOpts;
+use crate::ml::{Ensemble, Normalizer};
+use crate::util::error::Result;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Pcg;
+use crate::util::stats::percentile;
+
+use super::report::Evaluation;
+use super::session::{hex_f64, hex_u64, parse_hex_f64, parse_hex_u64};
+use super::space::{AxisKind, Candidate, DesignSpace};
+
+/// Hidden-layer width of each ensemble member.
+const HIDDEN: usize = 16;
+/// Ensemble size (uncertainty comes from member disagreement).
+const MEMBERS: usize = 3;
+/// Retrain after this many new ground-truth evaluations accumulate.
+const REFIT_EVERY: usize = 4;
+/// Training hyperparameters for each refit (Adam).
+const FIT: FitOpts = FitOpts {
+    epochs: 48,
+    batch: 8,
+    lr: 0.01,
+};
+
+/// Surrogate gating configuration (a *run parameter*: it participates in
+/// checkpoints and must match across resumes, like budget or batch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurrogateCfg {
+    /// Ground-truth evaluations to collect before gating starts.
+    pub warmup: usize,
+    /// Target fraction `(0, 1]` of post-warmup proposals forwarded to
+    /// the simulator (both the keep-percentile threshold and the
+    /// per-window forwarding cap).
+    pub keep: f64,
+    /// Forward every `probe_every`-th post-warmup proposal
+    /// unconditionally (also the window length of the keep cap).
+    pub probe_every: usize,
+    /// Seed for model initialization and minibatch shuffling.
+    pub seed: u64,
+}
+
+impl SurrogateCfg {
+    /// Defaults with the given seed: warmup 12, keep 0.35, probe every 8.
+    pub fn with_seed(seed: u64) -> SurrogateCfg {
+        SurrogateCfg {
+            warmup: 12,
+            keep: 0.35,
+            probe_every: 8,
+            seed,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.warmup >= 1,
+            "surrogate: warmup must be at least 1 evaluation"
+        );
+        crate::ensure!(
+            self.keep > 0.0 && self.keep <= 1.0,
+            "surrogate: keep must be in (0, 1], got {}",
+            self.keep
+        );
+        crate::ensure!(
+            self.probe_every >= 1,
+            "surrogate: probe-every must be at least 1"
+        );
+        Ok(())
+    }
+
+    /// Non-probe keeps allowed per probe window.
+    fn window_allowance(&self) -> usize {
+        let cap = (self.keep * self.probe_every as f64).round() as usize;
+        cap.min(self.probe_every.saturating_sub(1))
+    }
+}
+
+/// Skip/keep counters of one run, for the report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SurrogateSummary {
+    /// Post-warmup gate decisions taken.
+    pub decisions: u64,
+    /// Proposals skipped (never simulated; excluded from best/Pareto).
+    pub skipped: u64,
+    /// Forced ground-truth probes among the decisions.
+    pub probes: u64,
+    /// Proposals forwarded during warmup (before gating started).
+    pub warmup_evals: u64,
+}
+
+/// The trained model: input/target normalizers plus the MLP ensemble.
+#[derive(Debug, Clone)]
+struct SurrogateModel {
+    x_norm: Normalizer,
+    y_norm: Normalizer,
+    ensemble: Ensemble,
+}
+
+impl SurrogateModel {
+    /// Predicted `(mean, spread)` of the *first* objective, in raw
+    /// (un-normalized) units.
+    fn predict_first(&self, x: &[f64]) -> (f64, f64) {
+        let z = self.x_norm.transform(x);
+        let (mean_z, std_z) = self.ensemble.predict(&z);
+        let mean = self.y_norm.inverse(&mean_z)[0];
+        let spread = self.y_norm.inverse_spread(&std_z)[0];
+        (mean, spread)
+    }
+}
+
+/// Ground-truth training set extracted from the evaluation log.
+struct TruthSet {
+    xs: Vec<Vec<f64>>,
+    ys: Vec<Vec<f64>>,
+    /// First objective of every row (threshold source).
+    firsts: Vec<f64>,
+}
+
+/// Scale a candidate's digits into model features: one `[0, 1]` value
+/// per axis (digit over cardinality−1) plus the per-[`AxisKind`] means,
+/// so the model sees both the exact coordinates and a coarse
+/// tier-level summary (arch / hw-param / mapping).
+fn features(space: &dyn DesignSpace, c: &Candidate) -> Vec<f64> {
+    let axes = space.axes();
+    let mut out = Vec::with_capacity(axes.len() + 3);
+    let mut kind_sum = [0.0f64; 3];
+    let mut kind_n = [0usize; 3];
+    for (axis, &digit) in axes.iter().zip(&c.0) {
+        let card = axis.len();
+        let x = if card > 1 {
+            digit as f64 / (card - 1) as f64
+        } else {
+            0.5
+        };
+        let k = match axis.kind {
+            AxisKind::Arch => 0,
+            AxisKind::HwParam => 1,
+            AxisKind::Mapping => 2,
+        };
+        kind_sum[k] += x;
+        kind_n[k] += 1;
+        out.push(x);
+    }
+    for k in 0..3 {
+        out.push(if kind_n[k] > 0 {
+            kind_sum[k] / kind_n[k] as f64
+        } else {
+            0.0
+        });
+    }
+    out
+}
+
+/// Rows usable for training: exact (non-skipped) evaluations whose
+/// objective vector is entirely finite (failures score `INFINITY`).
+fn truth_set(space: &dyn DesignSpace, log: &[Evaluation]) -> TruthSet {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut firsts = Vec::new();
+    for e in log {
+        if e.skipped || !e.objectives.iter().all(|v| v.is_finite()) {
+            continue;
+        }
+        xs.push(features(space, &e.candidate));
+        ys.push(e.objectives.clone());
+        firsts.push(e.objectives[0]);
+    }
+    TruthSet { xs, ys, firsts }
+}
+
+/// The gate between explorer proposals and the simulator. See the
+/// module docs for the gating rule; state serializes via
+/// [`SurrogateGate::to_json`] so checkpointed runs resume bit-identically.
+#[derive(Debug, Clone)]
+pub struct SurrogateGate {
+    cfg: SurrogateCfg,
+    model: Option<SurrogateModel>,
+    /// Ground-truth rows the current model was fit on.
+    trained_on: usize,
+    decisions: u64,
+    /// Non-probe keeps in the current probe window.
+    kept_window: usize,
+    skipped: u64,
+    probes: u64,
+    warmup_evals: u64,
+}
+
+impl SurrogateGate {
+    pub fn new(cfg: SurrogateCfg) -> SurrogateGate {
+        SurrogateGate {
+            cfg,
+            model: None,
+            trained_on: 0,
+            decisions: 0,
+            kept_window: 0,
+            skipped: 0,
+            probes: 0,
+            warmup_evals: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &SurrogateCfg {
+        &self.cfg
+    }
+
+    pub fn summary(&self) -> SurrogateSummary {
+        SurrogateSummary {
+            decisions: self.decisions,
+            skipped: self.skipped,
+            probes: self.probes,
+            warmup_evals: self.warmup_evals,
+        }
+    }
+
+    /// Decide one proposed batch against the log so far: `true` marks a
+    /// candidate to *skip*. Pure in `(log, cfg, gate state)` — no clock,
+    /// no ambient RNG — so identical logs yield identical masks at any
+    /// worker count.
+    pub fn decide(
+        &mut self,
+        space: &dyn DesignSpace,
+        log: &[Evaluation],
+        batch: &[Candidate],
+    ) -> Vec<bool> {
+        let truth = truth_set(space, log);
+        let mut mask = vec![false; batch.len()];
+        if truth.xs.len() < self.cfg.warmup {
+            self.warmup_evals += batch.len() as u64;
+            return mask;
+        }
+        self.ensure_trained(&truth);
+        let threshold = percentile(&truth.firsts, (self.cfg.keep * 100.0).clamp(0.0, 100.0));
+        let allowance = self.cfg.window_allowance();
+        for (slot, c) in batch.iter().enumerate() {
+            let in_window = self.decisions % self.cfg.probe_every as u64;
+            self.decisions += 1;
+            if in_window == 0 {
+                // Forced probe: always ground truth; opens a new window.
+                self.kept_window = 0;
+                self.probes += 1;
+                continue;
+            }
+            let model = self.model.as_ref().expect("surrogate trained post-warmup");
+            let (mean, spread) = model.predict_first(&features(space, c));
+            let promising = mean - spread <= threshold;
+            if promising && self.kept_window < allowance {
+                self.kept_window += 1;
+            } else {
+                self.skipped += 1;
+                mask[slot] = true;
+            }
+        }
+        mask
+    }
+
+    /// Refit the ensemble when enough new ground truth accumulated.
+    /// Training is a pure function of `(truth rows, seed)`: fresh
+    /// normalizers, fresh seeded init, full refit — never an
+    /// incremental update of stale weights — so an interrupted and a
+    /// resumed run converge on identical parameters.
+    fn ensure_trained(&mut self, truth: &TruthSet) {
+        let stale = match &self.model {
+            None => true,
+            Some(_) => truth.xs.len() >= self.trained_on + REFIT_EVERY,
+        };
+        if !stale || truth.xs.is_empty() {
+            return;
+        }
+        let x_norm = Normalizer::fit(&truth.xs);
+        let y_norm = Normalizer::fit(&truth.ys);
+        let xz: Vec<Vec<f64>> = truth.xs.iter().map(|r| x_norm.transform(r)).collect();
+        let yz: Vec<Vec<f64>> = truth.ys.iter().map(|r| y_norm.transform(r)).collect();
+        let in_dim = truth.xs[0].len();
+        let out_dim = truth.ys[0].len();
+        let rng = Pcg::new(self.cfg.seed).fork("surrogate");
+        let mut ensemble = Ensemble::new(&[in_dim, HIDDEN, out_dim], MEMBERS, &rng);
+        ensemble.fit(&xz, &yz, &FIT, &rng);
+        self.model = Some(SurrogateModel {
+            x_norm,
+            y_norm,
+            ensemble,
+        });
+        self.trained_on = truth.xs.len();
+    }
+
+    /// Serialize the full gate state (config, counters, normalizer
+    /// statistics and model weights — floats as raw-bit hex, like the
+    /// rest of the checkpoint wire format).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("warmup", self.cfg.warmup.into());
+        o.insert("keep", hex_f64(self.cfg.keep));
+        o.insert("probe_every", self.cfg.probe_every.into());
+        o.insert("seed", hex_u64(self.cfg.seed));
+        o.insert("decisions", hex_u64(self.decisions));
+        o.insert("kept_window", self.kept_window.into());
+        o.insert("skipped", hex_u64(self.skipped));
+        o.insert("probes", hex_u64(self.probes));
+        o.insert("warmup_evals", hex_u64(self.warmup_evals));
+        o.insert("trained_on", self.trained_on.into());
+        match &self.model {
+            None => o.insert("model", Json::Null),
+            Some(m) => {
+                let mut mo = JsonObj::new();
+                mo.insert("in_dim", m.x_norm.dims().into());
+                mo.insert("out_dim", m.y_norm.dims().into());
+                let hex_vec = |vals: Vec<f64>| {
+                    Json::Arr(vals.into_iter().map(hex_f64).collect())
+                };
+                mo.insert("x_norm", hex_vec(m.x_norm.params()));
+                mo.insert("y_norm", hex_vec(m.y_norm.params()));
+                mo.insert("ensemble", hex_vec(m.ensemble.params()));
+                o.insert("model", Json::Obj(mo));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// Rebuild a gate from [`SurrogateGate::to_json`] output.
+    pub fn from_json(doc: &Json) -> Result<SurrogateGate> {
+        let usize_field = |key: &str| -> Result<usize> {
+            doc.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| crate::format_err!("surrogate: missing or invalid \"{key}\""))
+        };
+        let cfg = SurrogateCfg {
+            warmup: usize_field("warmup")?,
+            keep: parse_hex_f64(doc.get("keep"), "surrogate: keep")?,
+            probe_every: usize_field("probe_every")?,
+            seed: parse_hex_u64(doc.get("seed"), "surrogate: seed")?,
+        };
+        cfg.validate()?;
+        let mut gate = SurrogateGate::new(cfg);
+        gate.decisions = parse_hex_u64(doc.get("decisions"), "surrogate: decisions")?;
+        gate.kept_window = usize_field("kept_window")?;
+        gate.skipped = parse_hex_u64(doc.get("skipped"), "surrogate: skipped")?;
+        gate.probes = parse_hex_u64(doc.get("probes"), "surrogate: probes")?;
+        gate.warmup_evals = parse_hex_u64(doc.get("warmup_evals"), "surrogate: warmup_evals")?;
+        gate.trained_on = usize_field("trained_on")?;
+        match doc.get("model") {
+            None | Some(Json::Null) => {}
+            Some(m) => {
+                let hex_list = |key: &str| -> Result<Vec<f64>> {
+                    let arr = m.get(key).and_then(|v| v.as_arr()).ok_or_else(|| {
+                        crate::format_err!("surrogate: missing model \"{key}\"")
+                    })?;
+                    let mut out = Vec::with_capacity(arr.len());
+                    for v in arr {
+                        out.push(parse_hex_f64(Some(v), "surrogate: model parameter")?);
+                    }
+                    Ok(out)
+                };
+                let in_dim = m
+                    .get("in_dim")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| crate::format_err!("surrogate: missing model \"in_dim\""))?;
+                let out_dim = m
+                    .get("out_dim")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| crate::format_err!("surrogate: missing model \"out_dim\""))?;
+                let x_norm = Normalizer::from_params(in_dim, &hex_list("x_norm")?)
+                    .ok_or_else(|| crate::format_err!("surrogate: malformed x_norm statistics"))?;
+                let y_norm = Normalizer::from_params(out_dim, &hex_list("y_norm")?)
+                    .ok_or_else(|| crate::format_err!("surrogate: malformed y_norm statistics"))?;
+                let rng = Pcg::new(gate.cfg.seed).fork("surrogate");
+                let mut ensemble = Ensemble::new(&[in_dim, HIDDEN, out_dim], MEMBERS, &rng);
+                crate::ensure!(
+                    ensemble.set_params(&hex_list("ensemble")?),
+                    "surrogate: model weight count does not match the \
+                     [{in_dim}, {HIDDEN}, {out_dim}] x {MEMBERS} architecture"
+                );
+                gate.model = Some(SurrogateModel {
+                    x_norm,
+                    y_norm,
+                    ensemble,
+                });
+            }
+        }
+        Ok(gate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ParaboloidSpace;
+    use super::*;
+
+    fn truth_log(space: &ParaboloidSpace, n: usize) -> Vec<Evaluation> {
+        // deterministic coverage of the 8x8 grid with the true paraboloid
+        // height as the single objective
+        (0..n)
+            .map(|i| {
+                let digits = vec![(i % 8) as u32, ((i * 3) % 8) as u32];
+                let dx = digits[0] as f64 - space.target.0 as f64;
+                let dy = digits[1] as f64 - space.target.1 as f64;
+                Evaluation {
+                    candidate: Candidate(digits),
+                    label: format!("t{i}"),
+                    objectives: vec![1.0 + dx * dx + dy * dy],
+                    cached: false,
+                    skipped: false,
+                    error: None,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cfg_validation_rejects_degenerate_knobs() {
+        assert!(SurrogateCfg::with_seed(1).validate().is_ok());
+        let bad_keep = SurrogateCfg {
+            keep: 0.0,
+            ..SurrogateCfg::with_seed(1)
+        };
+        assert!(bad_keep.validate().is_err());
+        let bad_probe = SurrogateCfg {
+            probe_every: 0,
+            ..SurrogateCfg::with_seed(1)
+        };
+        assert!(bad_probe.validate().is_err());
+        let bad_warmup = SurrogateCfg {
+            warmup: 0,
+            ..SurrogateCfg::with_seed(1)
+        };
+        assert!(bad_warmup.validate().is_err());
+    }
+
+    #[test]
+    fn warmup_forwards_everything() {
+        let space = ParaboloidSpace::new(8, 8, (3, 3));
+        let mut gate = SurrogateGate::new(SurrogateCfg::with_seed(7));
+        let log = truth_log(&space, 5); // below the default warmup of 12
+        let batch: Vec<Candidate> = (0..4).map(|i| Candidate(vec![i, i])).collect();
+        let mask = gate.decide(&space, &log, &batch);
+        assert!(mask.iter().all(|s| !s));
+        let s = gate.summary();
+        assert_eq!(s.warmup_evals, 4);
+        assert_eq!(s.decisions, 0);
+        assert_eq!(s.skipped, 0);
+    }
+
+    #[test]
+    fn probe_cadence_and_keep_cap_bound_the_forward_rate() {
+        let space = ParaboloidSpace::new(8, 8, (2, 5));
+        let cfg = SurrogateCfg {
+            warmup: 4,
+            keep: 0.5,
+            probe_every: 4,
+            seed: 11,
+        };
+        assert_eq!(cfg.window_allowance(), 2);
+        let mut gate = SurrogateGate::new(cfg);
+        let log = truth_log(&space, 16);
+        let batch: Vec<Candidate> = (0..8)
+            .map(|i| Candidate(vec![(i % 8) as u32, ((i * 5) % 8) as u32]))
+            .collect();
+        let mask = gate.decide(&space, &log, &batch);
+        // decisions 0 and 4 open probe windows and are always forwarded
+        assert!(!mask[0] && !mask[4]);
+        // per window of 4 decisions at most 1 probe + 2 keeps pass: the
+        // cap alone guarantees at least one skip per full window,
+        // whatever the model predicts
+        let skips = mask.iter().filter(|s| **s).count();
+        assert!(skips >= 2, "mask = {mask:?}");
+        let s = gate.summary();
+        assert_eq!(s.decisions, 8);
+        assert_eq!(s.probes, 2);
+        assert_eq!(s.skipped, skips as u64);
+        assert_eq!(s.warmup_evals, 0);
+    }
+
+    #[test]
+    fn skipped_and_failed_evaluations_never_train_the_model() {
+        let space = ParaboloidSpace::new(8, 8, (1, 1));
+        let mut log = truth_log(&space, 6);
+        log.push(Evaluation {
+            candidate: Candidate(vec![7, 7]),
+            label: "failed".into(),
+            objectives: vec![f64::INFINITY],
+            cached: false,
+            skipped: false,
+            error: Some("boom".into()),
+        });
+        log.push(Evaluation {
+            candidate: Candidate(vec![6, 6]),
+            label: "skipped".into(),
+            objectives: vec![f64::INFINITY],
+            cached: false,
+            skipped: true,
+            error: None,
+        });
+        let truth = truth_set(&space, &log);
+        assert_eq!(truth.xs.len(), 6);
+        assert!(truth.firsts.iter().all(|v| v.is_finite()));
+        // features carry one slot per axis plus the three kind means
+        assert_eq!(truth.xs[0].len(), 2 + 3);
+    }
+
+    #[test]
+    fn gate_state_roundtrips_and_replays_identically() {
+        let space = ParaboloidSpace::new(8, 8, (4, 2));
+        let cfg = SurrogateCfg {
+            warmup: 4,
+            keep: 0.5,
+            probe_every: 4,
+            seed: 99,
+        };
+        let log = truth_log(&space, 12);
+        let warm_batch: Vec<Candidate> =
+            (0..4).map(|i| Candidate(vec![i, (i + 2) % 8])).collect();
+        let mut gate = SurrogateGate::new(cfg);
+        gate.decide(&space, &log, &warm_batch); // trains the model
+        let snapshot = gate.to_json();
+        let mut restored = SurrogateGate::from_json(&snapshot).unwrap();
+        // identical wire form after the roundtrip (weights bit-exact)
+        assert_eq!(restored.to_json().to_string(), snapshot.to_string());
+        // and identical future decisions
+        let next: Vec<Candidate> = (0..6)
+            .map(|i| Candidate(vec![(i * 7) % 8, (i * 5) % 8]))
+            .collect();
+        let a = gate.decide(&space, &log, &next);
+        let b = restored.decide(&space, &log, &next);
+        assert_eq!(a, b);
+        assert_eq!(gate.summary(), restored.summary());
+        // a corrupted weight list is rejected, not silently accepted
+        let mut bad = JsonObj::new();
+        for (k, v) in snapshot.as_obj().unwrap().iter() {
+            if k == "model" {
+                let mut m = JsonObj::new();
+                for (mk, mv) in v.as_obj().unwrap().iter() {
+                    if mk == "ensemble" {
+                        m.insert(mk.as_str(), Json::Arr(vec![hex_f64(1.0)]));
+                    } else {
+                        m.insert(mk.as_str(), mv.clone());
+                    }
+                }
+                bad.insert(k.as_str(), Json::Obj(m));
+            } else {
+                bad.insert(k.as_str(), v.clone());
+            }
+        }
+        assert!(SurrogateGate::from_json(&Json::Obj(bad)).is_err());
+    }
+}

@@ -31,6 +31,7 @@
 //! bench pre-flights.
 
 pub mod util;
+pub mod ml;
 pub mod hwir;
 pub mod taskgraph;
 pub mod mapping;

@@ -10,6 +10,8 @@
 //!               [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]
 //!               [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]
 //!               [--deadline-events N] [--deadline-ms N]
+//!               [--surrogate [--surrogate-warmup N] [--surrogate-keep PCT]
+//!                [--surrogate-probe-every N]]
 //! mldse serve [--port P] [--workers N] [--state-dir DIR] [--checkpoint-every N]
 //!             [--max-connections N] [--read-timeout-ms N]
 //!                                              exploration-as-a-service daemon
@@ -34,7 +36,7 @@ use mldse::cost::Packaging;
 use mldse::dse::explore::{
     explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
     Checkpoint, DesignSpace, Edp, ExplorationReport, ExplorationSession, ExploreOpts, Makespan,
-    Objective,
+    Objective, SurrogateCfg,
 };
 use mldse::dse::parallel::resolve_workers;
 use mldse::sim::SimConfig;
@@ -175,6 +177,8 @@ fn print_usage() {
                    [--budget N] [--workers N] [--seed N] [--top N] [--no-cache] [--json]\n\
                    [--checkpoint FILE [--checkpoint-every N]] [--resume FILE]\n\
                    [--deadline-events N] [--deadline-ms N]\n\
+                   [--surrogate [--surrogate-warmup N] [--surrogate-keep PCT]\n\
+                    [--surrogate-probe-every N]]\n\
                    (presets: {presets}; --workers 0 = auto-detect,\n\
                     honoring the MLDSE_WORKERS environment override; space\n\
                     files compose param/packaging/product/nested spaces —\n\
@@ -183,7 +187,12 @@ fn print_usage() {
                     restores one bit-identically; --deadline-events fails\n\
                     runaway candidates deterministically, --deadline-ms is\n\
                     the wall-clock backstop — see README \"Robustness &\n\
-                    fault injection\")\n\
+                    fault injection\"; --surrogate gates proposals through\n\
+                    a learned model after --surrogate-warmup exact evals,\n\
+                    keeping ~--surrogate-keep percent plus one forced probe\n\
+                    every --surrogate-probe-every decisions — skipped\n\
+                    candidates never reach the Pareto front, see README\n\
+                    \"Surrogate-guided exploration\")\n\
            serve [--port P] [--workers N] [--state-dir DIR]\n\
                  [--checkpoint-every N] [--max-connections N]\n\
                  [--read-timeout-ms N]\n\
@@ -372,6 +381,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         &[
             "space", "preset", "explorer", "budget", "workers", "seed", "json", "no-cache", "top",
             "checkpoint", "checkpoint-every", "resume", "deadline-events", "deadline-ms",
+            "surrogate", "surrogate-warmup", "surrogate-keep", "surrogate-probe-every",
         ],
     )?;
     let (space, objectives): (Box<dyn DesignSpace>, Vec<Box<dyn Objective>>) =
@@ -422,11 +432,28 @@ fn cmd_explore(args: &Args) -> Result<()> {
     if resume_path.is_some() {
         // these are baked into the checkpoint; supplying them again would
         // silently disagree with what actually resumes
-        for flag in ["explorer", "budget", "seed", "no-cache"] {
+        for flag in [
+            "explorer",
+            "budget",
+            "seed",
+            "no-cache",
+            "surrogate",
+            "surrogate-warmup",
+            "surrogate-keep",
+            "surrogate-probe-every",
+        ] {
             if args.flag(flag).is_some() {
                 mldse::bail!(
                     "--{flag} conflicts with --resume (the checkpoint fixes it; drop --{flag})"
                 );
+            }
+        }
+    }
+    // surrogate sub-knobs are meaningless without the master switch
+    if !args.bool_flag("surrogate") {
+        for flag in ["surrogate-warmup", "surrogate-keep", "surrogate-probe-every"] {
+            if args.flag(flag).is_some() {
+                mldse::bail!("--{flag} requires --surrogate");
             }
         }
     }
@@ -457,10 +484,24 @@ fn cmd_explore(args: &Args) -> Result<()> {
     // --workers 0 (or omitting the flag) auto-detects: the MLDSE_WORKERS
     // environment override when set (validated), else available cores.
     let workers = resolve_workers(args.num("workers", 0usize)?)?;
+    // --surrogate-keep takes a percentage (35 = keep the best-scoring
+    // ~35% of post-warmup proposals); the config stores the fraction.
+    let surrogate = if args.bool_flag("surrogate") {
+        let mut cfg = SurrogateCfg::with_seed(seed);
+        cfg.warmup = args.num("surrogate-warmup", cfg.warmup)?;
+        let keep_pct: f64 = args.num("surrogate-keep", cfg.keep * 100.0)?;
+        cfg.keep = keep_pct / 100.0;
+        cfg.probe_every = args.num("surrogate-probe-every", cfg.probe_every)?;
+        cfg.validate()?;
+        Some(cfg)
+    } else {
+        None
+    };
     let mut opts = ExploreOpts {
         budget: args.num("budget", default_budget)?,
         workers,
         cache: !args.bool_flag("no-cache"),
+        surrogate,
         ..Default::default()
     };
     // Per-candidate evaluation deadlines: the event budget is
@@ -653,11 +694,16 @@ fn bench_run(args: &Args) -> Result<()> {
             if quick { " [quick]" } else { "" }
         );
         let r = run_scenario(s, quick, workers_override)?;
+        let skipped = match r.skipped_total() {
+            0 => String::new(),
+            n => format!(", {n} skipped by surrogate"),
+        };
         eprintln!(
-            "bench:   {} evals in {:.2}s ({:.1} evals/sec), fingerprint {:016x}",
+            "bench:   {} evals in {:.2}s ({:.1} evals/sec){}, fingerprint {:016x}",
             r.evals_total(),
             r.wall_secs,
             r.evals_per_sec(),
+            skipped,
             r.fingerprint
         );
         results.push(r);

@@ -1,0 +1,168 @@
+//! A tiny deep ensemble: `K` identically-shaped [`Mlp`]s trained from
+//! different seeded initializations (and independent minibatch shuffles)
+//! on the same data. The per-output spread across members is the
+//! surrogate's uncertainty signal — fresh regions of the design space
+//! disagree, well-sampled ones agree — which the gate folds into a
+//! lower-confidence-bound score so it never skips candidates the model
+//! is merely guessing about.
+
+use crate::util::rng::Pcg;
+
+use super::mlp::{FitOpts, Mlp};
+
+/// `K` seeded [`Mlp`]s over the same architecture.
+#[derive(Debug, Clone)]
+pub struct Ensemble {
+    members: Vec<Mlp>,
+}
+
+impl Ensemble {
+    /// Build `k` members with independent named-stream inits derived
+    /// from `rng` (via [`Pcg::fork`], so construction order elsewhere
+    /// never perturbs the weights).
+    pub fn new(sizes: &[usize], k: usize, rng: &Pcg) -> Ensemble {
+        assert!(k > 0, "ensemble needs at least one member");
+        let members = (0..k)
+            .map(|i| {
+                let mut init = rng.fork(&format!("ensemble-init-{i}"));
+                Mlp::new(sizes, &mut init)
+            })
+            .collect();
+        Ensemble { members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.members[0].out_dim()
+    }
+
+    /// Train every member on the same data, each with its own named
+    /// shuffle stream from `rng`.
+    pub fn fit(&mut self, xs: &[Vec<f64>], ys: &[Vec<f64>], opts: &FitOpts, rng: &Pcg) {
+        for (i, m) in self.members.iter_mut().enumerate() {
+            let mut shuffle = rng.fork(&format!("ensemble-fit-{i}"));
+            m.fit_adam(xs, ys, opts, &mut shuffle);
+        }
+    }
+
+    /// Predict one input: per-output `(mean, std)` across members
+    /// (population std; a single-member ensemble reports zero spread).
+    pub fn predict(&self, x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let dims = self.out_dim();
+        let mut mean = vec![0.0; dims];
+        let preds: Vec<Vec<f64>> = self.members.iter().map(|m| m.forward(x)).collect();
+        for p in &preds {
+            for (m, v) in mean.iter_mut().zip(p) {
+                *m += v;
+            }
+        }
+        let k = self.members.len() as f64;
+        for m in &mut mean {
+            *m /= k;
+        }
+        let mut var = vec![0.0; dims];
+        for p in &preds {
+            for ((s, v), m) in var.iter_mut().zip(p).zip(&mean) {
+                let d = v - m;
+                *s += d * d;
+            }
+        }
+        let std = var.into_iter().map(|s| (s / k).sqrt()).collect();
+        (mean, std)
+    }
+
+    /// Flatten every member's parameters (member-major) for
+    /// serialization.
+    pub fn params(&self) -> Vec<f64> {
+        self.members.iter().flat_map(|m| m.params()).collect()
+    }
+
+    /// Restore from [`Ensemble::params`] output; `false` on a length
+    /// mismatch.
+    pub fn set_params(&mut self, params: &[f64]) -> bool {
+        let per = self.members[0].param_count();
+        if params.len() != per * self.members.len() {
+            return false;
+        }
+        for (i, m) in self.members.iter_mut().enumerate() {
+            if !m.set_params(&params[i * per..(i + 1) * per]) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line_data(n: usize) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let xs: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64 / (n - 1) as f64]).collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| vec![2.0 * x[0] - 0.5]).collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn members_start_different_and_converge_on_data() {
+        let rng = Pcg::new(9);
+        let mut e = Ensemble::new(&[1, 8, 1], 3, &rng);
+        let (_, spread_before) = e.predict(&[0.5]);
+        assert!(spread_before[0] > 0.0, "fresh members must disagree");
+        let (xs, ys) = line_data(16);
+        let opts = FitOpts {
+            epochs: 200,
+            ..Default::default()
+        };
+        e.fit(&xs, &ys, &opts, &rng);
+        let (mean, spread_after) = e.predict(&[0.5]);
+        assert!((mean[0] - 0.5).abs() < 0.1, "mean={}", mean[0]);
+        assert!(
+            spread_after[0] < spread_before[0],
+            "training must shrink in-distribution spread: {} -> {}",
+            spread_before[0],
+            spread_after[0]
+        );
+    }
+
+    #[test]
+    fn ensemble_is_deterministic_and_roundtrips() {
+        let (xs, ys) = line_data(8);
+        let run = || {
+            let rng = Pcg::new(0xABC);
+            let mut e = Ensemble::new(&[1, 4, 1], 3, &rng);
+            e.fit(&xs, &ys, &FitOpts::default(), &rng);
+            e.params()
+        };
+        let (a, b) = (run(), run());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // params round trip bit-exactly through a fresh ensemble
+        let rng = Pcg::new(0xABC);
+        let mut e = Ensemble::new(&[1, 4, 1], 3, &rng);
+        e.fit(&xs, &ys, &FitOpts::default(), &rng);
+        let mut fresh = Ensemble::new(&[1, 4, 1], 3, &Pcg::new(1));
+        assert!(fresh.set_params(&e.params()));
+        let (p1, s1) = e.predict(&[0.3]);
+        let (p2, s2) = fresh.predict(&[0.3]);
+        assert_eq!(p1[0].to_bits(), p2[0].to_bits());
+        assert_eq!(s1[0].to_bits(), s2[0].to_bits());
+        assert!(!fresh.set_params(&[1.0; 5]));
+    }
+
+    #[test]
+    fn single_member_reports_zero_spread() {
+        let e = Ensemble::new(&[2, 3, 1], 1, &Pcg::new(2));
+        let (_, std) = e.predict(&[0.1, 0.9]);
+        assert_eq!(std, vec![0.0]);
+        assert_eq!(e.len(), 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal dense tensor ops: a row-major [`Matrix`] plus the handful of
+//! BLAS-1/2 kernels the MLP needs (`dot`, `axpy`, `matvec`,
+//! `matvec_transposed`, outer-product accumulate). Everything is `f64`
+//! and allocation-free on the hot paths — callers pass output slices.
+
+/// A dense row-major matrix (`rows × cols`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major storage: element `(r, c)` lives at `r * cols + c`.
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    /// A zero-filled `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from row-major data; `data.len()` must equal `rows * cols`.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "matrix shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `out = self * x` (matrix–vector product). `x.len()` must equal
+    /// `cols`, `out.len()` must equal `rows`.
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec input length");
+        assert_eq!(out.len(), self.rows, "matvec output length");
+        for r in 0..self.rows {
+            out[r] = dot(self.row(r), x);
+        }
+    }
+
+    /// `out = selfᵀ * x` (transposed matrix–vector product). `x.len()`
+    /// must equal `rows`, `out.len()` must equal `cols`.
+    pub fn matvec_transposed(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.rows, "matvecᵀ input length");
+        assert_eq!(out.len(), self.cols, "matvecᵀ output length");
+        out.fill(0.0);
+        for r in 0..self.rows {
+            axpy(x[r], self.row(r), out);
+        }
+    }
+
+    /// Rank-1 accumulate `self += alpha * a ⊗ b` (outer product), the
+    /// gradient kernel: `a.len()` must equal `rows`, `b.len()` `cols`.
+    pub fn add_outer(&mut self, alpha: f64, a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), self.rows, "outer lhs length");
+        assert_eq!(b.len(), self.cols, "outer rhs length");
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            axpy(alpha * a[r], b, row);
+        }
+    }
+}
+
+/// Inner product of two equal-length slices.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`, element-wise.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_matches_hand_computation() {
+        // [[1, 2, 3], [4, 5, 6]] * [1, 1, 2] = [9, 21]
+        let m = Matrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = [0.0; 2];
+        m.matvec(&[1.0, 1.0, 2.0], &mut out);
+        assert_eq!(out, [9.0, 21.0]);
+    }
+
+    #[test]
+    fn matvec_transposed_matches_hand_computation() {
+        // [[1, 2, 3], [4, 5, 6]]ᵀ * [1, 2] = [9, 12, 15]
+        let m = Matrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let mut out = [0.0; 3];
+        m.matvec_transposed(&[1.0, 2.0], &mut out);
+        assert_eq!(out, [9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn add_outer_accumulates_rank_one_update() {
+        let mut m = Matrix::zeros(2, 2);
+        m.add_outer(2.0, &[1.0, 3.0], &[5.0, 7.0]);
+        assert_eq!(m.data, vec![10.0, 14.0, 30.0, 42.0]);
+        m.add_outer(1.0, &[1.0, 0.0], &[1.0, 0.0]);
+        assert_eq!(m.get(0, 0), 11.0);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        let mut y = [1.0, 1.0];
+        axpy(0.5, &[2.0, 4.0], &mut y);
+        assert_eq!(y, [2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matvec input length")]
+    fn shape_mismatch_panics() {
+        let m = Matrix::zeros(2, 3);
+        let mut out = [0.0; 2];
+        m.matvec(&[1.0], &mut out);
+    }
+}

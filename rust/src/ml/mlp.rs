@@ -1,0 +1,404 @@
+//! A small MLP regressor: tanh hidden layers, linear output, MSE loss,
+//! trained by minibatch SGD or Adam with backprop. Weight init and
+//! minibatch shuffles draw from a caller-supplied [`Pcg`], so training is
+//! a pure function of `(architecture, data, hyperparameters, seed)` —
+//! the property the surrogate gate's checkpoint/resume bit-identity
+//! rests on.
+
+use crate::util::rng::Pcg;
+
+use super::linalg::Matrix;
+
+/// Training hyperparameters shared by [`Mlp::fit_sgd`] and
+/// [`Mlp::fit_adam`].
+#[derive(Debug, Clone)]
+pub struct FitOpts {
+    pub epochs: usize,
+    /// Minibatch size (clamped to the dataset size; 0 behaves as 1).
+    pub batch: usize,
+    pub lr: f64,
+}
+
+impl Default for FitOpts {
+    fn default() -> Self {
+        FitOpts {
+            epochs: 40,
+            batch: 8,
+            lr: 0.01,
+        }
+    }
+}
+
+/// Multi-layer perceptron: `sizes = [in, hidden..., out]`, tanh hidden
+/// activations, linear output head.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    sizes: Vec<usize>,
+    /// Per layer: `sizes[l+1] × sizes[l]` weight matrix.
+    weights: Vec<Matrix>,
+    /// Per layer: `sizes[l+1]` bias vector.
+    biases: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// A network with Xavier/Glorot-uniform init drawn from `rng`. At
+    /// least an input and an output layer are required.
+    pub fn new(sizes: &[usize], rng: &mut Pcg) -> Mlp {
+        assert!(sizes.len() >= 2, "mlp needs at least [in, out] sizes");
+        assert!(sizes.iter().all(|&s| s > 0), "mlp layer sizes must be > 0");
+        let mut weights = Vec::with_capacity(sizes.len() - 1);
+        let mut biases = Vec::with_capacity(sizes.len() - 1);
+        for l in 0..sizes.len() - 1 {
+            let (fan_in, fan_out) = (sizes[l], sizes[l + 1]);
+            let bound = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            let mut w = Matrix::zeros(fan_out, fan_in);
+            for v in &mut w.data {
+                *v = rng.range_f64(-bound, bound);
+            }
+            weights.push(w);
+            biases.push(vec![0.0; fan_out]);
+        }
+        Mlp {
+            sizes: sizes.to_vec(),
+            weights,
+            biases,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.sizes[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Forward pass; `x.len()` must equal [`Mlp::in_dim`].
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        self.activations(x).pop().unwrap()
+    }
+
+    /// All layer activations `[input, hidden..., output]` (the forward
+    /// pass the backprop step consumes).
+    fn activations(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(x.len(), self.in_dim(), "mlp input dimensionality");
+        let last = self.weights.len() - 1;
+        let mut acts = vec![x.to_vec()];
+        for (l, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            let mut z = vec![0.0; w.rows];
+            w.matvec(acts.last().unwrap(), &mut z);
+            for (zi, bi) in z.iter_mut().zip(b) {
+                *zi += bi;
+                if l < last {
+                    *zi = zi.tanh();
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Mean squared error over a dataset (averaged over rows and output
+    /// dimensions).
+    pub fn mse(&self, xs: &[Vec<f64>], ys: &[Vec<f64>]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for (x, y) in xs.iter().zip(ys) {
+            let p = self.forward(x);
+            total += p
+                .iter()
+                .zip(y)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / p.len() as f64;
+        }
+        total / xs.len() as f64
+    }
+
+    /// Accumulate MSE gradients for one sample into `grads` (same shapes
+    /// as the parameters). Returns nothing; caller owns the averaging.
+    fn backprop(&self, x: &[f64], y: &[f64], grads: &mut Grads) {
+        let acts = self.activations(x);
+        let out = acts.last().unwrap();
+        // dL/dz at the linear output head, L = mean squared error
+        let mut delta: Vec<f64> = out
+            .iter()
+            .zip(y)
+            .map(|(a, b)| 2.0 * (a - b) / y.len() as f64)
+            .collect();
+        for l in (0..self.weights.len()).rev() {
+            grads.w[l].add_outer(1.0, &delta, &acts[l]);
+            for (g, d) in grads.b[l].iter_mut().zip(&delta) {
+                *g += d;
+            }
+            if l > 0 {
+                let mut prev = vec![0.0; self.sizes[l]];
+                self.weights[l].matvec_transposed(&delta, &mut prev);
+                // tanh'(z) = 1 - a², with a the stored activation
+                for (p, a) in prev.iter_mut().zip(&acts[l]) {
+                    *p *= 1.0 - a * a;
+                }
+                delta = prev;
+            }
+        }
+    }
+
+    /// Minibatch SGD: `opts.epochs` passes over the data, shuffled per
+    /// epoch from `rng`.
+    pub fn fit_sgd(&mut self, xs: &[Vec<f64>], ys: &[Vec<f64>], opts: &FitOpts, rng: &mut Pcg) {
+        self.fit(xs, ys, opts, rng, &mut |mlp, grads, lr, _t| {
+            mlp.apply(grads, |g, _slot| -lr * g);
+        });
+    }
+
+    /// Minibatch Adam (Kingma & Ba 2015; β₁ = 0.9, β₂ = 0.999): the
+    /// moment vectors live for this call only — training is restarted
+    /// from scratch whenever the surrogate refits, so they never need to
+    /// serialize.
+    pub fn fit_adam(&mut self, xs: &[Vec<f64>], ys: &[Vec<f64>], opts: &FitOpts, rng: &mut Pcg) {
+        let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+        let mut m: Vec<f64> = vec![0.0; self.param_count()];
+        let mut v: Vec<f64> = vec![0.0; self.param_count()];
+        self.fit(xs, ys, opts, rng, &mut |mlp, grads, lr, t| {
+            let (bc1, bc2) = (1.0 - b1.powi(t), 1.0 - b2.powi(t));
+            mlp.apply(grads, |g, slot| {
+                m[slot] = b1 * m[slot] + (1.0 - b1) * g;
+                v[slot] = b2 * v[slot] + (1.0 - b2) * g * g;
+                -lr * (m[slot] / bc1) / ((v[slot] / bc2).sqrt() + eps)
+            });
+        });
+    }
+
+    /// The shared minibatch loop: shuffle, accumulate averaged gradients,
+    /// hand them to `update(self, grads, lr, step)`.
+    fn fit(
+        &mut self,
+        xs: &[Vec<f64>],
+        ys: &[Vec<f64>],
+        opts: &FitOpts,
+        rng: &mut Pcg,
+        update: &mut dyn FnMut(&mut Mlp, &Grads, f64, i32),
+    ) {
+        assert_eq!(xs.len(), ys.len(), "mlp fit: xs/ys length mismatch");
+        if xs.is_empty() {
+            return;
+        }
+        let batch = opts.batch.max(1).min(xs.len());
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        let mut step = 0i32;
+        for _ in 0..opts.epochs {
+            rng.shuffle(&mut order);
+            for chunk in order.chunks(batch) {
+                let mut grads = Grads::zeros(self);
+                for &i in chunk {
+                    self.backprop(&xs[i], &ys[i], &mut grads);
+                }
+                grads.scale(1.0 / chunk.len() as f64);
+                step += 1;
+                update(self, &grads, opts.lr, step);
+            }
+        }
+    }
+
+    /// Apply a per-parameter update: `delta(grad, flat_slot)` is added to
+    /// each parameter, with slots numbered in the same order as
+    /// [`Mlp::params`].
+    fn apply(&mut self, grads: &Grads, mut delta: impl FnMut(f64, usize) -> f64) {
+        let mut slot = 0;
+        for (w, gw) in self.weights.iter_mut().zip(&grads.w) {
+            for (p, g) in w.data.iter_mut().zip(&gw.data) {
+                *p += delta(*g, slot);
+                slot += 1;
+            }
+        }
+        for (b, gb) in self.biases.iter_mut().zip(&grads.b) {
+            for (p, g) in b.iter_mut().zip(gb) {
+                *p += delta(*g, slot);
+                slot += 1;
+            }
+        }
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.weights.iter().map(|w| w.data.len()).sum::<usize>()
+            + self.biases.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    /// Flatten all parameters (weights layer-by-layer, then biases) for
+    /// serialization.
+    pub fn params(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.param_count());
+        for w in &self.weights {
+            out.extend_from_slice(&w.data);
+        }
+        for b in &self.biases {
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Restore parameters from [`Mlp::params`] output; `false` when the
+    /// length does not match this architecture.
+    pub fn set_params(&mut self, params: &[f64]) -> bool {
+        if params.len() != self.param_count() {
+            return false;
+        }
+        let mut it = params.iter();
+        for w in &mut self.weights {
+            for p in &mut w.data {
+                *p = *it.next().unwrap();
+            }
+        }
+        for b in &mut self.biases {
+            for p in b.iter_mut() {
+                *p = *it.next().unwrap();
+            }
+        }
+        true
+    }
+}
+
+/// Per-layer gradient accumulators, shaped like the parameters.
+struct Grads {
+    w: Vec<Matrix>,
+    b: Vec<Vec<f64>>,
+}
+
+impl Grads {
+    fn zeros(mlp: &Mlp) -> Grads {
+        Grads {
+            w: mlp
+                .weights
+                .iter()
+                .map(|w| Matrix::zeros(w.rows, w.cols))
+                .collect(),
+            b: mlp.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+        }
+    }
+
+    fn scale(&mut self, s: f64) {
+        for w in &mut self.w {
+            for v in &mut w.data {
+                *v *= s;
+            }
+        }
+        for b in &mut self.b {
+            for v in b.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// y = (x0 - 0.3)² + (x1 - 0.7)² on a grid — the same quadratic bowl
+    /// shape the exploration surrogate has to learn.
+    fn bowl_data() -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for i in 0..8 {
+            for j in 0..8 {
+                let (x0, x1) = (i as f64 / 7.0, j as f64 / 7.0);
+                xs.push(vec![x0, x1]);
+                ys.push(vec![(x0 - 0.3) * (x0 - 0.3) + (x1 - 0.7) * (x1 - 0.7)]);
+            }
+        }
+        (xs, ys)
+    }
+
+    #[test]
+    fn adam_learns_a_quadratic_bowl() {
+        let (xs, ys) = bowl_data();
+        let mut rng = Pcg::new(7);
+        let mut mlp = Mlp::new(&[2, 16, 1], &mut rng);
+        let before = mlp.mse(&xs, &ys);
+        let opts = FitOpts {
+            epochs: 200,
+            ..Default::default()
+        };
+        mlp.fit_adam(&xs, &ys, &opts, &mut rng);
+        let after = mlp.mse(&xs, &ys);
+        assert!(after < before * 0.05, "mse {before} -> {after}");
+        // the learned surface ranks the minimum below a far corner
+        let near = mlp.forward(&[0.3, 0.7])[0];
+        let far = mlp.forward(&[1.0, 0.0])[0];
+        assert!(near < far, "near={near} far={far}");
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let (xs, ys) = bowl_data();
+        let mut rng = Pcg::new(3);
+        let mut mlp = Mlp::new(&[2, 12, 1], &mut rng);
+        let before = mlp.mse(&xs, &ys);
+        let opts = FitOpts {
+            epochs: 150,
+            lr: 0.05,
+            ..Default::default()
+        };
+        mlp.fit_sgd(&xs, &ys, &opts, &mut rng);
+        assert!(mlp.mse(&xs, &ys) < before * 0.5);
+    }
+
+    #[test]
+    fn training_is_bit_deterministic_for_a_fixed_seed() {
+        let (xs, ys) = bowl_data();
+        let run = || {
+            let mut rng = Pcg::new(0xD5E);
+            let mut mlp = Mlp::new(&[2, 8, 1], &mut rng);
+            mlp.fit_adam(&xs, &ys, &FitOpts::default(), &mut rng);
+            mlp.params()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn params_roundtrip_preserves_predictions() {
+        let mut rng = Pcg::new(11);
+        let mlp = Mlp::new(&[3, 5, 2], &mut rng);
+        let mut restored = Mlp::new(&[3, 5, 2], &mut rng); // different init
+        assert!(restored.set_params(&mlp.params()));
+        let x = [0.1, 0.5, 0.9];
+        let (a, b) = (mlp.forward(&x), restored.forward(&x));
+        for (u, v) in a.iter().zip(&b) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert!(!restored.set_params(&[0.0; 3]), "wrong length rejected");
+        assert_eq!(mlp.param_count(), 3 * 5 + 5 + 5 * 2 + 2);
+    }
+
+    #[test]
+    fn multi_output_head_fits_both_targets() {
+        // y = [x, 1 - x]: two linear targets, one shared trunk
+        let xs: Vec<Vec<f64>> = (0..16).map(|i| vec![i as f64 / 15.0]).collect();
+        let ys: Vec<Vec<f64>> = xs.iter().map(|x| vec![x[0], 1.0 - x[0]]).collect();
+        let mut rng = Pcg::new(5);
+        let mut mlp = Mlp::new(&[1, 8, 2], &mut rng);
+        let opts = FitOpts {
+            epochs: 300,
+            ..Default::default()
+        };
+        mlp.fit_adam(&xs, &ys, &opts, &mut rng);
+        assert!(mlp.mse(&xs, &ys) < 1e-3);
+    }
+
+    #[test]
+    fn empty_dataset_is_a_no_op() {
+        let mut rng = Pcg::new(1);
+        let mut mlp = Mlp::new(&[2, 4, 1], &mut rng);
+        let before = mlp.params();
+        mlp.fit_adam(&[], &[], &FitOpts::default(), &mut rng);
+        assert_eq!(mlp.params(), before);
+        assert_eq!(mlp.mse(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Dependency-free micro-ML stack for learned design-space exploration.
+//!
+//! The surrogate subsystem (ROADMAP open item 1, following AIRCHITECT v2
+//! and DiffAxE) needs a small regressor that learns `(candidate digit
+//! vector + axis metadata) → objective vector` from the streaming eval
+//! log — nothing more. This module provides exactly that, with the same
+//! constraints as the rest of the crate:
+//!
+//! * **zero dependencies** — dense ops ([`linalg`]), feature/target
+//!   normalization ([`normalize`]), a small MLP regressor with seeded
+//!   init and SGD/Adam training ([`mlp`]), and an uncertainty signal via
+//!   a tiny ensemble ([`ensemble`]), all on `std` alone;
+//! * **bit-determinism** — every stochastic choice (weight init,
+//!   minibatch shuffles) draws from a caller-supplied
+//!   [`Pcg`](crate::util::rng::Pcg), so a fixed seed reproduces training
+//!   bit-for-bit regardless of worker count or wall-clock; nothing here
+//!   reads the OS entropy pool or the clock;
+//! * **serializable** — models flatten to `Vec<f64>` parameter vectors
+//!   ([`Mlp::params`] / [`Mlp::set_params`]) so gate state round-trips
+//!   through the schema-versioned exploration checkpoint losslessly
+//!   (hex-f64 wire encoding, like every other score in the log).
+//!
+//! The exploration-side integration — feature extraction from
+//! [`Axis`](crate::dse::explore::Axis) descriptors, the gating policy,
+//! checkpoint plumbing — lives in [`crate::dse::explore::surrogate`];
+//! this module knows nothing about design spaces.
+
+pub mod ensemble;
+pub mod linalg;
+pub mod mlp;
+pub mod normalize;
+
+pub use ensemble::Ensemble;
+pub use linalg::Matrix;
+pub use mlp::Mlp;
+pub use normalize::Normalizer;

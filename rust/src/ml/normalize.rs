@@ -1,0 +1,163 @@
+//! Per-dimension z-score normalization, fit from a dataset in one pass.
+//!
+//! The surrogate's inputs (scaled candidate digits) and targets (raw
+//! objective scores, which span orders of magnitude across workloads) are
+//! both standardized before training. A [`Normalizer`] is a pure function
+//! of the data it was fit on — no RNG, no clock — and its statistics
+//! flatten to `Vec<f64>` for checkpoint serialization.
+
+/// Per-dimension mean/std standardizer: `z = (x - mean) / std`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Normalizer {
+    pub mean: Vec<f64>,
+    /// Per-dimension standard deviation; dimensions with zero variance
+    /// (or a single sample) store `1.0` so `transform` is well-defined.
+    pub std: Vec<f64>,
+}
+
+impl Normalizer {
+    /// Identity normalizer over `dims` dimensions (mean 0, std 1).
+    pub fn identity(dims: usize) -> Normalizer {
+        Normalizer {
+            mean: vec![0.0; dims],
+            std: vec![1.0; dims],
+        }
+    }
+
+    /// Fit from a dataset of equal-length rows. Population statistics,
+    /// computed in row order — deterministic for a deterministic log.
+    pub fn fit(rows: &[Vec<f64>]) -> Normalizer {
+        let dims = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut mean = vec![0.0; dims];
+        for r in rows {
+            for (m, v) in mean.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        let n = rows.len().max(1) as f64;
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0; dims];
+        for r in rows {
+            for ((s, v), m) in var.iter_mut().zip(r).zip(&mean) {
+                let d = v - m;
+                *s += d * d;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|s| {
+                let sd = (s / n).sqrt();
+                if sd > 0.0 && sd.is_finite() {
+                    sd
+                } else {
+                    1.0
+                }
+            })
+            .collect();
+        Normalizer { mean, std }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Standardize one row (length must match the fit dimensionality).
+    pub fn transform(&self, row: &[f64]) -> Vec<f64> {
+        assert_eq!(row.len(), self.dims(), "normalizer dimensionality");
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    /// Invert [`Normalizer::transform`] on one row.
+    pub fn inverse(&self, row: &[f64]) -> Vec<f64> {
+        assert_eq!(row.len(), self.dims(), "normalizer dimensionality");
+        row.iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(z, (m, s))| z * s + m)
+            .collect()
+    }
+
+    /// Scale a standardized *spread* (e.g. an ensemble std) back to raw
+    /// units — inverts the scaling of [`Normalizer::transform`] without
+    /// re-adding the mean.
+    pub fn inverse_spread(&self, row: &[f64]) -> Vec<f64> {
+        assert_eq!(row.len(), self.dims(), "normalizer dimensionality");
+        row.iter().zip(&self.std).map(|(z, s)| z * s).collect()
+    }
+
+    /// Flatten to `[mean..., std...]` for serialization.
+    pub fn params(&self) -> Vec<f64> {
+        let mut out = self.mean.clone();
+        out.extend_from_slice(&self.std);
+        out
+    }
+
+    /// Rebuild from [`Normalizer::params`] output.
+    pub fn from_params(dims: usize, params: &[f64]) -> Option<Normalizer> {
+        if params.len() != dims * 2 {
+            return None;
+        }
+        Some(Normalizer {
+            mean: params[..dims].to_vec(),
+            std: params[dims..].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_transform_inverse_roundtrip() {
+        let rows = vec![
+            vec![1.0, 100.0],
+            vec![3.0, 300.0],
+            vec![5.0, 200.0],
+        ];
+        let n = Normalizer::fit(&rows);
+        assert_eq!(n.mean, vec![3.0, 200.0]);
+        // standardized data has zero mean
+        let mut sums = [0.0; 2];
+        for r in &rows {
+            let z = n.transform(r);
+            sums[0] += z[0];
+            sums[1] += z[1];
+        }
+        assert!(sums[0].abs() < 1e-12 && sums[1].abs() < 1e-12, "{sums:?}");
+        for r in &rows {
+            let back = n.inverse(&n.transform(r));
+            for (a, b) in back.iter().zip(r) {
+                assert!((a - b).abs() < 1e-9, "{back:?} vs {r:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_dimensions_use_unit_std() {
+        // constant column and a single-row fit must not divide by zero
+        let n = Normalizer::fit(&[vec![7.0, 1.0], vec![7.0, 3.0]]);
+        assert_eq!(n.std[0], 1.0);
+        assert_eq!(n.transform(&[7.0, 2.0])[0], 0.0);
+        let single = Normalizer::fit(&[vec![4.0]]);
+        assert_eq!(single.std, vec![1.0]);
+        let empty = Normalizer::fit(&[]);
+        assert_eq!(empty.dims(), 0);
+    }
+
+    #[test]
+    fn params_roundtrip_and_spread() {
+        let n = Normalizer::fit(&[vec![0.0, 10.0], vec![2.0, 30.0]]);
+        let restored = Normalizer::from_params(2, &n.params()).unwrap();
+        assert_eq!(restored, n);
+        assert_eq!(Normalizer::from_params(2, &[0.0; 3]), None);
+        // spread scales by std without the mean shift
+        let s = n.inverse_spread(&[1.0, 1.0]);
+        assert!((s[0] - n.std[0]).abs() < 1e-12);
+        assert!((s[1] - n.std[1]).abs() < 1e-12);
+    }
+}

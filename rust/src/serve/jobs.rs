@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 use crate::dse::explore::{
     explorer_by_name, objectives_from_json, preset, preset_names, space_from_json_value,
     Checkpoint, DesignSpace, Edp, Evaluation, ExplorationReport, ExplorationSession, ExploreOpts,
-    Makespan, Objective, SharedCaches,
+    Makespan, Objective, SharedCaches, SurrogateCfg,
 };
 use crate::eval::Registry;
 use crate::util::error::{Context, Result};
@@ -135,6 +135,11 @@ pub struct JobSpec {
     /// request set a nonzero `workers`).
     pub workers: usize,
     pub cache: bool,
+    /// Surrogate gating for this run (`None` = off). Built from the
+    /// request's `surrogate` / `surrogate_warmup` / `surrogate_keep` /
+    /// `surrogate_probe_every` fields and seeded with the job's own seed;
+    /// on crash recovery the checkpointed gate state is authoritative.
+    pub surrogate: Option<SurrogateCfg>,
 }
 
 fn opt_usize(doc: &Json, key: &str) -> Result<Option<usize>> {
@@ -211,6 +216,36 @@ impl JobSpec {
                 .as_bool()
                 .ok_or_else(|| crate::format_err!("jobs: \"cache\" must be a boolean"))?,
         };
+        let surrogate_on = match doc.get("surrogate") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| crate::format_err!("jobs: \"surrogate\" must be a boolean"))?,
+        };
+        let surrogate = if surrogate_on {
+            let mut cfg = SurrogateCfg::with_seed(seed);
+            if let Some(w) = opt_usize(doc, "surrogate_warmup")? {
+                cfg.warmup = w;
+            }
+            if let Some(v) = doc.get("surrogate_keep") {
+                cfg.keep = v.as_f64().ok_or_else(|| {
+                    crate::format_err!("jobs: \"surrogate_keep\" must be a number in (0, 1]")
+                })?;
+            }
+            if let Some(p) = opt_usize(doc, "surrogate_probe_every")? {
+                cfg.probe_every = p;
+            }
+            cfg.validate().context("jobs")?;
+            Some(cfg)
+        } else {
+            for key in ["surrogate_warmup", "surrogate_keep", "surrogate_probe_every"] {
+                crate::ensure!(
+                    doc.get(key).is_none(),
+                    "jobs: \"{key}\" requires \"surrogate\": true"
+                );
+            }
+            None
+        };
         Ok(JobSpec {
             space_doc,
             preset: preset_name,
@@ -220,6 +255,7 @@ impl JobSpec {
             batch: opt_usize(doc, "batch")?,
             workers,
             cache,
+            surrogate,
         })
     }
 }
@@ -498,6 +534,7 @@ impl Job {
                 Json::Arr(e.objectives.iter().map(|v| (*v).into()).collect()),
             );
             o.insert("cached", e.cached.into());
+            o.insert("skipped", e.skipped.into());
             if let Some(err) = &e.error {
                 o.insert("error", err.as_str().into());
             }
@@ -641,6 +678,7 @@ fn drive(
         workers: spec.workers,
         cache: spec.cache,
         batch,
+        surrogate: spec.surrogate.clone(),
         ..defaults
     };
     let registry = Registry::standard();
@@ -787,6 +825,37 @@ mod tests {
         assert_eq!(spec.budget, Some(12));
         assert_eq!(spec.workers, 5);
         assert!(!spec.cache);
+    }
+
+    #[test]
+    fn spec_surrogate_fields_build_a_seeded_cfg() {
+        let doc = Json::parse(
+            r#"{"preset": "mapping", "seed": 11, "surrogate": true,
+                "surrogate_warmup": 5, "surrogate_keep": 0.25,
+                "surrogate_probe_every": 6}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&doc, 2).unwrap();
+        let cfg = spec.surrogate.unwrap();
+        assert_eq!(cfg.warmup, 5);
+        assert_eq!(cfg.keep, 0.25);
+        assert_eq!(cfg.probe_every, 6);
+        assert_eq!(cfg.seed, 11, "gate must derive from the job's seed");
+
+        // off by default; sub-knobs alone are rejected
+        let doc = Json::parse(r#"{"preset": "mapping"}"#).unwrap();
+        assert!(JobSpec::from_json(&doc, 2).unwrap().surrogate.is_none());
+        let doc = Json::parse(r#"{"preset": "mapping", "surrogate_warmup": 5}"#).unwrap();
+        let err = JobSpec::from_json(&doc, 2).unwrap_err().to_string();
+        assert!(err.contains("\"surrogate_warmup\""), "{err}");
+        assert!(err.contains("requires"), "{err}");
+
+        // degenerate knobs are rejected at submit time (HTTP 400)
+        let doc =
+            Json::parse(r#"{"preset": "mapping", "surrogate": true, "surrogate_keep": 2.0}"#)
+                .unwrap();
+        let err = format!("{:#}", JobSpec::from_json(&doc, 2).unwrap_err());
+        assert!(err.contains("keep"), "{err}");
     }
 
     #[test]

@@ -68,6 +68,12 @@ const CASES: &[(&str, &str, &str, &str)] = &[
         "error",
         "bench scenario",
     ),
+    (
+        "w053_surrogate_warmup.json",
+        "MLDSE-W053",
+        "warning",
+        "bench scenario",
+    ),
 ];
 
 fn check_json(path: &str, extra: &[&str]) -> (Output, Json) {

@@ -22,13 +22,18 @@
 //! * **Cross-session cache sharing** — two sessions joined to one
 //!   `SharedCaches` build the placement `EvalPlan` once process-wide,
 //!   without perturbing either session's own report.
+//! * **Surrogate gating** — a gated run skips a healthy share of
+//!   proposals, keeps its best/Pareto selections 100% ground truth,
+//!   stays bit-identical across worker counts and dispatch paths, and
+//!   survives a checkpoint/resume wire round trip (model weights
+//!   included) byte for byte.
 
 use std::sync::Arc;
 
 use mldse::dse::explore::{
     explore, explorer_by_name, placement_demo, three_tier, Axis, AxisKind, Candidate, Checkpoint,
     Design, DesignSpace, DesignView, ExplorationReport, ExplorationSession, ExploreOpts,
-    GridExplorer, Makespan, Objective, SharedCaches, CHECKPOINT_SCHEMA_VERSION,
+    GridExplorer, Makespan, Objective, SharedCaches, SurrogateCfg, CHECKPOINT_SCHEMA_VERSION,
 };
 use mldse::util::json::Json;
 use mldse::eval::Registry;
@@ -430,6 +435,147 @@ fn nested_checkpoint_resume_is_bit_identical() {
             golden,
             report_json(resumed),
             "anneal-tiered: workers={workers} resume diverged on the nested space"
+        );
+    }
+}
+
+#[test]
+fn surrogate_gated_run_is_deterministic_and_ground_truth() {
+    // A surrogate-gated anneal search: the gate must actually skip
+    // simulations, every skipped entry must be inert filler (no score,
+    // no cache entry, no error), best/Pareto must stay exact-simulation
+    // only, and the whole report must be bit-identical across worker
+    // counts and both dispatch paths.
+    let space = placement_demo("surrogate-det", (2, 2), 6);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    let explorer = explorer_by_name("anneal", 7).unwrap();
+    let cfg = SurrogateCfg {
+        warmup: 8,
+        ..SurrogateCfg::with_seed(7)
+    };
+    let mut golden: Option<String> = None;
+    let mut checked = false;
+    for workers in [1usize, 2, 8] {
+        for streaming in [true, false] {
+            let opts = ExploreOpts {
+                budget: 48,
+                workers,
+                streaming,
+                surrogate: Some(cfg.clone()),
+                ..Default::default()
+            };
+            let r = explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                .unwrap_or_else(|e| panic!("workers {workers} streaming {streaming}: {e:#}"));
+            if !checked {
+                checked = true;
+                let skipped: Vec<_> = r.evals.iter().filter(|e| e.skipped).collect();
+                assert_eq!(r.skipped, skipped.len());
+                assert!(r.skipped > 0, "the gate never skipped a proposal");
+                for e in &skipped {
+                    // a prediction is never recorded as a score
+                    assert!(
+                        e.objectives.iter().all(|v| v.is_infinite()),
+                        "{}: skipped entry carries a score",
+                        e.label
+                    );
+                    assert!(!e.cached, "{}", e.label);
+                    assert!(e.error.is_none(), "{}", e.label);
+                }
+                assert!(!r.best().expect("run has a best").skipped);
+                for i in r.pareto() {
+                    assert!(!r.evals[i].skipped, "skipped entry on the Pareto front");
+                }
+                let s = r.surrogate.expect("gated run reports surrogate counters");
+                assert_eq!(s.skipped, r.skipped as u64);
+                assert!(s.probes >= 1, "no forced probe in {} decisions", s.decisions);
+                assert_eq!(s.warmup_evals, 8, "warmup forwards exactly `warmup` proposals");
+                // the per-window cap alone guarantees >= probe_every - 1 -
+                // allowance skips per complete window: 8 - 1 - 3 = 4 of
+                // every 8 decisions at the default keep/probe knobs,
+                // whatever the model predicts
+                assert!(
+                    s.skipped >= (s.decisions / 8) * 4,
+                    "window cap violated: {} skips in {} decisions",
+                    s.skipped,
+                    s.decisions
+                );
+                assert!(r.skip_rate() >= 0.2, "skip rate {}", r.skip_rate());
+            }
+            let json = report_json(r);
+            match &golden {
+                None => golden = Some(json),
+                Some(g) => assert_eq!(
+                    *g, json,
+                    "workers={workers} streaming={streaming} diverged with the gate on"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn surrogate_checkpoint_resume_is_bit_identical() {
+    // Interrupt a gated run after the model has trained and made real
+    // skip decisions, push the checkpoint (gate state and model weights
+    // included) through the JSON wire format, resume, and the final
+    // report must match an uninterrupted run byte for byte.
+    let space = placement_demo("surrogate-ckpt", (2, 2), 6);
+    let objectives: Vec<Box<dyn Objective>> = vec![Box::new(Makespan)];
+    let registry = Registry::standard();
+    let explorer = explorer_by_name("anneal", 7).unwrap();
+    let cfg = SurrogateCfg {
+        warmup: 6,
+        ..SurrogateCfg::with_seed(41)
+    };
+    for workers in [1usize, 2] {
+        let opts = ExploreOpts {
+            budget: 32,
+            workers,
+            surrogate: Some(cfg.clone()),
+            ..Default::default()
+        };
+        let golden = report_json(
+            explore(&space, &objectives, explorer.as_ref(), &registry, &opts)
+                .unwrap_or_else(|e| panic!("workers {workers}: {e:#}")),
+        );
+        let resumed = std::thread::scope(|scope| {
+            let mut session = ExplorationSession::new_in(
+                scope,
+                &space,
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                None,
+            )
+            .unwrap();
+            // 10 steps at warmup 6: the interruption lands after the
+            // gate has trained and gated post-warmup proposals
+            for i in 0..10 {
+                assert!(session.step(), "step {i} should advance");
+            }
+            let text = session.checkpoint().to_json().to_pretty();
+            drop(session);
+            let ckpt = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+            let mut session = ExplorationSession::resume_in(
+                scope,
+                &space,
+                &objectives,
+                explorer.as_ref(),
+                &registry,
+                &opts,
+                ckpt,
+                None,
+            )
+            .unwrap();
+            while session.step() {}
+            session.into_report(0.0)
+        });
+        assert_eq!(
+            golden,
+            report_json(resumed),
+            "workers={workers} resume diverged with the gate on"
         );
     }
 }
